@@ -1,0 +1,42 @@
+//! Figure 13: AnalysisPasses + ComposeSearch time vs number of hidden
+//! layers (these phases grow with depth; profiling does not — §5.5).
+
+use cfp::cluster::Platform;
+use cfp::coordinator::{run_cfp, CfpOptions};
+use cfp::harness::Table;
+use cfp::models::ModelCfg;
+use cfp::spmd::Mesh;
+
+fn main() {
+    let platform = Platform::a100_pcie(4).scaled_testbed();
+    for preset in ["gpt-2.6b", "moe-7.1b", "llama-7b"] {
+        println!("--- {preset} ---");
+        let mut t = Table::new(&[
+            "layers",
+            "ops",
+            "blocks",
+            "AnalysisPasses (s)",
+            "ComposeSearch (s)",
+            "profile space",
+        ]);
+        for layers in [4usize, 8, 16, 32] {
+            let model = ModelCfg::preset(preset)
+                .with_layers(layers)
+                .with_batch(8)
+                .scaled_for_eval();
+            let mut opts = CfpOptions::new(model, platform);
+            opts.mesh = Mesh::flat(4);
+            let r = run_cfp(&opts);
+            t.row(vec![
+                layers.to_string(),
+                r.graph.ops.len().to_string(),
+                r.blocks.num_blocks().to_string(),
+                format!("{:.3}", r.timings.analysis_passes_s),
+                format!("{:.3}", r.timings.compose_search_s),
+                r.db.profile_space().to_string(),
+            ]);
+        }
+        t.print();
+        println!("(profile space must NOT grow with depth — §5.6)\n");
+    }
+}

@@ -1,0 +1,106 @@
+//! Figure 2: theoretical communication volume vs actual lowered
+//! communication for DP and TP on a transformer layer (§2.2's worked
+//! example).
+//!
+//! The paper computes: DP volume = 4·4·h² (parameter AllReduce),
+//! TP volume = 4·b·s·h (activation AllReduce) — TP "wins" on volume, yet
+//! after downstream compilation, DP's bucketed AllReduce beats TP, whose
+//! replicated dropout masks drag in RNG-sync AllReduces. On 4×A100-PCIe
+//! the paper measured DP comm time ≈ 0.6× TP's.
+
+use cfp::cluster::sim::ComputeModel;
+use cfp::cluster::{simulate, Platform};
+use cfp::harness::{fmt_bytes, fmt_us, Table};
+use cfp::models::{build_training, ModelCfg};
+use cfp::pblock::build_parallel_blocks;
+use cfp::spmd::{lower, passes, GlobalPlan, Mesh};
+
+fn main() {
+    let mut model = ModelCfg::preset("gpt-2.6b").with_layers(2).with_batch(8);
+    model.hidden = 512;
+    model.ffn = 2048;
+    model.heads = 8;
+    model.seq = 64;
+    model.vocab = 1024;
+    let (h, b, s) = (model.hidden as u64, model.batch as u64, model.seq as u64);
+    let g = build_training(&model);
+    let bs = build_parallel_blocks(&g, 4);
+    let platform = Platform::a100_pcie(4).scaled_testbed();
+    let cm = ComputeModel::for_platform(&platform);
+
+    // §2.2 theoretical volumes (per layer, f32): DP = params·4B;
+    // TP = activation AllReduces (attn + mlp outputs per layer)
+    let params_per_layer = 4 * h * h + 2 * h * model.ffn as u64;
+    let theory_dp = 2 * params_per_layer * 4;
+    let theory_tp = 2 * 2 * b * s * h * 4;
+
+    println!(
+        "Fig 2 — transformer×2, hidden {}, batch {}, 4x A100-PCIe",
+        model.hidden, model.batch
+    );
+    println!(
+        "theoretical volume: DP {}   TP {}   (TP 'wins' on paper)",
+        fmt_bytes(theory_dp),
+        fmt_bytes(theory_tp)
+    );
+
+    let mut t = Table::new(&[
+        "config",
+        "theory vol",
+        "actual vol",
+        "comm kernels",
+        "comm time",
+    ]);
+    let mut times = Vec::new();
+    for (name, label, theory) in
+        [("DP", "m", theory_dp), ("TP (Megatron)", "megatron", theory_tp)]
+    {
+        let plan = if label == "megatron" {
+            megatron_plan(&g, &bs)
+        } else {
+            GlobalPlan::uniform(&bs, label, Mesh::flat(4)).unwrap()
+        };
+        let mut prog = lower(&g, &bs, &plan);
+        passes::bucket_gradients(&mut prog, 64 << 20);
+        let rep = simulate(&prog, &platform, 4, &cm);
+        t.row(vec![
+            name.into(),
+            fmt_bytes(theory),
+            fmt_bytes(rep.comm_volume),
+            rep.comm_kernels.to_string(),
+            fmt_us(rep.comm_us),
+        ]);
+        times.push(rep.comm_us);
+    }
+    t.print();
+
+    let ratio = times[0] / times[1];
+    println!(
+        "\nDP comm time / TP comm time = {ratio:.2} (paper: ≈0.60 — DP wins \
+         despite larger theoretical volume)"
+    );
+    println!(
+        "causes implemented: gradient bucketing (DP), RNG replication \
+         AllReduce + per-block activation AllReduces (TP)"
+    );
+    assert!(ratio < 1.0, "DP must beat TP on comm time for this shape");
+}
+
+fn megatron_plan(g: &cfp::graph::Graph, bs: &cfp::pblock::BlockSet) -> GlobalPlan {
+    let choice = bs
+        .blocks
+        .iter()
+        .map(|b| {
+            let name = &g.ops[b.entry].name;
+            let want = if name.contains("qkv") || name.contains("fc1") {
+                "n"
+            } else if name.contains("out_proj") || name.contains("fc2") {
+                "k"
+            } else {
+                "m"
+            };
+            b.strategies.iter().position(|s| s.label == want).unwrap_or(0)
+        })
+        .collect();
+    GlobalPlan { choice, mesh: Mesh::flat(4) }
+}

@@ -1,0 +1,52 @@
+//! Figure 7: average training throughput of PyTorch-DDP, DeepSpeed-Megatron,
+//! Alpa and CFP across {BERT, GPT, MoE, LLAMA} × {4×A100-PCIe, 8×A100-PCIe,
+//! 2×8 A100, 4×V100-NVLink}, plus the §5.2 headline speedups.
+
+use cfp::harness::{eval_models, eval_platforms, fmt_us, throughput_row, Table};
+
+fn main() {
+    let mut speedups: std::collections::BTreeMap<String, Vec<f64>> = Default::default();
+    for (platform, mesh) in eval_platforms() {
+        println!(
+            "\n=== {} ({} GPUs{}) ===",
+            platform.name,
+            mesh.intra * mesh.nodes,
+            if mesh.nodes > 1 { ", 2 nodes" } else { "" }
+        );
+        let mut t = Table::new(&["model", "PT-DDP", "DS-Megatron", "Alpa", "CFP", "CFP/Alpa"]);
+        for model in eval_models() {
+            let (row, _) = throughput_row(&model, platform, mesh);
+            t.row(vec![
+                row.model.clone(),
+                fmt_us(row.pt_us),
+                fmt_us(row.dsm_us),
+                fmt_us(row.alpa_us),
+                fmt_us(row.cfp_us),
+                format!("{:.2}x", row.cfp_over_alpa),
+            ]);
+            speedups.entry(row.model).or_default().push(row.cfp_over_alpa);
+        }
+        t.print();
+    }
+
+    println!("\n=== §5.2 headline: CFP speedup over Alpa (per model) ===");
+    let mut t = Table::new(&["model", "avg", "max", "paper max"]);
+    let paper_max = |m: &str| match m {
+        m if m.contains("gpt") => "1.51x",
+        m if m.contains("llama") => "1.31x",
+        m if m.contains("moe") => "3.43x",
+        _ => "2.01x", // bert, multi-node
+    };
+    for (model, xs) in &speedups {
+        let avg = xs.iter().sum::<f64>() / xs.len() as f64;
+        let max = xs.iter().cloned().fold(0.0, f64::max);
+        t.row(vec![
+            model.clone(),
+            format!("{avg:.2}x"),
+            format!("{max:.2}x"),
+            paper_max(model).into(),
+        ]);
+    }
+    t.print();
+    println!("(shape target: CFP ≥ 1x everywhere, biggest gaps on MoE@PCIe and multi-node)");
+}

@@ -1,0 +1,53 @@
+//! Figure 8: communication kernel overhead and achieved ("utilized") bus
+//! bandwidth per framework, four models on 4×A100-PCIe.
+//!
+//! Shape target: PT-DDP low bandwidth (many small kernels), Megatron high
+//! bandwidth but fixed-template volume, Alpa volume-optimal but inefficient
+//! kernels, CFP the lowest overall comm overhead.
+
+use cfp::cluster::Platform;
+use cfp::coordinator::CfpOptions;
+use cfp::harness::{eval_models, fmt_us, throughput_row, Table};
+use cfp::spmd::Mesh;
+
+fn main() {
+    let platform = Platform::a100_pcie(4).scaled_testbed();
+    let mesh = Mesh::flat(4);
+    println!("Fig 8 — comm overhead + achieved bandwidth, 4x A100-PCIe\n");
+
+    for model in eval_models() {
+        let (_, c) = throughput_row(&model, platform, mesh);
+        let mut opts = CfpOptions::new(model.clone(), platform);
+        opts.mesh = mesh;
+        let mut t = Table::new(&["framework", "comm time", "kernels", "achieved bw", "top kinds"]);
+        for (name, plan) in [
+            ("PT-DDP", &c.ddp),
+            ("DS-Megatron", &c.megatron),
+            ("Alpa", &c.alpa),
+            ("CFP", &c.cfp),
+        ] {
+            let rep = c.result.simulate_choice(&opts, &plan.choice);
+            let mut kinds: Vec<(&str, f64)> = rep
+                .comm_by_kind
+                .iter()
+                .map(|(k, (_, _, t))| (*k, *t))
+                .collect();
+            kinds.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap());
+            let top: Vec<String> = kinds
+                .iter()
+                .take(2)
+                .map(|(k, t)| format!("{k} {}", fmt_us(*t)))
+                .collect();
+            t.row(vec![
+                name.into(),
+                fmt_us(rep.comm_us + rep.comm_inter_us),
+                rep.comm_kernels.to_string(),
+                format!("{:.1} GB/s", rep.achieved_bw_gbps),
+                top.join(", "),
+            ]);
+        }
+        println!("--- {} ---", model.name);
+        t.print();
+        println!();
+    }
+}

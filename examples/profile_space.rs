@@ -1,0 +1,46 @@
+//! §5.5 profile-space accounting: ParallelBlocks per layer, strategies per
+//! block, configs per unique segment, resharding groups — the counts the
+//! paper quotes (4 blocks/layer, 3 strategies each, 81 configs/segment,
+//! 2·81 + 2·9 = 180 programs for GPT; extra expert dim for MoE).
+
+use cfp::cluster::Platform;
+use cfp::coordinator::{run_cfp, CfpOptions};
+use cfp::harness::Table;
+use cfp::models::ModelCfg;
+use cfp::spmd::Mesh;
+
+fn main() {
+    let platform = Platform::a100_pcie(4).scaled_testbed();
+    for preset in ["bert-large", "gpt-2.6b", "llama-7b", "moe-7.1b"] {
+        let model = ModelCfg::preset(preset).with_layers(4).scaled_for_eval();
+        let mut opts = CfpOptions::new(model, platform);
+        opts.mesh = Mesh::flat(4);
+        let r = run_cfp(&opts);
+        println!("--- {preset} (4 layers) ---");
+        let mut t = Table::new(&["segment", "instances", "blocks", "strategies/block", "configs"]);
+        for u in &r.segments.unique {
+            let inst = &r.segments.instances[u.rep];
+            let strat: Vec<String> = inst
+                .blocks
+                .iter()
+                .map(|&b| r.blocks.blocks[b].strategies.len().to_string())
+                .collect();
+            t.row(vec![
+                format!("u{}", u.id),
+                u.count.to_string(),
+                inst.blocks.len().to_string(),
+                strat.join("x"),
+                r.db.segments[u.id].configs.len().to_string(),
+            ]);
+        }
+        t.print();
+        let rs: usize = r.db.reshard.values().map(|t| t.programs).sum();
+        println!(
+            "programs: {} segment configs + {} reshard groups = {} total \
+             (paper GPT: 2*81 + 2*9 = 180)\n",
+            r.db.profile_space() - rs,
+            rs,
+            r.db.profile_space()
+        );
+    }
+}

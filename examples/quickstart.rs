@@ -1,0 +1,64 @@
+//! Quickstart: the three layers in one page.
+//!
+//! 1. Load an AOT-compiled HLO artifact (L1 Pallas kernel + L2 jax graph,
+//!    lowered once by `make artifacts`) and execute it from rust via PJRT.
+//! 2. Run the CFP analysis (L3) on a small GPT and print the chosen
+//!    intra-operator parallelism plan.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use cfp::cluster::Platform;
+use cfp::coordinator::{run_cfp, CfpOptions};
+use cfp::harness::{fmt_bytes, fmt_us};
+use cfp::models::ModelCfg;
+use cfp::runtime::Runtime;
+use cfp::util::Pcg64;
+
+fn main() -> anyhow::Result<()> {
+    // --- 1. the AOT → PJRT path -----------------------------------------
+    println!("== PJRT: run the quickstart artifact (one GPT block fwd) ==");
+    match Runtime::open_default() {
+        Ok(rt) => {
+            let mut rng = Pcg64::new(7);
+            let inputs = rt.random_inputs("quickstart", &mut rng)?;
+            let t0 = std::time::Instant::now();
+            let out = rt.run("quickstart", &inputs)?;
+            let v = out[0].to_vec::<f32>()?;
+            println!(
+                "   output tensor: {} elements, first = {:.5}, ran in {:.2?}",
+                v.len(),
+                v[0],
+                t0.elapsed()
+            );
+        }
+        Err(e) => println!("   (skipped — no artifacts: {e}; run `make artifacts`)"),
+    }
+
+    // --- 2. the CFP search ------------------------------------------------
+    println!("\n== CFP: search an intra-op plan for gpt-tiny on 4x A100-PCIe ==");
+    let opts = CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(4),
+        Platform::a100_pcie(4),
+    );
+    let r = run_cfp(&opts);
+    println!(
+        "   {} ops → {} ParallelBlocks → {} segments ({} unique), {} profiled programs",
+        r.graph.ops.len(),
+        r.blocks.num_blocks(),
+        r.segments.instances.len(),
+        r.segments.num_unique(),
+        r.db.profile_space(),
+    );
+    println!(
+        "   plan: step {} / device-mem {}",
+        fmt_us(r.plan.time_us),
+        fmt_bytes(r.plan.mem_bytes)
+    );
+    for line in r.describe_plan().iter().take(3) {
+        println!("   {line}");
+    }
+    println!("   ... (see `cfp search` for the full plan)");
+    Ok(())
+}

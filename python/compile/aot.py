@@ -1,0 +1,340 @@
+"""AOT compile path: lower L2/L1 jax programs to HLO *text* artifacts.
+
+Run once by ``make artifacts`` (no-op when fresh); the rust runtime loads
+the text via ``HloModuleProto::from_text_file`` (see rust/src/runtime/).
+
+HLO text — NOT ``lowered.compile()`` / proto ``.serialize()`` — is the
+interchange format: jax ≥ 0.5 emits HloModuleProto with 64-bit instruction
+ids that xla_extension 0.5.1 rejects; the text parser reassigns ids and
+round-trips cleanly (see /opt/xla-example/README.md).
+
+Artifact families (all listed in artifacts/manifest.json):
+  calib_*      — primitive compute programs (matmul / attention / rmsnorm at
+                 swept shapes). The rust profiler executes these to build the
+                 measured per-shape compute cost table that feeds T_P.
+  layer_*      — one-block forward shards (full / DP / TP slices) used to
+                 validate that composed primitive costs match a real fused
+                 program.
+  train_step_* — the full model train step for the e2e example (loss + SGD).
+  quickstart   — a tiny one-block forward for examples/quickstart.rs.
+"""
+
+import argparse
+import functools
+import json
+import os
+import sys
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from .kernels import attention as pallas_attention
+from .kernels import matmul as pallas_matmul
+from .kernels import rmsnorm as pallas_rmsnorm
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _aval_entry(name, aval):
+    return {"name": name, "shape": list(aval.shape), "dtype": str(aval.dtype)}
+
+
+class Emitter:
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.manifest = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, fn, specs, *, kind, input_names=None, meta=None):
+        """Lower fn(*specs) and write <name>.hlo.txt + a manifest entry."""
+        lowered = jax.jit(fn).lower(*specs)
+        text = to_hlo_text(lowered)
+        path = os.path.join(self.out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        flat, _ = jax.tree_util.tree_flatten(specs)
+        if input_names is None:
+            input_names = [f"arg{i}" for i in range(len(flat))]
+        out_flat, _ = jax.tree_util.tree_flatten(
+            jax.eval_shape(fn, *specs)
+        )
+        self.manifest.append(
+            {
+                "name": name,
+                "file": f"{name}.hlo.txt",
+                "kind": kind,
+                "inputs": [_aval_entry(n, a) for n, a in zip(input_names, flat)],
+                "outputs": [_aval_entry(f"out{i}", a) for i, a in enumerate(out_flat)],
+                "meta": meta or {},
+            }
+        )
+        print(f"  wrote {path} ({len(text)} chars, {len(flat)} inputs)")
+
+    def finish(self):
+        path = os.path.join(self.out_dir, "manifest.json")
+        with open(path, "w") as f:
+            json.dump(self.manifest, f, indent=1)
+        print(f"wrote {path} ({len(self.manifest)} artifacts)")
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+# --------------------------------------------------------------------------
+# Calibration programs (primitive compute cost table)
+# --------------------------------------------------------------------------
+
+# (M, K, N) sweep covering the shard shapes the profiler will ask about:
+# ~1e5 .. ~7e8 flops. Kept modest so `make artifacts` stays < ~2 min.
+MATMUL_SHAPES = [
+    (64, 64, 64),
+    (128, 128, 128),
+    (256, 256, 256),
+    (512, 256, 256),
+    (512, 512, 512),
+    (512, 512, 1536),
+    (512, 1024, 256),
+    (1024, 512, 512),
+    (1024, 1024, 1024),
+    (2048, 512, 512),
+    (2048, 1024, 512),
+    (512, 256, 4096),
+]
+
+ATTN_SHAPES = [  # (B, H, S, D)
+    (2, 4, 64, 32),
+    (4, 8, 64, 32),
+    (8, 8, 64, 32),
+    (4, 8, 128, 32),
+    (8, 8, 128, 64),
+]
+
+RMSNORM_SHAPES = [(512, 256), (2048, 512), (4096, 1024)]
+
+
+def emit_calibration(em: Emitter):
+    for m, k, n in MATMUL_SHAPES:
+        em.emit(
+            f"calib_matmul_{m}x{k}x{n}",
+            lambda a, b: (jnp.matmul(a, b),),
+            (f32(m, k), f32(k, n)),
+            kind="calib_matmul",
+            input_names=["a", "b"],
+            meta={"m": m, "k": k, "n": n, "flops": 2 * m * k * n},
+        )
+    for b, h, s, d in ATTN_SHAPES:
+        em.emit(
+            f"calib_attn_{b}x{h}x{s}x{d}",
+            lambda q, k, v: (pallas_attention(q, k, v, causal=True),),
+            (f32(b, h, s, d),) * 3,
+            kind="calib_attn",
+            input_names=["q", "k", "v"],
+            meta={"b": b, "h": h, "s": s, "d": d, "flops": 4 * b * h * s * s * d},
+        )
+    for r, hdim in RMSNORM_SHAPES:
+        em.emit(
+            f"calib_rmsnorm_{r}x{hdim}",
+            lambda x, w: (pallas_rmsnorm(x, w),),
+            (f32(r, hdim), f32(hdim)),
+            kind="calib_rmsnorm",
+            input_names=["x", "w"],
+            meta={"rows": r, "hidden": hdim, "bytes": 4 * r * hdim},
+        )
+
+
+# --------------------------------------------------------------------------
+# Layer shard programs (full / DP / TP) for composition validation
+# --------------------------------------------------------------------------
+
+def _layer_specs(cfg, batch):
+    layer = {
+        "ln1_w": f32(cfg.hidden),
+        "ln1_b": f32(cfg.hidden),
+        "wqkv": f32(cfg.hidden, 3 * cfg.hidden),
+        "wo": f32(cfg.hidden, cfg.hidden),
+        "ln2_w": f32(cfg.hidden),
+        "ln2_b": f32(cfg.hidden),
+        "w1": f32(cfg.hidden, cfg.ffn),
+        "w2": f32(cfg.ffn, cfg.hidden),
+    }
+    if cfg.arch == "llama":
+        layer = {
+            "ln1_w": f32(cfg.hidden),
+            "wqkv": f32(cfg.hidden, 3 * cfg.hidden),
+            "wo": f32(cfg.hidden, cfg.hidden),
+            "ln2_w": f32(cfg.hidden),
+            "w_gate": f32(cfg.hidden, cfg.ffn),
+            "w_up": f32(cfg.hidden, cfg.ffn),
+            "w_down": f32(cfg.ffn, cfg.hidden),
+        }
+    return f32(batch, cfg.seq, cfg.hidden), layer
+
+
+def tp_shard_forward(x, w, cfg, tp):
+    """The per-device compute of a Megatron-TP transformer block shard.
+
+    wqkv: (H, 3H/tp) column shard; wo: (H/tp, H) row shard (partial output —
+    the AllReduce lives in the simulator, not here); MLP weights are
+    column/row shards (GeLU MLP for gpt, SwiGLU for llama). heads/tp
+    attention heads run locally.
+    """
+    b, s, h = x.shape
+    heads = cfg.heads // tp
+    hd = cfg.head_dim
+    hx = x.reshape(b * s, h)
+    qkv = M.pmatmul(hx, w["wqkv"]).reshape(b, s, 3, heads, hd)
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+    o = M.pattention(q, k, v, True, None)
+    o = o.transpose(0, 2, 1, 3).reshape(b * s, heads * hd)
+    attn_partial = M.pmatmul(o, w["wo"])                       # partial sum
+    if cfg.arch == "llama":
+        gate = M.pmatmul(hx, w["w_gate"], "silu")
+        up = M.pmatmul(hx, w["w_up"])
+        mlp_partial = M.pmatmul(gate * up, w["w_down"])        # partial sum
+    else:
+        y = M.pmatmul(hx, w["w1"], "gelu")
+        mlp_partial = M.pmatmul(y, w["w2"])                    # partial sum
+    return (attn_partial + mlp_partial).reshape(b, s, h)
+
+
+def emit_layers(em: Emitter, batch):
+    for arch in ("gpt", "llama"):
+        cfg = M.ModelConfig(arch=arch, hidden=256, layers=1, heads=8, ffn=1024, seq=64)
+        for tag, bsz in (("full", batch), ("dp2", batch // 2), ("dp4", batch // 4)):
+            x_spec, layer_spec = _layer_specs(cfg, bsz)
+            names = ["x"] + [f"layer.{k}" for k in layer_spec]
+            em.emit(
+                f"layer_{arch}_{tag}",
+                functools.partial(
+                    lambda x, layer, cfg=cfg: (M.layer_forward(x, layer, cfg),)
+                ),
+                (x_spec, layer_spec),
+                kind="layer",
+                input_names=names,
+                meta={"arch": arch, "batch": bsz, "shard": tag, "hidden": cfg.hidden},
+            )
+        for tp in (2, 4):
+            heads = cfg.heads // tp
+            w_spec = {
+                "wqkv": f32(cfg.hidden, 3 * cfg.hidden // tp),
+                "wo": f32(cfg.hidden // tp, cfg.hidden),
+            }
+            if arch == "llama":
+                w_spec["w_gate"] = f32(cfg.hidden, cfg.ffn // tp)
+                w_spec["w_up"] = f32(cfg.hidden, cfg.ffn // tp)
+                w_spec["w_down"] = f32(cfg.ffn // tp, cfg.hidden)
+            else:
+                w_spec["w1"] = f32(cfg.hidden, cfg.ffn // tp)
+                w_spec["w2"] = f32(cfg.ffn // tp, cfg.hidden)
+            x_spec = f32(batch, cfg.seq, cfg.hidden)
+            em.emit(
+                f"layer_{arch}_tp{tp}",
+                functools.partial(
+                    lambda x, w, cfg=cfg, tp=tp: (tp_shard_forward(x, w, cfg, tp),)
+                ),
+                (x_spec, w_spec),
+                kind="layer",
+                input_names=["x"] + [f"w.{k}" for k in w_spec],
+                meta={"arch": arch, "batch": batch, "shard": f"tp{tp}", "heads": heads},
+            )
+
+
+# --------------------------------------------------------------------------
+# Train step (e2e) + quickstart
+# --------------------------------------------------------------------------
+
+def emit_train_step(em: Emitter, cfg: M.ModelConfig, batch, name):
+    params = jax.eval_shape(lambda: M.init_params(jax.random.PRNGKey(0), cfg))
+    tok_spec = jax.ShapeDtypeStruct((batch, cfg.seq), jnp.int32)
+    lr_spec = jax.ShapeDtypeStruct((), jnp.float32)
+
+    leaves_with_paths = jax.tree_util.tree_flatten_with_path((params, tok_spec, lr_spec))[0]
+    names = ["/".join(str(k) for k in path) for path, _ in leaves_with_paths]
+
+    step = functools.partial(
+        lambda p, t, lr, cfg=cfg: M.train_step(p, t, lr, cfg)
+    )
+    em.emit(
+        name,
+        step,
+        (params, tok_spec, lr_spec),
+        kind="train_step",
+        input_names=names,
+        meta={
+            "arch": cfg.arch,
+            "vocab": cfg.vocab,
+            "hidden": cfg.hidden,
+            "layers": cfg.layers,
+            "heads": cfg.heads,
+            "ffn": cfg.ffn,
+            "seq": cfg.seq,
+            "batch": batch,
+            "num_params": sum(
+                int(functools.reduce(lambda a, b: a * b, l.shape, 1))
+                for _, l in leaves_with_paths[:-2]
+            ),
+        },
+    )
+
+
+def emit_quickstart(em: Emitter):
+    cfg = M.ModelConfig(arch="gpt", hidden=64, layers=1, heads=4, ffn=128, seq=16)
+    x_spec, layer_spec = _layer_specs(cfg, 2)
+    em.emit(
+        "quickstart",
+        functools.partial(lambda x, layer, cfg=cfg: (M.layer_forward(x, layer, cfg),)),
+        (x_spec, layer_spec),
+        kind="quickstart",
+        input_names=["x"] + [f"layer.{k}" for k in layer_spec],
+        meta={"arch": "gpt", "batch": 2, "hidden": 64, "seq": 16},
+    )
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--e2e-hidden", type=int, default=int(os.environ.get("CFP_E2E_HIDDEN", 256)))
+    ap.add_argument("--e2e-layers", type=int, default=int(os.environ.get("CFP_E2E_LAYERS", 4)))
+    ap.add_argument("--e2e-batch", type=int, default=int(os.environ.get("CFP_E2E_BATCH", 8)))
+    ap.add_argument("--only", default=None, help="comma list: calib,layers,train,quickstart")
+    args = ap.parse_args()
+
+    em = Emitter(args.out)
+    sel = set(args.only.split(",")) if args.only else {"calib", "layers", "train", "quickstart"}
+    if "calib" in sel:
+        print("== calibration programs ==")
+        emit_calibration(em)
+    if "layers" in sel:
+        print("== layer shard programs ==")
+        emit_layers(em, args.batch)
+    if "train" in sel:
+        print("== train step (e2e) ==")
+        cfg = M.ModelConfig(
+            arch="gpt",
+            vocab=4096,
+            hidden=args.e2e_hidden,
+            layers=args.e2e_layers,
+            heads=8,
+            ffn=4 * args.e2e_hidden,
+            seq=64,
+        )
+        emit_train_step(em, cfg, args.e2e_batch, "train_step_gpt")
+    if "quickstart" in sel:
+        print("== quickstart ==")
+        emit_quickstart(em)
+    em.finish()
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,19 @@
+"""L1 Pallas kernels (interpret=True) + pure-jnp oracles.
+
+Exports: attention (fused streaming-softmax MHA), matmul (tiled, fused
+epilogue), rmsnorm, and the *_ref oracles used by pytest.
+"""
+
+from .attention import attention
+from .mlp import matmul, rmsnorm
+from .ref import attention_ref, matmul_ref, rmsnorm_ref, softmax_ref
+
+__all__ = [
+    "attention",
+    "matmul",
+    "rmsnorm",
+    "attention_ref",
+    "matmul_ref",
+    "rmsnorm_ref",
+    "softmax_ref",
+]

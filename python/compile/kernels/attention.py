@@ -1,0 +1,143 @@
+"""L1 Pallas kernel: fused multi-head attention with streaming softmax.
+
+TPU-shaped design (see DESIGN.md §5 Hardware-Adaptation): the GPU paperland
+"flash" pattern (threadblock tiles in shared memory) becomes a BlockSpec
+HBM→VMEM schedule here. Each grid step owns one (batch·head, q-block) tile
+resident in VMEM and streams K/V blocks through a fori_loop, maintaining the
+online max/sum rescaling so the softmax never materializes the (S, S) score
+matrix. The two BMMs target the MXU with D-minor layouts.
+
+Always lowered with ``interpret=True``: the CPU PJRT plugin cannot execute
+Mosaic custom-calls, and correctness (vs ``ref.attention_ref``) is what the
+AOT artifacts need. Real-TPU VMEM/MXU estimates live in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = float("-inf")
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, block_k, causal, scale, q_offset_blocks):
+    """One (B·H, q-block) tile: stream K/V in ``block_k`` chunks.
+
+    q_ref: (1, block_q, D); k_ref/v_ref: (1, S, D); o_ref: (1, block_q, D).
+    """
+    q = q_ref[0].astype(jnp.float32) * scale          # (bq, D)
+    block_q, d = q.shape
+    s_total = k_ref.shape[1]
+    num_kb = s_total // block_k
+    qi = pl.program_id(1)
+    row = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, 1), 0)
+
+    m0 = jnp.full((block_q, 1), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((block_q, 1), jnp.float32)
+    acc0 = jnp.zeros((block_q, d), jnp.float32)
+
+    def body(kb, carry):
+        m, l, acc = carry
+        k = jax.lax.dynamic_slice_in_dim(k_ref[0], kb * block_k, block_k, 0)
+        v = jax.lax.dynamic_slice_in_dim(v_ref[0], kb * block_k, block_k, 0)
+        s = q @ k.astype(jnp.float32).T               # (bq, bk) — MXU BMM #1
+        if causal:
+            col = kb * block_k + jax.lax.broadcasted_iota(
+                jnp.int32, (1, block_k), 1
+            )
+            s = jnp.where(row >= col, s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1, keepdims=True))
+        # Rows that are fully masked keep m == -inf; exp(-inf - -inf) would
+        # be NaN, so pin the rescale factor to 0 there.
+        alpha = jnp.where(m == NEG_INF, 0.0, jnp.exp(m - m_new))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(jnp.isneginf(s), 0.0, p)
+        l_new = alpha * l + p.sum(axis=-1, keepdims=True)
+        acc_new = alpha * acc + p @ v.astype(jnp.float32)  # MXU BMM #2
+        return m_new, l_new, acc_new
+
+    if causal:
+        # Skip K blocks strictly above the diagonal of this q tile.
+        last = (qi + q_offset_blocks + 1) * (block_q // block_k)
+        num_iters = jnp.minimum(num_kb, last)
+    else:
+        num_iters = num_kb
+    m, l, acc = jax.lax.fori_loop(0, num_iters, body, (m0, l0, acc0))
+    l = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0] = (acc / l).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("causal", "scale", "block_q", "block_k")
+)
+def attention(q, k, v, *, causal=False, scale=None, block_q=None, block_k=None):
+    """Fused attention. q, k, v: (B, H, S, D) → (B, H, S, D).
+
+    ``block_q``/``block_k`` default to the largest divisor of S ≤ 128 so the
+    VMEM tile stays MXU-friendly; both must divide S.
+    """
+    b, h, s, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    if block_q is None:
+        block_q = _largest_divisor(s, 128)
+    if block_k is None:
+        block_k = _largest_divisor(s, 128)
+    if s % block_q or s % block_k:
+        raise ValueError(f"S={s} must be divisible by block_q={block_q}, block_k={block_k}")
+    if causal and block_q % block_k:
+        raise ValueError("causal attention requires block_k | block_q")
+
+    bh = b * h
+    qr = q.reshape(bh, s, d)
+    kr = k.reshape(bh, s, d)
+    vr = v.reshape(bh, s, d)
+
+    grid = (bh, s // block_q)
+    out = pl.pallas_call(
+        functools.partial(
+            _attn_kernel,
+            block_k=block_k,
+            causal=causal,
+            scale=scale,
+            q_offset_blocks=0,
+        ),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((1, s, d), lambda i, j: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda i, j: (i, j, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        interpret=True,
+    )(qr, kr, vr)
+    return out.reshape(b, h, s, d)
+
+
+def _largest_divisor(n, cap):
+    for c in range(min(n, cap), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def vmem_bytes(block_q, block_k, s, d, itemsize=4):
+    """Static VMEM footprint estimate for one grid step (TPU planning).
+
+    q tile + streamed k/v block pair (double-buffered) + softmax state + acc.
+    """
+    q_tile = block_q * d * itemsize
+    kv = 2 * 2 * block_k * d * itemsize  # ×2 double-buffer
+    state = block_q * (2 + d) * 4        # m, l, acc in f32
+    scores = block_q * block_k * 4
+    return q_tile + kv + state + scores
+
+
+def mxu_utilization_estimate(block_q, block_k, d):
+    """Fraction of MXU (128×128 systolic) lanes busy for the two BMMs."""
+    def eff(m, n, k):
+        pad = lambda x: -(-x // 128) * 128
+        return (m * n * k) / (pad(m) * pad(n) * pad(k))
+    return 0.5 * (eff(block_q, block_k, d) + eff(block_q, d, block_k))

@@ -1,0 +1,114 @@
+"""L1 Pallas kernels: tiled matmul (with fused epilogue) and RMSNorm.
+
+The matmul is the MLP hot-spot of every model here (GPT/LLAMA FFN, MoE
+experts). TPU-shaped: a (block_m, block_n) output tile lives in VMEM across
+the K-grid dimension; each K step streams one (block_m, block_k) A tile and
+one (block_k, block_n) B tile from HBM, feeding the MXU; the epilogue
+(bias/activation) is fused into the final K step so the tile is written back
+exactly once. ``interpret=True`` everywhere (CPU PJRT cannot run Mosaic).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gelu(x):
+    return jax.nn.gelu(x, approximate=True)
+
+
+_ACTIVATIONS = {None: lambda x: x, "gelu": _gelu, "silu": jax.nn.silu}
+
+
+def _matmul_kernel(a_ref, b_ref, o_ref, *, nk, activation):
+    """Grid (M/bm, N/bn, K/bk); o_ref accumulates in f32 across the K axis."""
+    @pl.when(pl.program_id(2) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        a_ref[...].astype(jnp.float32),
+        b_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _epilogue():
+        o_ref[...] = _ACTIVATIONS[activation](o_ref[...])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("activation", "block_m", "block_n", "block_k")
+)
+def matmul(a, b, *, activation=None, block_m=None, block_n=None, block_k=None):
+    """C = act(A @ B). a: (M, K), b: (K, N) → (M, N) f32."""
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, f"contraction mismatch {k} vs {k2}"
+    if activation not in _ACTIVATIONS:
+        raise ValueError(f"unknown activation {activation!r}")
+    block_m = block_m or _largest_divisor(m, 128)
+    block_n = block_n or _largest_divisor(n, 128)
+    block_k = block_k or _largest_divisor(k, 128)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError("block shapes must divide (M, N, K)")
+
+    grid = (m // block_m, n // block_n, k // block_k)
+    return pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=grid[2], activation=activation),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=True,
+    )(a, b)
+
+
+def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    o_ref[...] = (x * jax.lax.rsqrt(var + eps) * w_ref[...].astype(jnp.float32)).astype(
+        o_ref.dtype
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("eps", "block_rows"))
+def rmsnorm(x, w, *, eps=1e-6, block_rows=None):
+    """RMSNorm over the last dim. x: (R, H), w: (H,) → (R, H) f32.
+
+    Row-blocked: each grid step normalizes ``block_rows`` rows with the whole
+    H extent resident in VMEM (H·itemsize must fit — true for every model
+    here; a production TPU kernel would two-pass larger H).
+    """
+    r, h = x.shape
+    block_rows = block_rows or _largest_divisor(r, 128)
+    if r % block_rows:
+        raise ValueError("block_rows must divide R")
+    return pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=(r // block_rows,),
+        in_specs=[
+            pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+            pl.BlockSpec((h,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, h), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, h), jnp.float32),
+        interpret=True,
+    )(x, w)
+
+
+def _largest_divisor(n, cap):
+    for c in range(min(n, cap), 0, -1):
+        if n % c == 0:
+            return c
+    return 1
+
+
+def matmul_vmem_bytes(block_m, block_n, block_k, itemsize=4):
+    """VMEM estimate: A+B tiles double-buffered + resident f32 output tile."""
+    return 2 * (block_m * block_k + block_k * block_n) * itemsize + block_m * block_n * 4

@@ -1,0 +1,53 @@
+"""Pure-jnp correctness oracles for the Pallas kernels (L1).
+
+Every kernel in this package has a reference here with identical
+signature semantics; pytest + hypothesis assert allclose across
+shapes/dtypes. These are also the "roofline" comparators for the
+interpret-mode perf notes in EXPERIMENTS.md §Perf.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=False, scale=None):
+    """Multi-head scaled-dot-product attention.
+
+    q, k, v: (B, H, S, D). Returns (B, H, S, D), computed in f32.
+    """
+    if scale is None:
+        scale = 1.0 / (q.shape[-1] ** 0.5)
+    q = q.astype(jnp.float32)
+    k = k.astype(jnp.float32)
+    v = v.astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q, k) * scale
+    if causal:
+        S = q.shape[2]
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, v)
+
+
+def matmul_ref(a, b, *, activation=None):
+    """C = act(A @ B). a: (M, K), b: (K, N), f32 accumulate."""
+    c = jnp.matmul(a.astype(jnp.float32), b.astype(jnp.float32))
+    if activation == "gelu":
+        c = jax.nn.gelu(c, approximate=True)
+    elif activation == "silu":
+        c = jax.nn.silu(c)
+    elif activation is not None:
+        raise ValueError(f"unknown activation {activation!r}")
+    return c
+
+
+def rmsnorm_ref(x, w, *, eps=1e-6):
+    """RMSNorm over the last dim. x: (..., H), w: (H,)."""
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    return x32 * jax.lax.rsqrt(var + eps) * w.astype(jnp.float32)
+
+
+def softmax_ref(x):
+    """Numerically-stable softmax over the last dim (f32)."""
+    return jax.nn.softmax(x.astype(jnp.float32), axis=-1)

@@ -1,0 +1,329 @@
+"""L2: JAX model definitions (fwd/bwd) calling the L1 Pallas kernels.
+
+Architectures mirror the paper's evaluation set structurally:
+  * GPT   — pre-LN transformer, learned positions, GeLU MLP
+  * LLAMA — RMSNorm (Pallas), RoPE, SwiGLU MLP
+  * MoE   — GShard-style top-1 gated experts alternating with dense blocks
+
+The Pallas kernels are wrapped in ``jax.custom_vjp`` so the *forward* hot
+path is the L1 kernel while the backward pass is analytic (the backward
+matmuls route through the Pallas matmul too). Everything lowers through
+``jax.jit(...).lower`` in aot.py into one HLO module per artifact — Python
+never runs at training/serving time.
+"""
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as _attention_fwd
+from .kernels import matmul as _matmul_fwd
+from .kernels import rmsnorm as _rmsnorm_fwd
+from .kernels.ref import attention_ref  # noqa: F401  (oracle re-export for tests)
+
+
+# --------------------------------------------------------------------------
+# Differentiable wrappers around the Pallas kernels
+# --------------------------------------------------------------------------
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def pmatmul(a, b, activation=None):
+    """act(A @ B) with the Pallas tiled-matmul forward."""
+    return _matmul_fwd(a, b, activation=activation)
+
+
+def _pmatmul_fwd(a, b, activation):
+    pre = _matmul_fwd(a, b, activation=None)
+    if activation is None:
+        return pre, (a, b, None)
+    return _apply_act(pre, activation), (a, b, pre)
+
+
+def _apply_act(x, activation):
+    if activation == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    if activation == "silu":
+        return jax.nn.silu(x)
+    return x
+
+
+def _act_grad(pre, activation):
+    if activation is None:
+        return jnp.ones_like(pre)
+    return jax.vmap(jax.vmap(jax.grad(lambda t: _apply_act(t, activation))))(pre)
+
+
+def _pmatmul_bwd(activation, res, g):
+    a, b, pre = res
+    if pre is not None:
+        g = g * _act_grad(pre, activation)
+    # Backward matmuls ride the same Pallas kernel.
+    da = _matmul_fwd(g, b.T)
+    db = _matmul_fwd(a.T, g)
+    return da.astype(a.dtype), db.astype(b.dtype)
+
+
+pmatmul.defvjp(_pmatmul_fwd, _pmatmul_bwd)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4))
+def pattention(q, k, v, causal=False, scale=None):
+    """Fused MHA with the Pallas streaming-softmax forward."""
+    return _attention_fwd(q, k, v, causal=causal, scale=scale)
+
+
+def _pattention_fwd(q, k, v, causal, scale):
+    o = _attention_fwd(q, k, v, causal=causal, scale=scale)
+    return o, (q, k, v)
+
+
+def _pattention_bwd(causal, scale, res, do):
+    q, k, v = res
+    d = q.shape[-1]
+    sc = scale if scale is not None else 1.0 / (d**0.5)
+    qf, kf, vf, dof = (t.astype(jnp.float32) for t in (q, k, v, do))
+    s = jnp.einsum("bhqd,bhkd->bhqk", qf, kf) * sc
+    if causal:
+        S = q.shape[2]
+        mask = jnp.tril(jnp.ones((S, S), dtype=bool))
+        s = jnp.where(mask, s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    dv = jnp.einsum("bhqk,bhqd->bhkd", p, dof)
+    dp = jnp.einsum("bhqd,bhkd->bhqk", dof, vf)
+    ds = p * (dp - jnp.sum(dp * p, axis=-1, keepdims=True))
+    dq = jnp.einsum("bhqk,bhkd->bhqd", ds, kf) * sc
+    dk = jnp.einsum("bhqk,bhqd->bhkd", ds, qf) * sc
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+pattention.defvjp(_pattention_fwd, _pattention_bwd)
+
+
+@jax.custom_vjp
+def prmsnorm(x, w):
+    return _rmsnorm_fwd(x, w)
+
+
+def _prmsnorm_fwd(x, w):
+    return _rmsnorm_fwd(x, w), (x, w)
+
+
+def _prmsnorm_bwd(res, dy):
+    x, w = res
+    eps = 1e-6
+    xf = x.astype(jnp.float32)
+    h = x.shape[-1]
+    r = jax.lax.rsqrt(jnp.mean(xf * xf, axis=-1, keepdims=True) + eps)
+    dyw = dy * w.astype(jnp.float32)
+    dx = r * dyw - xf * (r**3 / h) * jnp.sum(dyw * xf, axis=-1, keepdims=True)
+    dw = jnp.sum(dy * xf * r, axis=tuple(range(x.ndim - 1)))
+    return dx.astype(x.dtype), dw.astype(w.dtype)
+
+
+prmsnorm.defvjp(_prmsnorm_fwd, _prmsnorm_bwd)
+
+
+# --------------------------------------------------------------------------
+# Configs and parameter init
+# --------------------------------------------------------------------------
+
+@dataclass(frozen=True)
+class ModelConfig:
+    arch: str = "gpt"           # gpt | llama | moe
+    vocab: int = 4096
+    hidden: int = 256
+    layers: int = 4
+    heads: int = 8
+    ffn: int = 1024
+    seq: int = 64
+    experts: int = 4            # moe only
+    rope_base: float = 10000.0  # llama only
+    meta: dict = field(default_factory=dict, compare=False)
+
+    @property
+    def head_dim(self):
+        return self.hidden // self.heads
+
+
+def num_params(params):
+    return sum(x.size for x in jax.tree_util.tree_leaves(params))
+
+
+def init_params(key, cfg: ModelConfig):
+    """Gaussian(0, 0.02) init. Leaf order == manifest order == rust order."""
+    std = 0.02
+    keys = iter(jax.random.split(key, 16 + 16 * cfg.layers))
+
+    def norm(*shape):
+        return jax.random.normal(next(keys), shape, jnp.float32) * std
+
+    params = {"embed": norm(cfg.vocab, cfg.hidden)}
+    if cfg.arch != "llama":
+        params["pos"] = norm(cfg.seq, cfg.hidden)
+    layers = []
+    for li in range(cfg.layers):
+        layer = {
+            "ln1_w": jnp.ones((cfg.hidden,), jnp.float32),
+            "wqkv": norm(cfg.hidden, 3 * cfg.hidden),
+            "wo": norm(cfg.hidden, cfg.hidden),
+            "ln2_w": jnp.ones((cfg.hidden,), jnp.float32),
+        }
+        if cfg.arch != "llama":
+            layer["ln1_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+            layer["ln2_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+        if cfg.arch == "llama":
+            layer["w_gate"] = norm(cfg.hidden, cfg.ffn)
+            layer["w_up"] = norm(cfg.hidden, cfg.ffn)
+            layer["w_down"] = norm(cfg.ffn, cfg.hidden)
+        elif cfg.arch == "moe" and li % 2 == 1:
+            layer["gate"] = norm(cfg.hidden, cfg.experts)
+            layer["w1_e"] = norm(cfg.experts, cfg.hidden, cfg.ffn)
+            layer["w2_e"] = norm(cfg.experts, cfg.ffn, cfg.hidden)
+        else:
+            layer["w1"] = norm(cfg.hidden, cfg.ffn)
+            layer["w2"] = norm(cfg.ffn, cfg.hidden)
+        layers.append(layer)
+    params["layers"] = layers
+    params["lnf_w"] = jnp.ones((cfg.hidden,), jnp.float32)
+    if cfg.arch != "llama":
+        params["lnf_b"] = jnp.zeros((cfg.hidden,), jnp.float32)
+    params["unembed"] = norm(cfg.hidden, cfg.vocab)
+    return params
+
+
+# --------------------------------------------------------------------------
+# Blocks
+# --------------------------------------------------------------------------
+
+def _layernorm(x, w, b, eps=1e-5):
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    return (xf - mu) * jax.lax.rsqrt(var + eps) * w + b
+
+
+def _rope(x, base):
+    """Rotary embedding. x: (B, H, S, D)."""
+    b, h, s, d = x.shape
+    half = d // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    t = jnp.arange(s, dtype=jnp.float32)
+    ang = jnp.einsum("s,f->sf", t, freqs)
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _mha(x, layer, cfg, *, rope=False):
+    b, s, h = x.shape
+    qkv = pmatmul(x.reshape(b * s, h), layer["wqkv"]).reshape(
+        b, s, 3, cfg.heads, cfg.head_dim
+    )
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+    if rope:
+        q, k = _rope(q, cfg.rope_base), _rope(k, cfg.rope_base)
+    o = pattention(q, k, v, True, None)
+    o = o.transpose(0, 2, 1, 3).reshape(b * s, h)
+    return pmatmul(o, layer["wo"]).reshape(b, s, h)
+
+
+def gpt_block(x, layer, cfg):
+    b, s, h = x.shape
+    hx = _layernorm(x, layer["ln1_w"], layer["ln1_b"])
+    x = x + _mha(hx, layer, cfg)
+    hx = _layernorm(x, layer["ln2_w"], layer["ln2_b"])
+    y = pmatmul(hx.reshape(b * s, h), layer["w1"], "gelu")
+    y = pmatmul(y, layer["w2"]).reshape(b, s, h)
+    return x + y
+
+
+def llama_block(x, layer, cfg):
+    b, s, h = x.shape
+    hx = prmsnorm(x.reshape(b * s, h), layer["ln1_w"]).reshape(b, s, h)
+    x = x + _mha(hx, layer, cfg, rope=True)
+    hx = prmsnorm(x.reshape(b * s, h), layer["ln2_w"])
+    gate = pmatmul(hx, layer["w_gate"], "silu")
+    up = pmatmul(hx, layer["w_up"])
+    y = pmatmul(gate * up, layer["w_down"]).reshape(b, s, h)
+    return x + y
+
+
+def moe_ffn(x2d, layer, cfg):
+    """GShard-style top-1 gating with softmax load weighting.
+
+    x2d: (T, H). Dispatch/combine are one-hot contractions — exactly the
+    BMM-over-experts structure whose partitioning the paper's MoE case
+    study (§5.7) revolves around.
+    """
+    logits = pmatmul(x2d, layer["gate"])                         # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    idx = jnp.argmax(probs, axis=-1)
+    onehot = jax.nn.one_hot(idx, cfg.experts, dtype=x2d.dtype)   # (T, E)
+    weight = jnp.sum(probs * onehot, axis=-1, keepdims=True)     # (T, 1)
+    xe = jnp.einsum("te,th->eth", onehot, x2d)                   # dispatch
+    h1 = jax.nn.gelu(jnp.einsum("eth,ehf->etf", xe, layer["w1_e"]), approximate=True)
+    h2 = jnp.einsum("etf,efh->eth", h1, layer["w2_e"])
+    y = jnp.einsum("te,eth->th", onehot, h2)                     # combine
+    return y * weight
+
+
+def moe_block(x, layer, cfg, li):
+    b, s, h = x.shape
+    hx = _layernorm(x, layer["ln1_w"], layer["ln1_b"])
+    x = x + _mha(hx, layer, cfg)
+    hx = _layernorm(x, layer["ln2_w"], layer["ln2_b"]).reshape(b * s, h)
+    if li % 2 == 1:
+        y = moe_ffn(hx, layer, cfg).reshape(b, s, h)
+    else:
+        y = pmatmul(hx, layer["w1"], "gelu")
+        y = pmatmul(y, layer["w2"]).reshape(b, s, h)
+    return x + y
+
+
+_BLOCKS = {"gpt": gpt_block, "llama": llama_block}
+
+
+def forward(params, tokens, cfg: ModelConfig):
+    """tokens: (B, S) int32 → logits (B, S, V)."""
+    b, s = tokens.shape
+    x = params["embed"][tokens]
+    if cfg.arch != "llama":
+        x = x + params["pos"][None, :s]
+    for li, layer in enumerate(params["layers"]):
+        if cfg.arch == "moe":
+            x = moe_block(x, layer, cfg, li)
+        else:
+            x = _BLOCKS[cfg.arch](x, layer, cfg)
+    if cfg.arch == "llama":
+        x = prmsnorm(x.reshape(b * s, cfg.hidden), params["lnf_w"])
+    else:
+        x = _layernorm(x, params["lnf_w"], params["lnf_b"]).reshape(b * s, cfg.hidden)
+    logits = pmatmul(x, params["unembed"])
+    return logits.reshape(b, s, cfg.vocab)
+
+
+def loss_fn(params, tokens, cfg: ModelConfig):
+    """Next-token cross-entropy over positions 0..S-2."""
+    logits = forward(params, tokens, cfg)[:, :-1]
+    targets = tokens[:, 1:]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)
+    return jnp.mean(nll)
+
+
+def train_step(params, tokens, lr, cfg: ModelConfig):
+    """One SGD step. Returns (loss, new_params)."""
+    loss, grads = jax.value_and_grad(lambda p: loss_fn(p, tokens, cfg))(params)
+    new_params = jax.tree_util.tree_map(
+        lambda p, g: p - lr * g.astype(p.dtype), params, grads
+    )
+    return loss, new_params
+
+
+def layer_forward(x, layer_params, cfg: ModelConfig, li=0):
+    """Single-block forward — the unit the profiler executes per shard."""
+    if cfg.arch == "moe":
+        return moe_block(x, layer_params, cfg, li)
+    return _BLOCKS[cfg.arch](x, layer_params, cfg)

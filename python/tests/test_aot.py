@@ -1,0 +1,97 @@
+"""AOT path: HLO text artifacts are well-formed and manifest-consistent."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import aot
+from compile import model as M
+
+
+@pytest.fixture(scope="module")
+def emitted(tmp_path_factory):
+    out = str(tmp_path_factory.mktemp("artifacts"))
+    em = aot.Emitter(out)
+    aot.emit_quickstart(em)
+    cfg = M.ModelConfig(arch="gpt", vocab=128, hidden=32, layers=1, heads=2, ffn=64, seq=16)
+    aot.emit_train_step(em, cfg, batch=2, name="train_step_tiny")
+    em.finish()
+    return out, em.manifest
+
+
+def test_hlo_text_is_parseable_shape(emitted):
+    out, manifest = emitted
+    for entry in manifest:
+        text = open(os.path.join(out, entry["file"])).read()
+        assert text.startswith("HloModule"), entry["name"]
+        assert "ENTRY" in text
+        # one parameter instruction per manifest input (ENTRY computation
+        # only — nested while/fusion computations have their own parameters)
+        entry_text = text[text.rindex("ENTRY") :]
+        assert entry_text.count(" parameter(") == len(entry["inputs"]), entry["name"]
+
+
+def test_manifest_records_io_avals(emitted):
+    _, manifest = emitted
+    ts = next(e for e in manifest if e["name"] == "train_step_tiny")
+    # params... + tokens + lr
+    assert ts["inputs"][-1]["shape"] == []          # lr scalar
+    assert ts["inputs"][-2]["dtype"] == "int32"     # tokens
+    # outputs: loss + one per param leaf
+    assert len(ts["outputs"]) == len(ts["inputs"]) - 2 + 1
+    assert ts["outputs"][0]["shape"] == []          # loss scalar
+
+
+def test_train_step_meta_param_count(emitted):
+    _, manifest = emitted
+    ts = next(e for e in manifest if e["name"] == "train_step_tiny")
+    cfg = M.ModelConfig(arch="gpt", vocab=128, hidden=32, layers=1, heads=2, ffn=64, seq=16)
+    n = M.num_params(M.init_params(jax.random.PRNGKey(0), cfg))
+    assert ts["meta"]["num_params"] == n
+
+
+def test_manifest_json_round_trips(emitted):
+    out, manifest = emitted
+    loaded = json.load(open(os.path.join(out, "manifest.json")))
+    assert [e["name"] for e in loaded] == [e["name"] for e in manifest]
+
+
+def test_tp_shard_partial_sums_compose():
+    """full-layer output == sum-free check: DP shard at b/2 equals slicing
+    the full output; TP shards sum to the full output (the AllReduce the
+    simulator inserts)."""
+    cfg = M.ModelConfig(arch="gpt", vocab=128, hidden=32, layers=1, heads=4, ffn=64, seq=16)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    layer = params["layers"][0]
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, cfg.seq, cfg.hidden))
+
+    tp = 2
+    h = cfg.hidden
+    hx = M._layernorm(x, layer["ln1_w"], layer["ln1_b"])
+    # column-shard wqkv by heads: reshape (H, 3, heads, hd) and slice heads
+    wqkv = layer["wqkv"].reshape(h, 3, cfg.heads, cfg.head_dim)
+    shard_out = 0.0
+    for r in range(tp):
+        lo, hi = r * cfg.heads // tp, (r + 1) * cfg.heads // tp
+        w = {
+            "wqkv": wqkv[:, :, lo:hi].reshape(h, 3 * h // tp),
+            "wo": layer["wo"][lo * cfg.head_dim : hi * cfg.head_dim],
+            "w1": layer["w1"][:, r * cfg.ffn // tp : (r + 1) * cfg.ffn // tp],
+            "w2": layer["w2"][r * cfg.ffn // tp : (r + 1) * cfg.ffn // tp],
+        }
+        shard_out = shard_out + aot.tp_shard_forward(hx, w, cfg, tp)
+
+    # tp_shard_forward runs attn+mlp over the same (already-normed) input —
+    # a profiling proxy for the two Megatron partial sums, not the exact
+    # residual chain. Compare against the identical full composition.
+    b, s, _ = x.shape
+    full = M._mha(hx, layer, cfg)
+    y1 = M.pmatmul(hx.reshape(b * s, h), layer["w1"], "gelu")
+    y1 = M.pmatmul(y1, layer["w2"]).reshape(b, s, h)
+    import numpy as np
+
+    expect = np.asarray(full + y1)
+    np.testing.assert_allclose(np.asarray(shard_out), expect, atol=1e-4, rtol=1e-4)

@@ -1,0 +1,92 @@
+"""L1 tiled-matmul + rmsnorm kernels vs oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul, matmul_ref, rmsnorm, rmsnorm_ref
+
+SETTINGS = dict(deadline=None, max_examples=25)
+
+
+@settings(**SETTINGS)
+@given(
+    m=st.sampled_from([8, 32, 96, 128]),
+    k=st.sampled_from([16, 64, 128]),
+    n=st.sampled_from([8, 48, 128]),
+    act=st.sampled_from([None, "gelu", "silu"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_matches_ref(m, k, n, act, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (m, k), jnp.float32)
+    b = jax.random.normal(k2, (k, n), jnp.float32)
+    out = matmul(a, b, activation=act)
+    ref = matmul_ref(a, b, activation=act)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+@settings(**SETTINGS)
+@given(
+    bm=st.sampled_from([8, 16, 64]),
+    bn=st.sampled_from([8, 32, 64]),
+    bk=st.sampled_from([8, 16, 64]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_matmul_block_shape_invariance(bm, bn, bk, seed):
+    """K-axis accumulation order must not change the result materially."""
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    a = jax.random.normal(k1, (64, 64), jnp.float32)
+    b = jax.random.normal(k2, (64, 64), jnp.float32)
+    out = matmul(a, b, block_m=bm, block_n=bn, block_k=bk)
+    ref = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-5, rtol=5e-5)
+
+
+def test_matmul_bf16():
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    a = jax.random.normal(k1, (32, 64), jnp.float32).astype(jnp.bfloat16)
+    b = jax.random.normal(k2, (64, 32), jnp.float32).astype(jnp.bfloat16)
+    out = matmul(a, b)
+    ref = matmul_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=5e-2, rtol=5e-2)
+
+
+def test_matmul_identity():
+    a = jnp.eye(32)
+    b = jax.random.normal(jax.random.PRNGKey(1), (32, 16))
+    np.testing.assert_allclose(np.asarray(matmul(a, b)), np.asarray(b), atol=1e-6)
+
+
+def test_matmul_rejects_bad_blocks():
+    a, b = jnp.zeros((30, 30)), jnp.zeros((30, 30))
+    with pytest.raises(ValueError):
+        matmul(a, b, block_m=7)
+    with pytest.raises(ValueError):
+        matmul(a, b, activation="relu6")
+
+
+@settings(**SETTINGS)
+@given(
+    r=st.sampled_from([8, 64, 128]),
+    h=st.sampled_from([16, 64, 256]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_rmsnorm_matches_ref(r, h, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    x = jax.random.normal(k1, (r, h), jnp.float32)
+    w = jax.random.normal(k2, (h,), jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(rmsnorm(x, w)), np.asarray(rmsnorm_ref(x, w)), atol=2e-5, rtol=2e-5
+    )
+
+
+def test_rmsnorm_unit_norm_rows():
+    """Rows of equal magnitude with w=1 normalize to unit RMS."""
+    x = jnp.full((4, 64), 3.0)
+    w = jnp.ones((64,))
+    out = np.asarray(rmsnorm(x, w))
+    rms = np.sqrt((out**2).mean(axis=-1))
+    np.testing.assert_allclose(rms, 1.0, atol=1e-4)

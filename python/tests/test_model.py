@@ -1,0 +1,131 @@
+"""L2 model: shapes, gradient correctness (finite differences through the
+custom-vjp Pallas wrappers), and that training actually learns."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+TINY = dict(vocab=256, hidden=32, layers=2, heads=2, ffn=64, seq=16)
+
+
+@pytest.fixture(params=["gpt", "llama", "moe"])
+def arch(request):
+    return request.param
+
+
+def _setup(arch, seed=0):
+    cfg = M.ModelConfig(arch=arch, experts=2, **TINY)
+    params = M.init_params(jax.random.PRNGKey(seed), cfg)
+    tokens = jax.random.randint(jax.random.PRNGKey(seed + 1), (2, cfg.seq), 0, cfg.vocab)
+    return cfg, params, tokens
+
+
+def test_forward_shapes(arch):
+    cfg, params, tokens = _setup(arch)
+    logits = M.forward(params, tokens, cfg)
+    assert logits.shape == (2, cfg.seq, cfg.vocab)
+    assert jnp.isfinite(logits).all()
+
+
+def test_loss_finite_and_near_uniform_at_init(arch):
+    cfg, params, tokens = _setup(arch)
+    loss = M.loss_fn(params, tokens, cfg)
+    # ~log(V) at random init
+    assert abs(float(loss) - np.log(cfg.vocab)) < 0.5
+
+
+def test_gradients_match_finite_differences(arch):
+    """<grad, u> vs central finite difference along a random direction —
+    validates every custom_vjp (pmatmul/pattention/prmsnorm) end to end.
+
+    Skipped for moe: top-1 argmax gating makes the loss piecewise — FD
+    across an expert-switch boundary measures the jump, not the gradient.
+    The moe path is covered by test_gradients_match_pure_jnp_autodiff.
+    """
+    if arch == "moe":
+        pytest.skip("argmax gating is piecewise; covered by the autodiff test")
+    cfg, params, tokens = _setup(arch)
+    loss, grads = jax.value_and_grad(lambda p: M.loss_fn(p, tokens, cfg))(params)
+    u = jax.tree_util.tree_map(
+        lambda p: jax.random.normal(jax.random.PRNGKey(hash(p.shape) % 2**31), p.shape),
+        params,
+    )
+    eps = 1e-3
+    plus = jax.tree_util.tree_map(lambda p, d: p + eps * d, params, u)
+    minus = jax.tree_util.tree_map(lambda p, d: p - eps * d, params, u)
+    fd = (M.loss_fn(plus, tokens, cfg) - M.loss_fn(minus, tokens, cfg)) / (2 * eps)
+    dot = sum(
+        jnp.vdot(g, d)
+        for g, d in zip(jax.tree_util.tree_leaves(grads), jax.tree_util.tree_leaves(u))
+    )
+    np.testing.assert_allclose(float(fd), float(dot), rtol=5e-2, atol=5e-3)
+
+
+def test_gradients_match_pure_jnp_autodiff(arch, monkeypatch):
+    """jax.grad through the Pallas custom-vjp wrappers must equal jax.grad
+    through the pure-jnp reference ops (default autodiff, no custom vjp)."""
+    from compile.kernels import ref as R
+
+    cfg, params, tokens = _setup(arch)
+    grads_pallas = jax.grad(lambda p: M.loss_fn(p, tokens, cfg))(params)
+
+    monkeypatch.setattr(
+        M, "pmatmul", lambda a, b, activation=None: R.matmul_ref(a, b, activation=activation)
+    )
+    monkeypatch.setattr(
+        M,
+        "pattention",
+        lambda q, k, v, causal=False, scale=None: R.attention_ref(
+            q, k, v, causal=causal, scale=scale
+        ),
+    )
+    monkeypatch.setattr(M, "prmsnorm", lambda x, w: R.rmsnorm_ref(x, w))
+    grads_ref = jax.grad(lambda p: M.loss_fn(p, tokens, cfg))(params)
+
+    for gp, gr in zip(
+        jax.tree_util.tree_leaves(grads_pallas), jax.tree_util.tree_leaves(grads_ref)
+    ):
+        np.testing.assert_allclose(np.asarray(gp), np.asarray(gr), atol=2e-4, rtol=2e-3)
+
+
+def test_train_reduces_loss(arch):
+    cfg, params, tokens = _setup(arch)
+    step = jax.jit(lambda p, t: M.train_step(p, t, 0.5, cfg))
+    first, params = step(params, tokens)
+    loss = first
+    for _ in range(5):
+        loss, params = step(params, tokens)
+    assert float(loss) < float(first) - 0.1, (float(first), float(loss))
+
+
+def test_train_step_is_pure(arch):
+    cfg, params, tokens = _setup(arch)
+    l1, _ = M.train_step(params, tokens, 0.1, cfg)
+    l2, _ = M.train_step(params, tokens, 0.1, cfg)
+    assert float(l1) == float(l2)
+
+
+def test_moe_expert_dispatch_partitions_tokens():
+    """Each token goes to exactly one expert and the outputs recombine."""
+    cfg = M.ModelConfig(arch="moe", experts=4, **TINY)
+    params = M.init_params(jax.random.PRNGKey(0), cfg)
+    layer = params["layers"][1]
+    x = jax.random.normal(jax.random.PRNGKey(2), (8, cfg.hidden))
+    y = M.moe_ffn(x, layer, cfg)
+    assert y.shape == x.shape
+    assert jnp.isfinite(y).all()
+
+
+def test_param_counts_scale_with_layers():
+    cfg2 = M.ModelConfig(arch="gpt", **{**TINY, "layers": 2})
+    cfg4 = M.ModelConfig(arch="gpt", **{**TINY, "layers": 4})
+    n2 = M.num_params(M.init_params(jax.random.PRNGKey(0), cfg2))
+    n4 = M.num_params(M.init_params(jax.random.PRNGKey(0), cfg4))
+    assert n4 > n2
+    per_layer = (n4 - n2) / 2
+    # 4 attn mats (4h^2) + 2 mlp mats (2*h*ffn) dominate
+    expected = 4 * cfg2.hidden**2 + 2 * cfg2.hidden * cfg2.ffn
+    assert abs(per_layer - expected) / expected < 0.1

@@ -1,0 +1,38 @@
+//! Bench: AnalysisPasses (graph build → ParallelBlocks → segments) vs
+//! model depth — the Fig. 13 left-hand scaling, as a perf target for §Perf.
+
+use std::time::Duration;
+
+use cfp::models::{build_training, ModelCfg};
+use cfp::pblock::build_parallel_blocks;
+use cfp::segment::extract_segments;
+use cfp::util::bench::{bench, black_box};
+
+fn main() {
+    for preset in ["gpt-2.6b", "moe-7.1b", "llama-7b"] {
+        for layers in [4usize, 16, 32] {
+            let cfg = ModelCfg::preset(preset).with_layers(layers).scaled_for_eval();
+            let g = build_training(&cfg);
+            bench(
+                &format!("analysis/{preset}/{layers}L ({} ops)", g.ops.len()),
+                Duration::from_millis(800),
+                || {
+                    let bs = build_parallel_blocks(&g, 4);
+                    let ss = extract_segments(&g, &bs);
+                    black_box((bs.num_blocks(), ss.num_unique()));
+                },
+            );
+        }
+    }
+    // graph construction separately
+    for layers in [8usize, 32] {
+        let cfg = ModelCfg::preset("gpt-2.6b").with_layers(layers).scaled_for_eval();
+        bench(
+            &format!("graph_build/gpt/{layers}L"),
+            Duration::from_millis(500),
+            || {
+                black_box(build_training(&cfg).ops.len());
+            },
+        );
+    }
+}

@@ -1,0 +1,25 @@
+//! Bench: one full Fig. 7 cell (CFP + three baselines on one model ×
+//! platform) — the end-to-end evaluation kernel. §Perf target: the whole
+//! 4×4 Fig. 7 sweep under 2 minutes ⇒ a cell well under 8 s.
+
+use std::time::Duration;
+
+use cfp::cluster::Platform;
+use cfp::harness::throughput_row;
+use cfp::models::ModelCfg;
+use cfp::spmd::Mesh;
+use cfp::util::bench::{bench, black_box};
+
+fn main() {
+    for preset in ["gpt-2.6b", "moe-7.1b"] {
+        let model = ModelCfg::preset(preset).with_layers(4).with_batch(8).scaled_for_eval();
+        bench(
+            &format!("fig7_cell/{preset}/a100-pcie-4"),
+            Duration::from_secs(3),
+            || {
+                let (row, _) = throughput_row(&model, Platform::a100_pcie(4), Mesh::flat(4));
+                black_box(row.cfp_us);
+            },
+        );
+    }
+}

@@ -1,0 +1,40 @@
+//! Bench: the full segment-profiling pipeline (Fig. 12's kernel) — one
+//! unique-segment sweep incl. lowering, passes and simulation per config,
+//! serial vs threaded (§4.3's parallel compilation).
+
+use std::time::Duration;
+
+use cfp::cluster::Platform;
+use cfp::models::{build_training, ModelCfg};
+use cfp::pblock::build_parallel_blocks;
+use cfp::profiler::{profile_model, ProfileOptions};
+use cfp::segment::extract_segments;
+use cfp::spmd::Mesh;
+use cfp::util::bench::{bench, black_box};
+
+fn main() {
+    for preset in ["gpt-2.6b", "moe-7.1b"] {
+        let cfg = ModelCfg::preset(preset).with_layers(4).scaled_for_eval();
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        for threads in [1usize, 4] {
+            let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4))
+                .with_threads(threads);
+            let r = bench(
+                &format!("profile_model/{preset}/threads={threads}"),
+                Duration::from_secs(2),
+                || {
+                    black_box(profile_model(&g, &bs, &ss, &opts).profile_space());
+                },
+            );
+            let db = profile_model(&g, &bs, &ss, &opts);
+            println!(
+                "  → {} programs in {} = {:.0} programs/s",
+                db.profile_space(),
+                cfp::util::bench::fmt_ns(r.median_ns),
+                db.profile_space() as f64 / (r.median_ns * 1e-9)
+            );
+        }
+    }
+}

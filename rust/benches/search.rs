@@ -1,0 +1,40 @@
+//! Bench: ComposeSearch (Eq. 8/9 Pareto DP) vs depth and memory caps —
+//! Fig. 13 right-hand scaling. §Perf target: 32-layer GPT < 1 s.
+
+use std::time::Duration;
+
+use cfp::cluster::Platform;
+use cfp::cost;
+use cfp::models::{build_training, ModelCfg};
+use cfp::pblock::build_parallel_blocks;
+use cfp::profiler::{profile_model, ProfileOptions};
+use cfp::segment::extract_segments;
+use cfp::spmd::Mesh;
+use cfp::util::bench::{bench, black_box};
+
+fn main() {
+    for layers in [4usize, 16, 32] {
+        let cfg = ModelCfg::preset("gpt-2.6b").with_layers(layers).scaled_for_eval();
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let db = profile_model(&g, &bs, &ss, &opts);
+        let free = cost::search(&ss, &db, None).unwrap();
+        bench(
+            &format!("compose_search/unconstrained/{layers}L"),
+            Duration::from_millis(700),
+            || {
+                black_box(cost::search(&ss, &db, None));
+            },
+        );
+        let cap = (free.mem_bytes as f64 * 0.9) as u64;
+        bench(
+            &format!("compose_search/mem_capped/{layers}L"),
+            Duration::from_millis(700),
+            || {
+                black_box(cost::search(&ss, &db, Some(cap)));
+            },
+        );
+    }
+}

@@ -1,0 +1,58 @@
+//! Bench: SPMD lowering + cluster simulation throughput (instrs/s) — the
+//! L3 hot path that every profiled configuration pays. §Perf target:
+//! ≥ 10⁶ simulated instrs/s end-to-end.
+
+use std::time::Duration;
+
+use cfp::cluster::sim::ComputeModel;
+use cfp::cluster::{simulate, Platform};
+use cfp::models::{build_training, ModelCfg};
+use cfp::pblock::build_parallel_blocks;
+use cfp::spmd::{lower, passes, GlobalPlan, Mesh};
+use cfp::util::bench::{bench, black_box};
+
+fn main() {
+    let cfg = ModelCfg::preset("gpt-2.6b").with_layers(8).scaled_for_eval();
+    let g = build_training(&cfg);
+    let bs = build_parallel_blocks(&g, 4);
+    let plan = GlobalPlan::data_parallel(&bs, Mesh::flat(4));
+    let platform = Platform::a100_pcie(4);
+    let cm = ComputeModel::for_platform(&platform);
+
+    let prog = lower(&g, &bs, &plan);
+    let n_instr = prog.instrs.len();
+    println!("program: {} instrs from {} ops", n_instr, g.ops.len());
+
+    let r = bench(
+        &format!("lower/gpt-8L ({} ops)", g.ops.len()),
+        Duration::from_secs(1),
+        || {
+            black_box(lower(&g, &bs, &plan).instrs.len());
+        },
+    );
+    println!(
+        "  → {:.2}M ops lowered/s",
+        g.ops.len() as f64 / (r.median_ns * 1e-9) / 1e6
+    );
+
+    let r = bench(
+        &format!("simulate/gpt-8L ({n_instr} instrs)"),
+        Duration::from_secs(1),
+        || {
+            black_box(simulate(&prog, &platform, 4, &cm).total_us);
+        },
+    );
+    println!(
+        "  → {:.2}M instrs simulated/s",
+        n_instr as f64 / (r.median_ns * 1e-9) / 1e6
+    );
+
+    let mut prog2 = prog.clone();
+    bench("passes/bucket+dispatch", Duration::from_millis(500), || {
+        let mut p = prog2.clone();
+        passes::bucket_gradients(&mut p, 64 << 20);
+        passes::dispatch_alltoall_sendrecv(&mut p, 4);
+        black_box(p.instrs.len());
+    });
+    prog2.instrs.clear();
+}

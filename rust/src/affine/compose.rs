@@ -1,0 +1,225 @@
+//! Composition of affine dimension maps along operator chains
+//! ("Constructing and Propagating Dependency", paper §3.2, Eq. 3–6).
+//!
+//! Composition degrades conservatively: any combination we cannot express
+//! exactly becomes `All` (full-dimension dependence). Conservative means a
+//! subgraph may be *under*-grouped into ParallelBlocks, never incorrectly
+//! grouped — preserving the communication-free soundness invariant.
+
+/// Per-output-dimension dependency on an input tensor's dimensions.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DimDep {
+    /// `b_{in_dim} = a` — pointwise (Table 1: elementwise / transpose).
+    Point { in_dim: usize },
+    /// `b = ⌊a/block⌋·block + k, 0 ≤ k < block` — block-local window (Eq. 3).
+    Block { in_dim: usize, block: usize },
+    /// depends on the whole input dimension (Table 1 `*`).
+    All { in_dim: usize },
+    /// no dependence (broadcast-created dim).
+    Free,
+    /// reshape split, high part: `b_{in_dim} = inner·a + lo`.
+    SplitHi { in_dim: usize, inner: usize },
+    /// reshape split, low (interleaved) part.
+    SplitLo { in_dim: usize, inner: usize },
+    /// reshape merge of input dims hi..=lo (row-major, |lo-part| = inner).
+    Merge { hi: usize, lo: usize, inner: usize },
+}
+
+impl DimDep {
+    /// The input dim this dep primarily touches (for All-degradation).
+    pub fn primary_dim(&self) -> Option<usize> {
+        match *self {
+            DimDep::Point { in_dim }
+            | DimDep::Block { in_dim, .. }
+            | DimDep::All { in_dim }
+            | DimDep::SplitHi { in_dim, .. }
+            | DimDep::SplitLo { in_dim, .. } => Some(in_dim),
+            DimDep::Merge { hi, .. } => Some(hi),
+            DimDep::Free => None,
+        }
+    }
+}
+
+/// Affine dependency of a consumer tensor on a producer tensor,
+/// one entry per consumer dim.
+#[derive(Clone, Debug, PartialEq)]
+pub struct DimMap {
+    pub deps: Vec<DimDep>,
+    pub in_rank: usize,
+}
+
+impl DimMap {
+    pub fn identity(rank: usize) -> DimMap {
+        DimMap {
+            deps: (0..rank).map(|d| DimDep::Point { in_dim: d }).collect(),
+            in_rank: rank,
+        }
+    }
+
+    /// True if some consumer dim depends pointwise/block-wise on `in_dim`
+    /// (i.e. a partition of `in_dim` could propagate).
+    pub fn carries(&self, in_dim: usize) -> bool {
+        self.deps.iter().any(|d| {
+            matches!(d,
+                DimDep::Point { in_dim: i } | DimDep::Block { in_dim: i, .. }
+                | DimDep::SplitHi { in_dim: i, .. }
+                if *i == in_dim
+            ) || matches!(d, DimDep::Merge { hi, .. } if *hi == in_dim)
+        })
+    }
+}
+
+/// Compose: `outer` maps Z-dims → Y-dims, `inner` maps Y-dims → X-dims;
+/// result maps Z-dims → X-dims (path Z ← Y ← X in consumer order).
+pub fn compose(outer: &DimMap, inner: &DimMap) -> DimMap {
+    let deps = outer
+        .deps
+        .iter()
+        .map(|zdep| match *zdep {
+            DimDep::Free => DimDep::Free,
+            DimDep::Point { in_dim } => inner_dep(inner, in_dim),
+            DimDep::Block { in_dim, block } => match inner_dep(inner, in_dim) {
+                DimDep::Point { in_dim: x } => DimDep::Block { in_dim: x, block },
+                DimDep::Block { in_dim: x, block: b2 } => {
+                    DimDep::Block { in_dim: x, block: block.max(b2) }
+                }
+                DimDep::Free => DimDep::Free,
+                d => degrade(d),
+            },
+            DimDep::All { in_dim } => match inner_dep(inner, in_dim) {
+                DimDep::Free => DimDep::Free,
+                d => degrade_all(d),
+            },
+            DimDep::SplitHi { in_dim, inner: k } => match inner_dep(inner, in_dim) {
+                DimDep::Point { in_dim: x } => DimDep::SplitHi { in_dim: x, inner: k },
+                DimDep::Free => DimDep::Free,
+                d => degrade(d),
+            },
+            DimDep::SplitLo { in_dim, inner: k } => match inner_dep(inner, in_dim) {
+                DimDep::Point { in_dim: x } => DimDep::SplitLo { in_dim: x, inner: k },
+                DimDep::Free => DimDep::Free,
+                d => degrade(d),
+            },
+            DimDep::Merge { hi, lo, inner: k } => {
+                match (inner_dep(inner, hi), inner_dep(inner, lo)) {
+                    (DimDep::Point { in_dim: xh }, DimDep::Point { in_dim: xl }) => {
+                        DimDep::Merge { hi: xh, lo: xl, inner: k }
+                    }
+                    (dh, _) => degrade(dh),
+                }
+            }
+        })
+        .collect();
+    DimMap { deps, in_rank: inner.in_rank }
+}
+
+fn inner_dep(inner: &DimMap, y_dim: usize) -> DimDep {
+    inner.deps.get(y_dim).copied().unwrap_or(DimDep::Free)
+}
+
+fn degrade(d: DimDep) -> DimDep {
+    match d.primary_dim() {
+        Some(i) => DimDep::All { in_dim: i },
+        None => DimDep::Free,
+    }
+}
+
+fn degrade_all(d: DimDep) -> DimDep {
+    degrade(d)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::Prop;
+    use crate::util::Pcg64;
+
+    #[test]
+    fn identity_composes_neutrally() {
+        let id = DimMap::identity(3);
+        let m = DimMap {
+            deps: vec![
+                DimDep::Point { in_dim: 2 },
+                DimDep::All { in_dim: 0 },
+                DimDep::Free,
+            ],
+            in_rank: 3,
+        };
+        assert_eq!(compose(&id, &m).deps, m.deps);
+        assert_eq!(compose(&m, &id).deps, m.deps);
+    }
+
+    #[test]
+    fn point_chains_stay_point() {
+        // Z←Y: perm (1,0); Y←X: perm (1,0) ⇒ Z←X identity
+        let swap = DimMap {
+            deps: vec![DimDep::Point { in_dim: 1 }, DimDep::Point { in_dim: 0 }],
+            in_rank: 2,
+        };
+        let c = compose(&swap, &swap);
+        assert_eq!(c.deps, DimMap::identity(2).deps);
+    }
+
+    #[test]
+    fn all_absorbs() {
+        let all0 = DimMap {
+            deps: vec![DimDep::All { in_dim: 0 }],
+            in_rank: 1,
+        };
+        let pt = DimMap {
+            deps: vec![DimDep::Point { in_dim: 0 }],
+            in_rank: 1,
+        };
+        assert_eq!(compose(&all0, &pt).deps[0], DimDep::All { in_dim: 0 });
+        assert_eq!(compose(&pt, &all0).deps[0], DimDep::All { in_dim: 0 });
+    }
+
+    #[test]
+    fn block_of_block_keeps_coarser_block() {
+        let b4 = DimMap {
+            deps: vec![DimDep::Block { in_dim: 0, block: 4 }],
+            in_rank: 1,
+        };
+        let b8 = DimMap {
+            deps: vec![DimDep::Block { in_dim: 0, block: 8 }],
+            in_rank: 1,
+        };
+        assert_eq!(compose(&b4, &b8).deps[0], DimDep::Block { in_dim: 0, block: 8 });
+    }
+
+    /// Property: composition is associative on randomly generated maps.
+    #[test]
+    fn prop_compose_associative() {
+        fn random_map(rng: &mut Pcg64, out_rank: usize, in_rank: usize) -> DimMap {
+            let deps = (0..out_rank)
+                .map(|_| {
+                    let d = rng.below(in_rank as u64) as usize;
+                    match rng.below(5) {
+                        0 => DimDep::Point { in_dim: d },
+                        1 => DimDep::Block { in_dim: d, block: 1 << rng.below(4) },
+                        2 => DimDep::All { in_dim: d },
+                        3 => DimDep::Free,
+                        _ => DimDep::SplitHi { in_dim: d, inner: 1 << rng.below(3) },
+                    }
+                })
+                .collect();
+            DimMap { deps, in_rank }
+        }
+        Prop::default().check("compose associative", |rng| {
+            let r = 1 + rng.below(4) as usize;
+            let a = random_map(rng, r, r);
+            let b = random_map(rng, r, r);
+            let c = random_map(rng, r, r);
+            let left = compose(&compose(&a, &b), &c);
+            let right = compose(&a, &compose(&b, &c));
+            // associativity holds up to conservative degradation: both sides
+            // must agree on the primary dim and on exact (Point) entries.
+            for (l, rr) in left.deps.iter().zip(&right.deps) {
+                assert_eq!(l.primary_dim(), rr.primary_dim(), "{a:?} {b:?} {c:?}");
+                if matches!(l, DimDep::Point { .. }) || matches!(rr, DimDep::Point { .. }) {
+                    assert_eq!(l, rr, "{a:?} {b:?} {c:?}");
+                }
+            }
+        });
+    }
+}

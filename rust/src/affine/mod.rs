@@ -1,0 +1,328 @@
+//! Affine dependency analysis (paper §3.2, Table 1).
+//!
+//! Each operator gets an affine expression mapping output-element indices to
+//! the input elements they depend on. We represent the per-dimension
+//! structure of that affine map ([`DimDep`]): pointwise, block-local
+//! (`b = ⌊a/d⌋·d + k`, Eq. 2/3), full-dimension (`*` in Table 1), reshape
+//! split/merge factors, or free (broadcast). Composition of these maps along
+//! operator chains is what lets CFP decide whether a tensor partition
+//! propagates through a subgraph without communication — the
+//! parallelism-preserving property that defines ParallelBlocks — and what
+//! the segment fingerprints (§4.1) are built from.
+
+pub mod compose;
+pub mod propagate;
+
+pub use compose::{compose, DimDep, DimMap};
+pub use propagate::{propagate, CoShard, Prop};
+
+use crate::graph::{Graph, OpId, OpKind};
+
+/// Affine dependency of `op`'s output on its `input_index`-th input
+/// (Table 1 of the paper).
+pub fn op_dim_map(g: &Graph, op: OpId, input_index: usize) -> DimMap {
+    let o = &g.ops[op];
+    let input = o.inputs[input_index];
+    let in_shape = g.shape(input).to_vec();
+    let out_shape = o.shape.clone();
+    match &o.kind {
+        OpKind::Param { .. } | OpKind::Constant { .. } | OpKind::Rng => {
+            DimMap { deps: vec![], in_rank: 0 }
+        }
+        // Elementwise: identity transformation
+        OpKind::Elem(_) => DimMap {
+            deps: (0..out_shape.len()).map(|d| DimDep::Point { in_dim: d }).collect(),
+            in_rank: in_shape.len(),
+        },
+        OpKind::Transpose { perm } => DimMap {
+            deps: perm.iter().map(|&p| DimDep::Point { in_dim: p }).collect(),
+            in_rank: in_shape.len(),
+        },
+        OpKind::Broadcast { dims } => DimMap {
+            deps: (0..out_shape.len())
+                .map(|d| match dims.iter().position(|&m| m == d) {
+                    Some(i) => DimDep::Point { in_dim: i },
+                    None => DimDep::Free,
+                })
+                .collect(),
+            in_rank: in_shape.len(),
+        },
+        OpKind::Reduce { dims, .. } => {
+            // out dim d corresponds to the d-th kept input dim; reduced
+            // dims are `*` (All) in Table-1 terms but don't appear in the
+            // output index space, so the map only carries kept dims.
+            let kept: Vec<usize> =
+                (0..in_shape.len()).filter(|i| !dims.contains(i)).collect();
+            DimMap {
+                deps: kept.iter().map(|&i| DimDep::Point { in_dim: i }).collect(),
+                in_rank: in_shape.len(),
+            }
+        }
+        OpKind::Reshape => reshape_map(&in_shape, &out_shape),
+        OpKind::Dot(d) => {
+            let b = d.batch;
+            let deps = (0..out_shape.len())
+                .map(|dim| {
+                    if dim < b {
+                        DimDep::Point { in_dim: dim }
+                    } else if dim == b {
+                        // M from lhs / contracted on rhs
+                        if input_index == 0 {
+                            DimDep::Point { in_dim: b }
+                        } else {
+                            DimDep::All { in_dim: b }
+                        }
+                    } else {
+                        // N from rhs / contracted on lhs
+                        if input_index == 1 {
+                            DimDep::Point { in_dim: b + 1 }
+                        } else {
+                            DimDep::All { in_dim: b + 1 }
+                        }
+                    }
+                })
+                .collect();
+            DimMap { deps, in_rank: in_shape.len() }
+        }
+        OpKind::Gather => {
+            if input_index == 0 {
+                // table: out = idx_dims ++ table[1:]; idx dims select rows
+                let idx_rank = out_shape.len() - (in_shape.len() - 1);
+                let deps = (0..out_shape.len())
+                    .map(|d| {
+                        if d < idx_rank {
+                            DimDep::All { in_dim: 0 }
+                        } else {
+                            DimDep::Point { in_dim: d - idx_rank + 1 }
+                        }
+                    })
+                    .collect();
+                DimMap { deps, in_rank: in_shape.len() }
+            } else {
+                let idx_rank = in_shape.len();
+                let deps = (0..out_shape.len())
+                    .map(|d| {
+                        if d < idx_rank {
+                            DimDep::Point { in_dim: d }
+                        } else {
+                            DimDep::Free
+                        }
+                    })
+                    .collect();
+                DimMap { deps, in_rank: in_shape.len() }
+            }
+        }
+        OpKind::Route => {
+            let out_rank = out_shape.len();
+            let in_rank = in_shape.len();
+            DimMap {
+                deps: (0..out_rank)
+                    .map(|d| {
+                        if d + 1 == out_rank {
+                            DimDep::Point { in_dim: in_rank - 1 }
+                        } else {
+                            DimDep::All { in_dim: 0 }
+                        }
+                    })
+                    .collect(),
+                in_rank,
+            }
+        }
+        OpKind::Slice { dim, .. } => DimMap {
+            deps: (0..out_shape.len())
+                .map(|d| DimDep::Point { in_dim: if d < *dim { d } else { d + 1 } })
+                .collect(),
+            in_rank: in_shape.len(),
+        },
+        OpKind::Pad { dim, .. } => DimMap {
+            deps: (0..out_shape.len())
+                .map(|d| {
+                    if d == *dim {
+                        DimDep::Free
+                    } else {
+                        DimDep::Point { in_dim: if d < *dim { d } else { d - 1 } }
+                    }
+                })
+                .collect(),
+            in_rank: in_shape.len(),
+        },
+        OpKind::Scatter { .. } => {
+            // grad-of-gather: every output element may receive updates from
+            // any index position — conservatively All on the update dims.
+            let deps = (0..out_shape.len())
+                .map(|d| {
+                    if d == 0 {
+                        DimDep::All { in_dim: 0 }
+                    } else {
+                        DimDep::Point { in_dim: d }
+                    }
+                })
+                .collect();
+            DimMap { deps, in_rank: in_shape.len() }
+        }
+    }
+}
+
+/// Reshape dimension-group factorization: split input and output dims into
+/// minimal groups with equal element products (row-major correspondence).
+/// Returns per-output-dim deps: the leading dim of each group maps
+/// `SplitHi`-style to the group's leading input dim; inner dims are
+/// interleaved (`SplitLo`) and merges are recorded.
+pub fn reshape_map(in_shape: &[usize], out_shape: &[usize]) -> DimMap {
+    let groups = reshape_groups(in_shape, out_shape);
+    let mut deps = vec![DimDep::Free; out_shape.len()];
+    for gr in &groups {
+        let (i0, i1, j0, j1) = (gr.in_start, gr.in_end, gr.out_start, gr.out_end);
+        if i1 - i0 == 1 && j1 - j0 == 1 {
+            deps[j0] = DimDep::Point { in_dim: i0 };
+        } else if i1 - i0 == 1 {
+            // split: input dim i0 → output dims j0..j1
+            let mut inner: usize = out_shape[j0 + 1..j1].iter().product();
+            for j in j0..j1 {
+                deps[j] = if j == j0 {
+                    DimDep::SplitHi { in_dim: i0, inner }
+                } else {
+                    DimDep::SplitLo { in_dim: i0, inner }
+                };
+                if j + 1 < j1 {
+                    inner /= out_shape[j + 1];
+                }
+            }
+        } else if j1 - j0 == 1 {
+            // merge: input dims i0..i1 → output dim j0
+            let inner: usize = in_shape[i0 + 1..i1].iter().product();
+            deps[j0] = DimDep::Merge { hi: i0, lo: i1 - 1, inner };
+        } else {
+            // general regrouping — conservative: all outs depend on all ins
+            for j in j0..j1 {
+                deps[j] = DimDep::All { in_dim: i0 };
+            }
+        }
+    }
+    DimMap { deps, in_rank: in_shape.len() }
+}
+
+pub struct ReshapeGroup {
+    pub in_start: usize,
+    pub in_end: usize,
+    pub out_start: usize,
+    pub out_end: usize,
+}
+
+/// Minimal aligned groups between two shapes of equal numel.
+pub fn reshape_groups(in_shape: &[usize], out_shape: &[usize]) -> Vec<ReshapeGroup> {
+    let mut groups = Vec::new();
+    let (mut i, mut j) = (0usize, 0usize);
+    while i < in_shape.len() || j < out_shape.len() {
+        let (i0, j0) = (i, j);
+        let mut pi: u128 = 1;
+        let mut pj: u128 = 1;
+        // always consume at least one dim on each side (when available)
+        if i < in_shape.len() {
+            pi *= in_shape[i] as u128;
+            i += 1;
+        }
+        if j < out_shape.len() {
+            pj *= out_shape[j] as u128;
+            j += 1;
+        }
+        while pi != pj {
+            if pi < pj {
+                pi *= in_shape[i] as u128;
+                i += 1;
+            } else {
+                pj *= out_shape[j] as u128;
+                j += 1;
+            }
+        }
+        // absorb trailing 1s
+        while i < in_shape.len() && in_shape[i] == 1 {
+            i += 1;
+        }
+        while j < out_shape.len() && out_shape[j] == 1 {
+            j += 1;
+        }
+        groups.push(ReshapeGroup { in_start: i0, in_end: i, out_start: j0, out_end: j });
+    }
+    groups
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ElemOp, ParamClass};
+
+    #[test]
+    fn elementwise_is_identity() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![2, 3], ParamClass::Input);
+        let y = g.unary(ElemOp::Exp, x, "y");
+        let m = op_dim_map(&g, y, 0);
+        assert_eq!(m.deps, vec![DimDep::Point { in_dim: 0 }, DimDep::Point { in_dim: 1 }]);
+    }
+
+    #[test]
+    fn transpose_permutes() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![2, 3, 4], ParamClass::Input);
+        let y = g.transpose(x, vec![2, 0, 1], "t");
+        let m = op_dim_map(&g, y, 0);
+        assert_eq!(
+            m.deps,
+            vec![
+                DimDep::Point { in_dim: 2 },
+                DimDep::Point { in_dim: 0 },
+                DimDep::Point { in_dim: 1 }
+            ]
+        );
+    }
+
+    #[test]
+    fn dot_marks_contraction_all() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![4, 8], ParamClass::Input);
+        let b = g.param("b", vec![8, 16], ParamClass::Input);
+        let c = g.matmul(a, b, "c");
+        let ml = op_dim_map(&g, c, 0);
+        assert_eq!(ml.deps[0], DimDep::Point { in_dim: 0 }); // M from lhs
+        assert_eq!(ml.deps[1], DimDep::All { in_dim: 1 });   // N sweeps lhs K
+        let mr = op_dim_map(&g, c, 1);
+        assert_eq!(mr.deps[0], DimDep::All { in_dim: 0 });   // M sweeps rhs K
+        assert_eq!(mr.deps[1], DimDep::Point { in_dim: 1 }); // N from rhs
+    }
+
+    #[test]
+    fn reshape_split_and_merge() {
+        // (6, 4) -> (2, 3, 4): dim0 split, dim2 pointwise
+        let m = reshape_map(&[6, 4], &[2, 3, 4]);
+        assert_eq!(m.deps[0], DimDep::SplitHi { in_dim: 0, inner: 3 });
+        assert_eq!(m.deps[1], DimDep::SplitLo { in_dim: 0, inner: 1 });
+        assert_eq!(m.deps[2], DimDep::Point { in_dim: 1 });
+        // (2, 3, 4) -> (6, 4): merge
+        let m2 = reshape_map(&[2, 3, 4], &[6, 4]);
+        assert_eq!(m2.deps[0], DimDep::Merge { hi: 0, lo: 1, inner: 3 });
+        assert_eq!(m2.deps[1], DimDep::Point { in_dim: 2 });
+    }
+
+    #[test]
+    fn reshape_groups_align() {
+        let gs = reshape_groups(&[4, 6, 5], &[24, 5]);
+        assert_eq!(gs.len(), 2);
+        assert_eq!((gs[0].in_start, gs[0].in_end), (0, 2));
+        assert_eq!((gs[0].out_start, gs[0].out_end), (0, 1));
+    }
+
+    #[test]
+    fn gather_table_rows_are_all() {
+        let mut g = Graph::new();
+        let t = g.param("t", vec![100, 8], ParamClass::Weight);
+        let i = g.param("tokens", vec![4, 5], ParamClass::Input);
+        let y = g.gather(t, i, "g");
+        let m = op_dim_map(&g, y, 0);
+        assert_eq!(m.deps[0], DimDep::All { in_dim: 0 });
+        assert_eq!(m.deps[2], DimDep::Point { in_dim: 1 });
+        let mi = op_dim_map(&g, y, 1);
+        assert_eq!(mi.deps[0], DimDep::Point { in_dim: 0 });
+        assert_eq!(mi.deps[2], DimDep::Free);
+    }
+}

@@ -1,0 +1,265 @@
+//! Partition propagation through single operators (Eq. 2 instantiated).
+//!
+//! Given an operator, one of its inputs sharded on a dimension into P
+//! parts, decide where the partition lands on the output — or whether it
+//! is *blocked* (propagating it would require communication). This is the
+//! predicate `Check user, PB with Eq.(2)` in Algorithm 1, and the kernel
+//! of SPMD sharding inference in `spmd::lower`.
+
+use crate::graph::{Graph, OpId, OpKind};
+
+use super::reshape_groups;
+
+/// Sharding requirement imposed on a *sibling* input for the propagation
+/// to stay communication-free (e.g. Dot batch dims must be co-sharded;
+/// elementwise siblings must be identically sharded).
+#[derive(Clone, Debug, PartialEq)]
+pub struct CoShard {
+    pub input_index: usize,
+    /// Some(dim): sibling must be sharded on `dim`; None: replicated.
+    pub dim: Option<usize>,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Prop {
+    /// Partition propagates to output dim `out_dim` without communication.
+    To { out_dim: usize, co_shards: Vec<CoShard> },
+    /// Propagation requires communication (contracted/reduced/interleaved).
+    Blocked,
+}
+
+/// Propagate a sharding of `op.inputs[input_index]` dim `in_dim` into `parts`
+/// shards through `op`.
+pub fn propagate(g: &Graph, op: OpId, input_index: usize, in_dim: usize, parts: usize) -> Prop {
+    let o = &g.ops[op];
+    let in_shape = g.shape(o.inputs[input_index]);
+    if in_dim >= in_shape.len() || in_shape[in_dim] % parts != 0 {
+        return Prop::Blocked;
+    }
+    let to = |out_dim: usize, co: Vec<CoShard>| -> Prop {
+        // Eq. 2 divisibility on the output side
+        if o.shape[out_dim] % parts == 0 {
+            Prop::To { out_dim, co_shards: co }
+        } else {
+            Prop::Blocked
+        }
+    };
+    match &o.kind {
+        OpKind::Param { .. } | OpKind::Constant { .. } | OpKind::Rng => Prop::Blocked,
+        OpKind::Elem(_) => {
+            let co = (0..o.inputs.len())
+                .filter(|&i| i != input_index)
+                .map(|i| CoShard { input_index: i, dim: Some(in_dim) })
+                .collect();
+            to(in_dim, co)
+        }
+        OpKind::Transpose { perm } => {
+            let out_dim = perm.iter().position(|&p| p == in_dim).unwrap();
+            to(out_dim, vec![])
+        }
+        OpKind::Broadcast { dims } => to(dims[in_dim], vec![]),
+        OpKind::Reduce { dims, .. } => {
+            if dims.contains(&in_dim) {
+                Prop::Blocked // partial reduction ⇒ AllReduce
+            } else {
+                let out_dim = in_dim - dims.iter().filter(|&&d| d < in_dim).count();
+                to(out_dim, vec![])
+            }
+        }
+        OpKind::Reshape => {
+            let out_shape = &o.shape;
+            for gr in reshape_groups(in_shape, out_shape) {
+                if (gr.in_start..gr.in_end).contains(&in_dim) {
+                    // only the leading dim of a group keeps contiguous shards
+                    if in_dim == gr.in_start
+                        && gr.out_start < out_shape.len()
+                        && out_shape[gr.out_start] % parts == 0
+                        && in_shape[in_dim] % parts == 0
+                    {
+                        return to(gr.out_start, vec![]);
+                    }
+                    return Prop::Blocked;
+                }
+            }
+            Prop::Blocked
+        }
+        OpKind::Dot(d) => {
+            let b = d.batch;
+            let other = 1 - input_index;
+            if in_dim < b {
+                // batch dim: sibling must be co-sharded on the same batch dim
+                to(in_dim, vec![CoShard { input_index: other, dim: Some(in_dim) }])
+            } else if input_index == 0 && in_dim == b {
+                // M: rhs replicated
+                to(b, vec![CoShard { input_index: other, dim: None }])
+            } else if input_index == 1 && in_dim == b + 1 {
+                // N: lhs replicated
+                to(b + 1, vec![CoShard { input_index: other, dim: None }])
+            } else {
+                // contraction dim ⇒ partial sums ⇒ AllReduce
+                Prop::Blocked
+            }
+        }
+        OpKind::Gather => {
+            if input_index == 0 {
+                // table rows sharded ⇒ lookups cross shards
+                if in_dim == 0 {
+                    Prop::Blocked
+                } else {
+                    let idx_rank = o.shape.len() - (in_shape.len() - 1);
+                    to(idx_rank + in_dim - 1, vec![])
+                }
+            } else {
+                to(in_dim, vec![])
+            }
+        }
+        OpKind::Route => {
+            let in_rank = in_shape.len();
+            if in_dim + 1 == in_rank {
+                to(o.shape.len() - 1, vec![])
+            } else {
+                Prop::Blocked // token/expert dims cross only via All-to-All
+            }
+        }
+        OpKind::Slice { dim, .. } => {
+            if in_dim == *dim {
+                Prop::Blocked
+            } else {
+                to(if in_dim < *dim { in_dim } else { in_dim - 1 }, vec![])
+            }
+        }
+        OpKind::Pad { dim, .. } => {
+            to(if in_dim < *dim { in_dim } else { in_dim + 1 }, vec![])
+        }
+        OpKind::Scatter { .. } => {
+            // updates sharded along index dims ⇒ partial tables ⇒ AllReduce;
+            // trailing (feature) dims propagate.
+            if input_index == 1 && in_dim >= 1 {
+                let idx_rank = g.shape(o.inputs[0]).len();
+                if in_dim >= idx_rank {
+                    return to(in_dim - idx_rank + 1, vec![]);
+                }
+                Prop::Blocked
+            } else {
+                Prop::Blocked
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{ElemOp, ParamClass, ReduceKind};
+
+    fn simple_graph() -> (Graph, OpId, OpId) {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![8, 16], ParamClass::Input);
+        let b = g.param("b", vec![16, 32], ParamClass::Weight);
+        let c = g.matmul(a, b, "c");
+        (g, a, c)
+    }
+
+    #[test]
+    fn dot_m_dim_propagates_with_replicated_rhs() {
+        let (g, _, c) = simple_graph();
+        match propagate(&g, c, 0, 0, 4) {
+            Prop::To { out_dim, co_shards } => {
+                assert_eq!(out_dim, 0);
+                assert_eq!(co_shards, vec![CoShard { input_index: 1, dim: None }]);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn dot_contraction_blocked() {
+        let (g, _, c) = simple_graph();
+        assert_eq!(propagate(&g, c, 0, 1, 4), Prop::Blocked);
+        assert_eq!(propagate(&g, c, 1, 0, 4), Prop::Blocked);
+    }
+
+    #[test]
+    fn dot_batch_requires_co_shard() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![4, 8, 16], ParamClass::Input);
+        let b = g.param("b", vec![4, 16, 8], ParamClass::Input);
+        let c = g.dot(a, b, 1, "bmm");
+        match propagate(&g, c, 0, 0, 2) {
+            Prop::To { out_dim, co_shards } => {
+                assert_eq!(out_dim, 0);
+                assert_eq!(co_shards, vec![CoShard { input_index: 1, dim: Some(0) }]);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn indivisible_parts_blocked() {
+        let (g, _, c) = simple_graph();
+        assert_eq!(propagate(&g, c, 0, 0, 3), Prop::Blocked); // 8 % 3 != 0
+    }
+
+    #[test]
+    fn reduce_blocks_reduced_dim_shifts_kept() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![4, 8, 16], ParamClass::Input);
+        let r = g.reduce(x, vec![1], ReduceKind::Sum, "r");
+        assert_eq!(propagate(&g, r, 0, 1, 2), Prop::Blocked);
+        match propagate(&g, r, 0, 2, 4) {
+            Prop::To { out_dim, .. } => assert_eq!(out_dim, 1),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn reshape_leading_dim_of_group_propagates() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![8, 16, 32], ParamClass::Input);
+        let r = g.reshape(x, vec![128, 32], "merge");
+        // dim 0 leads the (8,16)→(128) group
+        match propagate(&g, r, 0, 0, 4) {
+            Prop::To { out_dim, .. } => assert_eq!(out_dim, 0),
+            p => panic!("{p:?}"),
+        }
+        // dim 1 is interleaved in the merge → blocked
+        assert_eq!(propagate(&g, r, 0, 1, 4), Prop::Blocked);
+        // dim 2 is its own group
+        match propagate(&g, r, 0, 2, 4) {
+            Prop::To { out_dim, .. } => assert_eq!(out_dim, 1),
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn elementwise_requires_siblings_co_sharded() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![8, 8], ParamClass::Input);
+        let b = g.param("b", vec![8, 8], ParamClass::Input);
+        let s = g.binary(ElemOp::Add, a, b, "s");
+        match propagate(&g, s, 0, 1, 2) {
+            Prop::To { out_dim, co_shards } => {
+                assert_eq!(out_dim, 1);
+                assert_eq!(co_shards, vec![CoShard { input_index: 1, dim: Some(1) }]);
+            }
+            p => panic!("{p:?}"),
+        }
+    }
+
+    #[test]
+    fn gather_table_feature_dim_propagates() {
+        let mut g = Graph::new();
+        let t = g.param("t", vec![100, 64], ParamClass::Weight);
+        let i = g.param("tokens", vec![4, 8], ParamClass::Input);
+        let y = g.gather(t, i, "g");
+        assert_eq!(propagate(&g, y, 0, 0, 4), Prop::Blocked);
+        match propagate(&g, y, 0, 1, 4) {
+            Prop::To { out_dim, .. } => assert_eq!(out_dim, 2),
+            p => panic!("{p:?}"),
+        }
+        match propagate(&g, y, 1, 0, 2) {
+            Prop::To { out_dim, .. } => assert_eq!(out_dim, 0),
+            p => panic!("{p:?}"),
+        }
+    }
+}

@@ -1,0 +1,131 @@
+//! Collective communication cost models (ring algorithms, NCCL-shaped).
+//!
+//! `bytes` is always the GLOBAL tensor size; each model applies its own
+//! wire-volume factor. Time = launch + steps·α + wire_bytes / eff_bw(chunk).
+//! The chunk size entering `eff_bw` is the per-step message — this is what
+//! makes many small collectives slower than one fused big one at equal
+//! volume (the §2.2/Fig. 2 effect).
+
+use crate::spmd::CollKind;
+
+use super::platform::LinkModel;
+
+/// Time (µs) for one collective over `n` devices on `link`.
+pub fn collective_time_us(kind: CollKind, bytes: u64, n: usize, link: &LinkModel) -> f64 {
+    if n <= 1 {
+        return 0.0;
+    }
+    let b = bytes as f64;
+    let nf = n as f64;
+    let (wire, steps) = match kind {
+        // ring allreduce: reduce-scatter + allgather phases
+        CollKind::AllReduce => (2.0 * b * (nf - 1.0) / nf, 2 * (n - 1)),
+        CollKind::AllGather | CollKind::ReduceScatter => (b * (nf - 1.0) / nf, n - 1),
+        // pairwise exchange: every device sends (n-1)/n of its shard
+        CollKind::AllToAll => (b * (nf - 1.0) / nf, n - 1),
+        CollKind::Broadcast => (b, n - 1),
+        CollKind::SendRecv => {
+            // one pairwise hop, penalized on PCIe-like links
+            let bw = link.eff_bw_gbps(b) / link.sendrecv_penalty;
+            return link.launch_us + link.step_us + b / (bw * 1e3);
+        }
+    };
+    let chunk = (wire / steps.max(1) as f64).max(1.0);
+    let bw = link.eff_bw_gbps(chunk); // GB/s == bytes/µs ÷ 1e3
+    link.launch_us + steps as f64 * link.step_us + wire / (bw * 1e3)
+}
+
+/// Achieved bus bandwidth (GB/s) implied by a measured collective time —
+/// the Fig. 8 "utilized communication bandwidth" metric (bytes moved per
+/// wall-clock second, NCCL busbw convention).
+pub fn achieved_bandwidth_gbps(kind: CollKind, bytes: u64, n: usize, time_us: f64) -> f64 {
+    if time_us <= 0.0 || n <= 1 {
+        return 0.0;
+    }
+    let b = bytes as f64;
+    let nf = n as f64;
+    let wire = match kind {
+        CollKind::AllReduce => 2.0 * b * (nf - 1.0) / nf,
+        CollKind::AllGather | CollKind::ReduceScatter | CollKind::AllToAll => {
+            b * (nf - 1.0) / nf
+        }
+        CollKind::Broadcast => b,
+        CollKind::SendRecv => b,
+    };
+    wire / (time_us * 1e3)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::platform::Platform;
+
+    fn link() -> LinkModel {
+        Platform::a100_pcie(4).intra
+    }
+
+    #[test]
+    fn monotone_in_size() {
+        let l = link();
+        let mut last = 0.0;
+        for mb in [1u64, 4, 16, 64, 256] {
+            let t = collective_time_us(CollKind::AllReduce, mb << 20, 4, &l);
+            assert!(t > last, "{mb}MB: {t} vs {last}");
+            last = t;
+        }
+    }
+
+    #[test]
+    fn ring_allreduce_asymptotics() {
+        // at huge sizes, time → 2(n-1)/n · bytes / peak
+        let l = link();
+        let bytes = 1u64 << 30;
+        let t = collective_time_us(CollKind::AllReduce, bytes, 4, &l);
+        let ideal = 2.0 * (bytes as f64) * 0.75 / (l.peak_gbps * 1e3);
+        assert!((t / ideal - 1.0).abs() < 0.1, "t={t} ideal={ideal}");
+    }
+
+    #[test]
+    fn reduce_scatter_is_half_an_allreduce() {
+        let l = link();
+        let bytes = 256u64 << 20;
+        let ar = collective_time_us(CollKind::AllReduce, bytes, 4, &l);
+        let rs = collective_time_us(CollKind::ReduceScatter, bytes, 4, &l);
+        assert!((ar / rs - 2.0).abs() < 0.2, "ar={ar} rs={rs}");
+    }
+
+    #[test]
+    fn fusion_beats_fragmentation_at_equal_volume() {
+        // 64 × 1MB AllReduces vs 1 × 64MB — the §2.2 DP effect
+        let l = link();
+        let many: f64 =
+            (0..64).map(|_| collective_time_us(CollKind::AllReduce, 1 << 20, 4, &l)).sum();
+        let one = collective_time_us(CollKind::AllReduce, 64 << 20, 4, &l);
+        assert!(many > 1.5 * one, "many={many} one={one}");
+    }
+
+    #[test]
+    fn sendrecv_chain_is_slow_on_pcie() {
+        // AllToAll as 3 sendrecvs vs native alltoall pricing
+        let l = link();
+        let native = collective_time_us(CollKind::AllToAll, 64 << 20, 4, &l);
+        let dispatched: f64 = (0..3)
+            .map(|_| collective_time_us(CollKind::SendRecv, 16 << 20, 4, &l))
+            .sum();
+        assert!(dispatched > 1.5 * native, "dispatched={dispatched} native={native}");
+    }
+
+    #[test]
+    fn single_device_is_free() {
+        assert_eq!(collective_time_us(CollKind::AllReduce, 1 << 30, 1, &link()), 0.0);
+    }
+
+    #[test]
+    fn achieved_bw_sane() {
+        let l = link();
+        let bytes = 256u64 << 20;
+        let t = collective_time_us(CollKind::AllReduce, bytes, 4, &l);
+        let bw = achieved_bandwidth_gbps(CollKind::AllReduce, bytes, 4, t);
+        assert!(bw > 0.5 * l.peak_gbps && bw <= l.peak_gbps * 1.01, "bw={bw}");
+    }
+}

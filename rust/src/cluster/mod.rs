@@ -1,0 +1,25 @@
+//! Cluster substrate: multi-GPU platforms with interconnect models and a
+//! per-device timeline simulator for lowered SPMD programs.
+//!
+//! This replaces the paper's physical testbeds (8×A100-PCIe, 2×8×A100,
+//! 4×V100-NVLink — §5.1) per the substitution rule in DESIGN.md §2. The
+//! models capture the *structural* facts the paper's evaluation turns on:
+//!
+//!  * collective time is a nonlinear function of message size — fixed
+//!    kernel-launch cost + α latency per algorithm step + size-dependent
+//!    effective bandwidth that saturates only for multi-MB messages
+//!    (why many small AllReduces lose to one big one, §2.2);
+//!  * ring algorithm factors: AllReduce moves 2(n−1)/n of the tensor,
+//!    AllGather/ReduceScatter (n−1)/n (why the RS rewrite halves cost);
+//!  * SendRecv chains price each pairwise hop separately (why AllToAll
+//!    collapses on PCIe, §5.7);
+//!  * PCIe vs NVLink peak bandwidth differ ~10× (why config ranking
+//!    changes across platforms, Fig. 7).
+
+pub mod collective;
+pub mod platform;
+pub mod sim;
+
+pub use collective::collective_time_us;
+pub use platform::{LinkModel, Platform};
+pub use sim::{simulate, SimReport};

@@ -1,0 +1,198 @@
+//! Platform definitions: interconnects + device compute capability.
+
+/// Link model: effective bandwidth saturates with message size
+/// (`eff_bw(msg) = peak · msg / (msg + sat)`), plus per-kernel launch cost
+/// and per-algorithm-step latency.
+#[derive(Clone, Copy, Debug)]
+pub struct LinkModel {
+    /// peak bus bandwidth per direction, GB/s
+    pub peak_gbps: f64,
+    /// message size (bytes) at which half of peak is reached
+    pub sat_bytes: f64,
+    /// per-collective-kernel launch overhead, µs
+    pub launch_us: f64,
+    /// per-ring-step latency, µs
+    pub step_us: f64,
+    /// multiplier on SendRecv pairwise transfers (PCIe penalizes them)
+    pub sendrecv_penalty: f64,
+}
+
+impl LinkModel {
+    pub fn eff_bw_gbps(&self, msg_bytes: f64) -> f64 {
+        self.peak_gbps * msg_bytes / (msg_bytes + self.sat_bytes)
+    }
+}
+
+/// A training platform (the paper's testbeds, simulated).
+#[derive(Clone, Copy, Debug)]
+pub struct Platform {
+    pub name: &'static str,
+    /// devices per node participating in intra-op parallelism
+    pub gpus_per_node: usize,
+    pub nodes: usize,
+    pub intra: LinkModel,
+    /// inter-node link (multi-node platforms)
+    pub inter: LinkModel,
+    /// peak dense-matmul throughput per device, TFLOP/s
+    pub peak_tflops: f64,
+    /// HBM bandwidth, GB/s (memory-bound kernel roofline)
+    pub hbm_gbps: f64,
+    /// per-compute-kernel launch overhead, µs
+    pub kernel_launch_us: f64,
+    /// time-scale divisor applied by [`Platform::scaled_testbed`] (1.0 for
+    /// the full-scale platform); consumed by ComputeModel::for_platform
+    pub time_scale: f64,
+}
+
+impl Platform {
+    /// 4/8× NVIDIA A100-40GB over PCIe 4.0 (≈24 GB/s effective per pair,
+    /// shared host bus ⇒ low saturation, expensive send/recv).
+    pub fn a100_pcie(gpus: usize) -> Platform {
+        Platform {
+            name: "a100-pcie",
+            gpus_per_node: gpus,
+            nodes: 1,
+            intra: LinkModel {
+                peak_gbps: 22.0,
+                sat_bytes: 4.0e6,
+                launch_us: 14.0,
+                step_us: 6.0,
+                sendrecv_penalty: 6.0,
+            },
+            inter: ethernet(),
+            peak_tflops: 140.0, // TF32 with sparsity off
+            hbm_gbps: 1555.0,
+            kernel_launch_us: 4.5,
+            time_scale: 1.0,
+        }
+    }
+
+    /// Two A100-PCIe nodes with 100 Gb Ethernet between them (16 GPUs).
+    pub fn a100_two_node() -> Platform {
+        Platform {
+            name: "a100-2node",
+            nodes: 2,
+            gpus_per_node: 8,
+            ..Platform::a100_pcie(8)
+        }
+    }
+
+    /// 4× V100-16GB with NVLink (≈120 GB/s effective, cheap steps).
+    pub fn v100_nvlink() -> Platform {
+        Platform {
+            name: "v100-nvlink",
+            gpus_per_node: 4,
+            nodes: 1,
+            intra: LinkModel {
+                peak_gbps: 120.0,
+                sat_bytes: 1.0e6,
+                launch_us: 9.0,
+                step_us: 2.5,
+                sendrecv_penalty: 1.2,
+            },
+            inter: ethernet(),
+            peak_tflops: 112.0, // FP16 tensor cores (paper: FP16 on V100)
+            hbm_gbps: 900.0,
+            kernel_launch_us: 4.5,
+            time_scale: 1.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<Platform> {
+        match name {
+            "a100-pcie" | "a100-pcie-4" => Some(Platform::a100_pcie(4)),
+            "a100-pcie-8" => Some(Platform::a100_pcie(8)),
+            "a100-2node" => Some(Platform::a100_two_node()),
+            "v100-nvlink" => Some(Platform::v100_nvlink()),
+            _ => None,
+        }
+    }
+
+    pub fn total_gpus(&self) -> usize {
+        self.gpus_per_node * self.nodes
+    }
+
+    /// Device memory capacity in bytes.
+    pub fn mem_capacity(&self) -> u64 {
+        let full: u64 = match self.name {
+            "v100-nvlink" => 16 << 30,
+            _ => 40 << 30,
+        };
+        (full as f64 / self.byte_scale()) as u64
+    }
+
+    fn byte_scale(&self) -> f64 {
+        // scaled_testbed(sb, st) keeps sb/st encoded via time_scale & bw
+        if self.time_scale > 1.0 {
+            SCALE_BYTES
+        } else {
+            1.0
+        }
+    }
+
+    /// A dimensionally-consistent miniature of this platform for the
+    /// `scaled_for_eval` model sizes: message bytes shrink by `SCALE_BYTES`
+    /// and kernel times by `SCALE_TIME`, so effective-bandwidth saturation,
+    /// launch-overhead shares and compute/comm balance all match the
+    /// full-scale testbed exactly (a pure unit change — see DESIGN.md §2).
+    pub fn scaled_testbed(mut self) -> Platform {
+        let sb = SCALE_BYTES;
+        let st = SCALE_TIME;
+        let scale_link = |l: &mut LinkModel| {
+            l.peak_gbps *= st / sb;
+            l.sat_bytes /= sb;
+            l.launch_us /= st;
+            l.step_us /= st;
+        };
+        scale_link(&mut self.intra);
+        scale_link(&mut self.inter);
+        self.hbm_gbps *= st / sb;
+        self.kernel_launch_us /= st;
+        self.time_scale = st;
+        self
+    }
+}
+
+/// `scaled_for_eval` shrinks hidden by 8 and seq by 8 ⇒ activation and
+/// parameter bytes shrink ≈64×, matmul flops ≈512×.
+pub const SCALE_BYTES: f64 = 64.0;
+pub const SCALE_TIME: f64 = 512.0;
+
+fn ethernet() -> LinkModel {
+    LinkModel {
+        peak_gbps: 11.0, // ~100 GbE effective
+        sat_bytes: 8.0e6,
+        launch_us: 25.0,
+        step_us: 18.0,
+        sendrecv_penalty: 2.0,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn effective_bandwidth_saturates() {
+        let l = Platform::a100_pcie(4).intra;
+        let small = l.eff_bw_gbps(64e3);
+        let big = l.eff_bw_gbps(256e6);
+        assert!(small < 0.4 * l.peak_gbps, "small msgs inefficient: {small}");
+        assert!(big > 0.95 * l.peak_gbps, "big msgs near peak: {big}");
+    }
+
+    #[test]
+    fn nvlink_is_much_faster_than_pcie() {
+        let p = Platform::a100_pcie(4).intra.eff_bw_gbps(64e6);
+        let v = Platform::v100_nvlink().intra.eff_bw_gbps(64e6);
+        assert!(v > 4.0 * p, "nvlink {v} vs pcie {p}");
+    }
+
+    #[test]
+    fn lookup_by_name() {
+        for n in ["a100-pcie", "a100-pcie-8", "a100-2node", "v100-nvlink"] {
+            assert!(Platform::by_name(n).is_some(), "{n}");
+        }
+        assert!(Platform::by_name("tpu-v9000").is_none());
+    }
+}

@@ -1,0 +1,208 @@
+//! Per-device timeline simulation of a lowered SPMD program.
+//!
+//! SPMD: all devices execute the same schedule, so the step time is one
+//! device's serial timeline with collectives priced by the interconnect
+//! model (XLA does not overlap compute and collectives by default, and the
+//! paper explicitly scopes overlap out — §7.2).
+
+use std::collections::BTreeMap;
+
+use crate::spmd::{CollKind, Instr, SpmdProgram};
+
+use super::collective::{achieved_bandwidth_gbps, collective_time_us};
+use super::platform::Platform;
+
+/// Compute-kernel efficiency curve: fraction of peak as a function of
+/// kernel size. Calibrated from real PJRT kernel measurements by the
+/// profiler (`runtime::calibrate`); this default is the uncalibrated
+/// analytic shape.
+#[derive(Clone, Debug)]
+pub struct ComputeModel {
+    pub peak_tflops: f64,
+    pub hbm_gbps: f64,
+    pub launch_us: f64,
+    /// flops at which half of max efficiency is reached
+    pub sat_flops: f64,
+    /// max achievable fraction of peak (calibration scales this)
+    pub max_eff: f64,
+}
+
+impl ComputeModel {
+    pub fn for_platform(p: &Platform) -> ComputeModel {
+        ComputeModel {
+            peak_tflops: p.peak_tflops,
+            hbm_gbps: p.hbm_gbps,
+            launch_us: p.kernel_launch_us,
+            sat_flops: 5.0e8 / p.time_scale,
+            max_eff: 0.62,
+        }
+    }
+
+    pub fn efficiency(&self, flops: u64) -> f64 {
+        let f = flops as f64;
+        (self.max_eff * f / (f + self.sat_flops)).max(0.02)
+    }
+
+    pub fn time_us(&self, flops: u64, bytes: u64) -> f64 {
+        if flops == 0 && bytes == 0 {
+            return 0.0;
+        }
+        let eff = self.efficiency(flops);
+        let t_flops = flops as f64 / (self.peak_tflops * eff * 1e6); // µs
+        let t_mem = bytes as f64 / (self.hbm_gbps * 1e3);
+        self.launch_us + t_flops.max(t_mem)
+    }
+}
+
+/// Simulation result for one training step.
+#[derive(Clone, Debug, Default)]
+pub struct SimReport {
+    pub total_us: f64,
+    pub compute_us: f64,
+    pub comm_us: f64,
+    pub comm_inter_us: f64,
+    /// per collective kind: (kernel count, total bytes, total µs)
+    pub comm_by_kind: BTreeMap<&'static str, (usize, u64, f64)>,
+    pub comm_volume: u64,
+    pub comm_kernels: usize,
+    /// volume-weighted achieved bandwidth, GB/s (Fig. 8's busbw metric)
+    pub achieved_bw_gbps: f64,
+}
+
+impl SimReport {
+    pub fn throughput_flops(&self, serial_flops: u64) -> f64 {
+        if self.total_us <= 0.0 {
+            return 0.0;
+        }
+        serial_flops as f64 / (self.total_us * 1e-6)
+    }
+}
+
+pub fn kind_name(k: CollKind) -> &'static str {
+    match k {
+        CollKind::AllReduce => "all-reduce",
+        CollKind::AllGather => "all-gather",
+        CollKind::ReduceScatter => "reduce-scatter",
+        CollKind::AllToAll => "all-to-all",
+        CollKind::Broadcast => "broadcast",
+        CollKind::SendRecv => "send-recv",
+    }
+}
+
+/// Simulate a program on `platform`, with `intra_n` devices in the
+/// intra-op group (≤ gpus_per_node) and the platform's node count on the
+/// inter axis.
+pub fn simulate(prog: &SpmdProgram, platform: &Platform, intra_n: usize, cm: &ComputeModel) -> SimReport {
+    let mut r = SimReport::default();
+    let mut wire_sum = 0.0f64;
+    let mut time_sum = 0.0f64;
+    for instr in &prog.instrs {
+        match instr {
+            Instr::Compute { flops, bytes, .. } => {
+                r.compute_us += cm.time_us(*flops, *bytes);
+            }
+            Instr::Coll { kind, bytes, .. } => {
+                let t = collective_time_us(*kind, *bytes, intra_n, &platform.intra);
+                r.comm_us += t;
+                let e = r.comm_by_kind.entry(kind_name(*kind)).or_insert((0, 0, 0.0));
+                e.0 += 1;
+                e.1 += bytes;
+                e.2 += t;
+                r.comm_volume += bytes;
+                r.comm_kernels += 1;
+                let bw = achieved_bandwidth_gbps(*kind, *bytes, intra_n, t);
+                wire_sum += bw * t;
+                time_sum += t;
+            }
+            Instr::CollInter { kind, bytes, .. } => {
+                let t = collective_time_us(*kind, *bytes, platform.nodes, &platform.inter);
+                r.comm_inter_us += t;
+                let e = r.comm_by_kind.entry("inter-node").or_insert((0, 0, 0.0));
+                e.0 += 1;
+                e.1 += bytes;
+                e.2 += t;
+                r.comm_volume += bytes;
+                r.comm_kernels += 1;
+                let bw = achieved_bandwidth_gbps(*kind, *bytes, platform.nodes, t);
+                wire_sum += bw * t;
+                time_sum += t;
+            }
+        }
+    }
+    r.total_us = r.compute_us + r.comm_us + r.comm_inter_us;
+    r.achieved_bw_gbps = if time_sum > 0.0 { wire_sum / time_sum } else { 0.0 };
+    r
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_training, ModelCfg};
+    use crate::pblock::build_parallel_blocks;
+    use crate::spmd::{lower, passes, GlobalPlan, Mesh};
+
+    fn sim_plan(label: &str, bucket: bool) -> SimReport {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(2).with_batch(8);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let plan = GlobalPlan::uniform(&bs, label, Mesh::flat(4)).unwrap();
+        let mut prog = lower(&g, &bs, &plan);
+        if bucket {
+            passes::bucket_gradients(&mut prog, 25 << 20);
+        }
+        let p = Platform::a100_pcie(4);
+        simulate(&prog, &p, 4, &ComputeModel::for_platform(&p))
+    }
+
+    #[test]
+    fn bucketing_cuts_dp_comm_time() {
+        let unbucketed = sim_plan("m", false);
+        let bucketed = sim_plan("m", true);
+        assert_eq!(unbucketed.comm_volume, bucketed.comm_volume, "volume invariant");
+        assert!(
+            bucketed.comm_us < 0.8 * unbucketed.comm_us,
+            "bucketing speeds comm: {} vs {}",
+            bucketed.comm_us,
+            unbucketed.comm_us
+        );
+    }
+
+    #[test]
+    fn compute_model_monotone() {
+        let p = Platform::a100_pcie(4);
+        let cm = ComputeModel::for_platform(&p);
+        assert!(cm.time_us(1 << 20, 1 << 10) < cm.time_us(1 << 30, 1 << 10));
+        // big kernels run near max efficiency
+        assert!(cm.efficiency(u64::MAX / 2) > 0.6 * cm.max_eff);
+        // tiny kernels are launch-bound
+        assert!(cm.time_us(100, 100) < 2.0 * cm.launch_us);
+    }
+
+    #[test]
+    fn report_totals_consistent() {
+        let r = sim_plan("m", true);
+        assert!(r.total_us > 0.0);
+        assert!((r.total_us - r.compute_us - r.comm_us - r.comm_inter_us).abs() < 1e-6);
+        let kind_total: f64 = r.comm_by_kind.values().map(|(_, _, t)| t).sum();
+        assert!((kind_total - r.comm_us - r.comm_inter_us).abs() < 1e-6);
+    }
+
+    #[test]
+    fn nvlink_shrinks_comm_share() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(2).with_batch(8);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let plan = GlobalPlan::uniform(&bs, "k", Mesh::flat(4)).unwrap();
+        let prog = lower(&g, &bs, &plan);
+        let pcie = Platform::a100_pcie(4);
+        let nv = Platform::v100_nvlink();
+        let r_p = simulate(&prog, &pcie, 4, &ComputeModel::for_platform(&pcie));
+        let r_n = simulate(&prog, &nv, 4, &ComputeModel::for_platform(&nv));
+        assert!(
+            r_n.comm_us / r_n.total_us < r_p.comm_us / r_p.total_us,
+            "nvlink comm share {} < pcie {}",
+            r_n.comm_us / r_n.total_us,
+            r_p.comm_us / r_p.total_us
+        );
+    }
+}

@@ -1,0 +1,254 @@
+//! The CFP coordinator: the end-to-end pipeline of paper Fig. 3 —
+//! AnalysisPasses → ExecCompiling ∥ MetricsProfiling → ComposeSearch —
+//! with per-phase timing (the §5.5 search-overhead breakdown) and the
+//! baseline searchers for comparison.
+
+use std::time::Instant;
+
+use crate::baselines;
+use crate::cluster::sim::ComputeModel;
+use crate::cluster::{simulate, Platform};
+use crate::cost::{self, Plan};
+use crate::graph::Graph;
+use crate::models::{build_training, ModelCfg};
+use crate::pblock::{build_parallel_blocks, BlockSet};
+use crate::profiler::{profile_model, ProfileDb, ProfileOptions};
+use crate::segment::{extract_segments, SegmentSet};
+use crate::spmd::{Mesh};
+
+#[derive(Clone)]
+pub struct CfpOptions {
+    pub model: ModelCfg,
+    pub platform: Platform,
+    pub mesh: Mesh,
+    /// per-device memory cap (None → platform capacity)
+    pub mem_cap: Option<u64>,
+    pub threads: usize,
+    /// PJRT-calibrated compute model (from runtime::calibrate_compute)
+    pub compute: Option<ComputeModel>,
+}
+
+impl CfpOptions {
+    pub fn new(model: ModelCfg, platform: Platform) -> CfpOptions {
+        let mesh = Mesh { intra: platform.gpus_per_node, nodes: platform.nodes };
+        CfpOptions { model, platform, mesh, mem_cap: None, threads: 1, compute: None }
+    }
+}
+
+/// Per-phase timing (paper Fig. 12/13 vocabulary).
+#[derive(Clone, Debug, Default)]
+pub struct PhaseTimings {
+    pub analysis_passes_s: f64,
+    pub exec_compiling_s: f64,
+    pub metrics_profiling_s: f64,
+    pub compose_search_s: f64,
+    /// estimated real-testbed compile+profile (unoptimized / optimized)
+    pub est_compile_s: f64,
+    pub est_profile_s: f64,
+    pub est_optimized_s: f64,
+}
+
+pub struct CfpResult {
+    pub graph: Graph,
+    pub blocks: BlockSet,
+    pub segments: SegmentSet,
+    pub db: ProfileDb,
+    pub plan: Plan,
+    pub timings: PhaseTimings,
+    pub mesh: Mesh,
+}
+
+impl CfpResult {
+    /// Human-readable per-segment strategy description (Fig. 14 case study).
+    pub fn describe_plan(&self) -> Vec<String> {
+        let mut out = Vec::new();
+        for (n, inst) in self.segments.instances.iter().enumerate() {
+            let cfg = &self.db.segments[inst.unique_id].configs[self.plan.choice[n]];
+            let labels: Vec<String> = inst
+                .blocks
+                .iter()
+                .zip(&cfg.strategy)
+                .map(|(&b, &s)| {
+                    let blk = &self.blocks.blocks[b];
+                    let entry = &self.graph.ops[blk.entry].name;
+                    let short = entry.rsplit('/').next().unwrap_or(entry);
+                    format!("{}={}", short, pretty(&blk.strategies[s].label))
+                })
+                .collect();
+            out.push(format!("segment {n} (u{}): {}", inst.unique_id, labels.join(" ")));
+        }
+        out
+    }
+
+    /// Simulated step time of the selected plan over the WHOLE graph
+    /// (cross-check against the composed Eq. 8 estimate — Fig. 10).
+    pub fn whole_graph_step_us(&self, opts: &CfpOptions) -> f64 {
+        let plan = self.global_plan();
+        let mut prog = crate::spmd::lower(&self.graph, &self.blocks, &plan);
+        crate::spmd::passes::bucket_gradients(&mut prog, 64 << 20);
+        if opts.platform.name.contains("pcie") {
+            crate::spmd::passes::dispatch_alltoall_sendrecv(&mut prog, opts.mesh.intra);
+        }
+        let cm = opts
+            .compute
+            .clone()
+            .unwrap_or_else(|| ComputeModel::for_platform(&opts.platform));
+        simulate(&prog, &opts.platform, opts.mesh.intra, &cm).total_us
+    }
+
+    /// Expand the per-segment choice into a per-block GlobalPlan.
+    pub fn global_plan(&self) -> crate::spmd::GlobalPlan {
+        self.global_plan_for(&self.plan.choice)
+    }
+
+    /// Expand any per-segment choice (incl. baseline plans) into a
+    /// per-block GlobalPlan.
+    pub fn global_plan_for(&self, seg_choice: &[usize]) -> crate::spmd::GlobalPlan {
+        let mut choice = vec![0usize; self.blocks.blocks.len()];
+        for (n, inst) in self.segments.instances.iter().enumerate() {
+            let cfg = &self.db.segments[inst.unique_id].configs[seg_choice[n]];
+            for (i, &b) in inst.blocks.iter().enumerate() {
+                choice[b] = cfg.strategy[i];
+            }
+        }
+        crate::spmd::GlobalPlan { choice, mesh: self.segments_mesh() }
+    }
+
+    /// Whole-graph simulation of an arbitrary per-segment choice.
+    pub fn simulate_choice(
+        &self,
+        opts: &CfpOptions,
+        seg_choice: &[usize],
+    ) -> crate::cluster::SimReport {
+        let plan = self.global_plan_for(seg_choice);
+        let mut prog = crate::spmd::lower(&self.graph, &self.blocks, &plan);
+        crate::spmd::passes::bucket_gradients(&mut prog, 64 << 20);
+        if opts.mesh.nodes > 1 {
+            crate::spmd::passes::bucket_gradients_inter(&mut prog, 64 << 20);
+        }
+        if opts.platform.name.contains("pcie") || opts.platform.name.contains("2node") {
+            crate::spmd::passes::dispatch_alltoall_sendrecv(&mut prog, opts.mesh.intra);
+        }
+        let cm = opts
+            .compute
+            .clone()
+            .unwrap_or_else(|| ComputeModel::for_platform(&opts.platform));
+        simulate(&prog, &opts.platform, opts.mesh.intra, &cm)
+    }
+
+    fn segments_mesh(&self) -> Mesh {
+        self.mesh
+    }
+}
+
+fn pretty(label: &str) -> &str {
+    match label {
+        "m" => "dp",
+        "n" => "tp-col",
+        "k" => "tp-row",
+        "b0" => "expert/batch",
+        other => other,
+    }
+}
+
+/// Run the full CFP pipeline.
+pub fn run_cfp(opts: &CfpOptions) -> CfpResult {
+    let mut timings = PhaseTimings::default();
+
+    // AnalysisPasses: graph build + ParallelBlocks + segments
+    let t0 = Instant::now();
+    let graph = build_training(&opts.model);
+    let blocks = build_parallel_blocks(&graph, opts.mesh.intra);
+    let segments = extract_segments(&graph, &blocks);
+    timings.analysis_passes_s = t0.elapsed().as_secs_f64();
+
+    // ExecCompiling + MetricsProfiling (overlapped inside profile_model)
+    let t1 = Instant::now();
+    let mut popts = ProfileOptions::new(opts.platform, opts.mesh).with_threads(opts.threads);
+    if let Some(cm) = &opts.compute {
+        popts = popts.with_compute(cm.clone());
+    }
+    let db = profile_model(&graph, &blocks, &segments, &popts);
+    let profiling_wall = t1.elapsed().as_secs_f64();
+    timings.exec_compiling_s = profiling_wall * 0.5;
+    timings.metrics_profiling_s = profiling_wall * 0.5;
+    timings.est_compile_s = db.stats.est_compile_s;
+    timings.est_profile_s = db.stats.est_profile_s;
+    timings.est_optimized_s = db.stats.est_optimized_s;
+
+    // ComposeSearch
+    let t2 = Instant::now();
+    let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
+    let plan = cost::search(&segments, &db, cap)
+        .or_else(|| cost::search(&segments, &db, None))
+        .expect("no feasible plan");
+    timings.compose_search_s = t2.elapsed().as_secs_f64();
+
+    CfpResult { graph, blocks, segments, db, plan, timings, mesh: opts.mesh }
+}
+
+/// Plans from every framework for a model/platform (Fig. 7 row).
+pub struct Comparison {
+    pub cfp: Plan,
+    pub alpa: Plan,
+    pub megatron: Plan,
+    pub ddp: Plan,
+    pub result: CfpResult,
+}
+
+pub fn compare_frameworks(opts: &CfpOptions) -> Comparison {
+    let result = run_cfp(opts);
+    let alpa = baselines::alpa_plan(&result.segments, &result.db);
+    let megatron =
+        baselines::megatron_plan(&result.graph, &result.blocks, &result.segments, &result.db);
+    let ddp = baselines::ddp_plan(&result.graph, &result.blocks, &result.segments, &result.db);
+    Comparison { cfp: result.plan.clone(), alpa, megatron, ddp, result }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pipeline_runs_end_to_end() {
+        let opts = CfpOptions::new(
+            ModelCfg::preset("gpt-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        );
+        let r = run_cfp(&opts);
+        assert!(r.plan.time_us > 0.0);
+        assert!(!r.describe_plan().is_empty());
+        assert!(r.timings.analysis_passes_s > 0.0);
+    }
+
+    #[test]
+    fn comparison_orders_cfp_first() {
+        let opts = CfpOptions::new(
+            ModelCfg::preset("gpt-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        );
+        let c = compare_frameworks(&opts);
+        for (name, p) in
+            [("alpa", &c.alpa), ("megatron", &c.megatron), ("ddp", &c.ddp)]
+        {
+            assert!(c.cfp.time_us <= p.time_us + 1e-6, "{name}");
+        }
+    }
+
+    #[test]
+    fn whole_graph_simulation_close_to_composed_estimate() {
+        // Fig. 10 in miniature: Eq. 8 composition vs whole-graph lowering
+        let opts = CfpOptions::new(
+            ModelCfg::preset("gpt-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        );
+        let r = run_cfp(&opts);
+        let whole = r.whole_graph_step_us(&opts);
+        let composed = r.plan.time_us;
+        let ratio = whole / composed;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "whole {whole} vs composed {composed} (ratio {ratio})"
+        );
+    }
+}

@@ -1,0 +1,295 @@
+//! Cost composition (Eq. 8/9) and memory-constrained plan search (§4.4).
+//!
+//! `C_T = Σ (T_C[n][iₙ] + T_P[n][iₙ]) + Σ T_R[n][iₙ₋₁][iₙ]` and
+//! `C_M = Σ M[n][iₙ]` — composed entirely from unique-segment profiles.
+//! The search walks the segment chain with a Pareto frontier on
+//! (time, memory) per (position, config) state, so fingerprint-equal
+//! segments may pick *different* configs to ride the memory cap — the
+//! §4.4 "some segments fast-but-fat, others lean-but-slow" behaviour.
+
+use crate::profiler::ProfileDb;
+use crate::segment::SegmentSet;
+
+/// A selected global configuration: one config index per segment instance.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Plan {
+    pub choice: Vec<usize>,
+    pub time_us: f64,
+    pub mem_bytes: u64,
+}
+
+/// Eq. 8 + Eq. 9 for an explicit choice vector.
+pub fn plan_cost(ss: &SegmentSet, db: &ProfileDb, choice: &[usize]) -> (f64, u64) {
+    assert_eq!(choice.len(), ss.instances.len());
+    let mut time = 0.0;
+    let mut mem = 0u64;
+    for (n, inst) in ss.instances.iter().enumerate() {
+        let u = inst.unique_id;
+        let prof = &db.segments[u];
+        time += prof.t_c_us[choice[n]] + prof.t_p_us[choice[n]];
+        mem += prof.mem_bytes[choice[n]];
+        if n > 0 {
+            let pu = ss.instances[n - 1].unique_id;
+            time += db.reshard_us(pu, choice[n - 1], u, choice[n]);
+        }
+    }
+    (time, mem)
+}
+
+/// Pareto point with backpointer.
+#[derive(Clone, Copy, Debug)]
+struct Point {
+    time: f64,
+    mem: u64,
+    prev_cfg: usize,
+    prev_idx: usize,
+}
+
+const FRONTIER_CAP: usize = 24;
+
+/// Min-time plan with `C_M ≤ mem_cap` (None = unconstrained).
+/// Returns None if no feasible plan exists.
+pub fn search(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<Plan> {
+    let n = ss.instances.len();
+    if n == 0 {
+        return None;
+    }
+    // frontier[cfg] = pareto set of (time, mem) for prefixes ending at cfg
+    let mut frontiers: Vec<Vec<Vec<Point>>> = Vec::with_capacity(n);
+    let u0 = ss.instances[0].unique_id;
+    let p0 = &db.segments[u0];
+    let mut first: Vec<Vec<Point>> = Vec::new();
+    for cfg in 0..p0.configs.len() {
+        let mem = p0.mem_bytes[cfg];
+        let time = p0.t_c_us[cfg] + p0.t_p_us[cfg];
+        let mut pts = Vec::new();
+        if mem_cap.map_or(true, |cap| mem <= cap) {
+            pts.push(Point { time, mem, prev_cfg: usize::MAX, prev_idx: usize::MAX });
+        }
+        first.push(pts);
+    }
+    frontiers.push(first);
+
+    for i in 1..n {
+        let u = ss.instances[i].unique_id;
+        let pu = ss.instances[i - 1].unique_id;
+        let prof = &db.segments[u];
+        let prev = &frontiers[i - 1];
+        let mut cur: Vec<Vec<Point>> = Vec::with_capacity(prof.configs.len());
+        for cfg in 0..prof.configs.len() {
+            let seg_t = prof.t_c_us[cfg] + prof.t_p_us[cfg];
+            let seg_m = prof.mem_bytes[cfg];
+            let mut pts: Vec<Point> = Vec::new();
+            for (pcfg, pset) in prev.iter().enumerate() {
+                if pset.is_empty() {
+                    continue;
+                }
+                let tr = db.reshard_us(pu, pcfg, u, cfg);
+                for (pidx, pp) in pset.iter().enumerate() {
+                    let time = pp.time + tr + seg_t;
+                    let mem = pp.mem + seg_m;
+                    if mem_cap.map_or(true, |cap| mem <= cap) {
+                        pts.push(Point { time, mem, prev_cfg: pcfg, prev_idx: pidx });
+                    }
+                }
+            }
+            pareto_prune(&mut pts);
+            cur.push(pts);
+        }
+        frontiers.push(cur);
+    }
+
+    // best terminal point
+    let last = &frontiers[n - 1];
+    let mut best: Option<(usize, usize)> = None;
+    for (cfg, pts) in last.iter().enumerate() {
+        for (idx, p) in pts.iter().enumerate() {
+            if best.map_or(true, |(bc, bi)| p.time < last[bc][bi].time) {
+                best = Some((cfg, idx));
+            }
+        }
+    }
+    let (mut cfg, mut idx) = best?;
+    let terminal = last[cfg][idx];
+    let mut choice = vec![0usize; n];
+    for i in (0..n).rev() {
+        choice[i] = cfg;
+        let p = frontiers[i][cfg][idx];
+        cfg = p.prev_cfg;
+        idx = p.prev_idx;
+    }
+    Some(Plan { choice, time_us: terminal.time, mem_bytes: terminal.mem })
+}
+
+/// Constrained variant: all instances of a unique segment use the same
+/// config (the Fig. 10 prediction-evaluation mode).
+pub fn search_uniform(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<Plan> {
+    // enumerate per-unique config combos (small #uniques)
+    let uniques = ss.unique.len();
+    let sizes: Vec<usize> = (0..uniques).map(|u| db.segments[u].configs.len()).collect();
+    let mut best: Option<Plan> = None;
+    let mut cur = vec![0usize; uniques];
+    loop {
+        let choice: Vec<usize> = ss.instances.iter().map(|i| cur[i.unique_id]).collect();
+        let (time, mem) = plan_cost(ss, db, &choice);
+        if mem_cap.map_or(true, |cap| mem <= cap)
+            && best.as_ref().map_or(true, |b| time < b.time_us)
+        {
+            best = Some(Plan { choice, time_us: time, mem_bytes: mem });
+        }
+        // odometer
+        let mut i = 0;
+        loop {
+            if i == uniques {
+                return best;
+            }
+            cur[i] += 1;
+            if cur[i] < sizes[i] {
+                break;
+            }
+            cur[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+/// Exhaustive search (tests only — exponential).
+pub fn brute_force(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<Plan> {
+    let n = ss.instances.len();
+    let sizes: Vec<usize> = ss
+        .instances
+        .iter()
+        .map(|i| db.segments[i.unique_id].configs.len())
+        .collect();
+    let mut cur = vec![0usize; n];
+    let mut best: Option<Plan> = None;
+    loop {
+        let (time, mem) = plan_cost(ss, db, &cur);
+        if mem_cap.map_or(true, |cap| mem <= cap)
+            && best.as_ref().map_or(true, |b| time < b.time_us)
+        {
+            best = Some(Plan { choice: cur.clone(), time_us: time, mem_bytes: mem });
+        }
+        let mut i = 0;
+        loop {
+            if i == n {
+                return best;
+            }
+            cur[i] += 1;
+            if cur[i] < sizes[i] {
+                break;
+            }
+            cur[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+fn pareto_prune(pts: &mut Vec<Point>) {
+    pts.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap().then(a.mem.cmp(&b.mem)));
+    let mut out: Vec<Point> = Vec::new();
+    let mut best_mem = u64::MAX;
+    for p in pts.drain(..) {
+        if p.mem < best_mem {
+            best_mem = p.mem;
+            out.push(p);
+        }
+    }
+    if out.len() > FRONTIER_CAP {
+        // keep evenly spaced representatives incl. endpoints
+        let step = (out.len() - 1) as f64 / (FRONTIER_CAP - 1) as f64;
+        let kept: Vec<Point> =
+            (0..FRONTIER_CAP).map(|k| out[(k as f64 * step).round() as usize]).collect();
+        out = kept;
+    }
+    *pts = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Platform;
+    use crate::models::{build_training, ModelCfg};
+    use crate::pblock::build_parallel_blocks;
+    use crate::profiler::{profile_model, ProfileOptions};
+    use crate::segment::extract_segments;
+    use crate::spmd::Mesh;
+
+    fn setup(layers: usize) -> (SegmentSet, ProfileDb) {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(layers);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let db = profile_model(&g, &bs, &ss, &opts);
+        (ss, db)
+    }
+
+    #[test]
+    fn dp_matches_brute_force_unconstrained() {
+        let (ss, db) = setup(2);
+        let dp = search(&ss, &db, None).unwrap();
+        let bf = brute_force(&ss, &db, None).unwrap();
+        assert!((dp.time_us - bf.time_us).abs() < 1e-6, "{} vs {}", dp.time_us, bf.time_us);
+    }
+
+    #[test]
+    fn dp_matches_brute_force_under_memory_caps() {
+        let (ss, db) = setup(2);
+        let unconstrained = search(&ss, &db, None).unwrap();
+        // sweep caps from tight to loose
+        for frac in [0.7, 0.85, 1.0, 1.3] {
+            let cap = (unconstrained.mem_bytes as f64 * frac) as u64;
+            let dp = search(&ss, &db, Some(cap));
+            let bf = brute_force(&ss, &db, Some(cap));
+            match (dp, bf) {
+                (Some(d), Some(b)) => {
+                    assert!(
+                        d.time_us <= b.time_us * 1.02 + 1e-6,
+                        "cap {frac}: dp {} vs bf {}",
+                        d.time_us,
+                        b.time_us
+                    );
+                    assert!(d.mem_bytes <= cap);
+                }
+                (None, None) => {}
+                (d, b) => panic!("feasibility mismatch at {frac}: {d:?} vs {b:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn tighter_memory_never_speeds_up() {
+        let (ss, db) = setup(3);
+        let loose = search(&ss, &db, None).unwrap();
+        let tight = search(&ss, &db, Some(loose.mem_bytes - 1));
+        if let Some(t) = tight {
+            assert!(t.time_us >= loose.time_us - 1e-9);
+            assert!(t.mem_bytes < loose.mem_bytes);
+        }
+    }
+
+    #[test]
+    fn mixed_configs_can_beat_uniform_under_cap() {
+        // §4.4: per-instance freedom dominates uniform-per-fingerprint
+        let (ss, db) = setup(3);
+        let free = search(&ss, &db, None).unwrap();
+        for frac in [0.8, 0.9] {
+            let cap = (free.mem_bytes as f64 * frac) as u64;
+            let mixed = search(&ss, &db, Some(cap));
+            let uni = search_uniform(&ss, &db, Some(cap));
+            if let (Some(m), Some(u)) = (mixed, uni) {
+                assert!(m.time_us <= u.time_us + 1e-9, "mixed {} uniform {}", m.time_us, u.time_us);
+            }
+        }
+    }
+
+    #[test]
+    fn plan_cost_is_consistent_with_search_result() {
+        let (ss, db) = setup(2);
+        let plan = search(&ss, &db, None).unwrap();
+        let (t, m) = plan_cost(&ss, &db, &plan.choice);
+        assert!((t - plan.time_us).abs() < 1e-6);
+        assert_eq!(m, plan.mem_bytes);
+    }
+}

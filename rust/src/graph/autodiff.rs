@@ -1,0 +1,338 @@
+//! Reverse-mode autodiff over the graph IR.
+//!
+//! Mechanically appends backward + optimizer-update ops to a forward graph,
+//! mirroring what jax.grad → XLA produces. This is what makes the analyzed
+//! graphs *training* graphs: the paper's ParallelBlocks must absorb backward
+//! operators (§3.2 "we group backward operators into the same ParallelBlocks
+//! as their corresponding forward operators"), and DP's gradient-AllReduce /
+//! fusion behaviour (§2.2) only exists because the param gradients do.
+
+use std::collections::HashMap;
+
+use super::build::{Graph, OpId};
+use super::op::{ElemOp, OpKind, ReduceKind, Role};
+
+/// Result of appending a backward pass.
+pub struct Backward {
+    /// weight param id → final grad op id
+    pub param_grads: HashMap<OpId, OpId>,
+    /// weight param id → updated-param op id
+    pub updates: HashMap<OpId, OpId>,
+}
+
+/// Append d(loss)/d(*) ops for every op feeding `loss`, then SGD updates
+/// for every Weight param. `loss` must be scalar.
+pub fn append_backward(g: &mut Graph, loss: OpId, lr: f64) -> Backward {
+    assert!(g.shape(loss).is_empty(), "loss must be scalar");
+    let fwd_len = g.ops.len();
+    g.set_role(Role::Bwd);
+
+    // tensor id → accumulated grad id
+    let mut grads: HashMap<OpId, OpId> = HashMap::new();
+    let seed = g.constant(1.0, vec![]);
+    grads.insert(loss, seed);
+
+    for id in (0..fwd_len).rev() {
+        let Some(&gout) = grads.get(&id) else { continue };
+        let op = g.ops[id].clone();
+        let contribs: Vec<(OpId, OpId)> = match &op.kind {
+            OpKind::Param { .. } | OpKind::Constant { .. } | OpKind::Rng => vec![],
+            OpKind::Elem(e) => elem_vjp(g, &op, *e, gout),
+            OpKind::Dot(dims) => {
+                let (lhs, rhs) = (op.inputs[0], op.inputs[1]);
+                let b = dims.batch;
+                let rank = g.shape(lhs).len();
+                let mut perm: Vec<usize> = (0..rank).collect();
+                perm.swap(rank - 1, rank - 2);
+                let rhs_t = g.transpose(rhs, perm.clone(), &format!("{}/rhs_t", op.name));
+                let dlhs = g.dot(gout, rhs_t, b, &format!("{}/dlhs", op.name));
+                let lhs_t = g.transpose(lhs, perm, &format!("{}/lhs_t", op.name));
+                let drhs = g.dot(lhs_t, gout, b, &format!("{}/drhs", op.name));
+                vec![(lhs, dlhs), (rhs, drhs)]
+            }
+            OpKind::Reshape => {
+                let x = op.inputs[0];
+                let shape = g.shape(x).to_vec();
+                let gx = g.reshape(gout, shape, &format!("{}/dx", op.name));
+                vec![(x, gx)]
+            }
+            OpKind::Transpose { perm } => {
+                let x = op.inputs[0];
+                let mut inv = vec![0; perm.len()];
+                for (i, &p) in perm.iter().enumerate() {
+                    inv[p] = i;
+                }
+                let gx = g.transpose(gout, inv, &format!("{}/dx", op.name));
+                vec![(x, gx)]
+            }
+            OpKind::Broadcast { dims } => {
+                let x = op.inputs[0];
+                let reduce_dims: Vec<usize> =
+                    (0..op.shape.len()).filter(|d| !dims.contains(d)).collect();
+                let gx = if reduce_dims.is_empty() {
+                    gout
+                } else {
+                    g.reduce(gout, reduce_dims, ReduceKind::Sum, &format!("{}/dx", op.name))
+                };
+                vec![(x, gx)]
+            }
+            OpKind::Reduce { dims, kind } => {
+                let x = op.inputs[0];
+                let xshape = g.shape(x).to_vec();
+                let kept: Vec<usize> =
+                    (0..xshape.len()).filter(|d| !dims.contains(d)).collect();
+                match kind {
+                    ReduceKind::Sum => {
+                        let gx = g.broadcast(gout, kept, xshape, &format!("{}/dx", op.name));
+                        vec![(x, gx)]
+                    }
+                    ReduceKind::Max => {
+                        let yb = g.broadcast(id, kept.clone(), xshape.clone(), &format!("{}/y_b", op.name));
+                        let mask = g.binary(ElemOp::CmpEq, x, yb, &format!("{}/mask", op.name));
+                        let gb = g.broadcast(gout, kept, xshape.clone(), &format!("{}/g_b", op.name));
+                        let zero = g.constant(0.0, vec![]);
+                        let zb = g.broadcast(zero, vec![], xshape, &format!("{}/zero_b", op.name));
+                        let gx = g.elem(ElemOp::Select, vec![mask, gb, zb], &format!("{}/dx", op.name));
+                        vec![(x, gx)]
+                    }
+                }
+            }
+            OpKind::Gather => {
+                let (table, idx) = (op.inputs[0], op.inputs[1]);
+                let tshape = g.shape(table).to_vec();
+                let gt = g.scatter(idx, gout, tshape, &format!("{}/dtable", op.name));
+                vec![(table, gt)]
+            }
+            OpKind::Route => {
+                let x = op.inputs[0];
+                let shape = g.shape(x).to_vec();
+                let gx = g.route(gout, shape, &format!("{}/dx", op.name));
+                vec![(x, gx)]
+            }
+            OpKind::Slice { dim, index } => {
+                let x = op.inputs[0];
+                let size = g.shape(x)[*dim];
+                let gx = g.pad(gout, *dim, *index, size, &format!("{}/dx", op.name));
+                vec![(x, gx)]
+            }
+            OpKind::Pad { dim, index, .. } => {
+                let x = op.inputs[0];
+                let gx = g.slice(gout, *dim, *index, &format!("{}/dx", op.name));
+                vec![(x, gx)]
+            }
+            OpKind::Scatter { .. } => vec![], // only produced by autodiff itself
+        };
+        // tag the new ops with their forward origin
+        for o in g.ops.iter_mut().skip(fwd_len) {
+            if o.grad_of.is_none() && o.role == Role::Bwd {
+                o.grad_of = Some(id);
+            }
+        }
+        for (tensor, contrib) in contribs {
+            accumulate(g, &mut grads, tensor, contrib);
+        }
+    }
+
+    // Final param grads + SGD updates.
+    let mut param_grads = HashMap::new();
+    let mut updates = HashMap::new();
+    let params = g.params();
+    g.set_role(Role::Opt);
+    for p in params {
+        let Some(&gp) = grads.get(&p) else { continue };
+        g.ops[gp].param_grad_for = Some(p);
+        param_grads.insert(p, gp);
+        let name = g.ops[p].name.clone();
+        let step = g.unary(ElemOp::Scale(lr), gp, &format!("opt/{name}/step"));
+        let newp = g.binary(ElemOp::Sub, p, step, &format!("opt/{name}/update"));
+        g.outputs.push(newp);
+        updates.insert(p, newp);
+    }
+    g.set_role(Role::Fwd);
+    Backward { param_grads, updates }
+}
+
+fn accumulate(g: &mut Graph, grads: &mut HashMap<OpId, OpId>, tensor: OpId, contrib: OpId) {
+    match grads.get(&tensor) {
+        None => {
+            grads.insert(tensor, contrib);
+        }
+        Some(&prev) => {
+            let sum = g.binary(ElemOp::Add, prev, contrib, &format!("{}/gacc", g.ops[tensor].name.clone()));
+            grads.insert(tensor, sum);
+        }
+    }
+}
+
+fn elem_vjp(g: &mut Graph, op: &super::build::Op, e: ElemOp, gout: OpId) -> Vec<(OpId, OpId)> {
+    let n = &op.name;
+    let y = op.id;
+    match e {
+        ElemOp::Add => vec![(op.inputs[0], gout), (op.inputs[1], gout)],
+        ElemOp::Sub => {
+            let gb = g.unary(ElemOp::Neg, gout, &format!("{n}/db"));
+            vec![(op.inputs[0], gout), (op.inputs[1], gb)]
+        }
+        ElemOp::Mul => {
+            let (a, b) = (op.inputs[0], op.inputs[1]);
+            let da = g.binary(ElemOp::Mul, gout, b, &format!("{n}/da"));
+            let db = g.binary(ElemOp::Mul, gout, a, &format!("{n}/db"));
+            vec![(a, da), (b, db)]
+        }
+        ElemOp::Div => {
+            let (a, b) = (op.inputs[0], op.inputs[1]);
+            let da = g.binary(ElemOp::Div, gout, b, &format!("{n}/da"));
+            let gy = g.binary(ElemOp::Mul, gout, y, &format!("{n}/gy"));
+            let gyb = g.binary(ElemOp::Div, gy, b, &format!("{n}/gyb"));
+            let db = g.unary(ElemOp::Neg, gyb, &format!("{n}/db"));
+            vec![(a, da), (b, db)]
+        }
+        ElemOp::Max => {
+            let (a, b) = (op.inputs[0], op.inputs[1]);
+            let mask = g.binary(ElemOp::CmpGe, a, b, &format!("{n}/mask"));
+            let zero = g.constant(0.0, vec![]);
+            let zb = g.broadcast(zero, vec![], op.shape.clone(), &format!("{n}/zero_b"));
+            let da = g.elem(ElemOp::Select, vec![mask, gout, zb], &format!("{n}/da"));
+            let db = g.elem(ElemOp::Select, vec![mask, zb, gout], &format!("{n}/db"));
+            vec![(a, da), (b, db)]
+        }
+        ElemOp::Neg => {
+            let da = g.unary(ElemOp::Neg, gout, &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Exp => {
+            let da = g.binary(ElemOp::Mul, gout, y, &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Log => {
+            let da = g.binary(ElemOp::Div, gout, op.inputs[0], &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Tanh => {
+            let y2 = g.binary(ElemOp::Mul, y, y, &format!("{n}/y2"));
+            let one = g.constant(1.0, vec![]);
+            let ob = g.broadcast(one, vec![], op.shape.clone(), &format!("{n}/one_b"));
+            let omy2 = g.binary(ElemOp::Sub, ob, y2, &format!("{n}/omy2"));
+            let da = g.binary(ElemOp::Mul, gout, omy2, &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Gelu => {
+            let da = g.binary(ElemOp::GeluGrad, op.inputs[0], gout, &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Silu => {
+            let da = g.binary(ElemOp::SiluGrad, op.inputs[0], gout, &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Rsqrt => {
+            let y2 = g.binary(ElemOp::Mul, y, y, &format!("{n}/y2"));
+            let y3 = g.binary(ElemOp::Mul, y2, y, &format!("{n}/y3"));
+            let t = g.binary(ElemOp::Mul, gout, y3, &format!("{n}/t"));
+            let da = g.unary(ElemOp::Scale(-0.5), t, &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Scale(c) => {
+            let da = g.unary(ElemOp::Scale(c), gout, &format!("{n}/da"));
+            vec![(op.inputs[0], da)]
+        }
+        ElemOp::Offset(_) => vec![(op.inputs[0], gout)],
+        ElemOp::GeluGrad | ElemOp::SiluGrad => vec![], // 2nd order not needed
+        ElemOp::CmpGe | ElemOp::CmpEq => vec![],
+        ElemOp::Select => {
+            let (pred, a, b) = (op.inputs[0], op.inputs[1], op.inputs[2]);
+            let zero = g.constant(0.0, vec![]);
+            let zb = g.broadcast(zero, vec![], op.shape.clone(), &format!("{n}/zero_b"));
+            let da = g.elem(ElemOp::Select, vec![pred, gout, zb], &format!("{n}/da"));
+            let db = g.elem(ElemOp::Select, vec![pred, zb, gout], &format!("{n}/db"));
+            vec![(a, da), (b, db)]
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::ParamClass;
+
+    /// loss = sum((x·w)²) — check the bwd graph exists and is marked.
+    #[test]
+    fn backward_of_matmul_chain() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![2, 3], ParamClass::Input);
+        let w = g.param("w", vec![3, 4], ParamClass::Weight);
+        let y = g.matmul(x, w, "y");
+        let sq = g.binary(ElemOp::Mul, y, y, "sq");
+        let loss = g.reduce(sq, vec![0, 1], ReduceKind::Sum, "loss");
+        let bw = append_backward(&mut g, loss, 0.1);
+        let gw = bw.param_grads[&w];
+        assert_eq!(g.shape(gw), &[3, 4], "grad shape == param shape");
+        assert_eq!(g.ops[gw].param_grad_for, Some(w));
+        let up = bw.updates[&w];
+        assert_eq!(g.shape(up), &[3, 4]);
+        assert_eq!(g.ops[up].role, Role::Opt);
+        // bwd ops carry their fwd origin
+        assert!(g.ops.iter().any(|o| o.role == Role::Bwd && o.grad_of.is_some()));
+    }
+
+    #[test]
+    fn grad_accumulates_over_multiple_uses() {
+        // loss = sum(w ⊙ w_used_twice): y = w + w → grads add
+        let mut g = Graph::new();
+        let w = g.param("w", vec![4], ParamClass::Weight);
+        let y = g.binary(ElemOp::Add, w, w, "y");
+        let loss = g.reduce(y, vec![0], ReduceKind::Sum, "loss");
+        let bw = append_backward(&mut g, loss, 0.1);
+        let gw = bw.param_grads[&w];
+        // accumulated grad is an Add of two broadcast-of-1 contributions
+        assert!(matches!(g.ops[gw].kind, OpKind::Elem(ElemOp::Add)));
+    }
+
+    #[test]
+    fn softmax_backward_builds() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![2, 8], ParamClass::Weight);
+        let sm = g.softmax(x, "sm");
+        let loss = g.reduce(sm, vec![0, 1], ReduceKind::Sum, "loss");
+        let bw = append_backward(&mut g, loss, 0.1);
+        assert!(bw.param_grads.contains_key(&x));
+        assert_eq!(g.shape(bw.param_grads[&x]), &[2, 8]);
+    }
+
+    #[test]
+    fn gather_grad_is_scatter() {
+        let mut g = Graph::new();
+        let table = g.param("emb", vec![16, 8], ParamClass::Weight);
+        let idx = g.param("tokens", vec![4], ParamClass::Input);
+        let e = g.gather(table, idx, "lookup");
+        let loss = g.reduce(e, vec![0, 1], ReduceKind::Sum, "loss");
+        let bw = append_backward(&mut g, loss, 0.1);
+        let gt = bw.param_grads[&table];
+        assert!(matches!(g.ops[gt].kind, OpKind::Scatter { .. }));
+        assert_eq!(g.shape(gt), &[16, 8]);
+    }
+
+    #[test]
+    fn bmm_grads_have_right_shapes() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![2, 4, 3, 5], ParamClass::Weight);
+        let b = g.param("b", vec![2, 4, 5, 6], ParamClass::Weight);
+        let y = g.dot(a, b, 2, "bmm");
+        let loss = g.reduce(y, vec![0, 1, 2, 3], ReduceKind::Sum, "loss");
+        let bw = append_backward(&mut g, loss, 0.1);
+        assert_eq!(g.shape(bw.param_grads[&a]), &[2, 4, 3, 5]);
+        assert_eq!(g.shape(bw.param_grads[&b]), &[2, 4, 5, 6]);
+    }
+
+    #[test]
+    fn rng_and_dropout_get_no_grad() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![4, 4], ParamClass::Weight);
+        let d = g.dropout(x, 0.1, "do");
+        let loss = g.reduce(d, vec![0, 1], ReduceKind::Sum, "loss");
+        let bw = append_backward(&mut g, loss, 0.1);
+        assert!(bw.param_grads.contains_key(&x));
+        // no grads flowed into the Rng op
+        let rng_id = g.ops.iter().find(|o| matches!(o.kind, OpKind::Rng)).unwrap().id;
+        assert!(g.ops.iter().all(|o| o.param_grad_for != Some(rng_id)));
+    }
+}

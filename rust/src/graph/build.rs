@@ -1,0 +1,469 @@
+//! Graph container + shape-checked builder methods.
+//!
+//! Ops are appended in topological order (builder discipline), so op id
+//! order *is* a valid schedule; `users()` gives the reverse adjacency the
+//! ParallelBlock DFS (Algorithm 1) traverses.
+
+use super::op::{DType, DotDims, ElemOp, OpKind, ParamClass, ReduceKind, Role};
+
+pub type OpId = usize;
+
+#[derive(Clone, Debug)]
+pub struct Op {
+    pub id: OpId,
+    pub kind: OpKind,
+    pub inputs: Vec<OpId>,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    pub name: String,
+    pub role: Role,
+    /// For Bwd ops: the forward op this gradient belongs to (paper §3.2:
+    /// backward ops join their forward op's ParallelBlock).
+    pub grad_of: Option<OpId>,
+    /// Set on the final gradient of a Weight param (the DP sync point).
+    pub param_grad_for: Option<OpId>,
+}
+
+impl Op {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn bytes(&self) -> usize {
+        self.numel() * self.dtype.bytes()
+    }
+
+    /// FLOPs attributed to this op (0 for pure data movement).
+    pub fn flops(&self, graph: &Graph) -> u64 {
+        match &self.kind {
+            OpKind::Dot(_) => {
+                let k = *graph.ops[self.inputs[0]].shape.last().unwrap();
+                2 * self.numel() as u64 * k as u64
+            }
+            OpKind::Elem(e) => {
+                let unit = match e {
+                    ElemOp::Exp | ElemOp::Log | ElemOp::Tanh | ElemOp::Gelu | ElemOp::Silu => 8,
+                    ElemOp::GeluGrad | ElemOp::SiluGrad => 12,
+                    ElemOp::Rsqrt => 4,
+                    _ => 1,
+                };
+                self.numel() as u64 * unit
+            }
+            OpKind::Reduce { .. } => graph.ops[self.inputs[0]].numel() as u64,
+            OpKind::Rng => self.numel() as u64 * 4,
+            _ => 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct Graph {
+    pub ops: Vec<Op>,
+    pub outputs: Vec<OpId>,
+    /// Current layer label applied to newly built ops (builder context;
+    /// used only for debugging/validation — segmentation derives its own).
+    layer_ctx: Option<usize>,
+    role_ctx: Role,
+    pub layer_of: Vec<Option<usize>>,
+}
+
+impl Graph {
+    pub fn new() -> Self {
+        Graph {
+            ops: Vec::new(),
+            outputs: Vec::new(),
+            layer_ctx: None,
+            role_ctx: Role::Fwd,
+            layer_of: Vec::new(),
+        }
+    }
+
+    pub fn set_layer(&mut self, layer: Option<usize>) {
+        self.layer_ctx = layer;
+    }
+
+    pub fn set_role(&mut self, role: Role) {
+        self.role_ctx = role;
+    }
+
+    pub fn shape(&self, id: OpId) -> &[usize] {
+        &self.ops[id].shape
+    }
+
+    pub fn add(&mut self, kind: OpKind, inputs: Vec<OpId>, shape: Vec<usize>, dtype: DType, name: impl Into<String>) -> OpId {
+        let id = self.ops.len();
+        for &i in &inputs {
+            assert!(i < id, "input {i} of op {id} not yet defined");
+        }
+        self.ops.push(Op {
+            id,
+            kind,
+            inputs,
+            shape,
+            dtype,
+            name: name.into(),
+            role: self.role_ctx,
+            grad_of: None,
+            param_grad_for: None,
+        });
+        self.layer_of.push(self.layer_ctx);
+        id
+    }
+
+    // ------------------------------------------------------------ builders
+
+    pub fn param(&mut self, name: &str, shape: Vec<usize>, class: ParamClass) -> OpId {
+        let dtype = if class == ParamClass::Input && name.contains("tokens") {
+            DType::I32
+        } else {
+            DType::F32
+        };
+        self.add(OpKind::Param { class }, vec![], shape, dtype, name)
+    }
+
+    pub fn constant(&mut self, value: f64, shape: Vec<usize>) -> OpId {
+        self.add(OpKind::Constant { value }, vec![], shape, DType::F32, format!("const_{value}"))
+    }
+
+    pub fn rng(&mut self, shape: Vec<usize>, name: &str) -> OpId {
+        self.add(OpKind::Rng, vec![], shape, DType::F32, name)
+    }
+
+    pub fn elem(&mut self, op: ElemOp, inputs: Vec<OpId>, name: &str) -> OpId {
+        assert_eq!(inputs.len(), op.arity(), "{op:?} arity");
+        let shape = self.ops[inputs[0]].shape.clone();
+        let ref_shape = if op == ElemOp::Select { 1 } else { 0 };
+        for &i in &inputs[ref_shape..] {
+            assert_eq!(self.ops[i].shape, shape, "elem shape mismatch in {name}: {:?} vs {:?}", self.ops[i].shape, shape);
+        }
+        let dtype = match op {
+            ElemOp::CmpGe | ElemOp::CmpEq => DType::Pred,
+            ElemOp::Select => self.ops[inputs[1]].dtype,
+            _ => self.ops[inputs[0]].dtype,
+        };
+        self.add(OpKind::Elem(op), inputs, shape, dtype, name)
+    }
+
+    pub fn binary(&mut self, op: ElemOp, a: OpId, b: OpId, name: &str) -> OpId {
+        self.elem(op, vec![a, b], name)
+    }
+
+    pub fn unary(&mut self, op: ElemOp, a: OpId, name: &str) -> OpId {
+        self.elem(op, vec![a], name)
+    }
+
+    /// Normal-form dot: lhs (batch.., M, K) · rhs (batch.., K, N).
+    pub fn dot(&mut self, lhs: OpId, rhs: OpId, batch: usize, name: &str) -> OpId {
+        let ls = self.ops[lhs].shape.clone();
+        let rs = self.ops[rhs].shape.clone();
+        assert_eq!(ls.len(), batch + 2, "lhs rank in {name}");
+        assert_eq!(rs.len(), batch + 2, "rhs rank in {name}");
+        assert_eq!(&ls[..batch], &rs[..batch], "batch dims in {name}");
+        assert_eq!(ls[batch + 1], rs[batch], "contraction dim in {name}: {ls:?}·{rs:?}");
+        let mut shape: Vec<usize> = ls[..batch].to_vec();
+        shape.push(ls[batch]);
+        shape.push(rs[batch + 1]);
+        let dtype = self.ops[lhs].dtype;
+        self.add(OpKind::Dot(DotDims { batch }), vec![lhs, rhs], shape, dtype, name)
+    }
+
+    /// 2-D matmul convenience.
+    pub fn matmul(&mut self, a: OpId, b: OpId, name: &str) -> OpId {
+        self.dot(a, b, 0, name)
+    }
+
+    pub fn reshape(&mut self, x: OpId, shape: Vec<usize>, name: &str) -> OpId {
+        assert_eq!(
+            self.ops[x].numel(),
+            shape.iter().product::<usize>(),
+            "reshape numel in {name}: {:?} -> {shape:?}",
+            self.ops[x].shape
+        );
+        let dtype = self.ops[x].dtype;
+        self.add(OpKind::Reshape, vec![x], shape, dtype, name)
+    }
+
+    pub fn transpose(&mut self, x: OpId, perm: Vec<usize>, name: &str) -> OpId {
+        let xs = self.ops[x].shape.clone();
+        assert_eq!(perm.len(), xs.len(), "perm rank in {name}");
+        let shape: Vec<usize> = perm.iter().map(|&p| xs[p]).collect();
+        let dtype = self.ops[x].dtype;
+        self.add(OpKind::Transpose { perm }, vec![x], shape, dtype, name)
+    }
+
+    /// Broadcast input into `out_shape`; `dims[i]` is where input dim i lands.
+    pub fn broadcast(&mut self, x: OpId, dims: Vec<usize>, out_shape: Vec<usize>, name: &str) -> OpId {
+        let xs = self.ops[x].shape.clone();
+        assert_eq!(dims.len(), xs.len(), "broadcast dims rank in {name}");
+        for (i, &d) in dims.iter().enumerate() {
+            assert_eq!(out_shape[d], xs[i], "broadcast dim {i} in {name}");
+            if i > 0 {
+                assert!(dims[i - 1] < d, "broadcast dims must be increasing in {name}");
+            }
+        }
+        let dtype = self.ops[x].dtype;
+        self.add(OpKind::Broadcast { dims }, vec![x], out_shape, dtype, name)
+    }
+
+    pub fn reduce(&mut self, x: OpId, dims: Vec<usize>, kind: ReduceKind, name: &str) -> OpId {
+        let xs = self.ops[x].shape.clone();
+        let shape: Vec<usize> = xs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| !dims.contains(i))
+            .map(|(_, &d)| d)
+            .collect();
+        let dtype = self.ops[x].dtype;
+        self.add(OpKind::Reduce { dims, kind }, vec![x], shape, dtype, name)
+    }
+
+    pub fn gather(&mut self, table: OpId, indices: OpId, name: &str) -> OpId {
+        let mut shape = self.ops[indices].shape.clone();
+        shape.extend_from_slice(&self.ops[table].shape[1..]);
+        let dtype = self.ops[table].dtype;
+        self.add(OpKind::Gather, vec![table, indices], shape, dtype, name)
+    }
+
+    /// GShard-style token routing: regroup (T, H) ⇄ (E, C, H).
+    pub fn route(&mut self, x: OpId, shape: Vec<usize>, name: &str) -> OpId {
+        assert_eq!(
+            self.ops[x].numel(),
+            shape.iter().product::<usize>(),
+            "route numel in {name}"
+        );
+        let dtype = self.ops[x].dtype;
+        self.add(OpKind::Route, vec![x], shape, dtype, name)
+    }
+
+    /// Pick `index` along `dim`, dropping the dim.
+    pub fn slice(&mut self, x: OpId, dim: usize, index: usize, name: &str) -> OpId {
+        let xs = self.ops[x].shape.clone();
+        assert!(index < xs[dim], "slice index in {name}");
+        let shape: Vec<usize> = xs
+            .iter()
+            .enumerate()
+            .filter(|(i, _)| *i != dim)
+            .map(|(_, &d)| d)
+            .collect();
+        let dtype = self.ops[x].dtype;
+        self.add(OpKind::Slice { dim, index }, vec![x], shape, dtype, name)
+    }
+
+    /// Inverse of slice: embed at `index` along a new dim of `size`.
+    pub fn pad(&mut self, x: OpId, dim: usize, index: usize, size: usize, name: &str) -> OpId {
+        let xs = self.ops[x].shape.clone();
+        let mut shape = xs.clone();
+        shape.insert(dim, size);
+        let dtype = self.ops[x].dtype;
+        self.add(OpKind::Pad { dim, index, size }, vec![x], shape, dtype, name)
+    }
+
+    pub fn scatter(&mut self, indices: OpId, updates: OpId, table_shape: Vec<usize>, name: &str) -> OpId {
+        let dtype = self.ops[updates].dtype;
+        self.add(
+            OpKind::Scatter { table_shape: table_shape.clone() },
+            vec![indices, updates],
+            table_shape,
+            dtype,
+            name,
+        )
+    }
+
+    // -------------------------------------------------- composite helpers
+
+    /// Softmax over the last dim, decomposed into primitives (max, sub,
+    /// exp, sum, div) exactly as XLA lowers it.
+    pub fn softmax(&mut self, x: OpId, name: &str) -> OpId {
+        let shape = self.ops[x].shape.clone();
+        let last = shape.len() - 1;
+        let m = self.reduce(x, vec![last], ReduceKind::Max, &format!("{name}/max"));
+        let mdims: Vec<usize> = (0..last).collect();
+        let mb = self.broadcast(m, mdims.clone(), shape.clone(), &format!("{name}/max_b"));
+        let sub = self.binary(ElemOp::Sub, x, mb, &format!("{name}/sub"));
+        let e = self.unary(ElemOp::Exp, sub, &format!("{name}/exp"));
+        let s = self.reduce(e, vec![last], ReduceKind::Sum, &format!("{name}/sum"));
+        let sb = self.broadcast(s, mdims, shape, &format!("{name}/sum_b"));
+        self.binary(ElemOp::Div, e, sb, &format!("{name}/div"))
+    }
+
+    /// Dropout: rng, compare, select, rescale — carries the RNG op whose
+    /// device restriction drives the paper's §2.2 mismatch example.
+    pub fn dropout(&mut self, x: OpId, rate: f64, name: &str) -> OpId {
+        let shape = self.ops[x].shape.clone();
+        let r = self.rng(shape.clone(), &format!("{name}/rng"));
+        let thr = self.constant(rate, vec![]);
+        let thr_b = self.broadcast(thr, vec![], shape.clone(), &format!("{name}/thr_b"));
+        let mask = self.binary(ElemOp::CmpGe, r, thr_b, &format!("{name}/mask"));
+        let zero = self.constant(0.0, vec![]);
+        let zero_b = self.broadcast(zero, vec![], shape, &format!("{name}/zero_b"));
+        let kept = self.elem(ElemOp::Select, vec![mask, x, zero_b], &format!("{name}/select"));
+        self.unary(ElemOp::Scale(1.0 / (1.0 - rate)), kept, &format!("{name}/rescale"))
+    }
+
+    /// LayerNorm decomposed (mean, var, rsqrt, affine).
+    pub fn layernorm(&mut self, x: OpId, w: OpId, b: OpId, name: &str) -> OpId {
+        let shape = self.ops[x].shape.clone();
+        let last = shape.len() - 1;
+        let h = shape[last] as f64;
+        let bdims: Vec<usize> = (0..last).collect();
+        let sum = self.reduce(x, vec![last], ReduceKind::Sum, &format!("{name}/sum"));
+        let mean = self.unary(ElemOp::Scale(1.0 / h), sum, &format!("{name}/mean"));
+        let mean_b = self.broadcast(mean, bdims.clone(), shape.clone(), &format!("{name}/mean_b"));
+        let centered = self.binary(ElemOp::Sub, x, mean_b, &format!("{name}/center"));
+        let sq = self.binary(ElemOp::Mul, centered, centered, &format!("{name}/sq"));
+        let var_sum = self.reduce(sq, vec![last], ReduceKind::Sum, &format!("{name}/var_sum"));
+        let var = self.unary(ElemOp::Scale(1.0 / h), var_sum, &format!("{name}/var"));
+        let var_eps = self.unary(ElemOp::Offset(1e-5), var, &format!("{name}/var_eps"));
+        let rstd = self.unary(ElemOp::Rsqrt, var_eps, &format!("{name}/rstd"));
+        let rstd_b = self.broadcast(rstd, bdims, shape.clone(), &format!("{name}/rstd_b"));
+        let normed = self.binary(ElemOp::Mul, centered, rstd_b, &format!("{name}/normed"));
+        let wdims = vec![last];
+        let w_b = self.broadcast(w, wdims.clone(), shape.clone(), &format!("{name}/w_b"));
+        let scaled = self.binary(ElemOp::Mul, normed, w_b, &format!("{name}/scaled"));
+        let b_b = self.broadcast(b, wdims, shape, &format!("{name}/b_b"));
+        self.binary(ElemOp::Add, scaled, b_b, &format!("{name}/out"))
+    }
+
+    /// RMSNorm decomposed.
+    pub fn rmsnorm(&mut self, x: OpId, w: OpId, name: &str) -> OpId {
+        let shape = self.ops[x].shape.clone();
+        let last = shape.len() - 1;
+        let h = shape[last] as f64;
+        let bdims: Vec<usize> = (0..last).collect();
+        let sq = self.binary(ElemOp::Mul, x, x, &format!("{name}/sq"));
+        let ssum = self.reduce(sq, vec![last], ReduceKind::Sum, &format!("{name}/ssum"));
+        let msq = self.unary(ElemOp::Scale(1.0 / h), ssum, &format!("{name}/msq"));
+        let eps = self.unary(ElemOp::Offset(1e-6), msq, &format!("{name}/eps"));
+        let r = self.unary(ElemOp::Rsqrt, eps, &format!("{name}/rsqrt"));
+        let r_b = self.broadcast(r, bdims, shape.clone(), &format!("{name}/r_b"));
+        let normed = self.binary(ElemOp::Mul, x, r_b, &format!("{name}/normed"));
+        let w_b = self.broadcast(w, vec![last], shape, &format!("{name}/w_b"));
+        self.binary(ElemOp::Mul, normed, w_b, &format!("{name}/out"))
+    }
+
+    // ------------------------------------------------------------ queries
+
+    /// Reverse adjacency: users[t] = ops consuming tensor t.
+    pub fn users(&self) -> Vec<Vec<OpId>> {
+        let mut users = vec![Vec::new(); self.ops.len()];
+        for op in &self.ops {
+            for &i in &op.inputs {
+                users[i].push(op.id);
+            }
+        }
+        users
+    }
+
+    pub fn params(&self) -> Vec<OpId> {
+        self.ops
+            .iter()
+            .filter(|o| matches!(o.kind, OpKind::Param { class: ParamClass::Weight }))
+            .map(|o| o.id)
+            .collect()
+    }
+
+    pub fn contraction_ops(&self) -> Vec<OpId> {
+        self.ops.iter().filter(|o| o.kind.is_contraction()).map(|o| o.id).collect()
+    }
+
+    pub fn total_flops(&self) -> u64 {
+        self.ops.iter().map(|o| o.flops(self)).sum()
+    }
+
+    /// Depth (longest path from any source) per op — Algorithm 1 sorts
+    /// contraction ops by this.
+    pub fn depths(&self) -> Vec<usize> {
+        let mut depth = vec![0usize; self.ops.len()];
+        for op in &self.ops {
+            for &i in &op.inputs {
+                depth[op.id] = depth[op.id].max(depth[i] + 1);
+            }
+        }
+        depth
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matmul_shapes() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![4, 8], ParamClass::Input);
+        let b = g.param("b", vec![8, 16], ParamClass::Weight);
+        let c = g.matmul(a, b, "c");
+        assert_eq!(g.shape(c), &[4, 16]);
+        assert_eq!(g.ops[c].flops(&g), 2 * 4 * 16 * 8);
+    }
+
+    #[test]
+    fn bmm_shapes() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![2, 3, 4, 8], ParamClass::Input);
+        let b = g.param("b", vec![2, 3, 8, 5], ParamClass::Input);
+        let c = g.dot(a, b, 2, "c");
+        assert_eq!(g.shape(c), &[2, 3, 4, 5]);
+    }
+
+    #[test]
+    #[should_panic(expected = "contraction dim")]
+    fn dot_rejects_mismatched_k() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![4, 8], ParamClass::Input);
+        let b = g.param("b", vec![9, 16], ParamClass::Input);
+        g.matmul(a, b, "bad");
+    }
+
+    #[test]
+    fn softmax_decomposition_op_count() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![2, 8], ParamClass::Input);
+        let y = g.softmax(x, "sm");
+        assert_eq!(g.shape(y), &[2, 8]);
+        // max, bcast, sub, exp, sum, bcast, div = 7 ops after the param
+        assert_eq!(g.ops.len(), 8);
+    }
+
+    #[test]
+    fn layernorm_shape_preserved() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![4, 16], ParamClass::Input);
+        let w = g.param("w", vec![16], ParamClass::Weight);
+        let b = g.param("b", vec![16], ParamClass::Weight);
+        let y = g.layernorm(x, w, b, "ln");
+        assert_eq!(g.shape(y), &[4, 16]);
+    }
+
+    #[test]
+    fn dropout_contains_rng() {
+        let mut g = Graph::new();
+        let x = g.param("x", vec![4, 4], ParamClass::Input);
+        g.dropout(x, 0.1, "do");
+        assert!(g.ops.iter().any(|o| matches!(o.kind, OpKind::Rng)));
+    }
+
+    #[test]
+    fn users_reverse_adjacency() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![2, 2], ParamClass::Input);
+        let b = g.unary(ElemOp::Exp, a, "e");
+        let c = g.unary(ElemOp::Neg, a, "n");
+        let _ = g.binary(ElemOp::Add, b, c, "s");
+        let users = g.users();
+        assert_eq!(users[a], vec![b, c]);
+        assert_eq!(users[b].len(), 1);
+    }
+
+    #[test]
+    fn depths_increase_along_chains() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![2], ParamClass::Input);
+        let b = g.unary(ElemOp::Exp, a, "b");
+        let c = g.unary(ElemOp::Exp, b, "c");
+        let d = g.depths();
+        assert_eq!(d[a], 0);
+        assert_eq!(d[b], 1);
+        assert_eq!(d[c], 2);
+    }
+}

@@ -1,0 +1,9 @@
+//! Fine-grained computation graph IR (HLO-level) + autodiff.
+
+pub mod autodiff;
+pub mod build;
+pub mod op;
+
+pub use autodiff::{append_backward, Backward};
+pub use build::{Graph, Op, OpId};
+pub use op::{DType, DotDims, ElemOp, OpKind, ParamClass, ReduceKind, Role};

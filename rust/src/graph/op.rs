@@ -1,0 +1,190 @@
+//! Operator vocabulary of the fine-grained computation graph.
+//!
+//! Mirrors the XLA-HLO level the paper works at (§2.1: "fine-grained
+//! primitives in the compiler IR"): elementwise ops, general dot
+//! contractions, reshape/transpose/broadcast/reduce data movement, RNG,
+//! gather/scatter for embeddings. Model builders decompose layernorm /
+//! softmax / dropout into these primitives, so two transformer layers
+//! really do produce on the order of a thousand ops (paper §2.3).
+
+/// Element dtype. Only what the models need.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum DType {
+    F32,
+    Bf16,
+    I32,
+    Pred,
+}
+
+impl DType {
+    pub fn bytes(self) -> usize {
+        match self {
+            DType::F32 | DType::I32 => 4,
+            DType::Bf16 => 2,
+            DType::Pred => 1,
+        }
+    }
+}
+
+/// Elementwise operator kinds (unary / binary / ternary select).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum ElemOp {
+    Add,
+    Sub,
+    Mul,
+    Div,
+    Max,
+    Neg,
+    Exp,
+    Log,
+    Tanh,
+    Gelu,
+    Silu,
+    Rsqrt,
+    /// d/dx gelu(x) given (x, g) — emitted by autodiff, fused in real XLA.
+    GeluGrad,
+    SiluGrad,
+    /// x * c
+    Scale(f64),
+    /// x + c
+    Offset(f64),
+    CmpGe,
+    CmpEq,
+    /// select(pred, a, b)
+    Select,
+}
+
+impl ElemOp {
+    pub fn arity(self) -> usize {
+        match self {
+            ElemOp::Neg
+            | ElemOp::Exp
+            | ElemOp::Log
+            | ElemOp::Tanh
+            | ElemOp::Gelu
+            | ElemOp::Silu
+            | ElemOp::Rsqrt
+            | ElemOp::Scale(_)
+            | ElemOp::Offset(_) => 1,
+            ElemOp::Select => 3,
+            _ => 2,
+        }
+    }
+}
+
+/// Dot dimension numbers in *normal form*: shared leading batch dims,
+/// lhs = (batch.., M, K), rhs = (batch.., K, N) → out (batch.., M, N).
+/// Model builders insert explicit Transpose/Reshape to reach this form
+/// (as XLA's dot canonicalization does), which keeps autodiff and the
+/// partition-propagation rules exact.
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct DotDims {
+    pub batch: usize, // number of leading batch dims
+}
+
+/// What a Parameter op holds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ParamClass {
+    /// Trainable weight — gets a gradient + optimizer update + DP sync.
+    Weight,
+    /// Per-step input (tokens, targets) — batch-dim shardable.
+    Input,
+}
+
+/// Reduction kinds.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ReduceKind {
+    Sum,
+    Max,
+}
+
+/// Which phase of the training step an op belongs to.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Role {
+    Fwd,
+    Bwd,
+    Opt,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    Param {
+        class: ParamClass,
+    },
+    Constant {
+        value: f64,
+    },
+    /// Random uniform [0,1) — the §2.2 dropout story: XLA restricts RNG to
+    /// one device, forcing a replication collective under TP configs.
+    Rng,
+    Elem(ElemOp),
+    Dot(DotDims),
+    Reshape,
+    Transpose {
+        perm: Vec<usize>,
+    },
+    /// `dims[i]` = output dim that input dim i maps to (strictly increasing).
+    Broadcast {
+        dims: Vec<usize>,
+    },
+    Reduce {
+        dims: Vec<usize>,
+        kind: ReduceKind,
+    },
+    /// inputs: [table (V, H..), indices (..)] → out indices.shape ++ table.shape[1:]
+    Gather,
+    /// grad of Gather: inputs [indices, updates] → table-shaped output
+    Scatter {
+        table_shape: Vec<usize>,
+    },
+    /// Token routing (GShard dispatch/combine): a data-dependent
+    /// permutation regrouping (T, H) ⇄ (E, C, H) with C = T/E. Sharded
+    /// token/expert dims can only cross a Route via All-to-All.
+    Route,
+    /// Pick index `index` along `dim` and drop the dim (q/k/v split of a
+    /// fused QKV projection).
+    Slice {
+        dim: usize,
+        index: usize,
+    },
+    /// grad of Slice: place the input at `index` along a new dim of `size`
+    /// (zero elsewhere).
+    Pad {
+        dim: usize,
+        index: usize,
+        size: usize,
+    },
+}
+
+impl OpKind {
+    /// Tensor-contraction operators seed ParallelBlocks (paper §3.1).
+    pub fn is_contraction(&self) -> bool {
+        matches!(self, OpKind::Dot(_))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dtype_sizes() {
+        assert_eq!(DType::F32.bytes(), 4);
+        assert_eq!(DType::Bf16.bytes(), 2);
+        assert_eq!(DType::Pred.bytes(), 1);
+    }
+
+    #[test]
+    fn elem_arities() {
+        assert_eq!(ElemOp::Add.arity(), 2);
+        assert_eq!(ElemOp::Exp.arity(), 1);
+        assert_eq!(ElemOp::Select.arity(), 3);
+        assert_eq!(ElemOp::Scale(2.0).arity(), 1);
+    }
+
+    #[test]
+    fn contraction_flag() {
+        assert!(OpKind::Dot(DotDims { batch: 0 }).is_contraction());
+        assert!(!OpKind::Reshape.is_contraction());
+    }
+}

@@ -1,0 +1,165 @@
+//! Shared experiment harness: model/platform matrices, table printing,
+//! throughput math — used by every figure driver in examples/ and the
+//! criterion-style benches.
+
+use crate::cluster::Platform;
+use crate::coordinator::{compare_frameworks, CfpOptions, Comparison};
+use crate::models::ModelCfg;
+use crate::spmd::Mesh;
+
+/// The paper's evaluation matrix (§5.1), at analysis-faithful structure
+/// with reduced tensor sizes so the full sweep stays fast. `layers` is per
+/// the profiled prefix — segment profiles are depth-independent, so deep
+/// models are evaluated by instancing the layer segment.
+pub fn eval_models() -> Vec<ModelCfg> {
+    vec![
+        ModelCfg::preset("bert-large").with_layers(4).with_batch(8).scaled_for_eval(),
+        ModelCfg::preset("gpt-2.6b").with_layers(4).with_batch(8).scaled_for_eval(),
+        ModelCfg::preset("moe-7.1b").with_layers(4).with_batch(8).scaled_for_eval(),
+        ModelCfg::preset("llama-7b").with_layers(4).with_batch(8).scaled_for_eval(),
+    ]
+}
+
+/// Platforms matched to the `scaled_for_eval` model sizes (scaled
+/// testbeds — see Platform::scaled_testbed).
+pub fn eval_platforms() -> Vec<(Platform, Mesh)> {
+    vec![
+        (Platform::a100_pcie(4).scaled_testbed(), Mesh::flat(4)),
+        (Platform::a100_pcie(8).scaled_testbed(), Mesh::flat(8)),
+        (Platform::a100_two_node().scaled_testbed(), Mesh { intra: 8, nodes: 2 }),
+        (Platform::v100_nvlink().scaled_testbed(), Mesh::flat(4)),
+    ]
+}
+
+/// One Fig. 7 cell: throughputs of the four frameworks.
+pub struct ThroughputRow {
+    pub model: String,
+    pub platform: &'static str,
+    pub gpus: usize,
+    /// per-step time (µs) for PT / DS-M / Alpa / CFP
+    pub pt_us: f64,
+    pub dsm_us: f64,
+    pub alpa_us: f64,
+    pub cfp_us: f64,
+    pub cfp_over_alpa: f64,
+}
+
+pub fn throughput_row(model: &ModelCfg, platform: Platform, mesh: Mesh) -> (ThroughputRow, Comparison) {
+    let mut opts = CfpOptions::new(model.clone(), platform);
+    opts.mesh = mesh;
+    let c = compare_frameworks(&opts);
+    let row = ThroughputRow {
+        model: model.name.clone(),
+        platform: platform.name,
+        gpus: mesh.intra * mesh.nodes,
+        pt_us: c.ddp.time_us,
+        dsm_us: c.megatron.time_us,
+        alpa_us: c.alpa.time_us,
+        cfp_us: c.cfp.time_us,
+        cfp_over_alpa: c.alpa.time_us / c.cfp.time_us,
+    };
+    (row, c)
+}
+
+/// Markdown-ish aligned table printer.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table { headers: headers.iter().map(|s| s.to_string()).collect(), rows: vec![] }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn print(&self) {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let line = |cells: &[String]| {
+            let s: Vec<String> = cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect();
+            println!("| {} |", s.join(" | "));
+        };
+        line(&self.headers);
+        println!(
+            "|{}|",
+            widths.iter().map(|w| "-".repeat(w + 2)).collect::<Vec<_>>().join("|")
+        );
+        for row in &self.rows {
+            line(row);
+        }
+    }
+}
+
+pub fn fmt_us(us: f64) -> String {
+    if us < 1e3 {
+        format!("{us:.1}µs")
+    } else if us < 1e6 {
+        format!("{:.2}ms", us / 1e3)
+    } else {
+        format!("{:.3}s", us / 1e6)
+    }
+}
+
+pub fn fmt_bytes(b: u64) -> String {
+    if b < (1 << 20) {
+        format!("{:.1}KB", b as f64 / 1e3)
+    } else if b < (1 << 30) {
+        format!("{:.1}MB", b as f64 / (1 << 20) as f64)
+    } else {
+        format!("{:.2}GB", b as f64 / (1 << 30) as f64)
+    }
+}
+
+impl ModelCfg {
+    /// Reduce tensor sizes for fast sweeps while keeping the structure
+    /// (heads, layer alternation, expert count) analysis-faithful.
+    pub fn scaled_for_eval(mut self) -> ModelCfg {
+        self.hidden = (self.hidden / 8).max(64);
+        self.ffn = (self.ffn / 8).max(128);
+        self.vocab = (self.vocab / 16).max(512);
+        self.seq = (self.seq / 8).max(32);
+        self.heads = self.heads.min(8);
+        self.experts = self.experts.min(8);
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn eval_matrix_is_well_formed() {
+        for m in eval_models() {
+            assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
+        }
+        assert_eq!(eval_platforms().len(), 4);
+    }
+
+    #[test]
+    fn table_prints_without_panic() {
+        let mut t = Table::new(&["a", "bb"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.print();
+    }
+
+    #[test]
+    fn fmt_helpers() {
+        assert_eq!(fmt_us(500.0), "500.0µs");
+        assert!(fmt_us(1.5e6).ends_with('s'));
+        assert!(fmt_bytes(5 << 20).ends_with("MB"));
+    }
+}

@@ -1,0 +1,40 @@
+//! # CFP — Communication-Free-Preserving intra-operator parallelism search
+//!
+//! A reproduction of *"CFP: Low-overhead Profiling-based Intra-operator
+//! Parallelism Generation by Preserving Communication-Free Structures"*
+//! as a three-layer Rust + JAX + Pallas stack (see DESIGN.md).
+//!
+//! Pipeline (paper Fig. 3):
+//!
+//! ```text
+//!  models::build(..)            fine-grained computation graph (fwd+bwd+update)
+//!    └─ affine::DimMap          Table-1 affine dependency expressions
+//!        └─ pblock::build       Algorithm-1 ParallelBlock grouping
+//!            └─ segment::extract  fingerprint-matched unique segments
+//!                └─ profiler::profile_segments
+//!                     ├─ spmd::lower        SPMD program + downstream passes
+//!                     ├─ cluster::simulate  communication kernels on a platform
+//!                     └─ runtime (PJRT)     measured compute kernel costs
+//!                └─ cost::search   Eq-8/9 composition + memory-capped plan DP
+//! ```
+//!
+//! The crate is fully offline: the only external dependencies are the
+//! vendored `xla` (PJRT bindings) and `anyhow`. Tokio/clap/serde/criterion
+//! equivalents live in [`util`] (threadpool, CLI, JSON, bench & property-test
+//! harnesses) — see DESIGN.md §Substitutions.
+
+pub mod affine;
+pub mod baselines;
+pub mod cluster;
+pub mod coordinator;
+pub mod cost;
+pub mod graph;
+pub mod harness;
+pub mod models;
+pub mod pblock;
+pub mod profiler;
+pub mod runtime;
+pub mod segment;
+pub mod spmd;
+pub mod trainer;
+pub mod util;

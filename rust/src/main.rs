@@ -1,0 +1,209 @@
+//! `cfp` CLI — the leader entrypoint.
+//!
+//! Subcommands:
+//!   search    run the CFP pipeline on a model and print the chosen plan
+//!   compare   CFP vs Alpa/Megatron/DDP on one model+platform
+//!   train     e2e training via the PJRT train-step artifact
+//!   calibrate measure calib artifacts and print the fitted compute model
+//!   space     print ParallelBlock/segment/profile-space statistics
+
+use cfp::cluster::Platform;
+use cfp::coordinator::{compare_frameworks, run_cfp, CfpOptions};
+use cfp::harness::{fmt_bytes, fmt_us, Table};
+use cfp::models::ModelCfg;
+use cfp::runtime::Runtime;
+use cfp::trainer::Trainer;
+use cfp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
+    let code = match cmd {
+        "search" => cmd_search(&args),
+        "compare" => cmd_compare(&args),
+        "train" => cmd_train(&args),
+        "calibrate" => cmd_calibrate(&args),
+        "space" => cmd_space(&args),
+        _ => {
+            eprintln!(
+                "usage: cfp <search|compare|train|calibrate|space> \
+                 [--model gpt-2.6b] [--layers N] [--batch N] \
+                 [--platform a100-pcie|a100-pcie-8|a100-2node|v100-nvlink] \
+                 [--threads N] [--steps N] [--lr F]"
+            );
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn parse_model(args: &Args) -> ModelCfg {
+    let name = args.get_or("model", "gpt-2.6b");
+    let mut cfg = ModelCfg::preset(name);
+    if let Some(l) = args.get("layers") {
+        let fallback = cfg.layers;
+        cfg = cfg.with_layers(l.parse().unwrap_or(fallback));
+    }
+    let batch = args.get_usize("batch", cfg.batch);
+    cfg = cfg.with_batch(batch);
+    if args.has_flag("scaled") {
+        cfg = cfg.scaled_for_eval();
+    }
+    cfg
+}
+
+fn parse_platform(args: &Args) -> Platform {
+    Platform::by_name(args.get_or("platform", "a100-pcie")).unwrap_or_else(|| {
+        eprintln!("unknown platform, using a100-pcie");
+        Platform::a100_pcie(4)
+    })
+}
+
+fn cmd_search(args: &Args) -> i32 {
+    let model = parse_model(args);
+    let platform = parse_platform(args);
+    let mut opts = CfpOptions::new(model, platform);
+    opts.threads = args.get_usize("threads", 1);
+    if let Ok(rt) = Runtime::open_default() {
+        if let Ok(cm) = rt.calibrate_compute(&platform) {
+            println!("(compute model calibrated from PJRT measurements)");
+            opts.compute = Some(cm);
+        }
+    }
+    let r = run_cfp(&opts);
+    println!(
+        "model {}  platform {}  gpus {}",
+        opts.model.name,
+        platform.name,
+        opts.mesh.total()
+    );
+    println!(
+        "blocks {}  segments {} ({} unique)  profile space {} programs",
+        r.blocks.num_blocks(),
+        r.segments.instances.len(),
+        r.segments.num_unique(),
+        r.db.profile_space()
+    );
+    println!(
+        "plan: step {}  memory/device {}",
+        fmt_us(r.plan.time_us),
+        fmt_bytes(r.plan.mem_bytes)
+    );
+    for line in r.describe_plan() {
+        println!("  {line}");
+    }
+    println!(
+        "timings: analysis {:.3}s  profiling {:.3}s  search {:.3}s  \
+         (est. real testbed: compile {:.1}s profile {:.1}s -> optimized {:.1}s)",
+        r.timings.analysis_passes_s,
+        r.timings.exec_compiling_s + r.timings.metrics_profiling_s,
+        r.timings.compose_search_s,
+        r.timings.est_compile_s,
+        r.timings.est_profile_s,
+        r.timings.est_optimized_s,
+    );
+    0
+}
+
+fn cmd_compare(args: &Args) -> i32 {
+    let model = parse_model(args);
+    let platform = parse_platform(args);
+    let mut opts = CfpOptions::new(model, platform);
+    opts.threads = args.get_usize("threads", 1);
+    let c = compare_frameworks(&opts);
+    let mut t = Table::new(&["framework", "step time", "memory/dev", "vs CFP"]);
+    for (name, p) in [
+        ("PyTorch-DDP", &c.ddp),
+        ("DeepSpeed-Megatron", &c.megatron),
+        ("Alpa (volume model)", &c.alpa),
+        ("CFP", &c.cfp),
+    ] {
+        t.row(vec![
+            name.into(),
+            fmt_us(p.time_us),
+            fmt_bytes(p.mem_bytes),
+            format!("{:.2}x", p.time_us / c.cfp.time_us),
+        ]);
+    }
+    t.print();
+    0
+}
+
+fn cmd_train(args: &Args) -> i32 {
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("no artifacts ({e}); run `make artifacts` first");
+            return 1;
+        }
+    };
+    let steps = args.get_usize("steps", 100);
+    let lr = args.get_f64("lr", 0.05) as f32;
+    let artifact = args.get_or("artifact", "train_step_gpt");
+    let mut tr = match Trainer::new(&rt, artifact, 42) {
+        Ok(t) => t,
+        Err(e) => {
+            eprintln!("trainer: {e}");
+            return 1;
+        }
+    };
+    println!("training {artifact}: {} params, {steps} steps, lr {lr}", tr.num_params());
+    match tr.train(steps, lr, (steps / 20).max(1)) {
+        Ok(curve) => {
+            println!(
+                "loss {:.4} -> {:.4}",
+                curve.first().unwrap_or(&0.0),
+                curve.last().unwrap_or(&0.0)
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("train: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_calibrate(args: &Args) -> i32 {
+    let platform = parse_platform(args);
+    let rt = match Runtime::open_default() {
+        Ok(rt) => rt,
+        Err(e) => {
+            eprintln!("no artifacts ({e})");
+            return 1;
+        }
+    };
+    match rt.calibrate_compute(&platform) {
+        Ok(cm) => {
+            println!(
+                "calibrated compute model: peak {} TFLOP/s, sat {:.2e} flops, max eff {:.2}",
+                cm.peak_tflops, cm.sat_flops, cm.max_eff
+            );
+            0
+        }
+        Err(e) => {
+            eprintln!("calibrate: {e}");
+            1
+        }
+    }
+}
+
+fn cmd_space(args: &Args) -> i32 {
+    let model = parse_model(args);
+    let platform = parse_platform(args);
+    let opts = CfpOptions::new(model, platform);
+    let r = run_cfp(&opts);
+    let mut t = Table::new(&["segment", "blocks", "configs", "instances"]);
+    for u in &r.segments.unique {
+        let inst = &r.segments.instances[u.rep];
+        t.row(vec![
+            format!("u{}", u.id),
+            inst.blocks.len().to_string(),
+            r.db.segments[u.id].configs.len().to_string(),
+            u.count.to_string(),
+        ]);
+    }
+    t.print();
+    println!("total profile space: {} programs", r.db.profile_space());
+    0
+}

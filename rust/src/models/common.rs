@@ -1,0 +1,273 @@
+//! Shared fine-grained builders: embedding, attention, MLPs, MoE FFN,
+//! cross-entropy — the decomposed structures the analysis passes chew on.
+
+use crate::graph::{ElemOp, Graph, OpId, ParamClass, ReduceKind};
+
+use super::{Arch, ModelCfg};
+
+/// Multi-head self-attention decomposed to primitives.
+///
+/// Returns the (B, S, H) output. This is Fig. 4's parallelism-preserving
+/// structure: two BMMs whose batch dims (B, heads) propagate partitions
+/// seamlessly; softmax/dropout stay elementwise+lastdim-reduce.
+pub fn attention(g: &mut Graph, x: OpId, cfg: &ModelCfg, li: usize, normed: OpId) -> OpId {
+    let (b, s, h) = (cfg.batch, cfg.seq, cfg.hidden);
+    let (nh, hd) = (cfg.heads, cfg.head_dim());
+    let p = format!("l{li}/attn");
+
+    let x2d = g.reshape(normed, vec![b * s, h], &format!("{p}/x2d"));
+    // Fused QKV projection, columns ordered [heads][qkv][head_dim] so a
+    // column shard is a whole-heads shard (Megatron's fused layout).
+    let wqkv = g.param(&format!("{p}/wqkv"), vec![h, 3 * h], ParamClass::Weight);
+    let wo = g.param(&format!("{p}/wo"), vec![h, h], ParamClass::Weight);
+
+    let qkv = g.matmul(x2d, wqkv, &format!("{p}/qkv_proj")); // (T, 3H)
+    let qkv5 = g.reshape(qkv, vec![b, s, nh, 3, hd], &format!("{p}/qkv_5d"));
+    let qkv_t = g.transpose(qkv5, vec![3, 0, 2, 1, 4], &format!("{p}/qkv_t")); // (3,B,nh,S,hd)
+    let q = g.slice(qkv_t, 0, 0, &format!("{p}/q")); // (B, nh, S, hd)
+    let k = g.slice(qkv_t, 0, 1, &format!("{p}/k"));
+    let v = g.slice(qkv_t, 0, 2, &format!("{p}/v"));
+
+    let (q, k) = if cfg.arch == Arch::Llama {
+        // RoPE as an elementwise rotation against precomputed tables —
+        // partition-transparent, matching its parallel behaviour.
+        let rope = g.constant(0.5, vec![s, hd]);
+        let rope_b = g.broadcast(rope, vec![2, 3], vec![b, nh, s, hd], &format!("{p}/rope_b"));
+        let qr = g.binary(ElemOp::Mul, q, rope_b, &format!("{p}/q_rope"));
+        let kr = g.binary(ElemOp::Mul, k, rope_b, &format!("{p}/k_rope"));
+        (qr, kr)
+    } else {
+        (q, k)
+    };
+
+    let kt = g.transpose(k, vec![0, 1, 3, 2], &format!("{p}/k_T")); // (B,nh,hd,S)
+    let scores = g.dot(q, kt, 2, &format!("{p}/qk_bmm")); // (B,nh,S,S)
+    let scaled = g.unary(
+        ElemOp::Scale(1.0 / (hd as f64).sqrt()),
+        scores,
+        &format!("{p}/scale"),
+    );
+    let probs = g.softmax(scaled, &format!("{p}/softmax"));
+    let probs = if cfg.dropout {
+        g.dropout(probs, 0.1, &format!("{p}/drop"))
+    } else {
+        probs
+    };
+    let ctx = g.dot(probs, v, 2, &format!("{p}/pv_bmm")); // (B,nh,S,hd)
+    let ctx_t = g.transpose(ctx, vec![0, 2, 1, 3], &format!("{p}/ctx_t"));
+    let ctx2d = g.reshape(ctx_t, vec![b * s, h], &format!("{p}/ctx2d"));
+    let out = g.matmul(ctx2d, wo, &format!("{p}/out_proj"));
+    let out3d = g.reshape(out, vec![b, s, h], &format!("{p}/out3d"));
+    // residual dropout sits AFTER the row-parallel AllReduce point — under
+    // Megatron TP its mask is replicated, which is exactly the §2.2 RNG
+    // device-restriction AllReduce; under DP it is batch-sharded and free.
+    let out3d = if cfg.dropout {
+        g.dropout(out3d, 0.1, &format!("{p}/resid_drop"))
+    } else {
+        out3d
+    };
+    g.binary(ElemOp::Add, x, out3d, &format!("{p}/residual"))
+}
+
+/// GeLU MLP (gpt/bert/moe-even-layers).
+pub fn dense_mlp(g: &mut Graph, x3d: OpId, normed: OpId, cfg: &ModelCfg, li: usize) -> OpId {
+    let (b, s, h, f) = (cfg.batch, cfg.seq, cfg.hidden, cfg.ffn);
+    let p = format!("l{li}/mlp");
+    let x2d = g.reshape(normed, vec![b * s, h], &format!("{p}/x2d"));
+    let w1 = g.param(&format!("{p}/w1"), vec![h, f], ParamClass::Weight);
+    let w2 = g.param(&format!("{p}/w2"), vec![f, h], ParamClass::Weight);
+    let h1 = g.matmul(x2d, w1, &format!("{p}/fc1"));
+    let a = g.unary(ElemOp::Gelu, h1, &format!("{p}/gelu"));
+    let a = if cfg.dropout {
+        g.dropout(a, 0.1, &format!("{p}/drop"))
+    } else {
+        a
+    };
+    let h2 = g.matmul(a, w2, &format!("{p}/fc2"));
+    let y = g.reshape(h2, vec![b, s, h], &format!("{p}/out3d"));
+    let y = if cfg.dropout {
+        g.dropout(y, 0.1, &format!("{p}/resid_drop"))
+    } else {
+        y
+    };
+    g.binary(ElemOp::Add, x3d, y, &format!("{p}/residual"))
+}
+
+/// SwiGLU MLP (llama).
+pub fn swiglu_mlp(g: &mut Graph, x3d: OpId, normed: OpId, cfg: &ModelCfg, li: usize) -> OpId {
+    let (b, s, h, f) = (cfg.batch, cfg.seq, cfg.hidden, cfg.ffn);
+    let p = format!("l{li}/swiglu");
+    let x2d = g.reshape(normed, vec![b * s, h], &format!("{p}/x2d"));
+    let wg = g.param(&format!("{p}/w_gate"), vec![h, f], ParamClass::Weight);
+    let wu = g.param(&format!("{p}/w_up"), vec![h, f], ParamClass::Weight);
+    let wd = g.param(&format!("{p}/w_down"), vec![f, h], ParamClass::Weight);
+    let gate = g.matmul(x2d, wg, &format!("{p}/gate"));
+    let gact = g.unary(ElemOp::Silu, gate, &format!("{p}/silu"));
+    let up = g.matmul(x2d, wu, &format!("{p}/up"));
+    let prod = g.binary(ElemOp::Mul, gact, up, &format!("{p}/prod"));
+    let down = g.matmul(prod, wd, &format!("{p}/down"));
+    let y = g.reshape(down, vec![b, s, h], &format!("{p}/out3d"));
+    g.binary(ElemOp::Add, x3d, y, &format!("{p}/residual"))
+}
+
+/// GShard-style top-1 MoE FFN: gate softmax, one-hot dispatch, expert-
+/// batched BMMs, weighted combine (paper §5.7's case-study structure).
+pub fn moe_ffn(g: &mut Graph, x3d: OpId, normed: OpId, cfg: &ModelCfg, li: usize) -> OpId {
+    let (b, s, h, f, e) = (cfg.batch, cfg.seq, cfg.hidden, cfg.ffn, cfg.experts);
+    let t = b * s;
+    let p = format!("l{li}/moe");
+
+    let x2d = g.reshape(normed, vec![t, h], &format!("{p}/x2d"));
+    let wg = g.param(&format!("{p}/gate_w"), vec![h, e], ParamClass::Weight);
+    let logits = g.matmul(x2d, wg, &format!("{p}/gate_logits")); // (T, E)
+    let probs = g.softmax(logits, &format!("{p}/gate_softmax"));
+
+    // top-1 one-hot: max over E, compare-eq, f32-ify
+    let m = g.reduce(probs, vec![1], ReduceKind::Max, &format!("{p}/gate_max"));
+    let mb = g.broadcast(m, vec![0], vec![t, e], &format!("{p}/gate_max_b"));
+    let mask = g.binary(ElemOp::CmpEq, probs, mb, &format!("{p}/onehot_mask"));
+    let one = g.constant(1.0, vec![]);
+    let one_b = g.broadcast(one, vec![], vec![t, e], &format!("{p}/one_b"));
+    let zero = g.constant(0.0, vec![]);
+    let zero_b = g.broadcast(zero, vec![], vec![t, e], &format!("{p}/zero_b"));
+    let onehot = g.elem(ElemOp::Select, vec![mask, one_b, zero_b], &format!("{p}/onehot"));
+
+    // combine weight per token
+    let pw = g.binary(ElemOp::Mul, probs, onehot, &format!("{p}/probs_sel"));
+    let weight = g.reduce(pw, vec![1], ReduceKind::Sum, &format!("{p}/weight")); // (T)
+
+    // capacity-based dispatch (GShard, capacity factor 1): a data-dependent
+    // token permutation (T,H) → (E, C, H) with C = T/E. Crossing a Route
+    // with a sharded token/expert dim costs an All-to-All — the §5.7
+    // expert-parallelism kernel that collapses to SendRecv on PCIe.
+    let c = t / e;
+    let xd = g.route(x2d, vec![e, c, h], &format!("{p}/dispatch"));
+
+    // expert-batched BMMs: the extra batch dim (experts) is the extra
+    // candidate partition dimension the paper calls out in §5.5.
+    let w1e = g.param(&format!("{p}/w1_e"), vec![e, h, f], ParamClass::Weight);
+    let w2e = g.param(&format!("{p}/w2_e"), vec![e, f, h], ParamClass::Weight);
+    let h1 = g.dot(xd, w1e, 1, &format!("{p}/expert_fc1")); // (E,C,F)
+    let a = g.unary(ElemOp::Gelu, h1, &format!("{p}/gelu"));
+    let h2 = g.dot(a, w2e, 1, &format!("{p}/expert_fc2")); // (E,C,H)
+
+    // combine: route back to token order, then scale by the gate weight
+    let y2d = g.route(h2, vec![t, h], &format!("{p}/combine")); // (T,H)
+    let w_b = g.broadcast(weight, vec![0], vec![t, h], &format!("{p}/weight_b"));
+    let yw = g.binary(ElemOp::Mul, y2d, w_b, &format!("{p}/weighted"));
+    let y3d = g.reshape(yw, vec![b, s, h], &format!("{p}/out3d"));
+    g.binary(ElemOp::Add, x3d, y3d, &format!("{p}/residual"))
+}
+
+/// One transformer block (arch-dispatched norm + ffn flavor).
+pub fn block(g: &mut Graph, x: OpId, cfg: &ModelCfg, li: usize) -> OpId {
+    g.set_layer(Some(li));
+    let p = format!("l{li}");
+    let normed1 = norm(g, x, cfg, &format!("{p}/ln1"));
+    let x = attention(g, x, cfg, li, normed1);
+    let normed2 = norm(g, x, cfg, &format!("{p}/ln2"));
+    let out = match (cfg.arch, li % 2) {
+        (Arch::Llama, _) => swiglu_mlp(g, x, normed2, cfg, li),
+        (Arch::Moe, 1) => moe_ffn(g, x, normed2, cfg, li),
+        _ => dense_mlp(g, x, normed2, cfg, li),
+    };
+    g.set_layer(None);
+    out
+}
+
+fn norm(g: &mut Graph, x: OpId, cfg: &ModelCfg, name: &str) -> OpId {
+    let h = cfg.hidden;
+    if cfg.arch == Arch::Llama {
+        let w = g.param(&format!("{name}/w"), vec![h], ParamClass::Weight);
+        g.rmsnorm(x, w, &format!("{name}/rmsnorm"))
+    } else {
+        let w = g.param(&format!("{name}/w"), vec![h], ParamClass::Weight);
+        let b = g.param(&format!("{name}/b"), vec![h], ParamClass::Weight);
+        g.layernorm(x, w, b, name)
+    }
+}
+
+/// Embedding + blocks + final norm + LM head + CE loss → (graph, loss id).
+pub fn build_forward_loss(cfg: &ModelCfg) -> (Graph, OpId) {
+    let mut g = Graph::new();
+    let (b, s, h, v) = (cfg.batch, cfg.seq, cfg.hidden, cfg.vocab);
+
+    let tokens = g.param("tokens", vec![b, s], ParamClass::Input);
+    let embed = g.param("embed", vec![v, h], ParamClass::Weight);
+    let mut x = g.gather(embed, tokens, "embed_lookup"); // (B,S,H)
+    if cfg.arch != Arch::Llama {
+        let pos = g.param("pos_embed", vec![s, h], ParamClass::Weight);
+        let pos_b = g.broadcast(pos, vec![1, 2], vec![b, s, h], "pos_b");
+        x = g.binary(ElemOp::Add, x, pos_b, "embed_add_pos");
+    }
+
+    for li in 0..cfg.layers {
+        x = block(&mut g, x, cfg, li);
+    }
+
+    let normed = norm(&mut g, x, cfg, "final_norm");
+    let x2d = g.reshape(normed, vec![b * s, h], "final_2d");
+    let unembed = g.param("unembed", vec![h, v], ParamClass::Weight);
+    let logits = g.matmul(x2d, unembed, "lm_head"); // (T, V)
+
+    // CE with one-hot targets (an Input param, as jax would feed them)
+    let t = b * s;
+    let targets = g.param("targets_onehot", vec![t, v], ParamClass::Input);
+    let m = g.reduce(logits, vec![1], ReduceKind::Max, "ce/max");
+    let mb = g.broadcast(m, vec![0], vec![t, v], "ce/max_b");
+    let shifted = g.binary(ElemOp::Sub, logits, mb, "ce/shift");
+    let e = g.unary(ElemOp::Exp, shifted, "ce/exp");
+    let se = g.reduce(e, vec![1], ReduceKind::Sum, "ce/sumexp");
+    let lse = g.unary(ElemOp::Log, se, "ce/logsumexp");
+    let lse_b = g.broadcast(lse, vec![0], vec![t, v], "ce/lse_b");
+    let logp = g.binary(ElemOp::Sub, shifted, lse_b, "ce/logp");
+    let picked = g.binary(ElemOp::Mul, targets, logp, "ce/picked");
+    let sum = g.reduce(picked, vec![0, 1], ReduceKind::Sum, "ce/sum");
+    let loss = g.unary(ElemOp::Scale(-1.0 / t as f64), sum, "ce/loss");
+    g.outputs.push(loss);
+    (g, loss)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::presets::ModelCfg;
+
+    #[test]
+    fn forward_loss_is_scalar() {
+        let cfg = ModelCfg::preset("gpt-tiny");
+        let (g, loss) = build_forward_loss(&cfg);
+        assert!(g.shape(loss).is_empty());
+    }
+
+    #[test]
+    fn attention_preserves_shape() {
+        let cfg = ModelCfg::preset("gpt-tiny");
+        let (b, s, h) = (cfg.batch, cfg.seq, cfg.hidden);
+        let mut g = Graph::new();
+        let x = g.param("x", vec![b, s, h], ParamClass::Input);
+        let out = attention(&mut g, x, &cfg, 0, x);
+        assert_eq!(g.shape(out), &[b, s, h]);
+    }
+
+    #[test]
+    fn moe_ffn_preserves_shape() {
+        let cfg = ModelCfg::preset("moe-tiny");
+        let (b, s, h) = (cfg.batch, cfg.seq, cfg.hidden);
+        let mut g = Graph::new();
+        let x = g.param("x", vec![b, s, h], ParamClass::Input);
+        let out = moe_ffn(&mut g, x, x, &cfg, 1);
+        assert_eq!(g.shape(out), &[b, s, h]);
+    }
+
+    #[test]
+    fn six_contractions_per_dense_layer_plus_head() {
+        // paper §5.5: a transformer layer has 4 ParallelBlock seeds after
+        // the two attention BMMs merge into the QKV block. At op level:
+        // qkv, qk_bmm, pv_bmm, wo, w1, w2 = 6 forward dots + lm_head.
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(1).without_dropout();
+        let (g, _) = build_forward_loss(&cfg);
+        let dots = g.contraction_ops().len();
+        assert_eq!(dots, 7, "got {dots}");
+    }
+}

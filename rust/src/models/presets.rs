@@ -1,0 +1,194 @@
+//! Model configurations, including the paper's evaluated sizes (§5.1).
+
+use super::Arch;
+
+#[derive(Clone, Debug)]
+pub struct ModelCfg {
+    pub arch: Arch,
+    pub name: String,
+    pub hidden: usize,
+    pub layers: usize,
+    pub heads: usize,
+    pub ffn: usize,
+    pub vocab: usize,
+    pub seq: usize,
+    pub batch: usize,
+    pub experts: usize,
+    pub dropout: bool,
+}
+
+impl ModelCfg {
+    pub fn head_dim(&self) -> usize {
+        self.hidden / self.heads
+    }
+
+    /// Paper-scale presets. Analysis cost does not depend on tensor sizes,
+    /// so these use the real dimensions.
+    pub fn preset(name: &str) -> ModelCfg {
+        match name {
+            "bert-large" => ModelCfg {
+                arch: Arch::Bert,
+                name: name.into(),
+                hidden: 1024,
+                layers: 24,
+                heads: 16,
+                ffn: 4096,
+                vocab: 30528,
+                seq: 512,
+                batch: 8,
+                experts: 0,
+                dropout: true,
+            },
+            "gpt-2.6b" => ModelCfg {
+                arch: Arch::Gpt,
+                name: name.into(),
+                hidden: 2560,
+                layers: 32,
+                heads: 32,
+                ffn: 10240,
+                vocab: 50304,
+                seq: 1024,
+                batch: 8,
+                experts: 0,
+                dropout: true,
+            },
+            "gpt-6.7b" => ModelCfg {
+                arch: Arch::Gpt,
+                name: name.into(),
+                hidden: 4096,
+                layers: 32,
+                heads: 32,
+                ffn: 16384,
+                vocab: 50304,
+                seq: 1024,
+                batch: 8,
+                experts: 0,
+                dropout: true,
+            },
+            "llama-7b" => ModelCfg {
+                arch: Arch::Llama,
+                name: name.into(),
+                hidden: 4096,
+                layers: 32,
+                heads: 32,
+                ffn: 11008,
+                vocab: 32000,
+                seq: 1024,
+                batch: 8,
+                experts: 0,
+                dropout: true,
+            },
+            "moe-7.1b" => ModelCfg {
+                arch: Arch::Moe,
+                name: name.into(),
+                hidden: 2048,
+                layers: 16,
+                heads: 16,
+                ffn: 8192,
+                vocab: 32000,
+                seq: 1024,
+                batch: 8,
+                experts: 16,
+                dropout: true,
+            },
+            // small configs for tests / e2e
+            "gpt-tiny" => ModelCfg {
+                arch: Arch::Gpt,
+                name: name.into(),
+                hidden: 64,
+                layers: 2,
+                heads: 4,
+                ffn: 128,
+                vocab: 512,
+                seq: 32,
+                batch: 4,
+                experts: 0,
+                dropout: true,
+            },
+            "moe-tiny" => ModelCfg {
+                arch: Arch::Moe,
+                name: name.into(),
+                hidden: 64,
+                layers: 2,
+                heads: 4,
+                ffn: 128,
+                vocab: 512,
+                seq: 32,
+                batch: 4,
+                experts: 4,
+                dropout: true,
+            },
+            other => panic!("unknown preset {other:?}"),
+        }
+    }
+
+    pub fn with_layers(mut self, layers: usize) -> Self {
+        self.layers = layers;
+        self
+    }
+
+    pub fn with_batch(mut self, batch: usize) -> Self {
+        self.batch = batch;
+        self
+    }
+
+    pub fn with_seq(mut self, seq: usize) -> Self {
+        self.seq = seq;
+        self
+    }
+
+    pub fn without_dropout(mut self) -> Self {
+        self.dropout = false;
+        self
+    }
+
+    /// Total trainable parameters (analytic).
+    pub fn num_params(&self) -> u64 {
+        let h = self.hidden as u64;
+        let f = self.ffn as u64;
+        let v = self.vocab as u64;
+        let s = self.seq as u64;
+        let mut per_layer = 4 * h * h; // wq wk wv wo
+        per_layer += match self.arch {
+            Arch::Llama => 3 * h * f + 2 * h,
+            _ => 2 * h * f + 4 * h,
+        };
+        let mut total = v * h + per_layer * self.layers as u64 + h * v;
+        if self.arch != Arch::Llama {
+            total += s * h; // learned positions
+        }
+        if self.arch == Arch::Moe {
+            // every odd layer swaps its dense FFN for E experts
+            let moe_layers = (self.layers / 2) as u64;
+            let e = self.experts as u64;
+            total += moe_layers * (e * 2 * h * f + h * e) - moe_layers * 2 * h * f;
+        }
+        total
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn presets_have_expected_scale() {
+        // ballpark param counts (±20%): the names should mean what they say
+        let gpt26 = ModelCfg::preset("gpt-2.6b").num_params() as f64;
+        assert!((gpt26 / 2.6e9 - 1.0).abs() < 0.25, "gpt-2.6b = {gpt26}");
+        let gpt67 = ModelCfg::preset("gpt-6.7b").num_params() as f64;
+        assert!((gpt67 / 6.7e9 - 1.0).abs() < 0.25, "gpt-6.7b = {gpt67}");
+        let llama = ModelCfg::preset("llama-7b").num_params() as f64;
+        assert!((llama / 6.7e9 - 1.0).abs() < 0.25, "llama-7b = {llama}");
+        let moe = ModelCfg::preset("moe-7.1b").num_params() as f64;
+        assert!((moe / 7.1e9 - 1.0).abs() < 0.35, "moe-7.1b = {moe}");
+    }
+
+    #[test]
+    fn builders_chain() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(3).with_batch(2).with_seq(16);
+        assert_eq!(cfg.layers, 3);
+        assert_eq!(cfg.batch, 2);
+        assert_eq!(cfg.seq, 16);
+    }
+}

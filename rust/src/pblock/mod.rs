@@ -1,0 +1,377 @@
+//! ParallelBlock construction — the paper's core structure (§3).
+//!
+//! A ParallelBlock is a maximal subgraph rooted at a tensor-contraction
+//! operator through which every *surviving* candidate partition of the
+//! entry op propagates communication-free (Algorithm 1). The block's
+//! strategy space is exactly those surviving candidates plus the
+//! contraction-split (`SplitK`) strategy, matching §5.5's count of 3
+//! strategies per dense-matmul block (M-split ≅ data parallel, N-split ≅
+//! Megatron column parallel, K-split ≅ Megatron row parallel) and 4 for the
+//! expert-batched BMM in MoE.
+//!
+//! The join rule is "all live candidates must propagate": an operator that
+//! would block *any* candidate terminates the DFS on that path (and later
+//! seeds or joins another block). This is what keeps a transformer layer at
+//! 4 blocks — ln2's hidden-dim reduction stops the wo block's N candidate,
+//! rather than being absorbed and silently shrinking the strategy space.
+
+pub mod strategy;
+
+use std::collections::BTreeMap;
+
+use crate::affine::{propagate, CoShard, Prop};
+use crate::graph::{Graph, OpId, OpKind, Role};
+
+pub use strategy::{Sharding, Strategy, StrategyKind};
+
+/// One ParallelBlock.
+#[derive(Clone, Debug)]
+pub struct ParallelBlock {
+    pub id: usize,
+    /// First tensor-contraction operator (the strategy carrier, §3.3).
+    pub entry: OpId,
+    /// Members (forward ops), ascending topo order; includes `entry`.
+    pub ops: Vec<OpId>,
+    /// Backward ops attached via their forward origin (§3.2).
+    pub bwd_ops: Vec<OpId>,
+    /// Surviving strategies; index = strategy id used everywhere downstream.
+    pub strategies: Vec<Strategy>,
+}
+
+impl ParallelBlock {
+    /// The block's frontier tensors: members whose users are outside.
+    pub fn output_ops(&self, g: &Graph, block_of: &[Option<usize>]) -> Vec<OpId> {
+        let users = g.users();
+        self.ops
+            .iter()
+            .copied()
+            .filter(|&t| {
+                users[t].is_empty()
+                    || users[t].iter().any(|&u| block_of[u] != Some(self.id))
+            })
+            .collect()
+    }
+}
+
+/// Result of Algorithm 1 over a graph.
+#[derive(Clone, Debug)]
+pub struct BlockSet {
+    pub blocks: Vec<ParallelBlock>,
+    /// op id → owning block (fwd members + attached bwd ops).
+    pub block_of: Vec<Option<usize>>,
+    pub parts: usize,
+}
+
+impl BlockSet {
+    pub fn num_blocks(&self) -> usize {
+        self.blocks.len()
+    }
+
+    /// Product of per-block strategy counts (paper §3.3 `S = Π Dᵢ`).
+    pub fn search_space_size(&self) -> f64 {
+        self.blocks.iter().map(|b| b.strategies.len() as f64).product()
+    }
+}
+
+/// Algorithm 1: BuildParallelBlocks.
+pub fn build_parallel_blocks(g: &Graph, parts: usize) -> BlockSet {
+    let users = g.users();
+    let depths = g.depths();
+    let mut block_of: Vec<Option<usize>> = vec![None; g.ops.len()];
+
+    // SortTensorContractionOpSet: forward contraction ops by (depth, id)
+    let mut seeds: Vec<OpId> = g
+        .ops
+        .iter()
+        .filter(|o| o.kind.is_contraction() && o.role == Role::Fwd)
+        .map(|o| o.id)
+        .collect();
+    seeds.sort_by_key(|&s| (depths[s], s));
+
+    let mut blocks: Vec<ParallelBlock> = Vec::new();
+    for s in seeds {
+        if block_of[s].is_some() {
+            continue; // IsGrouped
+        }
+        let id = blocks.len();
+        let mut strategies = strategy::entry_strategies(g, s, parts);
+        let mut ops = vec![s];
+        block_of[s] = Some(id);
+
+        // DFSAndGroup
+        let mut stack = vec![s];
+        while let Some(t) = stack.pop() {
+            for &u in &users[t] {
+                if block_of[u].is_some() || g.ops[u].role != Role::Fwd {
+                    continue;
+                }
+                if try_join(g, &mut strategies, u, parts) {
+                    block_of[u] = Some(id);
+                    ops.push(u);
+                    stack.push(u);
+                }
+            }
+        }
+        ops.sort();
+        blocks.push(ParallelBlock { id, entry: s, ops, bwd_ops: vec![], strategies });
+    }
+
+    // Backward ops join their forward op's block (§3.2).
+    for op in &g.ops {
+        if op.role == Role::Bwd {
+            if let Some(f) = op.grad_of {
+                if let Some(b) = block_of[f] {
+                    block_of[op.id] = Some(b);
+                    blocks[b].bwd_ops.push(op.id);
+                }
+            }
+        }
+    }
+
+    BlockSet { blocks, block_of, parts }
+}
+
+/// Try to absorb `u` into the block: every live strategy must extend
+/// communication-free ("Check user, PB with Eq.(2)"). On success the
+/// strategies' assignments are updated in place.
+fn try_join(g: &Graph, strategies: &mut [Strategy], u: OpId, parts: usize) -> bool {
+    if strategies.is_empty() {
+        return false;
+    }
+    match g.ops[u].kind {
+        OpKind::Param { .. } | OpKind::Constant { .. } => return false,
+        _ => {}
+    }
+    let mut exts: Vec<BTreeMap<OpId, Sharding>> = Vec::with_capacity(strategies.len());
+    for st in strategies.iter() {
+        match try_extend(g, st, u, parts) {
+            Some(e) => exts.push(e),
+            None => return false,
+        }
+    }
+    for (st, e) in strategies.iter_mut().zip(exts) {
+        st.assignment.extend(e);
+    }
+    true
+}
+
+/// Extend one strategy's assignment through `u`. Returns the new
+/// assignments (for `u` and any inferred input-branch requirements,
+/// Fig. 5b/5c) or None if `u` blocks this strategy.
+fn try_extend(
+    g: &Graph,
+    st: &Strategy,
+    u: OpId,
+    parts: usize,
+) -> Option<BTreeMap<OpId, Sharding>> {
+    let op = &g.ops[u];
+    let mut new: BTreeMap<OpId, Sharding> = BTreeMap::new();
+
+    let shardings: Vec<Option<Sharding>> = op
+        .inputs
+        .iter()
+        .map(|i| st.assignment.get(i).copied())
+        .collect();
+
+    let sharded: Vec<(usize, usize)> = shardings
+        .iter()
+        .enumerate()
+        .filter_map(|(idx, s)| match s {
+            Some(Sharding::Split(d)) => Some((idx, *d)),
+            _ => None,
+        })
+        .collect();
+
+    if sharded.is_empty() {
+        // All known inputs replicated ⇒ output replicated; free inputs can
+        // always be replicated (no constraint).
+        new.insert(u, Sharding::Replicated);
+        for (idx, s) in shardings.iter().enumerate() {
+            if s.is_none() {
+                new.insert(op.inputs[idx], Sharding::Replicated);
+            }
+        }
+        return Some(new);
+    }
+
+    // Propagate from the first sharded input; all other sharded inputs must
+    // agree on the output dim, and co-shard requirements must be satisfied.
+    let (idx0, dim0) = sharded[0];
+    let (out_dim, co_shards) = match propagate(g, u, idx0, dim0, parts) {
+        Prop::To { out_dim, co_shards } => (out_dim, co_shards),
+        Prop::Blocked => return None,
+    };
+    for &(idxk, dimk) in &sharded[1..] {
+        match propagate(g, u, idxk, dimk, parts) {
+            Prop::To { out_dim: od, .. } if od == out_dim => {}
+            _ => return None,
+        }
+    }
+    for CoShard { input_index, dim } in co_shards {
+        let have = shardings[input_index];
+        match (have, dim) {
+            // sibling unknown: record the inferred requirement (Fig. 5b)
+            (None, Some(d)) => {
+                new.insert(op.inputs[input_index], Sharding::Split(d));
+            }
+            (None, None) => {
+                new.insert(op.inputs[input_index], Sharding::Replicated);
+            }
+            // sibling replicated satisfies any slice requirement locally
+            (Some(Sharding::Replicated), _) => {}
+            (Some(Sharding::Split(have_d)), Some(d)) if have_d == d => {}
+            _ => return None,
+        }
+    }
+    new.insert(u, Sharding::Split(out_dim));
+    Some(new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_training, ModelCfg};
+
+    fn gpt_blocks(layers: usize) -> (Graph, BlockSet) {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(layers);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        (g, bs)
+    }
+
+    #[test]
+    fn transformer_layer_has_four_blocks() {
+        // paper §5.5: 4 ParallelBlocks per transformer layer (qkv+BMMs
+        // merge into one block; wo, w1, w2 each seed one).
+        let (_, bs1) = gpt_blocks(1);
+        let (_, bs2) = gpt_blocks(2);
+        let per_layer = bs2.num_blocks() - bs1.num_blocks();
+        assert_eq!(per_layer, 4, "blocks/layer: {per_layer}");
+    }
+
+    #[test]
+    fn attention_bmm_merges_into_qkv_block() {
+        let (g, bs) = gpt_blocks(1);
+        let qkv = g.ops.iter().find(|o| o.name == "l0/attn/qkv_proj").unwrap().id;
+        let qk = g.ops.iter().find(|o| o.name == "l0/attn/qk_bmm").unwrap().id;
+        let pv = g.ops.iter().find(|o| o.name == "l0/attn/pv_bmm").unwrap().id;
+        assert_eq!(bs.block_of[qk], bs.block_of[qkv], "qk_bmm in qkv block");
+        assert_eq!(bs.block_of[pv], bs.block_of[qkv], "pv_bmm in qkv block");
+    }
+
+    #[test]
+    fn dense_blocks_have_three_strategies() {
+        // §5.5: "3 candidate partition dimensions" per matmul block.
+        let (g, bs) = gpt_blocks(1);
+        for b in &bs.blocks {
+            let name = &g.ops[b.entry].name;
+            if name.contains("mlp") || name.contains("attn/qkv") {
+                assert_eq!(
+                    b.strategies.len(),
+                    3,
+                    "block {} has {:?}",
+                    name,
+                    b.strategies.iter().map(|s| s.label.clone()).collect::<Vec<_>>()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn gpt_search_space_is_81_per_layer_segment() {
+        let (_, bs1) = gpt_blocks(1);
+        let (_, bs2) = gpt_blocks(2);
+        let per_layer = bs2.search_space_size() / bs1.search_space_size();
+        assert_eq!(per_layer, 81.0, "3^4 per layer");
+    }
+
+    #[test]
+    fn moe_expert_block_has_four_strategies() {
+        let cfg = ModelCfg::preset("moe-tiny").with_layers(2);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 2);
+        let expert = g.ops.iter().find(|o| o.name == "l1/moe/expert_fc1").unwrap().id;
+        let blk = &bs.blocks[bs.block_of[expert].unwrap()];
+        assert_eq!(blk.entry, expert, "expert fc1 seeds its own block");
+        // E (expert-parallel), T (dp), F (tp), K (row) — §5.5's extra dim
+        assert_eq!(
+            blk.strategies.len(),
+            4,
+            "{:?}",
+            blk.strategies.iter().map(|s| s.label.clone()).collect::<Vec<_>>()
+        );
+    }
+
+    #[test]
+    fn softmax_and_dropout_absorbed_into_attention_block() {
+        let (g, bs) = gpt_blocks(1);
+        let qkv = g.ops.iter().find(|o| o.name == "l0/attn/qkv_proj").unwrap().id;
+        let qkv_block = bs.block_of[qkv].unwrap();
+        for tag in ["softmax/exp", "softmax/div", "drop/select", "scale"] {
+            let op = g
+                .ops
+                .iter()
+                .find(|o| o.name == format!("l0/attn/{tag}"))
+                .unwrap_or_else(|| panic!("no op l0/attn/{tag}"));
+            assert_eq!(bs.block_of[op.id], Some(qkv_block), "{tag} not absorbed");
+        }
+    }
+
+    #[test]
+    fn backward_ops_join_forward_blocks() {
+        // §3.2: every bwd op whose forward origin is grouped lands in the
+        // SAME block (orphan fwd ops — norm chains, CE — keep orphan grads).
+        let (g, bs) = gpt_blocks(1);
+        let mut checked = 0;
+        for o in &g.ops {
+            if o.role == Role::Bwd {
+                if let Some(f) = o.grad_of {
+                    if let Some(b) = bs.block_of[f] {
+                        assert_eq!(bs.block_of[o.id], Some(b), "bwd op {} strays", o.name);
+                        checked += 1;
+                    }
+                }
+            }
+        }
+        assert!(checked > 50, "checked only {checked} bwd ops");
+    }
+
+    /// Soundness invariant (DESIGN.md §6): within a block, every strategy
+    /// assigns every member a sharding consistent with propagation — i.e.
+    /// re-checking each member op against its inputs' assignments never
+    /// yields a blocked propagation.
+    #[test]
+    fn strategies_are_communication_free_inside_blocks() {
+        let (g, bs) = gpt_blocks(2);
+        for blk in &bs.blocks {
+            for st in &blk.strategies {
+                for &m in &blk.ops {
+                    if m == blk.entry {
+                        continue;
+                    }
+                    let op = &g.ops[m];
+                    for (idx, &inp) in op.inputs.iter().enumerate() {
+                        if let Some(Sharding::Split(d)) = st.assignment.get(&inp) {
+                            match propagate(&g, m, idx, *d, bs.parts) {
+                                Prop::To { out_dim, .. } => {
+                                    assert_eq!(
+                                        st.assignment.get(&m),
+                                        Some(&Sharding::Split(out_dim)),
+                                        "block {} strat {} op {}",
+                                        blk.id,
+                                        st.label,
+                                        op.name
+                                    );
+                                }
+                                Prop::Blocked => panic!(
+                                    "blocked propagation inside block {} strat {} at {}",
+                                    blk.id, st.label, op.name
+                                ),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

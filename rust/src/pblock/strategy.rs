@@ -1,0 +1,189 @@
+//! Entry-operator strategy derivation (paper §3.3, Fig. 2a).
+//!
+//! A matrix multiplication can be split along three dimension classes
+//! (Fig. 2a): the M/batch dims (≅ data parallelism when M = B·S), the N dim
+//! (Megatron column parallelism) and the contracted K dim (Megatron row
+//! parallelism — output needs an AllReduce and is then replicated). Batched
+//! contractions add one strategy per batch dim (expert parallelism for the
+//! MoE expert BMM, §5.5).
+
+use std::collections::BTreeMap;
+
+use crate::graph::{Graph, OpId, OpKind};
+
+/// Per-tensor sharding under a fixed strategy.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Sharding {
+    /// Split along tensor dim `0` into the mesh's intra-op groups.
+    Split(usize),
+    Replicated,
+}
+
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum StrategyKind {
+    /// Shard the entry output on dim `d` (communication-free within block).
+    ShardOut(usize),
+    /// Split the contracted dim: partial outputs ⇒ AllReduce at entry,
+    /// members replicated afterwards.
+    SplitK,
+}
+
+#[derive(Clone, Debug)]
+pub struct Strategy {
+    pub label: String,
+    pub kind: StrategyKind,
+    /// op id → sharding, covering block members and inferred input-branch
+    /// requirements (params, residual inputs — Fig. 5b/5c).
+    pub assignment: BTreeMap<OpId, Sharding>,
+    pub entry_lhs: Sharding,
+    pub entry_rhs: Sharding,
+    /// Bytes AllReduced at the entry (SplitK only).
+    pub entry_allreduce_bytes: usize,
+}
+
+impl Strategy {
+    /// Sharding of the entry op's output under this strategy.
+    pub fn entry_out(&self) -> Sharding {
+        match self.kind {
+            StrategyKind::ShardOut(d) => Sharding::Split(d),
+            StrategyKind::SplitK => Sharding::Replicated,
+        }
+    }
+}
+
+/// All partition strategies of a contraction op (Fig. 2a generalized).
+pub fn entry_strategies(g: &Graph, s: OpId, parts: usize) -> Vec<Strategy> {
+    let op = &g.ops[s];
+    let OpKind::Dot(dims) = &op.kind else {
+        panic!("entry_strategies on non-contraction {}", op.name);
+    };
+    let b = dims.batch;
+    let (lhs, rhs) = (op.inputs[0], op.inputs[1]);
+    let lshape = g.shape(lhs);
+    let rshape = g.shape(rhs);
+    let oshape = &op.shape;
+    let mut out = Vec::new();
+
+    let mut push = |label: String,
+                    kind: StrategyKind,
+                    entry_lhs: Sharding,
+                    entry_rhs: Sharding,
+                    ar_bytes: usize| {
+        let mut assignment = BTreeMap::new();
+        let out_sh = match kind {
+            StrategyKind::ShardOut(d) => Sharding::Split(d),
+            StrategyKind::SplitK => Sharding::Replicated,
+        };
+        assignment.insert(s, out_sh);
+        assignment.insert(lhs, entry_lhs);
+        assignment.insert(rhs, entry_rhs);
+        out.push(Strategy {
+            label,
+            kind,
+            assignment,
+            entry_lhs,
+            entry_rhs,
+            entry_allreduce_bytes: ar_bytes,
+        });
+    };
+
+    // batch dims (expert parallelism for the MoE expert BMM)
+    for d in 0..b {
+        if oshape[d] % parts == 0 {
+            push(
+                format!("b{d}"),
+                StrategyKind::ShardOut(d),
+                Sharding::Split(d),
+                Sharding::Split(d),
+                0,
+            );
+        }
+    }
+    // M split (data parallelism when M = B·S)
+    if oshape[b] % parts == 0 {
+        push(
+            "m".into(),
+            StrategyKind::ShardOut(b),
+            Sharding::Split(b),
+            Sharding::Replicated,
+            0,
+        );
+    }
+    // N split (column tensor parallelism)
+    if oshape[b + 1] % parts == 0 {
+        push(
+            "n".into(),
+            StrategyKind::ShardOut(b + 1),
+            Sharding::Replicated,
+            Sharding::Split(b + 1),
+            0,
+        );
+    }
+    // K split (row tensor parallelism): AllReduce of the full output
+    let k = lshape[b + 1];
+    debug_assert_eq!(k, rshape[b]);
+    if k % parts == 0 {
+        let bytes = op.bytes();
+        push(
+            "k".into(),
+            StrategyKind::SplitK,
+            Sharding::Split(b + 1),
+            Sharding::Split(b),
+            bytes,
+        );
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::ParamClass;
+
+    #[test]
+    fn plain_matmul_has_three_strategies() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![64, 32], ParamClass::Input);
+        let w = g.param("w", vec![32, 128], ParamClass::Weight);
+        let c = g.matmul(a, w, "c");
+        let sts = entry_strategies(&g, c, 4);
+        let labels: Vec<_> = sts.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels, vec!["m", "n", "k"]);
+        assert_eq!(sts[0].entry_rhs, Sharding::Replicated);
+        assert_eq!(sts[2].entry_allreduce_bytes, 64 * 128 * 4);
+    }
+
+    #[test]
+    fn batched_bmm_adds_batch_strategies() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![8, 64, 32], ParamClass::Input);
+        let w = g.param("w", vec![8, 32, 16], ParamClass::Weight);
+        let c = g.dot(a, w, 1, "c");
+        let sts = entry_strategies(&g, c, 4);
+        let labels: Vec<_> = sts.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels, vec!["b0", "m", "n", "k"]);
+    }
+
+    #[test]
+    fn indivisible_dims_are_dropped() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![6, 32], ParamClass::Input); // 6 % 4 != 0
+        let w = g.param("w", vec![32, 128], ParamClass::Weight);
+        let c = g.matmul(a, w, "c");
+        let sts = entry_strategies(&g, c, 4);
+        let labels: Vec<_> = sts.iter().map(|s| s.label.as_str()).collect();
+        assert_eq!(labels, vec!["n", "k"]);
+    }
+
+    #[test]
+    fn splitk_output_is_replicated() {
+        let mut g = Graph::new();
+        let a = g.param("a", vec![16, 32], ParamClass::Input);
+        let w = g.param("w", vec![32, 16], ParamClass::Weight);
+        let c = g.matmul(a, w, "c");
+        let k = entry_strategies(&g, c, 2).into_iter().find(|s| s.label == "k").unwrap();
+        assert_eq!(k.entry_out(), Sharding::Replicated);
+        assert_eq!(k.entry_lhs, Sharding::Split(1));
+        assert_eq!(k.entry_rhs, Sharding::Split(0));
+    }
+}

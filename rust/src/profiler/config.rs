@@ -1,0 +1,116 @@
+//! Segment configuration enumeration: the cartesian product of the
+//! segment's ParallelBlock strategies (paper §3.3 / §4.2), with tiny
+//! blocks pinned to cut the space (the MoE gate matmul is ~0.01% of a
+//! layer's flops; profiling 3× more programs for it is waste — the paper
+//! prunes comparably, e.g. pinning batch dims on 2D meshes, §5.2).
+
+use crate::graph::Graph;
+use crate::pblock::BlockSet;
+
+/// One segment configuration: strategy index per block (parallel to the
+/// segment's block list).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct SegmentConfig {
+    pub strategy: Vec<usize>,
+}
+
+/// Blocks contributing less than this fraction of the segment's entry
+/// flops get pinned to a single strategy.
+pub const PIN_FLOPS_FRACTION: f64 = 0.02;
+
+/// Enumerate the segment's config space. `blocks` are block ids.
+pub fn enumerate_configs(g: &Graph, bs: &BlockSet, blocks: &[usize]) -> Vec<SegmentConfig> {
+    let entry_flops: Vec<f64> = blocks
+        .iter()
+        .map(|&b| g.ops[bs.blocks[b].entry].flops(g) as f64)
+        .collect();
+    let total: f64 = entry_flops.iter().sum();
+    let choices: Vec<usize> = blocks
+        .iter()
+        .zip(&entry_flops)
+        .map(|(&b, &f)| {
+            let n = bs.blocks[b].strategies.len().max(1);
+            if total > 0.0 && f / total < PIN_FLOPS_FRACTION {
+                1 // pinned to its first strategy
+            } else {
+                n
+            }
+        })
+        .collect();
+
+    let mut out = Vec::new();
+    let mut cur = vec![0usize; blocks.len()];
+    loop {
+        out.push(SegmentConfig { strategy: cur.clone() });
+        // odometer increment
+        let mut i = 0;
+        loop {
+            if i == cur.len() {
+                return out;
+            }
+            cur[i] += 1;
+            if cur[i] < choices[i] {
+                break;
+            }
+            cur[i] = 0;
+            i += 1;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_training, ModelCfg};
+    use crate::pblock::build_parallel_blocks;
+    use crate::segment::extract_segments;
+
+    #[test]
+    fn gpt_layer_segment_has_81_configs() {
+        // paper §5.5: 4 blocks × 3 strategies = 81 configs per segment
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(2);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let layer = ss
+            .instances
+            .iter()
+            .find(|i| i.blocks.len() == 4)
+            .expect("layer segment");
+        let configs = enumerate_configs(&g, &bs, &layer.blocks);
+        assert_eq!(configs.len(), 81);
+    }
+
+    #[test]
+    fn moe_segment_pins_gate_block() {
+        let cfg = ModelCfg::preset("moe-tiny").with_layers(4);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 2);
+        let ss = extract_segments(&g, &bs);
+        let moe_seg = ss
+            .instances
+            .iter()
+            .find(|i| {
+                i.blocks
+                    .iter()
+                    .any(|&b| g.ops[bs.blocks[b].entry].name.contains("expert"))
+            })
+            .expect("moe segment");
+        let configs = enumerate_configs(&g, &bs, &moe_seg.blocks);
+        // attn(3) × wo(3) × gate(pinned 1) × fc1(4) × fc2(4) = 144
+        assert_eq!(configs.len(), 144, "got {}", configs.len());
+    }
+
+    #[test]
+    fn config_odometer_is_exhaustive_and_unique() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(1);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let blocks: Vec<usize> = (0..3).collect();
+        let configs = enumerate_configs(&g, &bs, &blocks);
+        let mut set = std::collections::HashSet::new();
+        for c in &configs {
+            assert!(set.insert(c.clone()), "dup {c:?}");
+        }
+    }
+}

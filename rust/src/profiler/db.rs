@@ -1,0 +1,118 @@
+//! Profile database: T_C, T_P, M per (unique segment, config) and T_R per
+//! (unique segment pair, config pair) — the paper's §4.2 deliverables.
+
+use std::collections::HashMap;
+
+use super::config::SegmentConfig;
+
+/// Profiles of one unique segment across its config space.
+#[derive(Clone, Debug, Default)]
+pub struct SegmentProfile {
+    pub configs: Vec<SegmentConfig>,
+    /// communication kernel time per config, µs (T_C)
+    pub t_c_us: Vec<f64>,
+    /// computation kernel time per config, µs (T_P)
+    pub t_p_us: Vec<f64>,
+    /// peak memory per device per config, bytes (M)
+    pub mem_bytes: Vec<u64>,
+    /// symbolic (volume-model) cost per config — the Alpa baseline's view
+    pub symbolic_volume: Vec<u64>,
+    /// outgoing boundary-tensor sharding per config (for T_R)
+    pub boundary_out: Vec<crate::spmd::ShardState>,
+    /// required incoming boundary sharding per config
+    pub boundary_in: Vec<crate::spmd::ShardState>,
+}
+
+impl SegmentProfile {
+    pub fn total_us(&self, cfg: usize) -> f64 {
+        self.t_c_us[cfg] + self.t_p_us[cfg]
+    }
+
+    pub fn best_config(&self) -> usize {
+        (0..self.configs.len())
+            .min_by(|&a, &b| self.total_us(a).partial_cmp(&self.total_us(b)).unwrap())
+            .unwrap_or(0)
+    }
+}
+
+/// Resharding costs between two unique segments: t_r[from_cfg][to_cfg] µs.
+/// `programs` counts the *distinct* boundary-state pairs actually profiled
+/// (§5.5: "3×3 = 9 groups of communication primitives"), which is what the
+/// profile space is charged for — the full table is a lookup expansion.
+#[derive(Clone, Debug, Default)]
+pub struct ReshardTable {
+    pub t_r_us: Vec<Vec<f64>>,
+    /// symbolic (volume-model) bytes per config pair — what Alpa's cost
+    /// model charges for the same boundary (Partial→Split priced as a full
+    /// AllReduce: the §5.7 8× overestimate)
+    pub sym_vol: Vec<Vec<u64>>,
+    pub programs: usize,
+}
+
+/// Estimated real-testbed overheads (paper Fig. 12) plus our wall-clock.
+#[derive(Clone, Debug, Default)]
+pub struct ProfilerStats {
+    pub programs_compiled: usize,
+    pub programs_profiled: usize,
+    /// estimated serial XLA-backend compile time, seconds
+    pub est_compile_s: f64,
+    /// estimated profiling run time (5 warmup + 10 timed runs), seconds
+    pub est_profile_s: f64,
+    /// estimate with §4.3 optimizations (parallel compile, overlap,
+    /// dynamic time limit), seconds
+    pub est_optimized_s: f64,
+    /// our actual analysis wall-clock, seconds
+    pub wall_s: f64,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct ProfileDb {
+    /// indexed by unique segment id
+    pub segments: Vec<SegmentProfile>,
+    /// (from_unique, to_unique) → reshard table
+    pub reshard: HashMap<(usize, usize), ReshardTable>,
+    pub stats: ProfilerStats,
+}
+
+impl ProfileDb {
+    pub fn reshard_us(&self, from_u: usize, from_cfg: usize, to_u: usize, to_cfg: usize) -> f64 {
+        self.reshard
+            .get(&(from_u, to_u))
+            .and_then(|t| t.t_r_us.get(from_cfg).and_then(|row| row.get(to_cfg)))
+            .copied()
+            .unwrap_or(0.0)
+    }
+
+    /// Total programs that a real testbed would compile+profile (Eq. 7).
+    pub fn profile_space(&self) -> usize {
+        let seg: usize = self.segments.iter().map(|s| s.configs.len()).sum();
+        let rs: usize = self.reshard.values().map(|t| t.programs).sum();
+        seg + rs
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::spmd::ShardState;
+
+    #[test]
+    fn best_config_picks_minimum() {
+        let p = SegmentProfile {
+            configs: vec![SegmentConfig { strategy: vec![0] }, SegmentConfig { strategy: vec![1] }],
+            t_c_us: vec![10.0, 1.0],
+            t_p_us: vec![5.0, 5.0],
+            mem_bytes: vec![0, 0],
+            symbolic_volume: vec![0, 0],
+            boundary_out: vec![ShardState::Replicated; 2],
+            boundary_in: vec![ShardState::Replicated; 2],
+        };
+        assert_eq!(p.best_config(), 1);
+    }
+
+    #[test]
+    fn reshard_lookup_defaults_zero() {
+        let db = ProfileDb::default();
+        assert_eq!(db.reshard_us(0, 0, 1, 0), 0.0);
+    }
+}

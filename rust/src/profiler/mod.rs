@@ -1,0 +1,19 @@
+//! Segment profiling (paper §4.2–4.3): enumerate each unique segment's
+//! sub-search space, "compile" (lower + passes) and "run" (simulate on the
+//! substituted cluster, with compute costs from the PJRT-calibrated model)
+//! every configuration, plus pairwise boundary resharding profiles T_R.
+//!
+//! Bookkeeping mirrors the paper's four overhead classes: AnalysisPasses,
+//! ExecCompiling, MetricsProfiling, ComposeSearch (Fig. 12/13). Because our
+//! testbed is simulated, `stats` records both our actual wall-clock and the
+//! *estimated* real-testbed compile/run cost (what an XLA backend + 15
+//! timed runs would have cost), including the §4.3 optimizations: parallel
+//! compilation, compile/profile overlap, and the dynamic profiling limit.
+
+pub mod config;
+pub mod db;
+pub mod run;
+
+pub use config::{enumerate_configs, SegmentConfig};
+pub use db::{ProfileDb, ProfilerStats, ReshardTable, SegmentProfile};
+pub use run::{profile_model, ProfileOptions};

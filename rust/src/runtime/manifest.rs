@@ -1,0 +1,113 @@
+//! artifacts/manifest.json parsing (written by python/compile/aot.py).
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    pub inputs: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+    pub meta: Json,
+}
+
+impl ArtifactMeta {
+    pub fn meta_f64(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).and_then(|v| v.as_f64())
+    }
+
+    pub fn meta_usize(&self, key: &str) -> Option<usize> {
+        self.meta_f64(key).map(|f| f as usize)
+    }
+}
+
+pub fn load(path: &Path) -> Result<Vec<ArtifactMeta>> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("read {}", path.display()))?;
+    let json = Json::parse(&text).map_err(|e| anyhow!("parse manifest: {e}"))?;
+    let arr = json.as_arr().ok_or_else(|| anyhow!("manifest not an array"))?;
+    arr.iter().map(parse_entry).collect()
+}
+
+fn parse_entry(e: &Json) -> Result<ArtifactMeta> {
+    let get_str = |k: &str| -> Result<String> {
+        Ok(e.get(k)
+            .and_then(|v| v.as_str())
+            .ok_or_else(|| anyhow!("missing {k}"))?
+            .to_string())
+    };
+    Ok(ArtifactMeta {
+        name: get_str("name")?,
+        file: get_str("file")?,
+        kind: get_str("kind")?,
+        inputs: parse_specs(e.get("inputs"))?,
+        outputs: parse_specs(e.get("outputs"))?,
+        meta: e.get("meta").cloned().unwrap_or(Json::Null),
+    })
+}
+
+fn parse_specs(j: Option<&Json>) -> Result<Vec<TensorSpec>> {
+    let Some(arr) = j.and_then(|v| v.as_arr()) else {
+        return Ok(vec![]);
+    };
+    arr.iter()
+        .map(|s| {
+            let shape = s
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("missing shape"))?
+                .iter()
+                .map(|d| d.as_i64().unwrap_or(0) as usize)
+                .collect();
+            Ok(TensorSpec {
+                name: s.get("name").and_then(|v| v.as_str()).unwrap_or("").to_string(),
+                shape,
+                dtype: s
+                    .get("dtype")
+                    .and_then(|v| v.as_str())
+                    .unwrap_or("float32")
+                    .to_string(),
+            })
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_aot_schema() {
+        let tmp = std::env::temp_dir().join("cfp_manifest_test.json");
+        std::fs::write(
+            &tmp,
+            r#"[{"name":"m1","file":"m1.hlo.txt","kind":"calib_matmul",
+                "inputs":[{"name":"a","shape":[4,4],"dtype":"float32"}],
+                "outputs":[{"name":"out0","shape":[4,4],"dtype":"float32"}],
+                "meta":{"flops":128}}]"#,
+        )
+        .unwrap();
+        let m = load(&tmp).unwrap();
+        assert_eq!(m.len(), 1);
+        assert_eq!(m[0].inputs[0].shape, vec![4, 4]);
+        assert_eq!(m[0].meta_f64("flops"), Some(128.0));
+        std::fs::remove_file(&tmp).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(load(Path::new("/nonexistent/manifest.json")).is_err());
+    }
+}

@@ -1,0 +1,225 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts (built once by
+//! `make artifacts` — python never runs on this path) and execute them on
+//! the CPU PJRT client via the `xla` crate.
+//!
+//! Two jobs:
+//!  1. real kernel measurements (`measure`, `calibrate_compute`) feeding
+//!     the simulator's compute-efficiency curve — the T_P side of the
+//!     paper's profiling is *measured*, not modeled (§4.2);
+//!  2. executing the full train-step executable for the e2e trainer.
+
+pub mod manifest;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::cluster::sim::ComputeModel;
+use crate::cluster::Platform;
+use crate::util::{stats, Pcg64};
+
+pub use manifest::{ArtifactMeta, TensorSpec};
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    pub manifest: Vec<ArtifactMeta>,
+    cache: Mutex<HashMap<String, usize>>, // name → index into exes
+    exes: Mutex<Vec<xla::PjRtLoadedExecutable>>,
+}
+
+impl Runtime {
+    /// Open an artifacts directory (requires `manifest.json` from aot.py).
+    pub fn open(dir: impl AsRef<Path>) -> Result<Runtime> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest = manifest::load(&dir.join("manifest.json"))?;
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt: {e:?}"))?;
+        Ok(Runtime {
+            client,
+            dir,
+            manifest,
+            cache: Mutex::new(HashMap::new()),
+            exes: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// Default location: `$CFP_ARTIFACTS` or ./artifacts.
+    pub fn open_default() -> Result<Runtime> {
+        let dir = std::env::var("CFP_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        Self::open(dir)
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.manifest.iter().find(|m| m.name == name)
+    }
+
+    /// Compile (and cache) an artifact.
+    fn exe_index(&self, name: &str) -> Result<usize> {
+        if let Some(&i) = self.cache.lock().unwrap().get(name) {
+            return Ok(i);
+        }
+        let meta = self.meta(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        let path = self.dir.join(&meta.file);
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .map_err(|e| anyhow!("parse {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e:?}"))?;
+        let mut exes = self.exes.lock().unwrap();
+        exes.push(exe);
+        let idx = exes.len() - 1;
+        self.cache.lock().unwrap().insert(name.to_string(), idx);
+        Ok(idx)
+    }
+
+    /// Execute with given input literals; returns the flattened output
+    /// tuple (aot.py lowers with return_tuple=True).
+    pub fn run(&self, name: &str, inputs: &[xla::Literal]) -> Result<Vec<xla::Literal>> {
+        let idx = self.exe_index(name)?;
+        let exes = self.exes.lock().unwrap();
+        let result = exes[idx]
+            .execute::<xla::Literal>(inputs)
+            .map_err(|e| anyhow!("execute {name}: {e:?}"))?;
+        let lit = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch {name}: {e:?}"))?;
+        lit.to_tuple().map_err(|e| anyhow!("untuple {name}: {e:?}"))
+    }
+
+    /// Random inputs matching the artifact's manifest specs.
+    pub fn random_inputs(&self, name: &str, rng: &mut Pcg64) -> Result<Vec<xla::Literal>> {
+        let meta = self.meta(name).ok_or_else(|| anyhow!("unknown artifact {name}"))?;
+        meta.inputs.iter().map(|spec| random_literal(spec, rng)).collect()
+    }
+
+    /// Median wall-clock seconds per execution (after warmup) — the paper's
+    /// "5 warmup + N timed runs" protocol (§5.1).
+    pub fn measure(&self, name: &str, warmup: usize, runs: usize) -> Result<f64> {
+        let mut rng = Pcg64::new(0xCFB);
+        let inputs = self.random_inputs(name, &mut rng)?;
+        for _ in 0..warmup {
+            self.run(name, &inputs)?;
+        }
+        let mut samples = Vec::with_capacity(runs);
+        for _ in 0..runs {
+            let t0 = Instant::now();
+            self.run(name, &inputs)?;
+            samples.push(t0.elapsed().as_secs_f64());
+        }
+        Ok(stats::median(&samples))
+    }
+
+    /// Fit the compute-efficiency curve from the calib_matmul_* artifacts:
+    /// measure achieved flops/s per shape on the real PJRT backend, fit
+    /// `1/eff ≈ a + b/flops` (the saturating-efficiency model), and map the
+    /// fitted saturation point onto the target platform's peak.
+    pub fn calibrate_compute(&self, platform: &Platform) -> Result<ComputeModel> {
+        let mut points: Vec<(f64, f64)> = Vec::new(); // (flops, seconds)
+        for meta in self.manifest.iter().filter(|m| m.kind == "calib_matmul") {
+            let flops = meta
+                .meta_f64("flops")
+                .context("calib_matmul missing flops meta")?;
+            let secs = self.measure(&meta.name, 2, 3)?;
+            points.push((flops, secs));
+        }
+        if points.len() < 4 {
+            return Ok(ComputeModel::for_platform(platform));
+        }
+        let rates: Vec<f64> = points.iter().map(|(f, s)| f / s).collect();
+        let max_rate = rates.iter().cloned().fold(0.0, f64::max);
+        // 1/eff_rel = a + b / flops  ⇒  sat = b/a
+        let xs: Vec<f64> = points.iter().map(|(f, _)| 1.0 / f).collect();
+        let ys: Vec<f64> = rates.iter().map(|r| max_rate / r.max(1.0)).collect();
+        let (b, a) = stats::linfit(&xs, &ys);
+        let sat = if a > 1e-9 { (b / a).clamp(1e6, 5e10) } else { 5e8 };
+        let mut cm = ComputeModel::for_platform(platform);
+        cm.sat_flops = sat;
+        Ok(cm)
+    }
+}
+
+/// Build a random literal for a tensor spec (normal f32, uniform i32).
+pub fn random_literal(spec: &TensorSpec, rng: &mut Pcg64) -> Result<xla::Literal> {
+    let n: usize = spec.shape.iter().product::<usize>().max(1);
+    let dims: Vec<i64> = spec.shape.iter().map(|&d| d as i64).collect();
+    let lit = match spec.dtype.as_str() {
+        "float32" => {
+            let data: Vec<f32> = (0..n).map(|_| rng.normal() as f32 * 0.02).collect();
+            xla::Literal::vec1(&data)
+        }
+        "int32" => {
+            // token-ish: bounded by a safe small vocab unless spec says more
+            let hi = 256u64;
+            let data: Vec<i32> = (0..n).map(|_| rng.below(hi) as i32).collect();
+            xla::Literal::vec1(&data)
+        }
+        other => return Err(anyhow!("unsupported dtype {other}")),
+    };
+    lit.reshape(&dims).map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+/// Build a literal from explicit f32 data.
+pub fn literal_f32(data: &[f32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+pub fn literal_i32(data: &[i32], shape: &[usize]) -> Result<xla::Literal> {
+    let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+    xla::Literal::vec1(data)
+        .reshape(&dims)
+        .map_err(|e| anyhow!("reshape: {e:?}"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn runtime() -> Option<Runtime> {
+        // integration tests need `make artifacts` to have run
+        Runtime::open("artifacts").ok()
+    }
+
+    #[test]
+    fn quickstart_round_trip() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        let mut rng = Pcg64::new(7);
+        let inputs = rt.random_inputs("quickstart", &mut rng).unwrap();
+        let out = rt.run("quickstart", &inputs).unwrap();
+        assert_eq!(out.len(), 1);
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert!(v.iter().all(|x| x.is_finite()));
+    }
+
+    #[test]
+    fn calib_matmul_measures_positive() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let t = rt.measure("calib_matmul_256x256x256", 1, 2).unwrap();
+        assert!(t > 0.0 && t < 1.0, "t = {t}");
+    }
+
+    #[test]
+    fn calibration_produces_sane_model() {
+        let Some(rt) = runtime() else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        let p = Platform::a100_pcie(4);
+        let cm = rt.calibrate_compute(&p).unwrap();
+        assert!(cm.sat_flops >= 1e6 && cm.sat_flops <= 5e10, "{}", cm.sat_flops);
+        assert_eq!(cm.peak_tflops, p.peak_tflops);
+    }
+}

@@ -1,0 +1,158 @@
+//! Segment fingerprints (paper §4.1, Fig. 6): the fine-grained data
+//! dependency graph of tensor-contraction operators, encoded canonically.
+//!
+//! Two segments with equal fingerprints have (a) the same parallel space —
+//! entry signatures determine the strategies — and (b) the same
+//! communication behaviour under equal configurations — the composed affine
+//! dependencies between consecutive contractions determine where reshards
+//! appear. Trivial data-reorganization differences do NOT change the
+//! fingerprint (Fig. 6's point), because only dependency *classes*
+//! (point/block/all/free) are encoded, not the op lists.
+
+use std::fmt::Write as _;
+
+use crate::affine::{compose, op_dim_map, DimDep, DimMap};
+use crate::graph::{Graph, OpId, OpKind};
+use crate::pblock::BlockSet;
+
+/// Canonical fingerprint of a run of blocks.
+pub fn segment_fingerprint(g: &Graph, bs: &BlockSet, blocks: &[usize]) -> String {
+    let mut s = String::new();
+    for (i, &b) in blocks.iter().enumerate() {
+        let blk = &bs.blocks[b];
+        entry_signature(g, blk.entry, &mut s);
+        // strategy labels are part of the parallel space
+        let _ = write!(s, "[{}]", blk.strategies.iter().map(|st| st.label.as_str()).collect::<Vec<_>>().join(","));
+        if i + 1 < blocks.len() {
+            let next = &bs.blocks[blocks[i + 1]];
+            let dep = entry_dependency(g, blk.entry, next.entry);
+            let _ = write!(s, "={}=>", dep);
+        }
+    }
+    s
+}
+
+/// Entry contraction signature: dot structure + operand shapes.
+pub fn entry_signature_str(g: &Graph, entry: OpId, out: &mut String) {
+    entry_signature(g, entry, out)
+}
+
+fn entry_signature(g: &Graph, entry: OpId, out: &mut String) {
+    let op = &g.ops[entry];
+    if let OpKind::Dot(d) = &op.kind {
+        let l = g.shape(op.inputs[0]);
+        let r = g.shape(op.inputs[1]);
+        let _ = write!(out, "dot{}({l:?}x{r:?})", d.batch);
+    } else {
+        let _ = write!(out, "{:?}", op.kind);
+    }
+}
+
+/// Composed affine dependency classes from `from`'s output to `to`'s lhs
+/// input (the fingerprint edges of Fig. 6). Walks producer chains of `to`'s
+/// inputs backwards through non-contraction ops; encodes each consumer dim
+/// as P(oint)/B(lock)/A(ll)/F(ree)/S(plit)/M(erge).
+pub fn entry_dependency(g: &Graph, from: OpId, to: OpId) -> String {
+    for (idx, _) in g.ops[to].inputs.iter().enumerate() {
+        if let Some(map) = path_map(g, g.ops[to].inputs[idx], from, 0) {
+            // prepend the to-op's own dependency on that input
+            let first = op_dim_map(g, to, idx);
+            let total = compose(&first, &map);
+            return encode(&total);
+        }
+    }
+    "-".into()
+}
+
+/// DimMap from tensor `t`'s dims to `target`'s output dims, composed along
+/// producer chains (None if `target` unreachable without crossing another
+/// contraction).
+fn path_map(g: &Graph, t: OpId, target: OpId, depth: usize) -> Option<DimMap> {
+    if t == target {
+        return Some(DimMap::identity(g.shape(t).len()));
+    }
+    if depth > 24 {
+        return None;
+    }
+    let op = &g.ops[t];
+    if op.kind.is_contraction() || op.inputs.is_empty() {
+        return None;
+    }
+    for (idx, &inp) in op.inputs.iter().enumerate() {
+        if let Some(inner) = path_map(g, inp, target, depth + 1) {
+            let m = op_dim_map(g, t, idx);
+            return Some(compose(&m, &inner));
+        }
+    }
+    None
+}
+
+fn encode(m: &DimMap) -> String {
+    m.deps
+        .iter()
+        .map(|d| match d {
+            DimDep::Point { .. } => 'P',
+            DimDep::Block { .. } => 'B',
+            DimDep::All { .. } => 'A',
+            DimDep::Free => 'F',
+            DimDep::SplitHi { .. } => 'S',
+            DimDep::SplitLo { .. } => 's',
+            DimDep::Merge { .. } => 'M',
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_training, ModelCfg};
+    use crate::pblock::build_parallel_blocks;
+
+    #[test]
+    fn equal_layers_equal_fingerprints() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(3);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        // per-layer block quadruples must fingerprint-match
+        let l0: Vec<usize> = (0..bs.blocks.len())
+            .filter(|&b| g.ops[bs.blocks[b].entry].name.starts_with("l0/"))
+            .collect();
+        let l1: Vec<usize> = (0..bs.blocks.len())
+            .filter(|&b| g.ops[bs.blocks[b].entry].name.starts_with("l1/"))
+            .collect();
+        assert_eq!(l0.len(), l1.len());
+        assert_eq!(
+            segment_fingerprint(&g, &bs, &l0),
+            segment_fingerprint(&g, &bs, &l1)
+        );
+    }
+
+    #[test]
+    fn moe_layer_fingerprint_differs_from_dense() {
+        let cfg = ModelCfg::preset("moe-tiny").with_layers(2);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 2);
+        let l0: Vec<usize> = (0..bs.blocks.len())
+            .filter(|&b| g.ops[bs.blocks[b].entry].name.starts_with("l0/"))
+            .collect();
+        let l1: Vec<usize> = (0..bs.blocks.len())
+            .filter(|&b| g.ops[bs.blocks[b].entry].name.starts_with("l1/"))
+            .collect();
+        assert_ne!(
+            segment_fingerprint(&g, &bs, &l0),
+            segment_fingerprint(&g, &bs, &l1)
+        );
+    }
+
+    #[test]
+    fn entry_dependency_finds_path() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(1);
+        let g = build_training(&cfg);
+        let w1 = g.ops.iter().find(|o| o.name == "l0/mlp/fc1").unwrap().id;
+        let w2 = g.ops.iter().find(|o| o.name == "l0/mlp/fc2").unwrap().id;
+        let dep = entry_dependency(&g, w1, w2);
+        // fc2's output: M dim pointwise on fc1's output; N dim sweeps the
+        // contracted lhs K — "PA"
+        assert_eq!(dep, "PA", "{dep}");
+    }
+}

@@ -1,0 +1,367 @@
+//! Model-segment extraction (paper §4.1).
+//!
+//! The ParallelBlock chain is cut into segments at *narrow* boundaries —
+//! points where exactly one tensor crosses between the prefix and suffix of
+//! the chain (layer boundaries: only the residual stream crosses; intra-
+//! layer boundaries carry ≥ 2 live tensors). Segments are then matched by
+//! *fingerprint*: the fine-grained data-dependency structure of their
+//! tensor-contraction entries (composed affine dependency classes between
+//! consecutive entries + entry signatures + member histograms). Instances
+//! with equal fingerprints share one profile (§4.2) — this is what makes
+//! CFP's search overhead independent of model depth (§5.5).
+
+pub mod fingerprint;
+
+use crate::graph::{Graph, Role};
+use crate::pblock::BlockSet;
+
+pub use fingerprint::segment_fingerprint;
+
+/// A segment instance: a contiguous run of ParallelBlocks.
+#[derive(Clone, Debug)]
+pub struct SegmentInstance {
+    /// index into `SegmentSet::unique`
+    pub unique_id: usize,
+    /// block ids (ascending chain order)
+    pub blocks: Vec<usize>,
+    /// op-id range `[fwd_start, fwd_end)` of forward ops owned by this
+    /// segment (blocks + orphan ops between them)
+    pub fwd_range: (usize, usize),
+}
+
+/// A unique segment (distinct fingerprint).
+#[derive(Clone, Debug)]
+pub struct UniqueSegment {
+    pub id: usize,
+    pub fingerprint: String,
+    /// representative instance index
+    pub rep: usize,
+    /// number of instances sharing this fingerprint
+    pub count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct SegmentSet {
+    pub instances: Vec<SegmentInstance>,
+    pub unique: Vec<UniqueSegment>,
+}
+
+impl SegmentSet {
+    pub fn num_unique(&self) -> usize {
+        self.unique.len()
+    }
+
+    /// op → owning segment instance (fwd via range; bwd via grad_of; opt via
+    /// the updated param's consumer segment).
+    pub fn op_to_instance(&self, g: &Graph) -> Vec<usize> {
+        let n = g.ops.len();
+        let mut seg = vec![0usize; n];
+        for (si, inst) in self.instances.iter().enumerate() {
+            for o in inst.fwd_range.0..inst.fwd_range.1.min(n) {
+                seg[o] = si;
+            }
+        }
+        // params/constants dragged to their first consumer's segment
+        let users = g.users();
+        for op in &g.ops {
+            if op.role == Role::Fwd && op.inputs.is_empty() {
+                if let Some(&u) = users[op.id].first() {
+                    seg[op.id] = seg[u];
+                }
+            }
+        }
+        // bwd ops follow their forward origin; opt ops follow their grad
+        for op in &g.ops {
+            match op.role {
+                Role::Bwd => {
+                    if let Some(f) = op.grad_of {
+                        seg[op.id] = seg[f];
+                    }
+                }
+                Role::Opt => {
+                    if let Some(&i) = op.inputs.first() {
+                        seg[op.id] = seg[i];
+                    }
+                }
+                Role::Fwd => {}
+            }
+        }
+        seg
+    }
+}
+
+/// Minimum blocks per segment — a dense transformer layer's 4 ParallelBlocks
+/// (paper §5.5); segments are never split below this, so the profiled unit
+/// stays at layer granularity (81 joint configs per dense segment).
+pub const MIN_SEG_BLOCKS: usize = 4;
+
+/// Cut the block chain into segments and deduplicate by fingerprint.
+///
+/// Stage 1: detect the repetition period of the block-signature sequence
+/// (the "ParallelBlock sequence matching" of §4.1) and chunk the periodic
+/// region into aligned period-sized segments.
+/// Stage 2: split chunks at internal *narrow* boundaries (≤1 crossing
+/// activation tensor — layer boundaries) while every piece keeps
+/// ≥ [`MIN_SEG_BLOCKS`] blocks. This separates alternating MoE/dense layers
+/// into their own unique segments (paper §5.5) without fragmenting a dense
+/// layer below the 4-block/81-config granularity.
+pub fn extract_segments(g: &Graph, bs: &BlockSet) -> SegmentSet {
+    let chain = block_chain(bs);
+    let n = chain.len();
+    let sig: Vec<String> = chain
+        .iter()
+        .map(|&b| {
+            let blk = &bs.blocks[b];
+            let mut s = String::new();
+            fingerprint::entry_signature_str(g, blk.entry, &mut s);
+            for st in &blk.strategies {
+                s.push_str(&st.label);
+            }
+            s
+        })
+        .collect();
+
+    // stage 1: smallest period covering a maximal aligned region
+    let mut chunks: Vec<Vec<usize>> = Vec::new();
+    let mut chosen: Option<(usize, usize, usize)> = None; // (p, a, b)
+    for p in 1..=12.min(n.saturating_sub(1)) {
+        // maximal [a, b) with sig[j] == sig[j+p] for all j in [a, b-p)
+        let mut a = 0;
+        while a + p < n && sig[a] != sig[a + p] {
+            a += 1;
+        }
+        let mut b = a;
+        while b + p < n && sig[b] == sig[b + p] {
+            b += 1;
+        }
+        let span = (b + p).saturating_sub(a);
+        if b > a && span >= 2 * p {
+            chosen = Some((p, a, b + p));
+            break; // smallest period wins
+        }
+    }
+    match chosen {
+        Some((p, a, b)) => {
+            if a > 0 {
+                chunks.push(chain[..a].to_vec());
+            }
+            let mut i = a;
+            while i + p <= b {
+                chunks.push(chain[i..i + p].to_vec());
+                i += p;
+            }
+            if i < n {
+                chunks.push(chain[i..].to_vec());
+            }
+        }
+        None => chunks.push(chain.clone()),
+    }
+
+    // stage 2: split at internal narrow cuts, respecting MIN_SEG_BLOCKS
+    let cuts = narrow_boundaries(g, bs, &chain);
+    let mut pos_of: std::collections::BTreeMap<usize, usize> = Default::default();
+    for (pos, &b) in chain.iter().enumerate() {
+        pos_of.insert(b, pos);
+    }
+    let mut instances = Vec::new();
+    for chunk in chunks {
+        let start_pos = pos_of[&chunk[0]];
+        let mut pieces: Vec<Vec<usize>> = vec![Vec::new()];
+        for (off, &b) in chunk.iter().enumerate() {
+            let pos = start_pos + off;
+            let last_len = pieces.last().unwrap().len();
+            if off > 0
+                && cuts.contains(&pos)
+                && last_len >= MIN_SEG_BLOCKS
+                && chunk.len() - off >= MIN_SEG_BLOCKS
+            {
+                pieces.push(Vec::new());
+            }
+            pieces.last_mut().unwrap().push(b);
+        }
+        for piece in pieces {
+            if !piece.is_empty() {
+                instances.push(SegmentInstance {
+                    unique_id: usize::MAX,
+                    blocks: piece,
+                    fwd_range: (0, 0),
+                });
+            }
+        }
+    }
+
+    // forward op-id ranges: segment k owns ops from its first block's first
+    // op (or 0 for the first segment) up to the next segment's start.
+    let mut starts: Vec<usize> = instances
+        .iter()
+        .map(|inst| inst.blocks.iter().map(|&b| bs.blocks[b].ops[0]).min().unwrap())
+        .collect();
+    if !starts.is_empty() {
+        starts[0] = 0;
+    }
+    let fwd_end = g
+        .ops
+        .iter()
+        .filter(|o| o.role == Role::Fwd)
+        .map(|o| o.id + 1)
+        .max()
+        .unwrap_or(0);
+    for i in 0..instances.len() {
+        let end = if i + 1 < instances.len() { starts[i + 1] } else { fwd_end };
+        instances[i].fwd_range = (starts[i], end);
+    }
+
+    // fingerprint-based dedup. The block fingerprint is extended with the
+    // count of orphan (non-block) forward ops the instance owns: the first
+    // hidden layer owns the embedding prefix and therefore profiles
+    // differently from subsequent layers — the paper found the same split
+    // ("one unique segment for the first hidden layer and another for each
+    // subsequent hidden layer", §5.5).
+    let in_block: Vec<bool> = {
+        let mut v = vec![false; g.ops.len()];
+        for blk in &bs.blocks {
+            for &o in &blk.ops {
+                v[o] = true;
+            }
+        }
+        v
+    };
+    let mut unique: Vec<UniqueSegment> = Vec::new();
+    for i in 0..instances.len() {
+        let orphans = (instances[i].fwd_range.0..instances[i].fwd_range.1.min(g.ops.len()))
+            .filter(|&o| !in_block[o] && g.ops[o].role == Role::Fwd && !g.ops[o].inputs.is_empty())
+            .count();
+        let fp = format!(
+            "{}|orphans:{orphans}",
+            segment_fingerprint(g, bs, &instances[i].blocks)
+        );
+        match unique.iter().position(|u| u.fingerprint == fp) {
+            Some(uid) => {
+                instances[i].unique_id = uid;
+                unique[uid].count += 1;
+            }
+            None => {
+                let uid = unique.len();
+                unique.push(UniqueSegment { id: uid, fingerprint: fp, rep: i, count: 1 });
+                instances[i].unique_id = uid;
+            }
+        }
+    }
+    SegmentSet { instances, unique }
+}
+
+/// Blocks in chain order (by entry op id — builder order is topo order).
+pub fn block_chain(bs: &BlockSet) -> Vec<usize> {
+    let mut chain: Vec<usize> = (0..bs.blocks.len()).collect();
+    chain.sort_by_key(|&b| bs.blocks[b].entry);
+    chain
+}
+
+/// Boundaries (chain positions `i` meaning "cut before chain[i]") where at
+/// most one activation tensor crosses the cut.
+fn narrow_boundaries(g: &Graph, bs: &BlockSet, chain: &[usize]) -> Vec<usize> {
+    let users = g.users();
+    // cut position i ⇒ boundary right after the last member op of blocks
+    // chain[0..i]; orphan lead-in ops (norm chains feeding block i) belong
+    // to the segment of block i.
+    let mut prev_end = 0usize;
+    let mut cuts = Vec::new();
+    for i in 1..chain.len() {
+        prev_end = prev_end.max(*bs.blocks[chain[i - 1]].ops.last().unwrap());
+        let boundary = prev_end + 1;
+        let mut crossing = 0usize;
+        for op in &g.ops[..boundary.min(g.ops.len())] {
+            if op.role != Role::Fwd || op.inputs.is_empty() {
+                continue;
+            }
+            let crosses = users[op.id]
+                .iter()
+                .any(|&u| u >= boundary && g.ops[u].role == Role::Fwd);
+            if crosses {
+                crossing += 1;
+            }
+        }
+        if crossing <= 1 {
+            cuts.push(i);
+        }
+    }
+    cuts
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_training, ModelCfg};
+    use crate::pblock::build_parallel_blocks;
+
+    fn segs(preset: &str, layers: usize) -> (Graph, BlockSet, SegmentSet) {
+        let cfg = ModelCfg::preset(preset).with_layers(layers);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        (g, bs, ss)
+    }
+
+    #[test]
+    fn gpt_layers_become_repeated_segments() {
+        let (_, _, ss) = segs("gpt-tiny", 4);
+        let layer_seg = ss.unique.iter().map(|u| u.count).max().unwrap();
+        assert!(layer_seg >= 3, "repeated layer segments: {layer_seg}");
+        let (_, _, ss8) = segs("gpt-tiny", 8);
+        assert_eq!(
+            ss.num_unique(),
+            ss8.num_unique(),
+            "unique segments independent of depth: {} vs {}",
+            ss.num_unique(),
+            ss8.num_unique()
+        );
+    }
+
+    #[test]
+    fn segments_cover_all_blocks_exactly_once() {
+        let (_, bs, ss) = segs("gpt-tiny", 4);
+        let mut seen = vec![false; bs.blocks.len()];
+        for inst in &ss.instances {
+            for &b in &inst.blocks {
+                assert!(!seen[b], "block {b} in two segments");
+                seen[b] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "all blocks covered");
+    }
+
+    #[test]
+    fn moe_alternating_layers_get_distinct_segments() {
+        // 6 layers: dense-l0 (owns embedding prefix → own unique),
+        // moe ×3, dense ×2, head — both layer flavours repeat
+        let (_, _, ss) = segs("moe-tiny", 6);
+        assert!(ss.num_unique() >= 4, "unique: {}", ss.num_unique());
+        let counts: Vec<usize> = ss.unique.iter().map(|u| u.count).collect();
+        assert!(counts.iter().filter(|&&c| c >= 2).count() >= 2, "{counts:?}");
+    }
+
+    #[test]
+    fn op_to_instance_total() {
+        let (g, _, ss) = segs("gpt-tiny", 2);
+        let m = ss.op_to_instance(&g);
+        assert_eq!(m.len(), g.ops.len());
+        for si in 0..ss.instances.len() {
+            assert!(m.iter().any(|&s| s == si), "segment {si} owns no ops");
+        }
+    }
+
+    #[test]
+    fn fingerprints_differ_for_different_shapes() {
+        let cfg_a = ModelCfg::preset("gpt-tiny").with_layers(2);
+        let cfg_b = ModelCfg::preset("gpt-tiny").with_layers(2).with_batch(8);
+        let ga = build_training(&cfg_a);
+        let gb = build_training(&cfg_b);
+        let ba = build_parallel_blocks(&ga, 4);
+        let bb = build_parallel_blocks(&gb, 4);
+        let sa = extract_segments(&ga, &ba);
+        let sb = extract_segments(&gb, &bb);
+        let fa = &sa.unique.iter().map(|u| u.fingerprint.clone()).collect::<Vec<_>>();
+        let fb = &sb.unique.iter().map(|u| u.fingerprint.clone()).collect::<Vec<_>>();
+        assert_ne!(fa, fb);
+    }
+}

@@ -1,0 +1,22 @@
+//! SPMD lowering: turn (graph, plan) into a per-device program with
+//! explicit communication kernels — the "downstream compilation" whose
+//! behaviour symbolic cost models mispredict (paper §2.2).
+//!
+//! The mismatch sources are implemented for real here:
+//!  * gradient-bucket fusion (many small AllReduces → few big ones) —
+//!    why DP beats its volume-based estimate;
+//!  * AllReduce→ReduceScatter rewriting when the consumer is sharded —
+//!    why Alpa overestimated the MoE resharding cost 8× (§5.7);
+//!  * RNG device restriction (replicated random tensors cost an AllReduce) —
+//!    why TP lost to DP in Fig. 2 despite lower theoretical volume;
+//!  * AllToAll dispatch to SendRecv kernels (priced by the cluster model,
+//!    ruinous on PCIe) — why expert parallelism loses there.
+
+pub mod lower;
+pub mod passes;
+pub mod plan;
+pub mod program;
+
+pub use lower::{lower, lower_filtered};
+pub use plan::{GlobalPlan, Mesh, ShardState};
+pub use program::{CollKind, Instr, SpmdProgram};

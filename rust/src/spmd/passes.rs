@@ -1,0 +1,204 @@
+//! Downstream optimization passes over lowered SPMD programs — the
+//! compiler behaviours that decouple communication *volume* from
+//! communication *time* (paper §2.2, §5.3).
+
+use super::program::{CollKind, Instr, SpmdProgram};
+
+/// Gradient bucketing: fuse same-kind grad-sync collectives into buckets of
+/// up to `bucket_bytes`. This is XLA/DDP's gradient aggregation ("multiple
+/// parameters synchronized and aggregated to a single large tensor ...
+/// communicated using a single All-Reduce kernel with higher efficiency",
+/// §2.2). Volume is unchanged; kernel count (and so launch/latency cost)
+/// collapses.
+pub fn bucket_gradients(prog: &mut SpmdProgram, bucket_bytes: u64) {
+    let mut out: Vec<Instr> = Vec::with_capacity(prog.instrs.len());
+    let mut pending: Vec<(CollKind, u64, usize)> = Vec::new(); // kind, bytes, tensor
+
+    let flush = |pending: &mut Vec<(CollKind, u64, usize)>, out: &mut Vec<Instr>| {
+        if pending.is_empty() {
+            return;
+        }
+        // merge per kind, preserving first-seen order
+        let mut kinds: Vec<CollKind> = Vec::new();
+        for (k, _, _) in pending.iter() {
+            if !kinds.contains(k) {
+                kinds.push(*k);
+            }
+        }
+        for k in kinds {
+            let bytes: u64 = pending.iter().filter(|(pk, _, _)| *pk == k).map(|(_, b, _)| b).sum();
+            let tensor = pending.iter().find(|(pk, _, _)| *pk == k).unwrap().2;
+            out.push(Instr::Coll { kind: k, bytes, grad_sync: true, tensor });
+        }
+        pending.clear();
+    };
+
+    let mut pending_bytes = 0u64;
+    for instr in prog.instrs.drain(..) {
+        match instr {
+            Instr::Coll { kind, bytes, grad_sync: true, tensor } => {
+                pending.push((kind, bytes, tensor));
+                pending_bytes += bytes;
+                if pending_bytes >= bucket_bytes {
+                    flush(&mut pending, &mut out);
+                    pending_bytes = 0;
+                }
+            }
+            // compute between grad syncs doesn't force a flush — buckets
+            // accumulate across the optimizer region as DDP does
+            other => out.push(other),
+        }
+    }
+    flush(&mut pending, &mut out);
+    prog.instrs = out;
+}
+
+/// Same bucketing for the inter-node axis.
+pub fn bucket_gradients_inter(prog: &mut SpmdProgram, bucket_bytes: u64) {
+    let mut out: Vec<Instr> = Vec::with_capacity(prog.instrs.len());
+    let mut pending_bytes = 0u64;
+    let mut pending: Vec<(CollKind, u64, usize)> = Vec::new();
+    let flush = |pending: &mut Vec<(CollKind, u64, usize)>, out: &mut Vec<Instr>| {
+        if let Some(&(kind, _, tensor)) = pending.first() {
+            let bytes: u64 = pending.iter().map(|(_, b, _)| b).sum();
+            out.push(Instr::CollInter { kind, bytes, grad_sync: true, tensor });
+            pending.clear();
+        }
+    };
+    for instr in prog.instrs.drain(..) {
+        match instr {
+            Instr::CollInter { kind, bytes, grad_sync: true, tensor } => {
+                pending.push((kind, bytes, tensor));
+                pending_bytes += bytes;
+                if pending_bytes >= bucket_bytes {
+                    flush(&mut pending, &mut out);
+                    pending_bytes = 0;
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    flush(&mut pending, &mut out);
+    prog.instrs = out;
+}
+
+/// AllToAll → SendRecv dispatch (what NCCL does on PCIe-only hosts;
+/// §5.7 "All-to-All operations would be dispatched to ncclSendRecv
+/// kernels, which are highly inefficient on PCIe platforms").
+pub fn dispatch_alltoall_sendrecv(prog: &mut SpmdProgram, parts: usize) {
+    let mut out = Vec::with_capacity(prog.instrs.len());
+    for instr in prog.instrs.drain(..) {
+        match instr {
+            Instr::Coll { kind: CollKind::AllToAll, bytes, grad_sync, tensor } => {
+                // n-1 pairwise exchanges of bytes/n each
+                for _ in 0..parts.saturating_sub(1) {
+                    out.push(Instr::Coll {
+                        kind: CollKind::SendRecv,
+                        bytes: bytes / parts as u64,
+                        grad_sync,
+                        tensor,
+                    });
+                }
+            }
+            other => out.push(other),
+        }
+    }
+    prog.instrs = out;
+}
+
+/// The *symbolic* (Alpa-view) communication volume of a program: what a
+/// volume-based cost model believes before downstream optimization —
+/// ReduceScatter rewrites charged as full AllReduces (the 8× MoE
+/// overestimate of §5.7) and RNG replication syncs invisible (charged 0).
+pub fn symbolic_volume(prog: &SpmdProgram, g: &crate::graph::Graph) -> u64 {
+    let mut vol = 0u64;
+    for i in &prog.instrs {
+        match i {
+            Instr::Coll { kind, bytes, grad_sync, tensor } => {
+                let rng_sync = !grad_sync
+                    && matches!(g.ops[*tensor].kind, crate::graph::OpKind::Rng);
+                if rng_sync {
+                    continue; // invisible to the symbolic model
+                }
+                vol += match kind {
+                    // the symbolic model prices the pre-rewrite AllReduce
+                    CollKind::ReduceScatter => bytes * 2,
+                    _ => *bytes,
+                };
+            }
+            Instr::CollInter { bytes, .. } => vol += bytes,
+            Instr::Compute { .. } => {}
+        }
+    }
+    vol
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn grad_ar(bytes: u64, tensor: usize) -> Instr {
+        Instr::Coll { kind: CollKind::AllReduce, bytes, grad_sync: true, tensor }
+    }
+
+    #[test]
+    fn bucketing_reduces_kernel_count_not_volume() {
+        let mut prog = SpmdProgram {
+            instrs: (0..20).map(|i| grad_ar(1 << 20, i)).collect(),
+            ..Default::default()
+        };
+        let vol_before = prog.comm_volume();
+        bucket_gradients(&mut prog, 8 << 20);
+        assert_eq!(prog.comm_volume(), vol_before);
+        assert!(prog.comm_kernel_count() <= 3, "got {}", prog.comm_kernel_count());
+    }
+
+    #[test]
+    fn bucketing_respects_bucket_size() {
+        let mut prog = SpmdProgram {
+            instrs: (0..4).map(|i| grad_ar(10 << 20, i)).collect(),
+            ..Default::default()
+        };
+        bucket_gradients(&mut prog, 16 << 20);
+        // 40MB in 16MB buckets → 2-3 kernels
+        assert!(prog.comm_kernel_count() >= 2);
+    }
+
+    #[test]
+    fn alltoall_dispatch_expands_to_pairwise() {
+        let mut prog = SpmdProgram {
+            instrs: vec![Instr::Coll {
+                kind: CollKind::AllToAll,
+                bytes: 4000,
+                grad_sync: false,
+                tensor: 0,
+            }],
+            ..Default::default()
+        };
+        dispatch_alltoall_sendrecv(&mut prog, 4);
+        assert_eq!(prog.comm_kernel_count(), 3);
+        assert_eq!(prog.comm_volume(), 3000);
+        assert!(prog
+            .instrs
+            .iter()
+            .all(|i| matches!(i, Instr::Coll { kind: CollKind::SendRecv, .. })));
+    }
+
+    #[test]
+    fn bucketing_preserves_non_grad_collectives() {
+        let mut prog = SpmdProgram {
+            instrs: vec![
+                Instr::Coll { kind: CollKind::AllGather, bytes: 7, grad_sync: false, tensor: 0 },
+                grad_ar(5, 1),
+                grad_ar(5, 2),
+            ],
+            ..Default::default()
+        };
+        bucket_gradients(&mut prog, 1 << 30);
+        assert_eq!(prog.comm_volume(), 17);
+        assert!(matches!(
+            prog.instrs[0],
+            Instr::Coll { kind: CollKind::AllGather, .. }
+        ));
+    }
+}

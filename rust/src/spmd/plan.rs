@@ -1,0 +1,136 @@
+//! Global parallelization plans and device meshes.
+
+use std::collections::HashMap;
+
+use crate::graph::{Graph, OpId};
+use crate::pblock::{BlockSet, Sharding};
+
+/// Sharding state of a tensor during lowering. `Partial` means every device
+/// holds a same-shaped partial sum (post K-split dot / sharded reduce).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum ShardState {
+    Split(usize),
+    Replicated,
+    Partial,
+}
+
+impl From<Sharding> for ShardState {
+    fn from(s: Sharding) -> ShardState {
+        match s {
+            Sharding::Split(d) => ShardState::Split(d),
+            Sharding::Replicated => ShardState::Replicated,
+        }
+    }
+}
+
+/// Device mesh. `intra` devices participate in intra-operator parallelism
+/// (the ParallelBlock strategies); `nodes` replicas run data parallelism
+/// across node boundaries (paper §5.6 case 1 / 2D mesh with the batch dim
+/// pinned to the outer level).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Mesh {
+    pub intra: usize,
+    pub nodes: usize,
+}
+
+impl Mesh {
+    pub fn flat(intra: usize) -> Mesh {
+        Mesh { intra, nodes: 1 }
+    }
+
+    pub fn total(&self) -> usize {
+        self.intra * self.nodes
+    }
+}
+
+/// A full intra-operator parallelization plan: one strategy per
+/// ParallelBlock (+ the sharding seeds those strategies pin down).
+#[derive(Clone, Debug)]
+pub struct GlobalPlan {
+    /// strategy index per block id
+    pub choice: Vec<usize>,
+    pub mesh: Mesh,
+}
+
+impl GlobalPlan {
+    pub fn uniform(bs: &BlockSet, label: &str, mesh: Mesh) -> Option<GlobalPlan> {
+        let mut choice = Vec::with_capacity(bs.blocks.len());
+        for b in &bs.blocks {
+            let idx = b.strategies.iter().position(|s| s.label == label)?;
+            choice.push(idx);
+        }
+        Some(GlobalPlan { choice, mesh })
+    }
+
+    /// Data parallelism: every block picks its M/batch-split strategy
+    /// (PyTorch-DDP's implicit plan, §5).
+    pub fn data_parallel(bs: &BlockSet, mesh: Mesh) -> GlobalPlan {
+        let choice = bs
+            .blocks
+            .iter()
+            .map(|b| {
+                b.strategies
+                    .iter()
+                    .position(|s| s.label == "m")
+                    .unwrap_or(0)
+            })
+            .collect();
+        GlobalPlan { choice, mesh }
+    }
+
+    /// Seed sharding map: union of every chosen strategy's assignment.
+    /// Later assignments never conflict with earlier ones inside a block;
+    /// cross-block conflicts on shared tensors (Fig. 5c) resolve to the
+    /// first writer — the lowering inserts reshards for the others.
+    pub fn seed_shardings(&self, g: &Graph, bs: &BlockSet) -> HashMap<OpId, ShardState> {
+        let _ = g;
+        let mut seeds: HashMap<OpId, ShardState> = HashMap::new();
+        for (b, blk) in bs.blocks.iter().enumerate() {
+            let st = &blk.strategies[self.choice[b]];
+            for (&op, &sh) in &st.assignment {
+                seeds.entry(op).or_insert_with(|| sh.into());
+            }
+        }
+        seeds
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build_training, ModelCfg};
+    use crate::pblock::build_parallel_blocks;
+
+    #[test]
+    fn uniform_plans_exist_for_gpt() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(1);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        for label in ["m", "n", "k"] {
+            assert!(
+                GlobalPlan::uniform(&bs, label, Mesh::flat(4)).is_some(),
+                "no uniform {label} plan"
+            );
+        }
+    }
+
+    #[test]
+    fn seed_shardings_cover_block_members() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(1);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let plan = GlobalPlan::data_parallel(&bs, Mesh::flat(4));
+        let seeds = plan.seed_shardings(&g, &bs);
+        for blk in &bs.blocks {
+            for &m in &blk.ops {
+                assert!(seeds.contains_key(&m), "member {m} unseeded");
+            }
+        }
+    }
+
+    #[test]
+    fn mesh_totals() {
+        assert_eq!(Mesh { intra: 8, nodes: 2 }.total(), 16);
+        assert_eq!(Mesh::flat(4).total(), 4);
+    }
+}

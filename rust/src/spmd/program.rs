@@ -1,0 +1,123 @@
+//! The lowered per-device SPMD program: a schedule of compute and
+//! communication kernels (what XLA hands to the runtime after SPMD
+//! partitioning — §2.1's "ultimately compiled into a SPMD form").
+
+use crate::graph::OpId;
+
+/// Collective kinds the lowering emits. Bytes are *global tensor bytes*
+/// (the cluster model applies ring factors / hierarchy itself).
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum CollKind {
+    AllReduce,
+    AllGather,
+    ReduceScatter,
+    AllToAll,
+    Broadcast,
+    /// Pairwise send/recv chain — what AllToAll degenerates to on PCIe
+    /// (§5.7 "dispatched to ncclSendRecv kernels").
+    SendRecv,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Instr {
+    /// Local kernel: `flops`/`bytes` are per-device (already divided by the
+    /// sharding factor).
+    Compute {
+        op: OpId,
+        flops: u64,
+        bytes: u64,
+    },
+    /// Communication kernel over the intra-node group.
+    Coll {
+        kind: CollKind,
+        bytes: u64,
+        /// grad-sync collectives are bucketable (pass: bucket_gradients)
+        grad_sync: bool,
+        /// originating tensor (debug/bucketing identity)
+        tensor: OpId,
+    },
+    /// Inter-node collective (2D mesh outer axis).
+    CollInter {
+        kind: CollKind,
+        bytes: u64,
+        grad_sync: bool,
+        tensor: OpId,
+    },
+}
+
+impl Instr {
+    pub fn comm_bytes(&self) -> u64 {
+        match self {
+            Instr::Coll { bytes, .. } | Instr::CollInter { bytes, .. } => *bytes,
+            _ => 0,
+        }
+    }
+
+    pub fn is_comm(&self) -> bool {
+        !matches!(self, Instr::Compute { .. })
+    }
+}
+
+/// A lowered program plus its memory footprint.
+#[derive(Clone, Debug, Default)]
+pub struct SpmdProgram {
+    pub instrs: Vec<Instr>,
+    /// per-device parameter bytes
+    pub param_bytes: u64,
+    /// per-device gradient bytes
+    pub grad_bytes: u64,
+    /// per-device retained activation bytes (fwd outputs held for bwd)
+    pub act_bytes: u64,
+}
+
+impl SpmdProgram {
+    pub fn total_flops(&self) -> u64 {
+        self.instrs
+            .iter()
+            .map(|i| match i {
+                Instr::Compute { flops, .. } => *flops,
+                _ => 0,
+            })
+            .sum()
+    }
+
+    /// Theoretical communication volume (bytes moved, the quantity Alpa's
+    /// symbolic model minimizes — Fig. 1/9's x-axis).
+    pub fn comm_volume(&self) -> u64 {
+        self.instrs.iter().map(|i| i.comm_bytes()).sum()
+    }
+
+    pub fn comm_kernel_count(&self) -> usize {
+        self.instrs.iter().filter(|i| i.is_comm()).count()
+    }
+
+    /// Peak memory per device, with optimizer state factor (1.0 = SGD,
+    /// 3.0 ≈ Adam m+v+master) applied to params.
+    pub fn peak_memory(&self, opt_factor: f64) -> u64 {
+        let opt = (self.param_bytes as f64 * opt_factor) as u64;
+        self.param_bytes + self.grad_bytes + self.act_bytes + opt
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn volume_and_counts() {
+        let p = SpmdProgram {
+            instrs: vec![
+                Instr::Compute { op: 0, flops: 100, bytes: 8 },
+                Instr::Coll { kind: CollKind::AllReduce, bytes: 64, grad_sync: true, tensor: 1 },
+                Instr::CollInter { kind: CollKind::AllGather, bytes: 32, grad_sync: false, tensor: 2 },
+            ],
+            param_bytes: 10,
+            grad_bytes: 10,
+            act_bytes: 5,
+        };
+        assert_eq!(p.comm_volume(), 96);
+        assert_eq!(p.comm_kernel_count(), 2);
+        assert_eq!(p.total_flops(), 100);
+        assert_eq!(p.peak_memory(1.0), 10 + 10 + 5 + 10);
+    }
+}

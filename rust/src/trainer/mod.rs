@@ -1,0 +1,194 @@
+//! e2e training driver: runs the AOT-compiled train-step executable
+//! (python/compile/aot.py → artifacts/train_step_*.hlo.txt) on the PJRT
+//! CPU client from rust — the full three-layer stack with Python nowhere
+//! on the step path. Used by examples/train_e2e.rs; the loss curve it
+//! logs is recorded in EXPERIMENTS.md.
+
+use anyhow::{anyhow, Result};
+
+use crate::runtime::{literal_f32, literal_i32, Runtime, TensorSpec};
+use crate::util::Pcg64;
+
+pub struct Trainer<'rt> {
+    rt: &'rt Runtime,
+    artifact: String,
+    specs: Vec<TensorSpec>,
+    /// parameter leaf values (everything except tokens + lr inputs)
+    params: Vec<Vec<f32>>,
+    tokens_idx: usize,
+    lr_idx: usize,
+    vocab: usize,
+    seq: usize,
+    batch: usize,
+    rng: Pcg64,
+}
+
+impl<'rt> Trainer<'rt> {
+    pub fn new(rt: &'rt Runtime, artifact: &str, seed: u64) -> Result<Trainer<'rt>> {
+        let meta = rt
+            .meta(artifact)
+            .ok_or_else(|| anyhow!("artifact {artifact} not in manifest"))?
+            .clone();
+        let specs = meta.inputs.clone();
+        let tokens_idx = specs
+            .iter()
+            .position(|s| s.dtype == "int32")
+            .ok_or_else(|| anyhow!("no tokens input"))?;
+        let lr_idx = specs
+            .iter()
+            .position(|s| s.shape.is_empty() && s.dtype == "float32")
+            .ok_or_else(|| anyhow!("no lr input"))?;
+        let vocab = meta.meta_usize("vocab").unwrap_or(4096);
+        let seq = meta.meta_usize("seq").unwrap_or(64);
+        let batch = meta.meta_usize("batch").unwrap_or(8);
+
+        let mut rng = Pcg64::new(seed);
+        let params = specs
+            .iter()
+            .enumerate()
+            .map(|(i, s)| {
+                if i == tokens_idx || i == lr_idx {
+                    return Vec::new();
+                }
+                init_leaf(s, &mut rng)
+            })
+            .collect();
+
+        Ok(Trainer {
+            rt,
+            artifact: artifact.to_string(),
+            specs,
+            params,
+            tokens_idx,
+            lr_idx,
+            vocab,
+            seq,
+            batch,
+            rng,
+        })
+    }
+
+    pub fn num_params(&self) -> usize {
+        self.params.iter().map(|p| p.len()).sum()
+    }
+
+    /// Synthetic corpus: an affine bigram process with 10% noise — enough
+    /// structure that learning shows as a falling loss curve.
+    pub fn sample_batch(&mut self) -> Vec<i32> {
+        let mut out = Vec::with_capacity(self.batch * self.seq);
+        for _ in 0..self.batch {
+            let mut t = self.rng.below(self.vocab as u64) as i64;
+            for _ in 0..self.seq {
+                out.push(t as i32);
+                t = if self.rng.f64() < 0.1 {
+                    self.rng.below(self.vocab as u64) as i64
+                } else {
+                    (7 * t + 13) % self.vocab as i64
+                };
+            }
+        }
+        out
+    }
+
+    /// One SGD step; returns the loss.
+    pub fn step(&mut self, lr: f32) -> Result<f32> {
+        let tokens = self.sample_batch();
+        let mut inputs = Vec::with_capacity(self.specs.len());
+        for (i, spec) in self.specs.iter().enumerate() {
+            if i == self.tokens_idx {
+                inputs.push(literal_i32(&tokens, &spec.shape)?);
+            } else if i == self.lr_idx {
+                inputs.push(literal_f32(&[lr], &[])?);
+            } else {
+                inputs.push(literal_f32(&self.params[i], &spec.shape)?);
+            }
+        }
+        let outputs = self.rt.run(&self.artifact, &inputs)?;
+        // outputs: (loss, new_params...) in input-leaf order
+        let loss = outputs[0]
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss fetch: {e:?}"))?[0];
+        let mut oi = 1;
+        for i in 0..self.specs.len() {
+            if i == self.tokens_idx || i == self.lr_idx {
+                continue;
+            }
+            self.params[i] = outputs[oi]
+                .to_vec::<f32>()
+                .map_err(|e| anyhow!("param fetch: {e:?}"))?;
+            oi += 1;
+        }
+        Ok(loss)
+    }
+
+    /// Train for `steps`, returning the loss curve.
+    pub fn train(&mut self, steps: usize, lr: f32, log_every: usize) -> Result<Vec<f32>> {
+        let mut curve = Vec::with_capacity(steps);
+        let t0 = std::time::Instant::now();
+        for s in 0..steps {
+            let loss = self.step(lr)?;
+            curve.push(loss);
+            if log_every > 0 && (s % log_every == 0 || s + 1 == steps) {
+                println!(
+                    "step {s:>5}  loss {loss:.4}  ({:.2} s elapsed)",
+                    t0.elapsed().as_secs_f64()
+                );
+            }
+        }
+        Ok(curve)
+    }
+}
+
+/// Parameter init mirroring python's init_params: norm weights → 1.0,
+/// biases → 0.0, everything else N(0, 0.02).
+fn init_leaf(spec: &TensorSpec, rng: &mut Pcg64) -> Vec<f32> {
+    let n: usize = spec.shape.iter().product();
+    let name = &spec.name;
+    if name.contains("ln") && name.ends_with("_w']") || name.contains("lnf_w") {
+        return vec![1.0; n];
+    }
+    if name.ends_with("_b']") || name.contains("lnf_b") {
+        return vec![0.0; n];
+    }
+    (0..n).map(|_| rng.normal() as f32 * 0.02).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn trainer_loss_decreases_if_artifacts_present() {
+        let Ok(rt) = Runtime::open("artifacts") else {
+            eprintln!("skipping: no artifacts (run `make artifacts`)");
+            return;
+        };
+        if rt.meta("train_step_gpt").is_none() {
+            eprintln!("skipping: no train_step_gpt artifact");
+            return;
+        }
+        let mut tr = Trainer::new(&rt, "train_step_gpt", 42).unwrap();
+        let first = tr.step(0.05).unwrap();
+        let mut last = first;
+        for _ in 0..8 {
+            last = tr.step(0.05).unwrap();
+        }
+        assert!(last.is_finite() && first.is_finite());
+        assert!(last < first + 0.5, "loss diverged: {first} → {last}");
+    }
+
+    #[test]
+    fn synthetic_corpus_in_vocab_range() {
+        let Ok(rt) = Runtime::open("artifacts") else {
+            eprintln!("skipping: no artifacts");
+            return;
+        };
+        if rt.meta("train_step_gpt").is_none() {
+            return;
+        }
+        let mut tr = Trainer::new(&rt, "train_step_gpt", 1).unwrap();
+        let batch = tr.sample_batch();
+        assert_eq!(batch.len(), tr.batch * tr.seq);
+        assert!(batch.iter().all(|&t| t >= 0 && (t as usize) < tr.vocab));
+    }
+}

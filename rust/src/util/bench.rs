@@ -1,0 +1,101 @@
+//! Micro-benchmark harness (criterion is not in the vendor set).
+//!
+//! Each `rust/benches/*.rs` target sets `harness = false` and drives this:
+//! warmup, timed iterations until a budget, median/σ report, and the same
+//! rows/series printing the paper figures need.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u64,
+    pub median_ns: f64,
+    pub mean_ns: f64,
+    pub stddev_ns: f64,
+}
+
+impl BenchResult {
+    pub fn report(&self) {
+        println!(
+            "bench {:<48} {:>12} iters   median {:>12}   mean {:>12}  ±{}",
+            self.name,
+            self.iters,
+            fmt_ns(self.median_ns),
+            fmt_ns(self.mean_ns),
+            fmt_ns(self.stddev_ns),
+        );
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1}ns")
+    } else if ns < 1e6 {
+        format!("{:.2}µs", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2}ms", ns / 1e6)
+    } else {
+        format!("{:.3}s", ns / 1e9)
+    }
+}
+
+/// Run `f` repeatedly for ~`budget` (after warmup) and report.
+pub fn bench<F: FnMut()>(name: &str, budget: Duration, mut f: F) -> BenchResult {
+    // Warmup: a few runs, also estimates per-iter cost.
+    let warm_start = Instant::now();
+    let mut warm_iters = 0u64;
+    while warm_start.elapsed() < budget / 10 || warm_iters < 3 {
+        f();
+        warm_iters += 1;
+        if warm_iters >= 1000 {
+            break;
+        }
+    }
+    let per_iter = warm_start.elapsed().as_secs_f64() / warm_iters as f64;
+    // Sample in batches sized so each sample is ≥ ~1ms but ≤ budget/20.
+    let batch = ((1e-3 / per_iter.max(1e-9)).ceil() as u64).clamp(1, 1_000_000);
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    let mut total_iters = 0u64;
+    while start.elapsed() < budget && samples.len() < 200 {
+        let t0 = Instant::now();
+        for _ in 0..batch {
+            f();
+        }
+        let dt = t0.elapsed().as_secs_f64() * 1e9 / batch as f64;
+        samples.push(dt);
+        total_iters += batch;
+    }
+    let r = BenchResult {
+        name: name.to_string(),
+        iters: total_iters,
+        median_ns: stats::median(&samples),
+        mean_ns: stats::mean(&samples),
+        stddev_ns: stats::stddev(&samples),
+    };
+    r.report();
+    r
+}
+
+/// Prevent the optimizer from deleting a computed value.
+pub fn black_box<T>(x: T) -> T {
+    // std::hint::black_box is stable since 1.66
+    std::hint::black_box(x)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_reports_sane_numbers() {
+        let r = bench("noop-ish", Duration::from_millis(50), || {
+            black_box((0..100).sum::<u64>());
+        });
+        assert!(r.iters > 0);
+        assert!(r.median_ns > 0.0);
+        assert!(r.median_ns < 1e7, "100-element sum should be well under 10ms");
+    }
+}

@@ -1,0 +1,92 @@
+//! Tiny CLI argument parser (clap is not in the vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positionals —
+//! enough for the `cfp` binary and every example/bench driver.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Args {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(body) = arg.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if it.peek().map_or(false, |n| !n.starts_with("--")) {
+                    out.options.insert(body.to_string(), it.next().unwrap());
+                } else {
+                    out.flags.push(body.to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        // note: `--flag value`-style ambiguity resolves to an option, so
+        // bare flags go last or use `--k=v` for following options.
+        let a = parse("search --model gpt --gpus=8 extra --verbose");
+        assert_eq!(a.positional, vec!["search", "extra"]);
+        assert_eq!(a.get("model"), Some("gpt"));
+        assert_eq!(a.get_usize("gpus", 0), 8);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse("run");
+        assert_eq!(a.get_or("platform", "a100-pcie"), "a100-pcie");
+        assert_eq!(a.get_f64("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn flag_followed_by_flag() {
+        let a = parse("--x --y v");
+        assert!(a.has_flag("x"));
+        assert_eq!(a.get("y"), Some("v"));
+    }
+}

@@ -1,0 +1,15 @@
+//! Infrastructure substrates built from scratch for the offline environment
+//! (no tokio / clap / serde / criterion / proptest in the vendor set —
+//! see DESIGN.md §Substitutions).
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod pool;
+pub mod prng;
+pub mod proptest;
+pub mod stats;
+
+pub use json::Json;
+pub use pool::ThreadPool;
+pub use prng::Pcg64;

@@ -1,0 +1,90 @@
+//! Seeded property-testing harness (the proptest crate is not in the
+//! vendor set). No shrinking — failures print the seed + case index so a
+//! failing case is reproducible with `PROP_SEED`/`PROP_CASES`.
+
+use super::prng::Pcg64;
+
+pub struct Prop {
+    pub cases: usize,
+    pub seed: u64,
+}
+
+impl Default for Prop {
+    fn default() -> Self {
+        let seed = std::env::var("PROP_SEED")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(0xC0FFEE);
+        let cases = std::env::var("PROP_CASES")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .unwrap_or(64);
+        Prop { cases, seed }
+    }
+}
+
+impl Prop {
+    pub fn new(cases: usize, seed: u64) -> Self {
+        Prop { cases, seed }
+    }
+
+    /// Run `f(case_rng)` for each case; panics with seed info on failure.
+    pub fn check<F: FnMut(&mut Pcg64)>(&self, name: &str, mut f: F) {
+        for case in 0..self.cases {
+            let mut rng = Pcg64::new(self.seed ^ ((case as u64) << 17) ^ 0x9E3779B97F4A7C15);
+            let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                f(&mut rng);
+            }));
+            if let Err(err) = result {
+                eprintln!(
+                    "property '{name}' failed at case {case} (PROP_SEED={} PROP_CASES={})",
+                    self.seed, self.cases
+                );
+                std::panic::resume_unwind(err);
+            }
+        }
+    }
+}
+
+/// Random subset of sizes usable as tensor dims (powers of 2 mostly, some odd).
+pub fn dim(rng: &mut Pcg64) -> usize {
+    *rng.choice(&[1, 2, 3, 4, 6, 8, 12, 16, 24, 32, 64])
+}
+
+pub fn shape(rng: &mut Pcg64, max_rank: usize) -> Vec<usize> {
+    let rank = 1 + rng.below(max_rank as u64) as usize;
+    (0..rank).map(|_| dim(rng)).collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn check_runs_all_cases() {
+        let mut n = 0;
+        Prop::new(10, 1).check("count", |_| n += 1);
+        assert_eq!(n, 10);
+    }
+
+    #[test]
+    #[should_panic]
+    fn check_propagates_failures() {
+        Prop::new(5, 1).check("fail", |rng| {
+            assert!(rng.below(1000) != 999 || false, "boom");
+            if rng.below(2) == 0 {
+                panic!("boom");
+            }
+        });
+    }
+
+    #[test]
+    fn shapes_are_nonempty() {
+        let mut rng = Pcg64::new(1);
+        for _ in 0..50 {
+            let s = shape(&mut rng, 4);
+            assert!(!s.is_empty() && s.len() <= 4);
+            assert!(s.iter().all(|&d| d >= 1));
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Integration tests over the real PJRT runtime + AOT artifacts.
+//! These require `make artifacts`; they skip (with a note) otherwise.
+
+use cfp::cluster::Platform;
+use cfp::runtime::Runtime;
+use cfp::trainer::Trainer;
+use cfp::util::Pcg64;
+
+fn runtime() -> Option<Runtime> {
+    match Runtime::open("artifacts") {
+        Ok(rt) => Some(rt),
+        Err(e) => {
+            eprintln!("SKIP (run `make artifacts`): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn layer_artifacts_execute_and_are_finite() {
+    let Some(rt) = runtime() else { return };
+    let mut rng = Pcg64::new(3);
+    for name in ["layer_gpt_full", "layer_gpt_tp2", "layer_llama_full", "layer_llama_tp4"] {
+        if rt.meta(name).is_none() {
+            continue;
+        }
+        let inputs = rt.random_inputs(name, &mut rng).unwrap();
+        let out = rt.run(name, &inputs).unwrap();
+        let v = out[0].to_vec::<f32>().unwrap();
+        assert!(v.iter().all(|x| x.is_finite()), "{name} produced non-finite values");
+    }
+}
+
+#[test]
+fn dp_shard_time_scales_with_batch() {
+    // layer_gpt_full (batch 8) should take roughly ≥ the dp4 shard (batch 2):
+    // real measured compute times back the simulator's T_P scaling
+    let Some(rt) = runtime() else { return };
+    if rt.meta("layer_gpt_full").is_none() || rt.meta("layer_gpt_dp4").is_none() {
+        return;
+    }
+    let full = rt.measure("layer_gpt_full", 2, 5).unwrap();
+    let quarter = rt.measure("layer_gpt_dp4", 2, 5).unwrap();
+    assert!(
+        full > quarter * 0.9,
+        "full-batch layer ({full:.4}s) should not be faster than the b/4 shard ({quarter:.4}s)"
+    );
+}
+
+#[test]
+fn calibration_efficiency_increases_with_size() {
+    let Some(rt) = runtime() else { return };
+    let small = rt.measure("calib_matmul_64x64x64", 2, 3).unwrap();
+    let big = rt.measure("calib_matmul_1024x1024x1024", 2, 3).unwrap();
+    let f_small = 2.0 * 64f64.powi(3) / small;
+    let f_big = 2.0 * 1024f64.powi(3) / big;
+    assert!(
+        f_big > 2.0 * f_small,
+        "bigger matmuls must achieve higher flops/s: {f_small:.2e} vs {f_big:.2e}"
+    );
+}
+
+#[test]
+fn calibrated_model_feeds_simulator() {
+    let Some(rt) = runtime() else { return };
+    let platform = Platform::a100_pcie(4);
+    let cm = rt.calibrate_compute(&platform).unwrap();
+    // monotone + sane range
+    assert!(cm.time_us(1 << 16, 1 << 10) < cm.time_us(1 << 30, 1 << 10));
+    assert!(cm.efficiency(1 << 30) > cm.efficiency(1 << 12));
+}
+
+#[test]
+fn train_step_artifact_loss_curve_falls() {
+    let Some(rt) = runtime() else { return };
+    if rt.meta("train_step_gpt").is_none() {
+        return;
+    }
+    let mut tr = Trainer::new(&rt, "train_step_gpt", 123).unwrap();
+    let mut losses = Vec::new();
+    for _ in 0..12 {
+        losses.push(tr.step(0.08).unwrap());
+    }
+    let first = losses[0];
+    let last = *losses.last().unwrap();
+    assert!(first.is_finite() && last.is_finite());
+    assert!(
+        last < first,
+        "12 steps should already reduce loss: {first:.3} → {last:.3}"
+    );
+}
+
+#[test]
+fn manifest_matches_artifacts_on_disk() {
+    let Some(rt) = runtime() else { return };
+    for m in &rt.manifest {
+        let path = std::path::Path::new("artifacts").join(&m.file);
+        assert!(path.exists(), "{} missing", m.file);
+        assert!(!m.inputs.is_empty() || m.kind == "const", "{} has no inputs", m.name);
+    }
+}

@@ -1,0 +1,181 @@
+//! Property tests over randomized models/configs (DESIGN.md §6 invariants)
+//! using the in-repo seeded property harness.
+
+use cfp::affine::{propagate, Prop};
+use cfp::cluster::Platform;
+use cfp::cost;
+use cfp::graph::Role;
+use cfp::models::{build_training, Arch, ModelCfg};
+use cfp::pblock::{build_parallel_blocks, Sharding};
+use cfp::profiler::{profile_model, ProfileOptions};
+use cfp::segment::extract_segments;
+use cfp::spmd::{lower, GlobalPlan, Mesh};
+use cfp::util::proptest::Prop as Harness;
+use cfp::util::Pcg64;
+
+fn random_model(rng: &mut Pcg64) -> ModelCfg {
+    let arch = *rng.choice(&[Arch::Gpt, Arch::Llama, Arch::Moe, Arch::Bert]);
+    let heads = *rng.choice(&[2usize, 4]);
+    let hidden = heads * *rng.choice(&[8usize, 16]);
+    let mut cfg = ModelCfg::preset(match arch {
+        Arch::Gpt => "gpt-tiny",
+        Arch::Moe => "moe-tiny",
+        _ => "gpt-tiny",
+    });
+    cfg.arch = arch;
+    cfg.hidden = hidden;
+    cfg.heads = heads;
+    cfg.ffn = hidden * 2;
+    cfg.layers = 1 + rng.below(3) as usize;
+    cfg.seq = *rng.choice(&[16usize, 32]);
+    cfg.batch = *rng.choice(&[4usize, 8]);
+    cfg.vocab = 256;
+    cfg.experts = 4;
+    cfg.dropout = rng.below(2) == 0;
+    cfg
+}
+
+/// Invariant 2/3: inside every block, every strategy propagates
+/// communication-free and assigns consistent shardings.
+#[test]
+fn prop_blocks_are_communication_free() {
+    Harness::new(24, 0xB10C).check("pblock soundness", |rng| {
+        let cfg = random_model(rng);
+        let parts = *rng.choice(&[2usize, 4]);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, parts);
+        for blk in &bs.blocks {
+            for st in &blk.strategies {
+                for &m in &blk.ops {
+                    if m == blk.entry {
+                        continue;
+                    }
+                    for (idx, inp) in g.ops[m].inputs.iter().enumerate() {
+                        if let Some(Sharding::Split(d)) = st.assignment.get(inp) {
+                            match propagate(&g, m, idx, *d, parts) {
+                                Prop::To { out_dim, .. } => assert_eq!(
+                                    st.assignment.get(&m),
+                                    Some(&Sharding::Split(out_dim)),
+                                    "{}: inconsistent assignment",
+                                    g.ops[m].name
+                                ),
+                                Prop::Blocked => panic!(
+                                    "blocked inside block at {} ({} strat {})",
+                                    g.ops[m].name, blk.id, st.label
+                                ),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    });
+}
+
+/// Invariant: DP lowering never em its activation collectives beyond RNG-free
+/// grad sync; and per-device flops always ≤ serial flops.
+#[test]
+fn prop_lowering_flops_bounded() {
+    Harness::new(16, 0xF10). check("lowering flops", |rng| {
+        let cfg = random_model(rng);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let serial = g.total_flops();
+        for label in ["m", "n", "k"] {
+            if let Some(plan) = GlobalPlan::uniform(&bs, label, Mesh::flat(4)) {
+                let prog = lower(&g, &bs, &plan);
+                let dev = prog.total_flops();
+                assert!(dev <= serial + serial / 8, "{label}: {dev} > serial {serial}");
+                assert!(dev * 5 >= serial, "{label}: suspiciously little work");
+            }
+        }
+    });
+}
+
+/// Invariant 6: the Pareto DP equals brute force on random small instances
+/// under random memory caps.
+#[test]
+fn prop_search_optimal_vs_brute_force() {
+    Harness::new(10, 0x5EA2C4).check("search optimality", |rng| {
+        let mut cfg = random_model(rng);
+        cfg.layers = 1 + rng.below(2) as usize; // keep brute force sane
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 2);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(2));
+        let db = profile_model(&g, &bs, &ss, &opts);
+        // skip pathologically large spaces
+        let space: f64 = ss
+            .instances
+            .iter()
+            .map(|i| db.segments[i.unique_id].configs.len() as f64)
+            .product();
+        if space > 25_000.0 {
+            return;
+        }
+        let free = cost::search(&ss, &db, None).unwrap();
+        let caps = [None, Some(free.mem_bytes), Some((free.mem_bytes as f64 * 0.9) as u64)];
+        for cap in caps {
+            let dp = cost::search(&ss, &db, cap);
+            let bf = cost::brute_force(&ss, &db, cap);
+            match (dp, bf) {
+                (Some(d), Some(b)) => assert!(
+                    d.time_us <= b.time_us * 1.02 + 1e-6,
+                    "cap {cap:?}: dp {} bf {}",
+                    d.time_us,
+                    b.time_us
+                ),
+                (None, None) => {}
+                (d, b) => panic!("feasibility mismatch: {d:?} vs {b:?}"),
+            }
+        }
+    });
+}
+
+/// Invariant 4: fingerprint-equal segments have identical config spaces and
+/// (by construction) identical profiles.
+#[test]
+fn prop_fingerprint_equal_segments_share_space() {
+    Harness::new(16, 0xF1D6E).check("fingerprint soundness", |rng| {
+        let cfg = random_model(rng);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 2);
+        let ss = extract_segments(&g, &bs);
+        for u in &ss.unique {
+            let insts: Vec<_> = ss
+                .instances
+                .iter()
+                .filter(|i| i.unique_id == u.id)
+                .collect();
+            for w in insts.windows(2) {
+                assert_eq!(w[0].blocks.len(), w[1].blocks.len(), "block counts differ");
+                for (&a, &b) in w[0].blocks.iter().zip(&w[1].blocks) {
+                    assert_eq!(
+                        bs.blocks[a].strategies.len(),
+                        bs.blocks[b].strategies.len(),
+                        "strategy spaces differ within fingerprint"
+                    );
+                }
+            }
+        }
+    });
+}
+
+/// Backward ops always land in their forward op's block (§3.2).
+#[test]
+fn prop_bwd_ops_follow_fwd_blocks() {
+    Harness::new(16, 0xB3D).check("bwd grouping", |rng| {
+        let cfg = random_model(rng);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 2);
+        for op in &g.ops {
+            if op.role == Role::Bwd {
+                if let Some(f) = op.grad_of {
+                    if let Some(b) = bs.block_of[f] {
+                        assert_eq!(bs.block_of[op.id], Some(b), "{} strayed", op.name);
+                    }
+                }
+            }
+        }
+    });
+}
