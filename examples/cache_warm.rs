@@ -1,0 +1,58 @@
+//! Cold vs. warm profile cache: run the CFP pipeline twice against the
+//! same on-disk cache file and show MetricsProfiling collapsing to a
+//! lookup on the second run (the cross-run extension of the paper's
+//! fingerprint amortization, §4.2/§5.5).
+//!
+//! ```sh
+//! cargo run --release --example cache_warm [-- --layers 16 --threads 4]
+//! ```
+
+use cfp::cluster::Platform;
+use cfp::coordinator::{run_cfp, CfpOptions, CfpResult};
+use cfp::models::ModelCfg;
+use cfp::util::cli::Args;
+
+fn report(tag: &str, r: &CfpResult) {
+    println!(
+        "{tag:>5}: plan step {:>10.1}µs | profiled {:>3} segment(s), {} cache hit(s) | \
+         MetricsProfiling {:.4}s, total profiling {:.4}s",
+        r.plan.time_us,
+        r.db.stats.cache_misses,
+        r.db.stats.cache_hits,
+        r.timings.metrics_profiling_s,
+        r.timings.exec_compiling_s + r.timings.metrics_profiling_s,
+    );
+}
+
+fn main() {
+    let args = Args::from_env();
+    let layers = args.get_usize("layers", 8);
+    let path = args
+        .get_path("cache")
+        .unwrap_or_else(|| std::env::temp_dir().join("cfp-cache-warm-demo.json"));
+    std::fs::remove_file(&path).ok(); // always demo a genuine cold start
+
+    let mut opts = CfpOptions::new(
+        ModelCfg::preset("gpt-2.6b").with_layers(layers).with_batch(8).scaled_for_eval(),
+        Platform::a100_pcie(4),
+    )
+    .with_cache(&path);
+    opts.threads = args.get_usize("threads", 1);
+
+    println!(
+        "model gpt-2.6b ({layers} layers, scaled) on a100-pcie-4; cache file {}",
+        path.display()
+    );
+    let cold = run_cfp(&opts);
+    report("cold", &cold);
+    let warm = run_cfp(&opts);
+    report("warm", &warm);
+
+    assert_eq!(cold.plan.choice, warm.plan.choice, "warm plan must be identical");
+    assert_eq!(warm.db.stats.cache_misses, 0, "warm run must not profile");
+    println!(
+        "warm MetricsProfiling is {}; plans are bit-identical",
+        if warm.timings.metrics_profiling_s == 0.0 { "zero" } else { "nonzero (?)" }
+    );
+    std::fs::remove_file(&path).ok();
+}

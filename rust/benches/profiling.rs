@@ -7,7 +7,7 @@ use std::time::Duration;
 use cfp::cluster::Platform;
 use cfp::models::{build_training, ModelCfg};
 use cfp::pblock::build_parallel_blocks;
-use cfp::profiler::{profile_model, ProfileOptions};
+use cfp::profiler::{profile_model, profile_model_cached, ProfileCache, ProfileOptions};
 use cfp::segment::extract_segments;
 use cfp::spmd::Mesh;
 use cfp::util::bench::{bench, black_box};
@@ -36,5 +36,21 @@ fn main() {
                 db.profile_space() as f64 / (r.median_ns * 1e-9)
             );
         }
+
+        // warm persistent cache: the whole MetricsProfiling phase becomes
+        // a fingerprint-keyed lookup
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let mut cache = ProfileCache::in_memory();
+        profile_model_cached(&g, &bs, &ss, &opts, Some(&mut cache));
+        bench(
+            &format!("profile_model/{preset}/warm-cache"),
+            Duration::from_secs(1),
+            || {
+                black_box(
+                    profile_model_cached(&g, &bs, &ss, &opts, Some(&mut cache))
+                        .profile_space(),
+                );
+            },
+        );
     }
 }

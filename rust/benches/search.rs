@@ -36,5 +36,33 @@ fn main() {
                 black_box(cost::search(&ss, &db, Some(cap)));
             },
         );
+        bench(
+            &format!("search_uniform/serial/{layers}L"),
+            Duration::from_millis(700),
+            || {
+                black_box(cost::search_uniform(&ss, &db, None));
+            },
+        );
+        bench(
+            &format!("search_uniform/threads=4/{layers}L"),
+            Duration::from_millis(700),
+            || {
+                black_box(cost::search_uniform_with(&ss, &db, None, 4));
+            },
+        );
     }
+
+    // brute force needs a tiny instance count to stay exponential-but-sane
+    let cfg = ModelCfg::preset("gpt-tiny").with_layers(2);
+    let g = build_training(&cfg);
+    let bs = build_parallel_blocks(&g, 4);
+    let ss = extract_segments(&g, &bs);
+    let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+    let db = profile_model(&g, &bs, &ss, &opts);
+    bench("brute_force/serial/gpt-tiny-2L", Duration::from_secs(2), || {
+        black_box(cost::brute_force(&ss, &db, None));
+    });
+    bench("brute_force/threads=4/gpt-tiny-2L", Duration::from_secs(2), || {
+        black_box(cost::brute_force_with(&ss, &db, None, 4));
+    });
 }

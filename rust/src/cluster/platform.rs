@@ -21,6 +21,16 @@ impl LinkModel {
     pub fn eff_bw_gbps(&self, msg_bytes: f64) -> f64 {
         self.peak_gbps * msg_bytes / (msg_bytes + self.sat_bytes)
     }
+
+    /// Canonical encoding of every cost-affecting field — part of the
+    /// profile-cache key, so any link-model change invalidates cached
+    /// profiles (`{}` on f64 prints the shortest round-trippable form).
+    pub fn signature(&self) -> String {
+        format!(
+            "bw{}s{}l{}st{}sr{}",
+            self.peak_gbps, self.sat_bytes, self.launch_us, self.step_us, self.sendrecv_penalty
+        )
+    }
 }
 
 /// A training platform (the paper's testbeds, simulated).
@@ -112,6 +122,24 @@ impl Platform {
         self.gpus_per_node * self.nodes
     }
 
+    /// Canonical encoding of the whole platform (topology, both links,
+    /// compute capability) for the persistent profile cache: profiles are
+    /// only reusable on a platform with an identical signature.
+    pub fn signature(&self) -> String {
+        format!(
+            "{}/g{}n{}/intra[{}]/inter[{}]/tf{}hbm{}kl{}ts{}",
+            self.name,
+            self.gpus_per_node,
+            self.nodes,
+            self.intra.signature(),
+            self.inter.signature(),
+            self.peak_tflops,
+            self.hbm_gbps,
+            self.kernel_launch_us,
+            self.time_scale
+        )
+    }
+
     /// Device memory capacity in bytes.
     pub fn mem_capacity(&self) -> u64 {
         let full: u64 = match self.name {
@@ -186,6 +214,18 @@ mod tests {
         let p = Platform::a100_pcie(4).intra.eff_bw_gbps(64e6);
         let v = Platform::v100_nvlink().intra.eff_bw_gbps(64e6);
         assert!(v > 4.0 * p, "nvlink {v} vs pcie {p}");
+    }
+
+    #[test]
+    fn signatures_distinguish_platforms_and_scales() {
+        let a = Platform::a100_pcie(4).signature();
+        let b = Platform::a100_pcie(8).signature();
+        let v = Platform::v100_nvlink().signature();
+        let s = Platform::a100_pcie(4).scaled_testbed().signature();
+        assert_ne!(a, b);
+        assert_ne!(a, v);
+        assert_ne!(a, s, "scaled testbed must not hit full-scale cache entries");
+        assert_eq!(a, Platform::a100_pcie(4).signature(), "signature is deterministic");
     }
 
     #[test]

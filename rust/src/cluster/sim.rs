@@ -38,6 +38,16 @@ impl ComputeModel {
         }
     }
 
+    /// Canonical encoding for the profile-cache key: a recalibrated
+    /// compute model (different `sat_flops`) must invalidate cached
+    /// kernel-time profiles.
+    pub fn signature(&self) -> String {
+        format!(
+            "cm:tf{}hbm{}l{}sat{}me{}",
+            self.peak_tflops, self.hbm_gbps, self.launch_us, self.sat_flops, self.max_eff
+        )
+    }
+
     pub fn efficiency(&self, flops: u64) -> f64 {
         let f = flops as f64;
         (self.max_eff * f / (f + self.sat_flops)).max(0.02)

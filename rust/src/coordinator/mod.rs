@@ -12,7 +12,7 @@ use crate::cost::{self, Plan};
 use crate::graph::Graph;
 use crate::models::{build_training, ModelCfg};
 use crate::pblock::{build_parallel_blocks, BlockSet};
-use crate::profiler::{profile_model, ProfileDb, ProfileOptions};
+use crate::profiler::{profile_model_cached, ProfileCache, ProfileDb, ProfileOptions};
 use crate::segment::{extract_segments, SegmentSet};
 use crate::spmd::{Mesh};
 
@@ -26,12 +26,29 @@ pub struct CfpOptions {
     pub threads: usize,
     /// PJRT-calibrated compute model (from runtime::calibrate_compute)
     pub compute: Option<ComputeModel>,
+    /// persistent profile-cache file; None disables caching. A warm cache
+    /// turns the MetricsProfiling phase into a lookup (`--cache` in the
+    /// CLI; format documented in ROADMAP.md "Profile cache").
+    pub cache_path: Option<std::path::PathBuf>,
 }
 
 impl CfpOptions {
     pub fn new(model: ModelCfg, platform: Platform) -> CfpOptions {
         let mesh = Mesh { intra: platform.gpus_per_node, nodes: platform.nodes };
-        CfpOptions { model, platform, mesh, mem_cap: None, threads: 1, compute: None }
+        CfpOptions {
+            model,
+            platform,
+            mesh,
+            mem_cap: None,
+            threads: 1,
+            compute: None,
+            cache_path: None,
+        }
+    }
+
+    pub fn with_cache(mut self, path: impl Into<std::path::PathBuf>) -> CfpOptions {
+        self.cache_path = Some(path.into());
+        self
     }
 }
 
@@ -151,8 +168,23 @@ fn pretty(label: &str) -> &str {
     }
 }
 
-/// Run the full CFP pipeline.
+/// Run the full CFP pipeline. With `opts.cache_path` set, profiles are
+/// served from / written back to the persistent cache, so a repeat run on
+/// the same model + platform skips MetricsProfiling entirely.
 pub fn run_cfp(opts: &CfpOptions) -> CfpResult {
+    let mut cache = opts.cache_path.as_ref().map(ProfileCache::open);
+    let result = run_cfp_with_cache(opts, cache.as_mut());
+    if let Some(c) = cache.as_mut() {
+        if let Err(e) = c.save() {
+            eprintln!("cfp: could not persist profile cache: {e}");
+        }
+    }
+    result
+}
+
+/// [`run_cfp`] against a caller-owned cache (in-memory or file-backed);
+/// the caller decides when to [`ProfileCache::save`].
+pub fn run_cfp_with_cache(opts: &CfpOptions, cache: Option<&mut ProfileCache>) -> CfpResult {
     let mut timings = PhaseTimings::default();
 
     // AnalysisPasses: graph build + ParallelBlocks + segments
@@ -162,16 +194,20 @@ pub fn run_cfp(opts: &CfpOptions) -> CfpResult {
     let segments = extract_segments(&graph, &blocks);
     timings.analysis_passes_s = t0.elapsed().as_secs_f64();
 
-    // ExecCompiling + MetricsProfiling (overlapped inside profile_model)
+    // ExecCompiling + MetricsProfiling (overlapped inside profile_model).
+    // MetricsProfiling is charged at the measured per-config
+    // lower+simulate wall (exactly 0 on a fully warm cache); the residual
+    // profiling wall (config enumeration, cache lookups, reshard pricing)
+    // is the compile-side bookkeeping.
     let t1 = Instant::now();
     let mut popts = ProfileOptions::new(opts.platform, opts.mesh).with_threads(opts.threads);
     if let Some(cm) = &opts.compute {
         popts = popts.with_compute(cm.clone());
     }
-    let db = profile_model(&graph, &blocks, &segments, &popts);
+    let db = profile_model_cached(&graph, &blocks, &segments, &popts, cache);
     let profiling_wall = t1.elapsed().as_secs_f64();
-    timings.exec_compiling_s = profiling_wall * 0.5;
-    timings.metrics_profiling_s = profiling_wall * 0.5;
+    timings.metrics_profiling_s = db.stats.profile_wall_s;
+    timings.exec_compiling_s = (profiling_wall - db.stats.profile_wall_s).max(0.0);
     timings.est_compile_s = db.stats.est_compile_s;
     timings.est_profile_s = db.stats.est_profile_s;
     timings.est_optimized_s = db.stats.est_optimized_s;

@@ -7,8 +7,11 @@
 //! segments may pick *different* configs to ride the memory cap — the
 //! §4.4 "some segments fast-but-fat, others lean-but-slow" behaviour.
 
+use std::sync::Arc;
+
 use crate::profiler::ProfileDb;
 use crate::segment::SegmentSet;
+use crate::util::ThreadPool;
 
 /// A selected global configuration: one config index per segment instance.
 #[derive(Clone, Debug, PartialEq)]
@@ -124,11 +127,58 @@ pub fn search(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<P
 /// Constrained variant: all instances of a unique segment use the same
 /// config (the Fig. 10 prediction-evaluation mode).
 pub fn search_uniform(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<Plan> {
-    // enumerate per-unique config combos (small #uniques)
+    search_uniform_slice(ss, db, mem_cap, None)
+}
+
+/// Parallel [`search_uniform`]: the combo space is partitioned by the
+/// most-significant odometer axis (the last unique's config) and the
+/// partitions evaluated over the in-repo thread pool. Partitions are
+/// merged in ascending axis order with a strict `<` on time — byte-for-
+/// byte the sequential tie-break, so the returned plan is identical.
+///
+/// The pool requires `'static` jobs, so `ss`/`db` are deep-cloned into
+/// `Arc`s once per call — amortized across the exponential enumeration
+/// this buys; prefer the serial entry points for tiny spaces.
+pub fn search_uniform_with(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    mem_cap: Option<u64>,
+    threads: usize,
+) -> Option<Plan> {
+    let uniques = ss.unique.len();
+    let last = if uniques == 0 { 0 } else { db.segments[uniques - 1].configs.len() };
+    if threads <= 1 || last <= 1 {
+        return search_uniform_slice(ss, db, mem_cap, None);
+    }
+    let ss = Arc::new(ss.clone());
+    let db = Arc::new(db.clone());
+    let pool = ThreadPool::new(threads.min(last));
+    let slices = pool.map((0..last).collect::<Vec<usize>>(), move |v| {
+        search_uniform_slice(&ss, &db, mem_cap, Some(v))
+    });
+    merge_in_order(slices)
+}
+
+/// Enumerate per-unique config combos (index 0 fastest). With
+/// `fixed_last = Some(v)` only the subspace whose most-significant axis
+/// equals `v` is visited — the unit of parallel partitioning.
+fn search_uniform_slice(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    mem_cap: Option<u64>,
+    fixed_last: Option<usize>,
+) -> Option<Plan> {
     let uniques = ss.unique.len();
     let sizes: Vec<usize> = (0..uniques).map(|u| db.segments[u].configs.len()).collect();
-    let mut best: Option<Plan> = None;
     let mut cur = vec![0usize; uniques];
+    let free = match fixed_last {
+        Some(v) if uniques > 0 => {
+            cur[uniques - 1] = v;
+            uniques - 1
+        }
+        _ => uniques,
+    };
+    let mut best: Option<Plan> = None;
     loop {
         let choice: Vec<usize> = ss.instances.iter().map(|i| cur[i.unique_id]).collect();
         let (time, mem) = plan_cost(ss, db, &choice);
@@ -140,7 +190,7 @@ pub fn search_uniform(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> 
         // odometer
         let mut i = 0;
         loop {
-            if i == uniques {
+            if i == free {
                 return best;
             }
             cur[i] += 1;
@@ -153,8 +203,40 @@ pub fn search_uniform(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> 
     }
 }
 
-/// Exhaustive search (tests only — exponential).
+/// Exhaustive search (tests/baselines only — exponential).
 pub fn brute_force(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<Plan> {
+    brute_force_slice(ss, db, mem_cap, None)
+}
+
+/// Parallel [`brute_force`] over the in-repo thread pool; same
+/// partition-by-last-axis scheme as [`search_uniform_with`], so results
+/// are bit-identical to the sequential path.
+pub fn brute_force_with(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    mem_cap: Option<u64>,
+    threads: usize,
+) -> Option<Plan> {
+    let n = ss.instances.len();
+    let last = if n == 0 { 0 } else { db.segments[ss.instances[n - 1].unique_id].configs.len() };
+    if threads <= 1 || last <= 1 {
+        return brute_force_slice(ss, db, mem_cap, None);
+    }
+    let ss = Arc::new(ss.clone());
+    let db = Arc::new(db.clone());
+    let pool = ThreadPool::new(threads.min(last));
+    let slices = pool.map((0..last).collect::<Vec<usize>>(), move |v| {
+        brute_force_slice(&ss, &db, mem_cap, Some(v))
+    });
+    merge_in_order(slices)
+}
+
+fn brute_force_slice(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    mem_cap: Option<u64>,
+    fixed_last: Option<usize>,
+) -> Option<Plan> {
     let n = ss.instances.len();
     let sizes: Vec<usize> = ss
         .instances
@@ -162,6 +244,13 @@ pub fn brute_force(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Opt
         .map(|i| db.segments[i.unique_id].configs.len())
         .collect();
     let mut cur = vec![0usize; n];
+    let free = match fixed_last {
+        Some(v) if n > 0 => {
+            cur[n - 1] = v;
+            n - 1
+        }
+        _ => n,
+    };
     let mut best: Option<Plan> = None;
     loop {
         let (time, mem) = plan_cost(ss, db, &cur);
@@ -172,7 +261,7 @@ pub fn brute_force(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Opt
         }
         let mut i = 0;
         loop {
-            if i == n {
+            if i == free {
                 return best;
             }
             cur[i] += 1;
@@ -183,6 +272,21 @@ pub fn brute_force(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Opt
             i += 1;
         }
     }
+}
+
+/// Merge per-partition optima in ascending partition order. Partition `v`
+/// contains exactly the combos enumerated after every combo of partitions
+/// `< v` in the sequential order (index 0 is the fastest-moving axis), so
+/// an in-order scan with strict `<` reproduces the sequential "first
+/// optimum wins" tie-break exactly.
+fn merge_in_order(slices: Vec<Option<Plan>>) -> Option<Plan> {
+    let mut best: Option<Plan> = None;
+    for p in slices.into_iter().flatten() {
+        if best.as_ref().map_or(true, |b| p.time_us < b.time_us) {
+            best = Some(p);
+        }
+    }
+    best
 }
 
 fn pareto_prune(pts: &mut Vec<Point>) {
@@ -282,6 +386,38 @@ mod tests {
                 assert!(m.time_us <= u.time_us + 1e-9, "mixed {} uniform {}", m.time_us, u.time_us);
             }
         }
+    }
+
+    #[test]
+    fn parallel_brute_force_identical_to_sequential() {
+        // parallel partitions merge with the sequential tie-break, so the
+        // whole Plan (not just its cost) must match bit-for-bit
+        let (ss, db) = setup(2);
+        let free = brute_force(&ss, &db, None).unwrap();
+        for threads in [2usize, 4, 7] {
+            let par = brute_force_with(&ss, &db, None, threads).unwrap();
+            assert_eq!(par.choice, free.choice, "threads={threads}");
+            assert!(par.time_us == free.time_us, "threads={threads}");
+            assert_eq!(par.mem_bytes, free.mem_bytes, "threads={threads}");
+        }
+        let cap = Some((free.mem_bytes as f64 * 0.9) as u64);
+        assert_eq!(brute_force(&ss, &db, cap), brute_force_with(&ss, &db, cap, 4));
+    }
+
+    #[test]
+    fn parallel_search_uniform_identical_to_sequential() {
+        let (ss, db) = setup(3);
+        let seq = search_uniform(&ss, &db, None);
+        assert_eq!(seq, search_uniform_with(&ss, &db, None, 4));
+        if let Some(p) = &seq {
+            let cap = Some(p.mem_bytes);
+            assert_eq!(search_uniform(&ss, &db, cap), search_uniform_with(&ss, &db, cap, 3));
+        }
+        // an infeasible cap must agree on None, too
+        assert_eq!(
+            search_uniform(&ss, &db, Some(1)),
+            search_uniform_with(&ss, &db, Some(1), 4)
+        );
     }
 
     #[test]

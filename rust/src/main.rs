@@ -29,7 +29,7 @@ fn main() {
                 "usage: cfp <search|compare|train|calibrate|space> \
                  [--model gpt-2.6b] [--layers N] [--batch N] \
                  [--platform a100-pcie|a100-pcie-8|a100-2node|v100-nvlink] \
-                 [--threads N] [--steps N] [--lr F]"
+                 [--threads N] [--cache FILE] [--steps N] [--lr F]"
             );
             1
         }
@@ -64,6 +64,7 @@ fn cmd_search(args: &Args) -> i32 {
     let platform = parse_platform(args);
     let mut opts = CfpOptions::new(model, platform);
     opts.threads = args.get_usize("threads", 1);
+    opts.cache_path = args.get_path("cache");
     if let Ok(rt) = Runtime::open_default() {
         if let Ok(cm) = rt.calibrate_compute(&platform) {
             println!("(compute model calibrated from PJRT measurements)");
@@ -102,6 +103,15 @@ fn cmd_search(args: &Args) -> i32 {
         r.timings.est_profile_s,
         r.timings.est_optimized_s,
     );
+    if opts.cache_path.is_some() {
+        println!(
+            "profile cache: {} segment hit(s), {} profiled this run \
+             (MetricsProfiling {:.4}s)",
+            r.db.stats.cache_hits,
+            r.db.stats.cache_misses,
+            r.timings.metrics_profiling_s,
+        );
+    }
     0
 }
 
@@ -110,6 +120,7 @@ fn cmd_compare(args: &Args) -> i32 {
     let platform = parse_platform(args);
     let mut opts = CfpOptions::new(model, platform);
     opts.threads = args.get_usize("threads", 1);
+    opts.cache_path = args.get_path("cache");
     let c = compare_frameworks(&opts);
     let mut t = Table::new(&["framework", "step time", "memory/dev", "vs CFP"]);
     for (name, p) in [
@@ -191,13 +202,15 @@ fn cmd_calibrate(args: &Args) -> i32 {
 fn cmd_space(args: &Args) -> i32 {
     let model = parse_model(args);
     let platform = parse_platform(args);
-    let opts = CfpOptions::new(model, platform);
+    let mut opts = CfpOptions::new(model, platform);
+    opts.cache_path = args.get_path("cache");
     let r = run_cfp(&opts);
-    let mut t = Table::new(&["segment", "blocks", "configs", "instances"]);
+    let mut t = Table::new(&["segment", "fingerprint", "blocks", "configs", "instances"]);
     for u in &r.segments.unique {
         let inst = &r.segments.instances[u.rep];
         t.row(vec![
             format!("u{}", u.id),
+            format!("{:016x}", cfp::segment::fingerprint_digest(&u.fingerprint)),
             inst.blocks.len().to_string(),
             r.db.segments[u.id].configs.len().to_string(),
             u.count.to_string(),

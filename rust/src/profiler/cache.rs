@@ -1,0 +1,481 @@
+//! Persistent, fingerprint-keyed profile cache.
+//!
+//! The paper's central economics (§4.2, §5.5): a moderate number of
+//! representative segment profiles amortizes across a huge repetitive
+//! graph. This module extends the amortization across *runs and
+//! processes*: every profiled unique segment is stored under
+//! `(segment fingerprint, platform signature, parts)` and every boundary
+//! reshard table under `(from fingerprint, to fingerprint, platform
+//! signature, parts)`. A second `run_cfp` on the same model/cluster then
+//! skips `MetricsProfiling` entirely — the dominant phase becomes a cache
+//! lookup.
+//!
+//! File format (see ROADMAP.md "Profile cache" for invalidation rules):
+//! a single JSON document written atomically (tmp file + rename) via
+//! [`crate::util::json`] — no external serialization deps.
+//!
+//! ```text
+//! { "version": 1,
+//!   "segments": [ {"fingerprint", "platform", "parts", "profile"} ... ],
+//!   "reshard":  [ {"from_fp", "to_fp", "platform", "parts", "table"} ... ] }
+//! ```
+//!
+//! Unknown versions and unparseable files are ignored wholesale (the cache
+//! is rebuilt and rewritten) — a cache must never turn a valid run into an
+//! error.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::spmd::ShardState;
+use crate::util::Json;
+
+use super::config::SegmentConfig;
+use super::db::{ReshardTable, SegmentProfile};
+
+/// Bump whenever the on-disk schema or any profiled quantity's meaning
+/// changes; old files are then ignored (never migrated).
+pub const CACHE_VERSION: i64 = 1;
+
+/// Validity domain of one unique segment's profile.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct CacheKey {
+    /// full segment fingerprint (incl. the orphan-count suffix)
+    pub fingerprint: String,
+    /// everything else that shapes profiled numbers: platform, mesh,
+    /// bucket size, optimizer factor, compute model, total grad volume —
+    /// see `ProfileOptions::cache_signature`
+    pub platform: String,
+    /// intra-op partitions the strategies were profiled at
+    pub parts: usize,
+}
+
+type ReshardKey = (String, String, String, usize); // (from_fp, to_fp, platform, parts)
+
+/// In-memory cache, optionally bound to an on-disk JSON file.
+#[derive(Clone, Debug, Default)]
+pub struct ProfileCache {
+    segments: BTreeMap<CacheKey, SegmentProfile>,
+    reshard: BTreeMap<ReshardKey, ReshardTable>,
+    path: Option<PathBuf>,
+    dirty: bool,
+}
+
+impl ProfileCache {
+    /// Cache with no backing file (tests, single-process reuse).
+    pub fn in_memory() -> ProfileCache {
+        ProfileCache::default()
+    }
+
+    /// Cache bound to `path`, pre-populated from it when a valid cache
+    /// file exists there. Missing/corrupt/old-version files yield an
+    /// empty cache that will overwrite the file on [`ProfileCache::save`].
+    pub fn open(path: impl Into<PathBuf>) -> ProfileCache {
+        let path = path.into();
+        let mut cache = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|json| ProfileCache::from_json(&json))
+            .unwrap_or_default();
+        cache.path = Some(path);
+        cache
+    }
+
+    pub fn path(&self) -> Option<&Path> {
+        self.path.as_deref()
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.segments.len()
+    }
+
+    pub fn num_reshards(&self) -> usize {
+        self.reshard.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.segments.is_empty() && self.reshard.is_empty()
+    }
+
+    pub fn get_segment(&self, key: &CacheKey) -> Option<&SegmentProfile> {
+        self.segments.get(key)
+    }
+
+    pub fn put_segment(&mut self, key: CacheKey, profile: SegmentProfile) {
+        self.segments.insert(key, profile);
+        self.dirty = true;
+    }
+
+    pub fn get_reshard(
+        &self,
+        from_fp: &str,
+        to_fp: &str,
+        platform: &str,
+        parts: usize,
+    ) -> Option<&ReshardTable> {
+        // BTreeMap<(String,..)> lookup needs owned keys; reshard tables are
+        // fetched once per unique pair so the allocation is negligible.
+        let key: ReshardKey =
+            (from_fp.to_string(), to_fp.to_string(), platform.to_string(), parts);
+        self.reshard.get(&key)
+    }
+
+    pub fn put_reshard(
+        &mut self,
+        from_fp: &str,
+        to_fp: &str,
+        platform: &str,
+        parts: usize,
+        table: ReshardTable,
+    ) {
+        let key: ReshardKey =
+            (from_fp.to_string(), to_fp.to_string(), platform.to_string(), parts);
+        self.reshard.insert(key, table);
+        self.dirty = true;
+    }
+
+    /// Persist to the backing file if bound and modified. Atomic against
+    /// readers: writes a sibling tmp file, then renames over the target.
+    /// Before writing, entries another process added since
+    /// [`ProfileCache::open`] are folded back in (ours win on conflict) —
+    /// a best-effort merge, not a lock: two savers racing between the
+    /// re-read and the rename can still drop the loser's entries, which
+    /// costs re-profiling on a later run but never a wrong plan.
+    pub fn save(&mut self) -> std::io::Result<()> {
+        let Some(path) = self.path.clone() else {
+            return Ok(());
+        };
+        if !self.dirty {
+            return Ok(());
+        }
+        if let Some(disk) = std::fs::read_to_string(&path)
+            .ok()
+            .and_then(|text| Json::parse(&text).ok())
+            .and_then(|json| ProfileCache::from_json(&json))
+        {
+            for (k, v) in disk.segments {
+                self.segments.entry(k).or_insert(v);
+            }
+            for (k, v) in disk.reshard {
+                self.reshard.entry(k).or_insert(v);
+            }
+        }
+        if let Some(dir) = path.parent() {
+            if !dir.as_os_str().is_empty() {
+                std::fs::create_dir_all(dir)?;
+            }
+        }
+        let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+        std::fs::write(&tmp, self.to_json().to_string())?;
+        std::fs::rename(&tmp, &path)?;
+        self.dirty = false;
+        Ok(())
+    }
+
+    // ---------------------------------------------------------------- json
+
+    pub fn to_json(&self) -> Json {
+        let segments = self
+            .segments
+            .iter()
+            .map(|(k, p)| {
+                Json::obj(vec![
+                    ("fingerprint", Json::str(k.fingerprint.clone())),
+                    ("platform", Json::str(k.platform.clone())),
+                    ("parts", Json::num(k.parts as f64)),
+                    ("profile", segment_profile_to_json(p)),
+                ])
+            })
+            .collect();
+        let reshard = self
+            .reshard
+            .iter()
+            .map(|((from, to, platform, parts), t)| {
+                Json::obj(vec![
+                    ("from_fp", Json::str(from.clone())),
+                    ("to_fp", Json::str(to.clone())),
+                    ("platform", Json::str(platform.clone())),
+                    ("parts", Json::num(*parts as f64)),
+                    ("table", reshard_table_to_json(t)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(CACHE_VERSION as f64)),
+            ("segments", Json::Arr(segments)),
+            ("reshard", Json::Arr(reshard)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ProfileCache> {
+        if j.get("version")?.as_i64()? != CACHE_VERSION {
+            return None;
+        }
+        let mut cache = ProfileCache::default();
+        for e in j.get("segments")?.as_arr()? {
+            let key = CacheKey {
+                fingerprint: e.get("fingerprint")?.as_str()?.to_string(),
+                platform: e.get("platform")?.as_str()?.to_string(),
+                parts: e.get("parts")?.as_u64()? as usize,
+            };
+            let profile = segment_profile_from_json(e.get("profile")?)?;
+            cache.segments.insert(key, profile);
+        }
+        for e in j.get("reshard")?.as_arr()? {
+            let key: ReshardKey = (
+                e.get("from_fp")?.as_str()?.to_string(),
+                e.get("to_fp")?.as_str()?.to_string(),
+                e.get("platform")?.as_str()?.to_string(),
+                e.get("parts")?.as_u64()? as usize,
+            );
+            cache.reshard.insert(key, reshard_table_from_json(e.get("table")?)?);
+        }
+        Some(cache)
+    }
+}
+
+// ------------------------------------------------------------- serializers
+
+pub fn shard_state_to_json(s: &ShardState) -> Json {
+    Json::str(match s {
+        ShardState::Replicated => "r".to_string(),
+        ShardState::Partial => "p".to_string(),
+        ShardState::Split(d) => format!("s{d}"),
+    })
+}
+
+pub fn shard_state_from_json(j: &Json) -> Option<ShardState> {
+    let s = j.as_str()?;
+    match s {
+        "r" => Some(ShardState::Replicated),
+        "p" => Some(ShardState::Partial),
+        _ => s
+            .strip_prefix('s')
+            .and_then(|d| d.parse::<usize>().ok())
+            .map(ShardState::Split),
+    }
+}
+
+fn f64_arr(v: &[f64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::num(x)).collect())
+}
+
+fn u64_arr(v: &[u64]) -> Json {
+    Json::Arr(v.iter().map(|&x| Json::num(x as f64)).collect())
+}
+
+fn f64_arr_from(j: &Json) -> Option<Vec<f64>> {
+    j.as_arr()?.iter().map(|x| x.as_f64()).collect()
+}
+
+fn u64_arr_from(j: &Json) -> Option<Vec<u64>> {
+    j.as_arr()?.iter().map(|x| x.as_u64()).collect()
+}
+
+pub fn segment_profile_to_json(p: &SegmentProfile) -> Json {
+    Json::obj(vec![
+        ("configs", Json::Arr(p.configs.iter().map(SegmentConfig::to_json).collect())),
+        ("t_c_us", f64_arr(&p.t_c_us)),
+        ("t_p_us", f64_arr(&p.t_p_us)),
+        ("mem_bytes", u64_arr(&p.mem_bytes)),
+        ("symbolic_volume", u64_arr(&p.symbolic_volume)),
+        ("boundary_out", Json::Arr(p.boundary_out.iter().map(shard_state_to_json).collect())),
+        ("boundary_in", Json::Arr(p.boundary_in.iter().map(shard_state_to_json).collect())),
+    ])
+}
+
+pub fn segment_profile_from_json(j: &Json) -> Option<SegmentProfile> {
+    let configs = j
+        .get("configs")?
+        .as_arr()?
+        .iter()
+        .map(SegmentConfig::from_json)
+        .collect::<Option<Vec<_>>>()?;
+    let p = SegmentProfile {
+        configs,
+        t_c_us: f64_arr_from(j.get("t_c_us")?)?,
+        t_p_us: f64_arr_from(j.get("t_p_us")?)?,
+        mem_bytes: u64_arr_from(j.get("mem_bytes")?)?,
+        symbolic_volume: u64_arr_from(j.get("symbolic_volume")?)?,
+        boundary_out: j
+            .get("boundary_out")?
+            .as_arr()?
+            .iter()
+            .map(shard_state_from_json)
+            .collect::<Option<Vec<_>>>()?,
+        boundary_in: j
+            .get("boundary_in")?
+            .as_arr()?
+            .iter()
+            .map(shard_state_from_json)
+            .collect::<Option<Vec<_>>>()?,
+    };
+    // a profile is internally consistent only if every per-config column
+    // has one entry per config — reject truncated/hand-edited entries
+    let n = p.configs.len();
+    let consistent = p.t_c_us.len() == n
+        && p.t_p_us.len() == n
+        && p.mem_bytes.len() == n
+        && p.symbolic_volume.len() == n
+        && p.boundary_out.len() == n
+        && p.boundary_in.len() == n;
+    consistent.then_some(p)
+}
+
+pub fn reshard_table_to_json(t: &ReshardTable) -> Json {
+    Json::obj(vec![
+        ("t_r_us", Json::Arr(t.t_r_us.iter().map(|row| f64_arr(row)).collect())),
+        ("sym_vol", Json::Arr(t.sym_vol.iter().map(|row| u64_arr(row)).collect())),
+        ("programs", Json::num(t.programs as f64)),
+    ])
+}
+
+pub fn reshard_table_from_json(j: &Json) -> Option<ReshardTable> {
+    let t_r_us = j
+        .get("t_r_us")?
+        .as_arr()?
+        .iter()
+        .map(f64_arr_from)
+        .collect::<Option<Vec<_>>>()?;
+    let sym_vol = j
+        .get("sym_vol")?
+        .as_arr()?
+        .iter()
+        .map(u64_arr_from)
+        .collect::<Option<Vec<_>>>()?;
+    let programs = j.get("programs")?.as_u64()? as usize;
+    Some(ReshardTable { t_r_us, sym_vol, programs })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_profile() -> SegmentProfile {
+        SegmentProfile {
+            configs: vec![
+                SegmentConfig { strategy: vec![0, 1] },
+                SegmentConfig { strategy: vec![2, 0] },
+            ],
+            t_c_us: vec![12.5, 0.0625],
+            t_p_us: vec![100.0, 250.75],
+            mem_bytes: vec![1 << 30, 3 << 20],
+            symbolic_volume: vec![0, 42],
+            boundary_out: vec![ShardState::Replicated, ShardState::Split(1)],
+            boundary_in: vec![ShardState::Partial, ShardState::Split(0)],
+        }
+    }
+
+    fn sample_table() -> ReshardTable {
+        ReshardTable {
+            t_r_us: vec![vec![0.0, 33.25], vec![7.5, 0.0]],
+            sym_vol: vec![vec![0, 64], vec![128, 0]],
+            programs: 3,
+        }
+    }
+
+    #[test]
+    fn profile_json_round_trip_is_exact() {
+        let p = sample_profile();
+        let j = Json::parse(&segment_profile_to_json(&p).to_string()).unwrap();
+        assert_eq!(segment_profile_from_json(&j), Some(p));
+    }
+
+    #[test]
+    fn truncated_profile_rejected() {
+        let p = sample_profile();
+        let mut j = segment_profile_to_json(&p);
+        if let Json::Obj(m) = &mut j {
+            m.insert("t_c_us".into(), Json::Arr(vec![Json::num(1.0)]));
+        }
+        assert_eq!(segment_profile_from_json(&j), None);
+    }
+
+    #[test]
+    fn shard_states_round_trip() {
+        for s in [ShardState::Replicated, ShardState::Partial, ShardState::Split(0), ShardState::Split(3)] {
+            assert_eq!(shard_state_from_json(&shard_state_to_json(&s)), Some(s));
+        }
+        assert_eq!(shard_state_from_json(&Json::str("x9")), None);
+    }
+
+    #[test]
+    fn cache_file_round_trip() {
+        let mut c = ProfileCache::in_memory();
+        let key = CacheKey {
+            fingerprint: "dot2([4, 8]x[8, 8])[m,n,k]|orphans:2".into(),
+            platform: "a100-pcie/sig".into(),
+            parts: 4,
+        };
+        c.put_segment(key.clone(), sample_profile());
+        c.put_reshard("fpA", "fpB", "a100-pcie/sig", 4, sample_table());
+
+        let parsed = ProfileCache::from_json(
+            &Json::parse(&c.to_json().to_string()).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(parsed.get_segment(&key), Some(&sample_profile()));
+        assert_eq!(
+            parsed.get_reshard("fpA", "fpB", "a100-pcie/sig", 4),
+            Some(&sample_table())
+        );
+        assert_eq!(parsed.get_reshard("fpA", "fpB", "other", 4), None);
+    }
+
+    #[test]
+    fn version_mismatch_and_garbage_ignored() {
+        let mut j = ProfileCache::in_memory().to_json();
+        if let Json::Obj(m) = &mut j {
+            m.insert("version".into(), Json::num(999.0));
+        }
+        assert!(ProfileCache::from_json(&j).is_none());
+        assert!(ProfileCache::from_json(&Json::Null).is_none());
+    }
+
+    #[test]
+    fn open_and_save_persist_across_instances() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-unit-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+
+        let mut c = ProfileCache::open(&path);
+        assert!(c.is_empty());
+        let key = CacheKey { fingerprint: "fp".into(), platform: "sig".into(), parts: 2 };
+        c.put_segment(key.clone(), sample_profile());
+        c.save().unwrap();
+        assert!(path.exists());
+
+        let reloaded = ProfileCache::open(&path);
+        assert_eq!(reloaded.num_segments(), 1);
+        assert_eq!(reloaded.get_segment(&key), Some(&sample_profile()));
+
+        // corrupt file → open degrades to empty, does not panic
+        std::fs::write(&path, "{not json").unwrap();
+        assert!(ProfileCache::open(&path).is_empty());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_merges_entries_from_concurrent_writers() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-merge-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+
+        // two cache handles opened from the same (empty) file, as two
+        // processes would; each adds a different entry and saves
+        let mut a = ProfileCache::open(&path);
+        let mut b = ProfileCache::open(&path);
+        let key_a = CacheKey { fingerprint: "fpA".into(), platform: "sig".into(), parts: 2 };
+        let key_b = CacheKey { fingerprint: "fpB".into(), platform: "sig".into(), parts: 2 };
+        a.put_segment(key_a.clone(), sample_profile());
+        a.save().unwrap();
+        b.put_segment(key_b.clone(), sample_profile());
+        b.save().unwrap(); // must fold A's entry back in, not drop it
+
+        let merged = ProfileCache::open(&path);
+        assert_eq!(merged.num_segments(), 2);
+        assert!(merged.get_segment(&key_a).is_some());
+        assert!(merged.get_segment(&key_b).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -6,12 +6,29 @@
 
 use crate::graph::Graph;
 use crate::pblock::BlockSet;
+use crate::util::Json;
 
 /// One segment configuration: strategy index per block (parallel to the
 /// segment's block list).
 #[derive(Clone, Debug, PartialEq, Eq, Hash)]
 pub struct SegmentConfig {
     pub strategy: Vec<usize>,
+}
+
+impl SegmentConfig {
+    /// JSON form for the persistent profile cache: a plain index array.
+    pub fn to_json(&self) -> Json {
+        Json::Arr(self.strategy.iter().map(|&s| Json::num(s as f64)).collect())
+    }
+
+    pub fn from_json(j: &Json) -> Option<SegmentConfig> {
+        let arr = j.as_arr()?;
+        let strategy = arr
+            .iter()
+            .map(|v| v.as_u64().map(|u| u as usize))
+            .collect::<Option<Vec<usize>>>()?;
+        Some(SegmentConfig { strategy })
+    }
 }
 
 /// Blocks contributing less than this fraction of the segment's entry
@@ -99,6 +116,14 @@ mod tests {
         let configs = enumerate_configs(&g, &bs, &moe_seg.blocks);
         // attn(3) × wo(3) × gate(pinned 1) × fc1(4) × fc2(4) = 144
         assert_eq!(configs.len(), 144, "got {}", configs.len());
+    }
+
+    #[test]
+    fn config_json_round_trip() {
+        let c = SegmentConfig { strategy: vec![0, 3, 1, 2] };
+        let j = c.to_json();
+        assert_eq!(SegmentConfig::from_json(&j), Some(c));
+        assert_eq!(SegmentConfig::from_json(&crate::util::Json::Null), None);
     }
 
     #[test]

@@ -3,10 +3,12 @@
 
 use std::collections::HashMap;
 
+use crate::util::Json;
+
 use super::config::SegmentConfig;
 
 /// Profiles of one unique segment across its config space.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct SegmentProfile {
     pub configs: Vec<SegmentConfig>,
     /// communication kernel time per config, µs (T_C)
@@ -39,7 +41,7 @@ impl SegmentProfile {
 /// `programs` counts the *distinct* boundary-state pairs actually profiled
 /// (§5.5: "3×3 = 9 groups of communication primitives"), which is what the
 /// profile space is charged for — the full table is a lookup expansion.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ReshardTable {
     pub t_r_us: Vec<Vec<f64>>,
     /// symbolic (volume-model) bytes per config pair — what Alpa's cost
@@ -50,7 +52,7 @@ pub struct ReshardTable {
 }
 
 /// Estimated real-testbed overheads (paper Fig. 12) plus our wall-clock.
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ProfilerStats {
     pub programs_compiled: usize,
     pub programs_profiled: usize,
@@ -63,9 +65,16 @@ pub struct ProfilerStats {
     pub est_optimized_s: f64,
     /// our actual analysis wall-clock, seconds
     pub wall_s: f64,
+    /// unique segments served from the persistent profile cache
+    pub cache_hits: usize,
+    /// unique segments actually profiled this run
+    pub cache_misses: usize,
+    /// wall-clock seconds spent lowering+simulating configs (exactly 0.0
+    /// on a fully warm cache — the MetricsProfiling phase was skipped)
+    pub profile_wall_s: f64,
 }
 
-#[derive(Clone, Debug, Default)]
+#[derive(Clone, Debug, Default, PartialEq)]
 pub struct ProfileDb {
     /// indexed by unique segment id
     pub segments: Vec<SegmentProfile>,
@@ -88,6 +97,77 @@ impl ProfileDb {
         let seg: usize = self.segments.iter().map(|s| s.configs.len()).sum();
         let rs: usize = self.reshard.values().map(|t| t.programs).sum();
         seg + rs
+    }
+
+    /// Full-database JSON snapshot (experiment logs, debugging, and the
+    /// save→load round-trip property test). The persistent cache stores
+    /// per-segment entries instead — see [`super::cache::ProfileCache`].
+    pub fn to_json(&self) -> Json {
+        let stats = &self.stats;
+        // sorted for deterministic output (HashMap iteration order is not)
+        let mut pairs: Vec<(&(usize, usize), &ReshardTable)> = self.reshard.iter().collect();
+        pairs.sort_by_key(|(k, _)| **k);
+        let reshard = pairs
+            .into_iter()
+            .map(|(&(a, b), t)| {
+                Json::obj(vec![
+                    ("from", Json::num(a as f64)),
+                    ("to", Json::num(b as f64)),
+                    ("table", super::cache::reshard_table_to_json(t)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "segments",
+                Json::Arr(
+                    self.segments.iter().map(super::cache::segment_profile_to_json).collect(),
+                ),
+            ),
+            ("reshard", Json::Arr(reshard)),
+            (
+                "stats",
+                Json::obj(vec![
+                    ("programs_compiled", Json::num(stats.programs_compiled as f64)),
+                    ("programs_profiled", Json::num(stats.programs_profiled as f64)),
+                    ("est_compile_s", Json::num(stats.est_compile_s)),
+                    ("est_profile_s", Json::num(stats.est_profile_s)),
+                    ("est_optimized_s", Json::num(stats.est_optimized_s)),
+                    ("wall_s", Json::num(stats.wall_s)),
+                    ("cache_hits", Json::num(stats.cache_hits as f64)),
+                    ("cache_misses", Json::num(stats.cache_misses as f64)),
+                    ("profile_wall_s", Json::num(stats.profile_wall_s)),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ProfileDb> {
+        let segments = j
+            .get("segments")?
+            .as_arr()?
+            .iter()
+            .map(super::cache::segment_profile_from_json)
+            .collect::<Option<Vec<_>>>()?;
+        let mut reshard = HashMap::new();
+        for e in j.get("reshard")?.as_arr()? {
+            let a = e.get("from")?.as_u64()? as usize;
+            let b = e.get("to")?.as_u64()? as usize;
+            reshard.insert((a, b), super::cache::reshard_table_from_json(e.get("table")?)?);
+        }
+        let s = j.get("stats")?;
+        let stats = ProfilerStats {
+            programs_compiled: s.get("programs_compiled")?.as_u64()? as usize,
+            programs_profiled: s.get("programs_profiled")?.as_u64()? as usize,
+            est_compile_s: s.get("est_compile_s")?.as_f64()?,
+            est_profile_s: s.get("est_profile_s")?.as_f64()?,
+            est_optimized_s: s.get("est_optimized_s")?.as_f64()?,
+            wall_s: s.get("wall_s")?.as_f64()?,
+            cache_hits: s.get("cache_hits")?.as_u64()? as usize,
+            cache_misses: s.get("cache_misses")?.as_u64()? as usize,
+            profile_wall_s: s.get("profile_wall_s")?.as_f64()?,
+        };
+        Some(ProfileDb { segments, reshard, stats })
     }
 }
 
@@ -114,5 +194,41 @@ mod tests {
     fn reshard_lookup_defaults_zero() {
         let db = ProfileDb::default();
         assert_eq!(db.reshard_us(0, 0, 1, 0), 0.0);
+    }
+
+    #[test]
+    fn db_json_round_trip_is_exact() {
+        let mut db = ProfileDb::default();
+        db.segments.push(SegmentProfile {
+            configs: vec![SegmentConfig { strategy: vec![0] }, SegmentConfig { strategy: vec![1] }],
+            t_c_us: vec![10.125, 1.0],
+            t_p_us: vec![5.5, 5.0078125],
+            mem_bytes: vec![1 << 33, 7],
+            symbolic_volume: vec![3, 0],
+            boundary_out: vec![ShardState::Split(1); 2],
+            boundary_in: vec![ShardState::Partial; 2],
+        });
+        db.reshard.insert(
+            (0, 0),
+            ReshardTable {
+                t_r_us: vec![vec![0.0, 2.25], vec![3.5, 0.0]],
+                sym_vol: vec![vec![0, 8], vec![8, 0]],
+                programs: 2,
+            },
+        );
+        db.stats = ProfilerStats {
+            programs_compiled: 4,
+            programs_profiled: 4,
+            est_compile_s: 1.25,
+            est_profile_s: 0.5,
+            est_optimized_s: 0.75,
+            wall_s: 0.0625,
+            cache_hits: 1,
+            cache_misses: 2,
+            profile_wall_s: 0.03125,
+        };
+        let text = db.to_json().to_string_pretty();
+        let parsed = ProfileDb::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, db);
     }
 }

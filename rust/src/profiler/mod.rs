@@ -10,10 +10,12 @@
 //! timed runs would have cost), including the §4.3 optimizations: parallel
 //! compilation, compile/profile overlap, and the dynamic profiling limit.
 
+pub mod cache;
 pub mod config;
 pub mod db;
 pub mod run;
 
+pub use cache::{CacheKey, ProfileCache};
 pub use config::{enumerate_configs, SegmentConfig};
 pub use db::{ProfileDb, ProfilerStats, ReshardTable, SegmentProfile};
-pub use run::{profile_model, ProfileOptions};
+pub use run::{profile_model, profile_model_cached, ProfileOptions};

@@ -12,6 +12,7 @@ use crate::segment::SegmentSet;
 use crate::spmd::{passes, CollKind, Mesh, ShardState};
 use crate::util::ThreadPool;
 
+use super::cache::{CacheKey, ProfileCache};
 use super::config::{enumerate_configs, SegmentConfig};
 use super::db::{ProfileDb, ProfilerStats, ReshardTable, SegmentProfile};
 
@@ -48,6 +49,22 @@ impl ProfileOptions {
     pub fn with_threads(mut self, n: usize) -> Self {
         self.threads = n;
         self
+    }
+
+    /// The non-fingerprint part of a profile-cache key: every knob that
+    /// shapes profiled numbers (platform links + compute capability, mesh,
+    /// gradient bucket size, optimizer state factor, compute model). Any
+    /// change here invalidates cached entries by construction.
+    pub fn cache_signature(&self) -> String {
+        format!(
+            "{};mesh{}x{};bb{};of{};{}",
+            self.platform.signature(),
+            self.mesh.intra,
+            self.mesh.nodes,
+            self.bucket_bytes,
+            self.opt_factor,
+            self.compute.signature()
+        )
     }
 
     fn pcie_alltoall(&self) -> bool {
@@ -130,107 +147,166 @@ fn lower_with_states(
 
 /// Profile every unique segment and boundary pair of a model.
 pub fn profile_model(g: &Graph, bs: &BlockSet, ss: &SegmentSet, opts: &ProfileOptions) -> ProfileDb {
+    profile_model_cached(g, bs, ss, opts, None)
+}
+
+/// Per-unique-segment lowering context shared with pool workers.
+struct WorkerCtx {
+    filter: Vec<bool>,
+    blocks: Vec<usize>,
+    boundary_in_op: Option<OpId>,
+    boundary_out_op: Option<OpId>,
+}
+
+/// Cache-aware [`profile_model`]: unique segments (and boundary reshard
+/// tables) already present in `cache` under the current
+/// `(fingerprint, platform signature, parts)` key are reused verbatim —
+/// a fully warm cache skips the MetricsProfiling phase entirely
+/// (`stats.profile_wall_s == 0.0`). Misses are profiled — all
+/// `(unique segment, config)` pairs flattened into one job list over the
+/// `opts.threads` pool workers, with order-preserving collection so the
+/// resulting [`ProfileDb`] is identical to a serial run — and written
+/// back to the cache.
+pub fn profile_model_cached(
+    g: &Graph,
+    bs: &BlockSet,
+    ss: &SegmentSet,
+    opts: &ProfileOptions,
+    mut cache: Option<&mut ProfileCache>,
+) -> ProfileDb {
     let wall = Instant::now();
     let op_to_inst = ss.op_to_instance(g);
-    let mut db = ProfileDb::default();
     let mut stats = ProfilerStats::default();
-
-    let g = Arc::new(g.clone());
-    let bs = Arc::new(bs.clone());
-    let pool = (opts.threads > 1).then(|| ThreadPool::new(opts.threads));
 
     // total weight bytes: the steady-state gradient bucket spans the whole
     // backward pass, so each segment's grad sync runs at the efficiency of
-    // its proportional share of the global bucket.
+    // its proportional share of the global bucket. Profiles therefore
+    // depend on the model's total gradient volume, so it joins the
+    // cache-key signature alongside the platform.
     let total_weight_bytes: u64 = g.params().iter().map(|&p| g.ops[p].bytes() as u64).sum();
+    let sig = format!("{};tw{}", opts.cache_signature(), total_weight_bytes);
+    let parts = opts.mesh.intra;
+
+    // ---- partition unique segments into cache hits and profiling jobs
+    let mut ctxs: Vec<WorkerCtx> = Vec::with_capacity(ss.unique.len());
+    let mut all_configs: Vec<Vec<SegmentConfig>> = Vec::with_capacity(ss.unique.len());
+    let mut n_ops_per_u: Vec<usize> = Vec::with_capacity(ss.unique.len());
+    let mut cached: Vec<Option<SegmentProfile>> = Vec::with_capacity(ss.unique.len());
     for u in &ss.unique {
         let inst = &ss.instances[u.rep];
         let filter: Vec<bool> = (0..g.ops.len())
             .map(|o| op_to_inst[o] == u.rep)
             .collect();
-        let configs = enumerate_configs(&g, &bs, &inst.blocks);
-        let n_ops = filter.iter().filter(|&&f| f).count();
+        let configs = enumerate_configs(g, bs, &inst.blocks);
+        let key =
+            CacheKey { fingerprint: u.fingerprint.clone(), platform: sig.clone(), parts };
+        let hit = cache
+            .as_deref()
+            .and_then(|c| c.get_segment(&key))
+            // defensive: an entry whose config space disagrees with this
+            // build (foreign or hand-edited file) is a miss, never a
+            // wrong answer
+            .filter(|p| p.configs == configs)
+            .cloned();
+        if hit.is_some() {
+            stats.cache_hits += 1;
+        } else {
+            stats.cache_misses += 1;
+        }
+        cached.push(hit);
+        n_ops_per_u.push(filter.iter().filter(|&&f| f).count());
+        ctxs.push(WorkerCtx {
+            filter,
+            blocks: inst.blocks.clone(),
+            boundary_in_op: boundary_tensor(g, inst.fwd_range.0),
+            boundary_out_op: boundary_tensor(g, inst.fwd_range.1),
+        });
+        all_configs.push(configs);
+    }
 
-        let boundary_in_op = boundary_tensor(&g, inst.fwd_range.0);
-        let boundary_out_op = boundary_tensor(&g, inst.fwd_range.1);
+    // ---- profile all missing (unique, config) pairs as one flat job list
+    let jobs: Vec<(usize, SegmentConfig)> = (0..ss.unique.len())
+        .filter(|&u| cached[u].is_none())
+        .flat_map(|u| all_configs[u].iter().cloned().map(move |c| (u, c)))
+        .collect();
 
-        let results: Vec<(f64, f64, u64, u64, ShardState, ShardState)> = {
-            #[derive(Clone)]
-            struct RunCtx {
-                g: Arc<Graph>,
-                bs: Arc<BlockSet>,
-                filter: Vec<bool>,
-                blocks: Vec<usize>,
-                opts: ProfileOptions,
-            }
-            let _ = (); // (closure clonability handled below)
-            let run_one = {
-                let g = Arc::clone(&g);
-                let bs = Arc::clone(&bs);
-                let filter = filter.clone();
-                let blocks = inst.blocks.clone();
-                let opts = opts.clone();
-                move |cfg: SegmentConfig| {
-                    let (prog, states) =
-                        compile_segment(&g, &bs, &blocks, &cfg, &filter, &opts);
-                    let rep = simulate(&prog, &opts.platform, opts.mesh.intra, &opts.compute);
-                    // steady-state correction: gradient buckets fuse ACROSS
-                    // segments in the whole model, so this segment's grad
-                    // sync runs at the efficiency of the globally
-                    // aggregated message: t(R·b)/R with R = global/segment.
-                    let fusion_delta =
-                        grad_fusion_correction_us(&prog, total_weight_bytes, &opts);
-                    let sym = passes::symbolic_volume(&prog, &g);
-                    let b_out = boundary_out_op
-                        .and_then(|t| states[t])
-                        .unwrap_or(ShardState::Replicated);
-                    let b_in = boundary_in_op
-                        .and_then(|t| states[t])
-                        .unwrap_or(ShardState::Replicated);
-                    (
-                        rep.comm_us + rep.comm_inter_us + fusion_delta,
-                        rep.compute_us,
-                        prog.peak_memory(opts.opt_factor),
-                        sym,
-                        b_in,
-                        b_out,
-                    )
-                }
-            };
-            match &pool {
-                // chunked dispatch: per-config jobs are ~0.5–1 ms, far too
-                // small for per-job channel overhead (§Perf iteration 2:
-                // threads=4 was SLOWER than serial before chunking)
-                Some(p) => {
-                    let chunk = (configs.len() / (opts.threads * 4)).max(1);
-                    let chunks: Vec<Vec<SegmentConfig>> =
-                        configs.chunks(chunk).map(|c| c.to_vec()).collect();
-                    let run_chunk = {
-                        let run_one = run_one.clone();
-                        move |chunk: Vec<SegmentConfig>| -> Vec<_> {
-                            chunk.into_iter().map(&run_one).collect()
-                        }
-                    };
-                    p.map(chunks, run_chunk).into_iter().flatten().collect()
-                }
-                None => configs.clone().into_iter().map(run_one).collect(),
+    let results: Vec<(f64, f64, u64, u64, ShardState, ShardState)> = if jobs.is_empty() {
+        Vec::new()
+    } else {
+        let t_profile = Instant::now();
+        let run_one = {
+            let g = Arc::new(g.clone());
+            let bs = Arc::new(bs.clone());
+            let wctx: Arc<Vec<WorkerCtx>> = Arc::new(ctxs);
+            let opts = opts.clone();
+            move |(u, cfg): (usize, SegmentConfig)| {
+                let ctx = &wctx[u];
+                let (prog, states) =
+                    compile_segment(&g, &bs, &ctx.blocks, &cfg, &ctx.filter, &opts);
+                let rep = simulate(&prog, &opts.platform, opts.mesh.intra, &opts.compute);
+                // steady-state correction: gradient buckets fuse ACROSS
+                // segments in the whole model, so this segment's grad
+                // sync runs at the efficiency of the globally
+                // aggregated message: t(R·b)/R with R = global/segment.
+                let fusion_delta =
+                    grad_fusion_correction_us(&prog, total_weight_bytes, &opts);
+                let sym = passes::symbolic_volume(&prog, &g);
+                let b_out = ctx
+                    .boundary_out_op
+                    .and_then(|t| states[t])
+                    .unwrap_or(ShardState::Replicated);
+                let b_in = ctx
+                    .boundary_in_op
+                    .and_then(|t| states[t])
+                    .unwrap_or(ShardState::Replicated);
+                (
+                    rep.comm_us + rep.comm_inter_us + fusion_delta,
+                    rep.compute_us,
+                    prog.peak_memory(opts.opt_factor),
+                    sym,
+                    b_in,
+                    b_out,
+                )
             }
         };
+        // chunked dispatch: per-config jobs are ~0.5–1 ms, far too small
+        // for per-job channel overhead (§Perf iteration 2: threads=4 was
+        // SLOWER than serial before chunking)
+        let out = if opts.threads > 1 && jobs.len() > 1 {
+            ThreadPool::new(opts.threads).map_chunked(jobs, run_one)
+        } else {
+            jobs.into_iter().map(run_one).collect()
+        };
+        stats.profile_wall_s = t_profile.elapsed().as_secs_f64();
+        out
+    };
 
+    // ---- reassemble per-unique profiles in order (results are ordered)
+    let mut db = ProfileDb::default();
+    let mut results = results.into_iter();
+    for (u, hit) in cached.into_iter().enumerate() {
+        if let Some(p) = hit {
+            // the Fig.-12 real-testbed estimate is model-intrinsic, not a
+            // function of local cache state — reproduce the exact cold-run
+            // charges from the cached step times (only wall-clock
+            // profiling is skipped on a hit)
+            let n_ops = n_ops_per_u[u];
+            let mut best_step = f64::INFINITY;
+            for cfg in 0..p.configs.len() {
+                let step_s = (p.t_c_us[cfg] + p.t_p_us[cfg]) * 1e-6;
+                charge_config(&mut stats, n_ops, step_s, &mut best_step);
+            }
+            db.segments.push(p);
+            continue;
+        }
+        let n_ops = n_ops_per_u[u];
         let mut prof = SegmentProfile::default();
-        prof.configs = configs;
+        prof.configs = all_configs[u].clone();
         let mut best_step = f64::INFINITY;
-        for (t_c, t_p, mem, sym, b_in, b_out) in results {
-            let step_s = (t_c + t_p) * 1e-6;
-            // estimated real-testbed costs (Fig. 12 model): XLA backend
-            // compile + 5 warmup + 10 timed runs, dynamic limit at 3× best
-            stats.programs_compiled += 1;
-            stats.programs_profiled += 1;
-            stats.est_compile_s += 0.25 + 2.5e-4 * n_ops as f64;
-            stats.est_profile_s += 0.1 + 15.0 * step_s;
-            let limited = 0.1 + 5.0 * step_s + (10.0 * step_s).min(30.0 * best_step);
-            stats.est_optimized_s += limited;
-            best_step = best_step.min(step_s);
+        for _ in 0..prof.configs.len() {
+            let (t_c, t_p, mem, sym, b_in, b_out) =
+                results.next().expect("one result per profiled config");
+            charge_config(&mut stats, n_ops, (t_c + t_p) * 1e-6, &mut best_step);
 
             prof.t_c_us.push(t_c);
             prof.t_p_us.push(t_p);
@@ -238,6 +314,16 @@ pub fn profile_model(g: &Graph, bs: &BlockSet, ss: &SegmentSet, opts: &ProfileOp
             prof.symbolic_volume.push(sym);
             prof.boundary_in.push(b_in);
             prof.boundary_out.push(b_out);
+        }
+        if let Some(c) = cache.as_deref_mut() {
+            c.put_segment(
+                CacheKey {
+                    fingerprint: ss.unique[u].fingerprint.clone(),
+                    platform: sig.clone(),
+                    parts,
+                },
+                prof.clone(),
+            );
         }
         db.segments.push(prof);
     }
@@ -249,10 +335,37 @@ pub fn profile_model(g: &Graph, bs: &BlockSet, ss: &SegmentSet, opts: &ProfileOp
         if db.reshard.contains_key(&(a, b)) {
             continue;
         }
-        let boundary = boundary_tensor(&g, w[1].fwd_range.0);
+        let boundary = boundary_tensor(g, w[1].fwd_range.0);
         let bytes = boundary.map(|t| g.ops[t].bytes() as u64).unwrap_or(0);
         let pa = &db.segments[a];
         let pb = &db.segments[b];
+        let fp_a = &ss.unique[a].fingerprint;
+        let fp_b = &ss.unique[b].fingerprint;
+        // the crossing tensor's size is not pinned down by the fingerprint
+        // pair alone, so it joins the reshard cache key
+        let rsig = format!("{sig};bytes{bytes}");
+        if let Some(t) = cache.as_deref().and_then(|c| c.get_reshard(fp_a, fp_b, &rsig, parts))
+        {
+            let rows_ok = t.t_r_us.len() == pa.configs.len()
+                && t.sym_vol.len() == pa.configs.len()
+                && t.t_r_us.iter().all(|r| r.len() == pb.configs.len())
+                && t.sym_vol.iter().all(|r| r.len() == pb.configs.len());
+            if rows_ok {
+                // reproduce the cold-run charges for the distinct
+                // boundary-state pairs (model-intrinsic, like segments)
+                let mut seen: std::collections::HashSet<(ShardState, ShardState)> =
+                    std::collections::HashSet::new();
+                for i in 0..pa.configs.len() {
+                    for j in 0..pb.configs.len() {
+                        if seen.insert((pa.boundary_out[i], pb.boundary_in[j])) {
+                            charge_reshard(&mut stats, t.t_r_us[i][j]);
+                        }
+                    }
+                }
+                db.reshard.insert((a, b), t.clone());
+                continue;
+            }
+        }
         // §4.2: resharding depends only on the boundary ParallelBlock pair's
         // strategies — i.e. on the distinct (out_state, in_state) pairs, not
         // on full config pairs. Price each distinct pair once (these are the
@@ -265,20 +378,18 @@ pub fn profile_model(g: &Graph, bs: &BlockSet, ss: &SegmentSet, opts: &ProfileOp
                 let key = (pa.boundary_out[i], pb.boundary_in[j]);
                 let cost = *priced.entry(key).or_insert_with(|| {
                     let c = reshard_cost_us(key.0, key.1, bytes, opts);
-                    stats.programs_compiled += 1;
-                    stats.est_compile_s += 0.05;
-                    stats.est_profile_s += 0.02 + 15.0 * c * 1e-6;
-                    stats.est_optimized_s += 0.02 + 5.0 * c * 1e-6;
+                    charge_reshard(&mut stats, c);
                     c
                 });
                 *cell = cost;
                 sym[i][j] = symbolic_reshard_bytes(key.0, key.1, bytes);
             }
         }
-        db.reshard.insert(
-            (a, b),
-            ReshardTable { t_r_us: table, sym_vol: sym, programs: priced.len() },
-        );
+        let fresh = ReshardTable { t_r_us: table, sym_vol: sym, programs: priced.len() };
+        if let Some(c) = cache.as_deref_mut() {
+            c.put_reshard(fp_a, fp_b, &rsig, parts, fresh.clone());
+        }
+        db.reshard.insert((a, b), fresh);
     }
 
     // §4.3: parallel compilation overlapped with profiling
@@ -287,6 +398,29 @@ pub fn profile_model(g: &Graph, bs: &BlockSet, ss: &SegmentSet, opts: &ProfileOp
     stats.wall_s = wall.elapsed().as_secs_f64();
     db.stats = stats;
     db
+}
+
+/// Fig.-12 real-testbed cost model for one profiled configuration: XLA
+/// backend compile + 5 warmup + 10 timed runs, dynamic limit at 3× best.
+/// Single source of truth for cold profiling AND the warm-hit replay —
+/// the warm==cold stats invariant depends on both paths charging here.
+fn charge_config(stats: &mut ProfilerStats, n_ops: usize, step_s: f64, best_step: &mut f64) {
+    stats.programs_compiled += 1;
+    stats.programs_profiled += 1;
+    stats.est_compile_s += 0.25 + 2.5e-4 * n_ops as f64;
+    stats.est_profile_s += 0.1 + 15.0 * step_s;
+    let limited = 0.1 + 5.0 * step_s + (10.0 * step_s).min(30.0 * *best_step);
+    stats.est_optimized_s += limited;
+    *best_step = best_step.min(step_s);
+}
+
+/// Fig.-12 charge for one distinct boundary-reshard program; like
+/// [`charge_config`], shared by the cold pricing path and warm-hit replay.
+fn charge_reshard(stats: &mut ProfilerStats, cost_us: f64) {
+    stats.programs_compiled += 1;
+    stats.est_compile_s += 0.05;
+    stats.est_profile_s += 0.02 + 15.0 * cost_us * 1e-6;
+    stats.est_optimized_s += 0.02 + 5.0 * cost_us * 1e-6;
 }
 
 /// Infer the sharding a segment expects on its incoming boundary tensor:
@@ -541,6 +675,64 @@ mod tests {
         assert!(db.stats.programs_compiled > 81);
         assert!(db.stats.est_compile_s > 0.0);
         assert!(db.stats.est_optimized_s <= db.stats.est_compile_s + db.stats.est_profile_s);
+    }
+
+    #[test]
+    fn warm_cache_skips_profiling_and_reproduces_db() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(3);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let mut cache = crate::profiler::ProfileCache::in_memory();
+
+        let cold = profile_model_cached(&g, &bs, &ss, &opts, Some(&mut cache));
+        assert_eq!(cold.stats.cache_hits, 0);
+        assert!(cold.stats.cache_misses > 0);
+        assert!(cold.stats.profile_wall_s > 0.0);
+        assert_eq!(cache.num_segments(), ss.num_unique());
+
+        let warm = profile_model_cached(&g, &bs, &ss, &opts, Some(&mut cache));
+        assert_eq!(warm.stats.cache_misses, 0);
+        assert_eq!(warm.stats.cache_hits, cold.stats.cache_misses);
+        assert_eq!(warm.stats.profile_wall_s, 0.0, "warm run must not profile");
+        assert_eq!(warm.segments, cold.segments);
+        assert_eq!(warm.reshard, cold.reshard);
+        assert_eq!(warm.profile_space(), cold.profile_space());
+        // the Fig.-12 estimate is model-intrinsic: identical on hits
+        assert!(warm.stats.est_compile_s == cold.stats.est_compile_s);
+        assert!(warm.stats.est_profile_s == cold.stats.est_profile_s);
+        assert!(warm.stats.est_optimized_s == cold.stats.est_optimized_s);
+        assert_eq!(warm.stats.programs_compiled, cold.stats.programs_compiled);
+    }
+
+    #[test]
+    fn different_platform_signature_misses_cache() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(2);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let mut cache = crate::profiler::ProfileCache::in_memory();
+        let a100 = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let v100 = ProfileOptions::new(Platform::v100_nvlink(), Mesh::flat(4));
+        profile_model_cached(&g, &bs, &ss, &a100, Some(&mut cache));
+        let other = profile_model_cached(&g, &bs, &ss, &v100, Some(&mut cache));
+        assert_eq!(other.stats.cache_hits, 0, "v100 must not reuse a100 profiles");
+        assert!(other.stats.cache_misses > 0);
+    }
+
+    #[test]
+    fn threaded_profiling_matches_serial_exactly() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(2);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let serial = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let threaded = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4)).with_threads(4);
+        let a = profile_model(&g, &bs, &ss, &serial);
+        let b = profile_model(&g, &bs, &ss, &threaded);
+        assert_eq!(a.segments, b.segments, "pool must preserve result order");
+        assert_eq!(a.reshard, b.reshard);
     }
 
     #[test]

@@ -137,8 +137,12 @@ impl Runtime {
         let ys: Vec<f64> = rates.iter().map(|r| max_rate / r.max(1.0)).collect();
         let (b, a) = stats::linfit(&xs, &ys);
         let sat = if a > 1e-9 { (b / a).clamp(1e6, 5e10) } else { 5e8 };
+        // quantize to 2 significant figures: the fit rides on wall-clock
+        // noise, and the profile cache keys on ComputeModel::signature() —
+        // a bit-stable sat keeps repeat calibrated runs cache-hitting
+        let mag = 10f64.powf(sat.log10().floor() - 1.0);
         let mut cm = ComputeModel::for_platform(platform);
-        cm.sat_flops = sat;
+        cm.sat_flops = (sat / mag).round() * mag;
         Ok(cm)
     }
 }

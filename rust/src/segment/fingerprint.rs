@@ -87,6 +87,18 @@ fn path_map(g: &Graph, t: OpId, target: OpId, depth: usize) -> Option<DimMap> {
     None
 }
 
+/// Compact stable 64-bit digest of a fingerprint string (FNV-1a). Used
+/// for human-scannable cache/CLI output; equality decisions always use
+/// the full string (the digest is display-only, collisions are harmless).
+pub fn fingerprint_digest(fp: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in fp.as_bytes() {
+        h ^= *b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
 fn encode(m: &DimMap) -> String {
     m.deps
         .iter()
@@ -142,6 +154,13 @@ mod tests {
             segment_fingerprint(&g, &bs, &l0),
             segment_fingerprint(&g, &bs, &l1)
         );
+    }
+
+    #[test]
+    fn digest_is_stable_and_separates_strings() {
+        assert_eq!(fingerprint_digest(""), 0xcbf29ce484222325);
+        assert_eq!(fingerprint_digest("dotPA"), fingerprint_digest("dotPA"));
+        assert_ne!(fingerprint_digest("dotPA"), fingerprint_digest("dotPB"));
     }
 
     #[test]

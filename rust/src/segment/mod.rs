@@ -15,7 +15,7 @@ pub mod fingerprint;
 use crate::graph::{Graph, Role};
 use crate::pblock::BlockSet;
 
-pub use fingerprint::segment_fingerprint;
+pub use fingerprint::{fingerprint_digest, segment_fingerprint};
 
 /// A segment instance: a contiguous run of ParallelBlocks.
 #[derive(Clone, Debug)]

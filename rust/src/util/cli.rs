@@ -55,6 +55,11 @@ impl Args {
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
+
+    /// Filesystem-path option (e.g. `--cache .cfp/profiles.json`).
+    pub fn get_path(&self, key: &str) -> Option<std::path::PathBuf> {
+        self.get(key).map(std::path::PathBuf::from)
+    }
 }
 
 #[cfg(test)]
@@ -81,6 +86,13 @@ mod tests {
         let a = parse("run");
         assert_eq!(a.get_or("platform", "a100-pcie"), "a100-pcie");
         assert_eq!(a.get_f64("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn path_option() {
+        let a = parse("search --cache .cfp/profiles.json");
+        assert_eq!(a.get_path("cache"), Some(std::path::PathBuf::from(".cfp/profiles.json")));
+        assert_eq!(a.get_path("other"), None);
     }
 
     #[test]

@@ -66,6 +66,15 @@ impl Json {
         self.as_f64().map(|f| f as i64)
     }
 
+    /// Strict non-negative integer accessor: rejects fractional values and
+    /// anything above 2^53 (where f64 stops being exact) rather than
+    /// truncating/saturating — corrupt data must fail parsing, not flow on.
+    pub fn as_u64(&self) -> Option<u64> {
+        self.as_f64()
+            .filter(|f| *f >= 0.0 && f.fract() == 0.0 && *f <= 9_007_199_254_740_992.0)
+            .map(|f| f as u64)
+    }
+
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(v) => Some(v),
@@ -404,6 +413,16 @@ mod tests {
         assert!(Json::parse("[1,]").is_err());
         assert!(Json::parse("12 34").is_err());
         assert!(Json::parse(r#""unterminated"#).is_err());
+    }
+
+    #[test]
+    fn u64_accessor_is_strict() {
+        assert_eq!(Json::parse("42").unwrap().as_u64(), Some(42));
+        assert_eq!(Json::parse("-1").unwrap().as_u64(), None);
+        assert_eq!(Json::parse("3.7").unwrap().as_u64(), None, "no truncation");
+        assert_eq!(Json::parse("1e30").unwrap().as_u64(), None, "no saturation");
+        let big = (1u64 << 52) + 3;
+        assert_eq!(Json::parse(&big.to_string()).unwrap().as_u64(), Some(big));
     }
 
     #[test]

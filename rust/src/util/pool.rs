@@ -87,6 +87,38 @@ impl ThreadPool {
         }
         out.into_iter().map(|r| r.expect("worker died")).collect()
     }
+
+    /// [`ThreadPool::map`] with batched dispatch: items are split into
+    /// ~4 chunks per worker so sub-millisecond jobs amortize the per-job
+    /// channel overhead (§Perf: fine-grained dispatch made threads=4
+    /// SLOWER than serial). Order is preserved.
+    pub fn map_chunked<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'static,
+        R: Send + 'static,
+        F: Fn(T) -> R + Send + Sync + 'static,
+    {
+        if items.is_empty() {
+            return Vec::new();
+        }
+        let chunk = (items.len() / (self.size * 4)).max(1);
+        let mut chunks: Vec<Vec<T>> = Vec::new();
+        let mut items = items.into_iter();
+        loop {
+            let c: Vec<T> = items.by_ref().take(chunk).collect();
+            if c.is_empty() {
+                break;
+            }
+            chunks.push(c);
+        }
+        let f = Arc::new(f);
+        self.map(chunks, move |chunk: Vec<T>| -> Vec<R> {
+            chunk.into_iter().map(|t| (*f)(t)).collect()
+        })
+        .into_iter()
+        .flatten()
+        .collect()
+    }
 }
 
 impl Drop for ThreadPool {
@@ -128,6 +160,15 @@ mod tests {
         let pool = ThreadPool::new(3);
         let out = pool.map((0..64).collect::<Vec<i32>>(), |x| x * x);
         assert_eq!(out, (0..64).map(|x| x * x).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_chunked_preserves_order() {
+        let pool = ThreadPool::new(4);
+        let out = pool.map_chunked((0..257).collect::<Vec<i64>>(), |x| x * 2 + 1);
+        assert_eq!(out, (0..257).map(|x| x * 2 + 1).collect::<Vec<_>>());
+        let empty = pool.map_chunked(Vec::<i64>::new(), |x| x);
+        assert!(empty.is_empty());
     }
 
     #[test]

@@ -1,0 +1,131 @@
+//! Integration tests for the persistent profile cache: a cold `run_cfp`
+//! populates the on-disk cache; a warm rerun (fresh process state — the
+//! cache is re-opened from disk) must produce a bit-identical plan while
+//! skipping the MetricsProfiling phase entirely.
+
+use cfp::cluster::Platform;
+use cfp::coordinator::{run_cfp, CfpOptions};
+use cfp::models::ModelCfg;
+use cfp::profiler::ProfileCache;
+
+fn temp_cache_dir(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cfp-itest-{tag}-{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn warm_cache_plan_is_bit_identical_and_profiling_is_skipped() {
+    let dir = temp_cache_dir("warm");
+    let path = dir.join("profiles.json");
+    let opts = CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(3),
+        Platform::a100_pcie(4),
+    )
+    .with_cache(&path);
+
+    let cold = run_cfp(&opts);
+    assert_eq!(cold.db.stats.cache_hits, 0, "first run starts from an empty cache");
+    assert!(cold.db.stats.cache_misses > 0);
+    assert!(cold.db.stats.profile_wall_s > 0.0);
+    assert!(path.exists(), "cache file written on save");
+
+    // second run: the cache is re-opened from disk, as a new process would
+    let warm = run_cfp(&opts);
+    assert_eq!(warm.db.stats.cache_misses, 0, "everything served from cache");
+    assert_eq!(warm.db.stats.cache_hits, cold.db.stats.cache_misses);
+
+    // MetricsProfiling is a lookup now: exactly zero profiled wall
+    assert_eq!(warm.db.stats.profile_wall_s, 0.0);
+    assert_eq!(warm.timings.metrics_profiling_s, 0.0);
+
+    // bit-identical plan and composed database
+    assert_eq!(warm.plan.choice, cold.plan.choice);
+    assert!(warm.plan.time_us == cold.plan.time_us, "time must round-trip exactly");
+    assert_eq!(warm.plan.mem_bytes, cold.plan.mem_bytes);
+    assert_eq!(warm.db.segments, cold.db.segments);
+    assert_eq!(warm.db.reshard, cold.db.reshard);
+    assert_eq!(warm.db.profile_space(), cold.db.profile_space());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn cache_invalidates_across_platforms_and_models() {
+    let dir = temp_cache_dir("invalidate");
+    let path = dir.join("profiles.json");
+
+    let a100 = CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(2),
+        Platform::a100_pcie(4),
+    )
+    .with_cache(&path);
+    let first = run_cfp(&a100);
+    assert!(first.db.stats.cache_misses > 0);
+
+    // different platform: same fingerprints, different signature → misses
+    let v100 = CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(2),
+        Platform::v100_nvlink(),
+    )
+    .with_cache(&path);
+    let other = run_cfp(&v100);
+    assert_eq!(other.db.stats.cache_hits, 0, "v100 must not reuse a100 profiles");
+
+    // different model shape: different fingerprints → misses
+    let wider = CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(2).with_batch(16),
+        Platform::a100_pcie(4),
+    )
+    .with_cache(&path);
+    let wide = run_cfp(&wider);
+    assert_eq!(wide.db.stats.cache_hits, 0, "batch change must invalidate");
+
+    // and the original still hits everything
+    let again = run_cfp(&a100);
+    assert_eq!(again.db.stats.cache_misses, 0);
+    assert_eq!(again.plan.choice, first.plan.choice);
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn corrupt_cache_file_degrades_to_cold_run() {
+    let dir = temp_cache_dir("corrupt");
+    let path = dir.join("profiles.json");
+    std::fs::write(&path, "{ this is not json").unwrap();
+
+    let opts = CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(2),
+        Platform::a100_pcie(4),
+    )
+    .with_cache(&path);
+    let r = run_cfp(&opts);
+    assert!(r.db.stats.cache_misses > 0);
+    assert_eq!(r.db.stats.cache_hits, 0);
+
+    // the bad file was replaced by a valid one
+    let reopened = ProfileCache::open(&path);
+    assert_eq!(reopened.num_segments(), r.segments.num_unique());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn threaded_cold_run_matches_serial_cold_run() {
+    // the warm/cold guarantee composes with profiling parallelism: a
+    // threaded cold run must fill the cache with the same numbers
+    let serial = run_cfp(&CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(2),
+        Platform::a100_pcie(4),
+    ));
+    let mut topts = CfpOptions::new(
+        ModelCfg::preset("gpt-tiny").with_layers(2),
+        Platform::a100_pcie(4),
+    );
+    topts.threads = 4;
+    let threaded = run_cfp(&topts);
+    assert_eq!(serial.plan.choice, threaded.plan.choice);
+    assert!(serial.plan.time_us == threaded.plan.time_us);
+    assert_eq!(serial.db.segments, threaded.db.segments);
+}

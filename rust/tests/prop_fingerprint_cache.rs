@@ -1,0 +1,112 @@
+//! Property tests for the cache subsystem's two load-bearing invariants:
+//! fingerprints are deterministic (a cache keyed on them is sound) and
+//! sensitive to structural change (a cache keyed on them is safe), and
+//! profile databases/caches survive a JSON save→load round trip exactly
+//! (a warm run is bit-identical to its cold run).
+
+use cfp::cluster::Platform;
+use cfp::models::{build_training, ModelCfg};
+use cfp::pblock::build_parallel_blocks;
+use cfp::profiler::{profile_model, profile_model_cached, ProfileCache, ProfileOptions};
+use cfp::segment::{extract_segments, fingerprint_digest};
+use cfp::spmd::Mesh;
+use cfp::util::proptest::Prop as Harness;
+use cfp::util::{Json, Pcg64};
+
+fn random_model(rng: &mut Pcg64) -> ModelCfg {
+    let mut cfg = ModelCfg::preset(*rng.choice(&["gpt-tiny", "moe-tiny"]));
+    cfg.layers = 1 + rng.below(3) as usize;
+    cfg.seq = *rng.choice(&[16usize, 32]);
+    cfg.batch = *rng.choice(&[4usize, 8]);
+    cfg
+}
+
+fn fingerprints(cfg: &ModelCfg, parts: usize) -> Vec<String> {
+    let g = build_training(cfg);
+    let bs = build_parallel_blocks(&g, parts);
+    let ss = extract_segments(&g, &bs);
+    ss.unique.iter().map(|u| u.fingerprint.clone()).collect()
+}
+
+/// Rebuilding the same model from scratch yields byte-identical
+/// fingerprints — the soundness precondition for keying a persistent
+/// cache on them (stale keys would silently re-profile; unstable keys
+/// would poison lookups).
+#[test]
+fn prop_fingerprints_deterministic_across_rebuilds() {
+    Harness::new(16, 0xF1CA).check("fingerprint determinism", |rng| {
+        let cfg = random_model(rng);
+        let parts = *rng.choice(&[2usize, 4]);
+        let a = fingerprints(&cfg, parts);
+        let b = fingerprints(&cfg, parts);
+        assert_eq!(a, b, "rebuild changed fingerprints");
+        let da: Vec<u64> = a.iter().map(|f| fingerprint_digest(f)).collect();
+        let db_: Vec<u64> = b.iter().map(|f| fingerprint_digest(f)).collect();
+        assert_eq!(da, db_);
+    });
+}
+
+/// Structurally different segments (changed batch/seq/hidden) never share
+/// a fingerprint vector — the safety precondition: a cache entry can only
+/// be reused where re-profiling would reproduce it.
+#[test]
+fn prop_fingerprints_differ_for_structurally_different_segments() {
+    Harness::new(16, 0xD1FF).check("fingerprint sensitivity", |rng| {
+        let cfg = random_model(rng);
+        let mut mutated = cfg.clone();
+        match rng.below(3) {
+            0 => mutated.batch *= 2,
+            1 => mutated.seq *= 2,
+            _ => {
+                mutated.hidden *= 2;
+                mutated.ffn *= 2;
+            }
+        }
+        let parts = 2;
+        let a = fingerprints(&cfg, parts);
+        let b = fingerprints(&mutated, parts);
+        assert_ne!(a, b, "structural change must change some fingerprint");
+        // within one model, unique segments are pairwise distinct by
+        // construction — the digests should separate them too
+        let mut digests: Vec<u64> = a.iter().map(|f| fingerprint_digest(f)).collect();
+        digests.sort_unstable();
+        digests.dedup();
+        assert_eq!(digests.len(), a.len(), "digest collision within a model");
+    });
+}
+
+/// ProfileDb JSON round trip is exact (floats are written in shortest
+/// round-trippable form), and a ProfileCache reloaded from its JSON file
+/// serves a warm run that reproduces the cold ProfileDb bit-for-bit.
+#[test]
+fn prop_profile_db_and_cache_round_trip() {
+    Harness::new(6, 0x5A7E).check("profile round trip", |rng| {
+        let cfg = random_model(rng);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 2);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(2));
+
+        // db → json text → db
+        let mut cache = ProfileCache::in_memory();
+        let cold = profile_model_cached(&g, &bs, &ss, &opts, Some(&mut cache));
+        let text = cold.to_json().to_string();
+        let parsed = cfp::profiler::ProfileDb::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(parsed, cold, "ProfileDb JSON round trip must be exact");
+
+        // cache → json text → cache → warm run
+        let reloaded =
+            ProfileCache::from_json(&Json::parse(&cache.to_json().to_string()).unwrap())
+                .expect("cache json reparses");
+        let mut reloaded = reloaded;
+        let warm = profile_model_cached(&g, &bs, &ss, &opts, Some(&mut reloaded));
+        assert_eq!(warm.stats.cache_misses, 0);
+        assert_eq!(warm.stats.profile_wall_s, 0.0);
+        assert_eq!(warm.segments, cold.segments);
+        assert_eq!(warm.reshard, cold.reshard);
+
+        // and an uncached profile of the same model agrees with the cold one
+        let plain = profile_model(&g, &bs, &ss, &opts);
+        assert_eq!(plain.segments, cold.segments);
+    });
+}

@@ -1,0 +1,212 @@
+//! Typed stub of the `xla` PJRT bindings.
+//!
+//! The real crate wraps libxla's PJRT CPU client. This vendored stub keeps
+//! the exact type/method surface the repo compiles against, with host-side
+//! [`Literal`] construction fully functional (used by `runtime::random_*`
+//! and the trainer's input packing) and every device-side operation —
+//! client creation, HLO parsing, compilation, execution — returning a
+//! descriptive error. `runtime::Runtime::open*` therefore fails fast and
+//! all callers take their existing "no artifacts / no PJRT" skip paths.
+
+use std::fmt;
+use std::path::Path;
+
+/// Error type mirroring the bindings' debug-printable error.
+#[derive(Clone, Debug)]
+pub struct XlaError(pub String);
+
+impl fmt::Display for XlaError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for XlaError {}
+
+pub type Result<T> = std::result::Result<T, XlaError>;
+
+fn unavailable(what: &str) -> XlaError {
+    XlaError(format!(
+        "{what}: PJRT backend unavailable (vendored xla stub — link the real \
+         xla crate to execute artifacts)"
+    ))
+}
+
+/// Element types a [`Literal`] can hold host-side (public because the
+/// [`NativeType`] trait mentions it in its method signatures).
+#[derive(Clone, Debug)]
+#[doc(hidden)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+    Tuple(Vec<Literal>),
+}
+
+/// Host-side tensor literal (fully functional in the stub).
+#[derive(Clone, Debug)]
+pub struct Literal {
+    data: Data,
+    dims: Vec<i64>,
+}
+
+/// Rust scalar types storable in a [`Literal`].
+pub trait NativeType: Copy + Sized {
+    fn to_data(v: &[Self]) -> Data;
+    fn from_data(d: &Data) -> Option<Vec<Self>>;
+}
+
+impl NativeType for f32 {
+    fn to_data(v: &[f32]) -> Data {
+        Data::F32(v.to_vec())
+    }
+    fn from_data(d: &Data) -> Option<Vec<f32>> {
+        match d {
+            Data::F32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl NativeType for i32 {
+    fn to_data(v: &[i32]) -> Data {
+        Data::I32(v.to_vec())
+    }
+    fn from_data(d: &Data) -> Option<Vec<i32>> {
+        match d {
+            Data::I32(v) => Some(v.clone()),
+            _ => None,
+        }
+    }
+}
+
+impl Literal {
+    /// Rank-1 literal from a host slice.
+    pub fn vec1<T: NativeType>(v: &[T]) -> Literal {
+        Literal { data: T::to_data(v), dims: vec![v.len() as i64] }
+    }
+
+    pub fn element_count(&self) -> usize {
+        match &self.data {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+            Data::Tuple(t) => t.len(),
+        }
+    }
+
+    pub fn dims(&self) -> &[i64] {
+        &self.dims
+    }
+
+    /// Reinterpret the literal under new dimensions (element count must
+    /// match; an empty dims list is a scalar).
+    pub fn reshape(&self, dims: &[i64]) -> Result<Literal> {
+        let want: i64 = dims.iter().product();
+        let have = self.element_count() as i64;
+        if want != have {
+            return Err(XlaError(format!(
+                "reshape: cannot view {have} elements as {dims:?}"
+            )));
+        }
+        Ok(Literal { data: self.data.clone(), dims: dims.to_vec() })
+    }
+
+    pub fn to_vec<T: NativeType>(&self) -> Result<Vec<T>> {
+        T::from_data(&self.data)
+            .ok_or_else(|| XlaError("to_vec: element type mismatch".to_string()))
+    }
+
+    /// Flatten a tuple literal into its elements.
+    pub fn to_tuple(self) -> Result<Vec<Literal>> {
+        match self.data {
+            Data::Tuple(t) => Ok(t),
+            data => Ok(vec![Literal { data, dims: self.dims }]),
+        }
+    }
+}
+
+/// PJRT client handle. `cpu()` always errors in the stub.
+pub struct PjRtClient {
+    _priv: (),
+}
+
+impl PjRtClient {
+    pub fn cpu() -> Result<PjRtClient> {
+        Err(unavailable("PjRtClient::cpu"))
+    }
+
+    pub fn compile(&self, _comp: &XlaComputation) -> Result<PjRtLoadedExecutable> {
+        Err(unavailable("PjRtClient::compile"))
+    }
+}
+
+/// Parsed HLO module handle.
+pub struct HloModuleProto {
+    _priv: (),
+}
+
+impl HloModuleProto {
+    pub fn from_text_file(path: impl AsRef<Path>) -> Result<HloModuleProto> {
+        Err(unavailable(&format!(
+            "HloModuleProto::from_text_file({})",
+            path.as_ref().display()
+        )))
+    }
+}
+
+pub struct XlaComputation {
+    _priv: (),
+}
+
+impl XlaComputation {
+    pub fn from_proto(_proto: &HloModuleProto) -> XlaComputation {
+        XlaComputation { _priv: () }
+    }
+}
+
+pub struct PjRtLoadedExecutable {
+    _priv: (),
+}
+
+impl PjRtLoadedExecutable {
+    pub fn execute<L>(&self, _args: &[L]) -> Result<Vec<Vec<PjRtBuffer>>> {
+        Err(unavailable("PjRtLoadedExecutable::execute"))
+    }
+}
+
+pub struct PjRtBuffer {
+    _priv: (),
+}
+
+impl PjRtBuffer {
+    pub fn to_literal_sync(&self) -> Result<Literal> {
+        Err(unavailable("PjRtBuffer::to_literal_sync"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn literal_round_trip() {
+        let l = Literal::vec1(&[1.0f32, 2.0, 3.0, 4.0]);
+        let r = l.reshape(&[2, 2]).unwrap();
+        assert_eq!(r.dims(), &[2, 2]);
+        assert_eq!(r.to_vec::<f32>().unwrap(), vec![1.0, 2.0, 3.0, 4.0]);
+        assert!(r.to_vec::<i32>().is_err());
+        assert!(l.reshape(&[3, 3]).is_err());
+    }
+
+    #[test]
+    fn scalar_reshape() {
+        let l = Literal::vec1(&[0.5f32]).reshape(&[]).unwrap();
+        assert_eq!(l.element_count(), 1);
+        assert!(l.dims().is_empty());
+    }
+
+    #[test]
+    fn device_paths_error() {
+        assert!(PjRtClient::cpu().is_err());
+        assert!(HloModuleProto::from_text_file("x.hlo.txt").is_err());
+    }
+}
