@@ -50,7 +50,8 @@ fn comm_kinds(rep: &cfp::cluster::SimReport) -> String {
 fn moe_case() {
     println!("=== (a,b) GShard-MoE on 4x A100-PCIe ===");
     let platform = Platform::a100_pcie(4).scaled_testbed();
-    let mut t = Table::new(&["batch", "framework", "moe-segment strategies", "comm", "top comm kinds"]);
+    let mut t =
+        Table::new(&["batch", "framework", "moe-segment strategies", "comm", "top comm kinds"]);
     for batch in [8usize, 32] {
         let model = ModelCfg::preset("moe-7.1b")
             .with_layers(4)
@@ -101,7 +102,13 @@ fn llama_case() {
     let r = run_cfp(&opts);
     let alpa = baselines::alpa_plan(&r.segments, &r.db);
 
-    let mut t = Table::new(&["framework", "layer-segment strategies", "comm", "compute", "top comm kinds"]);
+    let mut t = Table::new(&[
+        "framework",
+        "layer-segment strategies",
+        "comm",
+        "compute",
+        "top comm kinds",
+    ]);
     for (name, choice) in [("Alpa", &alpa.choice), ("CFP", &r.plan.choice)] {
         let rep = r.simulate_choice(&opts, choice);
         t.row(vec![

@@ -1,0 +1,55 @@
+//! Two-level planner evaluation: single-stage CFP vs inter-op pipeline
+//! staging vs the naive equal-split pipeline, across the GPT/LLAMA/MoE
+//! presets on the single-node and two-node testbeds.
+//!
+//! Usage: `cargo run --release --example pipeline_eval [-- --microbatches M]`
+
+use cfp::cluster::Platform;
+use cfp::harness::{fmt_us, pipeline_eval_models, pipeline_row, Table};
+use cfp::spmd::Mesh;
+use cfp::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env();
+    let microbatches = args.get_usize("microbatches", 8);
+    let platforms = [
+        (Platform::a100_pcie(4).scaled_testbed(), Mesh::flat(4)),
+        (Platform::a100_two_node().scaled_testbed(), Mesh { intra: 8, nodes: 2 }),
+    ];
+    for (platform, mesh) in platforms {
+        println!(
+            "\n=== {} ({} GPUs, m={microbatches}) ===",
+            platform.name,
+            mesh.total()
+        );
+        let mut t = Table::new(&[
+            "model",
+            "single-stage",
+            "two-level",
+            "naive pipeline",
+            "stages",
+            "bubble",
+            "vs single",
+            "vs naive",
+        ]);
+        for model in pipeline_eval_models() {
+            let (row, _) = pipeline_row(&model, platform, mesh, microbatches);
+            t.row(vec![
+                row.model.clone(),
+                fmt_us(row.single_us),
+                fmt_us(row.two_level_us),
+                fmt_us(row.naive_us),
+                row.stages.to_string(),
+                format!("{:.1}%", row.bubble * 100.0),
+                format!("{:.2}x", row.single_us / row.two_level_us),
+                format!("{:.2}x", row.naive_us / row.two_level_us),
+            ]);
+        }
+        t.print();
+    }
+    println!(
+        "\n(shape target: two-level ≤ single-stage everywhere — k = 1 is in the \
+         search space — and strictly below the naive pipeline wherever staging \
+         or intra-op co-optimization matters)"
+    );
+}

@@ -157,6 +157,20 @@ pub fn symbolic_cost(ss: &SegmentSet, db: &ProfileDb, choice: &[usize]) -> u64 {
     vol
 }
 
+/// Naive pipeline baseline (GPipe/Megatron default recipe): equal-layer
+/// stage split with plain data parallelism inside every stage, composed
+/// with the same 1F1B schedule arithmetic as the two-level planner —
+/// delegates to [`crate::interop::naive_equal_split`] so the comparison
+/// isolates plan quality (split choice + intra-op configs), not the
+/// schedule model. This is the bar the two-level CFP planner must clear.
+pub fn naive_pipeline_plan(
+    g: &Graph,
+    ctxs: &crate::interop::StageContexts,
+    opts: &crate::interop::PipelineOptions,
+) -> Option<crate::interop::PipelinePlan> {
+    crate::interop::naive_equal_split(g, ctxs, opts)
+}
+
 /// ZeRO stage-1 on top of DP: optimizer states sharded across all devices;
 /// gradient AllReduce becomes ReduceScatter + AllGather of updated params.
 /// Approximated on top of the DP plan's profile: memory drops by the

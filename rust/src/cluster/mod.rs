@@ -22,4 +22,4 @@ pub mod sim;
 
 pub use collective::collective_time_us;
 pub use platform::{LinkModel, Platform};
-pub use sim::{simulate, SimReport};
+pub use sim::{simulate, simulate_pipeline, PipelineSchedule, SimReport};

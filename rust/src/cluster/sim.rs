@@ -102,7 +102,12 @@ pub fn kind_name(k: CollKind) -> &'static str {
 /// Simulate a program on `platform`, with `intra_n` devices in the
 /// intra-op group (≤ gpus_per_node) and the platform's node count on the
 /// inter axis.
-pub fn simulate(prog: &SpmdProgram, platform: &Platform, intra_n: usize, cm: &ComputeModel) -> SimReport {
+pub fn simulate(
+    prog: &SpmdProgram,
+    platform: &Platform,
+    intra_n: usize,
+    cm: &ComputeModel,
+) -> SimReport {
     let mut r = SimReport::default();
     let mut wire_sum = 0.0f64;
     let mut time_sum = 0.0f64;
@@ -142,6 +147,46 @@ pub fn simulate(prog: &SpmdProgram, platform: &Platform, intra_n: usize, cm: &Co
     r.total_us = r.compute_us + r.comm_us + r.comm_inter_us;
     r.achieved_bw_gbps = if time_sum > 0.0 { wire_sum / time_sum } else { 0.0 };
     r
+}
+
+/// Composed inter-op pipeline schedule (the two-level planner's outer
+/// level): `microbatches` identical jobs flow through `k` stages in order,
+/// stage `i` taking `latencies_us[i]` per microbatch (intra-op stage time
+/// plus incoming point-to-point transfer).
+#[derive(Clone, Debug, Default)]
+pub struct PipelineSchedule {
+    /// end-to-end step time (last stage finishes the last microbatch)
+    pub makespan_us: f64,
+    /// per-stage busy time (`latency · microbatches`)
+    pub stage_busy_us: Vec<f64>,
+    /// 1 − busiest-stage share of the makespan (the pipeline bubble)
+    pub bubble_fraction: f64,
+}
+
+/// Event-driven simulation of the composed pipeline schedule: stage `i`
+/// starts microbatch `j` once stage `i−1` delivered `j` AND stage `i`
+/// finished `j−1` (synchronous 1F1B-style flow line, unlimited buffers).
+/// For identical microbatches this makespan equals the closed form
+/// `Σᵢ lᵢ + (m−1)·maxᵢ lᵢ` — the inter-op DP optimizes exactly that
+/// quantity, and `interop` tests pin the two to each other.
+pub fn simulate_pipeline(latencies_us: &[f64], microbatches: usize) -> PipelineSchedule {
+    let m = microbatches.max(1);
+    // finish[j]: time the previous stage delivered microbatch j
+    let mut finish = vec![0.0f64; m];
+    for &l in latencies_us {
+        let mut prev_done = 0.0f64;
+        for f in finish.iter_mut() {
+            let start = if *f > prev_done { *f } else { prev_done };
+            prev_done = start + l;
+            *f = prev_done;
+        }
+    }
+    let makespan_us = finish.last().copied().unwrap_or(0.0);
+    let stage_busy_us: Vec<f64> = latencies_us.iter().map(|&l| l * m as f64).collect();
+    let busiest = stage_busy_us.iter().cloned().fold(0.0f64, f64::max);
+    let bubble_fraction =
+        if makespan_us > 0.0 { (1.0 - busiest / makespan_us).max(0.0) } else { 0.0 };
+    PipelineSchedule { makespan_us, stage_busy_us, bubble_fraction }
 }
 
 #[cfg(test)]
@@ -195,6 +240,41 @@ mod tests {
         assert!((r.total_us - r.compute_us - r.comm_us - r.comm_inter_us).abs() < 1e-6);
         let kind_total: f64 = r.comm_by_kind.values().map(|(_, _, t)| t).sum();
         assert!((kind_total - r.comm_us - r.comm_inter_us).abs() < 1e-6);
+    }
+
+    #[test]
+    fn pipeline_schedule_matches_closed_form() {
+        for (lats, m) in [
+            (vec![10.0], 1usize),
+            (vec![10.0], 8),
+            (vec![5.0, 5.0, 5.0], 4),
+            (vec![3.0, 9.0, 6.0, 1.0], 6),
+        ] {
+            let sim = simulate_pipeline(&lats, m);
+            let sum: f64 = lats.iter().sum();
+            let mx = lats.iter().cloned().fold(0.0f64, f64::max);
+            let closed = sum + (m as f64 - 1.0) * mx;
+            assert!(
+                (sim.makespan_us - closed).abs() < 1e-6 * closed.max(1.0),
+                "{lats:?} m={m}: sim {} vs closed {closed}",
+                sim.makespan_us
+            );
+        }
+    }
+
+    #[test]
+    fn single_stage_pipeline_is_serial() {
+        let sim = simulate_pipeline(&[7.25], 8);
+        assert!((sim.makespan_us - 8.0 * 7.25).abs() < 1e-9);
+        assert!(sim.bubble_fraction.abs() < 1e-12, "no bubble with one stage");
+    }
+
+    #[test]
+    fn unbalanced_stages_grow_the_bubble() {
+        let balanced = simulate_pipeline(&[5.0, 5.0], 8);
+        let skewed = simulate_pipeline(&[2.0, 8.0], 8);
+        assert!(skewed.makespan_us > balanced.makespan_us);
+        assert!(skewed.bubble_fraction > balanced.bubble_fraction);
     }
 
     #[test]

@@ -10,11 +10,13 @@ use crate::cluster::sim::ComputeModel;
 use crate::cluster::{simulate, Platform};
 use crate::cost::{self, Plan};
 use crate::graph::Graph;
+use crate::interop;
+use crate::interop::StageSpec;
 use crate::models::{build_training, ModelCfg};
 use crate::pblock::{build_parallel_blocks, BlockSet};
 use crate::profiler::{profile_model_cached, ProfileCache, ProfileDb, ProfileOptions};
 use crate::segment::{extract_segments, SegmentSet};
-use crate::spmd::{Mesh};
+use crate::spmd::Mesh;
 
 #[derive(Clone)]
 pub struct CfpOptions {
@@ -30,6 +32,15 @@ pub struct CfpOptions {
     /// turns the MetricsProfiling phase into a lookup (`--cache` in the
     /// CLI; format documented in ROADMAP.md "Profile cache").
     pub cache_path: Option<std::path::PathBuf>,
+    /// LRU bound on persistent-cache entries (`--cache-max-entries`);
+    /// None → unbounded (the pre-PR-2 behaviour)
+    pub cache_max_entries: Option<usize>,
+    /// inter-op pipeline stages for [`run_cfp_two_level`] (`--stages`);
+    /// `Single` keeps today's one-level behaviour
+    pub stages: StageSpec,
+    /// gradient-accumulation microbatches for the pipeline bubble model
+    /// (`--microbatches`)
+    pub microbatches: usize,
 }
 
 impl CfpOptions {
@@ -43,12 +54,44 @@ impl CfpOptions {
             threads: 1,
             compute: None,
             cache_path: None,
+            cache_max_entries: None,
+            stages: StageSpec::Single,
+            microbatches: 8,
         }
     }
 
     pub fn with_cache(mut self, path: impl Into<std::path::PathBuf>) -> CfpOptions {
         self.cache_path = Some(path.into());
         self
+    }
+
+    pub fn with_stages(mut self, spec: StageSpec) -> CfpOptions {
+        self.stages = spec;
+        self
+    }
+
+    pub fn with_microbatches(mut self, m: usize) -> CfpOptions {
+        self.microbatches = m.max(1);
+        self
+    }
+
+    /// The inter-op planner's view of these options.
+    pub fn pipeline_options(&self) -> interop::PipelineOptions {
+        interop::PipelineOptions {
+            platform: self.platform,
+            mesh: self.mesh,
+            mem_cap: self.mem_cap,
+            threads: self.threads,
+            compute: self.compute.clone(),
+            microbatches: self.microbatches,
+            spec: self.stages,
+        }
+    }
+
+    fn open_cache(&self) -> Option<ProfileCache> {
+        let mut cache = self.cache_path.as_ref().map(ProfileCache::open)?;
+        cache.set_max_entries(self.cache_max_entries);
+        Some(cache)
     }
 }
 
@@ -172,14 +215,18 @@ fn pretty(label: &str) -> &str {
 /// served from / written back to the persistent cache, so a repeat run on
 /// the same model + platform skips MetricsProfiling entirely.
 pub fn run_cfp(opts: &CfpOptions) -> CfpResult {
-    let mut cache = opts.cache_path.as_ref().map(ProfileCache::open);
+    let mut cache = opts.open_cache();
     let result = run_cfp_with_cache(opts, cache.as_mut());
-    if let Some(c) = cache.as_mut() {
+    save_cache(cache.as_mut());
+    result
+}
+
+fn save_cache(cache: Option<&mut ProfileCache>) {
+    if let Some(c) = cache {
         if let Err(e) = c.save() {
             eprintln!("cfp: could not persist profile cache: {e}");
         }
     }
-    result
 }
 
 /// [`run_cfp`] against a caller-owned cache (in-memory or file-backed);
@@ -221,6 +268,59 @@ pub fn run_cfp_with_cache(opts: &CfpOptions, cache: Option<&mut ProfileCache>) -
     timings.compose_search_s = t2.elapsed().as_secs_f64();
 
     CfpResult { graph, blocks, segments, db, plan, timings, mesh: opts.mesh }
+}
+
+/// Output of the two-level (inter-op × intra-op) planner.
+pub struct TwoLevelResult {
+    /// the single-stage CFP result; its whole-cluster artifacts back the
+    /// `k = 1` pipeline context, so the two runs share one profile pass
+    pub single: CfpResult,
+    /// best composed pipeline plan (never slower than `single` under
+    /// `StageSpec::Auto`, since `k = 1` is a candidate)
+    pub pipeline: interop::PipelinePlan,
+    /// naive equal-layer-split + DDP-inside baseline over the same
+    /// contexts — the bar the two-level planner has to clear
+    pub naive: interop::PipelinePlan,
+}
+
+/// Run the two-level planner: the single-stage CFP pipeline first (its
+/// artifacts are adopted as the whole-cluster stage context), then the
+/// inter-op stage DP over every candidate stage count, plus the naive
+/// equal-split pipeline baseline. All sub-mesh profiling goes through the
+/// same persistent cache as `run_cfp`, so warm two-level runs skip
+/// MetricsProfiling for every stage count at once.
+pub fn run_cfp_two_level(opts: &CfpOptions) -> TwoLevelResult {
+    let mut cache = opts.open_cache();
+    let result = run_cfp_two_level_with_cache(opts, cache.as_mut());
+    save_cache(cache.as_mut());
+    result
+}
+
+/// [`run_cfp_two_level`] against a caller-owned cache.
+pub fn run_cfp_two_level_with_cache(
+    opts: &CfpOptions,
+    mut cache: Option<&mut ProfileCache>,
+) -> TwoLevelResult {
+    let single = run_cfp_with_cache(opts, cache.as_deref_mut());
+
+    let popts = opts.pipeline_options();
+    let mut ctxs = interop::StageContexts::new();
+    // the single-stage artifacts ARE the whole-cluster context: k = 1
+    // reuses them verbatim (bit-identical plan, no second profile pass)
+    ctxs.adopt(interop::StageContext {
+        devices: opts.mesh.total(),
+        mesh: opts.mesh,
+        blocks: single.blocks.clone(),
+        segments: single.segments.clone(),
+        db: single.db.clone(),
+    });
+    ctxs.ensure_all(&single.graph, &popts, cache.as_deref_mut());
+
+    let pipeline = interop::plan_pipeline(&single.graph, &ctxs, &popts)
+        .expect("k = 1 is always a feasible pipeline candidate");
+    let naive = interop::naive_equal_split(&single.graph, &ctxs, &popts)
+        .expect("k = 1 is always a feasible pipeline candidate");
+    TwoLevelResult { single, pipeline, naive }
 }
 
 /// Plans from every framework for a model/platform (Fig. 7 row).
@@ -269,6 +369,25 @@ mod tests {
         {
             assert!(c.cfp.time_us <= p.time_us + 1e-6, "{name}");
         }
+    }
+
+    #[test]
+    fn two_level_auto_never_loses_to_single_stage() {
+        let opts = CfpOptions::new(
+            ModelCfg::preset("gpt-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        )
+        .with_stages(StageSpec::Auto);
+        let r = run_cfp_two_level(&opts);
+        // k = 1 is in the candidate set with exactly the single-stage time
+        assert!(
+            r.pipeline.step_time_us <= r.single.plan.time_us + 1e-9,
+            "two-level {} vs single {}",
+            r.pipeline.step_time_us,
+            r.single.plan.time_us
+        );
+        assert!(r.naive.step_time_us > 0.0);
+        assert!(!r.pipeline.stages.is_empty());
     }
 
     #[test]

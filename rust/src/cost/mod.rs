@@ -6,6 +6,26 @@
 //! (time, memory) per (position, config) state, so fingerprint-equal
 //! segments may pick *different* configs to ride the memory cap — the
 //! §4.4 "some segments fast-but-fat, others lean-but-slow" behaviour.
+//!
+//! # Invariants
+//!
+//! * **Chain contiguity.** Every searcher walks `SegmentSet::instances`
+//!   in chain order and charges `T_R` only between *adjacent* instances;
+//!   a [`Plan`] for the span `[lo, hi)` is meaningful only for that
+//!   contiguous run (the inter-op planner in [`crate::interop`] relies on
+//!   this: a pipeline stage is a contiguous span, and the reshard at a
+//!   stage cut is replaced by the pipeline's point-to-point transfer).
+//! * **Pareto-prune correctness.** The per-(position, config) frontier
+//!   keeps only (time, memory)-undominated prefixes. Dropping a dominated
+//!   point is exact: both the remaining time-to-go and the memory cap are
+//!   monotone in (time, mem), so a dominated prefix can never complete
+//!   into a strictly better full plan. The `FRONTIER_CAP` thinning step
+//!   is the only approximation (it keeps endpoints, so the unconstrained
+//!   optimum and the min-memory plan always survive; the
+//!   `dp_matches_brute_force_*` tests bound its error).
+//! * **Span composition.** `search(ss, ..) == search_span(ss, .., 0, n)`
+//!   by construction — the whole-chain search is the degenerate span, so
+//!   single-stage plans and `k = 1` pipeline stages are bit-identical.
 
 use std::sync::Arc;
 
@@ -23,17 +43,33 @@ pub struct Plan {
 
 /// Eq. 8 + Eq. 9 for an explicit choice vector.
 pub fn plan_cost(ss: &SegmentSet, db: &ProfileDb, choice: &[usize]) -> (f64, u64) {
-    assert_eq!(choice.len(), ss.instances.len());
+    plan_cost_span(ss, db, choice, 0, ss.instances.len())
+}
+
+/// Eq. 8 + Eq. 9 restricted to the contiguous instance span `[lo, hi)`.
+/// `choice[i]` is the config of instance `lo + i`; boundary resharding is
+/// charged only *inside* the span (the cost of entering the span is the
+/// caller's problem — a stage cut replaces it with a pipeline transfer).
+pub fn plan_cost_span(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    choice: &[usize],
+    lo: usize,
+    hi: usize,
+) -> (f64, u64) {
+    assert!(lo <= hi && hi <= ss.instances.len());
+    assert_eq!(choice.len(), hi - lo);
     let mut time = 0.0;
     let mut mem = 0u64;
-    for (n, inst) in ss.instances.iter().enumerate() {
+    for (i, n) in (lo..hi).enumerate() {
+        let inst = &ss.instances[n];
         let u = inst.unique_id;
         let prof = &db.segments[u];
-        time += prof.t_c_us[choice[n]] + prof.t_p_us[choice[n]];
-        mem += prof.mem_bytes[choice[n]];
-        if n > 0 {
+        time += prof.t_c_us[choice[i]] + prof.t_p_us[choice[i]];
+        mem += prof.mem_bytes[choice[i]];
+        if n > lo {
             let pu = ss.instances[n - 1].unique_id;
-            time += db.reshard_us(pu, choice[n - 1], u, choice[n]);
+            time += db.reshard_us(pu, choice[i - 1], u, choice[i]);
         }
     }
     (time, mem)
@@ -53,13 +89,29 @@ const FRONTIER_CAP: usize = 24;
 /// Min-time plan with `C_M ≤ mem_cap` (None = unconstrained).
 /// Returns None if no feasible plan exists.
 pub fn search(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<Plan> {
-    let n = ss.instances.len();
+    search_span(ss, db, mem_cap, 0, ss.instances.len())
+}
+
+/// [`search`] restricted to the contiguous instance span `[lo, hi)` — the
+/// unit the inter-op stage planner solves per (stage-span, sub-mesh). The
+/// returned plan's `choice[i]` is the config of instance `lo + i`; its
+/// time/memory are the span's own (no entering reshard — see
+/// [`plan_cost_span`]). `search(ss, ..)` is exactly the `[0, n)` span.
+pub fn search_span(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    mem_cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    assert!(lo <= hi && hi <= ss.instances.len());
+    let n = hi - lo;
     if n == 0 {
         return None;
     }
     // frontier[cfg] = pareto set of (time, mem) for prefixes ending at cfg
     let mut frontiers: Vec<Vec<Vec<Point>>> = Vec::with_capacity(n);
-    let u0 = ss.instances[0].unique_id;
+    let u0 = ss.instances[lo].unique_id;
     let p0 = &db.segments[u0];
     let mut first: Vec<Vec<Point>> = Vec::new();
     for cfg in 0..p0.configs.len() {
@@ -74,8 +126,8 @@ pub fn search(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<P
     frontiers.push(first);
 
     for i in 1..n {
-        let u = ss.instances[i].unique_id;
-        let pu = ss.instances[i - 1].unique_id;
+        let u = ss.instances[lo + i].unique_id;
+        let pu = ss.instances[lo + i - 1].unique_id;
         let prof = &db.segments[u];
         let prev = &frontiers[i - 1];
         let mut cur: Vec<Vec<Point>> = Vec::with_capacity(prof.configs.len());
@@ -418,6 +470,29 @@ mod tests {
             search_uniform(&ss, &db, Some(1)),
             search_uniform_with(&ss, &db, Some(1), 4)
         );
+    }
+
+    #[test]
+    fn span_search_full_range_equals_whole_chain() {
+        let (ss, db) = setup(3);
+        let whole = search(&ss, &db, None).unwrap();
+        let span = search_span(&ss, &db, None, 0, ss.instances.len()).unwrap();
+        assert_eq!(whole, span);
+    }
+
+    #[test]
+    fn span_search_solves_every_sub_chain_consistently() {
+        let (ss, db) = setup(3);
+        let n = ss.instances.len();
+        for lo in 0..n {
+            for hi in (lo + 1)..=n {
+                let p = search_span(&ss, &db, None, lo, hi).unwrap();
+                let (t, m) = plan_cost_span(&ss, &db, &p.choice, lo, hi);
+                assert!((t - p.time_us).abs() < 1e-6, "[{lo},{hi}) {t} vs {}", p.time_us);
+                assert_eq!(m, p.mem_bytes, "[{lo},{hi})");
+                assert_eq!(p.choice.len(), hi - lo);
+            }
+        }
     }
 
     #[test]

@@ -87,12 +87,15 @@ pub fn append_backward(g: &mut Graph, loss: OpId, lr: f64) -> Backward {
                         vec![(x, gx)]
                     }
                     ReduceKind::Max => {
-                        let yb = g.broadcast(id, kept.clone(), xshape.clone(), &format!("{}/y_b", op.name));
-                        let mask = g.binary(ElemOp::CmpEq, x, yb, &format!("{}/mask", op.name));
-                        let gb = g.broadcast(gout, kept, xshape.clone(), &format!("{}/g_b", op.name));
+                        let name = &op.name;
+                        let yb =
+                            g.broadcast(id, kept.clone(), xshape.clone(), &format!("{name}/y_b"));
+                        let mask = g.binary(ElemOp::CmpEq, x, yb, &format!("{name}/mask"));
+                        let gb = g.broadcast(gout, kept, xshape.clone(), &format!("{name}/g_b"));
                         let zero = g.constant(0.0, vec![]);
-                        let zb = g.broadcast(zero, vec![], xshape, &format!("{}/zero_b", op.name));
-                        let gx = g.elem(ElemOp::Select, vec![mask, gb, zb], &format!("{}/dx", op.name));
+                        let zb = g.broadcast(zero, vec![], xshape, &format!("{name}/zero_b"));
+                        let gx =
+                            g.elem(ElemOp::Select, vec![mask, gb, zb], &format!("{name}/dx"));
                         vec![(x, gx)]
                     }
                 }
@@ -158,7 +161,8 @@ fn accumulate(g: &mut Graph, grads: &mut HashMap<OpId, OpId>, tensor: OpId, cont
             grads.insert(tensor, contrib);
         }
         Some(&prev) => {
-            let sum = g.binary(ElemOp::Add, prev, contrib, &format!("{}/gacc", g.ops[tensor].name.clone()));
+            let name = g.ops[tensor].name.clone();
+            let sum = g.binary(ElemOp::Add, prev, contrib, &format!("{name}/gacc"));
             grads.insert(tensor, sum);
         }
     }

@@ -90,7 +90,14 @@ impl Graph {
         &self.ops[id].shape
     }
 
-    pub fn add(&mut self, kind: OpKind, inputs: Vec<OpId>, shape: Vec<usize>, dtype: DType, name: impl Into<String>) -> OpId {
+    pub fn add(
+        &mut self,
+        kind: OpKind,
+        inputs: Vec<OpId>,
+        shape: Vec<usize>,
+        dtype: DType,
+        name: impl Into<String>,
+    ) -> OpId {
         let id = self.ops.len();
         for &i in &inputs {
             assert!(i < id, "input {i} of op {id} not yet defined");
@@ -134,7 +141,13 @@ impl Graph {
         let shape = self.ops[inputs[0]].shape.clone();
         let ref_shape = if op == ElemOp::Select { 1 } else { 0 };
         for &i in &inputs[ref_shape..] {
-            assert_eq!(self.ops[i].shape, shape, "elem shape mismatch in {name}: {:?} vs {:?}", self.ops[i].shape, shape);
+            assert_eq!(
+                self.ops[i].shape,
+                shape,
+                "elem shape mismatch in {name}: {:?} vs {:?}",
+                self.ops[i].shape,
+                shape
+            );
         }
         let dtype = match op {
             ElemOp::CmpGe | ElemOp::CmpEq => DType::Pred,
@@ -192,7 +205,13 @@ impl Graph {
     }
 
     /// Broadcast input into `out_shape`; `dims[i]` is where input dim i lands.
-    pub fn broadcast(&mut self, x: OpId, dims: Vec<usize>, out_shape: Vec<usize>, name: &str) -> OpId {
+    pub fn broadcast(
+        &mut self,
+        x: OpId,
+        dims: Vec<usize>,
+        out_shape: Vec<usize>,
+        name: &str,
+    ) -> OpId {
         let xs = self.ops[x].shape.clone();
         assert_eq!(dims.len(), xs.len(), "broadcast dims rank in {name}");
         for (i, &d) in dims.iter().enumerate() {
@@ -258,7 +277,13 @@ impl Graph {
         self.add(OpKind::Pad { dim, index, size }, vec![x], shape, dtype, name)
     }
 
-    pub fn scatter(&mut self, indices: OpId, updates: OpId, table_shape: Vec<usize>, name: &str) -> OpId {
+    pub fn scatter(
+        &mut self,
+        indices: OpId,
+        updates: OpId,
+        table_shape: Vec<usize>,
+        name: &str,
+    ) -> OpId {
         let dtype = self.ops[updates].dtype;
         self.add(
             OpKind::Scatter { table_shape: table_shape.clone() },

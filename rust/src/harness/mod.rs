@@ -3,7 +3,10 @@
 //! criterion-style benches.
 
 use crate::cluster::Platform;
-use crate::coordinator::{compare_frameworks, CfpOptions, Comparison};
+use crate::coordinator::{
+    compare_frameworks, run_cfp_two_level, CfpOptions, Comparison, TwoLevelResult,
+};
+use crate::interop::StageSpec;
 use crate::models::ModelCfg;
 use crate::spmd::Mesh;
 
@@ -44,7 +47,11 @@ pub struct ThroughputRow {
     pub cfp_over_alpa: f64,
 }
 
-pub fn throughput_row(model: &ModelCfg, platform: Platform, mesh: Mesh) -> (ThroughputRow, Comparison) {
+pub fn throughput_row(
+    model: &ModelCfg,
+    platform: Platform,
+    mesh: Mesh,
+) -> (ThroughputRow, Comparison) {
     let mut opts = CfpOptions::new(model.clone(), platform);
     opts.mesh = mesh;
     let c = compare_frameworks(&opts);
@@ -59,6 +66,61 @@ pub fn throughput_row(model: &ModelCfg, platform: Platform, mesh: Mesh) -> (Thro
         cfp_over_alpa: c.alpa.time_us / c.cfp.time_us,
     };
     (row, c)
+}
+
+/// The GPT/LLAMA/MoE presets the two-level planner is evaluated on
+/// (scaled sizes, like [`eval_models`]).
+pub fn pipeline_eval_models() -> Vec<ModelCfg> {
+    vec![
+        ModelCfg::preset("gpt-2.6b").with_layers(4).with_batch(8).scaled_for_eval(),
+        ModelCfg::preset("llama-7b").with_layers(4).with_batch(8).scaled_for_eval(),
+        ModelCfg::preset("moe-7.1b").with_layers(4).with_batch(8).scaled_for_eval(),
+    ]
+}
+
+/// One two-level eval row: single-stage CFP vs the two-level planner vs
+/// the naive equal-split pipeline, on one model + platform.
+pub struct PipelineRow {
+    pub model: String,
+    pub platform: &'static str,
+    pub gpus: usize,
+    pub microbatches: usize,
+    /// single-stage CFP step time (µs)
+    pub single_us: f64,
+    /// two-level planner's composed step time (µs)
+    pub two_level_us: f64,
+    /// naive equal-split + DDP-inside pipeline baseline (µs)
+    pub naive_us: f64,
+    /// stage count the two-level planner chose
+    pub stages: usize,
+    /// pipeline-bubble share of the chosen plan's step
+    pub bubble: f64,
+}
+
+/// Run the two-level planner (auto stage count) for one eval cell.
+pub fn pipeline_row(
+    model: &ModelCfg,
+    platform: Platform,
+    mesh: Mesh,
+    microbatches: usize,
+) -> (PipelineRow, TwoLevelResult) {
+    let mut opts = CfpOptions::new(model.clone(), platform)
+        .with_stages(StageSpec::Auto)
+        .with_microbatches(microbatches);
+    opts.mesh = mesh;
+    let r = run_cfp_two_level(&opts);
+    let row = PipelineRow {
+        model: model.name.clone(),
+        platform: platform.name,
+        gpus: mesh.total(),
+        microbatches,
+        single_us: r.single.plan.time_us,
+        two_level_us: r.pipeline.step_time_us,
+        naive_us: r.naive.step_time_us,
+        stages: r.pipeline.num_stages(),
+        bubble: r.pipeline.bubble_fraction,
+    };
+    (row, r)
 }
 
 /// Markdown-ish aligned table printer.
@@ -147,6 +209,16 @@ mod tests {
             assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
         }
         assert_eq!(eval_platforms().len(), 4);
+    }
+
+    #[test]
+    fn pipeline_eval_presets_are_well_formed() {
+        let models = pipeline_eval_models();
+        assert_eq!(models.len(), 3, "GPT, LLAMA, MoE");
+        for m in models {
+            assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
+            assert!(m.layers >= 2, "{}", m.name);
+        }
     }
 
     #[test]

@@ -1,0 +1,845 @@
+//! Two-level planner: inter-operator pipeline staging over the intra-op DP.
+//!
+//! CFP (§4.4) searches intra-operator plans for a chain of segments that
+//! owns the *whole* device mesh. This module adds the outer level of the
+//! Alpa-style decomposition: partition the segment chain into `k`
+//! contiguous pipeline stages, give each stage its own sub-mesh of the
+//! cluster, solve the existing memory-constrained intra-op DP *per stage*
+//! ([`crate::cost::search_span`]), and compose the per-stage plans with a
+//! 1F1B-style pipeline schedule ([`crate::cluster::simulate_pipeline`]).
+//!
+//! # Cost model
+//!
+//! With `m` microbatches and stage `i`'s whole-batch intra-op plan time
+//! `Tᵢ`, the per-microbatch stage latency is `lᵢ = Tᵢ/m + xᵢ`, where `xᵢ`
+//! is the per-microbatch point-to-point activation transfer into stage
+//! `i` (forward activation + backward gradient, priced by
+//! [`crate::cluster::collective_time_us`] over the link the stage cut
+//! crosses — inter-node when the cut coincides with a node boundary).
+//! The composed step time is the flow-line makespan for `m` identical
+//! microbatches:
+//!
+//! ```text
+//! T_step = Σᵢ lᵢ + (m − 1) · maxᵢ lᵢ
+//! ```
+//!
+//! which reduces to `(k − 1 + m)/m · l` for balanced stages — the
+//! familiar 1F1B bubble formula. `k = 1` bypasses the microbatch
+//! division entirely, so a degenerate pipeline reproduces today's
+//! single-stage plan (and step time) bit-for-bit.
+//!
+//! # Search
+//!
+//! The stage-split search is a DP over split points with a per-prefix
+//! Pareto state on `(Σ l, max l)`. Pruning a dominated state is exact:
+//! both components only grow when a suffix is appended and the objective
+//! is monotone in both, so the DP provably matches brute-force
+//! enumeration of all `C(n−1, k−1)` split vectors (pinned by the
+//! `integration_interop` tests). Per-(stage-span, sub-mesh) intra-op
+//! solutions are memoized, and every sub-mesh context is profiled through
+//! [`crate::profiler::profile_model_cached`] so the persistent
+//! fingerprint cache makes warm runs cheap across *all* stage counts.
+//!
+//! # Invariants
+//!
+//! * Stages are contiguous, non-empty spans covering the chain exactly
+//!   once, in order — required for [`crate::cost::plan_cost_span`]'s
+//!   boundary-reshard accounting and for the p2p model (one activation
+//!   tensor crosses each cut).
+//! * All stages of a candidate plan share one sub-mesh size
+//!   `d = total_devices / k`; a context profiled at `d` is valid for
+//!   every span (profiles depend on the partition count, not the span).
+//! * The candidate stage counts are the divisors of the device count, so
+//!   `k · d` always uses the whole cluster.
+
+use std::collections::{BTreeMap, HashMap};
+
+use crate::cluster::sim::ComputeModel;
+use crate::cluster::{collective_time_us, simulate_pipeline, Platform};
+use crate::cost::{self, Plan};
+use crate::graph::Graph;
+use crate::pblock::{build_parallel_blocks, BlockSet};
+use crate::profiler::{profile_model_cached, ProfileCache, ProfileDb, ProfileOptions};
+use crate::segment::{extract_segments, SegmentSet};
+use crate::spmd::{CollKind, Mesh};
+
+/// How many pipeline stages the two-level planner may use.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum StageSpec {
+    /// One stage — today's single-level CFP behaviour.
+    Single,
+    /// Search every stage count that divides the device count.
+    Auto,
+    /// Exactly `k` stages (normalized down to the nearest divisor of the
+    /// device count; `Fixed(1)` ≡ `Single`).
+    Fixed(usize),
+}
+
+impl StageSpec {
+    /// Parse a `--stages` CLI value: `auto`, `single`, or a number.
+    pub fn parse(s: &str) -> Option<StageSpec> {
+        match s {
+            "auto" => Some(StageSpec::Auto),
+            "single" | "1" => Some(StageSpec::Single),
+            _ => s.parse::<usize>().ok().map(|k| {
+                if k <= 1 {
+                    StageSpec::Single
+                } else {
+                    StageSpec::Fixed(k)
+                }
+            }),
+        }
+    }
+}
+
+/// Options for the two-level planner. The intra-op knobs mirror
+/// `coordinator::CfpOptions`; `microbatches` and `spec` drive the outer
+/// level.
+#[derive(Clone)]
+pub struct PipelineOptions {
+    pub platform: Platform,
+    /// full-cluster mesh; stages carve contiguous sub-meshes out of it
+    pub mesh: Mesh,
+    /// per-device memory cap (None → platform capacity)
+    pub mem_cap: Option<u64>,
+    pub threads: usize,
+    pub compute: Option<ComputeModel>,
+    /// gradient-accumulation microbatches per step (the `m` of the bubble
+    /// formula)
+    pub microbatches: usize,
+    pub spec: StageSpec,
+}
+
+impl PipelineOptions {
+    pub fn new(platform: Platform, mesh: Mesh) -> PipelineOptions {
+        PipelineOptions {
+            platform,
+            mesh,
+            mem_cap: None,
+            threads: 1,
+            compute: None,
+            microbatches: 8,
+            spec: StageSpec::Auto,
+        }
+    }
+}
+
+/// One intra-op planning context, profiled for a specific sub-mesh size.
+/// ParallelBlocks, segments and profiles all depend on the partition
+/// count, so each distinct `devices` gets its own context.
+pub struct StageContext {
+    /// devices per stage (the sub-mesh size `d`)
+    pub devices: usize,
+    pub mesh: Mesh,
+    pub blocks: BlockSet,
+    pub segments: SegmentSet,
+    pub db: ProfileDb,
+}
+
+/// Memoized per-sub-mesh-size contexts shared by the CFP planner and the
+/// naive baseline (one profiling pass per distinct `d`, cache-served when
+/// warm).
+#[derive(Default)]
+pub struct StageContexts {
+    by_devices: BTreeMap<usize, StageContext>,
+}
+
+impl StageContexts {
+    pub fn new() -> StageContexts {
+        StageContexts::default()
+    }
+
+    /// Build (and profile) the context for sub-mesh size `devices` if it
+    /// is not already present.
+    pub fn ensure(
+        &mut self,
+        g: &Graph,
+        opts: &PipelineOptions,
+        devices: usize,
+        cache: Option<&mut ProfileCache>,
+    ) {
+        if !self.by_devices.contains_key(&devices) {
+            self.by_devices.insert(devices, build_context(g, opts, devices, cache));
+        }
+    }
+
+    /// Ensure a context exists for every candidate stage count of
+    /// `opts.spec`. Contexts whose segment chain is shorter than the
+    /// stage count are skipped *before* the (expensive) profiling pass —
+    /// a `k`-stage split of fewer than `k` instances is impossible, so
+    /// profiling them would be pure waste (the analysis passes that
+    /// determine the chain length are cheap).
+    pub fn ensure_all(
+        &mut self,
+        g: &Graph,
+        opts: &PipelineOptions,
+        mut cache: Option<&mut ProfileCache>,
+    ) {
+        let total = opts.mesh.total();
+        for k in candidate_stage_counts(opts.spec, opts.mesh) {
+            let devices = total / k;
+            if self.by_devices.contains_key(&devices) {
+                continue;
+            }
+            let mesh = sub_mesh(opts.mesh, devices);
+            let blocks = build_parallel_blocks(g, mesh.intra);
+            let segments = extract_segments(g, &blocks);
+            if segments.instances.len() < k {
+                continue;
+            }
+            let db = profile_context(g, opts, mesh, &blocks, &segments, cache.as_deref_mut());
+            self.by_devices.insert(devices, StageContext { devices, mesh, blocks, segments, db });
+        }
+    }
+
+    /// Adopt an already-profiled context (e.g. the whole-cluster
+    /// artifacts of a single-stage `run_cfp`) so `k = 1` reuses them
+    /// verbatim instead of re-profiling.
+    pub fn adopt(&mut self, ctx: StageContext) {
+        self.by_devices.insert(ctx.devices, ctx);
+    }
+
+    pub fn get(&self, devices: usize) -> Option<&StageContext> {
+        self.by_devices.get(&devices)
+    }
+
+    pub fn len(&self) -> usize {
+        self.by_devices.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.by_devices.is_empty()
+    }
+}
+
+/// Build one sub-mesh context: ParallelBlocks + segments at `devices`
+/// partitions, profiled through the (optionally persistent) cache.
+pub fn build_context(
+    g: &Graph,
+    opts: &PipelineOptions,
+    devices: usize,
+    cache: Option<&mut ProfileCache>,
+) -> StageContext {
+    let mesh = sub_mesh(opts.mesh, devices);
+    let blocks = build_parallel_blocks(g, mesh.intra);
+    let segments = extract_segments(g, &blocks);
+    let db = profile_context(g, opts, mesh, &blocks, &segments, cache);
+    StageContext { devices, mesh, blocks, segments, db }
+}
+
+/// The MetricsProfiling half of [`build_context`]: profile an
+/// already-analyzed (blocks, segments) pair at `mesh`.
+fn profile_context(
+    g: &Graph,
+    opts: &PipelineOptions,
+    mesh: Mesh,
+    blocks: &BlockSet,
+    segments: &SegmentSet,
+    cache: Option<&mut ProfileCache>,
+) -> ProfileDb {
+    let mut popts = ProfileOptions::new(opts.platform, mesh).with_threads(opts.threads);
+    if let Some(cm) = &opts.compute {
+        popts = popts.with_compute(cm.clone());
+    }
+    profile_model_cached(g, blocks, segments, &popts, cache)
+}
+
+/// Candidate stage counts for a spec: the divisors of the device count
+/// (ascending) whose per-stage share `d = total/k` tiles the node
+/// structure — `d` must divide the per-node GPU count (aligned
+/// within-node slices) or be a whole multiple of it (whole nodes).
+/// Anything else puts some stage across a node boundary, which
+/// [`sub_mesh`] cannot express (e.g. intra 8 × 3 nodes: k = 2 ⇒ d = 12,
+/// or k = 4 ⇒ d = 6, both straddle). Filtered/normalized per the spec;
+/// `k = 1` (`d = total`) is always valid.
+pub fn candidate_stage_counts(spec: StageSpec, mesh: Mesh) -> Vec<usize> {
+    let total = mesh.total().max(1);
+    let intra = mesh.intra.max(1);
+    let divisors: Vec<usize> = (1..=total)
+        .filter(|k| total % k == 0)
+        .filter(|k| {
+            let d = total / k;
+            intra % d == 0 || d % intra == 0
+        })
+        .collect();
+    match spec {
+        StageSpec::Single => vec![1],
+        StageSpec::Auto => divisors,
+        StageSpec::Fixed(k) => {
+            vec![divisors.iter().copied().filter(|&d| d <= k).max().unwrap_or(1)]
+        }
+    }
+}
+
+/// The sub-mesh a stage of `devices` devices occupies. Only called for
+/// the sizes [`candidate_stage_counts`] admits: `devices ≤ intra`
+/// (within-node slice) or a whole number of nodes — stages never
+/// straddle node boundaries.
+pub fn sub_mesh(full: Mesh, devices: usize) -> Mesh {
+    if devices >= full.total() {
+        full
+    } else if devices <= full.intra {
+        debug_assert_eq!(full.intra % devices.max(1), 0, "stage straddles a node boundary");
+        Mesh::flat(devices)
+    } else {
+        debug_assert_eq!(devices % full.intra, 0, "stage straddles a node boundary");
+        Mesh { intra: full.intra, nodes: devices / full.intra }
+    }
+}
+
+/// One pipeline stage of a composed two-level plan.
+#[derive(Clone, Debug)]
+pub struct StagePlan {
+    /// instance span `[lo, hi)` in the stage context's segment chain
+    pub span: (usize, usize),
+    /// global device range `[first, last)`
+    pub devices: (usize, usize),
+    /// intra-op plan for the span (whole-batch time/memory)
+    pub plan: Plan,
+    /// per-microbatch incoming activation transfer, µs (0 for stage 0)
+    pub p2p_in_us: f64,
+    /// per-microbatch stage latency `Tᵢ/m + xᵢ`, µs
+    pub latency_us: f64,
+}
+
+/// A composed two-level plan: contiguous stages, each with its own
+/// sub-mesh and intra-op plan.
+#[derive(Clone, Debug)]
+pub struct PipelinePlan {
+    pub stages: Vec<StagePlan>,
+    pub devices_per_stage: usize,
+    pub microbatches: usize,
+    /// composed step time, µs (exactly the intra-op plan time when k = 1)
+    pub step_time_us: f64,
+    /// peak per-device memory across stages
+    pub mem_bytes: u64,
+    /// pipeline-bubble share of the step (0 for k = 1)
+    pub bubble_fraction: f64,
+}
+
+impl PipelinePlan {
+    pub fn num_stages(&self) -> usize {
+        self.stages.len()
+    }
+
+    /// Human-readable per-stage summary lines.
+    pub fn describe(&self) -> Vec<String> {
+        self.stages
+            .iter()
+            .enumerate()
+            .map(|(s, st)| {
+                format!(
+                    "stage {s}: segments [{}, {}) on devices [{}, {})  \
+                     intra-op {:.1}µs  p2p/µb {:.1}µs  mem {} MB",
+                    st.span.0,
+                    st.span.1,
+                    st.devices.0,
+                    st.devices.1,
+                    st.plan.time_us,
+                    st.p2p_in_us,
+                    st.plan.mem_bytes >> 20,
+                )
+            })
+            .collect()
+    }
+}
+
+/// CFP two-level plan: best stage count × best split × best per-stage
+/// intra-op plan. Returns None only if no candidate stage count yields a
+/// feasible plan (never for `Auto`/`Single` on a chain the single-stage
+/// search can solve, since `k = 1` is in the candidate set).
+pub fn plan_pipeline(
+    g: &Graph,
+    ctxs: &StageContexts,
+    opts: &PipelineOptions,
+) -> Option<PipelinePlan> {
+    let total = opts.mesh.total();
+    let mut best: Option<PipelinePlan> = None;
+    for k in candidate_stage_counts(opts.spec, opts.mesh) {
+        let Some(ctx) = ctxs.get(total / k) else { continue };
+        let mut memo = HashMap::new();
+        if let Some(p) = plan_fixed_stages_memo(g, ctx, opts, k, &mut memo) {
+            if best.as_ref().map_or(true, |b| p.step_time_us < b.step_time_us) {
+                best = Some(p);
+            }
+        }
+    }
+    if best.is_none() {
+        // an infeasible Fixed(k) request (e.g. more stages than segments)
+        // degrades to the single-stage plan rather than failing
+        if let Some(ctx) = ctxs.get(total) {
+            let mut memo = HashMap::new();
+            best = plan_fixed_stages_memo(g, ctx, opts, 1, &mut memo);
+        }
+    }
+    best
+}
+
+/// Best `k`-stage plan over one context (the DP the tests verify against
+/// brute-force split enumeration).
+pub fn plan_fixed_stages(
+    g: &Graph,
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    k: usize,
+) -> Option<PipelinePlan> {
+    let mut memo = HashMap::new();
+    plan_fixed_stages_memo(g, ctx, opts, k, &mut memo)
+}
+
+/// Pareto state of a stage-split DP prefix: the latency sum and max so
+/// far, plus the start index of every stage chosen (for backtracking).
+#[derive(Clone)]
+struct SplitState {
+    sum: f64,
+    mx: f64,
+    starts: Vec<usize>,
+}
+
+fn plan_fixed_stages_memo(
+    g: &Graph,
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    k: usize,
+    memo: &mut HashMap<(usize, usize), Option<Plan>>,
+) -> Option<PipelinePlan> {
+    let n = ctx.segments.instances.len();
+    if k == 0 || k > n {
+        return None;
+    }
+    let m = opts.microbatches.max(1);
+    let mf = m as f64;
+    if k == 1 {
+        let plan = solve_span(ctx, opts, memo, 0, n)?;
+        let step = plan.time_us;
+        let mem = plan.mem_bytes;
+        let latency_us = plan.time_us / mf;
+        return Some(PipelinePlan {
+            stages: vec![StagePlan {
+                span: (0, n),
+                devices: (0, ctx.devices),
+                plan,
+                p2p_in_us: 0.0,
+                latency_us,
+            }],
+            devices_per_stage: ctx.devices,
+            microbatches: m,
+            step_time_us: step,
+            mem_bytes: mem,
+            bubble_fraction: 0.0,
+        });
+    }
+
+    // DP over (stages used, instances consumed) with (sum, max) Pareto
+    // states; dp[s][i] covers instances [0, i) with s stages.
+    let mut dp: Vec<Vec<Vec<SplitState>>> = vec![vec![Vec::new(); n + 1]; k + 1];
+    dp[0][0].push(SplitState { sum: 0.0, mx: 0.0, starts: Vec::new() });
+    for s in 1..=k {
+        // stage s ends at instance i; leave ≥ 1 instance per later stage
+        for i in s..=(n - (k - s)) {
+            let mut states: Vec<SplitState> = Vec::new();
+            for j in (s - 1)..i {
+                if dp[s - 1][j].is_empty() {
+                    continue;
+                }
+                let Some(lat) = stage_latency(g, ctx, opts, memo, j, i, s - 1) else {
+                    continue;
+                };
+                for st in &dp[s - 1][j] {
+                    let mut starts = st.starts.clone();
+                    starts.push(j);
+                    states.push(SplitState {
+                        sum: st.sum + lat,
+                        mx: if lat > st.mx { lat } else { st.mx },
+                        starts,
+                    });
+                }
+            }
+            prune_states(&mut states);
+            dp[s][i] = states;
+        }
+    }
+
+    let mut best: Option<&SplitState> = None;
+    for st in &dp[k][n] {
+        let v = st.sum + (mf - 1.0) * st.mx;
+        if best.map_or(true, |b| v < b.sum + (mf - 1.0) * b.mx) {
+            best = Some(st);
+        }
+    }
+    let best = best?;
+    let mut bounds = best.starts.clone();
+    bounds.push(n);
+
+    let mut stages = Vec::with_capacity(k);
+    let mut lats = Vec::with_capacity(k);
+    let mut mem_peak = 0u64;
+    for s in 0..k {
+        let (lo, hi) = (bounds[s], bounds[s + 1]);
+        let plan = solve_span(ctx, opts, memo, lo, hi).expect("span solved during DP");
+        let p2p_in_us = if s == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, s) };
+        let latency_us = plan.time_us / mf + p2p_in_us;
+        if plan.mem_bytes > mem_peak {
+            mem_peak = plan.mem_bytes;
+        }
+        lats.push(latency_us);
+        stages.push(StagePlan {
+            span: (lo, hi),
+            devices: (s * ctx.devices, (s + 1) * ctx.devices),
+            plan,
+            p2p_in_us,
+            latency_us,
+        });
+    }
+    let step_time_us = compose_step_us(&lats, m);
+    let bubble_fraction = simulate_pipeline(&lats, m).bubble_fraction;
+    Some(PipelinePlan {
+        stages,
+        devices_per_stage: ctx.devices,
+        microbatches: m,
+        step_time_us,
+        mem_bytes: mem_peak,
+        bubble_fraction,
+    })
+}
+
+/// Exhaustive split enumeration for a fixed stage count — tests only
+/// (`C(n−1, k−1)` partitions). Same latency and composition arithmetic
+/// as the DP, so the optimal *value* matches exactly.
+pub fn brute_force_splits(
+    g: &Graph,
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    k: usize,
+) -> Option<f64> {
+    let n = ctx.segments.instances.len();
+    if k == 0 || k > n {
+        return None;
+    }
+    let mut memo = HashMap::new();
+    if k == 1 {
+        return solve_span(ctx, opts, &mut memo, 0, n).map(|p| p.time_us);
+    }
+    let m = opts.microbatches.max(1);
+    let r = k - 1; // number of cut points, values in 1..n strictly increasing
+    let mut cuts: Vec<usize> = (1..=r).collect();
+    let mut best: Option<f64> = None;
+    loop {
+        let mut bounds = Vec::with_capacity(k + 1);
+        bounds.push(0);
+        bounds.extend(cuts.iter().copied());
+        bounds.push(n);
+        let mut lats = Vec::with_capacity(k);
+        for s in 0..k {
+            match stage_latency(g, ctx, opts, &mut memo, bounds[s], bounds[s + 1], s) {
+                Some(l) => lats.push(l),
+                None => break,
+            }
+        }
+        if lats.len() == k {
+            let v = compose_step_us(&lats, m);
+            if best.map_or(true, |b| v < b) {
+                best = Some(v);
+            }
+        }
+        // next strictly-increasing cut combination
+        let mut idx = r;
+        loop {
+            if idx == 0 {
+                return best;
+            }
+            idx -= 1;
+            if cuts[idx] < (n - 1) - (r - 1 - idx) {
+                cuts[idx] += 1;
+                for j in idx + 1..r {
+                    cuts[j] = cuts[j - 1] + 1;
+                }
+                break;
+            }
+        }
+    }
+}
+
+/// Naive equal-layer-split pipeline baseline: contiguous spans of (as
+/// near as possible) equal instance counts, data-parallel config inside
+/// every stage — the "shard by layers, DDP inside" recipe. It shares the
+/// composition arithmetic with the CFP planner, so the comparison
+/// isolates plan quality (split choice + intra-op configs).
+pub fn naive_equal_split(
+    g: &Graph,
+    ctxs: &StageContexts,
+    opts: &PipelineOptions,
+) -> Option<PipelinePlan> {
+    let total = opts.mesh.total();
+    let mut best: Option<PipelinePlan> = None;
+    for k in candidate_stage_counts(opts.spec, opts.mesh) {
+        let Some(ctx) = ctxs.get(total / k) else { continue };
+        if let Some(p) = naive_fixed_stages(g, ctx, opts, k) {
+            if best.as_ref().map_or(true, |b| p.step_time_us < b.step_time_us) {
+                best = Some(p);
+            }
+        }
+    }
+    if best.is_none() {
+        if let Some(ctx) = ctxs.get(total) {
+            best = naive_fixed_stages(g, ctx, opts, 1);
+        }
+    }
+    best
+}
+
+/// The naive baseline at one fixed stage count.
+pub fn naive_fixed_stages(
+    g: &Graph,
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    k: usize,
+) -> Option<PipelinePlan> {
+    let n = ctx.segments.instances.len();
+    if k == 0 || k > n {
+        return None;
+    }
+    let m = opts.microbatches.max(1);
+    let mf = m as f64;
+    let choice = ddp_choice(ctx);
+    let bounds: Vec<usize> = (0..=k).map(|s| s * n / k).collect();
+    let mut stages = Vec::with_capacity(k);
+    let mut lats = Vec::with_capacity(k);
+    let mut mem_peak = 0u64;
+    for s in 0..k {
+        let (lo, hi) = (bounds[s], bounds[s + 1]);
+        let (time_us, mem_bytes) =
+            cost::plan_cost_span(&ctx.segments, &ctx.db, &choice[lo..hi], lo, hi);
+        let p2p_in_us = if s == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, s) };
+        let latency_us = time_us / mf + p2p_in_us;
+        if mem_bytes > mem_peak {
+            mem_peak = mem_bytes;
+        }
+        lats.push(latency_us);
+        stages.push(StagePlan {
+            span: (lo, hi),
+            devices: (s * ctx.devices, (s + 1) * ctx.devices),
+            plan: Plan { choice: choice[lo..hi].to_vec(), time_us, mem_bytes },
+            p2p_in_us,
+            latency_us,
+        });
+    }
+    let (step_time_us, bubble_fraction) = if k == 1 {
+        (stages[0].plan.time_us, 0.0)
+    } else {
+        (compose_step_us(&lats, m), simulate_pipeline(&lats, m).bubble_fraction)
+    };
+    Some(PipelinePlan {
+        stages,
+        devices_per_stage: ctx.devices,
+        microbatches: m,
+        step_time_us,
+        mem_bytes: mem_peak,
+        bubble_fraction,
+    })
+}
+
+// ------------------------------------------------------------------ internals
+
+/// `Σ l + (m−1)·max l`, accumulated left-to-right — the single source of
+/// the composition arithmetic for the DP, the brute force, and the naive
+/// baseline, so their values are comparable bit-for-bit.
+fn compose_step_us(lats: &[f64], microbatches: usize) -> f64 {
+    let mut sum = 0.0;
+    let mut mx = 0.0f64;
+    for &l in lats {
+        sum += l;
+        if l > mx {
+            mx = l;
+        }
+    }
+    sum + (microbatches.max(1) as f64 - 1.0) * mx
+}
+
+/// Memoized intra-op solution for span `[lo, hi)` under the per-device
+/// memory cap, with the same unconstrained fallback as `run_cfp` (so the
+/// `k = 1` span reproduces the single-stage plan exactly).
+fn solve_span(
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    memo: &mut HashMap<(usize, usize), Option<Plan>>,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    if let Some(p) = memo.get(&(lo, hi)) {
+        return p.clone();
+    }
+    let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
+    let plan = cost::search_span(&ctx.segments, &ctx.db, cap, lo, hi)
+        .or_else(|| cost::search_span(&ctx.segments, &ctx.db, None, lo, hi));
+    memo.insert((lo, hi), plan.clone());
+    plan
+}
+
+/// Per-microbatch stage latency `T/m + x` for span `[lo, hi)` as stage
+/// `stage_idx` (0-based); None if the span has no feasible intra-op plan.
+fn stage_latency(
+    g: &Graph,
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    memo: &mut HashMap<(usize, usize), Option<Plan>>,
+    lo: usize,
+    hi: usize,
+    stage_idx: usize,
+) -> Option<f64> {
+    let time_us = solve_span(ctx, opts, memo, lo, hi)?.time_us;
+    let mf = opts.microbatches.max(1) as f64;
+    let p2p = if stage_idx == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, stage_idx) };
+    Some(time_us / mf + p2p)
+}
+
+/// Per-microbatch point-to-point transfer into the stage whose span
+/// starts at instance `lo`: the boundary activation (full-batch bytes
+/// `B`) crosses as a `B/(m·d)` message per parallel device pair, once
+/// forward (activation) and once backward (its gradient). The link is
+/// the inter-node one when the stage cut coincides with a node boundary.
+fn p2p_in_us(
+    g: &Graph,
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    lo: usize,
+    stage_idx: usize,
+) -> f64 {
+    let inst = &ctx.segments.instances[lo];
+    let Some(t) = crate::profiler::run::boundary_tensor(g, inst.fwd_range.0) else {
+        return 0.0;
+    };
+    let bytes = g.ops[t].bytes() as u64;
+    let m = opts.microbatches.max(1) as u64;
+    let d = ctx.devices.max(1) as u64;
+    let msg = (bytes / (m * d)).max(1);
+    let first_dev = stage_idx * ctx.devices;
+    let gpn = opts.platform.gpus_per_node.max(1);
+    let link = if opts.platform.nodes > 1 && first_dev % gpn == 0 {
+        &opts.platform.inter
+    } else {
+        &opts.platform.intra
+    };
+    2.0 * collective_time_us(CollKind::SendRecv, msg, 2, link)
+}
+
+/// DDP config per instance (uniform per unique segment): every block its
+/// `m`/batch-split strategy where available — what the naive pipeline
+/// runs inside each stage.
+fn ddp_choice(ctx: &StageContext) -> Vec<usize> {
+    let ss = &ctx.segments;
+    let bs = &ctx.blocks;
+    let per_unique: Vec<usize> = ss
+        .unique
+        .iter()
+        .map(|u| {
+            let inst = &ss.instances[u.rep];
+            let desired: Vec<usize> = inst
+                .blocks
+                .iter()
+                .map(|&b| {
+                    bs.blocks[b].strategies.iter().position(|s| s.label == "m").unwrap_or(0)
+                })
+                .collect();
+            ctx.db.segments[u.id]
+                .configs
+                .iter()
+                .enumerate()
+                .max_by_key(|(_, c)| {
+                    c.strategy.iter().zip(&desired).filter(|(a, b)| a == b).count()
+                })
+                .map(|(i, _)| i)
+                .unwrap_or(0)
+        })
+        .collect();
+    ss.instances.iter().map(|i| per_unique[i.unique_id]).collect()
+}
+
+/// Keep only `(sum, max)`-undominated states. Exact for any objective
+/// monotone in both components (ours: `sum + (m−1)·max`).
+fn prune_states(states: &mut Vec<SplitState>) {
+    states.sort_by(|a, b| {
+        a.sum
+            .partial_cmp(&b.sum)
+            .unwrap()
+            .then(a.mx.partial_cmp(&b.mx).unwrap())
+    });
+    let mut out: Vec<SplitState> = Vec::new();
+    let mut best_mx = f64::INFINITY;
+    for st in states.drain(..) {
+        if st.mx < best_mx {
+            best_mx = st.mx;
+            out.push(st);
+        }
+    }
+    *states = out;
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn stage_counts_are_divisors() {
+        let m4 = Mesh::flat(4);
+        let m16 = Mesh { intra: 8, nodes: 2 };
+        assert_eq!(candidate_stage_counts(StageSpec::Auto, m4), vec![1, 2, 4]);
+        assert_eq!(candidate_stage_counts(StageSpec::Auto, m16), vec![1, 2, 4, 8, 16]);
+        assert_eq!(candidate_stage_counts(StageSpec::Single, Mesh::flat(8)), vec![1]);
+        assert_eq!(candidate_stage_counts(StageSpec::Fixed(2), m4), vec![2]);
+        // non-divisor requests normalize down
+        assert_eq!(candidate_stage_counts(StageSpec::Fixed(3), m4), vec![2]);
+        assert_eq!(candidate_stage_counts(StageSpec::Fixed(99), m4), vec![4]);
+    }
+
+    #[test]
+    fn stage_counts_skip_node_straddling_sub_meshes() {
+        // 8 GPUs × 3 nodes: k = 2 ⇒ d = 12 (not a node multiple), k = 4 ⇒
+        // d = 6 (stage [6, 12) crosses node 0 → 1), k = 8 ⇒ d = 3 (stage
+        // [6, 9) likewise) — all must be filtered out
+        let m = Mesh { intra: 8, nodes: 3 };
+        let ks = candidate_stage_counts(StageSpec::Auto, m);
+        assert_eq!(ks, vec![1, 3, 6, 12, 24], "d = 24, 8, 4, 2, 1");
+        for bad in [2usize, 4, 8] {
+            assert!(!ks.contains(&bad), "k = {bad} straddles a node boundary");
+        }
+        // a Fixed request for a filtered k normalizes to a valid one
+        assert_eq!(candidate_stage_counts(StageSpec::Fixed(2), m), vec![1]);
+        assert_eq!(candidate_stage_counts(StageSpec::Fixed(4), m), vec![3]);
+    }
+
+    #[test]
+    fn stage_spec_parses() {
+        assert_eq!(StageSpec::parse("auto"), Some(StageSpec::Auto));
+        assert_eq!(StageSpec::parse("single"), Some(StageSpec::Single));
+        assert_eq!(StageSpec::parse("1"), Some(StageSpec::Single));
+        assert_eq!(StageSpec::parse("4"), Some(StageSpec::Fixed(4)));
+        assert_eq!(StageSpec::parse("bogus"), None);
+    }
+
+    #[test]
+    fn sub_meshes_stay_inside_nodes() {
+        let full = Mesh { intra: 8, nodes: 2 };
+        assert_eq!(sub_mesh(full, 16), full);
+        assert_eq!(sub_mesh(full, 8), Mesh::flat(8));
+        assert_eq!(sub_mesh(full, 4), Mesh::flat(4));
+        assert_eq!(sub_mesh(Mesh { intra: 4, nodes: 4 }, 8), Mesh { intra: 4, nodes: 2 });
+    }
+
+    #[test]
+    fn pruning_keeps_undominated_states() {
+        let st = |sum: f64, mx: f64| SplitState { sum, mx, starts: vec![] };
+        let mut states = vec![st(10.0, 5.0), st(8.0, 6.0), st(12.0, 4.0), st(9.0, 7.0)];
+        prune_states(&mut states);
+        let pairs: Vec<(f64, f64)> = states.iter().map(|s| (s.sum, s.mx)).collect();
+        // (9,7) is dominated by (8,6); the rest trade sum against max
+        assert_eq!(pairs, vec![(8.0, 6.0), (10.0, 5.0), (12.0, 4.0)]);
+    }
+
+    #[test]
+    fn compose_step_reduces_to_bubble_formula_when_balanced() {
+        let step = compose_step_us(&[10.0, 10.0, 10.0, 10.0], 8);
+        // (k − 1 + m)/m · k·l/k ... = (m + k − 1) · l
+        assert!((step - (8.0 + 3.0) * 10.0).abs() < 1e-9);
+    }
+}

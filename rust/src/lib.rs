@@ -16,7 +16,12 @@
 //!                     ├─ cluster::simulate  communication kernels on a platform
 //!                     └─ runtime (PJRT)     measured compute kernel costs
 //!                └─ cost::search   Eq-8/9 composition + memory-capped plan DP
+//!                     └─ interop::plan_pipeline  inter-op stage DP over
+//!                        per-(stage-span, sub-mesh) intra-op plans (1F1B)
 //! ```
+//!
+//! See `ARCHITECTURE.md` for the module ↔ paper-section map and the
+//! end-to-end dataflow diagram.
 //!
 //! The crate is fully offline: the only external dependencies are the
 //! vendored `xla` (PJRT bindings) and `anyhow`. Tokio/clap/serde/criterion
@@ -30,6 +35,7 @@ pub mod coordinator;
 pub mod cost;
 pub mod graph;
 pub mod harness;
+pub mod interop;
 pub mod models;
 pub mod pblock;
 pub mod profiler;

@@ -2,14 +2,16 @@
 //!
 //! Subcommands:
 //!   search    run the CFP pipeline on a model and print the chosen plan
+//!   pipeline  two-level planner: inter-op stages over the intra-op DP
 //!   compare   CFP vs Alpa/Megatron/DDP on one model+platform
 //!   train     e2e training via the PJRT train-step artifact
 //!   calibrate measure calib artifacts and print the fitted compute model
 //!   space     print ParallelBlock/segment/profile-space statistics
 
 use cfp::cluster::Platform;
-use cfp::coordinator::{compare_frameworks, run_cfp, CfpOptions};
+use cfp::coordinator::{compare_frameworks, run_cfp, run_cfp_two_level, CfpOptions};
 use cfp::harness::{fmt_bytes, fmt_us, Table};
+use cfp::interop::StageSpec;
 use cfp::models::ModelCfg;
 use cfp::runtime::Runtime;
 use cfp::trainer::Trainer;
@@ -20,16 +22,18 @@ fn main() {
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "search" => cmd_search(&args),
+        "pipeline" => cmd_pipeline(&args),
         "compare" => cmd_compare(&args),
         "train" => cmd_train(&args),
         "calibrate" => cmd_calibrate(&args),
         "space" => cmd_space(&args),
         _ => {
             eprintln!(
-                "usage: cfp <search|compare|train|calibrate|space> \
+                "usage: cfp <search|pipeline|compare|train|calibrate|space> \
                  [--model gpt-2.6b] [--layers N] [--batch N] \
                  [--platform a100-pcie|a100-pcie-8|a100-2node|v100-nvlink] \
-                 [--threads N] [--cache FILE] [--steps N] [--lr F]"
+                 [--threads N] [--cache FILE] [--cache-max-entries N] \
+                 [--stages auto|K] [--microbatches M] [--steps N] [--lr F]"
             );
             1
         }
@@ -59,12 +63,24 @@ fn parse_platform(args: &Args) -> Platform {
     })
 }
 
+fn parse_common(args: &Args, opts: &mut CfpOptions) {
+    opts.threads = args.get_usize("threads", 1);
+    opts.cache_path = args.get_path("cache");
+    opts.cache_max_entries = args.get_usize_opt("cache-max-entries");
+    opts.microbatches = args.get_usize("microbatches", 8);
+    if let Some(s) = args.get("stages") {
+        match StageSpec::parse(s) {
+            Some(spec) => opts.stages = spec,
+            None => eprintln!("unknown --stages value {s:?} (want auto|single|K), ignoring"),
+        }
+    }
+}
+
 fn cmd_search(args: &Args) -> i32 {
     let model = parse_model(args);
     let platform = parse_platform(args);
     let mut opts = CfpOptions::new(model, platform);
-    opts.threads = args.get_usize("threads", 1);
-    opts.cache_path = args.get_path("cache");
+    parse_common(args, &mut opts);
     if let Ok(rt) = Runtime::open_default() {
         if let Ok(cm) = rt.calibrate_compute(&platform) {
             println!("(compute model calibrated from PJRT measurements)");
@@ -115,12 +131,64 @@ fn cmd_search(args: &Args) -> i32 {
     0
 }
 
+fn cmd_pipeline(args: &Args) -> i32 {
+    let model = parse_model(args);
+    let platform = parse_platform(args);
+    let mut opts = CfpOptions::new(model, platform);
+    opts.stages = StageSpec::Auto;
+    parse_common(args, &mut opts);
+    let r = run_cfp_two_level(&opts);
+    println!(
+        "model {}  platform {}  gpus {}  microbatches {}",
+        opts.model.name,
+        platform.name,
+        opts.mesh.total(),
+        opts.microbatches
+    );
+    let mut t = Table::new(&["planner", "stages", "step time", "memory/dev", "vs two-level"]);
+    for (name, step, stages, mem) in [
+        ("CFP single-stage", r.single.plan.time_us, 1, r.single.plan.mem_bytes),
+        (
+            "CFP two-level",
+            r.pipeline.step_time_us,
+            r.pipeline.num_stages(),
+            r.pipeline.mem_bytes,
+        ),
+        (
+            "naive equal-split",
+            r.naive.step_time_us,
+            r.naive.num_stages(),
+            r.naive.mem_bytes,
+        ),
+    ] {
+        t.row(vec![
+            name.into(),
+            stages.to_string(),
+            fmt_us(step),
+            fmt_bytes(mem),
+            format!("{:.2}x", step / r.pipeline.step_time_us),
+        ]);
+    }
+    t.print();
+    println!(
+        "two-level plan: {} stage(s) × {} device(s), bubble {:.1}%",
+        r.pipeline.num_stages(),
+        r.pipeline.devices_per_stage,
+        r.pipeline.bubble_fraction * 100.0
+    );
+    for line in r.pipeline.describe() {
+        println!("  {line}");
+    }
+    0
+}
+
 fn cmd_compare(args: &Args) -> i32 {
     let model = parse_model(args);
     let platform = parse_platform(args);
     let mut opts = CfpOptions::new(model, platform);
     opts.threads = args.get_usize("threads", 1);
     opts.cache_path = args.get_path("cache");
+    opts.cache_max_entries = args.get_usize_opt("cache-max-entries");
     let c = compare_frameworks(&opts);
     let mut t = Table::new(&["framework", "step time", "memory/dev", "vs CFP"]);
     for (name, p) in [

@@ -14,6 +14,20 @@
 //! seeds or joins another block). This is what keeps a transformer layer at
 //! 4 blocks — ln2's hidden-dim reduction stops the wo block's N candidate,
 //! rather than being absorbed and silently shrinking the strategy space.
+//!
+//! # Invariants
+//!
+//! * Every forward op belongs to at most one block, and every strategy of
+//!   a block assigns a propagation-consistent sharding to *every* member
+//!   (re-checking any member against its inputs' assignments never yields
+//!   a blocked propagation — pinned by the
+//!   `strategies_are_communication_free_inside_blocks` test).
+//! * Block construction depends on the partition count `parts`: a
+//!   dimension indivisible by `parts` silently drops that strategy, so a
+//!   [`BlockSet`] is only meaningful for the `parts` it was built with
+//!   (the two-level planner builds one per sub-mesh size).
+//! * Blocks are emitted in entry-op order, which is topological order —
+//!   `segment::block_chain` relies on this to reconstruct the chain.
 
 pub mod strategy;
 

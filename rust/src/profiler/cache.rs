@@ -23,6 +23,26 @@
 //! Unknown versions and unparseable files are ignored wholesale (the cache
 //! is rebuilt and rewritten) — a cache must never turn a valid run into an
 //! error.
+//!
+//! # Invariants
+//!
+//! * **Invalidation by key construction.** There is no in-place
+//!   migration: every knob that shapes a profiled number (model
+//!   structure, platform links, mesh, bucket size, optimizer factor,
+//!   compute model, total gradient volume, partition count) is folded
+//!   into the lookup key, so any change *misses* instead of returning a
+//!   stale profile. A wrong answer is impossible; the worst case is
+//!   re-profiling.
+//! * **Bounded growth (LRU).** Entries carry a monotonically increasing
+//!   recency stamp (persisted in the file as `stamp` per entry plus a
+//!   top-level `clock`). With a `max_entries` bound set (CLI
+//!   `--cache-max-entries`), [`ProfileCache::save`] evicts the
+//!   least-recently-used entries — segments and reshard tables counted
+//!   together — until the bound holds. Files without stamps (or from
+//!   older writers) parse with stamp 0, i.e. oldest-first eviction.
+//! * **Crash/corruption safety.** Writes are atomic (tmp + rename); a
+//!   truncated or hand-edited file degrades to an empty cache, never an
+//!   error, and internally inconsistent entries are rejected at lookup.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -52,13 +72,19 @@ pub struct CacheKey {
 
 type ReshardKey = (String, String, String, usize); // (from_fp, to_fp, platform, parts)
 
-/// In-memory cache, optionally bound to an on-disk JSON file.
+/// In-memory cache, optionally bound to an on-disk JSON file. Every
+/// entry carries a recency stamp (`u64` draw from `clock`) used for the
+/// optional LRU bound — see the module docs.
 #[derive(Clone, Debug, Default)]
 pub struct ProfileCache {
-    segments: BTreeMap<CacheKey, SegmentProfile>,
-    reshard: BTreeMap<ReshardKey, ReshardTable>,
+    segments: BTreeMap<CacheKey, (SegmentProfile, u64)>,
+    reshard: BTreeMap<ReshardKey, (ReshardTable, u64)>,
     path: Option<PathBuf>,
     dirty: bool,
+    /// monotonically increasing recency counter (persisted)
+    clock: u64,
+    /// optional LRU bound on segments + reshard entries combined
+    max_entries: Option<usize>,
 }
 
 impl ProfileCache {
@@ -97,17 +123,46 @@ impl ProfileCache {
         self.segments.is_empty() && self.reshard.is_empty()
     }
 
-    pub fn get_segment(&self, key: &CacheKey) -> Option<&SegmentProfile> {
-        self.segments.get(key)
+    /// Bound the cache to `n` entries (segments + reshard tables counted
+    /// together); `None` disables eviction. Least-recently-used entries
+    /// are evicted at [`ProfileCache::save`] time, after the concurrent-
+    /// writer merge, so the bound holds on the written file.
+    pub fn set_max_entries(&mut self, n: Option<usize>) {
+        self.max_entries = n;
+    }
+
+    pub fn max_entries(&self) -> Option<usize> {
+        self.max_entries
+    }
+
+    /// Lookup bumps the entry's recency stamp (this is what makes the
+    /// eviction LRU rather than FIFO). The bump is persisted only when an
+    /// entry bound is set — an unbounded warm run stays a no-op save.
+    pub fn get_segment(&mut self, key: &CacheKey) -> Option<&SegmentProfile> {
+        let clock = self.clock + 1;
+        match self.segments.get_mut(key) {
+            Some(e) => {
+                self.clock = clock;
+                e.1 = clock;
+                if self.max_entries.is_some() {
+                    self.dirty = true;
+                }
+                Some(&e.0)
+            }
+            None => None,
+        }
     }
 
     pub fn put_segment(&mut self, key: CacheKey, profile: SegmentProfile) {
-        self.segments.insert(key, profile);
+        self.clock += 1;
+        let stamp = self.clock;
+        self.segments.insert(key, (profile, stamp));
         self.dirty = true;
     }
 
+    /// See [`ProfileCache::get_segment`] for the recency-stamp behaviour.
     pub fn get_reshard(
-        &self,
+        &mut self,
         from_fp: &str,
         to_fp: &str,
         platform: &str,
@@ -117,7 +172,18 @@ impl ProfileCache {
         // fetched once per unique pair so the allocation is negligible.
         let key: ReshardKey =
             (from_fp.to_string(), to_fp.to_string(), platform.to_string(), parts);
-        self.reshard.get(&key)
+        let clock = self.clock + 1;
+        match self.reshard.get_mut(&key) {
+            Some(e) => {
+                self.clock = clock;
+                e.1 = clock;
+                if self.max_entries.is_some() {
+                    self.dirty = true;
+                }
+                Some(&e.0)
+            }
+            None => None,
+        }
     }
 
     pub fn put_reshard(
@@ -130,8 +196,43 @@ impl ProfileCache {
     ) {
         let key: ReshardKey =
             (from_fp.to_string(), to_fp.to_string(), platform.to_string(), parts);
-        self.reshard.insert(key, table);
+        self.clock += 1;
+        let stamp = self.clock;
+        self.reshard.insert(key, (table, stamp));
         self.dirty = true;
+    }
+
+    /// Evict least-recently-used entries until the configured bound
+    /// holds. Ties (equal stamps, e.g. entries from stamp-less files)
+    /// break by key order — deterministic. O(evicted · entries), which is
+    /// fine at the file sizes a bound is meant to enforce.
+    fn evict_to_cap(&mut self) {
+        let Some(cap) = self.max_entries else { return };
+        while self.segments.len() + self.reshard.len() > cap {
+            let seg_min = self
+                .segments
+                .iter()
+                .map(|(k, (_, s))| (*s, k.clone()))
+                .min();
+            let rs_min = self
+                .reshard
+                .iter()
+                .map(|(k, (_, s))| (*s, k.clone()))
+                .min();
+            match (seg_min, rs_min) {
+                (Some((ss, sk)), Some((rs, _))) if ss <= rs => {
+                    self.segments.remove(&sk);
+                }
+                (_, Some((_, rk))) => {
+                    self.reshard.remove(&rk);
+                }
+                (Some((_, sk)), None) => {
+                    self.segments.remove(&sk);
+                }
+                (None, None) => break,
+            }
+            self.dirty = true;
+        }
     }
 
     /// Persist to the backing file if bound and modified. Atomic against
@@ -159,7 +260,11 @@ impl ProfileCache {
             for (k, v) in disk.reshard {
                 self.reshard.entry(k).or_insert(v);
             }
+            if disk.clock > self.clock {
+                self.clock = disk.clock;
+            }
         }
+        self.evict_to_cap();
         if let Some(dir) = path.parent() {
             if !dir.as_os_str().is_empty() {
                 std::fs::create_dir_all(dir)?;
@@ -178,11 +283,12 @@ impl ProfileCache {
         let segments = self
             .segments
             .iter()
-            .map(|(k, p)| {
+            .map(|(k, (p, stamp))| {
                 Json::obj(vec![
                     ("fingerprint", Json::str(k.fingerprint.clone())),
                     ("platform", Json::str(k.platform.clone())),
                     ("parts", Json::num(k.parts as f64)),
+                    ("stamp", Json::num(*stamp as f64)),
                     ("profile", segment_profile_to_json(p)),
                 ])
             })
@@ -190,18 +296,20 @@ impl ProfileCache {
         let reshard = self
             .reshard
             .iter()
-            .map(|((from, to, platform, parts), t)| {
+            .map(|((from, to, platform, parts), (t, stamp))| {
                 Json::obj(vec![
                     ("from_fp", Json::str(from.clone())),
                     ("to_fp", Json::str(to.clone())),
                     ("platform", Json::str(platform.clone())),
                     ("parts", Json::num(*parts as f64)),
+                    ("stamp", Json::num(*stamp as f64)),
                     ("table", reshard_table_to_json(t)),
                 ])
             })
             .collect();
         Json::obj(vec![
             ("version", Json::num(CACHE_VERSION as f64)),
+            ("clock", Json::num(self.clock as f64)),
             ("segments", Json::Arr(segments)),
             ("reshard", Json::Arr(reshard)),
         ])
@@ -212,6 +320,9 @@ impl ProfileCache {
             return None;
         }
         let mut cache = ProfileCache::default();
+        // `stamp`/`clock` are optional: files written before the LRU bound
+        // existed parse with stamp 0 (oldest-first eviction order)
+        let stamp_of = |e: &Json| e.get("stamp").and_then(Json::as_u64).unwrap_or(0);
         for e in j.get("segments")?.as_arr()? {
             let key = CacheKey {
                 fingerprint: e.get("fingerprint")?.as_str()?.to_string(),
@@ -219,7 +330,11 @@ impl ProfileCache {
                 parts: e.get("parts")?.as_u64()? as usize,
             };
             let profile = segment_profile_from_json(e.get("profile")?)?;
-            cache.segments.insert(key, profile);
+            let stamp = stamp_of(e);
+            if stamp > cache.clock {
+                cache.clock = stamp;
+            }
+            cache.segments.insert(key, (profile, stamp));
         }
         for e in j.get("reshard")?.as_arr()? {
             let key: ReshardKey = (
@@ -228,7 +343,17 @@ impl ProfileCache {
                 e.get("platform")?.as_str()?.to_string(),
                 e.get("parts")?.as_u64()? as usize,
             );
-            cache.reshard.insert(key, reshard_table_from_json(e.get("table")?)?);
+            let table = reshard_table_from_json(e.get("table")?)?;
+            let stamp = stamp_of(e);
+            if stamp > cache.clock {
+                cache.clock = stamp;
+            }
+            cache.reshard.insert(key, (table, stamp));
+        }
+        if let Some(c) = j.get("clock").and_then(Json::as_u64) {
+            if c > cache.clock {
+                cache.clock = c;
+            }
         }
         Some(cache)
     }
@@ -393,7 +518,13 @@ mod tests {
 
     #[test]
     fn shard_states_round_trip() {
-        for s in [ShardState::Replicated, ShardState::Partial, ShardState::Split(0), ShardState::Split(3)] {
+        let states = [
+            ShardState::Replicated,
+            ShardState::Partial,
+            ShardState::Split(0),
+            ShardState::Split(3),
+        ];
+        for s in states {
             assert_eq!(shard_state_from_json(&shard_state_to_json(&s)), Some(s));
         }
         assert_eq!(shard_state_from_json(&Json::str("x9")), None);
@@ -410,7 +541,7 @@ mod tests {
         c.put_segment(key.clone(), sample_profile());
         c.put_reshard("fpA", "fpB", "a100-pcie/sig", 4, sample_table());
 
-        let parsed = ProfileCache::from_json(
+        let mut parsed = ProfileCache::from_json(
             &Json::parse(&c.to_json().to_string()).unwrap(),
         )
         .unwrap();
@@ -445,7 +576,7 @@ mod tests {
         c.save().unwrap();
         assert!(path.exists());
 
-        let reloaded = ProfileCache::open(&path);
+        let mut reloaded = ProfileCache::open(&path);
         assert_eq!(reloaded.num_segments(), 1);
         assert_eq!(reloaded.get_segment(&key), Some(&sample_profile()));
 
@@ -474,8 +605,80 @@ mod tests {
 
         let merged = ProfileCache::open(&path);
         assert_eq!(merged.num_segments(), 2);
+        let mut merged = merged;
         assert!(merged.get_segment(&key_a).is_some());
         assert!(merged.get_segment(&key_b).is_some());
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eviction_respects_the_entry_bound() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-evict-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+
+        let mut c = ProfileCache::open(&path);
+        c.set_max_entries(Some(3));
+        for i in 0..5 {
+            let key = CacheKey {
+                fingerprint: format!("fp{i}"),
+                platform: "sig".into(),
+                parts: 2,
+            };
+            c.put_segment(key, sample_profile());
+        }
+        c.put_reshard("fpA", "fpB", "sig", 2, sample_table());
+        c.save().unwrap();
+
+        let reloaded = ProfileCache::open(&path);
+        assert_eq!(reloaded.num_segments() + reloaded.num_reshards(), 3);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn eviction_is_least_recently_used() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-lru-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+
+        let key = |i: usize| CacheKey {
+            fingerprint: format!("fp{i}"),
+            platform: "sig".into(),
+            parts: 2,
+        };
+        let mut c = ProfileCache::open(&path);
+        c.set_max_entries(Some(2));
+        c.put_segment(key(0), sample_profile());
+        c.put_segment(key(1), sample_profile());
+        c.put_segment(key(2), sample_profile());
+        // touch the oldest entry so it becomes the most recent
+        assert!(c.get_segment(&key(0)).is_some());
+        c.save().unwrap();
+
+        let mut reloaded = ProfileCache::open(&path);
+        assert_eq!(reloaded.num_segments(), 2);
+        assert!(reloaded.get_segment(&key(0)).is_some(), "recently used survives");
+        assert!(reloaded.get_segment(&key(2)).is_some(), "newest survives");
+        assert!(reloaded.get_segment(&key(1)).is_none(), "LRU entry evicted");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn unbounded_cache_never_evicts_and_stamps_round_trip() {
+        let mut c = ProfileCache::in_memory();
+        for i in 0..10 {
+            let key = CacheKey {
+                fingerprint: format!("fp{i}"),
+                platform: "sig".into(),
+                parts: 2,
+            };
+            c.put_segment(key, sample_profile());
+        }
+        c.evict_to_cap(); // no bound → no-op
+        assert_eq!(c.num_segments(), 10);
+        let parsed =
+            ProfileCache::from_json(&Json::parse(&c.to_json().to_string()).unwrap()).unwrap();
+        assert_eq!(parsed.clock, c.clock, "clock persists");
+        assert_eq!(parsed.to_json().to_string(), c.to_json().to_string());
     }
 }

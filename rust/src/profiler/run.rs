@@ -146,7 +146,12 @@ fn lower_with_states(
 }
 
 /// Profile every unique segment and boundary pair of a model.
-pub fn profile_model(g: &Graph, bs: &BlockSet, ss: &SegmentSet, opts: &ProfileOptions) -> ProfileDb {
+pub fn profile_model(
+    g: &Graph,
+    bs: &BlockSet,
+    ss: &SegmentSet,
+    opts: &ProfileOptions,
+) -> ProfileDb {
     profile_model_cached(g, bs, ss, opts, None)
 }
 
@@ -201,7 +206,7 @@ pub fn profile_model_cached(
         let key =
             CacheKey { fingerprint: u.fingerprint.clone(), platform: sig.clone(), parts };
         let hit = cache
-            .as_deref()
+            .as_deref_mut()
             .and_then(|c| c.get_segment(&key))
             // defensive: an entry whose config space disagrees with this
             // build (foreign or hand-edited file) is a miss, never a
@@ -344,7 +349,8 @@ pub fn profile_model_cached(
         // the crossing tensor's size is not pinned down by the fingerprint
         // pair alone, so it joins the reshard cache key
         let rsig = format!("{sig};bytes{bytes}");
-        if let Some(t) = cache.as_deref().and_then(|c| c.get_reshard(fp_a, fp_b, &rsig, parts))
+        if let Some(t) =
+            cache.as_deref_mut().and_then(|c| c.get_reshard(fp_a, fp_b, &rsig, parts))
         {
             let rows_ok = t.t_r_us.len() == pa.configs.len()
                 && t.sym_vol.len() == pa.configs.len()
@@ -436,7 +442,8 @@ pub fn infer_incoming_state(
     use crate::affine::{propagate, Prop};
     let users = g.users();
     // BFS for a path t0 → ... → seeded tensor
-    let mut prev: HashMap<OpId, (OpId, usize)> = HashMap::new(); // op -> (producer tensor, input idx)
+    // op -> (producer tensor, input idx)
+    let mut prev: HashMap<OpId, (OpId, usize)> = HashMap::new();
     let mut queue = std::collections::VecDeque::new();
     queue.push_back(t0);
     let mut seeded_end: Option<OpId> = None;

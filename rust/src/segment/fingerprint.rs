@@ -22,7 +22,8 @@ pub fn segment_fingerprint(g: &Graph, bs: &BlockSet, blocks: &[usize]) -> String
         let blk = &bs.blocks[b];
         entry_signature(g, blk.entry, &mut s);
         // strategy labels are part of the parallel space
-        let _ = write!(s, "[{}]", blk.strategies.iter().map(|st| st.label.as_str()).collect::<Vec<_>>().join(","));
+        let labels: Vec<&str> = blk.strategies.iter().map(|st| st.label.as_str()).collect();
+        let _ = write!(s, "[{}]", labels.join(","));
         if i + 1 < blocks.len() {
             let next = &bs.blocks[blocks[i + 1]];
             let dep = entry_dependency(g, blk.entry, next.entry);

@@ -9,6 +9,23 @@
 //! consecutive entries + entry signatures + member histograms). Instances
 //! with equal fingerprints share one profile (§4.2) — this is what makes
 //! CFP's search overhead independent of model depth (§5.5).
+//!
+//! # Invariants
+//!
+//! * **Chain contiguity.** `SegmentSet::instances` is a partition of the
+//!   block chain into contiguous, non-overlapping runs in chain order;
+//!   every block belongs to exactly one instance. The Eq. 8/9 composition
+//!   in [`crate::cost`] and the stage spans in [`crate::interop`] both
+//!   index adjacent instances and are meaningless without this.
+//! * **Fingerprint soundness.** Two instances share a `unique_id` only if
+//!   their full fingerprint (entry structure, strategy labels, inter-entry
+//!   affine dependency classes, and the orphan-op count) matches — sharing
+//!   a profile is then safe because profiling only reads what the
+//!   fingerprint pins down. The converse is not required: distinct
+//!   fingerprints for behaviourally equal segments merely cost an extra
+//!   profile.
+//! * `fwd_range`s are disjoint, ascending, and cover `[0, fwd_end)`, so
+//!   `op_to_instance` is total over forward ops.
 
 pub mod fingerprint;
 

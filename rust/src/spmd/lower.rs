@@ -250,7 +250,8 @@ fn decide(
         // K-split dot: partial result → AllReduce now (entry contract)
         if let OpKind::Dot(d) = &op.kind {
             let b = d.batch;
-            let lhs_k_split = matches!(st[op.inputs[0]], Some(ShardState::Split(dd)) if dd == b + 1);
+            let lhs_k_split =
+                matches!(st[op.inputs[0]], Some(ShardState::Split(dd)) if dd == b + 1);
             if lhs_k_split && target == ShardState::Replicated {
                 // compute partial locally, then AllReduce the full output
                 prog.instrs.push(Instr::Coll {

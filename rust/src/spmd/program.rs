@@ -109,7 +109,12 @@ mod tests {
             instrs: vec![
                 Instr::Compute { op: 0, flops: 100, bytes: 8 },
                 Instr::Coll { kind: CollKind::AllReduce, bytes: 64, grad_sync: true, tensor: 1 },
-                Instr::CollInter { kind: CollKind::AllGather, bytes: 32, grad_sync: false, tensor: 2 },
+                Instr::CollInter {
+                    kind: CollKind::AllGather,
+                    bytes: 32,
+                    grad_sync: false,
+                    tensor: 2,
+                },
             ],
             param_bytes: 10,
             grad_bytes: 10,

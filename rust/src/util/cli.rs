@@ -48,6 +48,12 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Optional integer option with no default (e.g.
+    /// `--cache-max-entries N`): None when absent or unparseable.
+    pub fn get_usize_opt(&self, key: &str) -> Option<usize> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
     pub fn get_f64(&self, key: &str, default: f64) -> f64 {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
@@ -86,6 +92,15 @@ mod tests {
         let a = parse("run");
         assert_eq!(a.get_or("platform", "a100-pcie"), "a100-pcie");
         assert_eq!(a.get_f64("lr", 0.1), 0.1);
+    }
+
+    #[test]
+    fn optional_usize() {
+        let a = parse("search --cache-max-entries 64");
+        assert_eq!(a.get_usize_opt("cache-max-entries"), Some(64));
+        assert_eq!(a.get_usize_opt("missing"), None);
+        let b = parse("search --cache-max-entries lots");
+        assert_eq!(b.get_usize_opt("cache-max-entries"), None);
     }
 
     #[test]

@@ -85,7 +85,10 @@ fn memory_cap_changes_plan_not_feasibility() {
     let mut o = opts("llama-7b", 6, Platform::a100_pcie(4), Mesh::flat(4));
     o.mem_cap = Some((base.plan.mem_bytes as f64 * 0.92) as u64);
     let capped = run_cfp(&o);
-    assert!(capped.plan.mem_bytes <= o.mem_cap.unwrap() || capped.plan.mem_bytes == base.plan.mem_bytes);
+    assert!(
+        capped.plan.mem_bytes <= o.mem_cap.unwrap()
+            || capped.plan.mem_bytes == base.plan.mem_bytes
+    );
     assert!(capped.plan.time_us >= base.plan.time_us - 1e-6);
 }
 
