@@ -5,7 +5,7 @@
 //! Usage: `cargo run --release --example pipeline_eval [-- --microbatches M]`
 
 use cfp::cluster::Platform;
-use cfp::harness::{fmt_us, pipeline_eval_models, pipeline_row, Table};
+use cfp::harness::{fmt_bytes, fmt_us, pipeline_eval_models, pipeline_row, Table};
 use cfp::spmd::Mesh;
 use cfp::util::cli::Args;
 
@@ -29,6 +29,7 @@ fn main() {
             "naive pipeline",
             "stages",
             "bubble",
+            "peak mem/dev",
             "vs single",
             "vs naive",
         ]);
@@ -41,6 +42,7 @@ fn main() {
                 fmt_us(row.naive_us),
                 row.stages.to_string(),
                 format!("{:.1}%", row.bubble * 100.0),
+                fmt_bytes(row.peak_mem_bytes),
                 format!("{:.2}x", row.single_us / row.two_level_us),
                 format!("{:.2}x", row.naive_us / row.two_level_us),
             ]);

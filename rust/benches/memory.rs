@@ -1,0 +1,82 @@
+//! Bench: the memory axis of the search — rematerialization frontier
+//! construction and the enlarged (config × remat) span DP — vs the plain
+//! PR 2 span DP, so the search-time cost of making memory a searched
+//! quantity is tracked. §Perf target: the memory DP stays within ~2–4× of
+//! the plain span search at equal depth.
+
+use std::time::Duration;
+
+use cfp::cluster::Platform;
+use cfp::cost;
+use cfp::memory::{self, RecomputeSpec};
+use cfp::models::{build_training, ModelCfg};
+use cfp::pblock::build_parallel_blocks;
+use cfp::profiler::{profile_model, ProfileOptions};
+use cfp::segment::extract_segments;
+use cfp::spmd::Mesh;
+use cfp::util::bench::{bench, black_box};
+
+fn main() {
+    for layers in [4usize, 8, 16] {
+        let cfg = ModelCfg::preset("gpt-2.6b").with_layers(layers).scaled_for_eval();
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let db = profile_model(&g, &bs, &ss, &opts);
+        let n = ss.instances.len();
+
+        // baseline: the PR 2 single-plan span DP
+        bench(
+            &format!("span_search/plain/{layers}L"),
+            Duration::from_millis(500),
+            || {
+                black_box(cost::search_span(&ss, &db, None, 0, n));
+            },
+        );
+        // the enlarged DP, recompute off (2× state from the frontier form)
+        bench(
+            &format!("span_search/mem_frontier_off/{layers}L"),
+            Duration::from_millis(500),
+            || {
+                black_box(cost::search_span_mem(&ss, &db, 0, n, RecomputeSpec::Off));
+            },
+        );
+        // the full memory axis: per-instance keep-vs-checkpoint choices
+        bench(
+            &format!("span_search/mem_frontier_auto/{layers}L"),
+            Duration::from_millis(500),
+            || {
+                black_box(cost::search_span_mem(&ss, &db, 0, n, RecomputeSpec::Auto));
+            },
+        );
+
+        // frontier consumption: footprints + feasibility selection over
+        // the in-flight windows of a 4-stage 1F1B pipeline
+        let frontier = cost::search_span_mem(&ss, &db, 0, n, RecomputeSpec::Auto);
+        let cap = frontier.iter().map(|p| p.peak_bytes(8, 2)).min().unwrap_or(u64::MAX);
+        bench(
+            &format!("remat/select_feasible/{layers}L"),
+            Duration::from_millis(200),
+            || {
+                for stage_idx in 0..4usize {
+                    let f = memory::inflight_microbatches(4, stage_idx, 8);
+                    black_box(memory::select_feasible(&frontier, 8, f, cap));
+                }
+            },
+        );
+        // per-(segment, config) remat frontier construction alone
+        bench(
+            &format!("remat/frontier_points/{layers}L"),
+            Duration::from_millis(200),
+            || {
+                for u in 0..ss.num_unique() {
+                    let p = &db.segments[u];
+                    for c in 0..p.configs.len() {
+                        black_box(memory::remat_points(p, c, RecomputeSpec::Auto));
+                    }
+                }
+            },
+        );
+    }
+}

@@ -22,4 +22,7 @@ pub mod sim;
 
 pub use collective::collective_time_us;
 pub use platform::{LinkModel, Platform};
-pub use sim::{simulate, simulate_pipeline, PipelineSchedule, SimReport};
+pub use sim::{
+    simulate, simulate_pipeline, simulate_pipeline_memory, PipelineSchedule, SimReport,
+    StageMemSpec,
+};

@@ -189,6 +189,119 @@ pub fn simulate_pipeline(latencies_us: &[f64], microbatches: usize) -> PipelineS
     PipelineSchedule { makespan_us, stage_busy_us, bubble_fraction }
 }
 
+/// Per-stage memory parameters of the 1F1B memory simulation — the
+/// per-microbatch shares the caller derives from a whole-batch
+/// [`crate::memory::SpanFootprint`] (same floor division as the closed
+/// form, so sim and formula agree bit-for-bit).
+#[derive(Clone, Copy, Debug, Default)]
+pub struct StageMemSpec {
+    /// weights + gradient buckets + optimizer state
+    pub static_bytes: u64,
+    /// activation bytes one microbatch retains until its backward
+    pub retained_per_mb: u64,
+    /// recompute scratch live while one microbatch's backward runs
+    pub transient_per_mb: u64,
+}
+
+/// Event-driven 1F1B schedule with live-memory tracking: every stage runs
+/// the canonical one-forward-one-backward order (stage `i` of `k` does
+/// `min(m, k − i)` warmup forwards, then alternates backward/forward,
+/// then drains), with forwards gated on the upstream stage's delivery and
+/// backwards on the downstream stage's gradient. Activations are counted
+/// in when a forward executes and out when the microbatch's backward
+/// completes; recompute scratch is live during the backward. Returns each
+/// stage's high-water mark — the quantity
+/// [`crate::memory::stage_peak_bytes`] predicts in closed form
+/// (`static + min(m, k − i) · retained + transient`); the
+/// `integration_memory` tests pin the two to each other exactly.
+///
+/// Panics if the dependency graph cannot make progress (an invalid
+/// schedule — impossible for the canonical 1F1B window).
+pub fn simulate_pipeline_memory(
+    latencies_us: &[f64],
+    microbatches: usize,
+    mem: &[StageMemSpec],
+) -> Vec<u64> {
+    let k = latencies_us.len();
+    assert_eq!(mem.len(), k, "one memory spec per stage");
+    if k == 0 {
+        return Vec::new();
+    }
+    let m = microbatches.max(1);
+
+    // canonical 1F1B task order per stage: (is_backward, microbatch)
+    let mut seq: Vec<Vec<(bool, usize)>> = Vec::with_capacity(k);
+    for i in 0..k {
+        let w = (k - i).min(m);
+        let mut s = Vec::with_capacity(2 * m);
+        for j in 0..w {
+            s.push((false, j));
+        }
+        let mut next_f = w;
+        for j in 0..m {
+            s.push((true, j));
+            if next_f < m {
+                s.push((false, next_f));
+                next_f += 1;
+            }
+        }
+        seq.push(s);
+    }
+
+    // timed execution honoring cross-stage dependencies; the half/half
+    // forward/backward split shapes only the timeline, not the counting
+    let mut fwd_done: Vec<Vec<Option<f64>>> = vec![vec![None; m]; k];
+    let mut bwd_done: Vec<Vec<Option<f64>>> = vec![vec![None; m]; k];
+    let mut pos = vec![0usize; k];
+    let mut stage_free = vec![0.0f64; k];
+    let mut retained = vec![0usize; k];
+    let mut high: Vec<u64> = mem.iter().map(|s| s.static_bytes).collect();
+    let total: usize = seq.iter().map(|s| s.len()).sum();
+    let mut done = 0usize;
+    while done < total {
+        let mut progressed = false;
+        for i in 0..k {
+            while pos[i] < seq[i].len() {
+                let (is_bwd, j) = seq[i][pos[i]];
+                let dep = if is_bwd {
+                    match (fwd_done[i][j], if i + 1 < k { bwd_done[i + 1][j] } else { Some(0.0) })
+                    {
+                        (Some(a), Some(b)) => Some(a.max(b)),
+                        _ => None,
+                    }
+                } else if i > 0 {
+                    fwd_done[i - 1][j]
+                } else {
+                    Some(0.0)
+                };
+                let Some(dep) = dep else { break };
+                let start = stage_free[i].max(dep);
+                let end = start + latencies_us[i].max(0.0) / 2.0;
+                if is_bwd {
+                    let live = mem[i].static_bytes
+                        + retained[i] as u64 * mem[i].retained_per_mb
+                        + mem[i].transient_per_mb;
+                    high[i] = high[i].max(live);
+                    retained[i] -= 1;
+                    bwd_done[i][j] = Some(end);
+                } else {
+                    retained[i] += 1;
+                    let live =
+                        mem[i].static_bytes + retained[i] as u64 * mem[i].retained_per_mb;
+                    high[i] = high[i].max(live);
+                    fwd_done[i][j] = Some(end);
+                }
+                stage_free[i] = end;
+                pos[i] += 1;
+                done += 1;
+                progressed = true;
+            }
+        }
+        assert!(progressed, "1F1B schedule deadlocked — invalid dependency window");
+    }
+    high
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -275,6 +388,39 @@ mod tests {
         let skewed = simulate_pipeline(&[2.0, 8.0], 8);
         assert!(skewed.makespan_us > balanced.makespan_us);
         assert!(skewed.bubble_fraction > balanced.bubble_fraction);
+    }
+
+    #[test]
+    fn pipeline_memory_high_water_matches_1f1b_window() {
+        // 4 stages, 8 microbatches: stage i holds min(8, 4 − i) sets
+        let lats = [10.0, 12.0, 8.0, 11.0];
+        let spec = StageMemSpec { static_bytes: 1000, retained_per_mb: 100, transient_per_mb: 7 };
+        let high = simulate_pipeline_memory(&lats, 8, &[spec; 4]);
+        for (i, h) in high.iter().enumerate() {
+            let f = (4 - i).min(8) as u64;
+            assert_eq!(*h, 1000 + f * 100 + 7, "stage {i}");
+        }
+    }
+
+    #[test]
+    fn pipeline_memory_microbatch_count_caps_the_window() {
+        let spec = StageMemSpec { static_bytes: 0, retained_per_mb: 10, transient_per_mb: 0 };
+        let high = simulate_pipeline_memory(&[5.0, 5.0, 5.0, 5.0], 2, &[spec; 4]);
+        assert_eq!(high, vec![20, 20, 20, 10], "windows min(2, 4−i)");
+    }
+
+    #[test]
+    fn single_stage_memory_is_whole_batch() {
+        let spec = StageMemSpec { static_bytes: 5, retained_per_mb: 3, transient_per_mb: 2 };
+        assert_eq!(simulate_pipeline_memory(&[7.0], 1, &[spec]), vec![10]);
+    }
+
+    #[test]
+    fn memory_high_water_is_schedule_shape_not_timing() {
+        let spec = StageMemSpec { static_bytes: 0, retained_per_mb: 1, transient_per_mb: 0 };
+        let a = simulate_pipeline_memory(&[1.0, 100.0, 1.0], 6, &[spec; 3]);
+        let b = simulate_pipeline_memory(&[100.0, 1.0, 100.0], 6, &[spec; 3]);
+        assert_eq!(a, b, "canonical 1F1B pins the window regardless of stage balance");
     }
 
     #[test]

@@ -29,6 +29,7 @@
 
 use std::sync::Arc;
 
+use crate::memory::{self, RecomputeSpec, SpanMemPlan};
 use crate::profiler::ProfileDb;
 use crate::segment::SegmentSet;
 use crate::util::ThreadPool;
@@ -174,6 +175,201 @@ pub fn search_span(
         idx = p.prev_idx;
     }
     Some(Plan { choice, time_us: terminal.time, mem_bytes: terminal.mem })
+}
+
+/// Pareto point of the memory-axis span DP: time (recompute included) and
+/// the three components of the 1F1B footprint, with backpointers.
+#[derive(Clone, Copy, Debug)]
+struct MemPoint {
+    time: f64,
+    recompute: f64,
+    stat: u64,
+    ret: u64,
+    tra: u64,
+    ckpt: bool,
+    prev_cfg: usize,
+    prev_idx: usize,
+}
+
+/// Per-(position, config) cap on the memory-axis frontier (like
+/// `FRONTIER_CAP`, thinning keeps the min-time endpoint, so the
+/// unconstrained optimum is exact).
+const MEM_FRONTIER_CAP: usize = 16;
+
+/// Memory-axis variant of [`search_span`]: the DP state is enlarged with
+/// the per-instance rematerialization choice ([`memory::remat_points`]),
+/// and instead of one min-time plan it returns the span's frontier of
+/// (time, 1F1B-footprint) trade-off points — the inter-op stage planner
+/// picks the min-time point whose [`memory::stage_peak_bytes`] fits the
+/// device cap at the stage's in-flight depth.
+///
+/// Pruning: points are kept when they improve the running minimum of any
+/// footprint component in time order. That keeps the min-time point (so a
+/// loose cap reproduces [`search_span`]'s unconstrained optimum exactly)
+/// and the memory-frugal endpoints; intermediate points may be thinned
+/// (same approximation class as `FRONTIER_CAP`).
+pub fn search_span_mem(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+) -> Vec<SpanMemPlan> {
+    assert!(lo <= hi && hi <= ss.instances.len());
+    let n = hi - lo;
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut frontiers: Vec<Vec<Vec<MemPoint>>> = Vec::with_capacity(n);
+    let u0 = ss.instances[lo].unique_id;
+    let p0 = &db.segments[u0];
+    let mut first: Vec<Vec<MemPoint>> = Vec::with_capacity(p0.configs.len());
+    for cfg in 0..p0.configs.len() {
+        let seg_t = p0.t_c_us[cfg] + p0.t_p_us[cfg];
+        let stat = memory::seg_static_bytes(p0, cfg);
+        let mut pts: Vec<MemPoint> = Vec::new();
+        for r in memory::remat_points(p0, cfg, spec) {
+            pts.push(MemPoint {
+                time: seg_t + r.extra_us,
+                recompute: r.extra_us,
+                stat,
+                ret: r.retained_bytes,
+                tra: r.transient_bytes,
+                ckpt: r.checkpoint,
+                prev_cfg: usize::MAX,
+                prev_idx: usize::MAX,
+            });
+        }
+        prune_mem(&mut pts);
+        first.push(pts);
+    }
+    frontiers.push(first);
+
+    for i in 1..n {
+        let u = ss.instances[lo + i].unique_id;
+        let pu = ss.instances[lo + i - 1].unique_id;
+        let prof = &db.segments[u];
+        let prev = &frontiers[i - 1];
+        let mut cur: Vec<Vec<MemPoint>> = Vec::with_capacity(prof.configs.len());
+        for cfg in 0..prof.configs.len() {
+            let seg_t = prof.t_c_us[cfg] + prof.t_p_us[cfg];
+            let stat = memory::seg_static_bytes(prof, cfg);
+            let rpts = memory::remat_points(prof, cfg, spec);
+            let mut pts: Vec<MemPoint> = Vec::new();
+            for (pcfg, pset) in prev.iter().enumerate() {
+                if pset.is_empty() {
+                    continue;
+                }
+                let tr = db.reshard_us(pu, pcfg, u, cfg);
+                for (pidx, pp) in pset.iter().enumerate() {
+                    for r in &rpts {
+                        pts.push(MemPoint {
+                            time: pp.time + tr + seg_t + r.extra_us,
+                            recompute: pp.recompute + r.extra_us,
+                            stat: pp.stat + stat,
+                            ret: pp.ret + r.retained_bytes,
+                            tra: pp.tra.max(r.transient_bytes),
+                            ckpt: r.checkpoint,
+                            prev_cfg: pcfg,
+                            prev_idx: pidx,
+                        });
+                    }
+                }
+            }
+            prune_mem(&mut pts);
+            cur.push(pts);
+        }
+        frontiers.push(cur);
+    }
+
+    // terminal frontier across configs: keep undominated points, then
+    // backtrack each into a full span plan
+    let last = &frontiers[n - 1];
+    let mut terminals: Vec<(usize, usize)> = Vec::new();
+    for (cfg, pts) in last.iter().enumerate() {
+        for idx in 0..pts.len() {
+            terminals.push((cfg, idx));
+        }
+    }
+    terminals.sort_by(|a, b| {
+        let (pa, pb) = (&last[a.0][a.1], &last[b.0][b.1]);
+        pa.time
+            .partial_cmp(&pb.time)
+            .unwrap()
+            .then(pa.stat.cmp(&pb.stat))
+            .then(pa.ret.cmp(&pb.ret))
+            .then(pa.tra.cmp(&pb.tra))
+    });
+    let mut kept: Vec<(usize, usize)> = Vec::new();
+    for t in terminals {
+        let p = &last[t.0][t.1];
+        let dominated = kept.iter().any(|&(c, i)| {
+            let q = &last[c][i];
+            q.stat <= p.stat && q.ret <= p.ret && q.tra <= p.tra
+        });
+        if !dominated {
+            kept.push(t);
+        }
+    }
+    kept.into_iter().map(|(cfg, idx)| backtrack_mem(&frontiers, n, cfg, idx)).collect()
+}
+
+/// Keep points that lower the running minimum of any footprint component
+/// in time order (min-time point always survives), then thin to
+/// `MEM_FRONTIER_CAP` evenly spaced representatives incl. endpoints.
+fn prune_mem(pts: &mut Vec<MemPoint>) {
+    pts.sort_by(|a, b| {
+        a.time
+            .partial_cmp(&b.time)
+            .unwrap()
+            .then(a.stat.cmp(&b.stat))
+            .then(a.ret.cmp(&b.ret))
+            .then(a.tra.cmp(&b.tra))
+    });
+    let mut out: Vec<MemPoint> = Vec::new();
+    let (mut min_stat, mut min_ret, mut min_tra) = (u64::MAX, u64::MAX, u64::MAX);
+    for p in pts.drain(..) {
+        if out.is_empty() || p.stat < min_stat || p.ret < min_ret || p.tra < min_tra {
+            min_stat = min_stat.min(p.stat);
+            min_ret = min_ret.min(p.ret);
+            min_tra = min_tra.min(p.tra);
+            out.push(p);
+        }
+    }
+    if out.len() > MEM_FRONTIER_CAP {
+        let step = (out.len() - 1) as f64 / (MEM_FRONTIER_CAP - 1) as f64;
+        out = (0..MEM_FRONTIER_CAP).map(|k| out[(k as f64 * step).round() as usize]).collect();
+    }
+    *pts = out;
+}
+
+fn backtrack_mem(
+    frontiers: &[Vec<Vec<MemPoint>>],
+    n: usize,
+    mut cfg: usize,
+    mut idx: usize,
+) -> SpanMemPlan {
+    let terminal = frontiers[n - 1][cfg][idx];
+    let mut choice = vec![0usize; n];
+    let mut remat = vec![false; n];
+    for i in (0..n).rev() {
+        let p = frontiers[i][cfg][idx];
+        choice[i] = cfg;
+        remat[i] = p.ckpt;
+        cfg = p.prev_cfg;
+        idx = p.prev_idx;
+    }
+    SpanMemPlan {
+        choice,
+        remat,
+        time_us: terminal.time,
+        footprint: crate::memory::SpanFootprint {
+            static_bytes: terminal.stat,
+            retained_bytes: terminal.ret,
+            transient_bytes: terminal.tra,
+            recompute_us: terminal.recompute,
+        },
+    }
 }
 
 /// Constrained variant: all instances of a unique segment use the same
@@ -491,6 +687,74 @@ mod tests {
                 assert!((t - p.time_us).abs() < 1e-6, "[{lo},{hi}) {t} vs {}", p.time_us);
                 assert_eq!(m, p.mem_bytes, "[{lo},{hi})");
                 assert_eq!(p.choice.len(), hi - lo);
+            }
+        }
+    }
+
+    #[test]
+    fn mem_frontier_min_time_equals_unconstrained_search() {
+        let (ss, db) = setup(3);
+        let n = ss.instances.len();
+        let plain = search(&ss, &db, None).unwrap();
+        for spec in [RecomputeSpec::Off, RecomputeSpec::Auto] {
+            let frontier = search_span_mem(&ss, &db, 0, n, spec);
+            assert!(!frontier.is_empty());
+            let best = frontier
+                .iter()
+                .min_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap())
+                .unwrap();
+            assert!(
+                (best.time_us - plain.time_us).abs() < 1e-9 * plain.time_us.max(1.0),
+                "{spec:?}: {} vs {}",
+                best.time_us,
+                plain.time_us
+            );
+            assert!(best.remat.iter().all(|&r| !r), "the min-time point never recomputes");
+            let fp = memory::span_footprint(&ss, &db, &best.choice, 0, n);
+            assert_eq!(fp.static_bytes, best.footprint.static_bytes);
+            assert_eq!(fp.retained_bytes, best.footprint.retained_bytes);
+            assert_eq!(best.footprint.transient_bytes, 0);
+        }
+    }
+
+    #[test]
+    fn mem_frontier_times_recompose_from_plan_cost() {
+        let (ss, db) = setup(2);
+        let n = ss.instances.len();
+        let frontier = search_span_mem(&ss, &db, 0, n, RecomputeSpec::Auto);
+        for p in &frontier {
+            let (t, _) = plan_cost_span(&ss, &db, &p.choice, 0, n);
+            assert!(
+                (p.time_us - p.footprint.recompute_us - t).abs() <= 1e-6 * t.max(1.0),
+                "time {} − recompute {} vs composed {t}",
+                p.time_us,
+                p.footprint.recompute_us
+            );
+            assert_eq!(p.choice.len(), n);
+            assert_eq!(p.remat.len(), n);
+        }
+    }
+
+    #[test]
+    fn mem_frontier_auto_reaches_lower_peaks_with_slower_plans() {
+        let (ss, db) = setup(3);
+        let n = ss.instances.len();
+        let off = search_span_mem(&ss, &db, 0, n, RecomputeSpec::Off);
+        let auto_ = search_span_mem(&ss, &db, 0, n, RecomputeSpec::Auto);
+        // at pipeline depth (several microbatches in flight) checkpointing
+        // must unlock strictly lower peaks than any keep-everything plan
+        let min_peak = |f: &[SpanMemPlan]| f.iter().map(|p| p.peak_bytes(8, 4)).min().unwrap();
+        assert!(
+            min_peak(&auto_) < min_peak(&off),
+            "auto {} vs off {}",
+            min_peak(&auto_),
+            min_peak(&off)
+        );
+        // and every checkpointed point pays for it in time
+        let best_time = off.iter().map(|p| p.time_us).fold(f64::INFINITY, f64::min);
+        for p in &auto_ {
+            if p.remat.iter().any(|&r| r) {
+                assert!(p.time_us > best_time, "recompute is never free");
             }
         }
     }

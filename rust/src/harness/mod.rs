@@ -95,6 +95,9 @@ pub struct PipelineRow {
     pub stages: usize,
     /// pipeline-bubble share of the chosen plan's step
     pub bubble: f64,
+    /// closed-form 1F1B peak memory per device of the chosen plan (max
+    /// over stages: weights + optimizer + in-flight activations)
+    pub peak_mem_bytes: u64,
 }
 
 /// Run the two-level planner (auto stage count) for one eval cell.
@@ -109,16 +112,19 @@ pub fn pipeline_row(
         .with_microbatches(microbatches);
     opts.mesh = mesh;
     let r = run_cfp_two_level(&opts);
+    let pipeline = r.pipeline.as_ref().expect("uncapped two-level planning always plans");
+    let naive = r.naive.as_ref().expect("uncapped naive pipeline always plans");
     let row = PipelineRow {
         model: model.name.clone(),
         platform: platform.name,
         gpus: mesh.total(),
         microbatches,
         single_us: r.single.plan.time_us,
-        two_level_us: r.pipeline.step_time_us,
-        naive_us: r.naive.step_time_us,
-        stages: r.pipeline.num_stages(),
-        bubble: r.pipeline.bubble_fraction,
+        two_level_us: pipeline.step_time_us,
+        naive_us: naive.step_time_us,
+        stages: pipeline.num_stages(),
+        bubble: pipeline.bubble_fraction,
+        peak_mem_bytes: pipeline.peak_mem_bytes,
     };
     (row, r)
 }

@@ -40,6 +40,20 @@
 //! [`crate::profiler::profile_model_cached`] so the persistent
 //! fingerprint cache makes warm runs cheap across *all* stage counts.
 //!
+//! # Memory (PR 3)
+//!
+//! With a `--mem-cap` (or `--recompute auto`, against the device
+//! capacity) the planner becomes *memory-aware*: every candidate stage is
+//! priced by its closed-form 1F1B peak ([`crate::memory`]) — weights +
+//! optimizer + gradient buckets plus the activations of the
+//! `min(m, k − i)` in-flight microbatches stage `i` holds — and a split
+//! whose peak exceeds the cap is rejected. Per-span solutions come from
+//! [`crate::cost::search_span_mem`], whose frontier includes
+//! checkpoint-and-recompute variants, so a rejected stage can be
+//! recovered as a strictly slower but feasible plan. Without a cap and
+//! with recompute off, planning is bit-identical to PR 2 (the accounting
+//! is still computed, for reporting).
+//!
 //! # Invariants
 //!
 //! * Stages are contiguous, non-empty spans covering the chain exactly
@@ -58,6 +72,7 @@ use crate::cluster::sim::ComputeModel;
 use crate::cluster::{collective_time_us, simulate_pipeline, Platform};
 use crate::cost::{self, Plan};
 use crate::graph::Graph;
+use crate::memory::{self, RecomputeSpec, SpanFootprint, SpanMemPlan};
 use crate::pblock::{build_parallel_blocks, BlockSet};
 use crate::profiler::{profile_model_cached, ProfileCache, ProfileDb, ProfileOptions};
 use crate::segment::{extract_segments, SegmentSet};
@@ -108,6 +123,10 @@ pub struct PipelineOptions {
     /// formula)
     pub microbatches: usize,
     pub spec: StageSpec,
+    /// whether the planner may trade recomputation for activation memory
+    /// (`--recompute`). With `Off` and no `mem_cap`, planning is
+    /// bit-identical to the PR 2 behaviour.
+    pub recompute: RecomputeSpec,
 }
 
 impl PipelineOptions {
@@ -120,8 +139,29 @@ impl PipelineOptions {
             compute: None,
             microbatches: 8,
             spec: StageSpec::Auto,
+            recompute: RecomputeSpec::Off,
         }
     }
+
+    /// True when the 1F1B activation-memory accounting constrains the
+    /// search: an explicit `--mem-cap`, or recomputation enabled (which
+    /// only matters under a cap — the device capacity by default). When
+    /// false, planning takes exactly the PR 2 code path.
+    pub fn memory_aware(&self) -> bool {
+        self.mem_cap.is_some() || self.recompute.is_auto()
+    }
+
+    /// The per-device byte budget the 1F1B peak of every stage must fit.
+    pub fn device_cap(&self) -> u64 {
+        self.mem_cap.unwrap_or_else(|| self.platform.mem_capacity())
+    }
+}
+
+/// Microbatch count for the *memory* accounting of a `k`-stage plan —
+/// the single convention lives in [`memory::memory_microbatches`]
+/// (`k = 1` bypasses the microbatch division, the PR 2 whole-batch rule).
+fn m_eff(opts: &PipelineOptions, k: usize) -> usize {
+    memory::memory_microbatches(k, opts.microbatches)
 }
 
 /// One intra-op planning context, profiled for a specific sub-mesh size.
@@ -294,12 +334,21 @@ pub struct StagePlan {
     pub span: (usize, usize),
     /// global device range `[first, last)`
     pub devices: (usize, usize),
-    /// intra-op plan for the span (whole-batch time/memory)
+    /// intra-op plan for the span (whole-batch time/memory; time includes
+    /// any recompute the memory planner chose)
     pub plan: Plan,
     /// per-microbatch incoming activation transfer, µs (0 for stage 0)
     pub p2p_in_us: f64,
     /// per-microbatch stage latency `Tᵢ/m + xᵢ`, µs
     pub latency_us: f64,
+    /// whole-batch memory footprint (static / retained / transient /
+    /// recompute) behind the 1F1B peak
+    pub footprint: SpanFootprint,
+    /// closed-form 1F1B peak per device: `static + f·retained/m +
+    /// transient/m` with `f` this stage's in-flight window
+    pub peak_mem_bytes: u64,
+    /// checkpoint-and-recompute flag per instance of the span
+    pub remat: Vec<bool>,
 }
 
 /// A composed two-level plan: contiguous stages, each with its own
@@ -311,8 +360,12 @@ pub struct PipelinePlan {
     pub microbatches: usize,
     /// composed step time, µs (exactly the intra-op plan time when k = 1)
     pub step_time_us: f64,
-    /// peak per-device memory across stages
+    /// peak per-device *whole-batch plan* memory across stages (the PR 2
+    /// quantity — see `peak_mem_bytes` for the 1F1B accounting)
     pub mem_bytes: u64,
+    /// max over stages of the closed-form 1F1B peak (weights + optimizer
+    /// + gradient buckets + in-flight microbatch activations)
+    pub peak_mem_bytes: u64,
     /// pipeline-bubble share of the step (0 for k = 1)
     pub bubble_fraction: f64,
 }
@@ -322,22 +375,35 @@ impl PipelinePlan {
         self.stages.len()
     }
 
+    /// The microbatch count the memory accounting divides by: 1 for a
+    /// single-stage plan (whole-batch convention), `m` otherwise — the
+    /// same [`memory::memory_microbatches`] rule the planner priced with.
+    pub fn memory_microbatches(&self) -> usize {
+        memory::memory_microbatches(self.stages.len(), self.microbatches)
+    }
+
     /// Human-readable per-stage summary lines.
     pub fn describe(&self) -> Vec<String> {
         self.stages
             .iter()
             .enumerate()
             .map(|(s, st)| {
+                let ck = st.remat.iter().filter(|&&r| r).count();
                 format!(
                     "stage {s}: segments [{}, {}) on devices [{}, {})  \
-                     intra-op {:.1}µs  p2p/µb {:.1}µs  mem {} MB",
+                     intra-op {:.1}µs  p2p/µb {:.1}µs  peak {} MB{}",
                     st.span.0,
                     st.span.1,
                     st.devices.0,
                     st.devices.1,
                     st.plan.time_us,
                     st.p2p_in_us,
-                    st.plan.mem_bytes >> 20,
+                    st.peak_mem_bytes >> 20,
+                    if ck > 0 {
+                        format!("  (recompute {ck}/{} segs)", st.remat.len())
+                    } else {
+                        String::new()
+                    },
                 )
             })
             .collect()
@@ -355,20 +421,27 @@ pub fn plan_pipeline(
 ) -> Option<PipelinePlan> {
     let total = opts.mesh.total();
     let mut best: Option<PipelinePlan> = None;
+    let mut structurally_possible = false;
     for k in candidate_stage_counts(opts.spec, opts.mesh) {
         let Some(ctx) = ctxs.get(total / k) else { continue };
-        let mut memo = HashMap::new();
+        if k <= ctx.segments.instances.len() {
+            structurally_possible = true;
+        }
+        let mut memo = SpanMemo::default();
         if let Some(p) = plan_fixed_stages_memo(g, ctx, opts, k, &mut memo) {
             if best.as_ref().map_or(true, |b| p.step_time_us < b.step_time_us) {
                 best = Some(p);
             }
         }
     }
-    if best.is_none() {
-        // an infeasible Fixed(k) request (e.g. more stages than segments)
-        // degrades to the single-stage plan rather than failing
+    if best.is_none() && !(opts.memory_aware() && structurally_possible) {
+        // a structurally infeasible request (e.g. a Fixed(k) with more
+        // stages than segments) degrades to the single-stage plan rather
+        // than failing — in memory-aware mode that fallback is still
+        // cap-checked, so None remains the honest "does not fit" answer
+        // whenever some candidate was structurally possible
         if let Some(ctx) = ctxs.get(total) {
-            let mut memo = HashMap::new();
+            let mut memo = SpanMemo::default();
             best = plan_fixed_stages_memo(g, ctx, opts, 1, &mut memo);
         }
     }
@@ -383,7 +456,7 @@ pub fn plan_fixed_stages(
     opts: &PipelineOptions,
     k: usize,
 ) -> Option<PipelinePlan> {
-    let mut memo = HashMap::new();
+    let mut memo = SpanMemo::default();
     plan_fixed_stages_memo(g, ctx, opts, k, &mut memo)
 }
 
@@ -396,12 +469,20 @@ struct SplitState {
     starts: Vec<usize>,
 }
 
+/// Memoized per-span solutions shared across one (context, stage-count)
+/// DP: the PR 2 single-plan path and the memory-aware frontier path.
+#[derive(Default)]
+struct SpanMemo {
+    plans: HashMap<(usize, usize), Option<Plan>>,
+    frontiers: HashMap<(usize, usize), Vec<SpanMemPlan>>,
+}
+
 fn plan_fixed_stages_memo(
     g: &Graph,
     ctx: &StageContext,
     opts: &PipelineOptions,
     k: usize,
-    memo: &mut HashMap<(usize, usize), Option<Plan>>,
+    memo: &mut SpanMemo,
 ) -> Option<PipelinePlan> {
     let n = ctx.segments.instances.len();
     if k == 0 || k > n {
@@ -410,22 +491,17 @@ fn plan_fixed_stages_memo(
     let m = opts.microbatches.max(1);
     let mf = m as f64;
     if k == 1 {
-        let plan = solve_span(ctx, opts, memo, 0, n)?;
-        let step = plan.time_us;
-        let mem = plan.mem_bytes;
-        let latency_us = plan.time_us / mf;
+        let st = build_stage_plan(g, ctx, opts, memo, 0, n, 0, 1)?;
+        let step = st.plan.time_us;
+        let mem = st.plan.mem_bytes;
+        let peak = st.peak_mem_bytes;
         return Some(PipelinePlan {
-            stages: vec![StagePlan {
-                span: (0, n),
-                devices: (0, ctx.devices),
-                plan,
-                p2p_in_us: 0.0,
-                latency_us,
-            }],
+            stages: vec![st],
             devices_per_stage: ctx.devices,
             microbatches: m,
             step_time_us: step,
             mem_bytes: mem,
+            peak_mem_bytes: peak,
             bubble_fraction: 0.0,
         });
     }
@@ -442,7 +518,7 @@ fn plan_fixed_stages_memo(
                 if dp[s - 1][j].is_empty() {
                     continue;
                 }
-                let Some(lat) = stage_latency(g, ctx, opts, memo, j, i, s - 1) else {
+                let Some(lat) = stage_latency(g, ctx, opts, memo, j, i, s - 1, k) else {
                     continue;
                 };
                 for st in &dp[s - 1][j] {
@@ -474,22 +550,19 @@ fn plan_fixed_stages_memo(
     let mut stages = Vec::with_capacity(k);
     let mut lats = Vec::with_capacity(k);
     let mut mem_peak = 0u64;
+    let mut peak_1f1b = 0u64;
     for s in 0..k {
         let (lo, hi) = (bounds[s], bounds[s + 1]);
-        let plan = solve_span(ctx, opts, memo, lo, hi).expect("span solved during DP");
-        let p2p_in_us = if s == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, s) };
-        let latency_us = plan.time_us / mf + p2p_in_us;
-        if plan.mem_bytes > mem_peak {
-            mem_peak = plan.mem_bytes;
+        let st = build_stage_plan(g, ctx, opts, memo, lo, hi, s, k)
+            .expect("span solved during DP");
+        if st.plan.mem_bytes > mem_peak {
+            mem_peak = st.plan.mem_bytes;
         }
-        lats.push(latency_us);
-        stages.push(StagePlan {
-            span: (lo, hi),
-            devices: (s * ctx.devices, (s + 1) * ctx.devices),
-            plan,
-            p2p_in_us,
-            latency_us,
-        });
+        if st.peak_mem_bytes > peak_1f1b {
+            peak_1f1b = st.peak_mem_bytes;
+        }
+        lats.push(st.latency_us);
+        stages.push(st);
     }
     let step_time_us = compose_step_us(&lats, m);
     let bubble_fraction = simulate_pipeline(&lats, m).bubble_fraction;
@@ -499,6 +572,7 @@ fn plan_fixed_stages_memo(
         microbatches: m,
         step_time_us,
         mem_bytes: mem_peak,
+        peak_mem_bytes: peak_1f1b,
         bubble_fraction,
     })
 }
@@ -516,9 +590,9 @@ pub fn brute_force_splits(
     if k == 0 || k > n {
         return None;
     }
-    let mut memo = HashMap::new();
+    let mut memo = SpanMemo::default();
     if k == 1 {
-        return solve_span(ctx, opts, &mut memo, 0, n).map(|p| p.time_us);
+        return build_stage_plan(g, ctx, opts, &mut memo, 0, n, 0, 1).map(|st| st.plan.time_us);
     }
     let m = opts.microbatches.max(1);
     let r = k - 1; // number of cut points, values in 1..n strictly increasing
@@ -531,7 +605,7 @@ pub fn brute_force_splits(
         bounds.push(n);
         let mut lats = Vec::with_capacity(k);
         for s in 0..k {
-            match stage_latency(g, ctx, opts, &mut memo, bounds[s], bounds[s + 1], s) {
+            match stage_latency(g, ctx, opts, &mut memo, bounds[s], bounds[s + 1], s, k) {
                 Some(l) => lats.push(l),
                 None => break,
             }
@@ -572,15 +646,23 @@ pub fn naive_equal_split(
 ) -> Option<PipelinePlan> {
     let total = opts.mesh.total();
     let mut best: Option<PipelinePlan> = None;
+    let mut structurally_possible = false;
     for k in candidate_stage_counts(opts.spec, opts.mesh) {
         let Some(ctx) = ctxs.get(total / k) else { continue };
+        if k <= ctx.segments.instances.len() {
+            structurally_possible = true;
+        }
         if let Some(p) = naive_fixed_stages(g, ctx, opts, k) {
             if best.as_ref().map_or(true, |b| p.step_time_us < b.step_time_us) {
                 best = Some(p);
             }
         }
     }
-    if best.is_none() {
+    if best.is_none() && !(opts.memory_aware() && structurally_possible) {
+        // same degradation rule as [`plan_pipeline`]: structural
+        // infeasibility degrades to k = 1 (cap-checked when memory-aware);
+        // memory infeasibility stays None — the baseline answers "does
+        // not fit" exactly when the CFP planner does
         if let Some(ctx) = ctxs.get(total) {
             best = naive_fixed_stages(g, ctx, opts, 1);
         }
@@ -588,7 +670,12 @@ pub fn naive_equal_split(
     best
 }
 
-/// The naive baseline at one fixed stage count.
+/// The naive baseline at one fixed stage count. It gets the *same* 1F1B
+/// activation accounting as the CFP planner, so memory-capped comparisons
+/// stay fair: when its DDP stage overflows the cap the naive recipe
+/// checkpoints all-or-nothing (the "gradient checkpointing on" switch of
+/// real training stacks), and the stage count is infeasible if that still
+/// spills.
 pub fn naive_fixed_stages(
     g: &Graph,
     ctx: &StageContext,
@@ -601,19 +688,40 @@ pub fn naive_fixed_stages(
     }
     let m = opts.microbatches.max(1);
     let mf = m as f64;
+    let me = m_eff(opts, k);
+    let (ss, db) = (&ctx.segments, &ctx.db);
     let choice = ddp_choice(ctx);
     let bounds: Vec<usize> = (0..=k).map(|s| s * n / k).collect();
     let mut stages = Vec::with_capacity(k);
     let mut lats = Vec::with_capacity(k);
     let mut mem_peak = 0u64;
+    let mut peak_1f1b = 0u64;
     for s in 0..k {
         let (lo, hi) = (bounds[s], bounds[s + 1]);
-        let (time_us, mem_bytes) =
-            cost::plan_cost_span(&ctx.segments, &ctx.db, &choice[lo..hi], lo, hi);
+        let (base_us, mem_bytes) = cost::plan_cost_span(ss, db, &choice[lo..hi], lo, hi);
+        let f = memory::inflight_microbatches(k, s, me);
+        let mut footprint = memory::span_footprint(ss, db, &choice[lo..hi], lo, hi);
+        let mut remat = vec![false; hi - lo];
+        if opts.memory_aware() && footprint.peak_bytes(me, f) > opts.device_cap() {
+            if !opts.recompute.is_auto() {
+                return None;
+            }
+            let ck = memory::span_footprint_checkpointed(ss, db, &choice[lo..hi], lo, hi);
+            if ck.0.peak_bytes(me, f) > opts.device_cap() {
+                return None;
+            }
+            footprint = ck.0;
+            remat = ck.1;
+        }
+        let time_us = base_us + footprint.recompute_us;
         let p2p_in_us = if s == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, s) };
         let latency_us = time_us / mf + p2p_in_us;
         if mem_bytes > mem_peak {
             mem_peak = mem_bytes;
+        }
+        let peak = footprint.peak_bytes(me, f);
+        if peak > peak_1f1b {
+            peak_1f1b = peak;
         }
         lats.push(latency_us);
         stages.push(StagePlan {
@@ -622,6 +730,9 @@ pub fn naive_fixed_stages(
             plan: Plan { choice: choice[lo..hi].to_vec(), time_us, mem_bytes },
             p2p_in_us,
             latency_us,
+            footprint,
+            peak_mem_bytes: peak,
+            remat,
         });
     }
     let (step_time_us, bubble_fraction) = if k == 1 {
@@ -635,6 +746,7 @@ pub fn naive_fixed_stages(
         microbatches: m,
         step_time_us,
         mem_bytes: mem_peak,
+        peak_mem_bytes: peak_1f1b,
         bubble_fraction,
     })
 }
@@ -658,36 +770,113 @@ fn compose_step_us(lats: &[f64], microbatches: usize) -> f64 {
 
 /// Memoized intra-op solution for span `[lo, hi)` under the per-device
 /// memory cap, with the same unconstrained fallback as `run_cfp` (so the
-/// `k = 1` span reproduces the single-stage plan exactly).
+/// `k = 1` span reproduces the single-stage plan exactly). PR 2 path —
+/// used only when the planner is not memory-aware.
 fn solve_span(
     ctx: &StageContext,
     opts: &PipelineOptions,
-    memo: &mut HashMap<(usize, usize), Option<Plan>>,
+    memo: &mut SpanMemo,
     lo: usize,
     hi: usize,
 ) -> Option<Plan> {
-    if let Some(p) = memo.get(&(lo, hi)) {
+    if let Some(p) = memo.plans.get(&(lo, hi)) {
         return p.clone();
     }
     let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
     let plan = cost::search_span(&ctx.segments, &ctx.db, cap, lo, hi)
         .or_else(|| cost::search_span(&ctx.segments, &ctx.db, None, lo, hi));
-    memo.insert((lo, hi), plan.clone());
+    memo.plans.insert((lo, hi), plan.clone());
     plan
 }
 
+/// Memoized (time × 1F1B-memory) frontier for span `[lo, hi)` — the
+/// memory-aware counterpart of [`solve_span`].
+fn span_frontier<'a>(
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    memo: &'a mut SpanMemo,
+    lo: usize,
+    hi: usize,
+) -> &'a [SpanMemPlan] {
+    memo.frontiers
+        .entry((lo, hi))
+        .or_insert_with(|| cost::search_span_mem(&ctx.segments, &ctx.db, lo, hi, opts.recompute))
+}
+
+/// Solve span `[lo, hi)` as stage `stage_idx` of a `k`-stage pipeline.
+///
+/// * Legacy mode (no cap, recompute off): the PR 2 plan, with the 1F1B
+///   accounting computed for *reporting* only — plans stay bit-identical.
+/// * Memory-aware mode: the min-time frontier point whose 1F1B peak
+///   (`static + f·retained/m + transient/m`, `f = min(m, k − i)`) fits
+///   the device cap; checkpointed variants recover stages the
+///   keep-everything plan would spill. None = this split is rejected.
+fn build_stage_plan(
+    g: &Graph,
+    ctx: &StageContext,
+    opts: &PipelineOptions,
+    memo: &mut SpanMemo,
+    lo: usize,
+    hi: usize,
+    stage_idx: usize,
+    k: usize,
+) -> Option<StagePlan> {
+    let mf = opts.microbatches.max(1) as f64;
+    let me = m_eff(opts, k);
+    let f = memory::inflight_microbatches(k, stage_idx, me);
+    let p2p_in_us = if stage_idx == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, stage_idx) };
+    let (plan, footprint, remat) = if opts.memory_aware() {
+        let sel = {
+            let frontier = span_frontier(ctx, opts, memo, lo, hi);
+            memory::select_feasible(frontier, me, f, opts.device_cap())?.clone()
+        };
+        let fp = sel.footprint;
+        let (_, mem_bytes) = cost::plan_cost_span(&ctx.segments, &ctx.db, &sel.choice, lo, hi);
+        (Plan { choice: sel.choice, time_us: sel.time_us, mem_bytes }, fp, sel.remat)
+    } else {
+        let plan = solve_span(ctx, opts, memo, lo, hi)?;
+        let fp = memory::span_footprint(&ctx.segments, &ctx.db, &plan.choice, lo, hi);
+        (plan, fp, vec![false; hi - lo])
+    };
+    let peak_mem_bytes = footprint.peak_bytes(me, f);
+    let latency_us = plan.time_us / mf + p2p_in_us;
+    Some(StagePlan {
+        span: (lo, hi),
+        devices: (stage_idx * ctx.devices, (stage_idx + 1) * ctx.devices),
+        plan,
+        p2p_in_us,
+        latency_us,
+        footprint,
+        peak_mem_bytes,
+        remat,
+    })
+}
+
 /// Per-microbatch stage latency `T/m + x` for span `[lo, hi)` as stage
-/// `stage_idx` (0-based); None if the span has no feasible intra-op plan.
+/// `stage_idx` (0-based) of `k`; None if the span has no feasible plan
+/// (under the 1F1B peak cap when memory-aware). This is the DP's hot
+/// transition, so it reads only the memoized span solution's time — the
+/// selection and arithmetic are shared with [`build_stage_plan`], which
+/// materializes the identical stage during final reconstruction.
 fn stage_latency(
     g: &Graph,
     ctx: &StageContext,
     opts: &PipelineOptions,
-    memo: &mut HashMap<(usize, usize), Option<Plan>>,
+    memo: &mut SpanMemo,
     lo: usize,
     hi: usize,
     stage_idx: usize,
+    k: usize,
 ) -> Option<f64> {
-    let time_us = solve_span(ctx, opts, memo, lo, hi)?.time_us;
+    let time_us = if opts.memory_aware() {
+        let me = m_eff(opts, k);
+        let f = memory::inflight_microbatches(k, stage_idx, me);
+        let cap = opts.device_cap();
+        let frontier = span_frontier(ctx, opts, memo, lo, hi);
+        memory::select_feasible(frontier, me, f, cap)?.time_us
+    } else {
+        solve_span(ctx, opts, memo, lo, hi)?.time_us
+    };
     let mf = opts.microbatches.max(1) as f64;
     let p2p = if stage_idx == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, stage_idx) };
     Some(time_us / mf + p2p)

@@ -16,6 +16,8 @@
 //!                     ├─ cluster::simulate  communication kernels on a platform
 //!                     └─ runtime (PJRT)     measured compute kernel costs
 //!                └─ cost::search   Eq-8/9 composition + memory-capped plan DP
+//!                     ├─ memory     1F1B activation accounting + checkpointing
+//!                     │             frontier (peak memory as a searched axis)
 //!                     └─ interop::plan_pipeline  inter-op stage DP over
 //!                        per-(stage-span, sub-mesh) intra-op plans (1F1B)
 //! ```
@@ -36,6 +38,7 @@ pub mod cost;
 pub mod graph;
 pub mod harness;
 pub mod interop;
+pub mod memory;
 pub mod models;
 pub mod pblock;
 pub mod profiler;

@@ -11,7 +11,8 @@
 use cfp::cluster::Platform;
 use cfp::coordinator::{compare_frameworks, run_cfp, run_cfp_two_level, CfpOptions};
 use cfp::harness::{fmt_bytes, fmt_us, Table};
-use cfp::interop::StageSpec;
+use cfp::interop::{candidate_stage_counts, StageSpec};
+use cfp::memory::RecomputeSpec;
 use cfp::models::ModelCfg;
 use cfp::runtime::Runtime;
 use cfp::trainer::Trainer;
@@ -33,7 +34,8 @@ fn main() {
                  [--model gpt-2.6b] [--layers N] [--batch N] \
                  [--platform a100-pcie|a100-pcie-8|a100-2node|v100-nvlink] \
                  [--threads N] [--cache FILE] [--cache-max-entries N] \
-                 [--stages auto|K] [--microbatches M] [--steps N] [--lr F]"
+                 [--stages auto|K] [--microbatches M] [--mem-cap GB] \
+                 [--recompute auto|off] [--steps N] [--lr F]"
             );
             1
         }
@@ -74,6 +76,55 @@ fn parse_common(args: &Args, opts: &mut CfpOptions) {
             None => eprintln!("unknown --stages value {s:?} (want auto|single|K), ignoring"),
         }
     }
+    // --mem-cap is given in GB (fractions allowed: --mem-cap 12.5)
+    if let Some(mc) = args.get("mem-cap") {
+        match mc.parse::<f64>() {
+            Ok(gb) if gb > 0.0 => opts.mem_cap = Some((gb * (1u64 << 30) as f64) as u64),
+            _ => eprintln!("invalid --mem-cap value {mc:?} (want GB, e.g. 12.5), ignoring"),
+        }
+    }
+    if let Some(r) = args.get("recompute") {
+        match RecomputeSpec::parse(r) {
+            Some(spec) => opts.recompute = spec,
+            None => eprintln!("unknown --recompute value {r:?} (want auto|off), ignoring"),
+        }
+    }
+}
+
+/// Strict validation of the `pipeline` subcommand's flags: a stage count
+/// that cannot tile the cluster, or zero microbatches, is a user error —
+/// exit with a message instead of silently normalizing.
+fn validate_pipeline_args(args: &Args, opts: &CfpOptions) -> Result<(), String> {
+    if let Some(mb) = args.get("microbatches") {
+        match mb.parse::<usize>() {
+            Ok(0) => {
+                return Err(
+                    "--microbatches must be ≥ 1 (0 microbatches cannot fill a pipeline)".into()
+                )
+            }
+            Ok(_) => {}
+            Err(_) => return Err(format!("--microbatches {mb:?} is not a number")),
+        }
+    }
+    if let Some(s) = args.get("stages") {
+        if let Ok(k) = s.parse::<usize>() {
+            let valid = candidate_stage_counts(StageSpec::Auto, opts.mesh);
+            if k == 0 || (k > 1 && !valid.contains(&k)) {
+                return Err(format!(
+                    "--stages {k} does not tile the {}-device cluster \
+                     (valid stage counts: {valid:?})",
+                    opts.mesh.total()
+                ));
+            }
+        }
+    }
+    if let Some(mc) = args.get("mem-cap") {
+        match mc.parse::<f64>() {
+            Ok(gb) if gb > 0.0 => {}
+            _ => return Err(format!("--mem-cap {mc:?} is not a positive GB value")),
+        }
+    }
+    Ok(())
 }
 
 fn cmd_search(args: &Args) -> i32 {
@@ -136,47 +187,71 @@ fn cmd_pipeline(args: &Args) -> i32 {
     let platform = parse_platform(args);
     let mut opts = CfpOptions::new(model, platform);
     opts.stages = StageSpec::Auto;
+    // the pipeline planner defaults to memory-aware planning against the
+    // device capacity; `--recompute off` restores the PR 2 behaviour
+    opts.recompute = RecomputeSpec::Auto;
     parse_common(args, &mut opts);
+    if let Err(msg) = validate_pipeline_args(args, &opts) {
+        eprintln!("cfp pipeline: {msg}");
+        return 2;
+    }
     let r = run_cfp_two_level(&opts);
     println!(
-        "model {}  platform {}  gpus {}  microbatches {}",
+        "model {}  platform {}  gpus {}  microbatches {}  cap {}  recompute {}",
         opts.model.name,
         platform.name,
         opts.mesh.total(),
-        opts.microbatches
+        opts.microbatches,
+        fmt_bytes(opts.mem_cap.unwrap_or_else(|| platform.mem_capacity())),
+        if opts.recompute.is_auto() { "auto" } else { "off" },
     );
-    let mut t = Table::new(&["planner", "stages", "step time", "memory/dev", "vs two-level"]);
-    for (name, step, stages, mem) in [
-        ("CFP single-stage", r.single.plan.time_us, 1, r.single.plan.mem_bytes),
-        (
-            "CFP two-level",
-            r.pipeline.step_time_us,
-            r.pipeline.num_stages(),
-            r.pipeline.mem_bytes,
-        ),
-        (
-            "naive equal-split",
-            r.naive.step_time_us,
-            r.naive.num_stages(),
-            r.naive.mem_bytes,
-        ),
-    ] {
-        t.row(vec![
-            name.into(),
-            stages.to_string(),
-            fmt_us(step),
-            fmt_bytes(mem),
-            format!("{:.2}x", step / r.pipeline.step_time_us),
-        ]);
+    let Some(pipeline) = r.pipeline.as_ref() else {
+        eprintln!(
+            "cfp pipeline: no stage split fits the per-device memory cap \
+             (even with recomputation) — raise --mem-cap or add devices"
+        );
+        return 1;
+    };
+    let mut t = Table::new(&["planner", "stages", "step time", "peak mem/dev", "vs two-level"]);
+    t.row(vec![
+        "CFP single-stage".into(),
+        "1".into(),
+        fmt_us(r.single.plan.time_us),
+        fmt_bytes(r.single.plan.mem_bytes),
+        format!("{:.2}x", r.single.plan.time_us / pipeline.step_time_us),
+    ]);
+    t.row(vec![
+        "CFP two-level".into(),
+        pipeline.num_stages().to_string(),
+        fmt_us(pipeline.step_time_us),
+        fmt_bytes(pipeline.peak_mem_bytes),
+        "1.00x".into(),
+    ]);
+    match r.naive.as_ref() {
+        Some(naive) => t.row(vec![
+            "naive equal-split".into(),
+            naive.num_stages().to_string(),
+            fmt_us(naive.step_time_us),
+            fmt_bytes(naive.peak_mem_bytes),
+            format!("{:.2}x", naive.step_time_us / pipeline.step_time_us),
+        ]),
+        None => t.row(vec![
+            "naive equal-split".into(),
+            "-".into(),
+            "over cap".into(),
+            "-".into(),
+            "-".into(),
+        ]),
     }
     t.print();
     println!(
-        "two-level plan: {} stage(s) × {} device(s), bubble {:.1}%",
-        r.pipeline.num_stages(),
-        r.pipeline.devices_per_stage,
-        r.pipeline.bubble_fraction * 100.0
+        "two-level plan: {} stage(s) × {} device(s), bubble {:.1}%, 1F1B peak {}",
+        pipeline.num_stages(),
+        pipeline.devices_per_stage,
+        pipeline.bubble_fraction * 100.0,
+        fmt_bytes(pipeline.peak_mem_bytes),
     );
-    for line in r.pipeline.describe() {
+    for line in pipeline.describe() {
         println!("  {line}");
     }
     0
@@ -186,9 +261,7 @@ fn cmd_compare(args: &Args) -> i32 {
     let model = parse_model(args);
     let platform = parse_platform(args);
     let mut opts = CfpOptions::new(model, platform);
-    opts.threads = args.get_usize("threads", 1);
-    opts.cache_path = args.get_path("cache");
-    opts.cache_max_entries = args.get_usize_opt("cache-max-entries");
+    parse_common(args, &mut opts);
     let c = compare_frameworks(&opts);
     let mut t = Table::new(&["framework", "step time", "memory/dev", "vs CFP"]);
     for (name, p) in [
@@ -271,7 +344,7 @@ fn cmd_space(args: &Args) -> i32 {
     let model = parse_model(args);
     let platform = parse_platform(args);
     let mut opts = CfpOptions::new(model, platform);
-    opts.cache_path = args.get_path("cache");
+    parse_common(args, &mut opts);
     let r = run_cfp(&opts);
     let mut t = Table::new(&["segment", "fingerprint", "blocks", "configs", "instances"]);
     for u in &r.segments.unique {

@@ -1,0 +1,418 @@
+//! Memory subsystem: activation-memory accounting and the
+//! rematerialization (activation-checkpointing) trade-off for the
+//! two-level planner.
+//!
+//! CFP's intra-op DP (§4.4) caps plans by the *whole-batch* per-device
+//! memory of one in-flight batch. A pipeline stage under 1F1B holds more:
+//! stage `i` of `k` keeps the forward activations of up to `k − i`
+//! in-flight microbatches alive until their backwards drain back through
+//! it. This module makes that footprint a first-class, *searched*
+//! quantity:
+//!
+//! * [`stage_peak_bytes`] — the closed-form per-device peak of a stage:
+//!   `static + f · (retained/m) + transient/m`, where `static` is weights
+//!   + gradient buckets + optimizer state (profile memory minus
+//!   activations), `retained` the whole-batch activation bytes the stage
+//!   must hold to backward, `transient` the recompute scratch of the one
+//!   microbatch currently in backward, and `f =`
+//!   [`inflight_microbatches`]` = min(m, k − i)` the 1F1B window.
+//!   [`crate::cluster::simulate_pipeline_memory`] event-simulates the
+//!   same schedule and the integration tests pin the two to each other
+//!   *exactly*.
+//! * [`remat_points`] — the per-(segment, config) rematerialization
+//!   frontier: keep all activations (no extra time), or checkpoint the
+//!   segment boundary and recompute the forward during backward
+//!   (`retained` collapses to the boundary stash — the `ckpt_bytes`
+//!   profile column — `transient` becomes the full activation set, and
+//!   time grows by the profiled forward pass `t_fwd_us`).
+//! * [`SpanMemPlan`] / [`select_feasible`] — one point of the span
+//!   frontier produced by [`crate::cost::search_span_mem`] (per-instance
+//!   config *and* remat choices), and the deterministic min-time
+//!   selection under a peak-memory cap.
+//!
+//! # Invariants
+//!
+//! * **Accounting consistency.** A [`SpanFootprint`] derived from a
+//!   choice vector ([`span_footprint`]) and one carried by a
+//!   [`SpanMemPlan`] from the DP agree by construction: both sum
+//!   [`seg_static_bytes`] and the chosen remat point's retained bytes and
+//!   max the transient bytes. The closed-form peak is a pure function of
+//!   the footprint, so every consumer (stage planner, naive baseline,
+//!   event sim cross-check, CLI report) prices the same plan the same
+//!   way.
+//! * **Off means off.** With [`RecomputeSpec::Off`] the remat frontier is
+//!   the single keep-everything point, so checkpointing can never leak
+//!   into a plan; the accounting is then report-only unless a cap is set.
+
+use crate::profiler::{ProfileDb, SegmentProfile};
+use crate::segment::SegmentSet;
+
+/// Whether the planner may trade recomputation for activation memory.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum RecomputeSpec {
+    /// Never checkpoint: plans keep every forward activation (the PR 2
+    /// behaviour; with no `--mem-cap` this is bit-identical to PR 2).
+    #[default]
+    Off,
+    /// Per-segment choice: the span DP searches keep-vs-checkpoint per
+    /// instance and a memory-capped stage falls back to checkpointed
+    /// variants instead of becoming infeasible.
+    Auto,
+}
+
+impl RecomputeSpec {
+    /// Parse a `--recompute` CLI value: `auto` or `off`.
+    pub fn parse(s: &str) -> Option<RecomputeSpec> {
+        match s {
+            "auto" => Some(RecomputeSpec::Auto),
+            "off" => Some(RecomputeSpec::Off),
+            _ => None,
+        }
+    }
+
+    pub fn is_auto(&self) -> bool {
+        *self == RecomputeSpec::Auto
+    }
+}
+
+/// One point of a segment's rematerialization trade-off.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct RematPoint {
+    /// activation bytes retained until the microbatch's backward
+    pub retained_bytes: u64,
+    /// recompute scratch live only while the backward runs
+    pub transient_bytes: u64,
+    /// extra whole-batch time (the recomputed forward pass), µs
+    pub extra_us: f64,
+    /// true for the checkpoint-and-recompute point
+    pub checkpoint: bool,
+}
+
+/// Static (non-activation) bytes of one segment config: weights +
+/// gradient buckets + optimizer state — the profile's peak memory with
+/// the retained activations subtracted back out.
+pub fn seg_static_bytes(p: &SegmentProfile, cfg: usize) -> u64 {
+    p.mem_bytes[cfg].saturating_sub(p.act_bytes[cfg])
+}
+
+/// The rematerialization frontier of one (segment, config): the
+/// keep-everything point, plus — under [`RecomputeSpec::Auto`], and only
+/// when it actually saves memory — the checkpoint-boundary point.
+pub fn remat_points(p: &SegmentProfile, cfg: usize, spec: RecomputeSpec) -> Vec<RematPoint> {
+    let act = p.act_bytes[cfg];
+    let mut out = vec![RematPoint {
+        retained_bytes: act,
+        transient_bytes: 0,
+        extra_us: 0.0,
+        checkpoint: false,
+    }];
+    if spec.is_auto() {
+        let ckpt = p.ckpt_bytes[cfg];
+        if ckpt < act {
+            out.push(RematPoint {
+                retained_bytes: ckpt,
+                transient_bytes: act,
+                extra_us: p.t_fwd_us[cfg],
+                checkpoint: true,
+            });
+        }
+    }
+    out
+}
+
+/// The microbatch count the memory accounting of a `stages`-deep plan
+/// divides by: a single stage bypasses the microbatch division entirely
+/// (the PR 2 whole-batch convention), deeper pipelines split the batch
+/// into `m` microbatches. Single source of the convention — the planner
+/// (`interop`), the composed-plan reporting, and the sim cross-check all
+/// call this.
+pub fn memory_microbatches(stages: usize, m: usize) -> usize {
+    if stages <= 1 {
+        1
+    } else {
+        m.max(1)
+    }
+}
+
+/// 1F1B in-flight window of stage `stage_idx` (0-based) in a `stages`-deep
+/// pipeline running `m_eff` microbatches: stage `i` holds at most
+/// `min(m, k − i)` microbatches' activations before their backwards drain.
+pub fn inflight_microbatches(stages: usize, stage_idx: usize, m_eff: usize) -> usize {
+    stages.saturating_sub(stage_idx).min(m_eff.max(1)).max(1)
+}
+
+/// Closed-form per-device peak memory of a pipeline stage under 1F1B.
+/// `retained_bytes`/`transient_bytes` are whole-batch quantities; the
+/// per-microbatch share is the floor division by `m_eff` — the event
+/// simulation uses the *same* per-microbatch values, so the two match
+/// exactly.
+pub fn stage_peak_bytes(
+    static_bytes: u64,
+    retained_bytes: u64,
+    transient_bytes: u64,
+    m_eff: usize,
+    inflight: usize,
+) -> u64 {
+    let m = m_eff.max(1) as u64;
+    static_bytes + inflight.max(1) as u64 * (retained_bytes / m) + transient_bytes / m
+}
+
+/// The memory footprint of a contiguous span of segment instances
+/// (whole-batch quantities; see [`stage_peak_bytes`] for the 1F1B peak).
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct SpanFootprint {
+    /// weights + gradient buckets + optimizer state
+    pub static_bytes: u64,
+    /// activations retained until backward (whole batch)
+    pub retained_bytes: u64,
+    /// recompute scratch of the microbatch in backward (whole batch)
+    pub transient_bytes: u64,
+    /// whole-batch recompute time added by checkpointing, µs
+    pub recompute_us: f64,
+}
+
+impl SpanFootprint {
+    pub fn peak_bytes(&self, m_eff: usize, inflight: usize) -> u64 {
+        stage_peak_bytes(
+            self.static_bytes,
+            self.retained_bytes,
+            self.transient_bytes,
+            m_eff,
+            inflight,
+        )
+    }
+}
+
+/// Footprint of an explicit choice vector over span `[lo, hi)` with no
+/// rematerialization (every activation kept) — the accounting the PR 2
+/// planner and the naive baseline report.
+pub fn span_footprint(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    choice: &[usize],
+    lo: usize,
+    hi: usize,
+) -> SpanFootprint {
+    assert_eq!(choice.len(), hi - lo);
+    let mut fp = SpanFootprint::default();
+    for (i, n) in (lo..hi).enumerate() {
+        let p = &db.segments[ss.instances[n].unique_id];
+        fp.static_bytes += seg_static_bytes(p, choice[i]);
+        fp.retained_bytes += p.act_bytes[choice[i]];
+    }
+    fp
+}
+
+/// Footprint of the all-or-nothing checkpointing fallback: every segment
+/// whose boundary stash is smaller than its activations is checkpointed.
+/// Returns the footprint and the per-instance checkpoint flags — the
+/// naive pipeline's recovery path when its DDP stage overflows the cap.
+pub fn span_footprint_checkpointed(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    choice: &[usize],
+    lo: usize,
+    hi: usize,
+) -> (SpanFootprint, Vec<bool>) {
+    assert_eq!(choice.len(), hi - lo);
+    let mut fp = SpanFootprint::default();
+    let mut remat = vec![false; hi - lo];
+    for (i, n) in (lo..hi).enumerate() {
+        let p = &db.segments[ss.instances[n].unique_id];
+        let c = choice[i];
+        fp.static_bytes += seg_static_bytes(p, c);
+        let act = p.act_bytes[c];
+        let ckpt = p.ckpt_bytes[c];
+        if ckpt < act {
+            remat[i] = true;
+            fp.retained_bytes += ckpt;
+            fp.transient_bytes = fp.transient_bytes.max(act);
+            fp.recompute_us += p.t_fwd_us[c];
+        } else {
+            fp.retained_bytes += act;
+        }
+    }
+    (fp, remat)
+}
+
+/// One point of a span's (time × 1F1B-memory) frontier: per-instance
+/// config *and* rematerialization choices, the resulting whole-batch time
+/// (recompute included) and memory footprint. Produced by
+/// [`crate::cost::search_span_mem`].
+#[derive(Clone, Debug)]
+pub struct SpanMemPlan {
+    /// config index per instance (`choice[i]` is instance `lo + i`)
+    pub choice: Vec<usize>,
+    /// checkpoint-and-recompute flag per instance
+    pub remat: Vec<bool>,
+    /// whole-batch span time including recompute, µs
+    pub time_us: f64,
+    /// whole-batch memory footprint (its `recompute_us` is the recompute
+    /// share already included in `time_us`)
+    pub footprint: SpanFootprint,
+}
+
+impl SpanMemPlan {
+    pub fn peak_bytes(&self, m_eff: usize, inflight: usize) -> u64 {
+        self.footprint.peak_bytes(m_eff, inflight)
+    }
+}
+
+/// Deterministic min-time selection from a span frontier under a
+/// per-device peak-memory cap (first of time-equal candidates wins).
+pub fn select_feasible(
+    frontier: &[SpanMemPlan],
+    m_eff: usize,
+    inflight: usize,
+    cap: u64,
+) -> Option<&SpanMemPlan> {
+    frontier
+        .iter()
+        .filter(|p| p.peak_bytes(m_eff, inflight) <= cap)
+        .min_by(|a, b| a.time_us.partial_cmp(&b.time_us).unwrap())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::SegmentConfig;
+    use crate::spmd::ShardState;
+
+    fn profile() -> SegmentProfile {
+        // cfg 0: fast but activation-fat; cfg 1: slower, leaner
+        SegmentProfile {
+            configs: vec![SegmentConfig { strategy: vec![0] }, SegmentConfig { strategy: vec![1] }],
+            t_c_us: vec![10.0, 30.0],
+            t_p_us: vec![100.0, 100.0],
+            mem_bytes: vec![1000, 700],
+            act_bytes: vec![600, 300],
+            ckpt_bytes: vec![50, 50],
+            t_fwd_us: vec![40.0, 45.0],
+            symbolic_volume: vec![0, 0],
+            boundary_out: vec![ShardState::Replicated; 2],
+            boundary_in: vec![ShardState::Replicated; 2],
+        }
+    }
+
+    #[test]
+    fn static_bytes_subtract_activations() {
+        let p = profile();
+        assert_eq!(seg_static_bytes(&p, 0), 400);
+        assert_eq!(seg_static_bytes(&p, 1), 400);
+    }
+
+    #[test]
+    fn remat_frontier_off_is_keep_only() {
+        let p = profile();
+        let pts = remat_points(&p, 0, RecomputeSpec::Off);
+        assert_eq!(pts.len(), 1);
+        assert!(!pts[0].checkpoint);
+        assert_eq!(pts[0].retained_bytes, 600);
+        assert_eq!(pts[0].transient_bytes, 0);
+        assert_eq!(pts[0].extra_us, 0.0);
+    }
+
+    #[test]
+    fn remat_frontier_auto_adds_checkpoint_point_only_when_it_saves() {
+        let p = profile();
+        let pts = remat_points(&p, 0, RecomputeSpec::Auto);
+        assert_eq!(pts.len(), 2);
+        assert!(pts[1].checkpoint);
+        assert_eq!(pts[1].retained_bytes, 50);
+        assert_eq!(pts[1].transient_bytes, 600);
+        assert!(pts[1].extra_us > 0.0);
+
+        // a boundary stash as large as the activations buys nothing
+        let mut fat = profile();
+        fat.ckpt_bytes = vec![600, 300];
+        assert_eq!(remat_points(&fat, 0, RecomputeSpec::Auto).len(), 1);
+    }
+
+    #[test]
+    fn single_stage_bypasses_the_microbatch_division() {
+        assert_eq!(memory_microbatches(1, 8), 1, "PR 2 whole-batch convention");
+        assert_eq!(memory_microbatches(4, 8), 8);
+        assert_eq!(memory_microbatches(4, 0), 1, "m clamps to ≥ 1");
+        assert_eq!(memory_microbatches(0, 8), 1);
+    }
+
+    #[test]
+    fn inflight_window_is_min_of_depth_and_microbatches() {
+        assert_eq!(inflight_microbatches(4, 0, 8), 4);
+        assert_eq!(inflight_microbatches(4, 1, 8), 3);
+        assert_eq!(inflight_microbatches(4, 3, 8), 1);
+        assert_eq!(inflight_microbatches(4, 0, 2), 2, "m caps the window");
+        assert_eq!(inflight_microbatches(1, 0, 8), 1);
+    }
+
+    #[test]
+    fn closed_form_peak_arithmetic() {
+        // static 400, retained 600, transient 0, m = 8: per-mb = 75
+        assert_eq!(stage_peak_bytes(400, 600, 0, 8, 4), 400 + 4 * 75);
+        // transient joins once, not per in-flight microbatch
+        assert_eq!(stage_peak_bytes(400, 600, 80, 8, 4), 400 + 4 * 75 + 10);
+        // single-stage whole-batch accounting (m_eff = 1)
+        assert_eq!(stage_peak_bytes(400, 600, 0, 1, 1), 1000);
+    }
+
+    #[test]
+    fn select_feasible_prefers_time_within_the_cap() {
+        let fast_fat = SpanMemPlan {
+            choice: vec![0],
+            remat: vec![false],
+            time_us: 100.0,
+            footprint: SpanFootprint {
+                static_bytes: 400,
+                retained_bytes: 600,
+                transient_bytes: 0,
+                recompute_us: 0.0,
+            },
+        };
+        let slow_lean = SpanMemPlan {
+            choice: vec![0],
+            remat: vec![true],
+            time_us: 140.0,
+            footprint: SpanFootprint {
+                static_bytes: 400,
+                retained_bytes: 50,
+                transient_bytes: 600,
+                recompute_us: 40.0,
+            },
+        };
+        let frontier = [fast_fat, slow_lean];
+        // at pipeline depth (m = 8, 4 in flight): keep-everything peaks at
+        // 400 + 4·75 = 700, the checkpointed point at 400 + 4·6 + 75 = 499
+        let loose = select_feasible(&frontier, 8, 4, 1_000).unwrap();
+        assert_eq!(loose.time_us, 100.0, "loose cap: the fast point wins");
+        let tight = select_feasible(&frontier, 8, 4, 500).unwrap();
+        assert!(tight.remat[0], "tight cap: only the checkpointed point fits");
+        // impossible cap: nothing fits
+        assert!(select_feasible(&frontier, 8, 4, 100).is_none());
+        // whole-batch accounting (m = 1): checkpointing cannot help — the
+        // transient recompute set is as large as what it saved
+        assert!(select_feasible(&frontier, 1, 1, 1_000).unwrap().time_us == 100.0);
+        assert!(select_feasible(&frontier, 1, 1, 999).is_none());
+    }
+
+    #[test]
+    fn footprints_accumulate_and_checkpoint_fallback_maxes_transient() {
+        use crate::segment::{SegmentInstance, UniqueSegment};
+        let inst = |_| SegmentInstance { unique_id: 0, blocks: vec![], fwd_range: (0, 0) };
+        let uniq = UniqueSegment { id: 0, fingerprint: "fp".into(), rep: 0, count: 3 };
+        let ss = SegmentSet { instances: (0..3).map(inst).collect(), unique: vec![uniq] };
+        let mut db = ProfileDb::default();
+        db.segments.push(profile());
+
+        let fp = span_footprint(&ss, &db, &[0, 1, 0], 0, 3);
+        assert_eq!(fp.static_bytes, 1200);
+        assert_eq!(fp.retained_bytes, 600 + 300 + 600);
+        assert_eq!(fp.transient_bytes, 0);
+
+        let (cfp, remat) = span_footprint_checkpointed(&ss, &db, &[0, 1, 0], 0, 3);
+        assert_eq!(remat, vec![true, true, true]);
+        assert_eq!(cfp.retained_bytes, 150, "boundary stashes only");
+        assert_eq!(cfp.transient_bytes, 600, "max over segments, not the sum");
+        assert!(cfp.recompute_us > 0.0);
+        assert!(cfp.peak_bytes(1, 1) < fp.peak_bytes(1, 1));
+    }
+}

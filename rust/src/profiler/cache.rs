@@ -15,10 +15,14 @@
 //! [`crate::util::json`] — no external serialization deps.
 //!
 //! ```text
-//! { "version": 1,
+//! { "version": 2,
 //!   "segments": [ {"fingerprint", "platform", "parts", "profile"} ... ],
 //!   "reshard":  [ {"from_fp", "to_fp", "platform", "parts", "table"} ... ] }
 //! ```
+//!
+//! Version 2 (PR 3) adds the `act_bytes`/`ckpt_bytes`/`t_fwd_us` memory
+//! columns to segment profiles; version-1 files are discarded wholesale
+//! and rebuilt (never migrated in place).
 //!
 //! Unknown versions and unparseable files are ignored wholesale (the cache
 //! is rebuilt and rewritten) — a cache must never turn a valid run into an
@@ -55,7 +59,7 @@ use super::db::{ReshardTable, SegmentProfile};
 
 /// Bump whenever the on-disk schema or any profiled quantity's meaning
 /// changes; old files are then ignored (never migrated).
-pub const CACHE_VERSION: i64 = 1;
+pub const CACHE_VERSION: i64 = 2;
 
 /// Validity domain of one unique segment's profile.
 #[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
@@ -83,6 +87,10 @@ pub struct ProfileCache {
     dirty: bool,
     /// monotonically increasing recency counter (persisted)
     clock: u64,
+    /// the clock value when this handle was opened — stamps above it were
+    /// drawn by *this* process (runtime-only, not persisted); used to
+    /// rebase only our own draws across process clock domains at save
+    open_clock: u64,
     /// optional LRU bound on segments + reshard entries combined
     max_entries: Option<usize>,
 }
@@ -104,6 +112,7 @@ impl ProfileCache {
             .and_then(|json| ProfileCache::from_json(&json))
             .unwrap_or_default();
         cache.path = Some(path);
+        cache.open_clock = cache.clock;
         cache
     }
 
@@ -254,14 +263,34 @@ impl ProfileCache {
             .and_then(|text| Json::parse(&text).ok())
             .and_then(|json| ProfileCache::from_json(&json))
         {
+            // recency stamps are per-process clock draws: a fresh process
+            // merging into a long-lived file would otherwise see its own
+            // just-used entries stamped "older" than everything on disk
+            // and evict them first. Rebase the stamps *this process drew*
+            // (those above the clock it opened at — loaded-but-untouched
+            // entries keep their old shared-timeline stamps) past the
+            // disk clock, preserving relative order, so entries this
+            // process actually touched stay the most recent.
+            if disk.clock > self.clock {
+                let base = self.open_clock.min(self.clock);
+                let delta = disk.clock - base;
+                for e in self.segments.values_mut() {
+                    if e.1 > base {
+                        e.1 += delta;
+                    }
+                }
+                for e in self.reshard.values_mut() {
+                    if e.1 > base {
+                        e.1 += delta;
+                    }
+                }
+                self.clock += delta;
+            }
             for (k, v) in disk.segments {
                 self.segments.entry(k).or_insert(v);
             }
             for (k, v) in disk.reshard {
                 self.reshard.entry(k).or_insert(v);
-            }
-            if disk.clock > self.clock {
-                self.clock = disk.clock;
             }
         }
         self.evict_to_cap();
@@ -403,6 +432,9 @@ pub fn segment_profile_to_json(p: &SegmentProfile) -> Json {
         ("t_c_us", f64_arr(&p.t_c_us)),
         ("t_p_us", f64_arr(&p.t_p_us)),
         ("mem_bytes", u64_arr(&p.mem_bytes)),
+        ("act_bytes", u64_arr(&p.act_bytes)),
+        ("ckpt_bytes", u64_arr(&p.ckpt_bytes)),
+        ("t_fwd_us", f64_arr(&p.t_fwd_us)),
         ("symbolic_volume", u64_arr(&p.symbolic_volume)),
         ("boundary_out", Json::Arr(p.boundary_out.iter().map(shard_state_to_json).collect())),
         ("boundary_in", Json::Arr(p.boundary_in.iter().map(shard_state_to_json).collect())),
@@ -421,6 +453,9 @@ pub fn segment_profile_from_json(j: &Json) -> Option<SegmentProfile> {
         t_c_us: f64_arr_from(j.get("t_c_us")?)?,
         t_p_us: f64_arr_from(j.get("t_p_us")?)?,
         mem_bytes: u64_arr_from(j.get("mem_bytes")?)?,
+        act_bytes: u64_arr_from(j.get("act_bytes")?)?,
+        ckpt_bytes: u64_arr_from(j.get("ckpt_bytes")?)?,
+        t_fwd_us: f64_arr_from(j.get("t_fwd_us")?)?,
         symbolic_volume: u64_arr_from(j.get("symbolic_volume")?)?,
         boundary_out: j
             .get("boundary_out")?
@@ -441,6 +476,9 @@ pub fn segment_profile_from_json(j: &Json) -> Option<SegmentProfile> {
     let consistent = p.t_c_us.len() == n
         && p.t_p_us.len() == n
         && p.mem_bytes.len() == n
+        && p.act_bytes.len() == n
+        && p.ckpt_bytes.len() == n
+        && p.t_fwd_us.len() == n
         && p.symbolic_volume.len() == n
         && p.boundary_out.len() == n
         && p.boundary_in.len() == n;
@@ -485,6 +523,9 @@ mod tests {
             t_c_us: vec![12.5, 0.0625],
             t_p_us: vec![100.0, 250.75],
             mem_bytes: vec![1 << 30, 3 << 20],
+            act_bytes: vec![1 << 28, 1 << 20],
+            ckpt_bytes: vec![1 << 22, 1 << 14],
+            t_fwd_us: vec![33.125, 80.25],
             symbolic_volume: vec![0, 42],
             boundary_out: vec![ShardState::Replicated, ShardState::Split(1)],
             boundary_in: vec![ShardState::Partial, ShardState::Split(0)],
@@ -608,6 +649,84 @@ mod tests {
         let mut merged = merged;
         assert!(merged.get_segment(&key_a).is_some());
         assert!(merged.get_segment(&key_b).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_rebases_young_process_stamps_above_the_disk_clock() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-rebase-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+        let key = |s: &str| CacheKey {
+            fingerprint: s.to_string(),
+            platform: "sig".into(),
+            parts: 2,
+        };
+
+        // both handles open the same (empty) file, as two processes would
+        let mut a = ProfileCache::open(&path);
+        let mut b = ProfileCache::open(&path);
+        // long-lived writer A inflates the shared clock with many bumps
+        a.put_segment(key("a0"), sample_profile());
+        a.put_segment(key("a1"), sample_profile());
+        for _ in 0..100 {
+            assert!(a.get_segment(&key("a0")).is_some());
+            assert!(a.get_segment(&key("a1")).is_some());
+        }
+        a.save().unwrap();
+        // fresh writer B's own entry carries a tiny local stamp; the merge
+        // must rebase it above the disk clock, not evict it as ancient
+        b.set_max_entries(Some(2));
+        b.put_segment(key("fresh"), sample_profile());
+        b.save().unwrap();
+
+        let mut merged = ProfileCache::open(&path);
+        assert_eq!(merged.num_segments(), 2, "bound holds");
+        assert!(
+            merged.get_segment(&key("fresh")).is_some(),
+            "the young writer's own entry survives the cross-clock merge"
+        );
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn merge_rebase_leaves_untouched_warm_entries_stale() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-stale-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+        let key = |s: &str| CacheKey {
+            fingerprint: s.to_string(),
+            platform: "sig".into(),
+            parts: 2,
+        };
+
+        // seed the file with two old entries (shared-timeline stamps 1, 2)
+        let mut seed = ProfileCache::open(&path);
+        seed.put_segment(key("old0"), sample_profile());
+        seed.put_segment(key("old1"), sample_profile());
+        seed.save().unwrap();
+
+        // A opens warm (loading the old entries, touching neither)...
+        let mut a = ProfileCache::open(&path);
+        // ...while concurrent writer B adds two genuinely fresh entries
+        let mut b = ProfileCache::open(&path);
+        b.put_segment(key("b0"), sample_profile());
+        b.put_segment(key("b1"), sample_profile());
+        b.save().unwrap();
+        // A profiles one new segment and saves under a bound: the rebase
+        // must lift only A's own draw past the disk clock — the loaded
+        // and untouched old entries stay stale and are evicted before
+        // B's fresh ones
+        a.set_max_entries(Some(3));
+        a.put_segment(key("a_new"), sample_profile());
+        a.save().unwrap();
+
+        let mut merged = ProfileCache::open(&path);
+        assert_eq!(merged.num_segments(), 3, "bound holds");
+        assert!(merged.get_segment(&key("a_new")).is_some(), "own draw survives");
+        assert!(merged.get_segment(&key("b0")).is_some(), "concurrent fresh survives");
+        assert!(merged.get_segment(&key("b1")).is_some(), "concurrent fresh survives");
+        assert!(merged.get_segment(&key("old0")).is_none(), "untouched stale evicted");
         std::fs::remove_dir_all(&dir).ok();
     }
 

@@ -17,6 +17,17 @@ pub struct SegmentProfile {
     pub t_p_us: Vec<f64>,
     /// peak memory per device per config, bytes (M)
     pub mem_bytes: Vec<u64>,
+    /// retained forward-activation bytes per device per config (whole
+    /// batch) — the share of `mem_bytes` that 1F1B multiplies by the
+    /// in-flight microbatch count and checkpointing can trade away
+    pub act_bytes: Vec<u64>,
+    /// bytes retained per config when the segment is checkpointed: the
+    /// local footprint of the incoming boundary activation (the
+    /// recompute-on-backward stash)
+    pub ckpt_bytes: Vec<u64>,
+    /// forward-pass time per config, µs — the price of recomputing the
+    /// segment's activations during backward
+    pub t_fwd_us: Vec<f64>,
     /// symbolic (volume-model) cost per config — the Alpa baseline's view
     pub symbolic_volume: Vec<u64>,
     /// outgoing boundary-tensor sharding per config (for T_R)
@@ -183,6 +194,9 @@ mod tests {
             t_c_us: vec![10.0, 1.0],
             t_p_us: vec![5.0, 5.0],
             mem_bytes: vec![0, 0],
+            act_bytes: vec![0, 0],
+            ckpt_bytes: vec![0, 0],
+            t_fwd_us: vec![0.0, 0.0],
             symbolic_volume: vec![0, 0],
             boundary_out: vec![ShardState::Replicated; 2],
             boundary_in: vec![ShardState::Replicated; 2],
@@ -204,6 +218,9 @@ mod tests {
             t_c_us: vec![10.125, 1.0],
             t_p_us: vec![5.5, 5.0078125],
             mem_bytes: vec![1 << 33, 7],
+            act_bytes: vec![1 << 30, 3],
+            ckpt_bytes: vec![1 << 20, 1],
+            t_fwd_us: vec![3.375, 1.5],
             symbolic_volume: vec![3, 0],
             boundary_out: vec![ShardState::Split(1); 2],
             boundary_in: vec![ShardState::Partial; 2],

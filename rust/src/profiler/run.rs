@@ -163,6 +163,20 @@ struct WorkerCtx {
     boundary_out_op: Option<OpId>,
 }
 
+/// One profiled configuration's measurements (worker → assembly order is
+/// preserved by the pool, so these reassemble positionally).
+struct ConfigMeasurement {
+    t_c_us: f64,
+    t_p_us: f64,
+    mem_bytes: u64,
+    act_bytes: u64,
+    ckpt_bytes: u64,
+    t_fwd_us: f64,
+    symbolic_volume: u64,
+    boundary_in: ShardState,
+    boundary_out: ShardState,
+}
+
 /// Cache-aware [`profile_model`]: unique segments (and boundary reshard
 /// tables) already present in `cache` under the current
 /// `(fingerprint, platform signature, parts)` key are reused verbatim —
@@ -235,7 +249,7 @@ pub fn profile_model_cached(
         .flat_map(|u| all_configs[u].iter().cloned().map(move |c| (u, c)))
         .collect();
 
-    let results: Vec<(f64, f64, u64, u64, ShardState, ShardState)> = if jobs.is_empty() {
+    let results: Vec<ConfigMeasurement> = if jobs.is_empty() {
         Vec::new()
     } else {
         let t_profile = Instant::now();
@@ -264,14 +278,30 @@ pub fn profile_model_cached(
                     .boundary_in_op
                     .and_then(|t| states[t])
                     .unwrap_or(ShardState::Replicated);
-                (
-                    rep.comm_us + rep.comm_inter_us + fusion_delta,
-                    rep.compute_us,
-                    prog.peak_memory(opts.opt_factor),
-                    sym,
-                    b_in,
-                    b_out,
-                )
+                // checkpoint stash: the incoming boundary activation at
+                // this config's required input sharding — what remains
+                // resident when the segment recomputes on backward
+                let ckpt_bytes = ctx
+                    .boundary_in_op
+                    .map(|t| {
+                        let bytes = g.ops[t].bytes() as u64;
+                        match b_in {
+                            ShardState::Split(_) => bytes / opts.mesh.intra.max(1) as u64,
+                            _ => bytes,
+                        }
+                    })
+                    .unwrap_or(0);
+                ConfigMeasurement {
+                    t_c_us: rep.comm_us + rep.comm_inter_us + fusion_delta,
+                    t_p_us: rep.compute_us,
+                    mem_bytes: prog.peak_memory(opts.opt_factor),
+                    act_bytes: prog.act_bytes,
+                    ckpt_bytes,
+                    t_fwd_us: forward_time_us(&prog, &g, &opts),
+                    symbolic_volume: sym,
+                    boundary_in: b_in,
+                    boundary_out: b_out,
+                }
             }
         };
         // chunked dispatch: per-config jobs are ~0.5–1 ms, far too small
@@ -305,20 +335,22 @@ pub fn profile_model_cached(
             continue;
         }
         let n_ops = n_ops_per_u[u];
-        let mut prof = SegmentProfile::default();
-        prof.configs = all_configs[u].clone();
+        let mut prof =
+            SegmentProfile { configs: all_configs[u].clone(), ..SegmentProfile::default() };
         let mut best_step = f64::INFINITY;
         for _ in 0..prof.configs.len() {
-            let (t_c, t_p, mem, sym, b_in, b_out) =
-                results.next().expect("one result per profiled config");
-            charge_config(&mut stats, n_ops, (t_c + t_p) * 1e-6, &mut best_step);
+            let m = results.next().expect("one result per profiled config");
+            charge_config(&mut stats, n_ops, (m.t_c_us + m.t_p_us) * 1e-6, &mut best_step);
 
-            prof.t_c_us.push(t_c);
-            prof.t_p_us.push(t_p);
-            prof.mem_bytes.push(mem);
-            prof.symbolic_volume.push(sym);
-            prof.boundary_in.push(b_in);
-            prof.boundary_out.push(b_out);
+            prof.t_c_us.push(m.t_c_us);
+            prof.t_p_us.push(m.t_p_us);
+            prof.mem_bytes.push(m.mem_bytes);
+            prof.act_bytes.push(m.act_bytes);
+            prof.ckpt_bytes.push(m.ckpt_bytes);
+            prof.t_fwd_us.push(m.t_fwd_us);
+            prof.symbolic_volume.push(m.symbolic_volume);
+            prof.boundary_in.push(m.boundary_in);
+            prof.boundary_out.push(m.boundary_out);
         }
         if let Some(c) = cache.as_deref_mut() {
             c.put_segment(
@@ -499,6 +531,39 @@ pub fn infer_incoming_state(
     state
 }
 
+/// Forward-pass time of a lowered segment program: the compute kernels of
+/// Fwd-role ops plus the activation collectives they trigger (grad-sync
+/// and backward/optimizer kernels excluded). This is exactly what a
+/// checkpoint-and-recompute backward re-executes, so it is the recompute
+/// price the memory planner charges (`SegmentProfile::t_fwd_us`).
+///
+/// Deliberately a second simulation pass over the forward subset (~1/3 of
+/// the instructions) rather than a per-role split threaded through
+/// [`simulate`]'s report — the added cold-profiling cost is tracked by
+/// the profiling/memory benches, and warm cache runs skip it entirely.
+fn forward_time_us(
+    prog: &crate::spmd::SpmdProgram,
+    g: &Graph,
+    opts: &ProfileOptions,
+) -> f64 {
+    use crate::spmd::Instr;
+    let mut instrs = Vec::new();
+    for instr in &prog.instrs {
+        let fwd = match instr {
+            Instr::Compute { op, .. } => g.ops[*op].role == Role::Fwd,
+            Instr::Coll { tensor, grad_sync, .. }
+            | Instr::CollInter { tensor, grad_sync, .. } => {
+                !*grad_sync && g.ops[*tensor].role == Role::Fwd
+            }
+        };
+        if fwd {
+            instrs.push(instr.clone());
+        }
+    }
+    let fwd_prog = crate::spmd::SpmdProgram { instrs, ..Default::default() };
+    simulate(&fwd_prog, &opts.platform, opts.mesh.intra, &opts.compute).total_us
+}
+
 /// Steady-state gradient-bucket fusion: the whole model's grad sync fuses
 /// into large buckets, so a segment's share should be priced at the fused
 /// message's efficiency: t(R·b)/R where R = total grad volume / this
@@ -674,6 +739,34 @@ mod tests {
         let min = layer.mem_bytes.iter().min().unwrap();
         let max = layer.mem_bytes.iter().max().unwrap();
         assert!(max > min, "memory must differ across configs");
+    }
+
+    #[test]
+    fn memory_columns_are_recorded() {
+        let (_, _, _, db) = profiled("gpt-tiny", 2);
+        let layer = db.segments.iter().find(|s| s.configs.len() == 81).unwrap();
+        let n = layer.configs.len();
+        assert_eq!(layer.act_bytes.len(), n);
+        assert_eq!(layer.ckpt_bytes.len(), n);
+        assert_eq!(layer.t_fwd_us.len(), n);
+        for c in 0..n {
+            assert!(layer.act_bytes[c] > 0, "retained activations exist");
+            assert!(
+                layer.act_bytes[c] <= layer.mem_bytes[c],
+                "activations are a component of peak memory"
+            );
+            assert!(layer.t_fwd_us[c] > 0.0, "forward pass takes time");
+            assert!(
+                layer.t_fwd_us[c] < layer.t_c_us[c] + layer.t_p_us[c],
+                "forward is a strict share of the whole step"
+            );
+        }
+        // somewhere the boundary stash undercuts the full activation set —
+        // otherwise checkpointing could never pay
+        assert!(
+            layer.ckpt_bytes.iter().zip(&layer.act_bytes).any(|(&c, &a)| c < a),
+            "checkpoint stash must be able to beat full retention"
+        );
     }
 
     #[test]

@@ -58,6 +58,12 @@ impl Args {
         self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
     }
 
+    /// Optional float option with no default (e.g. `--mem-cap 12.5`):
+    /// None when absent or unparseable.
+    pub fn get_f64_opt(&self, key: &str) -> Option<f64> {
+        self.get(key).and_then(|v| v.parse().ok())
+    }
+
     pub fn has_flag(&self, name: &str) -> bool {
         self.flags.iter().any(|f| f == name)
     }
@@ -101,6 +107,14 @@ mod tests {
         assert_eq!(a.get_usize_opt("missing"), None);
         let b = parse("search --cache-max-entries lots");
         assert_eq!(b.get_usize_opt("cache-max-entries"), None);
+    }
+
+    #[test]
+    fn optional_f64() {
+        let a = parse("pipeline --mem-cap 12.5");
+        assert_eq!(a.get_f64_opt("mem-cap"), Some(12.5));
+        assert_eq!(a.get_f64_opt("missing"), None);
+        assert_eq!(parse("pipeline --mem-cap lots").get_f64_opt("mem-cap"), None);
     }
 
     #[test]

@@ -6,7 +6,8 @@
 use cfp::cluster::Platform;
 use cfp::coordinator::{run_cfp, CfpOptions};
 use cfp::models::ModelCfg;
-use cfp::profiler::ProfileCache;
+use cfp::profiler::{CacheKey, ProfileCache, SegmentConfig, SegmentProfile};
+use cfp::spmd::ShardState;
 
 fn temp_cache_dir(tag: &str) -> std::path::PathBuf {
     let dir = std::env::temp_dir().join(format!("cfp-itest-{tag}-{}", std::process::id()));
@@ -107,6 +108,66 @@ fn corrupt_cache_file_degrades_to_cold_run() {
     // the bad file was replaced by a valid one
     let reopened = ProfileCache::open(&path);
     assert_eq!(reopened.num_segments(), r.segments.num_unique());
+
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn probe_profile(tag: u64) -> SegmentProfile {
+    SegmentProfile {
+        configs: vec![SegmentConfig { strategy: vec![0] }],
+        t_c_us: vec![tag as f64],
+        t_p_us: vec![1.0],
+        mem_bytes: vec![tag],
+        act_bytes: vec![tag / 2],
+        ckpt_bytes: vec![tag / 8],
+        t_fwd_us: vec![0.5],
+        symbolic_volume: vec![0],
+        boundary_out: vec![ShardState::Replicated],
+        boundary_in: vec![ShardState::Replicated],
+    }
+}
+
+fn key(fp: &str) -> CacheKey {
+    CacheKey { fingerprint: fp.to_string(), platform: "sig".into(), parts: 2 }
+}
+
+#[test]
+fn concurrent_writer_merge_respects_lru_eviction_and_own_entries_win() {
+    // Two cache handles share one file, as two processes would. Writer A
+    // saves three entries; writer B (opened before A saved, so A's
+    // entries are "foreign" to it) has a bound of 3, its own fresher
+    // entries, and one key conflicting with A. B's save must fold A's
+    // entries in, keep B's version on the conflict, and evict in LRU
+    // order across own + merged entries.
+    let dir = temp_cache_dir("merge-lru");
+    let path = dir.join("profiles.json");
+
+    let mut a = ProfileCache::open(&path);
+    let mut b = ProfileCache::open(&path);
+
+    a.put_segment(key("fpA1"), probe_profile(100)); // stamp 1 in A's clock
+    a.put_segment(key("fpA2"), probe_profile(200)); // stamp 2
+    a.put_segment(key("shared"), probe_profile(300)); // stamp 3
+    a.save().unwrap();
+
+    b.set_max_entries(Some(3));
+    b.put_segment(key("shared"), probe_profile(999)); // B's own version
+    b.put_segment(key("fpB1"), probe_profile(400));
+    // touch B's entries so their stamps are fresher than A's
+    assert!(b.get_segment(&key("shared")).is_some());
+    assert!(b.get_segment(&key("fpB1")).is_some());
+    b.save().unwrap();
+
+    let mut merged = ProfileCache::open(&path);
+    assert_eq!(merged.num_segments() + merged.num_reshards(), 3, "bound holds on disk");
+    // own entries win the key conflict
+    let shared = merged.get_segment(&key("shared")).expect("shared survives");
+    assert_eq!(shared.mem_bytes, vec![999], "B's version, not A's");
+    // B's own fresh entry survives; the least-recently-used foreign entry
+    // (A's first) was evicted, the fresher foreign one kept
+    assert!(merged.get_segment(&key("fpB1")).is_some(), "own fresh entry survives");
+    assert!(merged.get_segment(&key("fpA1")).is_none(), "oldest foreign entry evicted");
+    assert!(merged.get_segment(&key("fpA2")).is_some(), "fresher foreign entry kept");
 
     std::fs::remove_dir_all(&dir).ok();
 }
