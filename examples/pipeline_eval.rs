@@ -32,6 +32,8 @@ fn main() {
             "peak mem/dev",
             "vs single",
             "vs naive",
+            "prof hit",
+            "prof miss",
         ]);
         for model in pipeline_eval_models() {
             let (row, _) = pipeline_row(&model, platform, mesh, microbatches);
@@ -45,6 +47,8 @@ fn main() {
                 fmt_bytes(row.peak_mem_bytes),
                 format!("{:.2}x", row.single_us / row.two_level_us),
                 format!("{:.2}x", row.naive_us / row.two_level_us),
+                row.profile_hits.to_string(),
+                row.profile_misses.to_string(),
             ]);
         }
         t.print();

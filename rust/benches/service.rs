@@ -1,0 +1,109 @@
+//! Bench: `cfp serve` warm-path economics (ISSUE 4 acceptance).
+//!
+//! * cold — a fresh service per request: full AnalysisPasses +
+//!   MetricsProfiling + ComposeSearch, the one-shot CLI economics
+//! * profile-warm — plan cache disabled, shared profile cache warm: the
+//!   search re-runs but MetricsProfiling is a lookup
+//! * plan-warm — plan cache hit: no planning at all
+//! * coalescing — N concurrent identical requests perform exactly one
+//!   search (leader held until every follower registers)
+//!
+//! Acceptance: warm (either warm path's best) ≥ 10× faster than cold.
+
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
+
+use cfp::service::{PlanService, ServeConfig};
+use cfp::util::bench::{bench, black_box};
+use cfp::util::Json;
+
+fn line(layers: usize) -> String {
+    format!(
+        "{{\"type\": \"plan\", \"model\": \"gpt-tiny\", \"layers\": {layers}, \
+         \"platform\": \"a100-pcie\"}}"
+    )
+}
+
+fn main() {
+    // cold: a fresh service (empty caches) per request
+    let cold_s = {
+        let reps = 5;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let svc = PlanService::new(ServeConfig::default());
+            black_box(svc.handle_line(&line(2)));
+        }
+        t0.elapsed().as_secs_f64() / reps as f64
+    };
+    println!("bench serve/cold_fresh_service: {:.3}ms per request", cold_s * 1e3);
+
+    // plan-warm: the LRU plan cache answers without planning
+    let svc = PlanService::new(ServeConfig::default());
+    svc.handle_line(&line(2));
+    let plan_warm = bench("serve/warm_plan_cache_hit", Duration::from_millis(300), || {
+        black_box(svc.handle_line(&line(2)));
+    });
+
+    // profile-warm: plan cache disabled, so every request re-plans, but
+    // the shared profile cache turns MetricsProfiling into lookups
+    let svc2 = PlanService::new(ServeConfig { plan_cache_entries: 0, ..ServeConfig::default() });
+    svc2.handle_line(&line(2));
+    let profile_warm = bench("serve/warm_profile_cache", Duration::from_millis(500), || {
+        black_box(svc2.handle_line(&line(2)));
+    });
+
+    let plan_speedup = cold_s * 1e9 / plan_warm.median_ns;
+    let profile_speedup = cold_s * 1e9 / profile_warm.median_ns;
+    println!(
+        "warm/cold speedup: plan-cache {plan_speedup:.0}x, profile-cache {profile_speedup:.1}x"
+    );
+    assert!(
+        plan_speedup >= 10.0,
+        "acceptance: warm requests must be ≥ 10x faster than cold \
+         (measured {plan_speedup:.1}x)"
+    );
+
+    // coalescing efficiency: N concurrent identical requests → 1 search
+    const N: usize = 8;
+    let svc3 = PlanService::new(ServeConfig {
+        plan_cache_entries: 0,
+        workers: N,
+        ..ServeConfig::default()
+    });
+    let probe = svc3.clone();
+    svc3.set_search_hook(Arc::new(move || {
+        while probe.stats().coalesced < (N as u64) - 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }));
+    let start = Arc::new(Barrier::new(N));
+    let t0 = Instant::now();
+    std::thread::scope(|s| {
+        for _ in 0..N {
+            let svc3 = svc3.clone();
+            let start = Arc::clone(&start);
+            s.spawn(move || {
+                start.wait();
+                black_box(svc3.handle_line(&line(3)));
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    let stats = svc3.stats();
+    println!(
+        "bench serve/coalescing: {N} identical concurrent requests in {:.3}ms — \
+         searches {}, coalesced {}",
+        wall * 1e3,
+        stats.searches,
+        stats.coalesced
+    );
+    assert_eq!(stats.searches, 1, "single-flight must run exactly one search");
+    assert_eq!(stats.coalesced as usize, N - 1);
+
+    // sanity: the served payload is identical whichever path produced it
+    let a = svc.handle_line(&line(2));
+    let b = svc2.handle_line(&line(2));
+    let pa = Json::parse(&a).unwrap().get("result").unwrap().to_string();
+    let pb = Json::parse(&b).unwrap().get("result").unwrap().to_string();
+    assert_eq!(pa, pb, "plan-warm and profile-warm payloads are bit-identical");
+}

@@ -11,13 +11,17 @@ use crate::cluster::{simulate, Platform};
 use crate::cost::{self, Plan};
 use crate::graph::Graph;
 use crate::interop;
-use crate::interop::StageSpec;
+use crate::interop::{candidate_stage_counts, StageSpec};
 use crate::memory::RecomputeSpec;
 use crate::models::{build_training, ModelCfg};
 use crate::pblock::{build_parallel_blocks, BlockSet};
-use crate::profiler::{profile_model_cached, ProfileCache, ProfileDb, ProfileOptions};
+use crate::profiler::{
+    profile_model_handle, CacheHandle, ProfileCache, ProfileDb, ProfileOptions,
+    SharedProfileCache,
+};
 use crate::segment::{extract_segments, SegmentSet};
 use crate::spmd::Mesh;
+use crate::util::cli::Args;
 
 #[derive(Clone)]
 pub struct CfpOptions {
@@ -112,6 +116,134 @@ impl CfpOptions {
         cache.set_max_entries(self.cache_max_entries);
         Some(cache)
     }
+}
+
+/// Which planner a request drives. Decides the option defaults: the
+/// `pipeline` subcommand (and `pipeline` service requests) defaults to
+/// memory-aware auto staging, everything else to the single-level
+/// planner's defaults.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum PlannerKind {
+    SingleLevel,
+    TwoLevel,
+}
+
+/// Options built from CLI-shaped arguments plus any soft warnings
+/// (optional flags that did not parse and fell back to their defaults).
+/// The CLI prints the warnings to stderr and proceeds; `cfp serve`
+/// rejects the request instead — but both interpret *valid* flags
+/// through this one builder, so they can never read the same request
+/// differently.
+pub struct BuiltOptions {
+    pub opts: CfpOptions,
+    pub warnings: Vec<String>,
+}
+
+impl CfpOptions {
+    /// The one flag → options mapping shared by the `cfp` subcommands
+    /// and the `cfp serve` request path. Unknown model/platform names are
+    /// hard errors (a plan against the wrong hardware is worse than no
+    /// plan); malformed optional flags produce warnings and keep their
+    /// defaults.
+    pub fn from_args(args: &Args, kind: PlannerKind) -> Result<BuiltOptions, String> {
+        let mut warnings = Vec::new();
+        let name = args.get_or("model", "gpt-2.6b");
+        let mut model = ModelCfg::try_preset(name)
+            .ok_or_else(|| format!("unknown model preset {name:?}"))?;
+        if let Some(l) = args.get("layers") {
+            match l.parse::<usize>() {
+                Ok(n) if n > 0 => model = model.with_layers(n),
+                _ => warnings
+                    .push(format!("invalid --layers value {l:?} (want a positive integer)")),
+            }
+        }
+        if let Some(b) = args.get("batch") {
+            match b.parse::<usize>() {
+                Ok(n) if n > 0 => model = model.with_batch(n),
+                _ => warnings
+                    .push(format!("invalid --batch value {b:?} (want a positive integer)")),
+            }
+        }
+        if args.has_flag("scaled") {
+            model = model.scaled_for_eval();
+        }
+        let pname = args.get_or("platform", "a100-pcie");
+        let platform =
+            Platform::by_name(pname).ok_or_else(|| format!("unknown platform {pname:?}"))?;
+        let mut opts = CfpOptions::new(model, platform);
+        if kind == PlannerKind::TwoLevel {
+            // the pipeline planner defaults to memory-aware planning
+            // against the device capacity; `--recompute off` restores the
+            // PR 2 behaviour
+            opts.stages = StageSpec::Auto;
+            opts.recompute = RecomputeSpec::Auto;
+        }
+        opts.threads = args.get_usize("threads", 1);
+        opts.cache_path = args.get_path("cache");
+        opts.cache_max_entries = args.get_usize_opt("cache-max-entries");
+        opts.microbatches = args.get_usize("microbatches", 8);
+        if let Some(s) = args.get("stages") {
+            match StageSpec::parse(s) {
+                Some(spec) => opts.stages = spec,
+                None => warnings
+                    .push(format!("unknown --stages value {s:?} (want auto|single|K)")),
+            }
+        }
+        // --mem-cap is given in GB (fractions allowed: --mem-cap 12.5)
+        if let Some(mc) = args.get("mem-cap") {
+            match mc.parse::<f64>() {
+                Ok(gb) if gb > 0.0 => opts.mem_cap = Some((gb * (1u64 << 30) as f64) as u64),
+                _ => warnings
+                    .push(format!("invalid --mem-cap value {mc:?} (want GB, e.g. 12.5)")),
+            }
+        }
+        if let Some(r) = args.get("recompute") {
+            match RecomputeSpec::parse(r) {
+                Some(spec) => opts.recompute = spec,
+                None => {
+                    warnings.push(format!("unknown --recompute value {r:?} (want auto|off)"))
+                }
+            }
+        }
+        Ok(BuiltOptions { opts, warnings })
+    }
+}
+
+/// Strict validation of pipeline-planner requests (the `pipeline`
+/// subcommand and `pipeline` service requests): a stage count that
+/// cannot tile the cluster, or zero microbatches, is a user error —
+/// reject with a message instead of silently normalizing.
+pub fn validate_pipeline_args(args: &Args, opts: &CfpOptions) -> Result<(), String> {
+    if let Some(mb) = args.get("microbatches") {
+        match mb.parse::<usize>() {
+            Ok(0) => {
+                return Err(
+                    "--microbatches must be ≥ 1 (0 microbatches cannot fill a pipeline)".into()
+                )
+            }
+            Ok(_) => {}
+            Err(_) => return Err(format!("--microbatches {mb:?} is not a number")),
+        }
+    }
+    if let Some(s) = args.get("stages") {
+        if let Ok(k) = s.parse::<usize>() {
+            let valid = candidate_stage_counts(StageSpec::Auto, opts.mesh);
+            if k == 0 || (k > 1 && !valid.contains(&k)) {
+                return Err(format!(
+                    "--stages {k} does not tile the {}-device cluster \
+                     (valid stage counts: {valid:?})",
+                    opts.mesh.total()
+                ));
+            }
+        }
+    }
+    if let Some(mc) = args.get("mem-cap") {
+        match mc.parse::<f64>() {
+            Ok(gb) if gb > 0.0 => {}
+            _ => return Err(format!("--mem-cap {mc:?} is not a positive GB value")),
+        }
+    }
+    Ok(())
 }
 
 /// Per-phase timing (paper Fig. 12/13 vocabulary).
@@ -251,6 +383,20 @@ fn save_cache(cache: Option<&mut ProfileCache>) {
 /// [`run_cfp`] against a caller-owned cache (in-memory or file-backed);
 /// the caller decides when to [`ProfileCache::save`].
 pub fn run_cfp_with_cache(opts: &CfpOptions, cache: Option<&mut ProfileCache>) -> CfpResult {
+    run_cfp_with_handle(opts, CacheHandle::from_option(cache))
+}
+
+/// Re-entrant [`run_cfp`]: profiles through a process-wide shared cache,
+/// so concurrent runs (the `cfp serve` worker pool) reuse each other's
+/// freshly profiled segments instead of re-profiling. The planned output
+/// is bit-identical to the exclusive-cache path — profiled values are
+/// deterministic, so it cannot matter *which* run computed an entry.
+pub fn run_cfp_shared(opts: &CfpOptions, shared: &SharedProfileCache) -> CfpResult {
+    run_cfp_with_handle(opts, shared.handle())
+}
+
+/// [`run_cfp`] over any cache ownership shape ([`CacheHandle`]).
+pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> CfpResult {
     let mut timings = PhaseTimings::default();
 
     // AnalysisPasses: graph build + ParallelBlocks + segments
@@ -270,7 +416,7 @@ pub fn run_cfp_with_cache(opts: &CfpOptions, cache: Option<&mut ProfileCache>) -
     if let Some(cm) = &opts.compute {
         popts = popts.with_compute(cm.clone());
     }
-    let db = profile_model_cached(&graph, &blocks, &segments, &popts, cache);
+    let db = profile_model_handle(&graph, &blocks, &segments, &popts, cache.reborrow());
     let profiling_wall = t1.elapsed().as_secs_f64();
     timings.metrics_profiling_s = db.stats.profile_wall_s;
     timings.exec_compiling_s = (profiling_wall - db.stats.profile_wall_s).max(0.0);
@@ -303,6 +449,12 @@ pub struct TwoLevelResult {
     /// contexts (same memory accounting) — the bar the two-level planner
     /// has to clear; `None` when the naive recipe cannot fit the cap
     pub naive: Option<interop::PipelinePlan>,
+    /// unique segments served from the profile cache, summed over the
+    /// single-stage pass and every stage context (warm-path tracking for
+    /// the harness eval tables and `cfp serve` counters)
+    pub profile_hits: usize,
+    /// unique segments actually profiled across the same passes
+    pub profile_misses: usize,
 }
 
 /// Run the two-level planner: the single-stage CFP pipeline first (its
@@ -321,9 +473,26 @@ pub fn run_cfp_two_level(opts: &CfpOptions) -> TwoLevelResult {
 /// [`run_cfp_two_level`] against a caller-owned cache.
 pub fn run_cfp_two_level_with_cache(
     opts: &CfpOptions,
-    mut cache: Option<&mut ProfileCache>,
+    cache: Option<&mut ProfileCache>,
 ) -> TwoLevelResult {
-    let single = run_cfp_with_cache(opts, cache.as_deref_mut());
+    run_cfp_two_level_with_handle(opts, CacheHandle::from_option(cache))
+}
+
+/// Re-entrant [`run_cfp_two_level`] against a process-wide shared cache
+/// — see [`run_cfp_shared`].
+pub fn run_cfp_two_level_shared(
+    opts: &CfpOptions,
+    shared: &SharedProfileCache,
+) -> TwoLevelResult {
+    run_cfp_two_level_with_handle(opts, shared.handle())
+}
+
+/// [`run_cfp_two_level`] over any cache ownership shape.
+pub fn run_cfp_two_level_with_handle(
+    opts: &CfpOptions,
+    mut cache: CacheHandle<'_>,
+) -> TwoLevelResult {
+    let single = run_cfp_with_handle(opts, cache.reborrow());
 
     let popts = opts.pipeline_options();
     let mut ctxs = interop::StageContexts::new();
@@ -336,14 +505,19 @@ pub fn run_cfp_two_level_with_cache(
         segments: single.segments.clone(),
         db: single.db.clone(),
     });
-    ctxs.ensure_all(&single.graph, &popts, cache.as_deref_mut());
+    ctxs.ensure_all(&single.graph, &popts, cache.reborrow());
+
+    // warm-path accounting: the adopted context carries the single-stage
+    // pass's stats, the rest were profiled (or cache-served) just above
+    let profile_hits = ctxs.iter().map(|c| c.db.stats.cache_hits).sum();
+    let profile_misses = ctxs.iter().map(|c| c.db.stats.cache_misses).sum();
 
     // outside memory-aware mode k = 1 is always feasible, so both plans
     // are Some; under a cap, None means "does not fit, even checkpointed"
     // (for the naive baseline exactly as for the CFP planner)
     let pipeline = interop::plan_pipeline(&single.graph, &ctxs, &popts);
     let naive = baselines::naive_pipeline_plan(&single.graph, &ctxs, &popts);
-    TwoLevelResult { single, pipeline, naive }
+    TwoLevelResult { single, pipeline, naive, profile_hits, profile_misses }
 }
 
 /// Plans from every framework for a model/platform (Fig. 7 row).
@@ -413,6 +587,109 @@ mod tests {
         );
         assert!(naive.step_time_us > 0.0);
         assert!(!pipeline.stages.is_empty());
+    }
+
+    fn args_of(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(String::from))
+    }
+
+    #[test]
+    fn options_builder_mirrors_the_cli_flags() {
+        let args = args_of(
+            "pipeline --model gpt-tiny --layers 3 --batch 2 --threads 2 \
+             --microbatches 4 --stages 2 --mem-cap 1.5 --recompute off \
+             --cache-max-entries 64",
+        );
+        let built = CfpOptions::from_args(&args, PlannerKind::TwoLevel).unwrap();
+        assert!(built.warnings.is_empty(), "{:?}", built.warnings);
+        let o = built.opts;
+        assert_eq!(o.model.name, "gpt-tiny");
+        assert_eq!((o.model.layers, o.model.batch), (3, 2));
+        assert_eq!(o.threads, 2);
+        assert_eq!(o.microbatches, 4);
+        assert_eq!(o.stages, StageSpec::Fixed(2));
+        assert_eq!(o.mem_cap, Some((1.5 * (1u64 << 30) as f64) as u64));
+        assert_eq!(o.recompute, RecomputeSpec::Off);
+        assert_eq!(o.cache_max_entries, Some(64));
+    }
+
+    #[test]
+    fn options_builder_defaults_depend_on_planner_kind() {
+        let args = args_of("x --model gpt-tiny");
+        let single = CfpOptions::from_args(&args, PlannerKind::SingleLevel).unwrap().opts;
+        assert_eq!(single.stages, StageSpec::Single);
+        assert_eq!(single.recompute, RecomputeSpec::Off);
+        let two = CfpOptions::from_args(&args, PlannerKind::TwoLevel).unwrap().opts;
+        assert_eq!(two.stages, StageSpec::Auto);
+        assert_eq!(two.recompute, RecomputeSpec::Auto);
+    }
+
+    #[test]
+    fn options_builder_rejects_unknown_names_and_warns_on_bad_values() {
+        let args = args_of("x --model not-a-model");
+        assert!(CfpOptions::from_args(&args, PlannerKind::SingleLevel).is_err());
+        let args = args_of("x --platform not-a-platform");
+        assert!(CfpOptions::from_args(&args, PlannerKind::SingleLevel).is_err());
+
+        let args = args_of("x --model gpt-tiny --layers nope --mem-cap -3 --stages wat");
+        let built = CfpOptions::from_args(&args, PlannerKind::SingleLevel).unwrap();
+        assert_eq!(built.warnings.len(), 3, "{:?}", built.warnings);
+        // warned flags keep their defaults
+        assert_eq!(built.opts.model.layers, ModelCfg::preset("gpt-tiny").layers);
+        assert_eq!(built.opts.mem_cap, None);
+        assert_eq!(built.opts.stages, StageSpec::Single);
+    }
+
+    #[test]
+    fn pipeline_validation_rejects_untileable_requests() {
+        let args = args_of("pipeline --model gpt-tiny --stages 3");
+        let built = CfpOptions::from_args(&args, PlannerKind::TwoLevel).unwrap();
+        assert!(validate_pipeline_args(&args, &built.opts).is_err(), "3 ∤ 4 devices");
+        let args = args_of("pipeline --model gpt-tiny --microbatches 0");
+        let built = CfpOptions::from_args(&args, PlannerKind::TwoLevel).unwrap();
+        assert!(validate_pipeline_args(&args, &built.opts).is_err(), "0 microbatches");
+        let args = args_of("pipeline --model gpt-tiny --stages 2 --microbatches 4");
+        let built = CfpOptions::from_args(&args, PlannerKind::TwoLevel).unwrap();
+        assert!(validate_pipeline_args(&args, &built.opts).is_ok());
+    }
+
+    #[test]
+    fn shared_cache_run_is_bit_identical_to_exclusive() {
+        let opts = CfpOptions::new(
+            ModelCfg::preset("gpt-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        );
+        let exclusive = run_cfp(&opts);
+        let shared = SharedProfileCache::in_memory();
+        let a = run_cfp_shared(&opts, &shared);
+        assert_eq!(a.plan.choice, exclusive.plan.choice);
+        assert!(a.plan.time_us == exclusive.plan.time_us, "bit-identical time");
+        assert_eq!(a.plan.mem_bytes, exclusive.plan.mem_bytes);
+        assert!(a.db.stats.cache_misses > 0, "first shared run profiles");
+        // a second shared run is fully warm off the same shared cache
+        let b = run_cfp_shared(&opts, &shared);
+        assert_eq!(b.db.stats.cache_misses, 0);
+        assert_eq!(b.db.stats.cache_hits, a.db.stats.cache_misses);
+        assert_eq!(b.plan.choice, exclusive.plan.choice);
+        assert!(b.plan.time_us == exclusive.plan.time_us);
+    }
+
+    #[test]
+    fn two_level_reports_profile_traffic() {
+        let opts = CfpOptions::new(
+            ModelCfg::preset("gpt-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        )
+        .with_stages(StageSpec::Auto);
+        let shared = SharedProfileCache::in_memory();
+        let cold = run_cfp_two_level_shared(&opts, &shared);
+        assert!(cold.profile_misses > 0, "cold two-level run profiles every context");
+        assert_eq!(cold.profile_hits, 0);
+        let warm = run_cfp_two_level_shared(&opts, &shared);
+        assert_eq!(warm.profile_misses, 0, "warm run is all lookups");
+        assert_eq!(warm.profile_hits, cold.profile_misses);
+        let (p, q) = (warm.pipeline.expect("feasible"), cold.pipeline.expect("feasible"));
+        assert!(p.step_time_us == q.step_time_us, "warm plan is bit-identical");
     }
 
     #[test]

@@ -98,6 +98,11 @@ pub struct PipelineRow {
     /// closed-form 1F1B peak memory per device of the chosen plan (max
     /// over stages: weights + optimizer + in-flight activations)
     pub peak_mem_bytes: u64,
+    /// unique segments served from the profile cache across every stage
+    /// context (warm-path effectiveness — 0 on cold cacheless runs)
+    pub profile_hits: usize,
+    /// unique segments actually profiled across the same passes
+    pub profile_misses: usize,
 }
 
 /// Run the two-level planner (auto stage count) for one eval cell.
@@ -125,8 +130,50 @@ pub fn pipeline_row(
         stages: pipeline.num_stages(),
         bubble: pipeline.bubble_fraction,
         peak_mem_bytes: pipeline.peak_mem_bytes,
+        profile_hits: r.profile_hits,
+        profile_misses: r.profile_misses,
     };
     (row, r)
+}
+
+/// Plan/profile cache effectiveness columns, printed by the eval drivers
+/// and `cfp bench-serve` so BENCH trajectories can track warm-path wins
+/// across PRs. Plan-level counters (hit/miss/coalesced) come from
+/// [`crate::service::ServiceStats`]; profile-level ones also exist on
+/// one-shot runs ([`PipelineRow::profile_hits`]).
+#[derive(Clone, Debug, Default)]
+pub struct CacheEffect {
+    pub plan_hits: u64,
+    pub plan_misses: u64,
+    pub coalesced: u64,
+    pub profile_hits: u64,
+    pub profile_misses: u64,
+}
+
+impl CacheEffect {
+    pub fn headers() -> &'static [&'static str] {
+        &["plan hit", "plan miss", "coalesced", "prof hit", "prof miss"]
+    }
+
+    pub fn cells(&self) -> Vec<String> {
+        vec![
+            self.plan_hits.to_string(),
+            self.plan_misses.to_string(),
+            self.coalesced.to_string(),
+            self.profile_hits.to_string(),
+            self.profile_misses.to_string(),
+        ]
+    }
+
+    pub fn from_service(s: &crate::service::ServiceStats) -> CacheEffect {
+        CacheEffect {
+            plan_hits: s.plan_hits,
+            plan_misses: s.plan_misses,
+            coalesced: s.coalesced,
+            profile_hits: s.profile_hits,
+            profile_misses: s.profile_misses,
+        }
+    }
 }
 
 /// Markdown-ish aligned table printer.
@@ -239,5 +286,23 @@ mod tests {
         assert_eq!(fmt_us(500.0), "500.0µs");
         assert!(fmt_us(1.5e6).ends_with('s'));
         assert!(fmt_bytes(5 << 20).ends_with("MB"));
+    }
+
+    #[test]
+    fn cache_effect_cells_align_with_headers() {
+        let eff = CacheEffect { plan_hits: 3, coalesced: 2, ..CacheEffect::default() };
+        assert_eq!(eff.cells().len(), CacheEffect::headers().len());
+        let s = crate::service::ServiceStats {
+            plan_hits: 7,
+            profile_misses: 5,
+            ..Default::default()
+        };
+        let from = CacheEffect::from_service(&s);
+        assert_eq!(from.plan_hits, 7);
+        assert_eq!(from.profile_misses, 5);
+        // headers are usable as a Table header row
+        let mut t = Table::new(CacheEffect::headers());
+        t.row(eff.cells());
+        t.print();
     }
 }

@@ -74,7 +74,7 @@ use crate::cost::{self, Plan};
 use crate::graph::Graph;
 use crate::memory::{self, RecomputeSpec, SpanFootprint, SpanMemPlan};
 use crate::pblock::{build_parallel_blocks, BlockSet};
-use crate::profiler::{profile_model_cached, ProfileCache, ProfileDb, ProfileOptions};
+use crate::profiler::{profile_model_handle, CacheHandle, ProfileDb, ProfileOptions};
 use crate::segment::{extract_segments, SegmentSet};
 use crate::spmd::{CollKind, Mesh};
 
@@ -196,7 +196,7 @@ impl StageContexts {
         g: &Graph,
         opts: &PipelineOptions,
         devices: usize,
-        cache: Option<&mut ProfileCache>,
+        cache: CacheHandle<'_>,
     ) {
         if !self.by_devices.contains_key(&devices) {
             self.by_devices.insert(devices, build_context(g, opts, devices, cache));
@@ -213,7 +213,7 @@ impl StageContexts {
         &mut self,
         g: &Graph,
         opts: &PipelineOptions,
-        mut cache: Option<&mut ProfileCache>,
+        mut cache: CacheHandle<'_>,
     ) {
         let total = opts.mesh.total();
         for k in candidate_stage_counts(opts.spec, opts.mesh) {
@@ -227,7 +227,7 @@ impl StageContexts {
             if segments.instances.len() < k {
                 continue;
             }
-            let db = profile_context(g, opts, mesh, &blocks, &segments, cache.as_deref_mut());
+            let db = profile_context(g, opts, mesh, &blocks, &segments, cache.reborrow());
             self.by_devices.insert(devices, StageContext { devices, mesh, blocks, segments, db });
         }
     }
@@ -241,6 +241,12 @@ impl StageContexts {
 
     pub fn get(&self, devices: usize) -> Option<&StageContext> {
         self.by_devices.get(&devices)
+    }
+
+    /// All built contexts, ascending by sub-mesh size (the adopted
+    /// whole-cluster context included).
+    pub fn iter(&self) -> impl Iterator<Item = &StageContext> {
+        self.by_devices.values()
     }
 
     pub fn len(&self) -> usize {
@@ -258,7 +264,7 @@ pub fn build_context(
     g: &Graph,
     opts: &PipelineOptions,
     devices: usize,
-    cache: Option<&mut ProfileCache>,
+    cache: CacheHandle<'_>,
 ) -> StageContext {
     let mesh = sub_mesh(opts.mesh, devices);
     let blocks = build_parallel_blocks(g, mesh.intra);
@@ -275,13 +281,13 @@ fn profile_context(
     mesh: Mesh,
     blocks: &BlockSet,
     segments: &SegmentSet,
-    cache: Option<&mut ProfileCache>,
+    cache: CacheHandle<'_>,
 ) -> ProfileDb {
     let mut popts = ProfileOptions::new(opts.platform, mesh).with_threads(opts.threads);
     if let Some(cm) = &opts.compute {
         popts = popts.with_compute(cm.clone());
     }
-    profile_model_cached(g, blocks, segments, &popts, cache)
+    profile_model_handle(g, blocks, segments, &popts, cache)
 }
 
 /// Candidate stage counts for a spec: the divisors of the device count

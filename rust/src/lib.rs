@@ -44,6 +44,7 @@ pub mod pblock;
 pub mod profiler;
 pub mod runtime;
 pub mod segment;
+pub mod service;
 pub mod spmd;
 pub mod trainer;
 pub mod util;

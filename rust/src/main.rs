@@ -1,22 +1,30 @@
 //! `cfp` CLI — the leader entrypoint.
 //!
 //! Subcommands:
-//!   search    run the CFP pipeline on a model and print the chosen plan
-//!   pipeline  two-level planner: inter-op stages over the intra-op DP
-//!   compare   CFP vs Alpa/Megatron/DDP on one model+platform
-//!   train     e2e training via the PJRT train-step artifact
-//!   calibrate measure calib artifacts and print the fitted compute model
-//!   space     print ParallelBlock/segment/profile-space statistics
+//!   search      run the CFP pipeline on a model and print the chosen plan
+//!   pipeline    two-level planner: inter-op stages over the intra-op DP
+//!   compare     CFP vs Alpa/Megatron/DDP on one model+platform
+//!   serve       plan-serving daemon: NDJSON over stdin and --listen TCP
+//!   bench-serve load generator against `serve` (in-process or --connect)
+//!   train       e2e training via the PJRT train-step artifact
+//!   calibrate   measure calib artifacts and print the fitted compute model
+//!   space       print ParallelBlock/segment/profile-space statistics
+//!
+//! Flag parsing for every planning subcommand goes through
+//! [`CfpOptions::from_args`] — the same builder `cfp serve` uses — so
+//! the CLI and the server cannot interpret one request differently.
 
 use cfp::cluster::Platform;
-use cfp::coordinator::{compare_frameworks, run_cfp, run_cfp_two_level, CfpOptions};
-use cfp::harness::{fmt_bytes, fmt_us, Table};
-use cfp::interop::{candidate_stage_counts, StageSpec};
-use cfp::memory::RecomputeSpec;
-use cfp::models::ModelCfg;
+use cfp::coordinator::{
+    compare_frameworks, run_cfp, run_cfp_two_level, validate_pipeline_args, CfpOptions,
+    PlannerKind,
+};
+use cfp::harness::{fmt_bytes, fmt_us, CacheEffect, Table};
 use cfp::runtime::Runtime;
+use cfp::service::{shared_writer, PlanService, ServeConfig};
 use cfp::trainer::Trainer;
 use cfp::util::cli::Args;
+use cfp::util::Json;
 
 fn main() {
     let args = Args::from_env();
@@ -25,17 +33,21 @@ fn main() {
         "search" => cmd_search(&args),
         "pipeline" => cmd_pipeline(&args),
         "compare" => cmd_compare(&args),
+        "serve" => cmd_serve(&args),
+        "bench-serve" => cmd_bench_serve(&args),
         "train" => cmd_train(&args),
         "calibrate" => cmd_calibrate(&args),
         "space" => cmd_space(&args),
         _ => {
             eprintln!(
-                "usage: cfp <search|pipeline|compare|train|calibrate|space> \
+                "usage: cfp <search|pipeline|compare|serve|bench-serve|train|calibrate|space> \
                  [--model gpt-2.6b] [--layers N] [--batch N] \
                  [--platform a100-pcie|a100-pcie-8|a100-2node|v100-nvlink] \
                  [--threads N] [--cache FILE] [--cache-max-entries N] \
                  [--stages auto|K] [--microbatches M] [--mem-cap GB] \
-                 [--recompute auto|off] [--steps N] [--lr F]"
+                 [--recompute auto|off] [--steps N] [--lr F] \
+                 [--listen ADDR] [--workers N] [--plan-cache N] \
+                 [--connect ADDR] [--requests N] [--clients N] [--distinct N]"
             );
             1
         }
@@ -43,97 +55,30 @@ fn main() {
     std::process::exit(code);
 }
 
-fn parse_model(args: &Args) -> ModelCfg {
-    let name = args.get_or("model", "gpt-2.6b");
-    let mut cfg = ModelCfg::preset(name);
-    if let Some(l) = args.get("layers") {
-        let fallback = cfg.layers;
-        cfg = cfg.with_layers(l.parse().unwrap_or(fallback));
-    }
-    let batch = args.get_usize("batch", cfg.batch);
-    cfg = cfg.with_batch(batch);
-    if args.has_flag("scaled") {
-        cfg = cfg.scaled_for_eval();
-    }
-    cfg
-}
-
-fn parse_platform(args: &Args) -> Platform {
-    Platform::by_name(args.get_or("platform", "a100-pcie")).unwrap_or_else(|| {
-        eprintln!("unknown platform, using a100-pcie");
-        Platform::a100_pcie(4)
-    })
-}
-
-fn parse_common(args: &Args, opts: &mut CfpOptions) {
-    opts.threads = args.get_usize("threads", 1);
-    opts.cache_path = args.get_path("cache");
-    opts.cache_max_entries = args.get_usize_opt("cache-max-entries");
-    opts.microbatches = args.get_usize("microbatches", 8);
-    if let Some(s) = args.get("stages") {
-        match StageSpec::parse(s) {
-            Some(spec) => opts.stages = spec,
-            None => eprintln!("unknown --stages value {s:?} (want auto|single|K), ignoring"),
-        }
-    }
-    // --mem-cap is given in GB (fractions allowed: --mem-cap 12.5)
-    if let Some(mc) = args.get("mem-cap") {
-        match mc.parse::<f64>() {
-            Ok(gb) if gb > 0.0 => opts.mem_cap = Some((gb * (1u64 << 30) as f64) as u64),
-            _ => eprintln!("invalid --mem-cap value {mc:?} (want GB, e.g. 12.5), ignoring"),
-        }
-    }
-    if let Some(r) = args.get("recompute") {
-        match RecomputeSpec::parse(r) {
-            Some(spec) => opts.recompute = spec,
-            None => eprintln!("unknown --recompute value {r:?} (want auto|off), ignoring"),
-        }
-    }
-}
-
-/// Strict validation of the `pipeline` subcommand's flags: a stage count
-/// that cannot tile the cluster, or zero microbatches, is a user error —
-/// exit with a message instead of silently normalizing.
-fn validate_pipeline_args(args: &Args, opts: &CfpOptions) -> Result<(), String> {
-    if let Some(mb) = args.get("microbatches") {
-        match mb.parse::<usize>() {
-            Ok(0) => {
-                return Err(
-                    "--microbatches must be ≥ 1 (0 microbatches cannot fill a pipeline)".into()
-                )
+/// Shared builder + CLI error convention: warnings go to stderr and the
+/// run proceeds; hard errors (unknown model/platform) exit with code 2.
+fn build_opts(args: &Args, kind: PlannerKind) -> Result<CfpOptions, i32> {
+    match CfpOptions::from_args(args, kind) {
+        Ok(built) => {
+            for w in &built.warnings {
+                eprintln!("cfp: {w} — flag ignored, default kept");
             }
-            Ok(_) => {}
-            Err(_) => return Err(format!("--microbatches {mb:?} is not a number")),
+            Ok(built.opts)
+        }
+        Err(e) => {
+            eprintln!("cfp: {e}");
+            Err(2)
         }
     }
-    if let Some(s) = args.get("stages") {
-        if let Ok(k) = s.parse::<usize>() {
-            let valid = candidate_stage_counts(StageSpec::Auto, opts.mesh);
-            if k == 0 || (k > 1 && !valid.contains(&k)) {
-                return Err(format!(
-                    "--stages {k} does not tile the {}-device cluster \
-                     (valid stage counts: {valid:?})",
-                    opts.mesh.total()
-                ));
-            }
-        }
-    }
-    if let Some(mc) = args.get("mem-cap") {
-        match mc.parse::<f64>() {
-            Ok(gb) if gb > 0.0 => {}
-            _ => return Err(format!("--mem-cap {mc:?} is not a positive GB value")),
-        }
-    }
-    Ok(())
 }
 
 fn cmd_search(args: &Args) -> i32 {
-    let model = parse_model(args);
-    let platform = parse_platform(args);
-    let mut opts = CfpOptions::new(model, platform);
-    parse_common(args, &mut opts);
+    let mut opts = match build_opts(args, PlannerKind::SingleLevel) {
+        Ok(o) => o,
+        Err(code) => return code,
+    };
     if let Ok(rt) = Runtime::open_default() {
-        if let Ok(cm) = rt.calibrate_compute(&platform) {
+        if let Ok(cm) = rt.calibrate_compute(&opts.platform) {
             println!("(compute model calibrated from PJRT measurements)");
             opts.compute = Some(cm);
         }
@@ -142,7 +87,7 @@ fn cmd_search(args: &Args) -> i32 {
     println!(
         "model {}  platform {}  gpus {}",
         opts.model.name,
-        platform.name,
+        opts.platform.name,
         opts.mesh.total()
     );
     println!(
@@ -183,14 +128,10 @@ fn cmd_search(args: &Args) -> i32 {
 }
 
 fn cmd_pipeline(args: &Args) -> i32 {
-    let model = parse_model(args);
-    let platform = parse_platform(args);
-    let mut opts = CfpOptions::new(model, platform);
-    opts.stages = StageSpec::Auto;
-    // the pipeline planner defaults to memory-aware planning against the
-    // device capacity; `--recompute off` restores the PR 2 behaviour
-    opts.recompute = RecomputeSpec::Auto;
-    parse_common(args, &mut opts);
+    let opts = match build_opts(args, PlannerKind::TwoLevel) {
+        Ok(o) => o,
+        Err(code) => return code,
+    };
     if let Err(msg) = validate_pipeline_args(args, &opts) {
         eprintln!("cfp pipeline: {msg}");
         return 2;
@@ -199,10 +140,10 @@ fn cmd_pipeline(args: &Args) -> i32 {
     println!(
         "model {}  platform {}  gpus {}  microbatches {}  cap {}  recompute {}",
         opts.model.name,
-        platform.name,
+        opts.platform.name,
         opts.mesh.total(),
         opts.microbatches,
-        fmt_bytes(opts.mem_cap.unwrap_or_else(|| platform.mem_capacity())),
+        fmt_bytes(opts.mem_cap.unwrap_or_else(|| opts.platform.mem_capacity())),
         if opts.recompute.is_auto() { "auto" } else { "off" },
     );
     let Some(pipeline) = r.pipeline.as_ref() else {
@@ -254,14 +195,20 @@ fn cmd_pipeline(args: &Args) -> i32 {
     for line in pipeline.describe() {
         println!("  {line}");
     }
+    if opts.cache_path.is_some() {
+        println!(
+            "profile cache: {} segment hit(s), {} profiled across all stage contexts",
+            r.profile_hits, r.profile_misses,
+        );
+    }
     0
 }
 
 fn cmd_compare(args: &Args) -> i32 {
-    let model = parse_model(args);
-    let platform = parse_platform(args);
-    let mut opts = CfpOptions::new(model, platform);
-    parse_common(args, &mut opts);
+    let opts = match build_opts(args, PlannerKind::SingleLevel) {
+        Ok(o) => o,
+        Err(code) => return code,
+    };
     let c = compare_frameworks(&opts);
     let mut t = Table::new(&["framework", "step time", "memory/dev", "vs CFP"]);
     for (name, p) in [
@@ -279,6 +226,172 @@ fn cmd_compare(args: &Args) -> i32 {
     }
     t.print();
     0
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let cfg = ServeConfig {
+        workers: args.get_usize("workers", 4),
+        plan_cache_entries: args.get_usize("plan-cache", 128),
+        cache_path: args.get_path("cache"),
+        cache_max_entries: args.get_usize_opt("cache-max-entries"),
+        search_threads: args.get_usize("threads", 1),
+    };
+    let svc = PlanService::new(cfg);
+    let listening = match args.get("listen") {
+        Some(addr) => match svc.listen(addr) {
+            Ok(local) => {
+                eprintln!("cfp serve: listening on {local}");
+                true
+            }
+            Err(e) => {
+                eprintln!("cfp serve: cannot listen on {addr}: {e}");
+                return 1;
+            }
+        },
+        None => false,
+    };
+    eprintln!("cfp serve: NDJSON requests on stdin, responses on stdout");
+    svc.serve_stream(std::io::stdin().lock(), shared_writer(std::io::stdout()));
+    if let Err(e) = svc.save() {
+        eprintln!("cfp serve: could not persist profile cache: {e}");
+    }
+    if listening {
+        // stdin is done but the TCP listener stays up: park as a daemon
+        eprintln!("cfp serve: stdin closed; still serving TCP (Ctrl-C to stop)");
+        loop {
+            std::thread::park();
+        }
+    }
+    0
+}
+
+/// Load generator for `cfp serve`: fires `--requests` plan requests from
+/// `--clients` concurrent clients, cycling `--distinct` request variants
+/// (so both the coalescing and the warm path get exercised). In-process
+/// by default; `--connect ADDR` drives a live daemon over TCP.
+fn cmd_bench_serve(args: &Args) -> i32 {
+    let requests = args.get_usize("requests", 32).max(1);
+    let clients = args.get_usize("clients", 4).max(1);
+    let distinct = args.get_usize("distinct", 2).max(1);
+    let model = args.get_or("model", "gpt-tiny");
+    let platform = args.get_or("platform", "a100-pcie");
+    let lines: Vec<String> = (0..requests)
+        .map(|i| {
+            format!(
+                "{{\"id\": {i}, \"type\": \"plan\", \"model\": \"{model}\", \
+                 \"layers\": {}, \"platform\": \"{platform}\"}}",
+                2 + i % distinct
+            )
+        })
+        .collect();
+    let t0 = std::time::Instant::now();
+    let (mut lat_us, stats) = match args.get("connect") {
+        Some(addr) => match bench_serve_tcp(addr, &lines, clients) {
+            Ok(out) => out,
+            Err(e) => {
+                eprintln!("cfp bench-serve: {e}");
+                return 1;
+            }
+        },
+        None => bench_serve_local(args, &lines, clients),
+    };
+    let wall = t0.elapsed().as_secs_f64();
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    println!(
+        "{requests} requests ({distinct} distinct), {clients} clients: \
+         {wall:.2}s wall, {:.1} req/s",
+        requests as f64 / wall.max(1e-9),
+    );
+    if !lat_us.is_empty() {
+        println!(
+            "latency: min {}  p50 {}  max {}",
+            fmt_us(lat_us[0]),
+            fmt_us(lat_us[lat_us.len() / 2]),
+            fmt_us(lat_us[lat_us.len() - 1]),
+        );
+    }
+    let g = |k: &str| stats.get(k).and_then(Json::as_u64).unwrap_or(0);
+    let eff = CacheEffect {
+        plan_hits: g("plan_hits"),
+        plan_misses: g("plan_misses"),
+        coalesced: g("coalesced"),
+        profile_hits: g("profile_hits"),
+        profile_misses: g("profile_misses"),
+    };
+    let mut t = Table::new(CacheEffect::headers());
+    t.row(eff.cells());
+    t.print();
+    0
+}
+
+fn bench_serve_local(args: &Args, lines: &[String], clients: usize) -> (Vec<f64>, Json) {
+    let cfg = ServeConfig {
+        workers: clients,
+        plan_cache_entries: args.get_usize("plan-cache", 128),
+        cache_path: args.get_path("cache"),
+        cache_max_entries: args.get_usize_opt("cache-max-entries"),
+        search_threads: args.get_usize("threads", 1),
+    };
+    let svc = PlanService::new(cfg);
+    let latencies = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| {
+        for c in 0..clients {
+            let svc = svc.clone();
+            let my: Vec<&String> = lines.iter().skip(c).step_by(clients).collect();
+            let latencies = &latencies;
+            s.spawn(move || {
+                for line in my {
+                    let t = std::time::Instant::now();
+                    svc.handle_line(line);
+                    latencies.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e6);
+                }
+            });
+        }
+    });
+    let stats = svc.stats().to_json();
+    (latencies.into_inner().unwrap(), stats)
+}
+
+fn bench_serve_tcp(
+    addr: &str,
+    lines: &[String],
+    clients: usize,
+) -> std::io::Result<(Vec<f64>, Json)> {
+    use std::io::{BufRead, BufReader, Write};
+    let latencies = std::sync::Mutex::new(Vec::new());
+    std::thread::scope(|s| -> std::io::Result<()> {
+        let mut joins = Vec::new();
+        for c in 0..clients {
+            let my: Vec<&String> = lines.iter().skip(c).step_by(clients).collect();
+            let latencies = &latencies;
+            joins.push(s.spawn(move || -> std::io::Result<()> {
+                let mut stream = std::net::TcpStream::connect(addr)?;
+                let mut reader = BufReader::new(stream.try_clone()?);
+                for line in my {
+                    let t = std::time::Instant::now();
+                    writeln!(stream, "{line}")?;
+                    let mut resp = String::new();
+                    reader.read_line(&mut resp)?;
+                    latencies.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e6);
+                }
+                Ok(())
+            }));
+        }
+        for j in joins {
+            j.join().expect("client thread")?;
+        }
+        Ok(())
+    })?;
+    let mut stream = std::net::TcpStream::connect(addr)?;
+    let mut reader = BufReader::new(stream.try_clone()?);
+    writeln!(stream, "{{\"type\": \"stats\"}}")?;
+    let mut resp = String::new();
+    reader.read_line(&mut resp)?;
+    let stats = Json::parse(resp.trim())
+        .ok()
+        .and_then(|j| j.get("result").cloned())
+        .unwrap_or(Json::Null);
+    Ok((latencies.into_inner().unwrap(), stats))
 }
 
 fn cmd_train(args: &Args) -> i32 {
@@ -317,7 +430,11 @@ fn cmd_train(args: &Args) -> i32 {
 }
 
 fn cmd_calibrate(args: &Args) -> i32 {
-    let platform = parse_platform(args);
+    let pname = args.get_or("platform", "a100-pcie");
+    let Some(platform) = Platform::by_name(pname) else {
+        eprintln!("cfp: unknown platform {pname:?}");
+        return 2;
+    };
     let rt = match Runtime::open_default() {
         Ok(rt) => rt,
         Err(e) => {
@@ -341,10 +458,10 @@ fn cmd_calibrate(args: &Args) -> i32 {
 }
 
 fn cmd_space(args: &Args) -> i32 {
-    let model = parse_model(args);
-    let platform = parse_platform(args);
-    let mut opts = CfpOptions::new(model, platform);
-    parse_common(args, &mut opts);
+    let opts = match build_opts(args, PlannerKind::SingleLevel) {
+        Ok(o) => o,
+        Err(code) => return code,
+    };
     let r = run_cfp(&opts);
     let mut t = Table::new(&["segment", "fingerprint", "blocks", "configs", "instances"]);
     for u in &r.segments.unique {

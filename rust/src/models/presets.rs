@@ -23,9 +23,16 @@ impl ModelCfg {
     }
 
     /// Paper-scale presets. Analysis cost does not depend on tensor sizes,
-    /// so these use the real dimensions.
+    /// so these use the real dimensions. Panics on unknown names — the
+    /// serving path uses [`ModelCfg::try_preset`] instead.
     pub fn preset(name: &str) -> ModelCfg {
-        match name {
+        ModelCfg::try_preset(name).unwrap_or_else(|| panic!("unknown preset {name:?}"))
+    }
+
+    /// Non-panicking [`ModelCfg::preset`]: `None` for unknown names, so a
+    /// bad request gets an error response instead of crashing a server.
+    pub fn try_preset(name: &str) -> Option<ModelCfg> {
+        let cfg = match name {
             "bert-large" => ModelCfg {
                 arch: Arch::Bert,
                 name: name.into(),
@@ -118,8 +125,9 @@ impl ModelCfg {
                 experts: 4,
                 dropout: true,
             },
-            other => panic!("unknown preset {other:?}"),
-        }
+            _ => return None,
+        };
+        Some(cfg)
     }
 
     pub fn with_layers(mut self, layers: usize) -> Self {

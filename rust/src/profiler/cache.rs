@@ -49,7 +49,11 @@
 //!   error, and internally inconsistent entries are rejected at lookup.
 
 use std::collections::BTreeMap;
+use std::io::Write as _;
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::spmd::ShardState;
 use crate::util::Json;
@@ -247,10 +251,15 @@ impl ProfileCache {
     /// Persist to the backing file if bound and modified. Atomic against
     /// readers: writes a sibling tmp file, then renames over the target.
     /// Before writing, entries another process added since
-    /// [`ProfileCache::open`] are folded back in (ours win on conflict) —
-    /// a best-effort merge, not a lock: two savers racing between the
-    /// re-read and the rename can still drop the loser's entries, which
-    /// costs re-profiling on a later run but never a wrong plan.
+    /// [`ProfileCache::open`] are folded back in (ours win on conflict).
+    ///
+    /// The read-merge-rename sequence runs under a sibling `.lock` file
+    /// (atomic `O_CREAT|O_EXCL` acquisition, stale-lock takeover — see
+    /// `acquire_save_lock`) so two racing savers serialize instead of
+    /// one dropping the other's entries. If the lock cannot be acquired
+    /// within `LOCK_WAIT` the saver proceeds locklessly — the pre-lock
+    /// best-effort merge, which can drop a racing saver's entries but
+    /// costs re-profiling on a later run, never a wrong plan.
     pub fn save(&mut self) -> std::io::Result<()> {
         let Some(path) = self.path.clone() else {
             return Ok(());
@@ -258,6 +267,7 @@ impl ProfileCache {
         if !self.dirty {
             return Ok(());
         }
+        let _lock = acquire_save_lock(&path, LOCK_STALE, LOCK_WAIT);
         if let Some(disk) = std::fs::read_to_string(&path)
             .ok()
             .and_then(|text| Json::parse(&text).ok())
@@ -385,6 +395,286 @@ impl ProfileCache {
             }
         }
         Some(cache)
+    }
+}
+
+// --------------------------------------------------------------- save lock
+
+/// A saver holding this lock is mid `read-merge-rename`, which is
+/// milliseconds of work on one JSON file — a lock untouched for this
+/// long belongs to a crashed process and is taken over.
+const LOCK_STALE: Duration = Duration::from_secs(10);
+
+/// How long a saver waits for the lock before falling back to the
+/// lockless best-effort merge.
+const LOCK_WAIT: Duration = Duration::from_millis(500);
+
+/// Per-acquisition sequence number, making lock tokens unique within a
+/// process (the pid disambiguates across processes).
+static LOCK_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// RAII guard for the sibling `.lock` file; releases on drop — but only
+/// if the lock still carries this acquisition's token. A saver paused
+/// past the stale window may have been taken over; removing blindly
+/// would delete the new holder's lock.
+struct SaveLock {
+    path: PathBuf,
+    token: String,
+}
+
+impl Drop for SaveLock {
+    fn drop(&mut self) {
+        let ours = std::fs::read_to_string(&self.path)
+            .map_or(false, |body| body.trim() == self.token);
+        if ours {
+            let _ = std::fs::remove_file(&self.path);
+        }
+    }
+}
+
+/// `<cache file>.lock` — a sibling, so it lives on the same filesystem
+/// (rename atomicity) and is found by every process sharing the cache.
+fn save_lock_path(target: &Path) -> PathBuf {
+    let mut name = target.file_name().unwrap_or_default().to_os_string();
+    name.push(".lock");
+    target.with_file_name(name)
+}
+
+/// Acquire the save lock for `target`: atomic `O_CREAT|O_EXCL` creation
+/// of the sibling `.lock` file, retried until `wait` elapses. Each
+/// acquisition writes a unique token into the file and then re-reads it:
+/// ownership is confirmed only if the token survived, so a racing
+/// stale-takeover that swapped the file out from under us is detected
+/// as a lost race, not a double acquisition. A lock whose mtime is
+/// older than `stale` is presumed abandoned by a crashed saver and
+/// claimed by renaming it aside (atomic: exactly one racer wins the
+/// rename; losers just retry). Returns `None` on timeout or when the
+/// directory is unwritable — locking is best-effort, the caller falls
+/// back to the lockless merge.
+fn acquire_save_lock(target: &Path, stale: Duration, wait: Duration) -> Option<SaveLock> {
+    let lock = save_lock_path(target);
+    if let Some(dir) = target.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir).ok()?;
+        }
+    }
+    let deadline = Instant::now() + wait;
+    loop {
+        let token = format!("{}.{}", std::process::id(), LOCK_SEQ.fetch_add(1, Ordering::Relaxed));
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&lock) {
+            Ok(mut f) => {
+                let _ = writeln!(f, "{token}");
+                drop(f);
+                // confirm ownership: between create_new and here another
+                // saver could have judged our file stale (clock skew) and
+                // swapped it; whoever's token is in the file owns it
+                let confirmed = std::fs::read_to_string(&lock)
+                    .map_or(false, |body| body.trim() == token);
+                if confirmed {
+                    return Some(SaveLock { path: lock, token });
+                }
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                let abandoned = std::fs::metadata(&lock)
+                    .and_then(|md| md.modified())
+                    .ok()
+                    .and_then(|m| m.elapsed().ok())
+                    .map_or(false, |age| age > stale);
+                if abandoned {
+                    // atomic claim of the stale file: rename to a name
+                    // unique to this attempt, then delete the carcass
+                    let aside = lock.with_extension(format!("stale.{token}"));
+                    if std::fs::rename(&lock, &aside).is_ok() {
+                        let _ = std::fs::remove_file(&aside);
+                    }
+                    continue;
+                }
+            }
+            Err(_) => return None,
+        }
+        if Instant::now() >= deadline {
+            return None;
+        }
+        std::thread::sleep(Duration::from_millis(5));
+    }
+}
+
+// ------------------------------------------------------- shared-handle view
+
+/// Process-wide shareable [`ProfileCache`]: the same cache behind an
+/// `Arc<Mutex<..>>`, so concurrent planning runs (the `cfp serve` worker
+/// pool) reuse each other's freshly profiled segments instead of
+/// re-profiling. Every access is a short lock-hold (one get or one put);
+/// profiling itself runs outside the lock, so distinct requests profile
+/// concurrently and publish results as they finish. Profiled values are
+/// deterministic, so concurrent writers of the same key store identical
+/// entries — sharing can never change a planned output.
+#[derive(Clone, Debug, Default)]
+pub struct SharedProfileCache {
+    inner: Arc<Mutex<ProfileCache>>,
+}
+
+impl SharedProfileCache {
+    /// Shared cache with no backing file.
+    pub fn in_memory() -> SharedProfileCache {
+        SharedProfileCache::default()
+    }
+
+    /// Shared cache bound to (and pre-populated from) `path` — see
+    /// [`ProfileCache::open`].
+    pub fn open(path: impl Into<PathBuf>) -> SharedProfileCache {
+        SharedProfileCache::from_cache(ProfileCache::open(path))
+    }
+
+    /// Wrap an already-open cache.
+    pub fn from_cache(cache: ProfileCache) -> SharedProfileCache {
+        SharedProfileCache { inner: Arc::new(Mutex::new(cache)) }
+    }
+
+    /// Run `f` under the cache lock. Poisoning is ignored deliberately:
+    /// every individual cache operation is atomic (one map get/insert),
+    /// so a panic elsewhere while the lock was held cannot leave the map
+    /// half-updated.
+    pub fn with<R>(&self, f: impl FnOnce(&mut ProfileCache) -> R) -> R {
+        let mut guard = self.inner.lock().unwrap_or_else(|p| p.into_inner());
+        f(&mut *guard)
+    }
+
+    /// Number of segment + reshard entries combined.
+    pub fn len(&self) -> usize {
+        self.with(|c| c.num_segments() + c.num_reshards())
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.with(|c| c.is_empty())
+    }
+
+    /// A profiling-time [`CacheHandle`] view of this cache.
+    pub fn handle(&self) -> CacheHandle<'_> {
+        CacheHandle::Shared(self)
+    }
+
+    /// Persist through [`ProfileCache::save`] (lock-file protocol incl.)
+    /// — WITHOUT holding the in-process mutex across the file work. The
+    /// cache is snapshotted under the lock; the snapshot performs the
+    /// (possibly slow: lock-file wait + whole-file merge) save outside
+    /// it, so concurrent searches' lookups never stall behind disk I/O.
+    /// The live cache is marked clean only if nothing changed while the
+    /// snapshot was being written; disk entries merged by the snapshot
+    /// are not folded back into the live cache — the cost is a possible
+    /// re-profile on a later miss, never a wrong plan.
+    pub fn save(&self) -> std::io::Result<()> {
+        let snapshot = self.with(|c| {
+            // nothing to do for clean or unbacked caches — and no clone
+            (c.dirty && c.path.is_some()).then(|| (c.clone(), c.clock))
+        });
+        let Some((mut snap, clock_at_snapshot)) = snapshot else {
+            return Ok(());
+        };
+        snap.save()?;
+        self.with(|c| {
+            if c.clock == clock_at_snapshot {
+                c.dirty = false;
+            }
+        });
+        Ok(())
+    }
+
+    pub fn set_max_entries(&self, n: Option<usize>) {
+        self.with(|c| c.set_max_entries(n));
+    }
+
+    pub fn num_segments(&self) -> usize {
+        self.with(|c| c.num_segments())
+    }
+
+    pub fn num_reshards(&self) -> usize {
+        self.with(|c| c.num_reshards())
+    }
+}
+
+/// How a profiling run sees its (optional) cache: not at all, exclusively
+/// (`&mut`, the one-shot CLI path), or shared process-wide behind the
+/// [`SharedProfileCache`] lock (the serving path). Getters return owned
+/// clones so both ownership shapes expose one API; `None` never
+/// allocates.
+pub enum CacheHandle<'a> {
+    None,
+    Own(&'a mut ProfileCache),
+    Shared(&'a SharedProfileCache),
+}
+
+impl<'a> CacheHandle<'a> {
+    pub fn from_option(opt: Option<&'a mut ProfileCache>) -> CacheHandle<'a> {
+        match opt {
+            Some(c) => CacheHandle::Own(c),
+            None => CacheHandle::None,
+        }
+    }
+
+    /// Reborrow (the `Option::as_deref_mut` idiom) so the handle can be
+    /// passed down repeatedly.
+    pub fn reborrow(&mut self) -> CacheHandle<'_> {
+        match self {
+            CacheHandle::None => CacheHandle::None,
+            CacheHandle::Own(c) => CacheHandle::Own(&mut **c),
+            CacheHandle::Shared(s) => CacheHandle::Shared(*s),
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, CacheHandle::None)
+    }
+
+    pub fn get_segment(&mut self, key: &CacheKey) -> Option<SegmentProfile> {
+        match self {
+            CacheHandle::None => None,
+            CacheHandle::Own(c) => c.get_segment(key).cloned(),
+            CacheHandle::Shared(s) => s.with(|c| c.get_segment(key).cloned()),
+        }
+    }
+
+    /// Store a segment profile (no-op without a cache; the clone happens
+    /// only when there is one).
+    pub fn put_segment(&mut self, key: CacheKey, profile: &SegmentProfile) {
+        match self {
+            CacheHandle::None => {}
+            CacheHandle::Own(c) => c.put_segment(key, profile.clone()),
+            CacheHandle::Shared(s) => s.with(|c| c.put_segment(key, profile.clone())),
+        }
+    }
+
+    pub fn get_reshard(
+        &mut self,
+        from_fp: &str,
+        to_fp: &str,
+        platform: &str,
+        parts: usize,
+    ) -> Option<ReshardTable> {
+        match self {
+            CacheHandle::None => None,
+            CacheHandle::Own(c) => c.get_reshard(from_fp, to_fp, platform, parts).cloned(),
+            CacheHandle::Shared(s) => {
+                s.with(|c| c.get_reshard(from_fp, to_fp, platform, parts).cloned())
+            }
+        }
+    }
+
+    pub fn put_reshard(
+        &mut self,
+        from_fp: &str,
+        to_fp: &str,
+        platform: &str,
+        parts: usize,
+        table: &ReshardTable,
+    ) {
+        match self {
+            CacheHandle::None => {}
+            CacheHandle::Own(c) => c.put_reshard(from_fp, to_fp, platform, parts, table.clone()),
+            CacheHandle::Shared(s) => {
+                s.with(|c| c.put_reshard(from_fp, to_fp, platform, parts, table.clone()))
+            }
+        }
     }
 }
 
@@ -780,6 +1070,116 @@ mod tests {
         assert!(reloaded.get_segment(&key(2)).is_some(), "newest survives");
         assert!(reloaded.get_segment(&key(1)).is_none(), "LRU entry evicted");
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn save_lock_acquire_release_and_timeout() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-lock-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("profiles.json");
+        let lock_file = save_lock_path(&target);
+
+        let held = acquire_save_lock(&target, LOCK_STALE, LOCK_WAIT).expect("uncontended");
+        assert!(lock_file.exists(), "lock file created");
+        // a second saver times out while the lock is fresh and held
+        let t0 = Instant::now();
+        let contended =
+            acquire_save_lock(&target, Duration::from_secs(10), Duration::from_millis(40));
+        assert!(contended.is_none(), "fresh lock must not be stolen");
+        assert!(t0.elapsed() >= Duration::from_millis(40), "waited for the deadline");
+        drop(held);
+        assert!(!lock_file.exists(), "lock released on drop");
+        // release makes reacquisition immediate
+        assert!(acquire_save_lock(&target, LOCK_STALE, LOCK_WAIT).is_some());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn stale_save_lock_is_taken_over() {
+        let dir = std::env::temp_dir().join(format!("cfp-cache-stale-lock-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("profiles.json");
+        // a crashed saver left its lock behind
+        std::fs::write(save_lock_path(&target), "42\n").unwrap();
+        std::thread::sleep(Duration::from_millis(60));
+        let taken =
+            acquire_save_lock(&target, Duration::from_millis(20), Duration::from_millis(200));
+        assert!(taken.is_some(), "a stale lock must be taken over");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn racing_savers_drop_no_entries() {
+        // ROADMAP open item "concurrent cache savers", closed by the lock
+        // protocol: N savers race open→put→save on one file; the locked
+        // read-merge-rename must keep every saver's entry.
+        let dir = std::env::temp_dir().join(format!("cfp-cache-race-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("profiles.json");
+        const N: usize = 8;
+        std::thread::scope(|s| {
+            for i in 0..N {
+                let path = path.clone();
+                s.spawn(move || {
+                    let mut c = ProfileCache::open(&path);
+                    let key = CacheKey {
+                        fingerprint: format!("fp{i}"),
+                        platform: "sig".into(),
+                        parts: 2,
+                    };
+                    c.put_segment(key, sample_profile());
+                    c.save().unwrap();
+                });
+            }
+        });
+        let merged = ProfileCache::open(&path);
+        assert_eq!(merged.num_segments(), N, "every racing saver's entry survives");
+        assert!(!save_lock_path(&path).exists(), "no lock left behind");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn shared_cache_serves_concurrent_handles() {
+        let shared = SharedProfileCache::in_memory();
+        std::thread::scope(|s| {
+            for i in 0..4 {
+                let shared = shared.clone();
+                s.spawn(move || {
+                    let mut h = shared.handle();
+                    let key = CacheKey {
+                        fingerprint: format!("fp{i}"),
+                        platform: "sig".into(),
+                        parts: 2,
+                    };
+                    assert!(h.get_segment(&key).is_none());
+                    h.put_segment(key.clone(), &sample_profile());
+                    assert_eq!(h.get_segment(&key), Some(sample_profile()));
+                    h.put_reshard("a", &format!("b{i}"), "sig", 2, &sample_table());
+                });
+            }
+        });
+        assert_eq!(shared.num_segments(), 4);
+        assert_eq!(shared.num_reshards(), 4);
+        // a late handle sees every thread's entries (the serve-path reuse)
+        let mut h = shared.handle();
+        for i in 0..4 {
+            let key = CacheKey {
+                fingerprint: format!("fp{i}"),
+                platform: "sig".into(),
+                parts: 2,
+            };
+            assert!(h.get_segment(&key).is_some(), "fp{i} shared across handles");
+        }
+    }
+
+    #[test]
+    fn cache_handle_none_is_inert() {
+        let mut h = CacheHandle::from_option(None);
+        assert!(h.is_none());
+        let key = CacheKey { fingerprint: "fp".into(), platform: "sig".into(), parts: 2 };
+        assert!(h.get_segment(&key).is_none());
+        h.put_segment(key.clone(), &sample_profile());
+        assert!(h.reborrow().get_segment(&key).is_none());
     }
 
     #[test]

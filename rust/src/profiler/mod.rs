@@ -15,7 +15,7 @@ pub mod config;
 pub mod db;
 pub mod run;
 
-pub use cache::{CacheKey, ProfileCache};
+pub use cache::{CacheHandle, CacheKey, ProfileCache, SharedProfileCache};
 pub use config::{enumerate_configs, SegmentConfig};
 pub use db::{ProfileDb, ProfilerStats, ReshardTable, SegmentProfile};
-pub use run::{profile_model, profile_model_cached, ProfileOptions};
+pub use run::{profile_model, profile_model_cached, profile_model_handle, ProfileOptions};

@@ -12,7 +12,7 @@ use crate::segment::SegmentSet;
 use crate::spmd::{passes, CollKind, Mesh, ShardState};
 use crate::util::ThreadPool;
 
-use super::cache::{CacheKey, ProfileCache};
+use super::cache::{CacheHandle, CacheKey, ProfileCache};
 use super::config::{enumerate_configs, SegmentConfig};
 use super::db::{ProfileDb, ProfilerStats, ReshardTable, SegmentProfile};
 
@@ -191,7 +191,22 @@ pub fn profile_model_cached(
     bs: &BlockSet,
     ss: &SegmentSet,
     opts: &ProfileOptions,
-    mut cache: Option<&mut ProfileCache>,
+    cache: Option<&mut ProfileCache>,
+) -> ProfileDb {
+    profile_model_handle(g, bs, ss, opts, CacheHandle::from_option(cache))
+}
+
+/// [`profile_model_cached`] over any cache ownership shape — exclusive,
+/// absent, or process-wide shared ([`CacheHandle`]). The shared shape is
+/// what makes the profiler re-entrant: every lookup/insert is one short
+/// lock-hold, profiling runs outside the lock, and concurrent runs for
+/// overlapping segments reuse each other's freshly profiled entries.
+pub fn profile_model_handle(
+    g: &Graph,
+    bs: &BlockSet,
+    ss: &SegmentSet,
+    opts: &ProfileOptions,
+    mut cache: CacheHandle<'_>,
 ) -> ProfileDb {
     let wall = Instant::now();
     let op_to_inst = ss.op_to_instance(g);
@@ -220,13 +235,11 @@ pub fn profile_model_cached(
         let key =
             CacheKey { fingerprint: u.fingerprint.clone(), platform: sig.clone(), parts };
         let hit = cache
-            .as_deref_mut()
-            .and_then(|c| c.get_segment(&key))
+            .get_segment(&key)
             // defensive: an entry whose config space disagrees with this
             // build (foreign or hand-edited file) is a miss, never a
             // wrong answer
-            .filter(|p| p.configs == configs)
-            .cloned();
+            .filter(|p| p.configs == configs);
         if hit.is_some() {
             stats.cache_hits += 1;
         } else {
@@ -352,16 +365,14 @@ pub fn profile_model_cached(
             prof.boundary_in.push(m.boundary_in);
             prof.boundary_out.push(m.boundary_out);
         }
-        if let Some(c) = cache.as_deref_mut() {
-            c.put_segment(
-                CacheKey {
-                    fingerprint: ss.unique[u].fingerprint.clone(),
-                    platform: sig.clone(),
-                    parts,
-                },
-                prof.clone(),
-            );
-        }
+        cache.put_segment(
+            CacheKey {
+                fingerprint: ss.unique[u].fingerprint.clone(),
+                platform: sig.clone(),
+                parts,
+            },
+            &prof,
+        );
         db.segments.push(prof);
     }
 
@@ -381,9 +392,7 @@ pub fn profile_model_cached(
         // the crossing tensor's size is not pinned down by the fingerprint
         // pair alone, so it joins the reshard cache key
         let rsig = format!("{sig};bytes{bytes}");
-        if let Some(t) =
-            cache.as_deref_mut().and_then(|c| c.get_reshard(fp_a, fp_b, &rsig, parts))
-        {
+        if let Some(t) = cache.get_reshard(fp_a, fp_b, &rsig, parts) {
             let rows_ok = t.t_r_us.len() == pa.configs.len()
                 && t.sym_vol.len() == pa.configs.len()
                 && t.t_r_us.iter().all(|r| r.len() == pb.configs.len())
@@ -400,7 +409,7 @@ pub fn profile_model_cached(
                         }
                     }
                 }
-                db.reshard.insert((a, b), t.clone());
+                db.reshard.insert((a, b), t);
                 continue;
             }
         }
@@ -424,9 +433,7 @@ pub fn profile_model_cached(
             }
         }
         let fresh = ReshardTable { t_r_us: table, sym_vol: sym, programs: priced.len() };
-        if let Some(c) = cache.as_deref_mut() {
-            c.put_reshard(fp_a, fp_b, &rsig, parts, fresh.clone());
-        }
+        cache.put_reshard(fp_a, fp_b, &rsig, parts, &fresh);
         db.reshard.insert((a, b), fresh);
     }
 

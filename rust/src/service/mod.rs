@@ -1,0 +1,501 @@
+//! Plan-serving subsystem: the long-running `cfp serve` daemon.
+//!
+//! CFP's economics make plan search cheap enough to run routinely
+//! (paper §5.5) — this module makes it cheap enough to *serve*: a
+//! process that answers planning requests over NDJSON (stdin/stdout and
+//! a `--listen` TCP socket, [`PlanService::listen`]) with three layers
+//! of reuse stacked on the planner:
+//!
+//! ```text
+//!   line ──▶ parse ──▶ canonicalize ──▶ plan cache ──▶ single-flight ──▶ worker
+//!              │             │            (LRU)        (coalesce N      (run_cfp*
+//!              ▼             ▼               │          identical        via shared
+//!          structured   CfpOptions::         │          in-flight        ProfileDb)
+//!          error        from_args            ▼          requests)           │
+//!          response     (same builder     hit: reply        │               ▼
+//!                        as the CLI)      immediately       ▼            respond
+//!                                                      followers wait,
+//!                                                      leader searches
+//! ```
+//!
+//! * **Plan cache** — completed payloads keyed by
+//!   [`request::canonical_key`], LRU-bounded (`--plan-cache`). A hit
+//!   answers without planning at all.
+//! * **Single-flight coalescing** — N identical in-flight requests
+//!   trigger exactly one search; followers block on the leader's flight
+//!   and receive the same `Arc`'d, bit-identical payload.
+//! * **Shared profile cache** — every search profiles through one
+//!   process-wide [`SharedProfileCache`], so concurrent plans for
+//!   overlapping segments reuse each other's profiles instead of
+//!   re-profiling (and persist across restarts with `--cache`).
+//!
+//! Determinism contract: for any request, the served payload is
+//! byte-identical to what the one-shot CLI path produces for the same
+//! options — guarded by `rust/tests/integration_service.rs`. Counters
+//! (`requests`, `plan_hits`, `plan_misses`, `coalesced`, `searches`,
+//! `profile_hits`, `profile_misses`, `errors`) surface in every
+//! response's `cache` tag and in the `stats` request type.
+
+pub mod request;
+mod server;
+
+pub use request::{
+    canonical_key, parse_request, pipeline_payload, plan_payload, PlanRequest, RequestKind,
+};
+pub use server::{shared_writer, SharedWriter};
+
+use std::collections::{BTreeMap, HashMap};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+
+use crate::coordinator::{
+    run_cfp_shared, run_cfp_two_level_shared, validate_pipeline_args, CfpOptions,
+};
+use crate::profiler::SharedProfileCache;
+use crate::util::{Json, ThreadPool};
+
+/// `cfp serve` configuration (all CLI flags of the subcommand).
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// bounded worker pool executing searches (`--workers`)
+    pub workers: usize,
+    /// LRU bound on cached plan payloads; 0 disables (`--plan-cache`)
+    pub plan_cache_entries: usize,
+    /// persistent profile-cache file shared by every worker (`--cache`)
+    pub cache_path: Option<std::path::PathBuf>,
+    /// LRU bound on the profile cache (`--cache-max-entries`)
+    pub cache_max_entries: Option<usize>,
+    /// profiling threads per search (`--threads`) — a service-level
+    /// knob, deliberately not requestable per request
+    pub search_threads: usize,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 4,
+            plan_cache_entries: 128,
+            cache_path: None,
+            cache_max_entries: None,
+            search_threads: 1,
+        }
+    }
+}
+
+/// Service counters (the `stats` request type and the harness's
+/// cache-effectiveness columns).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct ServiceStats {
+    pub requests: u64,
+    /// answered from the plan cache without planning
+    pub plan_hits: u64,
+    /// requests that claimed a flight (each runs one search)
+    pub plan_misses: u64,
+    /// requests that joined an existing in-flight search
+    pub coalesced: u64,
+    /// searches actually executed (== plan_misses; both kept so the
+    /// single-flight invariant is externally checkable)
+    pub searches: u64,
+    /// structured error responses (parse, validation, planner panic)
+    pub errors: u64,
+    /// unique segments served from the shared profile cache, summed
+    /// over every executed search
+    pub profile_hits: u64,
+    /// unique segments actually profiled, summed over every search
+    pub profile_misses: u64,
+}
+
+impl ServiceStats {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("requests", Json::num(self.requests as f64)),
+            ("plan_hits", Json::num(self.plan_hits as f64)),
+            ("plan_misses", Json::num(self.plan_misses as f64)),
+            ("coalesced", Json::num(self.coalesced as f64)),
+            ("searches", Json::num(self.searches as f64)),
+            ("errors", Json::num(self.errors as f64)),
+            ("profile_hits", Json::num(self.profile_hits as f64)),
+            ("profile_misses", Json::num(self.profile_misses as f64)),
+        ])
+    }
+}
+
+/// A search's published outcome: the payload, or an error message (a
+/// planner panic turned structured — never cached).
+type Payload = Result<Arc<Json>, String>;
+
+/// One in-flight search. The leader computes and publishes into `slot`;
+/// followers wait on `done`.
+struct Flight {
+    slot: Mutex<Option<Payload>>,
+    done: Condvar,
+}
+
+struct PlanState {
+    /// completed payloads by canonical key, with LRU stamps
+    plans: BTreeMap<String, (Arc<Json>, u64)>,
+    clock: u64,
+    /// searches currently running, by canonical key
+    inflight: HashMap<String, Arc<Flight>>,
+    stats: ServiceStats,
+}
+
+struct ServiceInner {
+    cfg: ServeConfig,
+    profiles: SharedProfileCache,
+    state: Mutex<PlanState>,
+    pool: ThreadPool,
+    /// test instrumentation — see [`PlanService::set_search_hook`]
+    hook: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
+}
+
+/// The plan-serving daemon. Cheap to clone (one `Arc`); every clone
+/// shares the caches, counters, and worker pool.
+#[derive(Clone)]
+pub struct PlanService {
+    inner: Arc<ServiceInner>,
+}
+
+impl PlanService {
+    pub fn new(cfg: ServeConfig) -> PlanService {
+        let profiles = match &cfg.cache_path {
+            Some(p) => SharedProfileCache::open(p),
+            None => SharedProfileCache::in_memory(),
+        };
+        profiles.set_max_entries(cfg.cache_max_entries);
+        let pool = ThreadPool::new(cfg.workers.max(1));
+        PlanService {
+            inner: Arc::new(ServiceInner {
+                cfg,
+                profiles,
+                state: Mutex::new(PlanState {
+                    plans: BTreeMap::new(),
+                    clock: 0,
+                    inflight: HashMap::new(),
+                    stats: ServiceStats::default(),
+                }),
+                pool,
+                hook: Mutex::new(None),
+            }),
+        }
+    }
+
+    /// Handle one NDJSON request line synchronously and return the
+    /// response line (no trailing newline). Never panics: parse errors,
+    /// invalid options, and planner panics all become structured error
+    /// responses.
+    pub fn handle_line(&self, line: &str) -> String {
+        self.lock_state().stats.requests += 1;
+        let req = match request::parse_request(line) {
+            Ok(r) => r,
+            Err(e) => {
+                // best-effort id echo so clients matching responses by id
+                // can attribute the failure (line must still be JSON)
+                let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
+                return self.error_response(id.as_ref(), None, &e);
+            }
+        };
+        if req.kind == RequestKind::Stats {
+            let stats = self.stats();
+            return envelope(req.id.as_ref(), RequestKind::Stats, None, &stats.to_json());
+        }
+        self.handle_plan(req)
+    }
+
+    fn handle_plan(&self, req: PlanRequest) -> String {
+        let built = match CfpOptions::from_args(&req.args, req.kind.planner()) {
+            Ok(b) => b,
+            Err(e) => return self.error_response(req.id.as_ref(), None, &e),
+        };
+        if !built.warnings.is_empty() {
+            // the CLI warns, falls back to defaults, and proceeds; a
+            // server must never silently reinterpret a request, so the
+            // same findings reject it outright
+            let msg = format!("invalid request: {}", built.warnings.join("; "));
+            return self.error_response(req.id.as_ref(), None, &msg);
+        }
+        if req.kind == RequestKind::Pipeline {
+            if let Err(e) = validate_pipeline_args(&req.args, &built.opts) {
+                return self.error_response(req.id.as_ref(), None, &e);
+            }
+        }
+        let mut opts = built.opts;
+        // searches run on the service's thread budget and through its
+        // shared profile cache; per-request cache flags were rejected at
+        // parse time (not in the request schema)
+        opts.threads = self.inner.cfg.search_threads;
+        opts.cache_path = None;
+        opts.cache_max_entries = None;
+        let key = request::canonical_key(req.kind, &opts);
+        let (payload, tag) = self.get_or_compute(&key, req.kind, &opts);
+        match payload {
+            Ok(p) => envelope(req.id.as_ref(), req.kind, Some(tag), &p),
+            Err(e) => self.error_response(req.id.as_ref(), Some(tag), &e),
+        }
+    }
+
+    /// The plan-cache + single-flight core. Exactly one caller per key
+    /// computes at a time; the rest are answered from the cache or from
+    /// the in-flight leader's published payload.
+    fn get_or_compute(
+        &self,
+        key: &str,
+        kind: RequestKind,
+        opts: &CfpOptions,
+    ) -> (Payload, &'static str) {
+        enum Role {
+            Hit(Arc<Json>),
+            Lead(Arc<Flight>),
+            Wait(Arc<Flight>),
+        }
+        let role = {
+            let mut guard = self.lock_state();
+            let st = &mut *guard;
+            st.clock += 1;
+            let clock = st.clock;
+            if let Some(entry) = st.plans.get_mut(key) {
+                entry.1 = clock;
+                st.stats.plan_hits += 1;
+                Role::Hit(entry.0.clone())
+            } else if let Some(flight) = st.inflight.get(key) {
+                st.stats.coalesced += 1;
+                Role::Wait(flight.clone())
+            } else {
+                st.stats.plan_misses += 1;
+                let flight = Arc::new(Flight { slot: Mutex::new(None), done: Condvar::new() });
+                st.inflight.insert(key.to_string(), flight.clone());
+                Role::Lead(flight)
+            }
+        };
+        match role {
+            Role::Hit(p) => (Ok(p), "hit"),
+            Role::Wait(flight) => {
+                let mut slot = flight.slot.lock().unwrap_or_else(|e| e.into_inner());
+                while slot.is_none() {
+                    slot = flight.done.wait(slot).unwrap_or_else(|e| e.into_inner());
+                }
+                (slot.clone().expect("flight published"), "coalesced")
+            }
+            Role::Lead(flight) => {
+                let hook = self.inner.hook.lock().unwrap_or_else(|e| e.into_inner()).clone();
+                if let Some(h) = hook {
+                    h();
+                }
+                self.lock_state().stats.searches += 1;
+                let outcome = catch_unwind(AssertUnwindSafe(|| self.run_planner(kind, opts)));
+                let payload: Payload = match outcome {
+                    Ok(json) => Ok(Arc::new(json)),
+                    Err(p) => Err(format!("planner panicked: {}", panic_msg(&p))),
+                };
+                {
+                    let mut slot = flight.slot.lock().unwrap_or_else(|e| e.into_inner());
+                    *slot = Some(payload.clone());
+                    flight.done.notify_all();
+                }
+                {
+                    let mut guard = self.lock_state();
+                    let st = &mut *guard;
+                    st.inflight.remove(key);
+                    if let Ok(p) = &payload {
+                        if self.inner.cfg.plan_cache_entries > 0 {
+                            st.clock += 1;
+                            st.plans.insert(key.to_string(), (p.clone(), st.clock));
+                            while st.plans.len() > self.inner.cfg.plan_cache_entries {
+                                let lru = st
+                                    .plans
+                                    .iter()
+                                    .min_by_key(|(_, v)| v.1)
+                                    .map(|(k, _)| k.clone());
+                                let Some(k) = lru else { break };
+                                st.plans.remove(&k);
+                            }
+                        }
+                    }
+                }
+                // durability for a long-running daemon: persist freshly
+                // profiled segments after every search (no-op without a
+                // backing file; failure is logged, never fatal)
+                if payload.is_ok() {
+                    if let Err(e) = self.inner.profiles.save() {
+                        eprintln!("cfp serve: could not persist profile cache: {e}");
+                    }
+                }
+                (payload, "miss")
+            }
+        }
+    }
+
+    fn run_planner(&self, kind: RequestKind, opts: &CfpOptions) -> Json {
+        match kind {
+            RequestKind::Plan => {
+                let r = run_cfp_shared(opts, &self.inner.profiles);
+                self.absorb_profile_stats(r.db.stats.cache_hits, r.db.stats.cache_misses);
+                request::plan_payload(&r)
+            }
+            RequestKind::Pipeline => {
+                let r = run_cfp_two_level_shared(opts, &self.inner.profiles);
+                self.absorb_profile_stats(r.profile_hits, r.profile_misses);
+                request::pipeline_payload(&r)
+            }
+            RequestKind::Stats => unreachable!("stats requests are answered without planning"),
+        }
+    }
+
+    fn absorb_profile_stats(&self, hits: usize, misses: usize) {
+        let mut st = self.lock_state();
+        st.stats.profile_hits += hits as u64;
+        st.stats.profile_misses += misses as u64;
+    }
+
+    fn error_response(&self, id: Option<&Json>, tag: Option<&'static str>, msg: &str) -> String {
+        self.lock_state().stats.errors += 1;
+        let mut pairs = vec![("ok", Json::Bool(false)), ("error", Json::str(msg))];
+        if let Some(id) = id {
+            pairs.push(("id", id.clone()));
+        }
+        if let Some(tag) = tag {
+            pairs.push(("cache", Json::str(tag)));
+        }
+        Json::obj(pairs).to_string()
+    }
+
+    /// Counters snapshot.
+    pub fn stats(&self) -> ServiceStats {
+        self.lock_state().stats.clone()
+    }
+
+    /// The process-wide profile cache every search shares.
+    pub fn profile_cache(&self) -> &SharedProfileCache {
+        &self.inner.profiles
+    }
+
+    /// Persist the shared profile cache (also done after every search).
+    pub fn save(&self) -> std::io::Result<()> {
+        self.inner.profiles.save()
+    }
+
+    /// Test instrumentation: run `hook` on the single-flight leader
+    /// after it has claimed the flight and before its search runs. The
+    /// concurrency suite uses it to hold the leader until every follower
+    /// has registered, making `coalesced == N - 1` deterministic rather
+    /// than timing-dependent.
+    #[doc(hidden)]
+    pub fn set_search_hook(&self, hook: Arc<dyn Fn() + Send + Sync>) {
+        *self.inner.hook.lock().unwrap_or_else(|e| e.into_inner()) = Some(hook);
+    }
+
+    fn lock_state(&self) -> MutexGuard<'_, PlanState> {
+        self.inner.state.lock().unwrap_or_else(|e| e.into_inner())
+    }
+}
+
+/// Success envelope. Key order in the output is alphabetical (the JSON
+/// writer sorts object keys), so envelopes are byte-stable too.
+fn envelope(id: Option<&Json>, kind: RequestKind, tag: Option<&str>, result: &Json) -> String {
+    let mut pairs = vec![
+        ("ok", Json::Bool(true)),
+        ("kind", Json::str(kind.as_str())),
+        ("result", result.clone()),
+    ];
+    if let Some(tag) = tag {
+        pairs.push(("cache", Json::str(tag)));
+    }
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
+    Json::obj(pairs).to_string()
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "unknown panic".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny() -> ServeConfig {
+        ServeConfig { workers: 2, ..ServeConfig::default() }
+    }
+
+    fn line() -> &'static str {
+        "{\"id\": 1, \"type\": \"plan\", \"model\": \"gpt-tiny\", \"platform\": \"a100-pcie\"}"
+    }
+
+    #[test]
+    fn miss_then_hit_with_identical_payload() {
+        let svc = PlanService::new(tiny());
+        let a = Json::parse(&svc.handle_line(line())).unwrap();
+        let b = Json::parse(&svc.handle_line(line())).unwrap();
+        assert_eq!(a.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(a.get("cache").and_then(Json::as_str), Some("miss"));
+        assert_eq!(b.get("cache").and_then(Json::as_str), Some("hit"));
+        assert_eq!(a.get("id"), b.get("id"));
+        assert_eq!(
+            a.get("result").unwrap().to_string(),
+            b.get("result").unwrap().to_string(),
+            "hit serves the bit-identical payload"
+        );
+        let s = svc.stats();
+        assert_eq!((s.plan_misses, s.plan_hits, s.searches), (1, 1, 1));
+        assert_eq!(s.requests, 2);
+    }
+
+    #[test]
+    fn stats_request_reports_counters() {
+        let svc = PlanService::new(tiny());
+        svc.handle_line(line());
+        let resp = Json::parse(&svc.handle_line("{\"type\": \"stats\", \"id\": 9}")).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(resp.get("kind").and_then(Json::as_str), Some("stats"));
+        let r = resp.get("result").unwrap();
+        assert_eq!(r.get("searches").and_then(Json::as_u64), Some(1));
+        assert_eq!(r.get("requests").and_then(Json::as_u64), Some(2));
+        assert!(r.get("profile_misses").and_then(Json::as_u64).unwrap() > 0);
+    }
+
+    #[test]
+    fn errors_are_structured_and_counted() {
+        let svc = PlanService::new(tiny());
+        let resp = svc.handle_line("{\"model\": \"no-such-model\", \"id\": 3}");
+        let j = Json::parse(&resp).expect("error responses are valid JSON");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false));
+        assert!(j.get("error").and_then(Json::as_str).unwrap().contains("no-such-model"));
+        assert_eq!(j.get("id").and_then(Json::as_i64), Some(3));
+        assert_eq!(svc.stats().errors, 1);
+        assert_eq!(svc.stats().searches, 0, "bad requests never reach the planner");
+    }
+
+    #[test]
+    fn plan_cache_lru_bound_holds() {
+        let svc = PlanService::new(ServeConfig {
+            workers: 1,
+            plan_cache_entries: 2,
+            ..ServeConfig::default()
+        });
+        let req = |layers: usize| {
+            format!("{{\"type\": \"plan\", \"model\": \"gpt-tiny\", \"layers\": {layers}}}")
+        };
+        for layers in [2usize, 3, 4] {
+            svc.handle_line(&req(layers));
+        }
+        // layers=2 was evicted (LRU); layers=4 is still cached
+        let again4 = svc.handle_line(&req(4));
+        assert_eq!(Json::parse(&again4).unwrap().get("cache").and_then(Json::as_str), Some("hit"));
+        let again2 = svc.handle_line(&req(2));
+        assert_eq!(
+            Json::parse(&again2).unwrap().get("cache").and_then(Json::as_str),
+            Some("miss"),
+            "evicted entries are planned again"
+        );
+        // ...but the profile cache still makes the re-plan warm
+        let s = svc.stats();
+        assert!(s.profile_hits > 0, "re-planning reuses shared profiles");
+    }
+}

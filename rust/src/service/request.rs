@@ -1,0 +1,304 @@
+//! The `cfp serve` wire format: NDJSON request parsing, canonical plan
+//! keys, and the deterministic result payloads.
+//!
+//! A request is one JSON object per line. Planning fields carry the CLI
+//! flag names (`-` spelled `_`), and are converted to a synthetic
+//! [`Args`] fed to the same [`CfpOptions::from_args`] builder as the
+//! `cfp` subcommands — the CLI and the server cannot interpret the same
+//! request differently, because there is only one interpretation path.
+//!
+//! ```text
+//! {"id": 1, "type": "plan", "model": "gpt-2.6b", "layers": 4, "platform": "a100-pcie"}
+//! {"id": 2, "type": "pipeline", "model": "llama-7b", "scaled": true,
+//!  "microbatches": 8, "mem_cap": 12.5, "recompute": "auto"}
+//! {"type": "stats"}
+//! ```
+//!
+//! Unknown fields are rejected (a typo silently ignored by a server is a
+//! plan the client did not ask for), and so is any field the service
+//! owns rather than the request: thread budget and cache placement are
+//! `cfp serve` configuration.
+
+use crate::coordinator::{CfpOptions, CfpResult, PlannerKind, TwoLevelResult};
+use crate::interop::{PipelinePlan, StageSpec};
+use crate::util::cli::Args;
+use crate::util::Json;
+
+/// What a request line asks for.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RequestKind {
+    /// single-level plan search (the `cfp search` economics)
+    Plan,
+    /// two-level inter-op × intra-op planning (`cfp pipeline`)
+    Pipeline,
+    /// service counters snapshot (never planned, never cached)
+    Stats,
+}
+
+impl RequestKind {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            RequestKind::Plan => "plan",
+            RequestKind::Pipeline => "pipeline",
+            RequestKind::Stats => "stats",
+        }
+    }
+
+    /// The planner (and therefore option defaults) this kind drives.
+    pub fn planner(self) -> PlannerKind {
+        match self {
+            RequestKind::Pipeline => PlannerKind::TwoLevel,
+            RequestKind::Plan | RequestKind::Stats => PlannerKind::SingleLevel,
+        }
+    }
+}
+
+/// One parsed NDJSON request line.
+pub struct PlanRequest {
+    /// client token echoed verbatim in the response (any JSON value)
+    pub id: Option<Json>,
+    pub kind: RequestKind,
+    /// the planning fields in CLI-flag form, ready for
+    /// [`CfpOptions::from_args`]
+    pub args: Args,
+}
+
+/// Every field a request line may carry. The service's own knobs
+/// (worker count, thread budget, cache placement) are deliberately NOT
+/// requestable — they are `cfp serve` configuration.
+const FIELDS: &[&str] = &[
+    "id",
+    "type",
+    "model",
+    "layers",
+    "batch",
+    "scaled",
+    "platform",
+    "stages",
+    "microbatches",
+    "mem_cap",
+    "recompute",
+];
+
+/// Parse one request line. Every failure is a `String` destined for a
+/// structured error response — this path must never panic.
+pub fn parse_request(line: &str) -> Result<PlanRequest, String> {
+    let j = Json::parse(line).map_err(|e| format!("invalid JSON: {e}"))?;
+    let obj = j.as_obj().ok_or_else(|| "request must be a JSON object".to_string())?;
+    for key in obj.keys() {
+        if !FIELDS.contains(&key.as_str()) {
+            return Err(format!("unknown request field {key:?} (known: {FIELDS:?})"));
+        }
+    }
+    let kind = match j.get("type") {
+        None => RequestKind::Plan,
+        Some(t) => match t.as_str() {
+            Some("plan") => RequestKind::Plan,
+            Some("pipeline") => RequestKind::Pipeline,
+            Some("stats") => RequestKind::Stats,
+            Some(other) => {
+                return Err(format!("unknown request type {other:?} (want plan|pipeline|stats)"))
+            }
+            None => return Err("\"type\" must be a string".to_string()),
+        },
+    };
+    let mut args = Args::default();
+    for field in ["model", "platform", "stages", "recompute"] {
+        if let Some(v) = j.get(field) {
+            let s = v.as_str().ok_or_else(|| format!("{field:?} must be a string"))?;
+            args.options.insert(field.to_string(), s.to_string());
+        }
+    }
+    for field in ["layers", "batch", "microbatches"] {
+        if let Some(v) = j.get(field) {
+            let n = v.as_u64().ok_or_else(|| format!("{field:?} must be a non-negative integer"))?;
+            args.options.insert(field.to_string(), n.to_string());
+        }
+    }
+    if let Some(v) = j.get("mem_cap") {
+        let gb = v.as_f64().ok_or_else(|| "\"mem_cap\" must be a number (GB)".to_string())?;
+        args.options.insert("mem-cap".to_string(), format!("{gb}"));
+    }
+    if let Some(v) = j.get("scaled") {
+        if v.as_bool().ok_or_else(|| "\"scaled\" must be a boolean".to_string())? {
+            args.flags.push("scaled".to_string());
+        }
+    }
+    Ok(PlanRequest { id: j.get("id").cloned(), kind, args })
+}
+
+/// Deterministic identity of a planning request: every *resolved* option
+/// that can change the planned output, nothing that cannot (thread
+/// budget, cache placement). Semantically identical requests — however
+/// spelled — therefore share one plan-cache slot and one in-flight
+/// search. Fields the single-level planner ignores (stages,
+/// microbatches, recompute) are normalized out of `plan` keys so they
+/// cannot split the cache.
+pub fn canonical_key(kind: RequestKind, opts: &CfpOptions) -> String {
+    let m = &opts.model;
+    let cap = opts.mem_cap.map_or_else(|| "none".to_string(), |b| b.to_string());
+    let (stages, mb, rec) = match kind {
+        RequestKind::Plan | RequestKind::Stats => ("-".to_string(), "-".to_string(), "-"),
+        RequestKind::Pipeline => (
+            match opts.stages {
+                StageSpec::Single => "single".to_string(),
+                StageSpec::Auto => "auto".to_string(),
+                StageSpec::Fixed(k) => format!("k{k}"),
+            },
+            opts.microbatches.to_string(),
+            if opts.recompute.is_auto() { "auto" } else { "off" },
+        ),
+    };
+    let cm = opts.compute.as_ref().map_or_else(|| "default".to_string(), |c| c.signature());
+    format!(
+        "{kind};model={name}/{arch:?}/h{h}/l{l}/hd{hd}/f{f}/v{v}/s{s}/b{b}/e{e}/do{dp};\
+         plat={plat};mesh={mi}x{mn};cap={cap};stages={stages};mb={mb};rec={rec};cm={cm}",
+        kind = kind.as_str(),
+        name = m.name,
+        arch = m.arch,
+        h = m.hidden,
+        l = m.layers,
+        hd = m.heads,
+        f = m.ffn,
+        v = m.vocab,
+        s = m.seq,
+        b = m.batch,
+        e = m.experts,
+        dp = m.dropout,
+        plat = opts.platform.signature(),
+        mi = opts.mesh.intra,
+        mn = opts.mesh.nodes,
+    )
+}
+
+/// Result payload for a single-level plan: a pure function of the
+/// [`CfpResult`], shared by the serving path and the bit-identity tests
+/// against the one-shot CLI path. Wall-clock timings are deliberately
+/// absent — the payload must be byte-identical however the plan was
+/// obtained (cold, profile-warm, plan-cache hit, coalesced).
+pub fn plan_payload(r: &CfpResult) -> Json {
+    Json::obj(vec![
+        ("time_us", Json::num(r.plan.time_us)),
+        ("mem_bytes", Json::num(r.plan.mem_bytes as f64)),
+        ("choice", Json::Arr(r.plan.choice.iter().map(|&c| Json::num(c as f64)).collect())),
+        ("segments", Json::Arr(r.describe_plan().into_iter().map(Json::str).collect())),
+        ("blocks", Json::num(r.blocks.num_blocks() as f64)),
+        ("unique_segments", Json::num(r.segments.num_unique() as f64)),
+        ("profile_space", Json::num(r.db.profile_space() as f64)),
+    ])
+}
+
+/// Result payload for a two-level plan — see [`plan_payload`] for the
+/// determinism contract. An infeasible cap is an answer (`feasible:
+/// false`), not an error: it is deterministic and cacheable.
+pub fn pipeline_payload(r: &TwoLevelResult) -> Json {
+    Json::obj(vec![
+        ("single_time_us", Json::num(r.single.plan.time_us)),
+        ("feasible", Json::Bool(r.pipeline.is_some())),
+        ("pipeline", r.pipeline.as_ref().map_or(Json::Null, stage_json)),
+        ("naive", r.naive.as_ref().map_or(Json::Null, stage_json)),
+    ])
+}
+
+fn stage_json(p: &PipelinePlan) -> Json {
+    Json::obj(vec![
+        ("stages", Json::num(p.num_stages() as f64)),
+        ("devices_per_stage", Json::num(p.devices_per_stage as f64)),
+        ("step_time_us", Json::num(p.step_time_us)),
+        ("peak_mem_bytes", Json::num(p.peak_mem_bytes as f64)),
+        ("bubble", Json::num(p.bubble_fraction)),
+        ("describe", Json::Arr(p.describe().into_iter().map(Json::str).collect())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Platform;
+    use crate::models::ModelCfg;
+
+    fn opts() -> CfpOptions {
+        CfpOptions::new(ModelCfg::preset("gpt-tiny"), Platform::a100_pcie(4))
+    }
+
+    #[test]
+    fn parse_accepts_the_documented_forms() {
+        let r = parse_request(
+            "{\"id\": 7, \"type\": \"plan\", \"model\": \"gpt-tiny\", \"layers\": 3, \
+             \"scaled\": true}",
+        )
+        .unwrap();
+        assert_eq!(r.kind, RequestKind::Plan);
+        assert_eq!(r.id, Some(Json::num(7.0)));
+        assert_eq!(r.args.get("model"), Some("gpt-tiny"));
+        assert_eq!(r.args.get("layers"), Some("3"));
+        assert!(r.args.has_flag("scaled"));
+
+        let r = parse_request("{\"type\": \"pipeline\", \"mem_cap\": 12.5}").unwrap();
+        assert_eq!(r.kind, RequestKind::Pipeline);
+        assert_eq!(r.args.get("mem-cap"), Some("12.5"));
+
+        // type defaults to plan
+        assert_eq!(parse_request("{}").unwrap().kind, RequestKind::Plan);
+        assert_eq!(parse_request("{\"type\": \"stats\"}").unwrap().kind, RequestKind::Stats);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_requests() {
+        for bad in [
+            "{not json",
+            "[1, 2]",
+            "\"just a string\"",
+            "{\"type\": \"wat\"}",
+            "{\"type\": 3}",
+            "{\"typ\": \"plan\"}",       // unknown field (typo)
+            "{\"threads\": 8}",          // service-owned knob
+            "{\"layers\": \"four\"}",    // wrong type
+            "{\"layers\": -1}",          // negative
+            "{\"mem_cap\": \"big\"}",    // wrong type
+            "{\"scaled\": \"yes\"}",     // wrong type
+        ] {
+            assert!(parse_request(bad).is_err(), "{bad:?} must be rejected");
+        }
+    }
+
+    #[test]
+    fn canonical_key_ignores_what_cannot_change_the_plan() {
+        let a = opts();
+        let mut b = opts();
+        b.threads = 8;
+        b.cache_path = Some("/tmp/x.json".into());
+        b.cache_max_entries = Some(4);
+        assert_eq!(
+            canonical_key(RequestKind::Plan, &a),
+            canonical_key(RequestKind::Plan, &b),
+            "thread budget and cache placement are not plan identity"
+        );
+        // the single-level planner ignores pipeline-only fields
+        b.microbatches = 2;
+        b.stages = StageSpec::Fixed(2);
+        assert_eq!(canonical_key(RequestKind::Plan, &a), canonical_key(RequestKind::Plan, &b));
+        assert_ne!(
+            canonical_key(RequestKind::Pipeline, &a),
+            canonical_key(RequestKind::Pipeline, &b),
+            "the two-level planner does not"
+        );
+    }
+
+    #[test]
+    fn canonical_key_separates_what_does() {
+        let a = opts();
+        for (label, b) in [
+            ("layers", CfpOptions::new(ModelCfg::preset("gpt-tiny").with_layers(3), a.platform)),
+            ("batch", CfpOptions::new(ModelCfg::preset("gpt-tiny").with_batch(8), a.platform)),
+            ("platform", CfpOptions::new(ModelCfg::preset("gpt-tiny"), Platform::a100_pcie(8))),
+            ("mem_cap", opts().with_mem_cap(1 << 30)),
+        ] {
+            assert_ne!(
+                canonical_key(RequestKind::Plan, &a),
+                canonical_key(RequestKind::Plan, &b),
+                "{label} must split the key"
+            );
+        }
+    }
+}

@@ -1,0 +1,134 @@
+//! NDJSON stream serving for [`PlanService`]: the stdin/stdout loop and
+//! the `--listen` TCP acceptor (std::net only — no external deps).
+//!
+//! Requests on one stream are dispatched to the service's bounded worker
+//! pool and therefore run (and may complete) concurrently — responses
+//! can arrive out of request order, so clients match them by the echoed
+//! `id`. Each response is written as one whole line under the stream's
+//! writer lock, so lines never interleave.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::{Arc, Condvar, Mutex};
+
+use super::PlanService;
+
+/// Line-atomic shared writer: concurrent workers append whole response
+/// lines, never interleaved bytes.
+pub type SharedWriter = Arc<Mutex<Box<dyn Write + Send>>>;
+
+pub fn shared_writer(w: impl Write + Send + 'static) -> SharedWriter {
+    let boxed: Box<dyn Write + Send> = Box::new(w);
+    Arc::new(Mutex::new(boxed))
+}
+
+impl PlanService {
+    /// Serve NDJSON requests from `reader` until EOF, dispatching every
+    /// line to the worker pool and writing one response line per request
+    /// to `writer`. Blank lines are skipped. Returns only after every
+    /// dispatched request has been answered, so a caller can safely
+    /// persist caches or exit afterwards.
+    pub fn serve_stream(&self, reader: impl BufRead, writer: SharedWriter) {
+        let outstanding = Arc::new((Mutex::new(0usize), Condvar::new()));
+        for line in reader.lines() {
+            let Ok(line) = line else { break };
+            if line.trim().is_empty() {
+                continue;
+            }
+            {
+                let (count, _) = &*outstanding;
+                *count.lock().unwrap_or_else(|e| e.into_inner()) += 1;
+            }
+            let svc = self.clone();
+            let writer = Arc::clone(&writer);
+            let outstanding = Arc::clone(&outstanding);
+            self.inner.pool.execute(move || {
+                let resp = svc.handle_line(&line);
+                {
+                    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                    let _ = writeln!(w, "{resp}");
+                    let _ = w.flush();
+                }
+                let (count, done) = &*outstanding;
+                *count.lock().unwrap_or_else(|e| e.into_inner()) -= 1;
+                done.notify_all();
+            });
+        }
+        let (count, done) = &*outstanding;
+        let mut pending = count.lock().unwrap_or_else(|e| e.into_inner());
+        while *pending > 0 {
+            pending = done.wait(pending).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
+    /// Bind `addr` (e.g. `127.0.0.1:7070`, port 0 for ephemeral) and
+    /// serve TCP connections — one NDJSON stream per connection — on a
+    /// background acceptor thread for the life of the process. Returns
+    /// the bound address.
+    pub fn listen(&self, addr: &str) -> std::io::Result<SocketAddr> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let svc = self.clone();
+        std::thread::Builder::new().name("cfp-serve-accept".into()).spawn(move || {
+            for stream in listener.incoming() {
+                let Ok(stream) = stream else { continue };
+                let svc = svc.clone();
+                let _ = std::thread::Builder::new()
+                    .name("cfp-serve-conn".into())
+                    .spawn(move || serve_connection(&svc, stream));
+            }
+        })?;
+        Ok(local)
+    }
+}
+
+fn serve_connection(svc: &PlanService, stream: TcpStream) {
+    let Ok(read_half) = stream.try_clone() else { return };
+    svc.serve_stream(BufReader::new(read_half), shared_writer(stream));
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::ServeConfig;
+    use super::*;
+    use crate::util::Json;
+
+    /// `Write` into a shared buffer the test can inspect afterwards.
+    struct Sink(Arc<Mutex<Vec<u8>>>);
+
+    impl Write for Sink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn serve_stream_answers_every_line_and_returns_on_eof() {
+        let svc = PlanService::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+        let input = "{\"id\": \"a\", \"type\": \"plan\", \"model\": \"gpt-tiny\"}\n\
+                     \n\
+                     {\"id\": \"b\", \"type\": \"stats\"}\n\
+                     not json at all\n";
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        svc.serve_stream(std::io::Cursor::new(input), shared_writer(Sink(Arc::clone(&buf))));
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let lines: Vec<&str> = text.lines().collect();
+        assert_eq!(lines.len(), 3, "three requests (blank line skipped): {text}");
+        let mut kinds = Vec::new();
+        for line in &lines {
+            let j = Json::parse(line).expect("every response line is valid JSON");
+            match j.get("ok").and_then(Json::as_bool) {
+                Some(true) => kinds.push(j.get("kind").unwrap().as_str().unwrap().to_string()),
+                Some(false) => kinds.push("error".to_string()),
+                None => panic!("response without ok: {line}"),
+            }
+        }
+        kinds.sort();
+        assert_eq!(kinds, ["error", "plan", "stats"]);
+    }
+}

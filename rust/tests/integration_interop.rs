@@ -13,7 +13,7 @@ use cfp::interop::{
     brute_force_splits, build_context, plan_fixed_stages, PipelineOptions, StageSpec,
 };
 use cfp::models::{build_training, ModelCfg};
-use cfp::profiler::ProfileCache;
+use cfp::profiler::{CacheHandle, ProfileCache};
 use cfp::spmd::Mesh;
 
 fn temp_dir(tag: &str) -> std::path::PathBuf {
@@ -54,7 +54,7 @@ fn stage_split_dp_matches_brute_force_enumeration() {
     // the sub-mesh size is irrelevant to DP-vs-brute-force equality.
     let g = build_training(&ModelCfg::preset("gpt-tiny").with_layers(4));
     let popts = PipelineOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
-    let ctx = build_context(&g, &popts, 2, None);
+    let ctx = build_context(&g, &popts, 2, CacheHandle::None);
     let n = ctx.segments.instances.len();
     assert!(n >= 2, "need a chain to split, got {n} instances");
     for k in 1..=n.min(4) {
@@ -78,7 +78,7 @@ fn dp_is_exact_across_microbatch_counts() {
     // the (sum, max) Pareto state must stay exact for every bubble weight
     let g = build_training(&ModelCfg::preset("moe-tiny").with_layers(4));
     let popts = PipelineOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
-    let ctx = build_context(&g, &popts, 2, None);
+    let ctx = build_context(&g, &popts, 2, CacheHandle::None);
     let n = ctx.segments.instances.len();
     for m in [1usize, 2, 8, 32] {
         let mut p = popts.clone();
@@ -101,7 +101,7 @@ fn dp_is_exact_across_microbatch_counts() {
 fn composed_step_time_matches_schedule_simulation() {
     let g = build_training(&ModelCfg::preset("gpt-tiny").with_layers(4));
     let popts = PipelineOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
-    let ctx = build_context(&g, &popts, 2, None);
+    let ctx = build_context(&g, &popts, 2, CacheHandle::None);
     let p = plan_fixed_stages(&g, &ctx, &popts, 2).expect("2-stage plan for a 4-layer chain");
     assert_eq!(p.num_stages(), 2);
     let lats: Vec<f64> = p.stages.iter().map(|s| s.latency_us).collect();

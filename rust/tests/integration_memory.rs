@@ -17,6 +17,7 @@ use cfp::harness::pipeline_eval_models;
 use cfp::interop::{plan_pipeline, PipelineOptions, PipelinePlan, StageContexts, StageSpec};
 use cfp::memory::RecomputeSpec;
 use cfp::models::{build_training, ModelCfg};
+use cfp::profiler::CacheHandle;
 use cfp::spmd::Mesh;
 
 /// Cross-check one composed plan: the closed-form 1F1B peak of every
@@ -50,7 +51,7 @@ fn tight_cap_rejects_then_recompute_recovers() {
     let g = build_training(&ModelCfg::preset("gpt-tiny").with_layers(4));
     let popts = PipelineOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
     let mut ctxs = StageContexts::new();
-    ctxs.ensure_all(&g, &popts, None);
+    ctxs.ensure_all(&g, &popts, CacheHandle::None);
 
     let plan_with = |cap: u64, rec: RecomputeSpec| -> Option<PipelinePlan> {
         let mut p = popts.clone();

@@ -1,0 +1,269 @@
+//! Concurrency suite for the `cfp serve` subsystem (ISSUE 4):
+//!
+//! * N threads submitting the identical request get bit-identical plans
+//!   from exactly ONE underlying search (coalescing counter == N − 1,
+//!   made deterministic by the leader-hold hook).
+//! * Mixed distinct concurrent requests complete and every payload is
+//!   byte-identical to the serial one-shot reference through the same
+//!   options builder — the CLI/server bit-identity acceptance bar.
+//! * TCP loopback round-trip (ephemeral port), including plan-cache
+//!   hits across connections and the `stats` request type.
+//! * Malformed NDJSON yields a structured error response on every line,
+//!   never a crash, and never reaches the planner.
+
+use std::io::{BufRead, BufReader, Write};
+use std::sync::{Arc, Barrier};
+use std::time::Duration;
+
+use cfp::coordinator::{run_cfp, run_cfp_two_level, CfpOptions, PlannerKind};
+use cfp::service::{pipeline_payload, plan_payload, PlanService, RequestKind, ServeConfig};
+use cfp::util::cli::Args;
+use cfp::util::Json;
+
+fn plan_line(layers: usize) -> String {
+    format!(
+        "{{\"id\": \"L{layers}\", \"type\": \"plan\", \"model\": \"gpt-tiny\", \
+         \"layers\": {layers}, \"platform\": \"a100-pcie\"}}"
+    )
+}
+
+/// The serial one-shot reference for `plan_line(layers)`: the same
+/// fields through the same [`CfpOptions::from_args`] builder, planned by
+/// the plain (non-serving) entry point.
+fn reference_payload(layers: usize) -> String {
+    let mut args = Args::default();
+    args.options.insert("model".into(), "gpt-tiny".into());
+    args.options.insert("layers".into(), layers.to_string());
+    args.options.insert("platform".into(), "a100-pcie".into());
+    let built = CfpOptions::from_args(&args, PlannerKind::SingleLevel).unwrap();
+    assert!(built.warnings.is_empty());
+    plan_payload(&run_cfp(&built.opts)).to_string()
+}
+
+fn result_of(resp: &str) -> String {
+    let j = Json::parse(resp).expect("response is valid JSON");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "not ok: {resp}");
+    j.get("result").expect("ok response has a result").to_string()
+}
+
+#[test]
+fn n_identical_concurrent_requests_run_exactly_one_search() {
+    const N: usize = 6;
+    let svc = PlanService::new(ServeConfig { workers: N, ..ServeConfig::default() });
+    // Hold the single-flight leader until all N − 1 followers have
+    // registered on its flight, so the coalescing count is exact rather
+    // than timing-dependent.
+    let probe = svc.clone();
+    svc.set_search_hook(Arc::new(move || {
+        while probe.stats().coalesced < (N as u64) - 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }));
+    let start = Arc::new(Barrier::new(N));
+    let responses: Vec<String> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..N)
+            .map(|_| {
+                let svc = svc.clone();
+                let start = Arc::clone(&start);
+                s.spawn(move || {
+                    start.wait();
+                    svc.handle_line(&plan_line(2))
+                })
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+
+    let stats = svc.stats();
+    assert_eq!(stats.searches, 1, "exactly one underlying search");
+    assert_eq!(stats.plan_misses, 1);
+    assert_eq!(stats.coalesced, N as u64 - 1, "every other request coalesced");
+    assert_eq!(stats.requests, N as u64);
+
+    // all N payloads are bit-identical, and identical to the one-shot
+    // CLI path for the same options
+    let payloads: Vec<String> = responses.iter().map(|r| result_of(r)).collect();
+    for p in &payloads[1..] {
+        assert_eq!(p, &payloads[0], "coalesced responses must be bit-identical");
+    }
+    assert_eq!(payloads[0], reference_payload(2), "served == one-shot CLI plan");
+
+    // cache tags: one miss, N − 1 coalesced
+    let mut tags: Vec<String> = responses
+        .iter()
+        .map(|r| {
+            Json::parse(r).unwrap().get("cache").unwrap().as_str().unwrap().to_string()
+        })
+        .collect();
+    tags.sort();
+    assert_eq!(tags.iter().filter(|t| *t == "miss").count(), 1);
+    assert_eq!(tags.iter().filter(|t| *t == "coalesced").count(), N - 1);
+}
+
+#[test]
+fn mixed_distinct_concurrent_requests_match_the_serial_reference() {
+    let svc = PlanService::new(ServeConfig { workers: 3, ..ServeConfig::default() });
+    let layer_counts = [2usize, 3, 4];
+    let responses: Vec<(usize, String)> = std::thread::scope(|s| {
+        let handles: Vec<_> = layer_counts
+            .iter()
+            .map(|&layers| {
+                let svc = svc.clone();
+                s.spawn(move || (layers, svc.handle_line(&plan_line(layers))))
+            })
+            .collect();
+        handles.into_iter().map(|h| h.join().unwrap()).collect()
+    });
+    assert_eq!(svc.stats().searches, 3, "distinct requests never coalesce");
+    for (layers, resp) in responses {
+        assert_eq!(
+            result_of(&resp),
+            reference_payload(layers),
+            "concurrent execution must not change the {layers}-layer plan"
+        );
+    }
+    // profile traffic flowed through the shared cache
+    let stats = svc.stats();
+    assert!(stats.profile_hits + stats.profile_misses > 0);
+}
+
+#[test]
+fn served_pipeline_plan_is_bit_identical_to_the_cli_path() {
+    let svc = PlanService::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+    let line = "{\"type\": \"pipeline\", \"model\": \"gpt-tiny\", \"layers\": 2, \
+                \"microbatches\": 4, \"platform\": \"a100-pcie\"}";
+    let resp = svc.handle_line(line);
+
+    let mut args = Args::default();
+    args.options.insert("model".into(), "gpt-tiny".into());
+    args.options.insert("layers".into(), "2".into());
+    args.options.insert("microbatches".into(), "4".into());
+    args.options.insert("platform".into(), "a100-pcie".into());
+    let built = CfpOptions::from_args(&args, PlannerKind::TwoLevel).unwrap();
+    let reference = pipeline_payload(&run_cfp_two_level(&built.opts)).to_string();
+    assert_eq!(result_of(&resp), reference, "pipeline kind: served == CLI");
+
+    // and a repeat is a plan-cache hit with the same bytes
+    let again = svc.handle_line(line);
+    assert_eq!(result_of(&again), reference);
+    assert_eq!(Json::parse(&again).unwrap().get("cache").and_then(Json::as_str), Some("hit"));
+}
+
+#[test]
+fn tcp_loopback_round_trip() {
+    let svc = PlanService::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+    let addr = svc.listen("127.0.0.1:0").expect("bind an ephemeral loopback port");
+
+    let mut stream = std::net::TcpStream::connect(addr).expect("connect");
+    let mut reader = BufReader::new(stream.try_clone().expect("clone"));
+    writeln!(stream, "{}", plan_line(2)).unwrap();
+    let mut line = String::new();
+    reader.read_line(&mut line).unwrap();
+    let j = Json::parse(line.trim()).expect("valid response JSON");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true));
+    assert_eq!(j.get("id").and_then(Json::as_str), Some("L2"), "id echoed");
+    assert_eq!(j.get("cache").and_then(Json::as_str), Some("miss"));
+
+    // a second connection is served by the same warm service
+    let mut stream2 = std::net::TcpStream::connect(addr).expect("connect again");
+    let mut reader2 = BufReader::new(stream2.try_clone().expect("clone"));
+    writeln!(stream2, "{}", plan_line(2)).unwrap();
+    let mut line2 = String::new();
+    reader2.read_line(&mut line2).unwrap();
+    let j2 = Json::parse(line2.trim()).unwrap();
+    assert_eq!(j2.get("cache").and_then(Json::as_str), Some("hit"));
+    assert_eq!(
+        j2.get("result").unwrap().to_string(),
+        j.get("result").unwrap().to_string(),
+        "plan served over TCP is byte-stable across connections"
+    );
+
+    // stats round-trip over the wire
+    writeln!(stream2, "{{\"type\": \"stats\", \"id\": 99}}").unwrap();
+    let mut line3 = String::new();
+    reader2.read_line(&mut line3).unwrap();
+    let j3 = Json::parse(line3.trim()).unwrap();
+    assert_eq!(j3.get("kind").and_then(Json::as_str), Some("stats"));
+    let r = j3.get("result").unwrap();
+    assert_eq!(r.get("searches").and_then(Json::as_u64), Some(1));
+    assert_eq!(r.get("plan_hits").and_then(Json::as_u64), Some(1));
+}
+
+#[test]
+fn malformed_ndjson_yields_structured_errors_never_a_crash() {
+    let svc = PlanService::new(ServeConfig { workers: 1, ..ServeConfig::default() });
+    let bad_lines = [
+        "{not json",
+        "[1, 2, 3]",
+        "\"a bare string\"",
+        "{\"type\": \"frobnicate\"}",
+        "{\"model\": \"no-such-model\"}",
+        "{\"platform\": \"no-such-platform\"}",
+        "{\"modle\": \"gpt-tiny\"}",
+        "{\"layers\": \"four\"}",
+        "{\"threads\": 8}",
+        "{\"type\": \"pipeline\", \"model\": \"gpt-tiny\", \"microbatches\": 0}",
+        "{\"type\": \"pipeline\", \"model\": \"gpt-tiny\", \"stages\": \"7\"}",
+    ];
+    for bad in bad_lines {
+        let resp = svc.handle_line(bad);
+        let j = Json::parse(&resp)
+            .unwrap_or_else(|e| panic!("non-JSON response to {bad:?}: {e}"));
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{bad:?}");
+        assert!(
+            !j.get("error").and_then(Json::as_str).unwrap_or("").is_empty(),
+            "{bad:?} must carry an error message"
+        );
+    }
+    let stats = svc.stats();
+    assert_eq!(stats.errors, bad_lines.len() as u64);
+    assert_eq!(stats.searches, 0, "malformed requests never reach the planner");
+
+    // the service still works afterwards
+    let ok = svc.handle_line(&plan_line(2));
+    assert_eq!(
+        Json::parse(&ok).unwrap().get("ok").and_then(Json::as_bool),
+        Some(true),
+        "service survives a malformed-input barrage"
+    );
+}
+
+#[test]
+fn requests_are_answered_out_of_order_but_match_by_id() {
+    // one stream carrying a slow (cold) and a fast (malformed) request:
+    // both answers arrive, each under its own id
+    let svc = PlanService::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+    let input = format!("{}\n{{\"id\": \"bad\", \"nope\": 1}}\n", plan_line(2));
+    struct Sink(Arc<std::sync::Mutex<Vec<u8>>>);
+    impl Write for Sink {
+        fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+            self.0.lock().unwrap().extend_from_slice(buf);
+            Ok(buf.len())
+        }
+        fn flush(&mut self) -> std::io::Result<()> {
+            Ok(())
+        }
+    }
+    let buf = Arc::new(std::sync::Mutex::new(Vec::new()));
+    svc.serve_stream(
+        std::io::Cursor::new(input),
+        cfp::service::shared_writer(Sink(Arc::clone(&buf))),
+    );
+    let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+    let mut seen = std::collections::BTreeMap::new();
+    for line in text.lines() {
+        let j = Json::parse(line).unwrap();
+        let id = j.get("id").unwrap().as_str().unwrap().to_string();
+        seen.insert(id, j.get("ok").and_then(Json::as_bool).unwrap());
+    }
+    assert_eq!(seen.get("L2"), Some(&true));
+    assert_eq!(seen.get("bad"), Some(&false));
+}
+
+#[test]
+fn request_kinds_expose_their_wire_names() {
+    // tiny glue assertions the wire format documentation relies on
+    assert_eq!(RequestKind::Plan.as_str(), "plan");
+    assert_eq!(RequestKind::Pipeline.as_str(), "pipeline");
+    assert_eq!(RequestKind::Stats.as_str(), "stats");
+}
