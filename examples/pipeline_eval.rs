@@ -34,6 +34,7 @@ fn main() {
             "vs naive",
             "prof hit",
             "prof miss",
+            "search",
         ]);
         for model in pipeline_eval_models() {
             let (row, _) = pipeline_row(&model, platform, mesh, microbatches);
@@ -49,6 +50,7 @@ fn main() {
                 format!("{:.2}x", row.naive_us / row.two_level_us),
                 row.profile_hits.to_string(),
                 row.profile_misses.to_string(),
+                fmt_us(row.search_us),
             ]);
         }
         t.print();

@@ -1,8 +1,10 @@
 //! Bench: the memory axis of the search — rematerialization frontier
 //! construction and the enlarged (config × remat) span DP — vs the plain
-//! PR 2 span DP, so the search-time cost of making memory a searched
-//! quantity is tracked. §Perf target: the memory DP stays within ~2–4× of
-//! the plain span search at equal depth.
+//! span DP and vs the pre-refactor reference implementation, so the
+//! search-time cost of making memory a searched quantity is tracked.
+//! §Perf target: the memory DP stays within ~2–4× of the plain span
+//! search at equal depth. Rows land in `BENCH_search.json` (shared with
+//! the search bench; rows merge by name).
 
 use std::time::Duration;
 
@@ -14,9 +16,10 @@ use cfp::pblock::build_parallel_blocks;
 use cfp::profiler::{profile_model, ProfileOptions};
 use cfp::segment::extract_segments;
 use cfp::spmd::Mesh;
-use cfp::util::bench::{bench, black_box};
+use cfp::util::bench::{bench, black_box, merge_bench_json, JsonRow};
 
 fn main() {
+    let mut rows: Vec<JsonRow> = Vec::new();
     for layers in [4usize, 8, 16] {
         let cfg = ModelCfg::preset("gpt-2.6b").with_layers(layers).scaled_for_eval();
         let g = build_training(&cfg);
@@ -26,7 +29,7 @@ fn main() {
         let db = profile_model(&g, &bs, &ss, &opts);
         let n = ss.instances.len();
 
-        // baseline: the PR 2 single-plan span DP
+        // baseline: the plain span DP (repetition-aware since PR 5)
         bench(
             &format!("span_search/plain/{layers}L"),
             Duration::from_millis(500),
@@ -42,14 +45,40 @@ fn main() {
                 black_box(cost::search_span_mem(&ss, &db, 0, n, RecomputeSpec::Off));
             },
         );
-        // the full memory axis: per-instance keep-vs-checkpoint choices
-        bench(
+        // the full memory axis: per-instance keep-vs-checkpoint choices,
+        // new hoisted-transition DP vs the pre-refactor reference
+        let auto_ = bench(
             &format!("span_search/mem_frontier_auto/{layers}L"),
             Duration::from_millis(500),
             || {
                 black_box(cost::search_span_mem(&ss, &db, 0, n, RecomputeSpec::Auto));
             },
         );
+        let reference = bench(
+            &format!("span_search/mem_frontier_oracle/{layers}L"),
+            Duration::from_millis(500),
+            || {
+                black_box(cost::oracle::search_span_mem_reference(
+                    &ss,
+                    &db,
+                    0,
+                    n,
+                    RecomputeSpec::Auto,
+                ));
+            },
+        );
+        rows.push(JsonRow {
+            name: format!("span_search/mem_frontier_auto/{layers}L"),
+            layers,
+            ns_per_iter: auto_.median_ns,
+            speedup: Some(reference.median_ns / auto_.median_ns.max(1e-9)),
+        });
+        rows.push(JsonRow {
+            name: format!("span_search/mem_frontier_oracle/{layers}L"),
+            layers,
+            ns_per_iter: reference.median_ns,
+            speedup: None,
+        });
 
         // frontier consumption: footprints + feasibility selection over
         // the in-flight windows of a 4-stage 1F1B pipeline
@@ -78,5 +107,11 @@ fn main() {
                 }
             },
         );
+    }
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_search.json");
+    match merge_bench_json(&path, &rows) {
+        Ok(()) => println!("wrote {} rows to {}", rows.len(), path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
     }
 }

@@ -1,5 +1,16 @@
 //! Bench: ComposeSearch (Eq. 8/9 Pareto DP) vs depth and memory caps —
-//! Fig. 13 right-hand scaling. §Perf target: 32-layer GPT < 1 s.
+//! Fig. 13 right-hand scaling. §Perf target: 32-layer GPT < 1 s; the
+//! 512-layer unconstrained chain DP ≥ 10× the pre-refactor reference
+//! (recorded in `BENCH_search.json` at the repo root).
+//!
+//! Modes:
+//! * default — full sweep: the classic 4/16/32-layer section, the
+//!   repetition-aware chain scaling section (32/128/512 layers, new DP
+//!   vs the [`cfp::cost::oracle`] reference), and the brute-force
+//!   parallelism section. Rows land in `BENCH_search.json`.
+//! * `CFP_BENCH_SMOKE=1` — CI regression tripwire: only the 32-layer
+//!   chain, short budgets, and a hard failure if the unconstrained
+//!   search exceeds a generous wall-clock ceiling.
 
 use std::time::Duration;
 
@@ -7,62 +18,153 @@ use cfp::cluster::Platform;
 use cfp::cost;
 use cfp::models::{build_training, ModelCfg};
 use cfp::pblock::build_parallel_blocks;
-use cfp::profiler::{profile_model, ProfileOptions};
-use cfp::segment::extract_segments;
+use cfp::profiler::{profile_model, ProfileDb, ProfileOptions};
+use cfp::segment::{extract_segments, SegmentSet};
 use cfp::spmd::Mesh;
-use cfp::util::bench::{bench, black_box};
+use cfp::util::bench::{bench, black_box, merge_bench_json, JsonRow};
 
-fn main() {
-    for layers in [4usize, 16, 32] {
-        let cfg = ModelCfg::preset("gpt-2.6b").with_layers(layers).scaled_for_eval();
-        let g = build_training(&cfg);
-        let bs = build_parallel_blocks(&g, 4);
-        let ss = extract_segments(&g, &bs);
-        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
-        let db = profile_model(&g, &bs, &ss, &opts);
-        let free = cost::search(&ss, &db, None).unwrap();
-        bench(
-            &format!("compose_search/unconstrained/{layers}L"),
-            Duration::from_millis(700),
-            || {
-                black_box(cost::search(&ss, &db, None));
-            },
-        );
-        let cap = (free.mem_bytes as f64 * 0.9) as u64;
-        bench(
-            &format!("compose_search/mem_capped/{layers}L"),
-            Duration::from_millis(700),
-            || {
-                black_box(cost::search(&ss, &db, Some(cap)));
-            },
-        );
-        bench(
-            &format!("search_uniform/serial/{layers}L"),
-            Duration::from_millis(700),
-            || {
-                black_box(cost::search_uniform(&ss, &db, None));
-            },
-        );
-        bench(
-            &format!("search_uniform/threads=4/{layers}L"),
-            Duration::from_millis(700),
-            || {
-                black_box(cost::search_uniform_with(&ss, &db, None, 4));
-            },
-        );
-    }
+/// Generous CI ceiling for one 32-layer unconstrained search (the §Perf
+/// target is < 1 s for the whole pipeline; the DP alone at 32 layers
+/// runs in well under a millisecond — 250 ms only catches catastrophic
+/// regressions, not noise).
+const SMOKE_CEILING_NS: f64 = 250e6;
 
-    // brute force needs a tiny instance count to stay exponential-but-sane
-    let cfg = ModelCfg::preset("gpt-tiny").with_layers(2);
+fn setup(layers: usize) -> (SegmentSet, ProfileDb) {
+    let cfg = ModelCfg::preset("gpt-2.6b").with_layers(layers).scaled_for_eval();
     let g = build_training(&cfg);
     let bs = build_parallel_blocks(&g, 4);
     let ss = extract_segments(&g, &bs);
     let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
     let db = profile_model(&g, &bs, &ss, &opts);
-    bench("brute_force/serial/gpt-tiny-2L", Duration::from_secs(2), || {
-        black_box(cost::brute_force(&ss, &db, None));
-    });
-    bench("brute_force/threads=4/gpt-tiny-2L", Duration::from_secs(2), || {
-        black_box(cost::brute_force_with(&ss, &db, None, 4));
-    });
+    (ss, db)
+}
+
+fn main() {
+    let smoke = std::env::var("CFP_BENCH_SMOKE").is_ok();
+    let mut rows: Vec<JsonRow> = Vec::new();
+
+    if !smoke {
+        for layers in [4usize, 16, 32] {
+            let (ss, db) = setup(layers);
+            let free = cost::search(&ss, &db, None).unwrap();
+            let r = bench(
+                &format!("compose_search/unconstrained/{layers}L"),
+                Duration::from_millis(700),
+                || {
+                    black_box(cost::search(&ss, &db, None));
+                },
+            );
+            rows.push(JsonRow {
+                name: r.name.clone(),
+                layers,
+                ns_per_iter: r.median_ns,
+                speedup: None,
+            });
+            let cap = (free.mem_bytes as f64 * 0.9) as u64;
+            let r = bench(
+                &format!("compose_search/mem_capped/{layers}L"),
+                Duration::from_millis(700),
+                || {
+                    black_box(cost::search(&ss, &db, Some(cap)));
+                },
+            );
+            rows.push(JsonRow {
+                name: r.name.clone(),
+                layers,
+                ns_per_iter: r.median_ns,
+                speedup: None,
+            });
+            bench(
+                &format!("search_uniform/serial/{layers}L"),
+                Duration::from_millis(700),
+                || {
+                    black_box(cost::search_uniform(&ss, &db, None));
+                },
+            );
+            bench(
+                &format!("search_uniform/threads=4/{layers}L"),
+                Duration::from_millis(700),
+                || {
+                    black_box(cost::search_uniform_with(&ss, &db, None, 4));
+                },
+            );
+        }
+    }
+
+    // chain-DP scaling: the repetition-aware search vs the pre-refactor
+    // per-position Pareto DP, on deep chains of one repeated layer — the
+    // regime the steady-state splice and SearchCtx flat transitions are
+    // built for. Acceptance: ≥ 10× at 512 layers.
+    let depths: &[usize] = if smoke { &[32] } else { &[32, 128, 512] };
+    let mut smoke_breach = false;
+    for &layers in depths {
+        let (ss, db) = setup(layers);
+        let n = ss.instances.len();
+        // sanity: both paths agree before we time them
+        let new_plan = cost::search(&ss, &db, None).expect("plan");
+        let ref_plan = cost::oracle::search_span_reference(&ss, &db, None, 0, n).expect("plan");
+        assert!(
+            new_plan.time_us.to_bits() == ref_plan.time_us.to_bits()
+                && new_plan.choice == ref_plan.choice,
+            "{layers}L: repetition-aware DP diverged from the reference"
+        );
+        let budget = Duration::from_millis(if smoke { 150 } else { 600 });
+        let new = bench(&format!("chain_dp/new/{layers}L"), budget, || {
+            black_box(cost::search(&ss, &db, None));
+        });
+        let reference = bench(&format!("chain_dp/oracle/{layers}L"), budget, || {
+            black_box(cost::oracle::search_span_reference(&ss, &db, None, 0, n));
+        });
+        let speedup = reference.median_ns / new.median_ns.max(1e-9);
+        println!(
+            "chain_dp/{layers}L: {:.1}x vs pre-refactor reference",
+            speedup
+        );
+        rows.push(JsonRow {
+            name: format!("chain_dp/new/{layers}L"),
+            layers,
+            ns_per_iter: new.median_ns,
+            speedup: Some(speedup),
+        });
+        rows.push(JsonRow {
+            name: format!("chain_dp/oracle/{layers}L"),
+            layers,
+            ns_per_iter: reference.median_ns,
+            speedup: None,
+        });
+        if smoke && layers == 32 && new.median_ns > SMOKE_CEILING_NS {
+            eprintln!(
+                "PERF SMOKE FAILURE: 32-layer unconstrained search took {:.1} ms/iter \
+                 (ceiling {:.0} ms)",
+                new.median_ns / 1e6,
+                SMOKE_CEILING_NS / 1e6
+            );
+            smoke_breach = true;
+        }
+    }
+
+    if !smoke {
+        // brute force needs a tiny instance count to stay exponential-but-sane
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(2);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let db = profile_model(&g, &bs, &ss, &opts);
+        bench("brute_force/serial/gpt-tiny-2L", Duration::from_secs(2), || {
+            black_box(cost::brute_force(&ss, &db, None));
+        });
+        bench("brute_force/threads=4/gpt-tiny-2L", Duration::from_secs(2), || {
+            black_box(cost::brute_force_with(&ss, &db, None, 4));
+        });
+    }
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_search.json");
+    match merge_bench_json(&path, &rows) {
+        Ok(()) => println!("wrote {} rows to {}", rows.len(), path.display()),
+        Err(e) => eprintln!("could not write {}: {e}", path.display()),
+    }
+    if smoke_breach {
+        std::process::exit(1);
+    }
 }

@@ -424,11 +424,14 @@ pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> Cfp
     timings.est_profile_s = db.stats.est_profile_s;
     timings.est_optimized_s = db.stats.est_optimized_s;
 
-    // ComposeSearch
+    // ComposeSearch (one SearchCtx serves the capped pass and the
+    // unconstrained fallback)
     let t2 = Instant::now();
     let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
-    let plan = cost::search(&segments, &db, cap)
-        .or_else(|| cost::search(&segments, &db, None))
+    let sctx = cost::SearchCtx::new(&segments, &db);
+    let n = segments.instances.len();
+    let plan = cost::search_span_ctx(&sctx, cap, 0, n)
+        .or_else(|| cost::search_span_ctx(&sctx, None, 0, n))
         .expect("no feasible plan");
     timings.compose_search_s = t2.elapsed().as_secs_f64();
 
@@ -455,6 +458,12 @@ pub struct TwoLevelResult {
     pub profile_hits: usize,
     /// unique segments actually profiled across the same passes
     pub profile_misses: usize,
+    /// wall-clock µs spent inside plan search: the single-stage
+    /// ComposeSearch plus the inter-op planning (span sweeps + stage DP,
+    /// CFP and the naive baseline) — what `cfp serve`'s `search_us`
+    /// counter and the harness `search µs` column accumulate, so serving
+    /// deployments can observe search-side speedups directly
+    pub search_us: f64,
 }
 
 /// Run the two-level planner: the single-stage CFP pipeline first (its
@@ -515,9 +524,12 @@ pub fn run_cfp_two_level_with_handle(
     // outside memory-aware mode k = 1 is always feasible, so both plans
     // are Some; under a cap, None means "does not fit, even checkpointed"
     // (for the naive baseline exactly as for the CFP planner)
+    let t_plan = Instant::now();
     let pipeline = interop::plan_pipeline(&single.graph, &ctxs, &popts);
     let naive = baselines::naive_pipeline_plan(&single.graph, &ctxs, &popts);
-    TwoLevelResult { single, pipeline, naive, profile_hits, profile_misses }
+    let search_us =
+        (single.timings.compose_search_s + t_plan.elapsed().as_secs_f64()) * 1e6;
+    TwoLevelResult { single, pipeline, naive, profile_hits, profile_misses, search_us }
 }
 
 /// Plans from every framework for a model/platform (Fig. 7 row).

@@ -1,0 +1,220 @@
+//! `SearchCtx`: the precomputed, flat view of a `(SegmentSet, ProfileDb)`
+//! pair that the repetition-aware span DP runs on.
+//!
+//! The pre-refactor DP ([`super::oracle`]) paid three per-transition
+//! costs in its innermost loop: a `HashMap` lookup plus an
+//! `Option::and_then` chain for every reshard edge (`ProfileDb::
+//! reshard_us`), a bounds-checked double index into the per-segment
+//! column vectors, and (on the memory axis) a fresh `remat_points`
+//! allocation per (position, config). A `SearchCtx` hoists all three
+//! into construction time:
+//!
+//! * **SoA config columns** — `time[off[u] + cfg]` (= `t_c + t_p`),
+//!   `mem`, `stat` (= profile memory minus activations) and `act` are
+//!   flat vectors over all (unique, config) pairs, in unique-id then
+//!   config order.
+//! * **Dense transition matrices** — for every *adjacent unique pair*
+//!   that actually occurs in the chain, a row-major `from_cfg × to_cfg`
+//!   reshard matrix (`mats`), with `step_mat[i]` naming the matrix for
+//!   the transition into chain position `i`. Absent tables dense-expand
+//!   to the same `0.0` the hash lookup defaulted to, so values are
+//!   unchanged bit-for-bit.
+//! * **Remat frontiers** — one [`crate::memory::RematTable`] shared by
+//!   every memory-axis search over this context.
+//!
+//! Construction is `O(chain + Σ_pairs C²)` — noise next to a single DP
+//! pass — and the context is immutable afterwards, so the inter-op
+//! planner wraps it in an `Arc` and fans sweep jobs over the thread
+//! pool against one shared copy.
+
+use std::collections::HashMap;
+
+use crate::memory::RematTable;
+use crate::profiler::ProfileDb;
+use crate::segment::SegmentSet;
+
+/// Precomputed flat view of one `(SegmentSet, ProfileDb)` pair.
+pub struct SearchCtx {
+    /// chain length (instances)
+    pub(super) n: usize,
+    /// unique id per chain position
+    pub(super) uid: Vec<usize>,
+    /// config count per unique
+    pub(super) ncfg: Vec<usize>,
+    /// flat-column offset per unique (len = uniques + 1)
+    pub(super) off: Vec<usize>,
+    /// `t_c + t_p` per (unique, config)
+    pub(super) time: Vec<f64>,
+    /// profile peak memory per (unique, config)
+    pub(super) mem: Vec<u64>,
+    /// static (non-activation) bytes per (unique, config)
+    pub(super) stat: Vec<u64>,
+    /// transition-matrix id per chain position (`step_mat[i]` prices the
+    /// edge from position `i − 1` into `i`; `step_mat[0]` is unused)
+    pub(super) step_mat: Vec<usize>,
+    /// dense reshard matrices, row-major `[from_cfg * ncfg_to + to_cfg]`
+    pub(super) mats: Vec<Vec<f64>>,
+    /// rematerialization frontiers per flat (unique, config)
+    pub(super) remat: RematTable,
+}
+
+impl SearchCtx {
+    pub fn new(ss: &SegmentSet, db: &ProfileDb) -> SearchCtx {
+        let uniques = db.segments.len();
+        let mut ncfg = Vec::with_capacity(uniques);
+        let mut off = Vec::with_capacity(uniques + 1);
+        off.push(0usize);
+        for p in &db.segments {
+            ncfg.push(p.configs.len());
+            off.push(off.last().unwrap() + p.configs.len());
+        }
+        let total = *off.last().unwrap();
+        let mut time = Vec::with_capacity(total);
+        let mut mem = Vec::with_capacity(total);
+        let mut stat = Vec::with_capacity(total);
+        for p in &db.segments {
+            for cfg in 0..p.configs.len() {
+                // the same float op the oracle's inner loop performs
+                time.push(p.t_c_us[cfg] + p.t_p_us[cfg]);
+                mem.push(p.mem_bytes[cfg]);
+                stat.push(crate::memory::seg_static_bytes(p, cfg));
+            }
+        }
+
+        let n = ss.instances.len();
+        let uid: Vec<usize> = ss.instances.iter().map(|i| i.unique_id).collect();
+        let mut mats: Vec<Vec<f64>> = Vec::new();
+        let mut by_pair: HashMap<(usize, usize), usize> = HashMap::new();
+        let mut step_mat = vec![usize::MAX; n];
+        for i in 1..n {
+            let pair = (uid[i - 1], uid[i]);
+            let id = *by_pair.entry(pair).or_insert_with(|| {
+                let (a, b) = pair;
+                let (ca, cb) = (ncfg[a], ncfg[b]);
+                let mut m = Vec::with_capacity(ca * cb);
+                for fc in 0..ca {
+                    for tc in 0..cb {
+                        m.push(db.reshard_us(a, fc, b, tc));
+                    }
+                }
+                mats.push(m);
+                mats.len() - 1
+            });
+            step_mat[i] = id;
+        }
+
+        SearchCtx {
+            n,
+            uid,
+            ncfg,
+            off,
+            time,
+            mem,
+            stat,
+            step_mat,
+            mats,
+            remat: RematTable::build(db),
+        }
+    }
+
+    /// Chain length.
+    pub fn len(&self) -> usize {
+        self.n
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.n == 0
+    }
+
+    /// True when the DP step into position `i` is the *same* min-plus
+    /// transition as the step into `i − 1`: both endpoints and the
+    /// transition matrix repeat, so the two steps are interchangeable —
+    /// the unit the steady-state splice collapses.
+    pub(super) fn repeated_step(&self, i: usize) -> bool {
+        i >= 2 && self.uid[i] == self.uid[i - 1] && self.uid[i - 1] == self.uid[i - 2]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::profiler::{ReshardTable, SegmentConfig, SegmentProfile};
+    use crate::segment::{SegmentInstance, UniqueSegment};
+    use crate::spmd::ShardState;
+
+    fn profile(cfgs: usize, base: f64) -> SegmentProfile {
+        SegmentProfile {
+            configs: (0..cfgs).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+            t_c_us: (0..cfgs).map(|c| base + c as f64).collect(),
+            t_p_us: (0..cfgs).map(|c| 2.0 * base + c as f64).collect(),
+            mem_bytes: (0..cfgs).map(|c| 1000 + 10 * c as u64).collect(),
+            act_bytes: (0..cfgs).map(|c| 600 + c as u64).collect(),
+            ckpt_bytes: vec![50; cfgs],
+            t_fwd_us: vec![base; cfgs],
+            symbolic_volume: vec![0; cfgs],
+            boundary_out: vec![ShardState::Replicated; cfgs],
+            boundary_in: vec![ShardState::Replicated; cfgs],
+        }
+    }
+
+    fn chain(uids: &[usize], uniques: usize) -> SegmentSet {
+        let instances: Vec<SegmentInstance> = uids
+            .iter()
+            .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+            .collect();
+        let unique = (0..uniques)
+            .map(|u| UniqueSegment {
+                id: u,
+                fingerprint: format!("u{u}"),
+                rep: uids.iter().position(|&x| x == u).unwrap_or(0),
+                count: uids.iter().filter(|&&x| x == u).count(),
+            })
+            .collect();
+        SegmentSet { instances, unique }
+    }
+
+    #[test]
+    fn ctx_mirrors_db_columns_and_reshard_tables() {
+        let mut db = ProfileDb::default();
+        db.segments.push(profile(2, 10.0));
+        db.segments.push(profile(3, 20.0));
+        db.reshard.insert(
+            (0, 1),
+            ReshardTable {
+                t_r_us: vec![vec![1.0, 2.0, 3.0], vec![4.0, 5.0, 6.0]],
+                sym_vol: vec![vec![0; 3]; 2],
+                programs: 6,
+            },
+        );
+        let ss = chain(&[0, 1, 1, 0], 2);
+        let ctx = SearchCtx::new(&ss, &db);
+        assert_eq!(ctx.len(), 4);
+        assert_eq!(ctx.off, vec![0, 2, 5]);
+        for u in 0..2usize {
+            let p = &db.segments[u];
+            for cfg in 0..p.configs.len() {
+                let f = ctx.off[u] + cfg;
+                assert_eq!(ctx.time[f], p.t_c_us[cfg] + p.t_p_us[cfg]);
+                assert_eq!(ctx.mem[f], p.mem_bytes[cfg]);
+            }
+        }
+        // dense matrices reproduce reshard_us incl. the 0.0 default for
+        // the absent (1, 1) and (1, 0) tables
+        for i in 1..4 {
+            let (a, b) = (ctx.uid[i - 1], ctx.uid[i]);
+            let m = &ctx.mats[ctx.step_mat[i]];
+            for fc in 0..ctx.ncfg[a] {
+                for tc in 0..ctx.ncfg[b] {
+                    assert_eq!(m[fc * ctx.ncfg[b] + tc], db.reshard_us(a, fc, b, tc));
+                }
+            }
+        }
+        // repeated-step detection: only position 2 follows an identical edge
+        assert!(!ctx.repeated_step(1));
+        assert!(!ctx.repeated_step(2), "edge (0,1) then (1,1) differ");
+        let ss = chain(&[0, 0, 0, 1], 2);
+        let ctx = SearchCtx::new(&ss, &db);
+        assert!(ctx.repeated_step(2));
+        assert!(!ctx.repeated_step(3));
+    }
+}

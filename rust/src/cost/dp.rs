@@ -1,0 +1,621 @@
+//! The span-DP engines behind [`super::search_span`] and
+//! [`super::search_span_mem`], all running on a [`SearchCtx`]:
+//!
+//! * **Scalar lane** (`scalar_*`) — the unconstrained (`mem_cap = None`)
+//!   DP. Without a cap the per-(position, config) Pareto set of the
+//!   reference DP collapses to its min-time point (every frontier is
+//!   time-sorted and the terminal rule is strict-min-time, so only each
+//!   set's head can ever be an ancestor of the winner); the state is one
+//!   `(time, mem, backpointer)` scalar per config, selected by the
+//!   reference's exact tie order — lexicographic `(time, mem)`, earliest
+//!   predecessor config on full ties. On top of it sits the
+//!   **steady-state splice**: for runs of identical adjacent transitions
+//!   (same unique pair, same reshard matrix), once two consecutive full
+//!   steps produce the *same* backpointer vector and *uniform* per-config
+//!   deltas, every further step of the run is the same min-plus map — the
+//!   argmin is invariant under a uniform shift — so the run is
+//!   fast-forwarded with the fixed backpointers at `O(C)` per position
+//!   instead of `O(C²)`. Values are still produced by replaying the
+//!   reference's own float additions (never by multiplying the delta),
+//!   and every `VERIFY_EVERY` positions (plus the last of each run) a
+//!   full argmin step cross-checks the spliced state; a mismatch rolls
+//!   back to the last verified position and recomputes per-position.
+//! * **Pareto lane** (`pareto_*`) — the memory-capped DP, identical in
+//!   values and tie-breaks to the reference ([`super::oracle`]), with the
+//!   hash lookups replaced by dense matrix reads and the per-(position,
+//!   config) candidate buffer reused across the whole span.
+//! * **Memory lane** (`mem_*`) — the (config × remat) frontier DP of
+//!   `search_span_mem`, same treatment: dense transitions, precomputed
+//!   remat frontiers ([`crate::memory::RematTable`]), in-place pruning,
+//!   one scratch buffer per span.
+//!
+//! Every lane is *prefix-closed*: the state at position `i` does not
+//! depend on where the span ends, which is what lets
+//! [`super::sweep`] answer every `[lo, hi)` from one forward pass.
+//!
+//! Residual float caveat (documented in ARCHITECTURE.md "plan search"):
+//! a ulp-scale collision between two independently-computed candidate
+//! sums could give the reference a lower-memory tied ancestor the
+//! heads-only scalar state never tracks, or slip an argmin flip past a
+//! splice checkpoint (which cross-checks one step from the spliced
+//! state, not the whole window). Both require exact f64 ties between
+//! unrelated sums — measure-zero on profiled values, impossible in
+//! exact-arithmetic regimes, and plan *time* is unaffected either way;
+//! the property suite pins full bit-identity on randomized inputs.
+
+use crate::memory::{RecomputeSpec, SpanFootprint, SpanMemPlan};
+
+use super::ctx::SearchCtx;
+use super::Plan;
+
+pub(super) const FRONTIER_CAP: usize = 24;
+pub(super) const MEM_FRONTIER_CAP: usize = 16;
+/// Full-argmin cross-check cadence inside a steady-state splice.
+const VERIFY_EVERY: usize = 32;
+
+/// Test instrumentation: positions fast-forwarded by the splice, across
+/// the whole process (tests assert it *increases*, never its absolute
+/// value — suites run concurrently).
+#[cfg(test)]
+pub(super) static SPLICED_STEPS: std::sync::atomic::AtomicUsize =
+    std::sync::atomic::AtomicUsize::new(0);
+
+// ---------------------------------------------------------------- scalar lane
+
+/// One unconstrained DP state: min-(time, mem) prefix ending at a config,
+/// with the predecessor config it came through.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(super) struct Scalar {
+    pub time: f64,
+    pub mem: u64,
+    pub bp: u32,
+}
+
+/// Signature of one repeated full step, for steady-state detection.
+struct StepSig {
+    dt: f64,
+    dm: u64,
+    bp: Vec<u32>,
+}
+
+fn scalar_first(ctx: &SearchCtx, pos: usize) -> Vec<Scalar> {
+    let o = ctx.off[ctx.uid[pos]];
+    (0..ctx.ncfg[ctx.uid[pos]])
+        .map(|c| Scalar { time: ctx.time[o + c], mem: ctx.mem[o + c], bp: u32::MAX })
+        .collect()
+}
+
+/// One full argmin step into `pos`. Candidate values replay the
+/// reference's float ops exactly: `(prev + tr) + seg_t`.
+fn scalar_step(ctx: &SearchCtx, prev: &[Scalar], pos: usize, out: &mut Vec<Scalar>) {
+    let u = ctx.uid[pos];
+    let o = ctx.off[u];
+    let cc = ctx.ncfg[u];
+    let mat = &ctx.mats[ctx.step_mat[pos]];
+    out.clear();
+    for c in 0..cc {
+        let seg_t = ctx.time[o + c];
+        let seg_m = ctx.mem[o + c];
+        let mut best = Scalar { time: f64::INFINITY, mem: u64::MAX, bp: 0 };
+        for (p, pp) in prev.iter().enumerate() {
+            let t = pp.time + mat[p * cc + c] + seg_t;
+            let m = pp.mem + seg_m;
+            if t < best.time || (t == best.time && m < best.mem) {
+                best = Scalar { time: t, mem: m, bp: p as u32 };
+            }
+        }
+        out.push(best);
+    }
+}
+
+/// One spliced step: the argmin is pinned to `bp`, the values replay the
+/// same additions the full step would have performed through it.
+fn scalar_fast_step(
+    ctx: &SearchCtx,
+    prev: &[Scalar],
+    pos: usize,
+    bp: &[u32],
+    out: &mut Vec<Scalar>,
+) {
+    let u = ctx.uid[pos];
+    let o = ctx.off[u];
+    let cc = ctx.ncfg[u];
+    let mat = &ctx.mats[ctx.step_mat[pos]];
+    out.clear();
+    for c in 0..cc {
+        let p = bp[c] as usize;
+        let pp = prev[p];
+        out.push(Scalar {
+            time: pp.time + mat[p * cc + c] + ctx.time[o + c],
+            mem: pp.mem + ctx.mem[o + c],
+            bp: bp[c],
+        });
+    }
+}
+
+/// Per-position scalar states of the span `[lo, hi)` — the shared
+/// substrate of the single-span search (which backtracks from any
+/// position) and the span sweeps (which read a terminal per position).
+/// The returned vector is truncated at the first position with an empty
+/// config space (no plan can cross it); a full-length result covers the
+/// whole span.
+pub(super) fn scalar_states(ctx: &SearchCtx, lo: usize, hi: usize) -> Vec<Vec<Scalar>> {
+    debug_assert!(lo <= hi && hi <= ctx.len());
+    let n = hi - lo;
+    let mut states: Vec<Vec<Scalar>> = Vec::with_capacity(n);
+    if n == 0 || ctx.ncfg[ctx.uid[lo]] == 0 {
+        return states;
+    }
+    states.push(scalar_first(ctx, lo));
+    let mut sig: Option<StepSig> = None;
+    let mut steady: Option<Vec<u32>> = None;
+    let mut last_verified = 0usize;
+    let mut scratch: Vec<Scalar> = Vec::new();
+    for i in 1..n {
+        let pos = lo + i;
+        if ctx.ncfg[ctx.uid[pos]] == 0 {
+            break;
+        }
+        // a repeated step needs BOTH transitions inside the span
+        let repeated = i >= 2 && ctx.repeated_step(pos);
+        if !repeated {
+            sig = None;
+            steady = None;
+            last_verified = i - 1;
+        }
+        if let Some(bp) = steady.clone() {
+            scalar_fast_step(ctx, &states[i - 1], pos, &bp, &mut scratch);
+            #[cfg(test)]
+            SPLICED_STEPS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            let run_ends = i + 1 >= n
+                || ctx.ncfg[ctx.uid[pos + 1]] == 0
+                || !ctx.repeated_step(pos + 1);
+            if run_ends || i - last_verified >= VERIFY_EVERY {
+                let mut full = Vec::new();
+                scalar_step(ctx, &states[i - 1], pos, &mut full);
+                if full == scratch {
+                    states.push(full);
+                } else {
+                    // float rounding broke the splice invariant:
+                    // recompute the unverified tail per-position
+                    steady = None;
+                    sig = None;
+                    for j in (last_verified + 1)..i {
+                        let mut redo = Vec::new();
+                        scalar_step(ctx, &states[j - 1], lo + j, &mut redo);
+                        states[j] = redo;
+                    }
+                    let mut redo = Vec::new();
+                    scalar_step(ctx, &states[i - 1], pos, &mut redo);
+                    states.push(redo);
+                }
+                last_verified = i;
+            } else {
+                states.push(scratch.clone());
+            }
+            continue;
+        }
+        let mut cur = Vec::new();
+        scalar_step(ctx, &states[i - 1], pos, &mut cur);
+        if repeated {
+            // detection: two consecutive repeated steps with the same
+            // backpointers and uniform (time, mem) deltas — from there the
+            // argmin is shift-invariant and the run can be spliced
+            let prev = &states[i - 1];
+            let dt = cur[0].time - prev[0].time;
+            let dm = cur[0].mem.wrapping_sub(prev[0].mem);
+            let uniform = cur
+                .iter()
+                .zip(prev.iter())
+                .all(|(c, p)| c.time - p.time == dt && c.mem.wrapping_sub(p.mem) == dm);
+            if uniform {
+                let bp: Vec<u32> = cur.iter().map(|s| s.bp).collect();
+                if let Some(s) = &sig {
+                    if s.dt == dt && s.dm == dm && s.bp == bp {
+                        steady = Some(bp.clone());
+                    }
+                }
+                sig = Some(StepSig { dt, dm, bp });
+            } else {
+                sig = None;
+            }
+        }
+        last_verified = i;
+        states.push(cur);
+    }
+    states
+}
+
+/// Best terminal time of a scalar state vector (the reference's strict
+/// min-time, earliest-config rule).
+pub(super) fn scalar_best_time(states: &[Scalar]) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for s in states {
+        if best.map_or(true, |b| s.time < b) {
+            best = Some(s.time);
+        }
+    }
+    best
+}
+
+/// Unconstrained min-time plan for `[lo, hi)` via the scalar lane.
+pub(super) fn scalar_plan(ctx: &SearchCtx, lo: usize, hi: usize) -> Option<Plan> {
+    let n = hi - lo;
+    if n == 0 {
+        return None;
+    }
+    let states = scalar_states(ctx, lo, hi);
+    if states.len() < n {
+        return None;
+    }
+    let last = &states[n - 1];
+    let mut best: Option<usize> = None;
+    for (c, s) in last.iter().enumerate() {
+        if best.map_or(true, |b| s.time < last[b].time) {
+            best = Some(c);
+        }
+    }
+    let mut c = best?;
+    let terminal = last[c];
+    let mut choice = vec![0usize; n];
+    for i in (0..n).rev() {
+        choice[i] = c;
+        if i > 0 {
+            c = states[i][c].bp as usize;
+        }
+    }
+    Some(Plan { choice, time_us: terminal.time, mem_bytes: terminal.mem })
+}
+
+// ---------------------------------------------------------------- pareto lane
+
+/// Pareto point with backpointer (the capped DP's state).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(super) struct Point {
+    pub time: f64,
+    pub mem: u64,
+    pub prev_cfg: usize,
+    pub prev_idx: usize,
+}
+
+pub(super) fn pareto_first(ctx: &SearchCtx, pos: usize, cap: u64) -> Vec<Vec<Point>> {
+    let o = ctx.off[ctx.uid[pos]];
+    (0..ctx.ncfg[ctx.uid[pos]])
+        .map(|c| {
+            let mem = ctx.mem[o + c];
+            if mem <= cap {
+                vec![Point {
+                    time: ctx.time[o + c],
+                    mem,
+                    prev_cfg: usize::MAX,
+                    prev_idx: usize::MAX,
+                }]
+            } else {
+                Vec::new()
+            }
+        })
+        .collect()
+}
+
+/// One capped Pareto step into `pos`. `scratch` is the candidate buffer
+/// reused across every (position, config) of a span.
+pub(super) fn pareto_step(
+    ctx: &SearchCtx,
+    prev: &[Vec<Point>],
+    pos: usize,
+    cap: u64,
+    scratch: &mut Vec<Point>,
+) -> Vec<Vec<Point>> {
+    let u = ctx.uid[pos];
+    let o = ctx.off[u];
+    let cc = ctx.ncfg[u];
+    let mat = &ctx.mats[ctx.step_mat[pos]];
+    let mut cur: Vec<Vec<Point>> = Vec::with_capacity(cc);
+    for c in 0..cc {
+        let seg_t = ctx.time[o + c];
+        let seg_m = ctx.mem[o + c];
+        scratch.clear();
+        for (pcfg, pset) in prev.iter().enumerate() {
+            if pset.is_empty() {
+                continue;
+            }
+            let tr = mat[pcfg * cc + c];
+            for (pidx, pp) in pset.iter().enumerate() {
+                let time = pp.time + tr + seg_t;
+                let mem = pp.mem + seg_m;
+                if mem <= cap {
+                    scratch.push(Point { time, mem, prev_cfg: pcfg, prev_idx: pidx });
+                }
+            }
+        }
+        pareto_prune(scratch);
+        cur.push(scratch.clone());
+    }
+    cur
+}
+
+/// Best terminal time across a Pareto frontier (strict min-time,
+/// earliest (config, index) — the reference's terminal rule).
+pub(super) fn pareto_best_time(front: &[Vec<Point>]) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for pts in front {
+        for p in pts {
+            if best.map_or(true, |b| p.time < b) {
+                best = Some(p.time);
+            }
+        }
+    }
+    best
+}
+
+/// Memory-capped min-time plan for `[lo, hi)` via the Pareto lane.
+pub(super) fn pareto_plan(ctx: &SearchCtx, cap: u64, lo: usize, hi: usize) -> Option<Plan> {
+    let n = hi - lo;
+    if n == 0 {
+        return None;
+    }
+    let mut frontiers: Vec<Vec<Vec<Point>>> = Vec::with_capacity(n);
+    frontiers.push(pareto_first(ctx, lo, cap));
+    let mut scratch: Vec<Point> = Vec::new();
+    for i in 1..n {
+        let next = pareto_step(ctx, &frontiers[i - 1], lo + i, cap, &mut scratch);
+        frontiers.push(next);
+    }
+    let last = &frontiers[n - 1];
+    let mut best: Option<(usize, usize)> = None;
+    for (cfg, pts) in last.iter().enumerate() {
+        for (idx, p) in pts.iter().enumerate() {
+            if best.map_or(true, |(bc, bi)| p.time < last[bc][bi].time) {
+                best = Some((cfg, idx));
+            }
+        }
+    }
+    let (mut cfg, mut idx) = best?;
+    let terminal = last[cfg][idx];
+    let mut choice = vec![0usize; n];
+    for i in (0..n).rev() {
+        choice[i] = cfg;
+        let p = frontiers[i][cfg][idx];
+        cfg = p.prev_cfg;
+        idx = p.prev_idx;
+    }
+    Some(Plan { choice, time_us: terminal.time, mem_bytes: terminal.mem })
+}
+
+/// In-place Pareto prune: time-sorted, strictly-decreasing memory, then
+/// thinned to `FRONTIER_CAP` evenly spaced representatives incl.
+/// endpoints — the reference's exact kept set, without its two
+/// intermediate allocations.
+pub(super) fn pareto_prune(pts: &mut Vec<Point>) {
+    pts.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap().then(a.mem.cmp(&b.mem)));
+    let mut best_mem = u64::MAX;
+    let mut w = 0usize;
+    for r in 0..pts.len() {
+        let p = pts[r];
+        if p.mem < best_mem {
+            best_mem = p.mem;
+            pts[w] = p;
+            w += 1;
+        }
+    }
+    pts.truncate(w);
+    if pts.len() > FRONTIER_CAP {
+        // source index ≥ write index (step > 1), so in-place is safe
+        let step = (pts.len() - 1) as f64 / (FRONTIER_CAP - 1) as f64;
+        for k in 0..FRONTIER_CAP {
+            pts[k] = pts[(k as f64 * step).round() as usize];
+        }
+        pts.truncate(FRONTIER_CAP);
+    }
+}
+
+// ---------------------------------------------------------------- memory lane
+
+/// Pareto point of the memory-axis span DP: time (recompute included) and
+/// the three components of the 1F1B footprint, with backpointers.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub(super) struct MemPoint {
+    pub time: f64,
+    pub recompute: f64,
+    pub stat: u64,
+    pub ret: u64,
+    pub tra: u64,
+    pub ckpt: bool,
+    pub prev_cfg: usize,
+    pub prev_idx: usize,
+}
+
+pub(super) fn mem_first(ctx: &SearchCtx, pos: usize, spec: RecomputeSpec) -> Vec<Vec<MemPoint>> {
+    let u = ctx.uid[pos];
+    let o = ctx.off[u];
+    (0..ctx.ncfg[u])
+        .map(|c| {
+            let seg_t = ctx.time[o + c];
+            let stat = ctx.stat[o + c];
+            let mut pts: Vec<MemPoint> = ctx
+                .remat
+                .points(o + c, spec)
+                .iter()
+                .map(|r| MemPoint {
+                    time: seg_t + r.extra_us,
+                    recompute: r.extra_us,
+                    stat,
+                    ret: r.retained_bytes,
+                    tra: r.transient_bytes,
+                    ckpt: r.checkpoint,
+                    prev_cfg: usize::MAX,
+                    prev_idx: usize::MAX,
+                })
+                .collect();
+            prune_mem(&mut pts);
+            pts
+        })
+        .collect()
+}
+
+/// One memory-axis step into `pos`: the (config × remat) product, with
+/// the reshard row read from the dense matrix and the remat frontier
+/// from the precomputed table — nothing allocated but the kept set.
+pub(super) fn mem_step(
+    ctx: &SearchCtx,
+    prev: &[Vec<MemPoint>],
+    pos: usize,
+    spec: RecomputeSpec,
+    scratch: &mut Vec<MemPoint>,
+) -> Vec<Vec<MemPoint>> {
+    let u = ctx.uid[pos];
+    let o = ctx.off[u];
+    let cc = ctx.ncfg[u];
+    let mat = &ctx.mats[ctx.step_mat[pos]];
+    let mut cur: Vec<Vec<MemPoint>> = Vec::with_capacity(cc);
+    for c in 0..cc {
+        let seg_t = ctx.time[o + c];
+        let stat = ctx.stat[o + c];
+        let rpts = ctx.remat.points(o + c, spec);
+        scratch.clear();
+        for (pcfg, pset) in prev.iter().enumerate() {
+            if pset.is_empty() {
+                continue;
+            }
+            let tr = mat[pcfg * cc + c];
+            for (pidx, pp) in pset.iter().enumerate() {
+                for r in rpts {
+                    scratch.push(MemPoint {
+                        time: pp.time + tr + seg_t + r.extra_us,
+                        recompute: pp.recompute + r.extra_us,
+                        stat: pp.stat + stat,
+                        ret: pp.ret + r.retained_bytes,
+                        tra: pp.tra.max(r.transient_bytes),
+                        ckpt: r.checkpoint,
+                        prev_cfg: pcfg,
+                        prev_idx: pidx,
+                    });
+                }
+            }
+        }
+        prune_mem(scratch);
+        cur.push(scratch.clone());
+    }
+    cur
+}
+
+/// Kept terminal points of a memory-axis frontier, in the canonical
+/// (time, stat, ret, tra)-sorted, dominance-filtered order the reference
+/// emits — shared by the single-span search and the sweeps.
+pub(super) fn mem_terminals(last: &[Vec<MemPoint>]) -> Vec<(usize, usize)> {
+    let mut terminals: Vec<(usize, usize)> = Vec::new();
+    for (cfg, pts) in last.iter().enumerate() {
+        for idx in 0..pts.len() {
+            terminals.push((cfg, idx));
+        }
+    }
+    terminals.sort_by(|a, b| {
+        let (pa, pb) = (&last[a.0][a.1], &last[b.0][b.1]);
+        pa.time
+            .partial_cmp(&pb.time)
+            .unwrap()
+            .then(pa.stat.cmp(&pb.stat))
+            .then(pa.ret.cmp(&pb.ret))
+            .then(pa.tra.cmp(&pb.tra))
+    });
+    let mut kept: Vec<(usize, usize)> = Vec::new();
+    for t in terminals {
+        let p = &last[t.0][t.1];
+        let dominated = kept.iter().any(|&(c, i)| {
+            let q = &last[c][i];
+            q.stat <= p.stat && q.ret <= p.ret && q.tra <= p.tra
+        });
+        if !dominated {
+            kept.push(t);
+        }
+    }
+    kept
+}
+
+/// The full memory-axis span search: frontier DP + terminal extraction +
+/// backtrack into [`SpanMemPlan`]s.
+pub(super) fn mem_span(
+    ctx: &SearchCtx,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+) -> Vec<SpanMemPlan> {
+    let n = hi - lo;
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut frontiers: Vec<Vec<Vec<MemPoint>>> = Vec::with_capacity(n);
+    frontiers.push(mem_first(ctx, lo, spec));
+    let mut scratch: Vec<MemPoint> = Vec::new();
+    for i in 1..n {
+        let next = mem_step(ctx, &frontiers[i - 1], lo + i, spec, &mut scratch);
+        frontiers.push(next);
+    }
+    mem_terminals(&frontiers[n - 1])
+        .into_iter()
+        .map(|(cfg, idx)| backtrack_mem(&frontiers, n, cfg, idx))
+        .collect()
+}
+
+/// In-place memory-axis prune: keep points that lower the running
+/// minimum of any footprint component in time order, thin to
+/// `MEM_FRONTIER_CAP` — the reference's exact kept set.
+pub(super) fn prune_mem(pts: &mut Vec<MemPoint>) {
+    pts.sort_by(|a, b| {
+        a.time
+            .partial_cmp(&b.time)
+            .unwrap()
+            .then(a.stat.cmp(&b.stat))
+            .then(a.ret.cmp(&b.ret))
+            .then(a.tra.cmp(&b.tra))
+    });
+    let (mut min_stat, mut min_ret, mut min_tra) = (u64::MAX, u64::MAX, u64::MAX);
+    let mut w = 0usize;
+    for r in 0..pts.len() {
+        let p = pts[r];
+        if w == 0 || p.stat < min_stat || p.ret < min_ret || p.tra < min_tra {
+            min_stat = min_stat.min(p.stat);
+            min_ret = min_ret.min(p.ret);
+            min_tra = min_tra.min(p.tra);
+            pts[w] = p;
+            w += 1;
+        }
+    }
+    pts.truncate(w);
+    if pts.len() > MEM_FRONTIER_CAP {
+        let step = (pts.len() - 1) as f64 / (MEM_FRONTIER_CAP - 1) as f64;
+        for k in 0..MEM_FRONTIER_CAP {
+            pts[k] = pts[(k as f64 * step).round() as usize];
+        }
+        pts.truncate(MEM_FRONTIER_CAP);
+    }
+}
+
+fn backtrack_mem(
+    frontiers: &[Vec<Vec<MemPoint>>],
+    n: usize,
+    mut cfg: usize,
+    mut idx: usize,
+) -> SpanMemPlan {
+    let terminal = frontiers[n - 1][cfg][idx];
+    let mut choice = vec![0usize; n];
+    let mut remat = vec![false; n];
+    for i in (0..n).rev() {
+        let p = frontiers[i][cfg][idx];
+        choice[i] = cfg;
+        remat[i] = p.ckpt;
+        cfg = p.prev_cfg;
+        idx = p.prev_idx;
+    }
+    SpanMemPlan {
+        choice,
+        remat,
+        time_us: terminal.time,
+        footprint: SpanFootprint {
+            static_bytes: terminal.stat,
+            retained_bytes: terminal.ret,
+            transient_bytes: terminal.tra,
+            recompute_us: terminal.recompute,
+        },
+    }
+}

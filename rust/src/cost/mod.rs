@@ -7,6 +7,16 @@
 //! segments may pick *different* configs to ride the memory cap — the
 //! §4.4 "some segments fast-but-fat, others lean-but-slow" behaviour.
 //!
+//! Since PR 5 the search core is *repetition-aware*: every span solver
+//! runs on a [`SearchCtx`] (flat SoA config columns + dense per-adjacent-
+//! unique-pair reshard matrices + precomputed remat frontiers, built once
+//! per `(SegmentSet, ProfileDb)`), the unconstrained DP collapses runs of
+//! identical transitions through a verified steady-state splice (the
+//! private `dp` engine module), and [`sweep`] answers *every* span `[lo, hi)`
+//! sharing a prefix from one forward pass — the unit the inter-op
+//! planner fans out over the thread pool. The pre-refactor DP survives
+//! verbatim in [`oracle`] as the bit-identity baseline.
+//!
 //! # Invariants
 //!
 //! * **Chain contiguity.** Every searcher walks `SegmentSet::instances`
@@ -26,13 +36,25 @@
 //! * **Span composition.** `search(ss, ..) == search_span(ss, .., 0, n)`
 //!   by construction — the whole-chain search is the degenerate span, so
 //!   single-stage plans and `k = 1` pipeline stages are bit-identical.
+//! * **Reference equivalence.** `search_span` / `search_span_mem` return
+//!   plans bit-identical (choice, time, mem) to [`oracle`]'s per-position
+//!   DP — pinned by `rust/tests/prop_search_equivalence.rs` across
+//!   randomized profiles, caps, and span bounds.
+
+mod ctx;
+mod dp;
+pub mod oracle;
+pub mod sweep;
 
 use std::sync::Arc;
 
-use crate::memory::{self, RecomputeSpec, SpanMemPlan};
+use crate::memory::{RecomputeSpec, SpanMemPlan};
 use crate::profiler::ProfileDb;
 use crate::segment::SegmentSet;
 use crate::util::ThreadPool;
+
+pub use ctx::SearchCtx;
+pub use sweep::{select_time, sweep_span_frontiers, sweep_span_times, FrontierRow};
 
 /// A selected global configuration: one config index per segment instance.
 #[derive(Clone, Debug, PartialEq)]
@@ -76,17 +98,6 @@ pub fn plan_cost_span(
     (time, mem)
 }
 
-/// Pareto point with backpointer.
-#[derive(Clone, Copy, Debug)]
-struct Point {
-    time: f64,
-    mem: u64,
-    prev_cfg: usize,
-    prev_idx: usize,
-}
-
-const FRONTIER_CAP: usize = 24;
-
 /// Min-time plan with `C_M ≤ mem_cap` (None = unconstrained).
 /// Returns None if no feasible plan exists.
 pub fn search(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<Plan> {
@@ -98,6 +109,9 @@ pub fn search(ss: &SegmentSet, db: &ProfileDb, mem_cap: Option<u64>) -> Option<P
 /// returned plan's `choice[i]` is the config of instance `lo + i`; its
 /// time/memory are the span's own (no entering reshard — see
 /// [`plan_cost_span`]). `search(ss, ..)` is exactly the `[0, n)` span.
+///
+/// Builds a throwaway [`SearchCtx`]; callers solving many spans of one
+/// chain should build the context once and use [`search_span_ctx`].
 pub fn search_span(
     ss: &SegmentSet,
     db: &ProfileDb,
@@ -106,101 +120,37 @@ pub fn search_span(
     hi: usize,
 ) -> Option<Plan> {
     assert!(lo <= hi && hi <= ss.instances.len());
-    let n = hi - lo;
-    if n == 0 {
+    if lo == hi {
         return None;
     }
-    // frontier[cfg] = pareto set of (time, mem) for prefixes ending at cfg
-    let mut frontiers: Vec<Vec<Vec<Point>>> = Vec::with_capacity(n);
-    let u0 = ss.instances[lo].unique_id;
-    let p0 = &db.segments[u0];
-    let mut first: Vec<Vec<Point>> = Vec::new();
-    for cfg in 0..p0.configs.len() {
-        let mem = p0.mem_bytes[cfg];
-        let time = p0.t_c_us[cfg] + p0.t_p_us[cfg];
-        let mut pts = Vec::new();
-        if mem_cap.map_or(true, |cap| mem <= cap) {
-            pts.push(Point { time, mem, prev_cfg: usize::MAX, prev_idx: usize::MAX });
-        }
-        first.push(pts);
-    }
-    frontiers.push(first);
-
-    for i in 1..n {
-        let u = ss.instances[lo + i].unique_id;
-        let pu = ss.instances[lo + i - 1].unique_id;
-        let prof = &db.segments[u];
-        let prev = &frontiers[i - 1];
-        let mut cur: Vec<Vec<Point>> = Vec::with_capacity(prof.configs.len());
-        for cfg in 0..prof.configs.len() {
-            let seg_t = prof.t_c_us[cfg] + prof.t_p_us[cfg];
-            let seg_m = prof.mem_bytes[cfg];
-            let mut pts: Vec<Point> = Vec::new();
-            for (pcfg, pset) in prev.iter().enumerate() {
-                if pset.is_empty() {
-                    continue;
-                }
-                let tr = db.reshard_us(pu, pcfg, u, cfg);
-                for (pidx, pp) in pset.iter().enumerate() {
-                    let time = pp.time + tr + seg_t;
-                    let mem = pp.mem + seg_m;
-                    if mem_cap.map_or(true, |cap| mem <= cap) {
-                        pts.push(Point { time, mem, prev_cfg: pcfg, prev_idx: pidx });
-                    }
-                }
-            }
-            pareto_prune(&mut pts);
-            cur.push(pts);
-        }
-        frontiers.push(cur);
-    }
-
-    // best terminal point
-    let last = &frontiers[n - 1];
-    let mut best: Option<(usize, usize)> = None;
-    for (cfg, pts) in last.iter().enumerate() {
-        for (idx, p) in pts.iter().enumerate() {
-            if best.map_or(true, |(bc, bi)| p.time < last[bc][bi].time) {
-                best = Some((cfg, idx));
-            }
-        }
-    }
-    let (mut cfg, mut idx) = best?;
-    let terminal = last[cfg][idx];
-    let mut choice = vec![0usize; n];
-    for i in (0..n).rev() {
-        choice[i] = cfg;
-        let p = frontiers[i][cfg][idx];
-        cfg = p.prev_cfg;
-        idx = p.prev_idx;
-    }
-    Some(Plan { choice, time_us: terminal.time, mem_bytes: terminal.mem })
+    let ctx = SearchCtx::new(ss, db);
+    search_span_ctx(&ctx, mem_cap, lo, hi)
 }
 
-/// Pareto point of the memory-axis span DP: time (recompute included) and
-/// the three components of the 1F1B footprint, with backpointers.
-#[derive(Clone, Copy, Debug)]
-struct MemPoint {
-    time: f64,
-    recompute: f64,
-    stat: u64,
-    ret: u64,
-    tra: u64,
-    ckpt: bool,
-    prev_cfg: usize,
-    prev_idx: usize,
+/// [`search_span`] over a prebuilt [`SearchCtx`]. Without a cap the
+/// repetition-collapsing scalar lane runs; with one, the capped Pareto
+/// lane (bit-identical to the reference in both cases).
+pub fn search_span_ctx(
+    ctx: &SearchCtx,
+    mem_cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    assert!(lo <= hi && hi <= ctx.len());
+    if lo == hi {
+        return None;
+    }
+    match mem_cap {
+        None => dp::scalar_plan(ctx, lo, hi),
+        Some(cap) => dp::pareto_plan(ctx, cap, lo, hi),
+    }
 }
-
-/// Per-(position, config) cap on the memory-axis frontier (like
-/// `FRONTIER_CAP`, thinning keeps the min-time endpoint, so the
-/// unconstrained optimum is exact).
-const MEM_FRONTIER_CAP: usize = 16;
 
 /// Memory-axis variant of [`search_span`]: the DP state is enlarged with
-/// the per-instance rematerialization choice ([`memory::remat_points`]),
+/// the per-instance rematerialization choice ([`crate::memory::remat_points`]),
 /// and instead of one min-time plan it returns the span's frontier of
 /// (time, 1F1B-footprint) trade-off points — the inter-op stage planner
-/// picks the min-time point whose [`memory::stage_peak_bytes`] fits the
+/// picks the min-time point whose [`crate::memory::stage_peak_bytes`] fits the
 /// device cap at the stage's in-flight depth.
 ///
 /// Pruning: points are kept when they improve the running minimum of any
@@ -208,6 +158,9 @@ const MEM_FRONTIER_CAP: usize = 16;
 /// loose cap reproduces [`search_span`]'s unconstrained optimum exactly)
 /// and the memory-frugal endpoints; intermediate points may be thinned
 /// (same approximation class as `FRONTIER_CAP`).
+///
+/// Builds a throwaway [`SearchCtx`]; use [`search_span_mem_ctx`] when
+/// solving many spans of one chain.
 pub fn search_span_mem(
     ss: &SegmentSet,
     db: &ProfileDb,
@@ -216,160 +169,22 @@ pub fn search_span_mem(
     spec: RecomputeSpec,
 ) -> Vec<SpanMemPlan> {
     assert!(lo <= hi && hi <= ss.instances.len());
-    let n = hi - lo;
-    if n == 0 {
+    if lo == hi {
         return Vec::new();
     }
-    let mut frontiers: Vec<Vec<Vec<MemPoint>>> = Vec::with_capacity(n);
-    let u0 = ss.instances[lo].unique_id;
-    let p0 = &db.segments[u0];
-    let mut first: Vec<Vec<MemPoint>> = Vec::with_capacity(p0.configs.len());
-    for cfg in 0..p0.configs.len() {
-        let seg_t = p0.t_c_us[cfg] + p0.t_p_us[cfg];
-        let stat = memory::seg_static_bytes(p0, cfg);
-        let mut pts: Vec<MemPoint> = Vec::new();
-        for r in memory::remat_points(p0, cfg, spec) {
-            pts.push(MemPoint {
-                time: seg_t + r.extra_us,
-                recompute: r.extra_us,
-                stat,
-                ret: r.retained_bytes,
-                tra: r.transient_bytes,
-                ckpt: r.checkpoint,
-                prev_cfg: usize::MAX,
-                prev_idx: usize::MAX,
-            });
-        }
-        prune_mem(&mut pts);
-        first.push(pts);
-    }
-    frontiers.push(first);
-
-    for i in 1..n {
-        let u = ss.instances[lo + i].unique_id;
-        let pu = ss.instances[lo + i - 1].unique_id;
-        let prof = &db.segments[u];
-        let prev = &frontiers[i - 1];
-        let mut cur: Vec<Vec<MemPoint>> = Vec::with_capacity(prof.configs.len());
-        for cfg in 0..prof.configs.len() {
-            let seg_t = prof.t_c_us[cfg] + prof.t_p_us[cfg];
-            let stat = memory::seg_static_bytes(prof, cfg);
-            let rpts = memory::remat_points(prof, cfg, spec);
-            let mut pts: Vec<MemPoint> = Vec::new();
-            for (pcfg, pset) in prev.iter().enumerate() {
-                if pset.is_empty() {
-                    continue;
-                }
-                let tr = db.reshard_us(pu, pcfg, u, cfg);
-                for (pidx, pp) in pset.iter().enumerate() {
-                    for r in &rpts {
-                        pts.push(MemPoint {
-                            time: pp.time + tr + seg_t + r.extra_us,
-                            recompute: pp.recompute + r.extra_us,
-                            stat: pp.stat + stat,
-                            ret: pp.ret + r.retained_bytes,
-                            tra: pp.tra.max(r.transient_bytes),
-                            ckpt: r.checkpoint,
-                            prev_cfg: pcfg,
-                            prev_idx: pidx,
-                        });
-                    }
-                }
-            }
-            prune_mem(&mut pts);
-            cur.push(pts);
-        }
-        frontiers.push(cur);
-    }
-
-    // terminal frontier across configs: keep undominated points, then
-    // backtrack each into a full span plan
-    let last = &frontiers[n - 1];
-    let mut terminals: Vec<(usize, usize)> = Vec::new();
-    for (cfg, pts) in last.iter().enumerate() {
-        for idx in 0..pts.len() {
-            terminals.push((cfg, idx));
-        }
-    }
-    terminals.sort_by(|a, b| {
-        let (pa, pb) = (&last[a.0][a.1], &last[b.0][b.1]);
-        pa.time
-            .partial_cmp(&pb.time)
-            .unwrap()
-            .then(pa.stat.cmp(&pb.stat))
-            .then(pa.ret.cmp(&pb.ret))
-            .then(pa.tra.cmp(&pb.tra))
-    });
-    let mut kept: Vec<(usize, usize)> = Vec::new();
-    for t in terminals {
-        let p = &last[t.0][t.1];
-        let dominated = kept.iter().any(|&(c, i)| {
-            let q = &last[c][i];
-            q.stat <= p.stat && q.ret <= p.ret && q.tra <= p.tra
-        });
-        if !dominated {
-            kept.push(t);
-        }
-    }
-    kept.into_iter().map(|(cfg, idx)| backtrack_mem(&frontiers, n, cfg, idx)).collect()
+    let ctx = SearchCtx::new(ss, db);
+    search_span_mem_ctx(&ctx, lo, hi, spec)
 }
 
-/// Keep points that lower the running minimum of any footprint component
-/// in time order (min-time point always survives), then thin to
-/// `MEM_FRONTIER_CAP` evenly spaced representatives incl. endpoints.
-fn prune_mem(pts: &mut Vec<MemPoint>) {
-    pts.sort_by(|a, b| {
-        a.time
-            .partial_cmp(&b.time)
-            .unwrap()
-            .then(a.stat.cmp(&b.stat))
-            .then(a.ret.cmp(&b.ret))
-            .then(a.tra.cmp(&b.tra))
-    });
-    let mut out: Vec<MemPoint> = Vec::new();
-    let (mut min_stat, mut min_ret, mut min_tra) = (u64::MAX, u64::MAX, u64::MAX);
-    for p in pts.drain(..) {
-        if out.is_empty() || p.stat < min_stat || p.ret < min_ret || p.tra < min_tra {
-            min_stat = min_stat.min(p.stat);
-            min_ret = min_ret.min(p.ret);
-            min_tra = min_tra.min(p.tra);
-            out.push(p);
-        }
-    }
-    if out.len() > MEM_FRONTIER_CAP {
-        let step = (out.len() - 1) as f64 / (MEM_FRONTIER_CAP - 1) as f64;
-        out = (0..MEM_FRONTIER_CAP).map(|k| out[(k as f64 * step).round() as usize]).collect();
-    }
-    *pts = out;
-}
-
-fn backtrack_mem(
-    frontiers: &[Vec<Vec<MemPoint>>],
-    n: usize,
-    mut cfg: usize,
-    mut idx: usize,
-) -> SpanMemPlan {
-    let terminal = frontiers[n - 1][cfg][idx];
-    let mut choice = vec![0usize; n];
-    let mut remat = vec![false; n];
-    for i in (0..n).rev() {
-        let p = frontiers[i][cfg][idx];
-        choice[i] = cfg;
-        remat[i] = p.ckpt;
-        cfg = p.prev_cfg;
-        idx = p.prev_idx;
-    }
-    SpanMemPlan {
-        choice,
-        remat,
-        time_us: terminal.time,
-        footprint: crate::memory::SpanFootprint {
-            static_bytes: terminal.stat,
-            retained_bytes: terminal.ret,
-            transient_bytes: terminal.tra,
-            recompute_us: terminal.recompute,
-        },
-    }
+/// [`search_span_mem`] over a prebuilt [`SearchCtx`].
+pub fn search_span_mem_ctx(
+    ctx: &SearchCtx,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+) -> Vec<SpanMemPlan> {
+    assert!(lo <= hi && hi <= ctx.len());
+    dp::mem_span(ctx, lo, hi, spec)
 }
 
 /// Constrained variant: all instances of a unique segment use the same
@@ -537,26 +352,6 @@ fn merge_in_order(slices: Vec<Option<Plan>>) -> Option<Plan> {
     best
 }
 
-fn pareto_prune(pts: &mut Vec<Point>) {
-    pts.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap().then(a.mem.cmp(&b.mem)));
-    let mut out: Vec<Point> = Vec::new();
-    let mut best_mem = u64::MAX;
-    for p in pts.drain(..) {
-        if p.mem < best_mem {
-            best_mem = p.mem;
-            out.push(p);
-        }
-    }
-    if out.len() > FRONTIER_CAP {
-        // keep evenly spaced representatives incl. endpoints
-        let step = (out.len() - 1) as f64 / (FRONTIER_CAP - 1) as f64;
-        let kept: Vec<Point> =
-            (0..FRONTIER_CAP).map(|k| out[(k as f64 * step).round() as usize]).collect();
-        out = kept;
-    }
-    *pts = out;
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -575,6 +370,17 @@ mod tests {
         let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
         let db = profile_model(&g, &bs, &ss, &opts);
         (ss, db)
+    }
+
+    fn assert_plan_bits_eq(a: &Plan, b: &Plan, what: &str) {
+        assert_eq!(a.choice, b.choice, "{what}: choice");
+        assert!(
+            a.time_us.to_bits() == b.time_us.to_bits(),
+            "{what}: time {} vs {}",
+            a.time_us,
+            b.time_us
+        );
+        assert_eq!(a.mem_bytes, b.mem_bytes, "{what}: mem");
     }
 
     #[test]
@@ -692,6 +498,99 @@ mod tests {
     }
 
     #[test]
+    fn search_span_matches_reference_on_real_profiles() {
+        // the repetition-aware core vs the pre-refactor DP, on a real
+        // profiled chain (the property suite covers randomized ones)
+        let (ss, db) = setup(4);
+        let n = ss.instances.len();
+        let free = search(&ss, &db, None).unwrap();
+        let caps = [None, Some(free.mem_bytes), Some((free.mem_bytes as f64 * 0.9) as u64)];
+        for lo in 0..n {
+            for hi in (lo + 1)..=n {
+                for cap in caps {
+                    let new = search_span(&ss, &db, cap, lo, hi);
+                    let reference = oracle::search_span_reference(&ss, &db, cap, lo, hi);
+                    match (new, reference) {
+                        (Some(a), Some(b)) => {
+                            assert_plan_bits_eq(&a, &b, &format!("[{lo},{hi}) cap {cap:?}"))
+                        }
+                        (None, None) => {}
+                        (a, b) => panic!("[{lo},{hi}) cap {cap:?}: {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn steady_state_splice_matches_reference_on_deep_chains() {
+        // 64 identical layers: the scalar lane must enter the splice and
+        // still reproduce the reference bit-for-bit
+        let (ss, db) = setup(64);
+        let n = ss.instances.len();
+        assert!(n > 60, "deep chain expected");
+        let new = search(&ss, &db, None).unwrap();
+        let reference = oracle::search_span_reference(&ss, &db, None, 0, n).unwrap();
+        assert_plan_bits_eq(&new, &reference, "64-layer unconstrained");
+        let (t, m) = plan_cost(&ss, &db, &new.choice);
+        assert!((t - new.time_us).abs() < 1e-6 * t.max(1.0));
+        assert_eq!(m, new.mem_bytes);
+    }
+
+    #[test]
+    fn splice_engages_on_exact_arithmetic_chains_and_stays_exact() {
+        // dyadic values: every DP addition is exact, so the steady state
+        // has bitwise-uniform deltas and the splice MUST engage — and
+        // still reproduce the reference bit-for-bit
+        use crate::profiler::{ReshardTable, SegmentConfig, SegmentProfile};
+        use crate::segment::{SegmentInstance, UniqueSegment};
+        use crate::spmd::ShardState;
+        let prof = SegmentProfile {
+            configs: (0..3).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+            t_c_us: vec![8.0, 4.0, 2.0],
+            t_p_us: vec![16.0, 32.0, 64.0],
+            mem_bytes: vec![100, 200, 400],
+            act_bytes: vec![50, 100, 200],
+            ckpt_bytes: vec![10, 10, 10],
+            t_fwd_us: vec![4.0, 4.0, 4.0],
+            symbolic_volume: vec![0; 3],
+            boundary_out: vec![ShardState::Replicated; 3],
+            boundary_in: vec![ShardState::Replicated; 3],
+        };
+        let mut db = ProfileDb::default();
+        db.segments.push(prof);
+        db.reshard.insert(
+            (0, 0),
+            ReshardTable {
+                t_r_us: vec![
+                    vec![0.5, 2.0, 8.0],
+                    vec![2.0, 0.25, 4.0],
+                    vec![8.0, 4.0, 0.125],
+                ],
+                sym_vol: vec![vec![0; 3]; 3],
+                programs: 9,
+            },
+        );
+        let n = 300;
+        let ss = SegmentSet {
+            instances: (0..n)
+                .map(|_| SegmentInstance { unique_id: 0, blocks: vec![], fwd_range: (0, 0) })
+                .collect(),
+            unique: vec![UniqueSegment { id: 0, fingerprint: "u0".into(), rep: 0, count: n }],
+        };
+        let before = super::dp::SPLICED_STEPS.load(std::sync::atomic::Ordering::Relaxed);
+        let new = search(&ss, &db, None).unwrap();
+        let after = super::dp::SPLICED_STEPS.load(std::sync::atomic::Ordering::Relaxed);
+        assert!(after > before, "the splice must engage on an exact-arithmetic repeated chain");
+        let reference = oracle::search_span_reference(&ss, &db, None, 0, n).unwrap();
+        assert_plan_bits_eq(&new, &reference, "exact 300-chain");
+        // interior spans splice too (both transitions must be in-span)
+        let a = search_span(&ss, &db, None, 3, n - 2).unwrap();
+        let b = oracle::search_span_reference(&ss, &db, None, 3, n - 2).unwrap();
+        assert_plan_bits_eq(&a, &b, "exact interior span");
+    }
+
+    #[test]
     fn mem_frontier_min_time_equals_unconstrained_search() {
         let (ss, db) = setup(3);
         let n = ss.instances.len();
@@ -710,7 +609,7 @@ mod tests {
                 plain.time_us
             );
             assert!(best.remat.iter().all(|&r| !r), "the min-time point never recomputes");
-            let fp = memory::span_footprint(&ss, &db, &best.choice, 0, n);
+            let fp = crate::memory::span_footprint(&ss, &db, &best.choice, 0, n);
             assert_eq!(fp.static_bytes, best.footprint.static_bytes);
             assert_eq!(fp.retained_bytes, best.footprint.retained_bytes);
             assert_eq!(best.footprint.transient_bytes, 0);
@@ -732,6 +631,32 @@ mod tests {
             );
             assert_eq!(p.choice.len(), n);
             assert_eq!(p.remat.len(), n);
+        }
+    }
+
+    #[test]
+    fn mem_frontier_matches_reference_on_real_profiles() {
+        let (ss, db) = setup(3);
+        let n = ss.instances.len();
+        for spec in [RecomputeSpec::Off, RecomputeSpec::Auto] {
+            for lo in 0..n {
+                for hi in (lo + 1)..=n {
+                    let new = search_span_mem(&ss, &db, lo, hi, spec);
+                    let reference = oracle::search_span_mem_reference(&ss, &db, lo, hi, spec);
+                    assert_eq!(new.len(), reference.len(), "[{lo},{hi}) {spec:?}");
+                    for (a, b) in new.iter().zip(&reference) {
+                        assert_eq!(a.choice, b.choice, "[{lo},{hi}) {spec:?}");
+                        assert_eq!(a.remat, b.remat, "[{lo},{hi}) {spec:?}");
+                        assert!(a.time_us.to_bits() == b.time_us.to_bits());
+                        assert_eq!(a.footprint.static_bytes, b.footprint.static_bytes);
+                        assert_eq!(a.footprint.retained_bytes, b.footprint.retained_bytes);
+                        assert_eq!(a.footprint.transient_bytes, b.footprint.transient_bytes);
+                        assert!(
+                            a.footprint.recompute_us.to_bits() == b.footprint.recompute_us.to_bits()
+                        );
+                    }
+                }
+            }
         }
     }
 

@@ -1,0 +1,312 @@
+//! The pre-refactor span DP, kept verbatim as the bit-identity oracle.
+//!
+//! The repetition-aware search core ([`super::SearchCtx`] + the scalar
+//! steady-state DP + the shared-prefix sweeps) must return plans that are
+//! *bit-identical* — same `choice`, same `time_us` down to the last float
+//! bit, same `mem_bytes` — to what this reference implementation
+//! produces. The property suite (`rust/tests/prop_search_equivalence.rs`)
+//! pins that across randomized profiles, caps, and span bounds, and
+//! `rust/benches/search.rs` uses this as the speedup baseline recorded in
+//! `BENCH_search.json`.
+//!
+//! Nothing in the production path calls into this module; it exists so
+//! the fast path has a fixed point to be measured and verified against.
+//! Do not "optimize" it — its per-position Pareto walk with hash-table
+//! reshard lookups IS the baseline.
+
+use crate::memory::{self, RecomputeSpec, SpanMemPlan};
+use crate::profiler::ProfileDb;
+use crate::segment::SegmentSet;
+
+use super::Plan;
+
+/// Pareto point with backpointer (reference copy).
+#[derive(Clone, Copy, Debug)]
+struct Point {
+    time: f64,
+    mem: u64,
+    prev_cfg: usize,
+    prev_idx: usize,
+}
+
+const FRONTIER_CAP: usize = 24;
+
+/// Pre-refactor [`super::search_span`]: per-position Pareto DP with
+/// `db.reshard_us` hash lookups in the inner loop. Test/bench oracle.
+pub fn search_span_reference(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    mem_cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    assert!(lo <= hi && hi <= ss.instances.len());
+    let n = hi - lo;
+    if n == 0 {
+        return None;
+    }
+    // frontier[cfg] = pareto set of (time, mem) for prefixes ending at cfg
+    let mut frontiers: Vec<Vec<Vec<Point>>> = Vec::with_capacity(n);
+    let u0 = ss.instances[lo].unique_id;
+    let p0 = &db.segments[u0];
+    let mut first: Vec<Vec<Point>> = Vec::new();
+    for cfg in 0..p0.configs.len() {
+        let mem = p0.mem_bytes[cfg];
+        let time = p0.t_c_us[cfg] + p0.t_p_us[cfg];
+        let mut pts = Vec::new();
+        if mem_cap.map_or(true, |cap| mem <= cap) {
+            pts.push(Point { time, mem, prev_cfg: usize::MAX, prev_idx: usize::MAX });
+        }
+        first.push(pts);
+    }
+    frontiers.push(first);
+
+    for i in 1..n {
+        let u = ss.instances[lo + i].unique_id;
+        let pu = ss.instances[lo + i - 1].unique_id;
+        let prof = &db.segments[u];
+        let prev = &frontiers[i - 1];
+        let mut cur: Vec<Vec<Point>> = Vec::with_capacity(prof.configs.len());
+        for cfg in 0..prof.configs.len() {
+            let seg_t = prof.t_c_us[cfg] + prof.t_p_us[cfg];
+            let seg_m = prof.mem_bytes[cfg];
+            let mut pts: Vec<Point> = Vec::new();
+            for (pcfg, pset) in prev.iter().enumerate() {
+                if pset.is_empty() {
+                    continue;
+                }
+                let tr = db.reshard_us(pu, pcfg, u, cfg);
+                for (pidx, pp) in pset.iter().enumerate() {
+                    let time = pp.time + tr + seg_t;
+                    let mem = pp.mem + seg_m;
+                    if mem_cap.map_or(true, |cap| mem <= cap) {
+                        pts.push(Point { time, mem, prev_cfg: pcfg, prev_idx: pidx });
+                    }
+                }
+            }
+            pareto_prune(&mut pts);
+            cur.push(pts);
+        }
+        frontiers.push(cur);
+    }
+
+    // best terminal point
+    let last = &frontiers[n - 1];
+    let mut best: Option<(usize, usize)> = None;
+    for (cfg, pts) in last.iter().enumerate() {
+        for (idx, p) in pts.iter().enumerate() {
+            if best.map_or(true, |(bc, bi)| p.time < last[bc][bi].time) {
+                best = Some((cfg, idx));
+            }
+        }
+    }
+    let (mut cfg, mut idx) = best?;
+    let terminal = last[cfg][idx];
+    let mut choice = vec![0usize; n];
+    for i in (0..n).rev() {
+        choice[i] = cfg;
+        let p = frontiers[i][cfg][idx];
+        cfg = p.prev_cfg;
+        idx = p.prev_idx;
+    }
+    Some(Plan { choice, time_us: terminal.time, mem_bytes: terminal.mem })
+}
+
+fn pareto_prune(pts: &mut Vec<Point>) {
+    pts.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap().then(a.mem.cmp(&b.mem)));
+    let mut out: Vec<Point> = Vec::new();
+    let mut best_mem = u64::MAX;
+    for p in pts.drain(..) {
+        if p.mem < best_mem {
+            best_mem = p.mem;
+            out.push(p);
+        }
+    }
+    if out.len() > FRONTIER_CAP {
+        // keep evenly spaced representatives incl. endpoints
+        let step = (out.len() - 1) as f64 / (FRONTIER_CAP - 1) as f64;
+        let kept: Vec<Point> =
+            (0..FRONTIER_CAP).map(|k| out[(k as f64 * step).round() as usize]).collect();
+        out = kept;
+    }
+    *pts = out;
+}
+
+/// Pareto point of the memory-axis span DP (reference copy).
+#[derive(Clone, Copy, Debug)]
+struct MemPoint {
+    time: f64,
+    recompute: f64,
+    stat: u64,
+    ret: u64,
+    tra: u64,
+    ckpt: bool,
+    prev_cfg: usize,
+    prev_idx: usize,
+}
+
+const MEM_FRONTIER_CAP: usize = 16;
+
+/// Pre-refactor [`super::search_span_mem`]: the memory-axis span DP with
+/// per-call `remat_points` allocation and hash-table reshard lookups in
+/// the inner loop. Test/bench oracle.
+pub fn search_span_mem_reference(
+    ss: &SegmentSet,
+    db: &ProfileDb,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+) -> Vec<SpanMemPlan> {
+    assert!(lo <= hi && hi <= ss.instances.len());
+    let n = hi - lo;
+    if n == 0 {
+        return Vec::new();
+    }
+    let mut frontiers: Vec<Vec<Vec<MemPoint>>> = Vec::with_capacity(n);
+    let u0 = ss.instances[lo].unique_id;
+    let p0 = &db.segments[u0];
+    let mut first: Vec<Vec<MemPoint>> = Vec::with_capacity(p0.configs.len());
+    for cfg in 0..p0.configs.len() {
+        let seg_t = p0.t_c_us[cfg] + p0.t_p_us[cfg];
+        let stat = memory::seg_static_bytes(p0, cfg);
+        let mut pts: Vec<MemPoint> = Vec::new();
+        for r in memory::remat_points(p0, cfg, spec) {
+            pts.push(MemPoint {
+                time: seg_t + r.extra_us,
+                recompute: r.extra_us,
+                stat,
+                ret: r.retained_bytes,
+                tra: r.transient_bytes,
+                ckpt: r.checkpoint,
+                prev_cfg: usize::MAX,
+                prev_idx: usize::MAX,
+            });
+        }
+        prune_mem(&mut pts);
+        first.push(pts);
+    }
+    frontiers.push(first);
+
+    for i in 1..n {
+        let u = ss.instances[lo + i].unique_id;
+        let pu = ss.instances[lo + i - 1].unique_id;
+        let prof = &db.segments[u];
+        let prev = &frontiers[i - 1];
+        let mut cur: Vec<Vec<MemPoint>> = Vec::with_capacity(prof.configs.len());
+        for cfg in 0..prof.configs.len() {
+            let seg_t = prof.t_c_us[cfg] + prof.t_p_us[cfg];
+            let stat = memory::seg_static_bytes(prof, cfg);
+            let rpts = memory::remat_points(prof, cfg, spec);
+            let mut pts: Vec<MemPoint> = Vec::new();
+            for (pcfg, pset) in prev.iter().enumerate() {
+                if pset.is_empty() {
+                    continue;
+                }
+                let tr = db.reshard_us(pu, pcfg, u, cfg);
+                for (pidx, pp) in pset.iter().enumerate() {
+                    for r in &rpts {
+                        pts.push(MemPoint {
+                            time: pp.time + tr + seg_t + r.extra_us,
+                            recompute: pp.recompute + r.extra_us,
+                            stat: pp.stat + stat,
+                            ret: pp.ret + r.retained_bytes,
+                            tra: pp.tra.max(r.transient_bytes),
+                            ckpt: r.checkpoint,
+                            prev_cfg: pcfg,
+                            prev_idx: pidx,
+                        });
+                    }
+                }
+            }
+            prune_mem(&mut pts);
+            cur.push(pts);
+        }
+        frontiers.push(cur);
+    }
+
+    // terminal frontier across configs: keep undominated points, then
+    // backtrack each into a full span plan
+    let last = &frontiers[n - 1];
+    let mut terminals: Vec<(usize, usize)> = Vec::new();
+    for (cfg, pts) in last.iter().enumerate() {
+        for idx in 0..pts.len() {
+            terminals.push((cfg, idx));
+        }
+    }
+    terminals.sort_by(|a, b| {
+        let (pa, pb) = (&last[a.0][a.1], &last[b.0][b.1]);
+        pa.time
+            .partial_cmp(&pb.time)
+            .unwrap()
+            .then(pa.stat.cmp(&pb.stat))
+            .then(pa.ret.cmp(&pb.ret))
+            .then(pa.tra.cmp(&pb.tra))
+    });
+    let mut kept: Vec<(usize, usize)> = Vec::new();
+    for t in terminals {
+        let p = &last[t.0][t.1];
+        let dominated = kept.iter().any(|&(c, i)| {
+            let q = &last[c][i];
+            q.stat <= p.stat && q.ret <= p.ret && q.tra <= p.tra
+        });
+        if !dominated {
+            kept.push(t);
+        }
+    }
+    kept.into_iter().map(|(cfg, idx)| backtrack_mem(&frontiers, n, cfg, idx)).collect()
+}
+
+fn prune_mem(pts: &mut Vec<MemPoint>) {
+    pts.sort_by(|a, b| {
+        a.time
+            .partial_cmp(&b.time)
+            .unwrap()
+            .then(a.stat.cmp(&b.stat))
+            .then(a.ret.cmp(&b.ret))
+            .then(a.tra.cmp(&b.tra))
+    });
+    let mut out: Vec<MemPoint> = Vec::new();
+    let (mut min_stat, mut min_ret, mut min_tra) = (u64::MAX, u64::MAX, u64::MAX);
+    for p in pts.drain(..) {
+        if out.is_empty() || p.stat < min_stat || p.ret < min_ret || p.tra < min_tra {
+            min_stat = min_stat.min(p.stat);
+            min_ret = min_ret.min(p.ret);
+            min_tra = min_tra.min(p.tra);
+            out.push(p);
+        }
+    }
+    if out.len() > MEM_FRONTIER_CAP {
+        let step = (out.len() - 1) as f64 / (MEM_FRONTIER_CAP - 1) as f64;
+        out = (0..MEM_FRONTIER_CAP).map(|k| out[(k as f64 * step).round() as usize]).collect();
+    }
+    *pts = out;
+}
+
+fn backtrack_mem(
+    frontiers: &[Vec<Vec<MemPoint>>],
+    n: usize,
+    mut cfg: usize,
+    mut idx: usize,
+) -> SpanMemPlan {
+    let terminal = frontiers[n - 1][cfg][idx];
+    let mut choice = vec![0usize; n];
+    let mut remat = vec![false; n];
+    for i in (0..n).rev() {
+        let p = frontiers[i][cfg][idx];
+        choice[i] = cfg;
+        remat[i] = p.ckpt;
+        cfg = p.prev_cfg;
+        idx = p.prev_idx;
+    }
+    SpanMemPlan {
+        choice,
+        remat,
+        time_us: terminal.time,
+        footprint: crate::memory::SpanFootprint {
+            static_bytes: terminal.stat,
+            retained_bytes: terminal.ret,
+            transient_bytes: terminal.tra,
+            recompute_us: terminal.recompute,
+        },
+    }
+}

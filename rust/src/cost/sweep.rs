@@ -1,0 +1,226 @@
+//! Shared-prefix span sweeps: every `[lo, hi)` answer from one pass.
+//!
+//! All three DP lanes of the private `dp` engine module are
+//! prefix-closed — the state at
+//! position `i` is independent of where the span ends — so a single
+//! forward walk from `lo` visits the terminal state of *every* span
+//! `[lo, hi)`, `hi ∈ (lo, n]`. The inter-op stage planner needs exactly
+//! those: its split DP prices all `O(n²)` contiguous spans, which used
+//! to cost one full `search_span` *per span* (`O(n³)` DP steps per
+//! stage count, re-done per stage count). A sweep replaces each origin's
+//! column of that matrix with one `O(n)` pass, and independent origins
+//! fan out over the thread pool (`interop` flattens `(context, origin)`
+//! jobs with order-preserving collection, the profiler's determinism
+//! pattern).
+//!
+//! Two sweep flavours, matching the two planner modes:
+//!
+//! * [`sweep_span_times`] — legacy mode. Runs the capped Pareto lane and
+//!   the unconstrained scalar lane *simultaneously*, folding the old
+//!   `search_span(cap).or_else(|| search_span(None))` double solve into
+//!   the one pass: per `hi`, the capped terminal when the cap admits any
+//!   plan, else the unconstrained terminal.
+//! * [`sweep_span_frontiers`] — memory-aware mode. Rolls the memory-axis
+//!   frontier and snapshots, per `hi`, the kept terminal rows
+//!   ([`FrontierRow`]) that [`select_time`] probes under a per-stage
+//!   in-flight window and device cap — the value-only twin of
+//!   [`crate::memory::select_feasible`], same strict-first tie rule.
+//!
+//! Sweeps return *values* (times, frontier rows), not plans: the stage
+//! DP only compares values, and the handful of spans the chosen split
+//! actually uses are reconstructed afterwards with the single-span
+//! searchers — which, being the same prefix-closed lanes, reproduce the
+//! swept values bit-for-bit.
+
+use crate::memory::{self, RecomputeSpec};
+
+use super::ctx::SearchCtx;
+use super::dp;
+
+/// Folded solve times of every span starting at `lo`: entry `h` answers
+/// `[lo, lo + 1 + h)` — the capped plan's time when `cap` admits one,
+/// else the unconstrained plan's; `None` when the span has no plan at
+/// all (an empty config space). Bit-identical to
+/// `search_span(.., Some(cap), ..).or_else(|| search_span(.., None, ..))`
+/// per span.
+pub fn sweep_span_times(ctx: &SearchCtx, lo: usize, cap: u64) -> Vec<Option<f64>> {
+    let n = ctx.len() - lo;
+    let mut out = Vec::with_capacity(n);
+    if n == 0 {
+        return out;
+    }
+    // unconstrained lane, per-position states (steady-state splice incl.)
+    let scalar = dp::scalar_states(ctx, lo, ctx.len());
+    // capped Pareto lane, rolling (values only — no backtrack storage)
+    let mut front = dp::pareto_first(ctx, lo, cap);
+    let mut scratch = Vec::new();
+    for i in 0..n {
+        if i > 0 {
+            front = dp::pareto_step(ctx, &front, lo + i, cap, &mut scratch);
+        }
+        let time = match dp::pareto_best_time(&front) {
+            Some(t) => Some(t),
+            None => scalar.get(i).and_then(|s| dp::scalar_best_time(s)),
+        };
+        out.push(time);
+    }
+    out
+}
+
+/// One kept terminal point of a span's (time × 1F1B-footprint) frontier,
+/// flattened for the inter-op DP's feasibility probes. Rows appear in
+/// the same canonical order as [`super::search_span_mem`]'s plans, so a
+/// row index identifies the plan a later reconstruction will return.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct FrontierRow {
+    pub time_us: f64,
+    pub static_bytes: u64,
+    pub retained_bytes: u64,
+    pub transient_bytes: u64,
+}
+
+/// Memory-aware sweep: the kept terminal frontier of every span starting
+/// at `lo` (entry `h` answers `[lo, lo + 1 + h)`), from one rolling pass
+/// of the memory-axis DP.
+pub fn sweep_span_frontiers(
+    ctx: &SearchCtx,
+    lo: usize,
+    spec: RecomputeSpec,
+) -> Vec<Vec<FrontierRow>> {
+    let n = ctx.len() - lo;
+    let mut out = Vec::with_capacity(n);
+    if n == 0 {
+        return out;
+    }
+    let mut front = dp::mem_first(ctx, lo, spec);
+    let mut scratch = Vec::new();
+    for i in 0..n {
+        if i > 0 {
+            front = dp::mem_step(ctx, &front, lo + i, spec, &mut scratch);
+        }
+        let rows: Vec<FrontierRow> = dp::mem_terminals(&front)
+            .into_iter()
+            .map(|(c, idx)| {
+                let p = &front[c][idx];
+                FrontierRow {
+                    time_us: p.time,
+                    static_bytes: p.stat,
+                    retained_bytes: p.ret,
+                    transient_bytes: p.tra,
+                }
+            })
+            .collect();
+        out.push(rows);
+    }
+    out
+}
+
+/// Min-time row whose closed-form 1F1B peak fits `cap` — the value-only
+/// twin of [`memory::select_feasible`] (strict `<`, first of time-equal
+/// rows wins, exactly the plan a reconstruction will select).
+pub fn select_time(rows: &[FrontierRow], m_eff: usize, inflight: usize, cap: u64) -> Option<f64> {
+    let mut best: Option<f64> = None;
+    for r in rows {
+        let peak = memory::stage_peak_bytes(
+            r.static_bytes,
+            r.retained_bytes,
+            r.transient_bytes,
+            m_eff,
+            inflight,
+        );
+        if peak <= cap && best.map_or(true, |b| r.time_us < b) {
+            best = Some(r.time_us);
+        }
+    }
+    best
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Platform;
+    use crate::models::{build_training, ModelCfg};
+    use crate::pblock::build_parallel_blocks;
+    use crate::profiler::{profile_model, ProfileDb, ProfileOptions};
+    use crate::segment::{extract_segments, SegmentSet};
+    use crate::spmd::Mesh;
+
+    fn setup(layers: usize) -> (SegmentSet, ProfileDb) {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(layers);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let ss = extract_segments(&g, &bs);
+        let opts = ProfileOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+        let db = profile_model(&g, &bs, &ss, &opts);
+        (ss, db)
+    }
+
+    #[test]
+    fn sweep_times_fold_the_cap_retry_per_span() {
+        let (ss, db) = setup(3);
+        let ctx = SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        let free = super::super::search(&ss, &db, None).unwrap();
+        for cap in [free.mem_bytes / 2, free.mem_bytes, u64::MAX] {
+            for lo in 0..n {
+                let swept = sweep_span_times(&ctx, lo, cap);
+                assert_eq!(swept.len(), n - lo);
+                for hi in (lo + 1)..=n {
+                    let want = super::super::search_span(&ss, &db, Some(cap), lo, hi)
+                        .or_else(|| super::super::search_span(&ss, &db, None, lo, hi))
+                        .map(|p| p.time_us);
+                    let got = swept[hi - lo - 1];
+                    match (got, want) {
+                        (Some(a), Some(b)) => assert!(
+                            a.to_bits() == b.to_bits(),
+                            "[{lo},{hi}) cap {cap}: {a} vs {b}"
+                        ),
+                        (None, None) => {}
+                        (a, b) => panic!("[{lo},{hi}) cap {cap}: {a:?} vs {b:?}"),
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_frontiers_match_per_span_searches() {
+        let (ss, db) = setup(2);
+        let ctx = SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        for spec in [RecomputeSpec::Off, RecomputeSpec::Auto] {
+            for lo in 0..n {
+                let swept = sweep_span_frontiers(&ctx, lo, spec);
+                for hi in (lo + 1)..=n {
+                    let frontier = super::super::search_span_mem(&ss, &db, lo, hi, spec);
+                    let rows = &swept[hi - lo - 1];
+                    assert_eq!(rows.len(), frontier.len(), "[{lo},{hi}) {spec:?}");
+                    for (r, p) in rows.iter().zip(&frontier) {
+                        assert!(r.time_us.to_bits() == p.time_us.to_bits());
+                        assert_eq!(r.static_bytes, p.footprint.static_bytes);
+                        assert_eq!(r.retained_bytes, p.footprint.retained_bytes);
+                        assert_eq!(r.transient_bytes, p.footprint.transient_bytes);
+                    }
+                    // the value probe agrees with the plan-level selection
+                    for (me, f) in [(1usize, 1usize), (8, 2), (8, 4)] {
+                        let caps: Vec<u64> = frontier
+                            .iter()
+                            .map(|p| p.peak_bytes(me, f))
+                            .chain([0, u64::MAX])
+                            .collect();
+                        for cap in caps {
+                            let want = memory::select_feasible(&frontier, me, f, cap)
+                                .map(|p| p.time_us);
+                            let got = select_time(rows, me, f, cap);
+                            match (got, want) {
+                                (Some(a), Some(b)) => assert!(a.to_bits() == b.to_bits()),
+                                (None, None) => {}
+                                (a, b) => panic!("cap {cap}: {a:?} vs {b:?}"),
+                            }
+                        }
+                    }
+                }
+            }
+        }
+    }
+}

@@ -103,6 +103,10 @@ pub struct PipelineRow {
     pub profile_hits: usize,
     /// unique segments actually profiled across the same passes
     pub profile_misses: usize,
+    /// wall-clock µs inside plan search (ComposeSearch + inter-op
+    /// planning) — the column BENCH trajectories track for search-side
+    /// speedups, mirrored by `cfp serve`'s `search_us` counter
+    pub search_us: f64,
 }
 
 /// Run the two-level planner (auto stage count) for one eval cell.
@@ -132,6 +136,7 @@ pub fn pipeline_row(
         peak_mem_bytes: pipeline.peak_mem_bytes,
         profile_hits: r.profile_hits,
         profile_misses: r.profile_misses,
+        search_us: r.search_us,
     };
     (row, r)
 }
@@ -148,11 +153,13 @@ pub struct CacheEffect {
     pub coalesced: u64,
     pub profile_hits: u64,
     pub profile_misses: u64,
+    /// cumulative µs inside plan search across every executed search
+    pub search_us: u64,
 }
 
 impl CacheEffect {
     pub fn headers() -> &'static [&'static str] {
-        &["plan hit", "plan miss", "coalesced", "prof hit", "prof miss"]
+        &["plan hit", "plan miss", "coalesced", "prof hit", "prof miss", "search µs"]
     }
 
     pub fn cells(&self) -> Vec<String> {
@@ -162,6 +169,7 @@ impl CacheEffect {
             self.coalesced.to_string(),
             self.profile_hits.to_string(),
             self.profile_misses.to_string(),
+            self.search_us.to_string(),
         ]
     }
 
@@ -172,6 +180,7 @@ impl CacheEffect {
             coalesced: s.coalesced,
             profile_hits: s.profile_hits,
             profile_misses: s.profile_misses,
+            search_us: s.search_us,
         }
     }
 }

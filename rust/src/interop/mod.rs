@@ -35,10 +35,23 @@
 //! both components only grow when a suffix is appended and the objective
 //! is monotone in both, so the DP provably matches brute-force
 //! enumeration of all `C(n−1, k−1)` split vectors (pinned by the
-//! `integration_interop` tests). Per-(stage-span, sub-mesh) intra-op
-//! solutions are memoized, and every sub-mesh context is profiled through
-//! [`crate::profiler::profile_model_cached`] so the persistent
+//! `integration_interop` tests). Every sub-mesh context is profiled
+//! through [`crate::profiler::profile_model_cached`] so the persistent
 //! fingerprint cache makes warm runs cheap across *all* stage counts.
+//!
+//! Since PR 5 the per-span intra-op values the split DP consumes come
+//! from *shared-prefix sweeps* ([`SpanTables`]): one forward pass of the
+//! prefix-closed span DP per origin yields the terminal value of every
+//! `[lo, hi)` at once — `O(n)` sweeps instead of `O(n²)` independent
+//! `search_span` calls, with the old capped/uncapped double solve folded
+//! into the same pass. Tables are built once per context and shared by
+//! every candidate stage count, and the independent `(context, origin)`
+//! sweep jobs fan out over [`crate::util::ThreadPool`] with
+//! order-preserving collection (the profiler's determinism pattern), so
+//! `cfp pipeline --stages auto --threads N` uses all cores and returns
+//! plans bit-identical to the serial path. Only the handful of spans the
+//! winning split actually uses are reconstructed into full plans, via
+//! the same prefix-closed single-span searchers.
 //!
 //! # Memory (PR 3)
 //!
@@ -66,17 +79,19 @@
 //! * The candidate stage counts are the divisors of the device count, so
 //!   `k · d` always uses the whole cluster.
 
-use std::collections::{BTreeMap, HashMap};
+use std::collections::BTreeMap;
+use std::sync::Arc;
 
 use crate::cluster::sim::ComputeModel;
 use crate::cluster::{collective_time_us, simulate_pipeline, Platform};
-use crate::cost::{self, Plan};
+use crate::cost::{self, FrontierRow, Plan, SearchCtx};
 use crate::graph::Graph;
-use crate::memory::{self, RecomputeSpec, SpanFootprint, SpanMemPlan};
+use crate::memory::{self, RecomputeSpec, SpanFootprint};
 use crate::pblock::{build_parallel_blocks, BlockSet};
 use crate::profiler::{profile_model_handle, CacheHandle, ProfileDb, ProfileOptions};
 use crate::segment::{extract_segments, SegmentSet};
 use crate::spmd::{CollKind, Mesh};
+use crate::util::ThreadPool;
 
 /// How many pipeline stages the two-level planner may use.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -416,6 +431,161 @@ impl PipelinePlan {
     }
 }
 
+/// Per-context span-value tables, built by shared-prefix sweeps and
+/// shared by *every* stage count planned over the context (the old code
+/// re-solved every span per stage count with a fresh memo).
+///
+/// Legacy mode stores, per span, the folded solve time — the capped
+/// plan's when the cap admits one, else the unconstrained plan's (the
+/// old `search_span(cap)` / `search_span(None)` retry collapsed into the
+/// sweep's single pass). Memory-aware mode stores the span's kept
+/// terminal frontier rows, probed per (stage index, in-flight window)
+/// by [`cost::select_time`]. Either way the tables hold *values* only;
+/// the spans a winning split uses are reconstructed afterwards through
+/// the same prefix-closed single-span searchers, bit-identically.
+pub struct SpanTables {
+    ctx: Arc<SearchCtx>,
+    values: SpanValues,
+}
+
+enum SpanValues {
+    /// `times[lo][hi - lo - 1]` = folded solve time of `[lo, hi)`
+    Legacy { cap: u64, times: Vec<Vec<Option<f64>>> },
+    /// `rows[lo][hi - lo - 1]` = kept terminal frontier of `[lo, hi)`
+    Memory { spec: RecomputeSpec, rows: Vec<Vec<Vec<FrontierRow>>> },
+}
+
+impl SpanTables {
+    /// Build the tables for one context with serial sweeps (the
+    /// single-context entry; [`plan_pipeline`] fans multi-context sweep
+    /// jobs over the pool instead).
+    pub fn build(ctx: &StageContext, opts: &PipelineOptions) -> SpanTables {
+        let sctx = Arc::new(SearchCtx::new(&ctx.segments, &ctx.db));
+        let n = sctx.len();
+        let values = if opts.memory_aware() {
+            let spec = opts.recompute;
+            let rows = (0..n).map(|lo| cost::sweep_span_frontiers(&sctx, lo, spec)).collect();
+            SpanValues::Memory { spec, rows }
+        } else {
+            let cap = opts.device_cap();
+            let times = (0..n).map(|lo| cost::sweep_span_times(&sctx, lo, cap)).collect();
+            SpanValues::Legacy { cap, times }
+        };
+        SpanTables { ctx: sctx, values }
+    }
+
+    /// A table with the search context but no swept values — all a
+    /// `k = 1` plan needs (its single whole-chain span goes straight to
+    /// reconstruction, never through [`SpanTables::span_time`]), so the
+    /// degenerate stage count stays `O(n)` instead of paying `O(n²)`
+    /// sweeps it would never read.
+    fn values_only_ctx(ctx: &StageContext, opts: &PipelineOptions) -> SpanTables {
+        let sctx = Arc::new(SearchCtx::new(&ctx.segments, &ctx.db));
+        let values = if opts.memory_aware() {
+            SpanValues::Memory { spec: opts.recompute, rows: Vec::new() }
+        } else {
+            SpanValues::Legacy { cap: opts.device_cap(), times: Vec::new() }
+        };
+        SpanTables { ctx: sctx, values }
+    }
+
+    /// Whole-batch intra-op time of span `[lo, hi)` as stage `stage_idx`
+    /// of `k` — `None` if the span is infeasible under the mode's cap.
+    fn span_time(
+        &self,
+        opts: &PipelineOptions,
+        lo: usize,
+        hi: usize,
+        stage_idx: usize,
+        k: usize,
+    ) -> Option<f64> {
+        match &self.values {
+            SpanValues::Legacy { times, .. } => times[lo][hi - lo - 1],
+            SpanValues::Memory { rows, .. } => {
+                let me = m_eff(opts, k);
+                let f = memory::inflight_microbatches(k, stage_idx, me);
+                cost::select_time(&rows[lo][hi - lo - 1], me, f, opts.device_cap())
+            }
+        }
+    }
+}
+
+/// Build [`SpanTables`] for every candidate context, fanning the
+/// independent `(context, sweep-origin)` jobs over the thread pool with
+/// order-preserving collection — each job is a pure function of the
+/// shared immutable [`SearchCtx`], so any thread count produces the
+/// byte-identical tables the serial loop would.
+fn build_span_tables(
+    ctxs: &StageContexts,
+    opts: &PipelineOptions,
+    ks: &[usize],
+) -> BTreeMap<usize, SpanTables> {
+    let total = opts.mesh.total();
+    let mut out = BTreeMap::new();
+    let mut arcs: BTreeMap<usize, Arc<SearchCtx>> = BTreeMap::new();
+    for &k in ks {
+        let d = total / k;
+        if arcs.contains_key(&d) || out.contains_key(&d) {
+            continue;
+        }
+        if let Some(ctx) = ctxs.get(d) {
+            if k <= 1 || k > ctx.segments.instances.len() {
+                // k = 1 solves one span (straight to reconstruction) and
+                // k > n is structurally infeasible (the DP returns None
+                // without reading the table) — sweeps would be waste
+                out.insert(d, SpanTables::values_only_ctx(ctx, opts));
+            } else {
+                arcs.insert(d, Arc::new(SearchCtx::new(&ctx.segments, &ctx.db)));
+            }
+        }
+    }
+    // jobs in (devices ascending, origin ascending) order; the pool map
+    // preserves it, so reassembly below is deterministic
+    let jobs: Vec<(usize, usize)> = arcs
+        .iter()
+        .flat_map(|(&d, c)| (0..c.len()).map(move |lo| (d, lo)))
+        .collect();
+    let threads = opts.threads.min(jobs.len().max(1));
+    if opts.memory_aware() {
+        let spec = opts.recompute;
+        let results: Vec<Vec<Vec<FrontierRow>>> = if threads > 1 {
+            let shared = arcs.clone();
+            let pool = ThreadPool::new(threads);
+            pool.map(jobs, move |(d, lo)| cost::sweep_span_frontiers(&shared[&d], lo, spec))
+        } else {
+            jobs.iter().map(|&(d, lo)| cost::sweep_span_frontiers(&arcs[&d], lo, spec)).collect()
+        };
+        let mut it = results.into_iter();
+        for (&d, c) in &arcs {
+            let rows: Vec<_> =
+                (0..c.len()).map(|_| it.next().expect("one sweep per origin")).collect();
+            out.insert(
+                d,
+                SpanTables { ctx: Arc::clone(c), values: SpanValues::Memory { spec, rows } },
+            );
+        }
+    } else {
+        let cap = opts.device_cap();
+        let results: Vec<Vec<Option<f64>>> = if threads > 1 {
+            let shared = arcs.clone();
+            let pool = ThreadPool::new(threads);
+            pool.map(jobs, move |(d, lo)| cost::sweep_span_times(&shared[&d], lo, cap))
+        } else {
+            jobs.iter().map(|&(d, lo)| cost::sweep_span_times(&arcs[&d], lo, cap)).collect()
+        };
+        let mut it = results.into_iter();
+        for (&d, c) in &arcs {
+            let times: Vec<_> =
+                (0..c.len()).map(|_| it.next().expect("one sweep per origin")).collect();
+            out.insert(
+                d,
+                SpanTables { ctx: Arc::clone(c), values: SpanValues::Legacy { cap, times } },
+            );
+        }
+    }
+    out
+}
+
 /// CFP two-level plan: best stage count × best split × best per-stage
 /// intra-op plan. Returns None only if no candidate stage count yields a
 /// feasible plan (never for `Auto`/`Single` on a chain the single-stage
@@ -426,15 +596,18 @@ pub fn plan_pipeline(
     opts: &PipelineOptions,
 ) -> Option<PipelinePlan> {
     let total = opts.mesh.total();
+    let ks = candidate_stage_counts(opts.spec, opts.mesh);
+    let tables = build_span_tables(ctxs, opts, &ks);
     let mut best: Option<PipelinePlan> = None;
     let mut structurally_possible = false;
-    for k in candidate_stage_counts(opts.spec, opts.mesh) {
-        let Some(ctx) = ctxs.get(total / k) else { continue };
+    for &k in &ks {
+        let d = total / k;
+        let Some(ctx) = ctxs.get(d) else { continue };
         if k <= ctx.segments.instances.len() {
             structurally_possible = true;
         }
-        let mut memo = SpanMemo::default();
-        if let Some(p) = plan_fixed_stages_memo(g, ctx, opts, k, &mut memo) {
+        let Some(t) = tables.get(&d) else { continue };
+        if let Some(p) = plan_fixed_stages_tables(g, ctx, opts, k, t) {
             if best.as_ref().map_or(true, |b| p.step_time_us < b.step_time_us) {
                 best = Some(p);
             }
@@ -447,23 +620,30 @@ pub fn plan_pipeline(
         // cap-checked, so None remains the honest "does not fit" answer
         // whenever some candidate was structurally possible
         if let Some(ctx) = ctxs.get(total) {
-            let mut memo = SpanMemo::default();
-            best = plan_fixed_stages_memo(g, ctx, opts, 1, &mut memo);
+            best = match tables.get(&total) {
+                Some(t) => plan_fixed_stages_tables(g, ctx, opts, 1, t),
+                None => plan_fixed_stages(g, ctx, opts, 1),
+            };
         }
     }
     best
 }
 
 /// Best `k`-stage plan over one context (the DP the tests verify against
-/// brute-force split enumeration).
+/// brute-force split enumeration). Builds the context's span tables with
+/// serial sweeps; [`plan_pipeline`] shares pool-built tables instead.
 pub fn plan_fixed_stages(
     g: &Graph,
     ctx: &StageContext,
     opts: &PipelineOptions,
     k: usize,
 ) -> Option<PipelinePlan> {
-    let mut memo = SpanMemo::default();
-    plan_fixed_stages_memo(g, ctx, opts, k, &mut memo)
+    let tables = if k <= 1 || k > ctx.segments.instances.len() {
+        SpanTables::values_only_ctx(ctx, opts)
+    } else {
+        SpanTables::build(ctx, opts)
+    };
+    plan_fixed_stages_tables(g, ctx, opts, k, &tables)
 }
 
 /// Pareto state of a stage-split DP prefix: the latency sum and max so
@@ -475,20 +655,12 @@ struct SplitState {
     starts: Vec<usize>,
 }
 
-/// Memoized per-span solutions shared across one (context, stage-count)
-/// DP: the PR 2 single-plan path and the memory-aware frontier path.
-#[derive(Default)]
-struct SpanMemo {
-    plans: HashMap<(usize, usize), Option<Plan>>,
-    frontiers: HashMap<(usize, usize), Vec<SpanMemPlan>>,
-}
-
-fn plan_fixed_stages_memo(
+fn plan_fixed_stages_tables(
     g: &Graph,
     ctx: &StageContext,
     opts: &PipelineOptions,
     k: usize,
-    memo: &mut SpanMemo,
+    tables: &SpanTables,
 ) -> Option<PipelinePlan> {
     let n = ctx.segments.instances.len();
     if k == 0 || k > n {
@@ -497,7 +669,7 @@ fn plan_fixed_stages_memo(
     let m = opts.microbatches.max(1);
     let mf = m as f64;
     if k == 1 {
-        let st = build_stage_plan(g, ctx, opts, memo, 0, n, 0, 1)?;
+        let st = build_stage_plan(g, ctx, opts, tables, 0, n, 0, 1)?;
         let step = st.plan.time_us;
         let mem = st.plan.mem_bytes;
         let peak = st.peak_mem_bytes;
@@ -524,7 +696,7 @@ fn plan_fixed_stages_memo(
                 if dp[s - 1][j].is_empty() {
                     continue;
                 }
-                let Some(lat) = stage_latency(g, ctx, opts, memo, j, i, s - 1, k) else {
+                let Some(lat) = stage_latency(g, ctx, opts, tables, j, i, s - 1, k) else {
                     continue;
                 };
                 for st in &dp[s - 1][j] {
@@ -559,7 +731,7 @@ fn plan_fixed_stages_memo(
     let mut peak_1f1b = 0u64;
     for s in 0..k {
         let (lo, hi) = (bounds[s], bounds[s + 1]);
-        let st = build_stage_plan(g, ctx, opts, memo, lo, hi, s, k)
+        let st = build_stage_plan(g, ctx, opts, tables, lo, hi, s, k)
             .expect("span solved during DP");
         if st.plan.mem_bytes > mem_peak {
             mem_peak = st.plan.mem_bytes;
@@ -596,9 +768,9 @@ pub fn brute_force_splits(
     if k == 0 || k > n {
         return None;
     }
-    let mut memo = SpanMemo::default();
+    let tables = SpanTables::build(ctx, opts);
     if k == 1 {
-        return build_stage_plan(g, ctx, opts, &mut memo, 0, n, 0, 1).map(|st| st.plan.time_us);
+        return build_stage_plan(g, ctx, opts, &tables, 0, n, 0, 1).map(|st| st.plan.time_us);
     }
     let m = opts.microbatches.max(1);
     let r = k - 1; // number of cut points, values in 1..n strictly increasing
@@ -611,7 +783,7 @@ pub fn brute_force_splits(
         bounds.push(n);
         let mut lats = Vec::with_capacity(k);
         for s in 0..k {
-            match stage_latency(g, ctx, opts, &mut memo, bounds[s], bounds[s + 1], s, k) {
+            match stage_latency(g, ctx, opts, &tables, bounds[s], bounds[s + 1], s, k) {
                 Some(l) => lats.push(l),
                 None => break,
             }
@@ -774,45 +946,15 @@ fn compose_step_us(lats: &[f64], microbatches: usize) -> f64 {
     sum + (microbatches.max(1) as f64 - 1.0) * mx
 }
 
-/// Memoized intra-op solution for span `[lo, hi)` under the per-device
-/// memory cap, with the same unconstrained fallback as `run_cfp` (so the
-/// `k = 1` span reproduces the single-stage plan exactly). PR 2 path —
-/// used only when the planner is not memory-aware.
-fn solve_span(
-    ctx: &StageContext,
-    opts: &PipelineOptions,
-    memo: &mut SpanMemo,
-    lo: usize,
-    hi: usize,
-) -> Option<Plan> {
-    if let Some(p) = memo.plans.get(&(lo, hi)) {
-        return p.clone();
-    }
-    let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
-    let plan = cost::search_span(&ctx.segments, &ctx.db, cap, lo, hi)
-        .or_else(|| cost::search_span(&ctx.segments, &ctx.db, None, lo, hi));
-    memo.plans.insert((lo, hi), plan.clone());
-    plan
-}
-
-/// Memoized (time × 1F1B-memory) frontier for span `[lo, hi)` — the
-/// memory-aware counterpart of [`solve_span`].
-fn span_frontier<'a>(
-    ctx: &StageContext,
-    opts: &PipelineOptions,
-    memo: &'a mut SpanMemo,
-    lo: usize,
-    hi: usize,
-) -> &'a [SpanMemPlan] {
-    memo.frontiers
-        .entry((lo, hi))
-        .or_insert_with(|| cost::search_span_mem(&ctx.segments, &ctx.db, lo, hi, opts.recompute))
-}
-
-/// Solve span `[lo, hi)` as stage `stage_idx` of a `k`-stage pipeline.
+/// Solve span `[lo, hi)` as stage `stage_idx` of a `k`-stage pipeline —
+/// the *reconstruction* path, run only for the spans a winning split
+/// actually uses (the DP itself compares swept values via
+/// [`stage_latency`]).
 ///
 /// * Legacy mode (no cap, recompute off): the PR 2 plan, with the 1F1B
 ///   accounting computed for *reporting* only — plans stay bit-identical.
+///   The capped search with unconstrained fallback replays exactly the
+///   fold the sweep recorded.
 /// * Memory-aware mode: the min-time frontier point whose 1F1B peak
 ///   (`static + f·retained/m + transient/m`, `f = min(m, k − i)`) fits
 ///   the device cap; checkpointed variants recover stages the
@@ -821,7 +963,7 @@ fn build_stage_plan(
     g: &Graph,
     ctx: &StageContext,
     opts: &PipelineOptions,
-    memo: &mut SpanMemo,
+    tables: &SpanTables,
     lo: usize,
     hi: usize,
     stage_idx: usize,
@@ -831,18 +973,20 @@ fn build_stage_plan(
     let me = m_eff(opts, k);
     let f = memory::inflight_microbatches(k, stage_idx, me);
     let p2p_in_us = if stage_idx == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, stage_idx) };
-    let (plan, footprint, remat) = if opts.memory_aware() {
-        let sel = {
-            let frontier = span_frontier(ctx, opts, memo, lo, hi);
-            memory::select_feasible(frontier, me, f, opts.device_cap())?.clone()
-        };
-        let fp = sel.footprint;
-        let (_, mem_bytes) = cost::plan_cost_span(&ctx.segments, &ctx.db, &sel.choice, lo, hi);
-        (Plan { choice: sel.choice, time_us: sel.time_us, mem_bytes }, fp, sel.remat)
-    } else {
-        let plan = solve_span(ctx, opts, memo, lo, hi)?;
-        let fp = memory::span_footprint(&ctx.segments, &ctx.db, &plan.choice, lo, hi);
-        (plan, fp, vec![false; hi - lo])
+    let (plan, footprint, remat) = match &tables.values {
+        SpanValues::Memory { spec, .. } => {
+            let frontier = cost::search_span_mem_ctx(&tables.ctx, lo, hi, *spec);
+            let sel = memory::select_feasible(&frontier, me, f, opts.device_cap())?.clone();
+            let fp = sel.footprint;
+            let (_, mem_bytes) = cost::plan_cost_span(&ctx.segments, &ctx.db, &sel.choice, lo, hi);
+            (Plan { choice: sel.choice, time_us: sel.time_us, mem_bytes }, fp, sel.remat)
+        }
+        SpanValues::Legacy { cap, .. } => {
+            let plan = cost::search_span_ctx(&tables.ctx, Some(*cap), lo, hi)
+                .or_else(|| cost::search_span_ctx(&tables.ctx, None, lo, hi))?;
+            let fp = memory::span_footprint(&ctx.segments, &ctx.db, &plan.choice, lo, hi);
+            (plan, fp, vec![false; hi - lo])
+        }
     };
     let peak_mem_bytes = footprint.peak_bytes(me, f);
     let latency_us = plan.time_us / mf + p2p_in_us;
@@ -861,28 +1005,21 @@ fn build_stage_plan(
 /// Per-microbatch stage latency `T/m + x` for span `[lo, hi)` as stage
 /// `stage_idx` (0-based) of `k`; None if the span has no feasible plan
 /// (under the 1F1B peak cap when memory-aware). This is the DP's hot
-/// transition, so it reads only the memoized span solution's time — the
-/// selection and arithmetic are shared with [`build_stage_plan`], which
-/// materializes the identical stage during final reconstruction.
+/// transition: one table read (legacy) or one frontier probe
+/// (memory-aware) — the selection and arithmetic are shared with
+/// [`build_stage_plan`], which materializes the identical stage during
+/// final reconstruction.
 fn stage_latency(
     g: &Graph,
     ctx: &StageContext,
     opts: &PipelineOptions,
-    memo: &mut SpanMemo,
+    tables: &SpanTables,
     lo: usize,
     hi: usize,
     stage_idx: usize,
     k: usize,
 ) -> Option<f64> {
-    let time_us = if opts.memory_aware() {
-        let me = m_eff(opts, k);
-        let f = memory::inflight_microbatches(k, stage_idx, me);
-        let cap = opts.device_cap();
-        let frontier = span_frontier(ctx, opts, memo, lo, hi);
-        memory::select_feasible(frontier, me, f, cap)?.time_us
-    } else {
-        solve_span(ctx, opts, memo, lo, hi)?.time_us
-    };
+    let time_us = tables.span_time(opts, lo, hi, stage_idx, k)?;
     let mf = opts.microbatches.max(1) as f64;
     let p2p = if stage_idx == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, stage_idx) };
     Some(time_us / mf + p2p)

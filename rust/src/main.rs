@@ -186,11 +186,13 @@ fn cmd_pipeline(args: &Args) -> i32 {
     }
     t.print();
     println!(
-        "two-level plan: {} stage(s) × {} device(s), bubble {:.1}%, 1F1B peak {}",
+        "two-level plan: {} stage(s) × {} device(s), bubble {:.1}%, 1F1B peak {}, \
+         search {}",
         pipeline.num_stages(),
         pipeline.devices_per_stage,
         pipeline.bubble_fraction * 100.0,
         fmt_bytes(pipeline.peak_mem_bytes),
+        fmt_us(r.search_us),
     );
     for line in pipeline.describe() {
         println!("  {line}");
@@ -317,6 +319,7 @@ fn cmd_bench_serve(args: &Args) -> i32 {
         coalesced: g("coalesced"),
         profile_hits: g("profile_hits"),
         profile_misses: g("profile_misses"),
+        search_us: g("search_us"),
     };
     let mut t = Table::new(CacheEffect::headers());
     t.row(eff.cells());

@@ -120,6 +120,58 @@ pub fn remat_points(p: &SegmentProfile, cfg: usize, spec: RecomputeSpec) -> Vec<
     out
 }
 
+/// Precomputed rematerialization frontiers for every (unique segment,
+/// config) of a [`ProfileDb`] — the reuse buffer behind the span DP's
+/// hot loop. [`remat_points`] allocates a fresh `Vec` per call; the
+/// memory-axis DP used to call it per *(position, config)* inside its
+/// innermost loop. A `RematTable` is built once per `(SegmentSet,
+/// ProfileDb)` (it lives inside [`crate::cost::SearchCtx`]) and hands
+/// out borrowed slices instead.
+///
+/// Both [`RecomputeSpec`] variants are served from one flat buffer: the
+/// stored per-config list is the `Auto` frontier, whose first point is
+/// always the keep-everything point — exactly the `Off` frontier — so
+/// `Off` is the length-1 prefix of `Auto` by construction.
+#[derive(Clone, Debug, Default)]
+pub struct RematTable {
+    points: Vec<RematPoint>,
+    /// offsets per flat (unique, config) index, len = total configs + 1;
+    /// flat index = (configs of uniques < u) + cfg, the same layout as
+    /// `SearchCtx`'s per-config columns
+    off: Vec<usize>,
+}
+
+impl RematTable {
+    /// Build the table for every (unique, config) of `db`, in unique-id
+    /// then config order (the `SearchCtx` flat-column layout).
+    pub fn build(db: &ProfileDb) -> RematTable {
+        let mut points = Vec::new();
+        let mut off = Vec::with_capacity(
+            db.segments.iter().map(|p| p.configs.len()).sum::<usize>() + 1,
+        );
+        off.push(0);
+        for p in &db.segments {
+            for cfg in 0..p.configs.len() {
+                points.extend(remat_points(p, cfg, RecomputeSpec::Auto));
+                off.push(points.len());
+            }
+        }
+        RematTable { points, off }
+    }
+
+    /// The remat frontier of flat config index `flat` under `spec` —
+    /// identical to [`remat_points`] on the owning profile, without the
+    /// per-call allocation.
+    pub fn points(&self, flat: usize, spec: RecomputeSpec) -> &[RematPoint] {
+        let s = &self.points[self.off[flat]..self.off[flat + 1]];
+        if spec.is_auto() {
+            s
+        } else {
+            &s[..1]
+        }
+    }
+}
+
 /// The microbatch count the memory accounting of a `stages`-deep plan
 /// divides by: a single stage bypasses the microbatch division entirely
 /// (the PR 2 whole-batch convention), deeper pipelines split the batch
@@ -392,6 +444,30 @@ mod tests {
         // transient recompute set is as large as what it saved
         assert!(select_feasible(&frontier, 1, 1, 1_000).unwrap().time_us == 100.0);
         assert!(select_feasible(&frontier, 1, 1, 999).is_none());
+    }
+
+    #[test]
+    fn remat_table_matches_per_call_frontiers() {
+        let mut db = ProfileDb::default();
+        db.segments.push(profile());
+        // a profile whose checkpoint stash buys nothing (single-point frontier)
+        let mut fat = profile();
+        fat.ckpt_bytes = vec![600, 300];
+        db.segments.push(fat);
+        let table = RematTable::build(&db);
+        let mut flat = 0;
+        for p in &db.segments {
+            for cfg in 0..p.configs.len() {
+                for spec in [RecomputeSpec::Off, RecomputeSpec::Auto] {
+                    assert_eq!(
+                        table.points(flat, spec),
+                        remat_points(p, cfg, spec).as_slice(),
+                        "flat {flat} {spec:?}"
+                    );
+                }
+                flat += 1;
+            }
+        }
     }
 
     #[test]

@@ -103,6 +103,11 @@ pub struct ServiceStats {
     pub profile_hits: u64,
     /// unique segments actually profiled, summed over every search
     pub profile_misses: u64,
+    /// cumulative wall-clock µs spent inside plan search (ComposeSearch
+    /// + inter-op planning), summed over every executed search — lets a
+    /// serving deployment observe search-side speedups; plan hits and
+    /// coalesced followers add nothing here
+    pub search_us: u64,
 }
 
 impl ServiceStats {
@@ -116,6 +121,7 @@ impl ServiceStats {
             ("errors", Json::num(self.errors as f64)),
             ("profile_hits", Json::num(self.profile_hits as f64)),
             ("profile_misses", Json::num(self.profile_misses as f64)),
+            ("search_us", Json::num(self.search_us as f64)),
         ])
     }
 }
@@ -329,22 +335,27 @@ impl PlanService {
         match kind {
             RequestKind::Plan => {
                 let r = run_cfp_shared(opts, &self.inner.profiles);
-                self.absorb_profile_stats(r.db.stats.cache_hits, r.db.stats.cache_misses);
+                self.absorb_search_stats(
+                    r.db.stats.cache_hits,
+                    r.db.stats.cache_misses,
+                    r.timings.compose_search_s * 1e6,
+                );
                 request::plan_payload(&r)
             }
             RequestKind::Pipeline => {
                 let r = run_cfp_two_level_shared(opts, &self.inner.profiles);
-                self.absorb_profile_stats(r.profile_hits, r.profile_misses);
+                self.absorb_search_stats(r.profile_hits, r.profile_misses, r.search_us);
                 request::pipeline_payload(&r)
             }
             RequestKind::Stats => unreachable!("stats requests are answered without planning"),
         }
     }
 
-    fn absorb_profile_stats(&self, hits: usize, misses: usize) {
+    fn absorb_search_stats(&self, hits: usize, misses: usize, search_us: f64) {
         let mut st = self.lock_state();
         st.stats.profile_hits += hits as u64;
         st.stats.profile_misses += misses as u64;
+        st.stats.search_us += search_us.max(0.0) as u64;
     }
 
     fn error_response(&self, id: Option<&Json>, tag: Option<&'static str>, msg: &str) -> String {
@@ -458,6 +469,10 @@ mod tests {
         assert_eq!(r.get("searches").and_then(Json::as_u64), Some(1));
         assert_eq!(r.get("requests").and_then(Json::as_u64), Some(2));
         assert!(r.get("profile_misses").and_then(Json::as_u64).unwrap() > 0);
+        // cumulative search time is reported (a cache hit adds nothing)
+        let search_us = r.get("search_us").and_then(Json::as_u64).expect("search_us counter");
+        svc.handle_line(line());
+        assert_eq!(svc.stats().search_us, search_us, "plan hits never search");
     }
 
     #[test]

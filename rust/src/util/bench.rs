@@ -85,9 +85,83 @@ pub fn black_box<T>(x: T) -> T {
     std::hint::black_box(x)
 }
 
+/// One machine-readable bench row for the repo-root `BENCH_*.json`
+/// trajectory files (name, problem size, ns/iter, speedup vs the
+/// recorded baseline — `None` for rows that *are* a baseline).
+pub struct JsonRow {
+    pub name: String,
+    pub layers: usize,
+    pub ns_per_iter: f64,
+    pub speedup: Option<f64>,
+}
+
+impl JsonRow {
+    fn to_json(&self) -> super::Json {
+        use super::Json;
+        Json::obj(vec![
+            ("name", Json::str(self.name.clone())),
+            ("layers", Json::num(self.layers as f64)),
+            ("ns_per_iter", Json::num(self.ns_per_iter)),
+            ("speedup", self.speedup.map_or(Json::Null, Json::num)),
+        ])
+    }
+}
+
+/// Merge `rows` into the JSON bench file at `path` (`{"rows": [...]}`):
+/// existing rows with the same name are replaced, everything else is
+/// kept, output is name-sorted and written atomically (tmp + rename) —
+/// so `cargo bench --bench search` and `--bench memory` can both feed
+/// one trajectory file, in any order, without clobbering each other.
+pub fn merge_bench_json(path: &std::path::Path, rows: &[JsonRow]) -> std::io::Result<()> {
+    use super::Json;
+    let mut by_name: std::collections::BTreeMap<String, Json> = std::collections::BTreeMap::new();
+    if let Ok(text) = std::fs::read_to_string(path) {
+        if let Ok(j) = Json::parse(&text) {
+            if let Some(arr) = j.get("rows").and_then(Json::as_arr) {
+                for row in arr {
+                    if let Some(name) = row.get("name").and_then(Json::as_str) {
+                        by_name.insert(name.to_string(), row.clone());
+                    }
+                }
+            }
+        }
+    }
+    for r in rows {
+        by_name.insert(r.name.clone(), r.to_json());
+    }
+    let out = Json::obj(vec![("rows", Json::Arr(by_name.into_values().collect()))]);
+    let tmp = path.with_extension("json.tmp");
+    std::fs::write(&tmp, out.to_string_pretty() + "\n")?;
+    std::fs::rename(&tmp, path)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn bench_json_merges_by_name_and_round_trips() {
+        let path = std::env::temp_dir()
+            .join(format!("cfp_bench_json_{}.json", std::process::id()));
+        let _ = std::fs::remove_file(&path);
+        let row = |name: &str, ns: f64, sp: Option<f64>| JsonRow {
+            name: name.into(),
+            layers: 32,
+            ns_per_iter: ns,
+            speedup: sp,
+        };
+        merge_bench_json(&path, &[row("a", 100.0, None), row("b", 50.0, Some(2.0))]).unwrap();
+        // a re-run replaces matching rows and keeps the rest
+        merge_bench_json(&path, &[row("b", 40.0, Some(2.5))]).unwrap();
+        let j = crate::util::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        assert_eq!(rows.len(), 2);
+        assert_eq!(rows[0].get("name").unwrap().as_str(), Some("a"));
+        assert_eq!(rows[0].get("speedup"), Some(&crate::util::Json::Null));
+        assert_eq!(rows[1].get("ns_per_iter").unwrap().as_f64(), Some(40.0));
+        assert_eq!(rows[1].get("speedup").unwrap().as_f64(), Some(2.5));
+        let _ = std::fs::remove_file(&path);
+    }
 
     #[test]
     fn bench_reports_sane_numbers() {

@@ -164,6 +164,49 @@ fn two_level_never_slower_than_single_and_beats_naive_somewhere() {
 }
 
 #[test]
+fn parallel_plan_pipeline_bit_identical_at_any_thread_count() {
+    // the sweep jobs fan out over the pool with order-preserving
+    // collection, so the composed plan must match the serial path
+    // bit-for-bit at every thread count, in both planner modes
+    use cfp::interop::{plan_pipeline, StageContexts};
+    use cfp::memory::RecomputeSpec;
+
+    let g = build_training(&ModelCfg::preset("gpt-tiny").with_layers(4));
+    let mut popts = PipelineOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+    popts.spec = StageSpec::Auto;
+    let mut ctxs = StageContexts::new();
+    ctxs.ensure_all(&g, &popts, CacheHandle::None);
+
+    for memory_aware in [false, true] {
+        let mut serial = popts.clone();
+        if memory_aware {
+            serial.recompute = RecomputeSpec::Auto;
+        }
+        serial.threads = 1;
+        let want = plan_pipeline(&g, &ctxs, &serial).expect("uncapped planning is feasible");
+        for threads in [2usize, 4, 7] {
+            let mut par = serial.clone();
+            par.threads = threads;
+            let got = plan_pipeline(&g, &ctxs, &par).expect("same feasibility");
+            assert!(
+                got.step_time_us == want.step_time_us,
+                "threads={threads} memory_aware={memory_aware}: {} vs {}",
+                got.step_time_us,
+                want.step_time_us
+            );
+            assert_eq!(got.num_stages(), want.num_stages(), "threads={threads}");
+            for (a, b) in got.stages.iter().zip(&want.stages) {
+                assert_eq!(a.span, b.span, "threads={threads}");
+                assert_eq!(a.plan.choice, b.plan.choice, "threads={threads}");
+                assert!(a.plan.time_us == b.plan.time_us, "threads={threads}");
+                assert_eq!(a.plan.mem_bytes, b.plan.mem_bytes, "threads={threads}");
+                assert_eq!(a.remat, b.remat, "threads={threads}");
+            }
+        }
+    }
+}
+
+#[test]
 fn warm_cache_serves_every_stage_count_and_plans_round_trip() {
     let dir = temp_dir("warm");
     let path = dir.join("profiles.json");

@@ -1,0 +1,258 @@
+//! Property suite for the PR 5 repetition-aware search core: randomized
+//! profiles × random memory caps × random span bounds, asserting the
+//! collapsed / sweep-based searchers return plans **bit-identical**
+//! (choice, time, mem — floats compared by bits) to the pre-refactor DP
+//! kept verbatim in `cfp::cost::oracle`.
+//!
+//! The synthetic generator builds chains with *runs* of repeated uniques
+//! (the steady-state splice's trigger), leaves some reshard tables
+//! absent (the dense matrices must reproduce the 0.0 default), and
+//! includes degenerate shapes (single-config uniques, single-instance
+//! spans).
+
+use cfp::cost::{self, oracle};
+use cfp::memory::{self, RecomputeSpec};
+use cfp::profiler::{ProfileDb, ReshardTable, SegmentConfig, SegmentProfile};
+use cfp::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+use cfp::spmd::ShardState;
+use cfp::util::proptest::Prop as Harness;
+use cfp::util::Pcg64;
+
+fn random_profile(rng: &mut Pcg64, cfgs: usize) -> SegmentProfile {
+    let mem_bytes: Vec<u64> = (0..cfgs).map(|_| 500 + rng.below(4000)).collect();
+    let act_bytes: Vec<u64> = mem_bytes.iter().map(|&m| rng.below(m + 1)).collect();
+    let ckpt_bytes: Vec<u64> = act_bytes.iter().map(|&a| rng.below(a + 1)).collect();
+    SegmentProfile {
+        configs: (0..cfgs).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+        t_c_us: (0..cfgs).map(|_| rng.f64() * 200.0).collect(),
+        t_p_us: (0..cfgs).map(|_| rng.f64() * 400.0).collect(),
+        mem_bytes,
+        act_bytes,
+        ckpt_bytes,
+        t_fwd_us: (0..cfgs).map(|_| rng.f64() * 100.0).collect(),
+        symbolic_volume: vec![0; cfgs],
+        boundary_out: vec![ShardState::Replicated; cfgs],
+        boundary_in: vec![ShardState::Replicated; cfgs],
+    }
+}
+
+/// A random `(SegmentSet, ProfileDb)` pair. `deep` biases towards long
+/// chains with long runs of one unique — the splice's steady state.
+fn random_setup(rng: &mut Pcg64, deep: bool) -> (SegmentSet, ProfileDb) {
+    let uniques = 1 + rng.below(3) as usize;
+    let mut db = ProfileDb::default();
+    for _ in 0..uniques {
+        let cfgs = 1 + rng.below(4) as usize;
+        db.segments.push(random_profile(rng, cfgs));
+    }
+    // reshard tables for ~2/3 of the pairs; the rest default to 0.0
+    for a in 0..uniques {
+        for b in 0..uniques {
+            if rng.below(3) > 0 {
+                let (ca, cb) = (db.segments[a].configs.len(), db.segments[b].configs.len());
+                let t_r_us: Vec<Vec<f64>> =
+                    (0..ca).map(|_| (0..cb).map(|_| rng.f64() * 50.0).collect()).collect();
+                db.reshard.insert(
+                    (a, b),
+                    ReshardTable { t_r_us, sym_vol: vec![vec![0; cb]; ca], programs: ca * cb },
+                );
+            }
+        }
+    }
+    let target = if deep { 120 + rng.below(140) as usize } else { 3 + rng.below(18) as usize };
+    let max_run = if deep { 60 } else { 6 };
+    let mut uids: Vec<usize> = Vec::new();
+    while uids.len() < target {
+        let u = rng.below(uniques as u64) as usize;
+        let run = 1 + rng.below(max_run) as usize;
+        for _ in 0..run {
+            uids.push(u);
+            if uids.len() >= target {
+                break;
+            }
+        }
+    }
+    let instances: Vec<SegmentInstance> = uids
+        .iter()
+        .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique: Vec<UniqueSegment> = (0..uniques)
+        .map(|u| UniqueSegment {
+            id: u,
+            fingerprint: format!("u{u}"),
+            rep: uids.iter().position(|&x| x == u).unwrap_or(0),
+            count: uids.iter().filter(|&&x| x == u).count(),
+        })
+        .collect();
+    (SegmentSet { instances, unique }, db)
+}
+
+fn random_span(rng: &mut Pcg64, n: usize) -> (usize, usize) {
+    let lo = rng.below(n as u64) as usize;
+    let hi = lo + 1 + rng.below((n - lo) as u64) as usize;
+    (lo, hi)
+}
+
+fn assert_plans_eq(a: &Option<cost::Plan>, b: &Option<cost::Plan>, what: &str) {
+    match (a, b) {
+        (Some(a), Some(b)) => {
+            assert_eq!(a.choice, b.choice, "{what}: choice");
+            assert!(
+                a.time_us.to_bits() == b.time_us.to_bits(),
+                "{what}: time {} vs {}",
+                a.time_us,
+                b.time_us
+            );
+            assert_eq!(a.mem_bytes, b.mem_bytes, "{what}: mem");
+        }
+        (None, None) => {}
+        _ => panic!("{what}: feasibility mismatch {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn prop_span_search_bit_identical_to_reference() {
+    Harness::new(48, 0x5EA5C4).check("span search ≡ reference", |rng| {
+        let (ss, db) = random_setup(rng, false);
+        let n = ss.instances.len();
+        let free = oracle::search_span_reference(&ss, &db, None, 0, n).expect("always feasible");
+        let caps = [
+            None,
+            Some(1u64),
+            Some(rng.below(free.mem_bytes + 1)),
+            Some((free.mem_bytes as f64 * 0.8) as u64),
+            Some(free.mem_bytes),
+        ];
+        for _ in 0..6 {
+            let (lo, hi) = random_span(rng, n);
+            for cap in caps {
+                let new = cost::search_span(&ss, &db, cap, lo, hi);
+                let reference = oracle::search_span_reference(&ss, &db, cap, lo, hi);
+                assert_plans_eq(&new, &reference, &format!("[{lo},{hi}) cap {cap:?}"));
+            }
+        }
+        // and the whole chain
+        for cap in caps {
+            let new = cost::search_span(&ss, &db, cap, 0, n);
+            let reference = oracle::search_span_reference(&ss, &db, cap, 0, n);
+            assert_plans_eq(&new, &reference, &format!("[0,{n}) cap {cap:?}"));
+        }
+    });
+}
+
+#[test]
+fn prop_deep_repeated_chains_splice_exactly() {
+    // long runs of one unique: the steady-state splice must engage and
+    // still agree with the per-position reference bit-for-bit
+    Harness::new(10, 0xDEEC0DE).check("deep chain splice ≡ reference", |rng| {
+        let (ss, db) = random_setup(rng, true);
+        let n = ss.instances.len();
+        let new = cost::search(&ss, &db, None);
+        let reference = oracle::search_span_reference(&ss, &db, None, 0, n);
+        assert_plans_eq(&new, &reference, &format!("deep [0,{n})"));
+        for _ in 0..3 {
+            let (lo, hi) = random_span(rng, n);
+            let new = cost::search_span(&ss, &db, None, lo, hi);
+            let reference = oracle::search_span_reference(&ss, &db, None, lo, hi);
+            assert_plans_eq(&new, &reference, &format!("deep [{lo},{hi})"));
+        }
+    });
+}
+
+#[test]
+fn prop_sweep_times_fold_the_reference_retry() {
+    Harness::new(24, 0x5EEB).check("sweep ≡ capped-then-unconstrained retry", |rng| {
+        let (ss, db) = random_setup(rng, false);
+        let n = ss.instances.len();
+        let ctx = cost::SearchCtx::new(&ss, &db);
+        let free = oracle::search_span_reference(&ss, &db, None, 0, n).expect("feasible");
+        for cap in [1u64, free.mem_bytes / 2, free.mem_bytes, u64::MAX] {
+            let lo = rng.below(n as u64) as usize;
+            let swept = cost::sweep_span_times(&ctx, lo, cap);
+            assert_eq!(swept.len(), n - lo);
+            for hi in (lo + 1)..=n {
+                let want = oracle::search_span_reference(&ss, &db, Some(cap), lo, hi)
+                    .or_else(|| oracle::search_span_reference(&ss, &db, None, lo, hi))
+                    .map(|p| p.time_us);
+                let got = swept[hi - lo - 1];
+                match (got, want) {
+                    (Some(a), Some(b)) => {
+                        assert!(a.to_bits() == b.to_bits(), "[{lo},{hi}) cap {cap}: {a} vs {b}")
+                    }
+                    (None, None) => {}
+                    (a, b) => panic!("[{lo},{hi}) cap {cap}: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mem_frontier_bit_identical_to_reference() {
+    Harness::new(24, 0x3E3).check("memory frontier ≡ reference", |rng| {
+        let (ss, db) = random_setup(rng, false);
+        let n = ss.instances.len();
+        for spec in [RecomputeSpec::Off, RecomputeSpec::Auto] {
+            for _ in 0..4 {
+                let (lo, hi) = random_span(rng, n);
+                let new = cost::search_span_mem(&ss, &db, lo, hi, spec);
+                let reference = oracle::search_span_mem_reference(&ss, &db, lo, hi, spec);
+                assert_eq!(new.len(), reference.len(), "[{lo},{hi}) {spec:?}");
+                for (a, b) in new.iter().zip(&reference) {
+                    assert_eq!(a.choice, b.choice, "[{lo},{hi}) {spec:?}");
+                    assert_eq!(a.remat, b.remat, "[{lo},{hi}) {spec:?}");
+                    assert!(a.time_us.to_bits() == b.time_us.to_bits(), "[{lo},{hi}) {spec:?}");
+                    assert_eq!(a.footprint.static_bytes, b.footprint.static_bytes);
+                    assert_eq!(a.footprint.retained_bytes, b.footprint.retained_bytes);
+                    assert_eq!(a.footprint.transient_bytes, b.footprint.transient_bytes);
+                    assert!(
+                        a.footprint.recompute_us.to_bits() == b.footprint.recompute_us.to_bits()
+                    );
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_sweep_frontiers_and_selection_match_reference() {
+    Harness::new(16, 0xF207).check("frontier sweep ≡ per-span reference", |rng| {
+        let (ss, db) = random_setup(rng, false);
+        let n = ss.instances.len();
+        let ctx = cost::SearchCtx::new(&ss, &db);
+        let spec = if rng.below(2) == 0 { RecomputeSpec::Off } else { RecomputeSpec::Auto };
+        let lo = rng.below(n as u64) as usize;
+        let swept = cost::sweep_span_frontiers(&ctx, lo, spec);
+        for hi in (lo + 1)..=n {
+            let reference = oracle::search_span_mem_reference(&ss, &db, lo, hi, spec);
+            let rows = &swept[hi - lo - 1];
+            assert_eq!(rows.len(), reference.len(), "[{lo},{hi}) {spec:?}");
+            for (r, p) in rows.iter().zip(&reference) {
+                assert!(r.time_us.to_bits() == p.time_us.to_bits());
+                assert_eq!(r.static_bytes, p.footprint.static_bytes);
+                assert_eq!(r.retained_bytes, p.footprint.retained_bytes);
+                assert_eq!(r.transient_bytes, p.footprint.transient_bytes);
+            }
+            // the value-only feasibility probe picks the same plan the
+            // reconstruction will
+            let me = 1 + rng.below(8) as usize;
+            let f = 1 + rng.below(4) as usize;
+            let caps: Vec<u64> = reference
+                .iter()
+                .map(|p| p.peak_bytes(me, f))
+                .chain([0, u64::MAX])
+                .collect();
+            for cap in caps {
+                let want = memory::select_feasible(&reference, me, f, cap).map(|p| p.time_us);
+                let got = cost::select_time(rows, me, f, cap);
+                match (got, want) {
+                    (Some(a), Some(b)) => {
+                        assert!(a.to_bits() == b.to_bits(), "cap {cap}: {a} vs {b}")
+                    }
+                    (None, None) => {}
+                    (a, b) => panic!("cap {cap}: {a:?} vs {b:?}"),
+                }
+            }
+        }
+    });
+}
