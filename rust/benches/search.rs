@@ -159,6 +159,44 @@ fn main() {
         });
     }
 
+    // exact-vs-DP lane (PR 6): the branch-and-bound optimality oracle on
+    // a small synthetic chain, priced against the production DP it
+    // certifies. The ratio is the cost of certification, not a target —
+    // the DP must win; the lane exists so BENCH trajectories notice if
+    // the exact lane's pruning regresses into the un-benchable.
+    {
+        let (ss, db) = cfp::harness::synthetic_chain(10, 3, 3, 0xE5AC7);
+        let n = ss.instances.len();
+        let sctx = cost::SearchCtx::new(&ss, &db);
+        let dp_plan = cost::search_span_ctx(&sctx, None, 0, n).expect("plan");
+        let ex_plan = cost::search_span_exact(&sctx, None, 0, n).expect("plan");
+        assert!(
+            dp_plan.time_us.to_bits() == ex_plan.time_us.to_bits(),
+            "exact lane diverged from the DP on the bench instance"
+        );
+        let budget = Duration::from_millis(if smoke { 100 } else { 400 });
+        let dp = bench(&format!("exact_bnb/dp/{n}n"), budget, || {
+            black_box(cost::search_span_ctx(&sctx, None, 0, n));
+        });
+        let ex = bench(&format!("exact_bnb/bnb/{n}n"), budget, || {
+            black_box(cost::search_span_exact(&sctx, None, 0, n));
+        });
+        let ratio = ex.median_ns / dp.median_ns.max(1e-9);
+        println!("exact_bnb/{n}n: exact costs {ratio:.1}x the DP (certification overhead)");
+        rows.push(JsonRow {
+            name: format!("exact_bnb/dp/{n}n"),
+            layers: n,
+            ns_per_iter: dp.median_ns,
+            speedup: None,
+        });
+        rows.push(JsonRow {
+            name: format!("exact_bnb/bnb/{n}n"),
+            layers: n,
+            ns_per_iter: ex.median_ns,
+            speedup: Some(ratio),
+        });
+    }
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_search.json");
     match merge_bench_json(&path, &rows) {
         Ok(()) => println!("wrote {} rows to {}", rows.len(), path.display()),

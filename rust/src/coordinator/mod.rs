@@ -50,6 +50,10 @@ pub struct CfpOptions {
     /// activation memory (`--recompute auto|off`); with `Off` and no
     /// `mem_cap` the planner is bit-identical to PR 2
     pub recompute: RecomputeSpec,
+    /// which intra-op searcher ComposeSearch runs (`--engine`):
+    /// the production DP, the branch-and-bound exact lane, or `Auto`
+    /// (exact on small spans, DP otherwise — see cost::exact)
+    pub engine: cost::SearchEngine,
 }
 
 impl CfpOptions {
@@ -67,6 +71,7 @@ impl CfpOptions {
             stages: StageSpec::Single,
             microbatches: 8,
             recompute: RecomputeSpec::Off,
+            engine: cost::SearchEngine::Dp,
         }
     }
 
@@ -87,6 +92,14 @@ impl CfpOptions {
 
     pub fn with_recompute(mut self, spec: RecomputeSpec) -> CfpOptions {
         self.recompute = spec;
+        self
+    }
+
+    /// Intra-op search engine (`--engine dp|exact|auto`). `Exact` trades
+    /// time for a certified-optimal plan on small spans; `Auto` picks
+    /// exact only when the search space is tiny.
+    pub fn with_engine(mut self, engine: cost::SearchEngine) -> CfpOptions {
+        self.engine = engine;
         self
     }
 
@@ -202,6 +215,14 @@ impl CfpOptions {
                 Some(spec) => opts.recompute = spec,
                 None => {
                     warnings.push(format!("unknown --recompute value {r:?} (want auto|off)"))
+                }
+            }
+        }
+        if let Some(e) = args.get("engine") {
+            match cost::SearchEngine::parse(e) {
+                Some(engine) => opts.engine = engine,
+                None => {
+                    warnings.push(format!("unknown --engine value {e:?} (want dp|exact|auto)"))
                 }
             }
         }
@@ -430,8 +451,8 @@ pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> Cfp
     let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
     let sctx = cost::SearchCtx::new(&segments, &db);
     let n = segments.instances.len();
-    let plan = cost::search_span_ctx(&sctx, cap, 0, n)
-        .or_else(|| cost::search_span_ctx(&sctx, None, 0, n))
+    let plan = cost::search_span_engine(&sctx, cap, 0, n, opts.engine)
+        .or_else(|| cost::search_span_engine(&sctx, None, 0, n, opts.engine))
         .expect("no feasible plan");
     timings.compose_search_s = t2.elapsed().as_secs_f64();
 
@@ -650,6 +671,19 @@ mod tests {
         assert_eq!(built.opts.model.layers, ModelCfg::preset("gpt-tiny").layers);
         assert_eq!(built.opts.mem_cap, None);
         assert_eq!(built.opts.stages, StageSpec::Single);
+    }
+
+    #[test]
+    fn options_builder_parses_the_engine_flag() {
+        let args = args_of("x --model gpt-tiny --engine exact");
+        let built = CfpOptions::from_args(&args, PlannerKind::SingleLevel).unwrap();
+        assert!(built.warnings.is_empty(), "{:?}", built.warnings);
+        assert_eq!(built.opts.engine, cost::SearchEngine::Exact);
+
+        let args = args_of("x --model gpt-tiny --engine ilp");
+        let built = CfpOptions::from_args(&args, PlannerKind::SingleLevel).unwrap();
+        assert_eq!(built.warnings.len(), 1, "{:?}", built.warnings);
+        assert_eq!(built.opts.engine, cost::SearchEngine::Dp, "bad value keeps the default");
     }
 
     #[test]

@@ -1,0 +1,708 @@
+//! Exact optimality lane (PR 6): a deterministic, pure-std
+//! branch-and-bound searcher over the same [`SearchCtx`] SoA columns the
+//! DP lanes run on — an oracle that shares **no pruning assumptions**
+//! with them.
+//!
+//! Every equivalence guarantee before this module checked the
+//! repetition-aware search against the *pre-refactor version of the same
+//! DP* ([`super::oracle`]) — a shared-blind-spot baseline that cannot
+//! catch a bug both algorithms inherit, and in particular cannot see the
+//! one approximation both share: `FRONTIER_CAP` / `MEM_FRONTIER_CAP`
+//! thinning. This lane enumerates the assignment space itself:
+//!
+//! * **Scalar / capped lanes** ([`search_span_exact`]) — depth-first
+//!   branch-and-bound over per-instance configs. The state is the prefix
+//!   `(time, mem)` accumulated with the DP's *own* float association
+//!   (`(acc + reshard) + seg_time` per step), so the optimum it finds is
+//!   bit-identical to the DP's whenever the DP is exact. Bounding is the
+//!   admissible suffix relaxation `Σ (min_cfg seg_time + min reshard
+//!   edge)` with a deterministic downward slack (×(1 − 1e-9), covering
+//!   the ≤ n·ε relative rounding of the true remaining float sums, so a
+//!   bound can never over-prune), plus an exact-integer suffix-min-memory
+//!   prune under a cap. Children expand in ascending config order and the
+//!   incumbent improves on lexicographic `(time, mem)` — fixed tie order,
+//!   identical results at any thread count (the search is single-
+//!   threaded by construction).
+//! * **Memory-frontier lane** ([`search_span_mem_exact`]) — the exact
+//!   Pareto set over (time, 1F1B footprint): the same (config × remat)
+//!   product walk as the DP, but with **true dominance filtering only** —
+//!   no running-min keep rule, no `MEM_FRONTIER_CAP` thinning. Dropping a
+//!   dominated point is exact because every transition is monotone in
+//!   every kept coordinate (float add of a constant, integer sums, max).
+//!   Terminals are canonicalized by the reference's own
+//!   (time, stat, ret, tra) sort + dominance rule, so outputs compare
+//!   directly against [`super::search_span_mem_ctx`].
+//!
+//! Both lanes take a node/point budget and report exhaustion as a
+//! distinguishable [`Exhausted`] outcome (never a wrong answer); the
+//! portfolio dispatch in [`super::search_span_engine`] falls back to the
+//! DP when a budget runs out. The budget check is a deterministic
+//! function of the visited-node count, so the fallback decision is
+//! bit-reproducible too.
+
+use crate::memory::{RecomputeSpec, SpanFootprint, SpanMemPlan};
+
+use super::ctx::SearchCtx;
+use super::Plan;
+
+/// Which plan-search engine [`super::search_span_engine`] dispatches to
+/// (`--engine` on the CLI).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum SearchEngine {
+    /// The repetition-aware DP lanes (the production default).
+    #[default]
+    Dp,
+    /// Branch-and-bound enumeration with a large node budget; falls back
+    /// to the DP (with a stderr warning) only if the budget runs out.
+    Exact,
+    /// Exact when the assignment space is small (≤ [`AUTO_EXACT_BITS`]
+    /// bits), DP otherwise — the portfolio for small-but-gnarly spaces
+    /// where the DP's thinning is weakest relative to the space size.
+    Auto,
+}
+
+impl SearchEngine {
+    /// Parse an `--engine` CLI value: `exact`, `dp` or `auto`.
+    pub fn parse(s: &str) -> Option<SearchEngine> {
+        match s {
+            "dp" => Some(SearchEngine::Dp),
+            "exact" => Some(SearchEngine::Exact),
+            "auto" => Some(SearchEngine::Auto),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            SearchEngine::Dp => "dp",
+            SearchEngine::Exact => "exact",
+            SearchEngine::Auto => "auto",
+        }
+    }
+}
+
+/// `auto` prefers the exact lane when `space_bits ≤ 16` (≤ 65 536
+/// assignments): small enough that branch-and-bound with suffix bounds
+/// is comfortably sub-millisecond, large enough to cover every space the
+/// thinning approximation could plausibly distort end-to-end.
+pub const AUTO_EXACT_BITS: f64 = 16.0;
+
+/// Node budget for an explicit `--engine exact` request (generous: the
+/// user asked for certainty, so only a genuinely exponential blow-up
+/// falls back).
+pub const EXACT_NODE_BUDGET: u64 = 50_000_000;
+
+/// Node budget for `auto`'s exact probes (bounded so a pathological
+/// small-bits-but-tie-heavy instance cannot stall the planner).
+pub const AUTO_NODE_BUDGET: u64 = 4_000_000;
+
+/// The search ran out of its node/point budget before proving
+/// optimality. Never a wrong answer — callers fall back to the DP.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Exhausted;
+
+/// log₂ of the per-instance config assignment space of span `[lo, hi)` —
+/// the size measure `auto` dispatches on (remat choices are not counted:
+/// they at most double per instance and the memory lane has its own
+/// budget).
+pub fn space_bits(ctx: &SearchCtx, lo: usize, hi: usize) -> f64 {
+    let mut bits = 0.0;
+    for pos in lo..hi {
+        let cc = ctx.ncfg[ctx.uid[pos]];
+        if cc > 1 {
+            bits += (cc as f64).log2();
+        }
+    }
+    bits
+}
+
+// ------------------------------------------------------------ scalar / capped
+
+/// Exact min-time plan for `[lo, hi)` under an optional memory cap, with
+/// an unbounded node budget — the property-suite entry point. Same
+/// `None` semantics as [`super::search_span_ctx`]: empty span, an
+/// empty config space, or a cap below every assignment.
+pub fn search_span_exact(
+    ctx: &SearchCtx,
+    mem_cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    match search_span_exact_budget(ctx, mem_cap, lo, hi, u64::MAX) {
+        Ok(p) => p,
+        Err(Exhausted) => unreachable!("unbounded budget cannot exhaust"),
+    }
+}
+
+/// [`search_span_exact`] with a node budget: every (position, config)
+/// trial counts one node, and exceeding `budget` aborts with
+/// [`Exhausted`] instead of returning a possibly-suboptimal incumbent.
+pub fn search_span_exact_budget(
+    ctx: &SearchCtx,
+    mem_cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+    budget: u64,
+) -> Result<Option<Plan>, Exhausted> {
+    assert!(lo <= hi && hi <= ctx.len());
+    let n = hi - lo;
+    if n == 0 {
+        return Ok(None);
+    }
+    let (lb_time, lb_mem) = suffix_bounds(ctx, lo, hi);
+    let mut bb = Bb {
+        ctx,
+        lo,
+        n,
+        cap: mem_cap,
+        lb_time,
+        lb_mem,
+        cur: vec![0usize; n],
+        best: None,
+        nodes: 0,
+        budget,
+        exhausted: false,
+    };
+    bb.dfs(0, 0.0, 0);
+    if bb.exhausted {
+        return Err(Exhausted);
+    }
+    Ok(bb
+        .best
+        .map(|(time_us, mem_bytes, choice)| Plan { choice, time_us, mem_bytes }))
+}
+
+/// Admissible suffix relaxations for `[lo, hi)`, indexed span-relative
+/// (`[i]` bounds the remainder *from* position `lo + i`; `[n]` is 0):
+///
+/// * time: `Σ_{j ≥ i} (min_cfg seg_time[j] + min entry of the reshard
+///   matrix into j)`, deflated by ×(1 − 1e-9). The raw sum never exceeds
+///   the real remaining cost; the deflation absorbs the ≤ n·ε relative
+///   rounding of the float-evaluated completion (n·ε ≈ 1e-12 even at
+///   10⁴ positions), so `partial + bound > incumbent` can never prune a
+///   true optimum or a tie. Assumes non-negative profiled times (every
+///   producer in this repo guarantees it).
+/// * mem: exact integer `Σ_{j ≥ i} min_cfg seg_mem[j]` — the cap prune
+///   needs no slack.
+fn suffix_bounds(ctx: &SearchCtx, lo: usize, hi: usize) -> (Vec<f64>, Vec<u64>) {
+    let n = hi - lo;
+    let mut lb_time = vec![0.0f64; n + 1];
+    let mut lb_mem = vec![0u64; n + 1];
+    for i in (0..n).rev() {
+        let pos = lo + i;
+        let u = ctx.uid[pos];
+        let o = ctx.off[u];
+        let cc = ctx.ncfg[u];
+        let mut min_t = f64::INFINITY;
+        let mut min_m = u64::MAX;
+        for c in 0..cc {
+            min_t = min_t.min(ctx.time[o + c]);
+            min_m = min_m.min(ctx.mem[o + c]);
+        }
+        if cc == 0 {
+            // dead-end position: no completion exists, the DFS stops at
+            // it anyway — keep the bounds harmless
+            min_t = 0.0;
+            min_m = 0;
+        }
+        debug_assert!(min_t >= 0.0, "profiled times must be non-negative");
+        let mut edge = 0.0f64;
+        if i > 0 {
+            let mat = &ctx.mats[ctx.step_mat[pos]];
+            if !mat.is_empty() {
+                edge = mat.iter().copied().fold(f64::INFINITY, f64::min);
+            }
+        }
+        lb_time[i] = lb_time[i + 1] + min_t + edge;
+        lb_mem[i] = lb_mem[i + 1].saturating_add(min_m);
+    }
+    for v in lb_time.iter_mut() {
+        *v *= 1.0 - 1e-9;
+    }
+    (lb_time, lb_mem)
+}
+
+struct Bb<'a> {
+    ctx: &'a SearchCtx,
+    lo: usize,
+    n: usize,
+    cap: Option<u64>,
+    /// deflated admissible remaining-time bound per span-relative position
+    lb_time: Vec<f64>,
+    /// exact remaining-memory minimum per span-relative position
+    lb_mem: Vec<u64>,
+    cur: Vec<usize>,
+    best: Option<(f64, u64, Vec<usize>)>,
+    nodes: u64,
+    budget: u64,
+    exhausted: bool,
+}
+
+impl Bb<'_> {
+    /// Extend the prefix `cur[..i]` (accumulated `(acc_t, acc_m)`) by
+    /// every config of position `i`, in ascending order. `acc_t` replays
+    /// the DP's exact float association — `(acc + reshard) + seg_time` —
+    /// so a completed leaf's value is bit-identical to the DP's value
+    /// for the same assignment.
+    fn dfs(&mut self, i: usize, acc_t: f64, acc_m: u64) {
+        if i == self.n {
+            let better = match &self.best {
+                None => true,
+                Some((bt, bm, _)) => acc_t < *bt || (acc_t == *bt && acc_m < *bm),
+            };
+            if better {
+                self.best = Some((acc_t, acc_m, self.cur.clone()));
+            }
+            return;
+        }
+        let pos = self.lo + i;
+        let u = self.ctx.uid[pos];
+        let o = self.ctx.off[u];
+        let cc = self.ctx.ncfg[u];
+        let prev_cfg = if i == 0 { 0 } else { self.cur[i - 1] };
+        for c in 0..cc {
+            self.nodes += 1;
+            if self.nodes > self.budget {
+                self.exhausted = true;
+                return;
+            }
+            let t = if i == 0 {
+                self.ctx.time[o + c]
+            } else {
+                let mat = &self.ctx.mats[self.ctx.step_mat[pos]];
+                (acc_t + mat[prev_cfg * cc + c]) + self.ctx.time[o + c]
+            };
+            let m = acc_m + self.ctx.mem[o + c];
+            if let Some(cap) = self.cap {
+                // exact integer prune: even the leanest completion busts the cap
+                if m.saturating_add(self.lb_mem[i + 1]) > cap {
+                    continue;
+                }
+            }
+            if let Some((bt, _, _)) = &self.best {
+                // strict `>`: equal-bound subtrees are explored, so exact
+                // time ties still reach the (time, mem) tie-break
+                if t + self.lb_time[i + 1] > *bt {
+                    continue;
+                }
+            }
+            self.cur[i] = c;
+            self.dfs(i + 1, t, m);
+            if self.exhausted {
+                return;
+            }
+        }
+    }
+}
+
+// ------------------------------------------------------------ memory frontier
+
+/// One state of the exact memory-frontier enumeration — same coordinates
+/// as the DP's point (time with recompute folded in, the three 1F1B
+/// footprint components), kept as a *true* Pareto set.
+#[derive(Clone, Copy, Debug)]
+struct ExMemPoint {
+    time: f64,
+    recompute: f64,
+    stat: u64,
+    ret: u64,
+    tra: u64,
+    ckpt: bool,
+    prev_cfg: usize,
+    prev_idx: usize,
+}
+
+/// Exact (time, 1F1B-footprint) Pareto frontier of `[lo, hi)` — the
+/// untruncated counterpart of [`super::search_span_mem_ctx`], with an
+/// unbounded point budget. Every returned plan is achievable; every
+/// achievable (config, remat) assignment is dominated by (or equal to)
+/// a returned plan on (time, stat, ret, tra).
+pub fn search_span_mem_exact(
+    ctx: &SearchCtx,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+) -> Vec<SpanMemPlan> {
+    match search_span_mem_exact_budget(ctx, lo, hi, spec, u64::MAX) {
+        Ok(f) => f,
+        Err(Exhausted) => unreachable!("unbounded budget cannot exhaust"),
+    }
+}
+
+/// [`search_span_mem_exact`] with a budget on generated candidate
+/// points (the exact frontier can grow exponentially on adversarial
+/// inputs; the DP's thinned frontier cannot).
+pub fn search_span_mem_exact_budget(
+    ctx: &SearchCtx,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+    max_points: u64,
+) -> Result<Vec<SpanMemPlan>, Exhausted> {
+    assert!(lo <= hi && hi <= ctx.len());
+    let n = hi - lo;
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let mut generated = 0u64;
+    let mut frontiers: Vec<Vec<Vec<ExMemPoint>>> = Vec::with_capacity(n);
+
+    // first position: one candidate per (config, remat point)
+    {
+        let u = ctx.uid[lo];
+        let o = ctx.off[u];
+        let mut sets: Vec<Vec<ExMemPoint>> = Vec::with_capacity(ctx.ncfg[u]);
+        for c in 0..ctx.ncfg[u] {
+            let seg_t = ctx.time[o + c];
+            let stat = ctx.stat[o + c];
+            let mut pts: Vec<ExMemPoint> = ctx
+                .remat
+                .points(o + c, spec)
+                .iter()
+                .map(|r| ExMemPoint {
+                    time: seg_t + r.extra_us,
+                    recompute: r.extra_us,
+                    stat,
+                    ret: r.retained_bytes,
+                    tra: r.transient_bytes,
+                    ckpt: r.checkpoint,
+                    prev_cfg: usize::MAX,
+                    prev_idx: usize::MAX,
+                })
+                .collect();
+            generated += pts.len() as u64;
+            pareto_filter(&mut pts);
+            sets.push(pts);
+        }
+        if generated > max_points {
+            return Err(Exhausted);
+        }
+        frontiers.push(sets);
+    }
+
+    for i in 1..n {
+        let pos = lo + i;
+        let u = ctx.uid[pos];
+        let o = ctx.off[u];
+        let cc = ctx.ncfg[u];
+        let mat = &ctx.mats[ctx.step_mat[pos]];
+        let prev = &frontiers[i - 1];
+        let mut sets: Vec<Vec<ExMemPoint>> = Vec::with_capacity(cc);
+        for c in 0..cc {
+            let seg_t = ctx.time[o + c];
+            let stat = ctx.stat[o + c];
+            let rpts = ctx.remat.points(o + c, spec);
+            let mut pts: Vec<ExMemPoint> = Vec::new();
+            for (pcfg, pset) in prev.iter().enumerate() {
+                if pset.is_empty() {
+                    continue;
+                }
+                let tr = mat[pcfg * cc + c];
+                for (pidx, pp) in pset.iter().enumerate() {
+                    for r in rpts {
+                        // the DP's exact float association:
+                        // ((acc + tr) + seg_t) + extra
+                        pts.push(ExMemPoint {
+                            time: pp.time + tr + seg_t + r.extra_us,
+                            recompute: pp.recompute + r.extra_us,
+                            stat: pp.stat + stat,
+                            ret: pp.ret + r.retained_bytes,
+                            tra: pp.tra.max(r.transient_bytes),
+                            ckpt: r.checkpoint,
+                            prev_cfg: pcfg,
+                            prev_idx: pidx,
+                        });
+                    }
+                }
+            }
+            generated += pts.len() as u64;
+            if generated > max_points {
+                return Err(Exhausted);
+            }
+            pareto_filter(&mut pts);
+            sets.push(pts);
+        }
+        frontiers.push(sets);
+    }
+
+    // terminal canonicalization: the reference's exact rule — sort every
+    // surviving point by (time, stat, ret, tra), keep unless a kept
+    // point dominates on the three footprint components
+    let last = &frontiers[n - 1];
+    let mut terminals: Vec<(usize, usize)> = Vec::new();
+    for (cfg, pts) in last.iter().enumerate() {
+        for idx in 0..pts.len() {
+            terminals.push((cfg, idx));
+        }
+    }
+    terminals.sort_by(|a, b| {
+        let (pa, pb) = (&last[a.0][a.1], &last[b.0][b.1]);
+        pa.time
+            .partial_cmp(&pb.time)
+            .unwrap()
+            .then(pa.stat.cmp(&pb.stat))
+            .then(pa.ret.cmp(&pb.ret))
+            .then(pa.tra.cmp(&pb.tra))
+    });
+    let mut kept: Vec<(usize, usize)> = Vec::new();
+    for t in terminals {
+        let p = &last[t.0][t.1];
+        let dominated = kept.iter().any(|&(c, i)| {
+            let q = &last[c][i];
+            q.stat <= p.stat && q.ret <= p.ret && q.tra <= p.tra
+        });
+        if !dominated {
+            kept.push(t);
+        }
+    }
+    Ok(kept
+        .into_iter()
+        .map(|(cfg, idx)| backtrack(&frontiers, n, cfg, idx))
+        .collect())
+}
+
+/// True Pareto filter on (time, stat, ret, tra): sort lexicographically,
+/// keep a point unless an already-kept one is ≤ on every coordinate
+/// (earlier in sort order ⇒ time already ≤). Exact duplicates collapse
+/// to their first occurrence. O(k²) — the exact lane trades speed for
+/// zero approximation.
+fn pareto_filter(pts: &mut Vec<ExMemPoint>) {
+    pts.sort_by(|a, b| {
+        a.time
+            .partial_cmp(&b.time)
+            .unwrap()
+            .then(a.stat.cmp(&b.stat))
+            .then(a.ret.cmp(&b.ret))
+            .then(a.tra.cmp(&b.tra))
+    });
+    let mut w = 0usize;
+    for r in 0..pts.len() {
+        let p = pts[r];
+        let dominated = pts[..w]
+            .iter()
+            .any(|q| q.stat <= p.stat && q.ret <= p.ret && q.tra <= p.tra);
+        if !dominated {
+            pts[w] = p;
+            w += 1;
+        }
+    }
+    pts.truncate(w);
+}
+
+fn backtrack(
+    frontiers: &[Vec<Vec<ExMemPoint>>],
+    n: usize,
+    mut cfg: usize,
+    mut idx: usize,
+) -> SpanMemPlan {
+    let terminal = frontiers[n - 1][cfg][idx];
+    let mut choice = vec![0usize; n];
+    let mut remat = vec![false; n];
+    for i in (0..n).rev() {
+        let p = frontiers[i][cfg][idx];
+        choice[i] = cfg;
+        remat[i] = p.ckpt;
+        cfg = p.prev_cfg;
+        idx = p.prev_idx;
+    }
+    SpanMemPlan {
+        choice,
+        remat,
+        time_us: terminal.time,
+        footprint: SpanFootprint {
+            static_bytes: terminal.stat,
+            retained_bytes: terminal.ret,
+            transient_bytes: terminal.tra,
+            recompute_us: terminal.recompute,
+        },
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{brute_force, search_span_ctx, search_span_mem_ctx};
+    use super::*;
+    use crate::profiler::{ProfileDb, ReshardTable, SegmentConfig, SegmentProfile};
+    use crate::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+    use crate::spmd::ShardState;
+
+    /// A dyadic-valued chain (every float op exact) with two uniques —
+    /// small enough for the brute force, rich enough to exercise
+    /// reshards, caps and remat points.
+    fn dyadic_setup() -> (SegmentSet, ProfileDb) {
+        let mut db = ProfileDb::default();
+        for (base, cfgs) in [(8.0, 3usize), (4.0, 2usize)] {
+            db.segments.push(SegmentProfile {
+                configs: (0..cfgs).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+                t_c_us: (0..cfgs).map(|c| base + c as f64).collect(),
+                t_p_us: (0..cfgs).map(|c| 2.0 * base - c as f64 * 0.5).collect(),
+                mem_bytes: (0..cfgs).map(|c| 1000 - 100 * c as u64).collect(),
+                act_bytes: (0..cfgs).map(|c| 600 - 50 * c as u64).collect(),
+                ckpt_bytes: vec![40; cfgs],
+                t_fwd_us: vec![base / 2.0; cfgs],
+                symbolic_volume: vec![0; cfgs],
+                boundary_out: vec![ShardState::Replicated; cfgs],
+                boundary_in: vec![ShardState::Replicated; cfgs],
+            });
+        }
+        db.reshard.insert(
+            (0, 1),
+            ReshardTable {
+                t_r_us: vec![vec![0.5, 2.0], vec![1.0, 0.25], vec![4.0, 0.125]],
+                sym_vol: vec![vec![0; 2]; 3],
+                programs: 6,
+            },
+        );
+        db.reshard.insert(
+            (1, 0),
+            ReshardTable {
+                t_r_us: vec![vec![0.5, 1.0, 2.0], vec![0.25, 4.0, 8.0]],
+                sym_vol: vec![vec![0; 3]; 2],
+                programs: 6,
+            },
+        );
+        let uids = [0usize, 1, 0, 0, 1, 1, 0];
+        let instances: Vec<SegmentInstance> = uids
+            .iter()
+            .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+            .collect();
+        let unique: Vec<UniqueSegment> = (0..2)
+            .map(|u| UniqueSegment {
+                id: u,
+                fingerprint: format!("u{u}"),
+                rep: uids.iter().position(|&x| x == u).unwrap(),
+                count: uids.iter().filter(|&&x| x == u).count(),
+            })
+            .collect();
+        (SegmentSet { instances, unique }, db)
+    }
+
+    #[test]
+    fn exact_matches_brute_force_and_dp_on_dyadic_chain() {
+        let (ss, db) = dyadic_setup();
+        let ctx = SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        let free = brute_force(&ss, &db, None).unwrap();
+        for cap in [None, Some(free.mem_bytes), Some(free.mem_bytes - 1), Some(1)] {
+            let ex = search_span_exact(&ctx, cap, 0, n);
+            let bf = brute_force(&ss, &db, cap);
+            let dp = search_span_ctx(&ctx, cap, 0, n);
+            // optimal *times* agree bitwise everywhere (dyadic values:
+            // even the differently-associated brute-force sums are
+            // exact); choice/mem may legitimately differ on exact time
+            // ties, where each searcher's documented tie rule applies
+            match (&ex, &bf) {
+                (Some(e), Some(b)) => {
+                    assert!(e.time_us.to_bits() == b.time_us.to_bits(), "cap {cap:?}");
+                }
+                (None, None) => {}
+                _ => panic!("cap {cap:?}: exact {ex:?} vs brute force {bf:?}"),
+            }
+            match (&ex, &dp) {
+                (Some(e), Some(d)) => {
+                    assert!(e.time_us.to_bits() == d.time_us.to_bits(), "cap {cap:?}");
+                }
+                (None, None) => {}
+                _ => panic!("cap {cap:?}: exact {ex:?} vs dp {dp:?}"),
+            }
+            // the exact plan is genuine: its choice vector re-prices to
+            // its reported cost and respects the cap
+            if let Some(e) = &ex {
+                let (t, m) = super::super::plan_cost_span(&ss, &db, &e.choice, 0, n);
+                assert!(t.to_bits() == e.time_us.to_bits(), "cap {cap:?}: reprice");
+                assert_eq!(m, e.mem_bytes, "cap {cap:?}: reprice mem");
+                if let Some(cap) = cap {
+                    assert!(e.mem_bytes <= cap, "cap {cap}: plan must fit");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn exact_sub_spans_match_dp() {
+        let (ss, db) = dyadic_setup();
+        let ctx = SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        for lo in 0..n {
+            for hi in (lo + 1)..=n {
+                let ex = search_span_exact(&ctx, None, lo, hi).unwrap();
+                let dp = search_span_ctx(&ctx, None, lo, hi).unwrap();
+                assert!(ex.time_us.to_bits() == dp.time_us.to_bits(), "[{lo},{hi})");
+                let (t, m) = super::super::plan_cost_span(&ss, &db, &ex.choice, lo, hi);
+                assert!(t.to_bits() == ex.time_us.to_bits(), "[{lo},{hi}) reprice");
+                assert_eq!(m, ex.mem_bytes, "[{lo},{hi}) reprice mem");
+            }
+        }
+    }
+
+    #[test]
+    fn budget_exhaustion_is_reported_not_wrong() {
+        let (ss, db) = dyadic_setup();
+        let ctx = SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        assert_eq!(
+            search_span_exact_budget(&ctx, None, 0, n, 2),
+            Err(Exhausted),
+            "a 2-node budget cannot cover a 7-instance chain"
+        );
+        // a generous budget completes and matches the unbounded result
+        let bounded = search_span_exact_budget(&ctx, None, 0, n, 1 << 20).unwrap();
+        assert_eq!(bounded, search_span_exact(&ctx, None, 0, n));
+    }
+
+    #[test]
+    fn mem_exact_contains_and_dominates_the_dp_frontier() {
+        let (ss, db) = dyadic_setup();
+        let ctx = SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        for spec in [RecomputeSpec::Off, RecomputeSpec::Auto] {
+            let dp = search_span_mem_ctx(&ctx, 0, n, spec);
+            let ex = search_span_mem_exact(&ctx, 0, n, spec);
+            assert!(!ex.is_empty());
+            // min-time heads agree bitwise (the DP never thins its head)
+            assert!(dp[0].time_us.to_bits() == ex[0].time_us.to_bits(), "{spec:?}");
+            // every DP point is matched or dominated by an exact point
+            for p in &dp {
+                assert!(
+                    ex.iter().any(|q| q.time_us <= p.time_us
+                        && q.footprint.static_bytes <= p.footprint.static_bytes
+                        && q.footprint.retained_bytes <= p.footprint.retained_bytes
+                        && q.footprint.transient_bytes <= p.footprint.transient_bytes),
+                    "{spec:?}: DP point (t={}, stat={}) not covered",
+                    p.time_us,
+                    p.footprint.static_bytes
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn mem_exact_budget_exhaustion_is_reported() {
+        let (ss, db) = dyadic_setup();
+        let ctx = SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        assert!(matches!(
+            search_span_mem_exact_budget(&ctx, 0, n, RecomputeSpec::Auto, 3),
+            Err(Exhausted)
+        ));
+    }
+
+    #[test]
+    fn space_bits_counts_only_multi_config_positions() {
+        let (ss, db) = dyadic_setup();
+        let ctx = SearchCtx::new(&ss, &db);
+        // 4 positions of unique 0 (3 cfgs) + 3 of unique 1 (2 cfgs)
+        let want = 4.0 * 3f64.log2() + 3.0;
+        assert!((space_bits(&ctx, 0, ss.instances.len()) - want).abs() < 1e-12);
+        assert_eq!(space_bits(&ctx, 0, 0), 0.0);
+    }
+
+    #[test]
+    fn engine_parse_round_trips() {
+        for e in [SearchEngine::Dp, SearchEngine::Exact, SearchEngine::Auto] {
+            assert_eq!(SearchEngine::parse(e.as_str()), Some(e));
+        }
+        assert_eq!(SearchEngine::parse("ilp"), None);
+        assert_eq!(SearchEngine::default(), SearchEngine::Dp);
+    }
+}

@@ -43,6 +43,7 @@
 
 mod ctx;
 mod dp;
+pub mod exact;
 pub mod oracle;
 pub mod sweep;
 
@@ -54,6 +55,7 @@ use crate::segment::SegmentSet;
 use crate::util::ThreadPool;
 
 pub use ctx::SearchCtx;
+pub use exact::{search_span_exact, search_span_mem_exact, space_bits, SearchEngine};
 pub use sweep::{select_time, sweep_span_frontiers, sweep_span_times, FrontierRow};
 
 /// A selected global configuration: one config index per segment instance.
@@ -143,6 +145,46 @@ pub fn search_span_ctx(
     match mem_cap {
         None => dp::scalar_plan(ctx, lo, hi),
         Some(cap) => dp::pareto_plan(ctx, cap, lo, hi),
+    }
+}
+
+/// [`search_span_ctx`] behind an engine switch (`--engine` on the CLI):
+///
+/// * [`SearchEngine::Dp`] — the production DP lanes, unchanged.
+/// * [`SearchEngine::Exact`] — branch-and-bound with
+///   [`exact::EXACT_NODE_BUDGET`]; only if the budget exhausts does it
+///   fall back to the DP (with a stderr note — the answer is then the
+///   usual approximation, not certified optimal).
+/// * [`SearchEngine::Auto`] — exact when the assignment space is at most
+///   [`exact::AUTO_EXACT_BITS`] bits, DP otherwise.
+///
+/// All three are deterministic; the dispatch depends only on the inputs.
+pub fn search_span_engine(
+    ctx: &SearchCtx,
+    mem_cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+    engine: SearchEngine,
+) -> Option<Plan> {
+    let budget = match engine {
+        SearchEngine::Dp => return search_span_ctx(ctx, mem_cap, lo, hi),
+        SearchEngine::Exact => exact::EXACT_NODE_BUDGET,
+        SearchEngine::Auto => {
+            if space_bits(ctx, lo, hi) > exact::AUTO_EXACT_BITS {
+                return search_span_ctx(ctx, mem_cap, lo, hi);
+            }
+            exact::AUTO_NODE_BUDGET
+        }
+    };
+    match exact::search_span_exact_budget(ctx, mem_cap, lo, hi, budget) {
+        Ok(plan) => plan,
+        Err(exact::Exhausted) => {
+            eprintln!(
+                "cfp: exact engine exhausted its {budget}-node budget on span \
+                 [{lo},{hi}); falling back to the DP (result not certified optimal)"
+            );
+            search_span_ctx(ctx, mem_cap, lo, hi)
+        }
     }
 }
 

@@ -8,7 +8,10 @@ use crate::coordinator::{
 };
 use crate::interop::StageSpec;
 use crate::models::ModelCfg;
-use crate::spmd::Mesh;
+use crate::profiler::{ProfileDb, ReshardTable, SegmentConfig, SegmentProfile};
+use crate::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+use crate::spmd::{Mesh, ShardState};
+use crate::util::Pcg64;
 
 /// The paper's evaluation matrix (§5.1), at analysis-faithful structure
 /// with reduced tensor sizes so the full sweep stays fast. `layers` is per
@@ -185,6 +188,69 @@ impl CacheEffect {
     }
 }
 
+/// A deterministic synthetic `(SegmentSet, ProfileDb)` chain: `n`
+/// instances over `uniques` distinct segments, each with `cfgs` configs
+/// and a dense reshard table for every unique pair. Entirely a function
+/// of `seed` (one `Pcg64` stream), so benches and the exact-vs-DP
+/// differential lanes can regenerate the identical instance across
+/// processes and PRs without sharing fixture files.
+pub fn synthetic_chain(n: usize, uniques: usize, cfgs: usize, seed: u64) -> (SegmentSet, ProfileDb) {
+    assert!(n >= 1 && uniques >= 1 && cfgs >= 1);
+    let mut rng = Pcg64::new(seed);
+    let mut db = ProfileDb::default();
+    for _ in 0..uniques {
+        let mem_bytes: Vec<u64> = (0..cfgs).map(|_| 500 + rng.below(4000)).collect();
+        let act_bytes: Vec<u64> = mem_bytes.iter().map(|&m| rng.below(m + 1)).collect();
+        let ckpt_bytes: Vec<u64> = act_bytes.iter().map(|&a| rng.below(a + 1)).collect();
+        db.segments.push(SegmentProfile {
+            configs: (0..cfgs).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+            t_c_us: (0..cfgs).map(|_| rng.f64() * 200.0).collect(),
+            t_p_us: (0..cfgs).map(|_| rng.f64() * 400.0).collect(),
+            mem_bytes,
+            act_bytes,
+            ckpt_bytes,
+            t_fwd_us: (0..cfgs).map(|_| rng.f64() * 100.0).collect(),
+            symbolic_volume: vec![0; cfgs],
+            boundary_out: vec![ShardState::Replicated; cfgs],
+            boundary_in: vec![ShardState::Replicated; cfgs],
+        });
+    }
+    for a in 0..uniques {
+        for b in 0..uniques {
+            let t_r_us: Vec<Vec<f64>> =
+                (0..cfgs).map(|_| (0..cfgs).map(|_| rng.f64() * 50.0).collect()).collect();
+            db.reshard.insert(
+                (a, b),
+                ReshardTable { t_r_us, sym_vol: vec![vec![0; cfgs]; cfgs], programs: cfgs * cfgs },
+            );
+        }
+    }
+    // runs of one unique, like real layer chains (and the splice trigger)
+    let mut uids: Vec<usize> = Vec::new();
+    while uids.len() < n {
+        let u = rng.below(uniques as u64) as usize;
+        for _ in 0..1 + rng.below(4) {
+            uids.push(u);
+            if uids.len() >= n {
+                break;
+            }
+        }
+    }
+    let instances: Vec<SegmentInstance> = uids
+        .iter()
+        .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique: Vec<UniqueSegment> = (0..uniques)
+        .map(|u| UniqueSegment {
+            id: u,
+            fingerprint: format!("u{u}"),
+            rep: uids.iter().position(|&x| x == u).unwrap_or(0),
+            count: uids.iter().filter(|&&x| x == u).count(),
+        })
+        .collect();
+    (SegmentSet { instances, unique }, db)
+}
+
 /// Markdown-ish aligned table printer.
 pub struct Table {
     headers: Vec<String>,
@@ -281,6 +347,34 @@ mod tests {
             assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
             assert!(m.layers >= 2, "{}", m.name);
         }
+    }
+
+    #[test]
+    fn synthetic_chain_is_deterministic_and_well_formed() {
+        let (ss, db) = synthetic_chain(10, 3, 4, 0xC0DE);
+        assert_eq!(ss.instances.len(), 10);
+        assert_eq!(ss.unique.len(), 3);
+        assert!(ss.instances.iter().all(|i| i.unique_id < 3));
+        assert_eq!(db.segments.len(), 3);
+        assert!(db.segments.iter().all(|p| p.configs.len() == 4));
+        assert_eq!(db.reshard.len(), 9, "dense reshard tables");
+        // same seed ⇒ bit-identical instance, across calls and processes
+        let (ss2, db2) = synthetic_chain(10, 3, 4, 0xC0DE);
+        let uids: Vec<usize> = ss.instances.iter().map(|i| i.unique_id).collect();
+        let uids2: Vec<usize> = ss2.instances.iter().map(|i| i.unique_id).collect();
+        assert_eq!(uids, uids2);
+        for (a, b) in db.segments.iter().zip(&db2.segments) {
+            for (x, y) in a.t_c_us.iter().zip(&b.t_c_us) {
+                assert!(x.to_bits() == y.to_bits());
+            }
+        }
+        // different seed ⇒ a different instance
+        let (ss3, _) = synthetic_chain(10, 3, 4, 0xC0DF);
+        let uids3: Vec<usize> = ss3.instances.iter().map(|i| i.unique_id).collect();
+        let (_, db3) = synthetic_chain(10, 3, 4, 0xC0DF);
+        let same_uids = uids == uids3;
+        let same_t0 = db.segments[0].t_c_us[0].to_bits() == db3.segments[0].t_c_us[0].to_bits();
+        assert!(!(same_uids && same_t0), "seed must matter");
     }
 
     #[test]

@@ -1002,6 +1002,136 @@ fn build_stage_plan(
     })
 }
 
+/// Re-solve every stage span of a composed plan with the exact
+/// branch-and-bound lane (`cost::exact`) and compare against the DP's
+/// stage times bit-for-bit. Returns the number of stages actually
+/// checked (spans whose search space exceeds `max_bits`, or that exhaust
+/// the exact lane's node budget, are skipped — never guessed).
+///
+/// The two possible `Err` classes are deliberately distinguished:
+/// a *known approximation* (the DP's frontier thinning dropped the true
+/// optimum, or declared a cap infeasible that the exact lane can fit) is
+/// reported as `DP suboptimal`; an exact time *worse* than the DP's is
+/// impossible for a complete searcher and reported as a genuine bug.
+pub fn exact_crosscheck_stages(
+    ctxs: &StageContexts,
+    opts: &PipelineOptions,
+    plan: &PipelinePlan,
+    max_bits: f64,
+) -> Result<usize, String> {
+    let ctx = ctxs
+        .get(plan.devices_per_stage)
+        .ok_or_else(|| format!("no stage context for d = {}", plan.devices_per_stage))?;
+    let sctx = SearchCtx::new(&ctx.segments, &ctx.db);
+    let k = plan.num_stages();
+    let me = memory::memory_microbatches(k, plan.microbatches);
+    let cap = opts.device_cap();
+    let mut checked = 0;
+    for (i, st) in plan.stages.iter().enumerate() {
+        let (lo, hi) = st.span;
+        if cost::space_bits(&sctx, lo, hi) > max_bits {
+            continue;
+        }
+        let got = st.plan.time_us;
+        if opts.memory_aware() {
+            let ex = match cost::exact::search_span_mem_exact_budget(
+                &sctx,
+                lo,
+                hi,
+                opts.recompute,
+                4_000_000,
+            ) {
+                Ok(frontier) => frontier,
+                Err(cost::exact::Exhausted) => continue,
+            };
+            let f = memory::inflight_microbatches(k, i, me);
+            match memory::select_feasible(&ex, me, f, cap) {
+                None => {
+                    return Err(format!(
+                        "stage {i} span [{lo},{hi}): genuine bug — exact frontier has no \
+                         feasible point but the DP priced {got} µs"
+                    ));
+                }
+                Some(e) if e.time_us.to_bits() == got.to_bits() => {}
+                Some(e) if e.time_us < got => {
+                    return Err(format!(
+                        "stage {i} span [{lo},{hi}): DP suboptimal (frontier thinning) — \
+                         exact {e} µs < DP {got} µs",
+                        e = e.time_us
+                    ));
+                }
+                Some(e) => {
+                    return Err(format!(
+                        "stage {i} span [{lo},{hi}): genuine bug — exact {e} µs > DP {got} µs",
+                        e = e.time_us
+                    ));
+                }
+            }
+        } else {
+            let dp_capped = cost::search_span_ctx(&sctx, Some(cap), lo, hi);
+            let ex_capped =
+                match cost::exact::search_span_exact_budget(&sctx, Some(cap), lo, hi, 4_000_000) {
+                    Ok(p) => p,
+                    Err(cost::exact::Exhausted) => continue,
+                };
+            match (dp_capped, ex_capped) {
+                (Some(_), None) => {
+                    return Err(format!(
+                        "stage {i} span [{lo},{hi}): genuine bug — the complete exact search \
+                         found no capped plan but the DP did"
+                    ));
+                }
+                (None, Some(e)) => {
+                    return Err(format!(
+                        "stage {i} span [{lo},{hi}): DP suboptimal (frontier thinning) — the \
+                         DP declared the cap infeasible but the exact lane fits it in {t} µs",
+                        t = e.time_us
+                    ));
+                }
+                (Some(d), Some(e)) => {
+                    if e.time_us < d.time_us {
+                        return Err(format!(
+                            "stage {i} span [{lo},{hi}): DP suboptimal (frontier thinning) — \
+                             exact {e} µs < DP {d} µs",
+                            e = e.time_us,
+                            d = d.time_us
+                        ));
+                    }
+                    if e.time_us > d.time_us {
+                        return Err(format!(
+                            "stage {i} span [{lo},{hi}): genuine bug — exact {e} µs > DP {d} µs",
+                            e = e.time_us,
+                            d = d.time_us
+                        ));
+                    }
+                }
+                (None, None) => {
+                    // both searchers agree the cap is infeasible; the
+                    // stage plan came from the uncapped fallback, where
+                    // the scalar DP is provably exact — demand bit-parity
+                    let e = match cost::exact::search_span_exact_budget(
+                        &sctx, None, lo, hi, 4_000_000,
+                    ) {
+                        Ok(p) => p,
+                        Err(cost::exact::Exhausted) => continue,
+                    };
+                    match e {
+                        Some(e) if e.time_us.to_bits() == got.to_bits() => {}
+                        other => {
+                            return Err(format!(
+                                "stage {i} span [{lo},{hi}): genuine bug — uncapped exact \
+                                 {other:?} disagrees with the DP's {got} µs"
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+        checked += 1;
+    }
+    Ok(checked)
+}
+
 /// Per-microbatch stage latency `T/m + x` for span `[lo, hi)` as stage
 /// `stage_idx` (0-based) of `k`; None if the span has no feasible plan
 /// (under the 1F1B peak cap when memory-aware). This is the DP's hot

@@ -45,7 +45,7 @@ fn main() {
                  [--platform a100-pcie|a100-pcie-8|a100-2node|v100-nvlink] \
                  [--threads N] [--cache FILE] [--cache-max-entries N] \
                  [--stages auto|K] [--microbatches M] [--mem-cap GB] \
-                 [--recompute auto|off] [--steps N] [--lr F] \
+                 [--recompute auto|off] [--engine dp|exact|auto] [--steps N] [--lr F] \
                  [--listen ADDR] [--workers N] [--plan-cache N] \
                  [--connect ADDR] [--requests N] [--clients N] [--distinct N]"
             );

@@ -78,6 +78,7 @@ const FIELDS: &[&str] = &[
     "microbatches",
     "mem_cap",
     "recompute",
+    "engine",
 ];
 
 /// Parse one request line. Every failure is a `String` destined for a
@@ -103,7 +104,7 @@ pub fn parse_request(line: &str) -> Result<PlanRequest, String> {
         },
     };
     let mut args = Args::default();
-    for field in ["model", "platform", "stages", "recompute"] {
+    for field in ["model", "platform", "stages", "recompute", "engine"] {
         if let Some(v) = j.get(field) {
             let s = v.as_str().ok_or_else(|| format!("{field:?} must be a string"))?;
             args.options.insert(field.to_string(), s.to_string());
@@ -150,9 +151,14 @@ pub fn canonical_key(kind: RequestKind, opts: &CfpOptions) -> String {
         ),
     };
     let cm = opts.compute.as_ref().map_or_else(|| "default".to_string(), |c| c.signature());
+    // the engine picks the ComposeSearch searcher for BOTH kinds (the
+    // two-level planner's single-stage leg runs through it), so it is
+    // always plan identity
+    let eng = opts.engine.as_str();
     format!(
         "{kind};model={name}/{arch:?}/h{h}/l{l}/hd{hd}/f{f}/v{v}/s{s}/b{b}/e{e}/do{dp};\
-         plat={plat};mesh={mi}x{mn};cap={cap};stages={stages};mb={mb};rec={rec};cm={cm}",
+         plat={plat};mesh={mi}x{mn};cap={cap};stages={stages};mb={mb};rec={rec};cm={cm};\
+         eng={eng}",
         kind = kind.as_str(),
         name = m.name,
         arch = m.arch,
@@ -238,6 +244,9 @@ mod tests {
         assert_eq!(r.kind, RequestKind::Pipeline);
         assert_eq!(r.args.get("mem-cap"), Some("12.5"));
 
+        let r = parse_request("{\"engine\": \"exact\"}").unwrap();
+        assert_eq!(r.args.get("engine"), Some("exact"));
+
         // type defaults to plan
         assert_eq!(parse_request("{}").unwrap().kind, RequestKind::Plan);
         assert_eq!(parse_request("{\"type\": \"stats\"}").unwrap().kind, RequestKind::Stats);
@@ -293,6 +302,7 @@ mod tests {
             ("batch", CfpOptions::new(ModelCfg::preset("gpt-tiny").with_batch(8), a.platform)),
             ("platform", CfpOptions::new(ModelCfg::preset("gpt-tiny"), Platform::a100_pcie(8))),
             ("mem_cap", opts().with_mem_cap(1 << 30)),
+            ("engine", opts().with_engine(crate::cost::SearchEngine::Exact)),
         ] {
             assert_ne!(
                 canonical_key(RequestKind::Plan, &a),

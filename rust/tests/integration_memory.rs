@@ -13,12 +13,17 @@
 
 use cfp::cluster::{simulate_pipeline_memory, Platform, StageMemSpec};
 use cfp::coordinator::{run_cfp_two_level, CfpOptions};
+use cfp::cost;
 use cfp::harness::pipeline_eval_models;
-use cfp::interop::{plan_pipeline, PipelineOptions, PipelinePlan, StageContexts, StageSpec};
-use cfp::memory::RecomputeSpec;
+use cfp::interop::{
+    exact_crosscheck_stages, plan_pipeline, PipelineOptions, PipelinePlan, StageContexts,
+    StageSpec,
+};
+use cfp::memory::{self, RecomputeSpec};
 use cfp::models::{build_training, ModelCfg};
-use cfp::profiler::CacheHandle;
-use cfp::spmd::Mesh;
+use cfp::profiler::{CacheHandle, ProfileDb, SegmentConfig, SegmentProfile};
+use cfp::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+use cfp::spmd::{Mesh, ShardState};
 
 /// Cross-check one composed plan: the closed-form 1F1B peak of every
 /// stage must equal the event simulation's live-memory high-water mark,
@@ -103,6 +108,158 @@ fn tight_cap_rejects_then_recompute_recovers() {
     // looser one
     let loose = plan_with(hi, RecomputeSpec::Auto).unwrap();
     assert!(loose.step_time_us <= rec.step_time_us + 1e-9 * rec.step_time_us);
+}
+
+#[test]
+fn cap_exactly_at_a_frontier_peak_is_inclusive_and_exact_certified() {
+    let g = build_training(&ModelCfg::preset("gpt-tiny").with_layers(4));
+    let popts = PipelineOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+    let mut ctxs = StageContexts::new();
+    ctxs.ensure_all(&g, &popts, CacheHandle::None);
+
+    let plan_with = |cap: u64| -> (PipelineOptions, Option<PipelinePlan>) {
+        let mut p = popts.clone();
+        p.mem_cap = Some(cap);
+        p.recompute = RecomputeSpec::Auto;
+        let plan = plan_pipeline(&g, &ctxs, &p);
+        (p, plan)
+    };
+
+    let (_, best) = plan_with(u64::MAX);
+    let best = best.expect("boundless cap is feasible");
+
+    // a cap EXACTLY equal to the chosen plan's 1F1B peak is inclusive
+    // (the feasibility test is ≤, not <): the optimum is unchanged bit
+    // for bit, because the boundless winner itself still fits
+    let (p_at, at) = plan_with(best.peak_mem_bytes);
+    let at = at.expect("cap == peak must stay feasible");
+    assert!(
+        at.step_time_us.to_bits() == best.step_time_us.to_bits(),
+        "cap == peak: {} vs boundless {}",
+        at.step_time_us,
+        best.step_time_us
+    );
+    assert!(at.peak_mem_bytes <= best.peak_mem_bytes);
+    // the exact lane re-solves every stage span; a worse-than-DP exact
+    // time would be a genuine bug (a known DP thinning approximation is
+    // reported distinctly and tolerated)
+    match exact_crosscheck_stages(&ctxs, &p_at, &at, 64.0) {
+        Ok(checked) => assert!(checked > 0, "the exact lane must certify at least one stage"),
+        Err(e) => assert!(e.contains("DP suboptimal"), "{e}"),
+    }
+
+    // one byte below that peak, the chosen plan no longer fits: whatever
+    // replaces it (if anything) is slower-or-equal and respects the cap
+    let (p_below, below) = plan_with(best.peak_mem_bytes - 1);
+    if let Some(b) = &below {
+        assert!(b.peak_mem_bytes < best.peak_mem_bytes, "cap is binding");
+        assert!(b.step_time_us >= at.step_time_us, "tightening never speeds up");
+        if let Err(e) = exact_crosscheck_stages(&ctxs, &p_below, b, 64.0) {
+            assert!(e.contains("DP suboptimal"), "{e}");
+        }
+    }
+}
+
+#[test]
+fn cap_below_every_plan_is_an_honest_none_certified_by_the_exact_lane() {
+    let g = build_training(&ModelCfg::preset("gpt-tiny").with_layers(2));
+    let popts = PipelineOptions::new(Platform::a100_pcie(4), Mesh::flat(4));
+    let mut ctxs = StageContexts::new();
+    ctxs.ensure_all(&g, &popts, CacheHandle::None);
+    let mut p = popts.clone();
+    p.mem_cap = Some(1);
+    p.recompute = RecomputeSpec::Auto;
+    assert!(plan_pipeline(&g, &ctxs, &p).is_none(), "a 1-byte cap must reject honestly");
+
+    // certify the rejection: for every candidate stage count, every
+    // possible stage-0 span is infeasible at the cap under the COMPLETE
+    // searcher, so no split can even start — the None is genuine
+    // infeasibility, not an artifact of the DP's frontier thinning
+    let total = popts.mesh.total();
+    for ctx in ctxs.iter() {
+        let k = total / ctx.devices;
+        let sctx = cost::SearchCtx::new(&ctx.segments, &ctx.db);
+        let n = ctx.segments.instances.len();
+        let me = memory::memory_microbatches(k, p.microbatches);
+        let f0 = memory::inflight_microbatches(k, 0, me);
+        for hi in 1..=n {
+            let ex = cost::search_span_mem_exact(&sctx, 0, hi, RecomputeSpec::Auto);
+            assert!(
+                memory::select_feasible(&ex, me, f0, 1).is_none(),
+                "k = {k}: stage-0 span [0,{hi}) must not fit a 1-byte cap"
+            );
+        }
+    }
+}
+
+/// A chain of one single-config segment whose checkpoint boundary is
+/// tiny next to its kept activation — the planner's only memory lever is
+/// *how many* instances to checkpoint, so the frontier is a clean
+/// per-count ladder and the checkpoint-everything plan is its min-peak
+/// endpoint.
+fn one_config_chain(n: usize) -> (SegmentSet, ProfileDb) {
+    let mut db = ProfileDb::default();
+    db.segments.push(SegmentProfile {
+        configs: vec![SegmentConfig { strategy: vec![0] }],
+        t_c_us: vec![5.0],
+        t_p_us: vec![10.0],
+        mem_bytes: vec![8100],
+        act_bytes: vec![8000],
+        ckpt_bytes: vec![8],
+        t_fwd_us: vec![4.0],
+        symbolic_volume: vec![0],
+        boundary_out: vec![ShardState::Replicated],
+        boundary_in: vec![ShardState::Replicated],
+    });
+    let instances = (0..n)
+        .map(|_| SegmentInstance { unique_id: 0, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique = vec![UniqueSegment { id: 0, fingerprint: "u0".into(), rep: 0, count: n }];
+    (SegmentSet { instances, unique }, db)
+}
+
+#[test]
+fn checkpoint_everything_boundary_matches_the_exact_lane() {
+    let n = 4;
+    let (ss, db) = one_config_chain(n);
+    let sctx = cost::SearchCtx::new(&ss, &db);
+    let dp = cost::search_span_mem(&ss, &db, 0, n, RecomputeSpec::Auto);
+    let ex = cost::search_span_mem_exact(&sctx, 0, n, RecomputeSpec::Auto);
+    // ≤ n + 1 distinct checkpoint counts — far below the DP's frontier
+    // caps, so the production frontier must equal the exact one bit for
+    // bit (duplicate remat placements collapse identically; the
+    // checkpoint COUNT is pinned by the time, since t_fwd > 0)
+    assert_eq!(dp.len(), ex.len(), "frontier sizes");
+    assert!(dp.len() == n + 1, "one point per checkpoint count");
+    for (a, b) in dp.iter().zip(&ex) {
+        assert!(a.time_us.to_bits() == b.time_us.to_bits());
+        assert_eq!(a.footprint.static_bytes, b.footprint.static_bytes);
+        assert_eq!(a.footprint.retained_bytes, b.footprint.retained_bytes);
+        assert_eq!(a.footprint.transient_bytes, b.footprint.transient_bytes);
+        let (ka, kb) = (
+            a.remat.iter().filter(|&&r| r).count(),
+            b.remat.iter().filter(|&&r| r).count(),
+        );
+        assert_eq!(ka, kb, "checkpoint counts");
+    }
+    let (me, f) = (8, 4);
+    let peaks: Vec<u64> = ex.iter().map(|p| p.peak_bytes(me, f)).collect();
+    let min_peak = *peaks.iter().min().unwrap();
+    // cap EXACTLY the checkpoint-everything peak: inclusive, and both
+    // searchers select the identical all-checkpoint plan
+    let d = memory::select_feasible(&dp, me, f, min_peak).expect("cap == min peak fits");
+    let e = memory::select_feasible(&ex, me, f, min_peak).expect("cap == min peak fits");
+    assert!(d.time_us.to_bits() == e.time_us.to_bits());
+    assert!(e.remat.iter().all(|&r| r), "the tightest cap checkpoints everything");
+    assert_eq!(e.peak_bytes(me, f), min_peak);
+    // one byte below it: honest None through both lanes
+    assert!(memory::select_feasible(&dp, me, f, min_peak - 1).is_none());
+    assert!(memory::select_feasible(&ex, me, f, min_peak - 1).is_none());
+    // boundless: both heads are the keep-everything plan
+    let d = memory::select_feasible(&dp, me, f, u64::MAX).unwrap();
+    let e = memory::select_feasible(&ex, me, f, u64::MAX).unwrap();
+    assert!(d.time_us.to_bits() == e.time_us.to_bits());
+    assert!(e.remat.iter().all(|&r| !r), "a boundless cap never recomputes");
 }
 
 #[test]

@@ -1,0 +1,535 @@
+//! Differential property suite for the PR 6 exact lane: the production
+//! DP searchers vs `cost::exact`'s branch-and-bound / full-Pareto
+//! enumeration — an oracle that shares **no pruning assumptions** with
+//! the DP (unlike `cost::oracle`, the verbatim pre-refactor copy of the
+//! same algorithm).
+//!
+//! Randomized instances stay small (≤ 12 instances × ≤ 4 configs) so
+//! exhaustive enumeration is cheap, and include absent reshard tables
+//! (the dense-matrix 0.0 default) and single-config uniques. Three
+//! lanes:
+//!
+//! * **unconstrained scalar** — DP optimum == exact optimum bit-for-bit
+//!   on any instance (float `+` of a constant is monotone, so the DP's
+//!   min over left-associated path sums is the true min).
+//! * **capped** — generator pins every unique's config memories to
+//!   `base_u` or `base_u + delta` with one *shared* delta, so a span of
+//!   length L has ≤ L + 1 distinct prefix memory sums, the per-state
+//!   Pareto set stays under `FRONTIER_CAP`, thinning provably never
+//!   engages — and the DP must therefore be bit-identical to exact.
+//! * **memory frontier** — the DP's min-time head must match the exact
+//!   head bit-for-bit (the head survives every DP prune), every DP point
+//!   must be dominated-or-equal by an exact point, and the feasibility
+//!   selection over the exact frontier must never lose to the DP's.
+//!
+//! Plus three adversarial cases: a dense-frontier chain where the DP's
+//! `FRONTIER_CAP` thinning engages and the exact lane is validated
+//! against a closed-form count enumeration instead; a hand-built
+//! instance of `prune_mem`'s real blind spot (a non-dominated frontier
+//! point dropped by the running-min rule — `cost::oracle` shares the
+//! rule verbatim and misses it, the exact Pareto set catches it); and
+//! an injected pre-fork tie-break perturbation that a DP-vs-oracle
+//! differential cannot see but the exact lane refutes.
+
+use cfp::cost::{self, oracle};
+use cfp::memory::{self, RecomputeSpec};
+use cfp::profiler::{ProfileDb, ReshardTable, SegmentConfig, SegmentProfile};
+use cfp::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+use cfp::spmd::ShardState;
+use cfp::util::proptest::Prop as Harness;
+use cfp::util::Pcg64;
+
+/// Per-config memory draw: unconstrained random bytes, or the two-value
+/// `base + {0, delta}` family the capped lane needs (see module doc).
+enum MemModel {
+    Free,
+    TwoValued { delta: u64 },
+}
+
+fn random_profile(rng: &mut Pcg64, cfgs: usize, mem: &MemModel) -> SegmentProfile {
+    let base = 500 + rng.below(4000);
+    let mem_bytes: Vec<u64> = (0..cfgs)
+        .map(|_| match mem {
+            MemModel::Free => 500 + rng.below(4000),
+            MemModel::TwoValued { delta } => base + rng.below(2) * delta,
+        })
+        .collect();
+    let act_bytes: Vec<u64> = mem_bytes.iter().map(|&m| rng.below(m + 1)).collect();
+    let ckpt_bytes: Vec<u64> = act_bytes.iter().map(|&a| rng.below(a + 1)).collect();
+    SegmentProfile {
+        configs: (0..cfgs).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+        t_c_us: (0..cfgs).map(|_| rng.f64() * 200.0).collect(),
+        t_p_us: (0..cfgs).map(|_| rng.f64() * 400.0).collect(),
+        mem_bytes,
+        act_bytes,
+        ckpt_bytes,
+        t_fwd_us: (0..cfgs).map(|_| rng.f64() * 100.0).collect(),
+        symbolic_volume: vec![0; cfgs],
+        boundary_out: vec![ShardState::Replicated; cfgs],
+        boundary_in: vec![ShardState::Replicated; cfgs],
+    }
+}
+
+/// A small random `(SegmentSet, ProfileDb)`: ≤ 12 instances, ≤ 4 configs
+/// per unique (single-config uniques included), reshard tables absent
+/// for ~1/3 of the adjacent pairs.
+fn random_small_setup(rng: &mut Pcg64, mem: MemModel) -> (SegmentSet, ProfileDb) {
+    let uniques = 1 + rng.below(3) as usize;
+    let mut db = ProfileDb::default();
+    for _ in 0..uniques {
+        let cfgs = 1 + rng.below(4) as usize;
+        db.segments.push(random_profile(rng, cfgs, &mem));
+    }
+    for a in 0..uniques {
+        for b in 0..uniques {
+            if rng.below(3) > 0 {
+                let (ca, cb) = (db.segments[a].configs.len(), db.segments[b].configs.len());
+                let t_r_us: Vec<Vec<f64>> =
+                    (0..ca).map(|_| (0..cb).map(|_| rng.f64() * 50.0).collect()).collect();
+                db.reshard.insert(
+                    (a, b),
+                    ReshardTable { t_r_us, sym_vol: vec![vec![0; cb]; ca], programs: ca * cb },
+                );
+            }
+        }
+    }
+    let n = 3 + rng.below(10) as usize; // 3..=12
+    let uids: Vec<usize> = (0..n).map(|_| rng.below(uniques as u64) as usize).collect();
+    let instances: Vec<SegmentInstance> = uids
+        .iter()
+        .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique: Vec<UniqueSegment> = (0..uniques)
+        .map(|u| UniqueSegment {
+            id: u,
+            fingerprint: format!("u{u}"),
+            rep: uids.iter().position(|&x| x == u).unwrap_or(0),
+            count: uids.iter().filter(|&&x| x == u).count(),
+        })
+        .collect();
+    (SegmentSet { instances, unique }, db)
+}
+
+fn random_span(rng: &mut Pcg64, n: usize) -> (usize, usize) {
+    let lo = rng.below(n as u64) as usize;
+    let hi = lo + 1 + rng.below((n - lo) as u64) as usize;
+    (lo, hi)
+}
+
+fn assert_times_eq(a: &Option<cost::Plan>, b: &Option<cost::Plan>, what: &str) {
+    match (a, b) {
+        (Some(a), Some(b)) => {
+            assert!(
+                a.time_us.to_bits() == b.time_us.to_bits(),
+                "{what}: time {} vs {}",
+                a.time_us,
+                b.time_us
+            );
+        }
+        (None, None) => {}
+        _ => panic!("{what}: feasibility mismatch {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn prop_unconstrained_dp_cost_equals_exact_optimum() {
+    Harness::fuzz(500, 0xE5AC7).check("unconstrained DP ≡ exact optimum", |rng| {
+        let (ss, db) = random_small_setup(rng, MemModel::Free);
+        let ctx = cost::SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        let mut spans = vec![(0, n)];
+        for _ in 0..2 {
+            spans.push(random_span(rng, n));
+        }
+        for (lo, hi) in spans {
+            let dp = cost::search_span_ctx(&ctx, None, lo, hi);
+            let ex = cost::search_span_exact(&ctx, None, lo, hi);
+            assert_times_eq(&dp, &ex, &format!("[{lo},{hi})"));
+        }
+    });
+}
+
+#[test]
+fn prop_capped_dp_cost_equals_exact_optimum() {
+    Harness::fuzz(500, 0xCA99ED).check("capped DP ≡ exact optimum", |rng| {
+        let delta = 1 + rng.below(2000);
+        let (ss, db) = random_small_setup(rng, MemModel::TwoValued { delta });
+        let ctx = cost::SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        let free = cost::search_span_ctx(&ctx, None, 0, n).expect("uncapped is feasible");
+        let caps = [
+            1u64,
+            free.mem_bytes.saturating_sub(delta),
+            free.mem_bytes.saturating_sub(1),
+            free.mem_bytes,
+            free.mem_bytes + rng.below(4 * delta + 1),
+        ];
+        let mut spans = vec![(0, n)];
+        spans.push(random_span(rng, n));
+        for (lo, hi) in spans {
+            for cap in caps {
+                let dp = cost::search_span_ctx(&ctx, Some(cap), lo, hi);
+                let ex = cost::search_span_exact(&ctx, Some(cap), lo, hi);
+                assert_times_eq(&dp, &ex, &format!("[{lo},{hi}) cap {cap}"));
+                if let Some(e) = &ex {
+                    assert!(e.mem_bytes <= cap, "[{lo},{hi}) cap {cap}: exact plan fits");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_mem_frontier_head_matches_and_exact_dominates() {
+    Harness::fuzz(500, 0x3F207E).check("mem frontier: head ≡, exact dominates", |rng| {
+        let (ss, db) = random_small_setup(rng, MemModel::Free);
+        let ctx = cost::SearchCtx::new(&ss, &db);
+        let n = ss.instances.len();
+        let spec = if rng.below(2) == 0 { RecomputeSpec::Off } else { RecomputeSpec::Auto };
+        for (lo, hi) in [(0, n), random_span(rng, n)] {
+            let dp = cost::search_span_mem_ctx(&ctx, lo, hi, spec);
+            let ex = cost::search_span_mem_exact(&ctx, lo, hi, spec);
+            assert!(!dp.is_empty() && !ex.is_empty(), "[{lo},{hi}) {spec:?}");
+
+            // the min-time head survives every DP prune, and with
+            // continuous random times the optimal path is unique — so
+            // the whole head point must agree bit-for-bit
+            let (dh, eh) = (&dp[0], &ex[0]);
+            assert!(
+                dh.time_us.to_bits() == eh.time_us.to_bits(),
+                "[{lo},{hi}) {spec:?}: head {} vs {}",
+                dh.time_us,
+                eh.time_us
+            );
+            assert_eq!(dh.choice, eh.choice, "[{lo},{hi}) {spec:?}: head choice");
+            assert_eq!(dh.remat, eh.remat, "[{lo},{hi}) {spec:?}: head remat");
+            assert_eq!(dh.footprint.static_bytes, eh.footprint.static_bytes);
+            assert_eq!(dh.footprint.retained_bytes, eh.footprint.retained_bytes);
+            assert_eq!(dh.footprint.transient_bytes, eh.footprint.transient_bytes);
+            assert!(
+                dh.footprint.recompute_us.to_bits() == eh.footprint.recompute_us.to_bits()
+            );
+
+            // completeness: whatever the DP kept, the exact Pareto set
+            // covers (dominance over time + all footprint components)
+            for p in &dp {
+                assert!(
+                    ex.iter().any(|q| q.time_us <= p.time_us
+                        && q.footprint.static_bytes <= p.footprint.static_bytes
+                        && q.footprint.retained_bytes <= p.footprint.retained_bytes
+                        && q.footprint.transient_bytes <= p.footprint.transient_bytes),
+                    "[{lo},{hi}) {spec:?}: DP point t={} not covered",
+                    p.time_us
+                );
+            }
+
+            // the feasibility selection over the exact frontier never
+            // loses to the DP frontier's, at any cap the DP can realize
+            let me = 1 + rng.below(8) as usize;
+            let f = 1 + rng.below(4) as usize;
+            let caps: Vec<u64> =
+                dp.iter().map(|p| p.peak_bytes(me, f)).chain([0, u64::MAX]).collect();
+            for cap in caps {
+                let from_dp = memory::select_feasible(&dp, me, f, cap).map(|p| p.time_us);
+                let from_ex = memory::select_feasible(&ex, me, f, cap).map(|p| p.time_us);
+                match (from_dp, from_ex) {
+                    (Some(d), Some(e)) => {
+                        assert!(e <= d, "cap {cap}: exact selection {e} worse than DP {d}")
+                    }
+                    // exact may be feasible where the thinned DP is not —
+                    // that is the DP's documented approximation...
+                    (None, Some(_)) => {}
+                    // ...but never the other way around
+                    (Some(d), None) => {
+                        panic!("cap {cap}: DP feasible at {d} but exact claims infeasible")
+                    }
+                    (None, None) => {}
+                }
+            }
+            // and a boundless cap selects the bit-identical head on both
+            let d = memory::select_feasible(&dp, me, f, u64::MAX).unwrap();
+            let e = memory::select_feasible(&ex, me, f, u64::MAX).unwrap();
+            assert!(d.time_us.to_bits() == e.time_us.to_bits());
+        }
+    });
+}
+
+/// The chain that defeats `FRONTIER_CAP` thinning: one unique with four
+/// configs whose times are `4, 3+ε, 2+3ε, 1+7ε` (ε = 2⁻¹⁰, all dyadic —
+/// every sum exact) and memories `1, 2, 3, 4`, no reshard. A length-L
+/// prefix has 3L+1 distinct memory sums, each Pareto-optimal (the base
+/// time is an exact linear function of memory and the nonlinear ε
+/// weights `0,1,3,7` break every cross-count tie), so by position 9 the
+/// per-state frontier exceeds 24 points and the DP must thin real
+/// frontier points away.
+fn thinning_chain() -> (SegmentSet, ProfileDb) {
+    let eps = 2f64.powi(-10);
+    let weights = [0.0, 1.0, 3.0, 7.0];
+    let mut db = ProfileDb::default();
+    db.segments.push(SegmentProfile {
+        configs: (0..4).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+        t_c_us: (0..4).map(|c| (4 - c) as f64 + weights[c] * eps).collect(),
+        t_p_us: vec![0.0; 4],
+        mem_bytes: (1..=4).collect(),
+        act_bytes: vec![0; 4],
+        ckpt_bytes: vec![0; 4],
+        t_fwd_us: vec![0.0; 4],
+        symbolic_volume: vec![0; 4],
+        boundary_out: vec![ShardState::Replicated; 4],
+        boundary_in: vec![ShardState::Replicated; 4],
+    });
+    let n = 10;
+    let instances: Vec<SegmentInstance> = (0..n)
+        .map(|_| SegmentInstance { unique_id: 0, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique = vec![UniqueSegment { id: 0, fingerprint: "u0".into(), rep: 0, count: n }];
+    (SegmentSet { instances, unique }, db)
+}
+
+/// Independent mini-oracle for [`thinning_chain`]: with no reshard and
+/// one unique, a plan is just a config-count vector — enumerate all
+/// `n1 + n2 + n3 ≤ 10` triples and take the exact closed-form optimum.
+fn thinning_chain_optimum(cap: u64) -> Option<f64> {
+    let eps = 2f64.powi(-10);
+    let n = 10i64;
+    let mut best: Option<f64> = None;
+    for n1 in 0..=n {
+        for n2 in 0..=(n - n1) {
+            for n3 in 0..=(n - n1 - n2) {
+                let n0 = n - n1 - n2 - n3;
+                let mem = (n0 + 2 * n1 + 3 * n2 + 4 * n3) as u64;
+                if mem > cap {
+                    continue;
+                }
+                let time = (4 * n0 + 3 * n1 + 2 * n2 + n3) as f64
+                    + (n1 + 3 * n2 + 7 * n3) as f64 * eps;
+                if best.map_or(true, |b| time < b) {
+                    best = Some(time);
+                }
+            }
+        }
+    }
+    best
+}
+
+#[test]
+fn exact_matches_closed_form_on_dense_frontier_chain() {
+    // the per-state frontier here exceeds FRONTIER_CAP from position 9
+    // on, so the DP runs its thinning path; the exact lane is validated
+    // bit-for-bit against a *closed-form* count enumeration instead (an
+    // oracle that shares no code with either searcher), and the DP and
+    // `cost::oracle` stay locked together whatever thinning does
+    let (ss, db) = thinning_chain();
+    let ctx = cost::SearchCtx::new(&ss, &db);
+    let n = ss.instances.len();
+    for cap in 10..=40u64 {
+        let dp = cost::search_span_ctx(&ctx, Some(cap), 0, n).expect("cap ≥ min mem");
+        let orc = oracle::search_span_reference(&ss, &db, Some(cap), 0, n).expect("feasible");
+        let ex = cost::search_span_exact(&ctx, Some(cap), 0, n).expect("feasible");
+        let want = thinning_chain_optimum(cap).expect("cap ≥ min mem");
+        assert!(
+            dp.time_us.to_bits() == orc.time_us.to_bits(),
+            "cap {cap}: oracle and DP must agree bit-for-bit (shared algorithm)"
+        );
+        assert!(
+            ex.time_us.to_bits() == want.to_bits(),
+            "cap {cap}: exact {} vs closed form {}",
+            ex.time_us,
+            want
+        );
+        assert!(ex.mem_bytes <= cap, "cap {cap}: exact plan fits");
+        assert!(ex.time_us <= dp.time_us, "cap {cap}: exact never worse than the DP");
+    }
+}
+
+/// The *real* (not injected) shared blind spot of the DP and its
+/// verbatim oracle copy: `prune_mem` keeps a point only when it lowers
+/// the running minimum of some footprint component in time order —
+/// which can drop a point **no kept point dominates**. Two positions
+/// suffice: u0's three configs produce, inside u1's single state, the
+/// time-ordered footprints (stat, ret) = (5, 1), (1, 5), (2, 2). The
+/// third lowers no running minimum (both are already 1) and is pruned,
+/// yet nothing dominates it — and at `m_eff = inflight = 1` its peak
+/// `2 + 2 + 0 = 4` beats the survivors' `6`, so under a cap of 4 or 5
+/// the DP (and the oracle, bit-for-bit) answer "infeasible" while the
+/// exact Pareto set still holds the feasible plan.
+#[test]
+fn mem_prune_blind_spot_caught_by_exact_but_invisible_to_oracle() {
+    let mut db = ProfileDb::default();
+    // u0: three configs, times 1/2/3, (stat, ret) = (5,1), (1,5), (2,2)
+    db.segments.push(SegmentProfile {
+        configs: (0..3).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+        t_c_us: vec![1.0, 2.0, 3.0],
+        t_p_us: vec![0.0; 3],
+        mem_bytes: vec![6, 6, 4],
+        act_bytes: vec![1, 5, 2],
+        ckpt_bytes: vec![0; 3],
+        t_fwd_us: vec![0.0; 3],
+        symbolic_volume: vec![0; 3],
+        boundary_out: vec![ShardState::Replicated; 3],
+        boundary_in: vec![ShardState::Replicated; 3],
+    });
+    // u1: a single weightless config — merely funnels all three paths
+    // into one state so prune_mem sees them together
+    db.segments.push(SegmentProfile {
+        configs: vec![SegmentConfig { strategy: vec![0] }],
+        t_c_us: vec![1.0],
+        t_p_us: vec![0.0],
+        mem_bytes: vec![0],
+        act_bytes: vec![0],
+        ckpt_bytes: vec![0],
+        t_fwd_us: vec![0.0],
+        symbolic_volume: vec![0],
+        boundary_out: vec![ShardState::Replicated],
+        boundary_in: vec![ShardState::Replicated],
+    });
+    let instances: Vec<SegmentInstance> = [0usize, 1]
+        .iter()
+        .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique: Vec<UniqueSegment> = (0..2)
+        .map(|u| UniqueSegment { id: u, fingerprint: format!("u{u}"), rep: u, count: 1 })
+        .collect();
+    let ss = SegmentSet { instances, unique };
+    let ctx = cost::SearchCtx::new(&ss, &db);
+    let spec = RecomputeSpec::Off;
+
+    let dp = cost::search_span_mem_ctx(&ctx, 0, 2, spec);
+    let orc = oracle::search_span_mem_reference(&ss, &db, 0, 2, spec);
+    let ex = cost::search_span_mem_exact(&ctx, 0, 2, spec);
+
+    // the oracle shares prune_mem verbatim: identical frontier — the
+    // existing differential suite cannot see the dropped point
+    assert_eq!(dp.len(), orc.len(), "DP and oracle frontiers line up");
+    for (a, b) in dp.iter().zip(&orc) {
+        assert!(a.time_us.to_bits() == b.time_us.to_bits());
+        assert_eq!(a.footprint.static_bytes, b.footprint.static_bytes);
+        assert_eq!(a.footprint.retained_bytes, b.footprint.retained_bytes);
+        assert_eq!(a.footprint.transient_bytes, b.footprint.transient_bytes);
+    }
+
+    // the DP kept 2 of the 3 non-dominated points; exact keeps all 3
+    assert_eq!(dp.len(), 2, "prune_mem drops the non-dominated middle point");
+    assert_eq!(ex.len(), 3, "the exact Pareto set keeps it");
+    assert!(ex
+        .iter()
+        .any(|p| p.footprint.static_bytes == 2 && p.footprint.retained_bytes == 2));
+
+    // under caps 4 and 5 the dropped point is the only feasible plan:
+    // DP and oracle claim infeasible, exact proves feasible
+    for cap in [4u64, 5] {
+        assert!(
+            memory::select_feasible(&dp, 1, 1, cap).is_none(),
+            "cap {cap}: the DP frontier has no feasible point"
+        );
+        assert!(
+            memory::select_feasible(&orc, 1, 1, cap).is_none(),
+            "cap {cap}: the oracle shares the blind spot"
+        );
+        let found = memory::select_feasible(&ex, 1, 1, cap)
+            .expect("the exact frontier still holds the feasible plan");
+        assert!(found.time_us.to_bits() == 4.0f64.to_bits());
+        assert_eq!(found.choice, vec![2, 0], "the pruned config-2 path");
+    }
+    // with a loose cap all three agree on the min-time head
+    let d = memory::select_feasible(&dp, 1, 1, u64::MAX).unwrap();
+    let e = memory::select_feasible(&ex, 1, 1, u64::MAX).unwrap();
+    assert!(d.time_us.to_bits() == e.time_us.to_bits());
+    assert!(d.time_us.to_bits() == 2.0f64.to_bits());
+}
+
+/// A capped DP with a deliberately perturbed tie-break, standing in for
+/// a bug introduced *before* `cost::oracle` was forked: among time-equal
+/// states it keeps the largest-memory point instead of the smallest.
+/// Chain positions are single-unique-free (no reshard), so the DP is
+/// just per-position (time, mem) frontier propagation.
+fn perturbed_capped_dp(times: &[Vec<f64>], mems: &[Vec<u64>], cap: u64) -> Option<f64> {
+    let mut states: Vec<(f64, u64)> = vec![(0.0, 0)];
+    for (ts, ms) in times.iter().zip(mems) {
+        let mut next: Vec<(f64, u64)> = Vec::new();
+        for &(t, m) in &states {
+            for (c, &ct) in ts.iter().enumerate() {
+                let (nt, nm) = (t + ct, m + ms[c]);
+                if nm <= cap {
+                    next.push((nt, nm));
+                }
+            }
+        }
+        // the injected perturbation: sort (time asc, mem DESC) and keep
+        // the first point per distinct time value — i.e. the tie-break
+        // keeps the memory-hungriest of time-equal states
+        next.sort_by(|a, b| a.0.partial_cmp(&b.0).unwrap().then(b.1.cmp(&a.1)));
+        next.dedup_by(|a, b| a.0 == b.0);
+        states = next;
+        if states.is_empty() {
+            return None;
+        }
+    }
+    states.iter().map(|&(t, _)| t).min_by(|a, b| a.partial_cmp(b).unwrap())
+}
+
+#[test]
+fn injected_tie_break_perturbation_caught_only_by_exact() {
+    // A has two configs with *identical* total time 1.0 (0.5+0.5 and
+    // 0.25+0.75 — dyadic, exactly equal) but memories 4 vs 2; B and C
+    // are single-config (time 1.0, mem 1); no reshard tables. Cap 5.
+    let mut db = ProfileDb::default();
+    let profile = |t_c: Vec<f64>, t_p: Vec<f64>, mem: Vec<u64>| {
+        let k = mem.len();
+        SegmentProfile {
+            configs: (0..k).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+            t_c_us: t_c,
+            t_p_us: t_p,
+            mem_bytes: mem,
+            act_bytes: vec![0; k],
+            ckpt_bytes: vec![0; k],
+            t_fwd_us: vec![0.0; k],
+            symbolic_volume: vec![0; k],
+            boundary_out: vec![ShardState::Replicated; k],
+            boundary_in: vec![ShardState::Replicated; k],
+        }
+    };
+    db.segments.push(profile(vec![0.5, 0.25], vec![0.5, 0.75], vec![4, 2]));
+    db.segments.push(profile(vec![0.5], vec![0.5], vec![1]));
+    db.segments.push(profile(vec![0.5], vec![0.5], vec![1]));
+    let instances: Vec<SegmentInstance> = (0..3)
+        .map(|u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique: Vec<UniqueSegment> = (0..3)
+        .map(|u| UniqueSegment { id: u, fingerprint: format!("u{u}"), rep: u, count: 1 })
+        .collect();
+    let ss = SegmentSet { instances, unique };
+    let ctx = cost::SearchCtx::new(&ss, &db);
+    let cap = 5u64;
+
+    // sanity: production DP, pre-refactor oracle and the exact lane all
+    // find the plan (A's lean config + B + C = time 3.0, mem 4 ≤ 5)
+    let dp = cost::search_span_ctx(&ctx, Some(cap), 0, 3).expect("production DP solves this");
+    let orc = oracle::search_span_reference(&ss, &db, Some(cap), 0, 3).expect("oracle too");
+    let ex = cost::search_span_exact(&ctx, Some(cap), 0, 3).expect("exact too");
+    assert!(dp.time_us.to_bits() == 3.0f64.to_bits());
+    assert!(orc.time_us.to_bits() == 3.0f64.to_bits());
+    assert!(ex.time_us.to_bits() == 3.0f64.to_bits());
+    assert_eq!(ex.mem_bytes, 4);
+
+    // the perturbed tie-break keeps A's fat config, dead-ends at C —
+    // and because the bug predates the production/oracle fork, BOTH
+    // copies return the same wrong answer: the differential suite passes
+    let times = vec![vec![1.0, 1.0], vec![1.0], vec![1.0]];
+    let mems = vec![vec![4, 2], vec![1], vec![1]];
+    let perturbed_production = perturbed_capped_dp(&times, &mems, cap);
+    let perturbed_oracle = perturbed_capped_dp(&times, &mems, cap);
+    assert_eq!(
+        perturbed_production, perturbed_oracle,
+        "DP-vs-oracle differential is blind to a pre-fork perturbation"
+    );
+    assert_eq!(perturbed_production, None, "the perturbation loses the feasible plan");
+
+    // only an oracle that does not share the tie-break — the exact
+    // lane — flags the perturbed result as wrong
+    assert_ne!(perturbed_production, Some(ex.time_us));
+    assert!(
+        perturbed_production.is_none() && cost::search_span_exact(&ctx, Some(cap), 0, 3).is_some(),
+        "exact refutes the perturbed infeasibility verdict"
+    );
+}

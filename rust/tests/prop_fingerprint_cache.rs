@@ -34,7 +34,7 @@ fn fingerprints(cfg: &ModelCfg, parts: usize) -> Vec<String> {
 /// would poison lookups).
 #[test]
 fn prop_fingerprints_deterministic_across_rebuilds() {
-    Harness::new(16, 0xF1CA).check("fingerprint determinism", |rng| {
+    Harness::fuzz(16, 0xF1CA).check("fingerprint determinism", |rng| {
         let cfg = random_model(rng);
         let parts = *rng.choice(&[2usize, 4]);
         let a = fingerprints(&cfg, parts);
@@ -51,7 +51,7 @@ fn prop_fingerprints_deterministic_across_rebuilds() {
 /// be reused where re-profiling would reproduce it.
 #[test]
 fn prop_fingerprints_differ_for_structurally_different_segments() {
-    Harness::new(16, 0xD1FF).check("fingerprint sensitivity", |rng| {
+    Harness::fuzz(16, 0xD1FF).check("fingerprint sensitivity", |rng| {
         let cfg = random_model(rng);
         let mut mutated = cfg.clone();
         match rng.below(3) {
@@ -80,7 +80,7 @@ fn prop_fingerprints_differ_for_structurally_different_segments() {
 /// serves a warm run that reproduces the cold ProfileDb bit-for-bit.
 #[test]
 fn prop_profile_db_and_cache_round_trip() {
-    Harness::new(6, 0x5A7E).check("profile round trip", |rng| {
+    Harness::fuzz(6, 0x5A7E).check("profile round trip", |rng| {
         let cfg = random_model(rng);
         let g = build_training(&cfg);
         let bs = build_parallel_blocks(&g, 2);

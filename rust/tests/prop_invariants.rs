@@ -39,7 +39,7 @@ fn random_model(rng: &mut Pcg64) -> ModelCfg {
 /// communication-free and assigns consistent shardings.
 #[test]
 fn prop_blocks_are_communication_free() {
-    Harness::new(24, 0xB10C).check("pblock soundness", |rng| {
+    Harness::fuzz(24, 0xB10C).check("pblock soundness", |rng| {
         let cfg = random_model(rng);
         let parts = *rng.choice(&[2usize, 4]);
         let g = build_training(&cfg);
@@ -76,7 +76,7 @@ fn prop_blocks_are_communication_free() {
 /// grad sync; and per-device flops always ≤ serial flops.
 #[test]
 fn prop_lowering_flops_bounded() {
-    Harness::new(16, 0xF10). check("lowering flops", |rng| {
+    Harness::fuzz(16, 0xF10). check("lowering flops", |rng| {
         let cfg = random_model(rng);
         let g = build_training(&cfg);
         let bs = build_parallel_blocks(&g, 4);
@@ -96,7 +96,7 @@ fn prop_lowering_flops_bounded() {
 /// under random memory caps.
 #[test]
 fn prop_search_optimal_vs_brute_force() {
-    Harness::new(10, 0x5EA2C4).check("search optimality", |rng| {
+    Harness::fuzz(10, 0x5EA2C4).check("search optimality", |rng| {
         let mut cfg = random_model(rng);
         cfg.layers = 1 + rng.below(2) as usize; // keep brute force sane
         let g = build_training(&cfg);
@@ -136,7 +136,7 @@ fn prop_search_optimal_vs_brute_force() {
 /// (by construction) identical profiles.
 #[test]
 fn prop_fingerprint_equal_segments_share_space() {
-    Harness::new(16, 0xF1D6E).check("fingerprint soundness", |rng| {
+    Harness::fuzz(16, 0xF1D6E).check("fingerprint soundness", |rng| {
         let cfg = random_model(rng);
         let g = build_training(&cfg);
         let bs = build_parallel_blocks(&g, 2);
@@ -164,7 +164,7 @@ fn prop_fingerprint_equal_segments_share_space() {
 /// Backward ops always land in their forward op's block (§3.2).
 #[test]
 fn prop_bwd_ops_follow_fwd_blocks() {
-    Harness::new(16, 0xB3D).check("bwd grouping", |rng| {
+    Harness::fuzz(16, 0xB3D).check("bwd grouping", |rng| {
         let cfg = random_model(rng);
         let g = build_training(&cfg);
         let bs = build_parallel_blocks(&g, 2);

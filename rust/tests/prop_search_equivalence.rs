@@ -112,7 +112,7 @@ fn assert_plans_eq(a: &Option<cost::Plan>, b: &Option<cost::Plan>, what: &str) {
 
 #[test]
 fn prop_span_search_bit_identical_to_reference() {
-    Harness::new(48, 0x5EA5C4).check("span search ≡ reference", |rng| {
+    Harness::fuzz(48, 0x5EA5C4).check("span search ≡ reference", |rng| {
         let (ss, db) = random_setup(rng, false);
         let n = ss.instances.len();
         let free = oracle::search_span_reference(&ss, &db, None, 0, n).expect("always feasible");
@@ -144,7 +144,7 @@ fn prop_span_search_bit_identical_to_reference() {
 fn prop_deep_repeated_chains_splice_exactly() {
     // long runs of one unique: the steady-state splice must engage and
     // still agree with the per-position reference bit-for-bit
-    Harness::new(10, 0xDEEC0DE).check("deep chain splice ≡ reference", |rng| {
+    Harness::fuzz(10, 0xDEEC0DE).check("deep chain splice ≡ reference", |rng| {
         let (ss, db) = random_setup(rng, true);
         let n = ss.instances.len();
         let new = cost::search(&ss, &db, None);
@@ -161,7 +161,7 @@ fn prop_deep_repeated_chains_splice_exactly() {
 
 #[test]
 fn prop_sweep_times_fold_the_reference_retry() {
-    Harness::new(24, 0x5EEB).check("sweep ≡ capped-then-unconstrained retry", |rng| {
+    Harness::fuzz(24, 0x5EEB).check("sweep ≡ capped-then-unconstrained retry", |rng| {
         let (ss, db) = random_setup(rng, false);
         let n = ss.instances.len();
         let ctx = cost::SearchCtx::new(&ss, &db);
@@ -189,7 +189,7 @@ fn prop_sweep_times_fold_the_reference_retry() {
 
 #[test]
 fn prop_mem_frontier_bit_identical_to_reference() {
-    Harness::new(24, 0x3E3).check("memory frontier ≡ reference", |rng| {
+    Harness::fuzz(24, 0x3E3).check("memory frontier ≡ reference", |rng| {
         let (ss, db) = random_setup(rng, false);
         let n = ss.instances.len();
         for spec in [RecomputeSpec::Off, RecomputeSpec::Auto] {
@@ -216,7 +216,7 @@ fn prop_mem_frontier_bit_identical_to_reference() {
 
 #[test]
 fn prop_sweep_frontiers_and_selection_match_reference() {
-    Harness::new(16, 0xF207).check("frontier sweep ≡ per-span reference", |rng| {
+    Harness::fuzz(16, 0xF207).check("frontier sweep ≡ per-span reference", |rng| {
         let (ss, db) = random_setup(rng, false);
         let n = ss.instances.len();
         let ctx = cost::SearchCtx::new(&ss, &db);
