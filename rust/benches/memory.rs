@@ -71,12 +71,14 @@ fn main() {
             name: format!("span_search/mem_frontier_auto/{layers}L"),
             layers,
             ns_per_iter: auto_.median_ns,
+            unit: None,
             speedup: Some(reference.median_ns / auto_.median_ns.max(1e-9)),
         });
         rows.push(JsonRow {
             name: format!("span_search/mem_frontier_oracle/{layers}L"),
             layers,
             ns_per_iter: reference.median_ns,
+            unit: None,
             speedup: None,
         });
 

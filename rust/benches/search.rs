@@ -58,6 +58,7 @@ fn main() {
                 name: r.name.clone(),
                 layers,
                 ns_per_iter: r.median_ns,
+                unit: None,
                 speedup: None,
             });
             let cap = (free.mem_bytes as f64 * 0.9) as u64;
@@ -72,6 +73,7 @@ fn main() {
                 name: r.name.clone(),
                 layers,
                 ns_per_iter: r.median_ns,
+                unit: None,
                 speedup: None,
             });
             bench(
@@ -124,12 +126,14 @@ fn main() {
             name: format!("chain_dp/new/{layers}L"),
             layers,
             ns_per_iter: new.median_ns,
+            unit: None,
             speedup: Some(speedup),
         });
         rows.push(JsonRow {
             name: format!("chain_dp/oracle/{layers}L"),
             layers,
             ns_per_iter: reference.median_ns,
+            unit: None,
             speedup: None,
         });
         if smoke && layers == 32 && new.median_ns > SMOKE_CEILING_NS {
@@ -187,12 +191,14 @@ fn main() {
             name: format!("exact_bnb/dp/{n}n"),
             layers: n,
             ns_per_iter: dp.median_ns,
+            unit: None,
             speedup: None,
         });
         rows.push(JsonRow {
             name: format!("exact_bnb/bnb/{n}n"),
             layers: n,
             ns_per_iter: ex.median_ns,
+            unit: None,
             speedup: Some(ratio),
         });
     }

@@ -7,14 +7,20 @@
 //! * plan-warm — plan cache hit: no planning at all
 //! * coalescing — N concurrent identical requests perform exactly one
 //!   search (leader held until every follower registers)
+//! * mixed 10k — 10 000 warm requests over 8 model×layers variants,
+//!   both in-process and over loopback TCP; p50/p99/throughput land in
+//!   `BENCH_serve.json` (via `merge_bench_json`, so `cfp bench-serve`
+//!   rows and these coexist)
 //!
 //! Acceptance: warm (either warm path's best) ≥ 10× faster than cold.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
 use cfp::service::{PlanService, ServeConfig};
-use cfp::util::bench::{bench, black_box};
+use cfp::util::bench::{bench, black_box, merge_bench_json, JsonRow};
 use cfp::util::Json;
 
 fn line(layers: usize) -> String {
@@ -22,6 +28,45 @@ fn line(layers: usize) -> String {
         "{{\"type\": \"plan\", \"model\": \"gpt-tiny\", \"layers\": {layers}, \
          \"platform\": \"a100-pcie\"}}"
     )
+}
+
+/// Request `i` of the mixed-model stream: alternating gpt-tiny/moe-tiny
+/// over layers 2–5, so `i % 8` picks one of 8 distinct plan keys.
+fn mixed_line(i: usize) -> String {
+    let model = ["gpt-tiny", "moe-tiny"][i % 2];
+    let layers = 2 + (i / 2) % 4;
+    format!(
+        "{{\"id\": {i}, \"type\": \"plan\", \"model\": \"{model}\", \"layers\": {layers}, \
+         \"platform\": \"a100-pcie\", \"client\": \"bench\"}}"
+    )
+}
+
+/// Sort one lane's latencies, print the distribution, and stage
+/// p50/p99/throughput rows for `BENCH_serve.json`.
+fn lane_rows(mode: &str, mut lat_us: Vec<f64>, wall: f64, rows: &mut Vec<JsonRow>) {
+    lat_us.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = lat_us.len();
+    let q = |p: usize| lat_us[(n - 1) * p / 100];
+    let thr = n as f64 / wall.max(1e-9);
+    println!(
+        "bench serve/mixed10k_{mode}: {n} requests in {:.3}s — \
+         p50 {:.1}µs  p99 {:.1}µs  max {:.1}µs  ({thr:.0} req/s)",
+        wall,
+        q(50),
+        q(99),
+        lat_us[n - 1],
+    );
+    for (metric, value, unit) in
+        [("p50_us", q(50), "us"), ("p99_us", q(99), "us"), ("throughput", thr, "req_per_s")]
+    {
+        rows.push(JsonRow {
+            name: format!("serve/mixed10k_{mode}/{metric}"),
+            layers: n,
+            ns_per_iter: value,
+            unit: Some(unit),
+            speedup: None,
+        });
+    }
 }
 
 fn main() {
@@ -106,4 +151,94 @@ fn main() {
     let pa = Json::parse(&a).unwrap().get("result").unwrap().to_string();
     let pb = Json::parse(&b).unwrap().get("result").unwrap().to_string();
     assert_eq!(pa, pb, "plan-warm and profile-warm payloads are bit-identical");
+
+    // mixed 10k: 10 000 warm requests over 8 model×layers variants,
+    // first in-process (16 threads calling handle_line), then the same
+    // stream over loopback TCP in request/response lockstep per
+    // connection. Warm hits are cheap, so this lane runs in full even
+    // under CFP_BENCH_SMOKE.
+    const TOTAL: usize = 10_000;
+    const THREADS: usize = 16;
+    let svc4 = PlanService::new(ServeConfig { workers: THREADS, ..ServeConfig::default() });
+    for i in 0..8 {
+        let resp = svc4.handle_line(&mixed_line(i));
+        let j = Json::parse(&resp).expect("pre-warm response is JSON");
+        assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "pre-warm failed: {resp}");
+    }
+    let mut rows: Vec<JsonRow> = Vec::new();
+
+    let t0 = Instant::now();
+    let lat: Vec<f64> = std::thread::scope(|s| {
+        let handles: Vec<_> = (0..THREADS)
+            .map(|t| {
+                let svc = svc4.clone();
+                s.spawn(move || {
+                    let mut lat = Vec::with_capacity(TOTAL / THREADS + 1);
+                    let mut i = t;
+                    while i < TOTAL {
+                        let q0 = Instant::now();
+                        black_box(svc.handle_line(&mixed_line(i)));
+                        lat.push(q0.elapsed().as_secs_f64() * 1e6);
+                        i += THREADS;
+                    }
+                    lat
+                })
+            })
+            .collect();
+        handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+    });
+    lane_rows("inproc", lat, t0.elapsed().as_secs_f64(), &mut rows);
+
+    match svc4.listen("127.0.0.1:0") {
+        Ok(addr) => {
+            let t0 = Instant::now();
+            let lat: Vec<f64> = std::thread::scope(|s| {
+                let handles: Vec<_> = (0..THREADS)
+                    .map(|t| {
+                        s.spawn(move || {
+                            let stream = TcpStream::connect(addr).expect("connect loopback");
+                            let mut reader =
+                                BufReader::new(stream.try_clone().expect("clone tcp stream"));
+                            let mut w = stream;
+                            let mut lat = Vec::with_capacity(TOTAL / THREADS + 1);
+                            let mut resp = String::new();
+                            let mut i = t;
+                            while i < TOTAL {
+                                let q0 = Instant::now();
+                                writeln!(w, "{}", mixed_line(i)).expect("write request");
+                                resp.clear();
+                                reader.read_line(&mut resp).expect("read response");
+                                lat.push(q0.elapsed().as_secs_f64() * 1e6);
+                                if i % 97 == 0 {
+                                    let j = Json::parse(&resp).expect("tcp response is JSON");
+                                    assert_eq!(
+                                        j.get("ok").and_then(Json::as_bool),
+                                        Some(true),
+                                        "tcp response not ok: {resp}"
+                                    );
+                                }
+                                i += THREADS;
+                            }
+                            lat
+                        })
+                    })
+                    .collect();
+                handles.into_iter().flat_map(|h| h.join().unwrap()).collect()
+            });
+            lane_rows("tcp", lat, t0.elapsed().as_secs_f64(), &mut rows);
+        }
+        Err(e) => eprintln!("bench serve: tcp lane skipped: {e}"),
+    }
+
+    let report = svc4.drain();
+    let s = svc4.stats();
+    assert_eq!(s.searches, 8, "every mixed-model request after pre-warm must be a cache hit");
+    assert_eq!(s.received, s.admitted + s.rejected + s.coalesced, "admission ledger reconciles");
+    println!("{}", report.summary_line());
+
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serve.json");
+    match merge_bench_json(&path, &rows) {
+        Ok(()) => println!("bench rows updated in {}", path.display()),
+        Err(e) => eprintln!("bench serve: could not write {}: {e}", path.display()),
+    }
 }

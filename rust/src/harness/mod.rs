@@ -158,11 +158,20 @@ pub struct CacheEffect {
     pub profile_misses: u64,
     /// cumulative µs inside plan search across every executed search
     pub search_us: u64,
+    /// admission-ledger totals: plan requests that reached admission,
+    /// the subset admitted to planning, and the subset turned away with
+    /// a structured rejection (overload or draining)
+    pub received: u64,
+    pub admitted: u64,
+    pub rejected: u64,
 }
 
 impl CacheEffect {
     pub fn headers() -> &'static [&'static str] {
-        &["plan hit", "plan miss", "coalesced", "prof hit", "prof miss", "search µs"]
+        &[
+            "plan hit", "plan miss", "coalesced", "prof hit", "prof miss", "search µs",
+            "received", "admitted", "rejected",
+        ]
     }
 
     pub fn cells(&self) -> Vec<String> {
@@ -173,6 +182,9 @@ impl CacheEffect {
             self.profile_hits.to_string(),
             self.profile_misses.to_string(),
             self.search_us.to_string(),
+            self.received.to_string(),
+            self.admitted.to_string(),
+            self.rejected.to_string(),
         ]
     }
 
@@ -184,6 +196,9 @@ impl CacheEffect {
             profile_hits: s.profile_hits,
             profile_misses: s.profile_misses,
             search_us: s.search_us,
+            received: s.received,
+            admitted: s.admitted,
+            rejected: s.rejected,
         }
     }
 }

@@ -23,6 +23,7 @@ use cfp::harness::{fmt_bytes, fmt_us, CacheEffect, Table};
 use cfp::runtime::Runtime;
 use cfp::service::{shared_writer, PlanService, ServeConfig};
 use cfp::trainer::Trainer;
+use cfp::util::bench::{merge_bench_json, JsonRow};
 use cfp::util::cli::Args;
 use cfp::util::Json;
 
@@ -47,6 +48,8 @@ fn main() {
                  [--stages auto|K] [--microbatches M] [--mem-cap GB] \
                  [--recompute auto|off] [--engine dp|exact|auto] [--steps N] [--lr F] \
                  [--listen ADDR] [--workers N] [--plan-cache N] \
+                 [--plan-cache-file FILE] [--quota RATE] [--quota-burst N] \
+                 [--max-pending N] \
                  [--connect ADDR] [--requests N] [--clients N] [--distinct N]"
             );
             1
@@ -230,15 +233,24 @@ fn cmd_compare(args: &Args) -> i32 {
     0
 }
 
-fn cmd_serve(args: &Args) -> i32 {
-    let cfg = ServeConfig {
-        workers: args.get_usize("workers", 4),
+/// `cfp serve` flags shared with bench-serve's in-process lane.
+fn serve_config(args: &Args, workers: usize) -> ServeConfig {
+    ServeConfig {
+        workers,
         plan_cache_entries: args.get_usize("plan-cache", 128),
         cache_path: args.get_path("cache"),
         cache_max_entries: args.get_usize_opt("cache-max-entries"),
         search_threads: args.get_usize("threads", 1),
-    };
-    let svc = PlanService::new(cfg);
+        plan_cache_file: args.get_path("plan-cache-file"),
+        quota: args
+            .get_f64_opt("quota")
+            .map(|rate| (rate, args.get_f64("quota-burst", (2.0 * rate).max(1.0)))),
+        max_pending: args.get_usize("max-pending", 1024),
+    }
+}
+
+fn cmd_serve(args: &Args) -> i32 {
+    let svc = PlanService::new(serve_config(args, args.get_usize("workers", 4)));
     let listening = match args.get("listen") {
         Some(addr) => match svc.listen(addr) {
             Ok(local) => {
@@ -253,67 +265,107 @@ fn cmd_serve(args: &Args) -> i32 {
         None => false,
     };
     eprintln!("cfp serve: NDJSON requests on stdin, responses on stdout");
-    svc.serve_stream(std::io::stdin().lock(), shared_writer(std::io::stdout()));
-    if let Err(e) = svc.save() {
-        eprintln!("cfp serve: could not persist profile cache: {e}");
-    }
+    // Pure std has no signal handling, so stdin EOF is the documented
+    // SIGTERM equivalent: closing stdin (or a `{"type": "drain"}`
+    // request on any stream) drains the service — in-flight searches
+    // finish and are answered, new work gets structured `draining`
+    // rejections, caches flush — and the process exits with a summary.
     if listening {
-        // stdin is done but the TCP listener stays up: park as a daemon
-        eprintln!("cfp serve: stdin closed; still serving TCP (Ctrl-C to stop)");
-        loop {
-            std::thread::park();
+        let stdin_svc = svc.clone();
+        let spawned =
+            std::thread::Builder::new().name("cfp-serve-stdin".into()).spawn(move || {
+                stdin_svc
+                    .serve_stream(std::io::stdin().lock(), shared_writer(std::io::stdout()));
+                stdin_svc.drain();
+            });
+        match spawned {
+            Ok(_) => svc.wait_drained(),
+            Err(e) => {
+                eprintln!("cfp serve: cannot serve stdin: {e}");
+                svc.wait_drained();
+            }
         }
+    } else {
+        svc.serve_stream(std::io::stdin().lock(), shared_writer(std::io::stdout()));
     }
+    let report = svc.drain();
+    eprintln!("{}", report.summary_line());
     0
 }
 
-/// Load generator for `cfp serve`: fires `--requests` plan requests from
-/// `--clients` concurrent clients, cycling `--distinct` request variants
-/// (so both the coalescing and the warm path get exercised). In-process
-/// by default; `--connect ADDR` drives a live daemon over TCP.
+/// Load generator for `cfp serve`: fires `--requests` requests from
+/// `--clients` concurrent clients over mixed-model streams (the
+/// requested `--model` alternating with a second tiny preset), cycling
+/// `--distinct` layer variants per model. By default both lanes run —
+/// in-process dispatch, then a TCP loopback against the same warm
+/// service — and p50/p99/throughput rows are merged into
+/// `BENCH_serve.json`; `--connect ADDR` instead drives a live daemon
+/// over TCP only.
 fn cmd_bench_serve(args: &Args) -> i32 {
     let requests = args.get_usize("requests", 32).max(1);
     let clients = args.get_usize("clients", 4).max(1);
     let distinct = args.get_usize("distinct", 2).max(1);
     let model = args.get_or("model", "gpt-tiny");
     let platform = args.get_or("platform", "a100-pcie");
+    let moe_first = ["moe-tiny", "gpt-tiny"];
+    let mixed = [model, "moe-tiny"];
+    let models: &[&str] = if model == "moe-tiny" { &moe_first } else { &mixed };
     let lines: Vec<String> = (0..requests)
         .map(|i| {
             format!(
-                "{{\"id\": {i}, \"type\": \"plan\", \"model\": \"{model}\", \
-                 \"layers\": {}, \"platform\": \"{platform}\"}}",
-                2 + i % distinct
+                "{{\"id\": {i}, \"type\": \"plan\", \"model\": \"{}\", \
+                 \"layers\": {}, \"platform\": \"{platform}\", \"client\": \"c{}\"}}",
+                models[i % models.len()],
+                2 + (i / models.len()) % distinct,
+                i % clients,
             )
         })
         .collect();
-    let t0 = std::time::Instant::now();
-    let (mut lat_us, stats) = match args.get("connect") {
-        Some(addr) => match bench_serve_tcp(addr, &lines, clients) {
-            Ok(out) => out,
-            Err(e) => {
-                eprintln!("cfp bench-serve: {e}");
-                return 1;
+    let mut rows = Vec::new();
+    let stats = match args.get("connect") {
+        Some(addr) => {
+            let t0 = std::time::Instant::now();
+            match bench_serve_tcp(addr, &lines, clients) {
+                Ok((lat, stats)) => {
+                    summarize_lane("tcp", lat, t0.elapsed().as_secs_f64(), clients, &mut rows);
+                    stats
+                }
+                Err(e) => {
+                    eprintln!("cfp bench-serve: {e}");
+                    return 1;
+                }
             }
-        },
-        None => bench_serve_local(args, &lines, clients),
+        }
+        None => {
+            let svc = PlanService::new(serve_config(args, clients));
+            let t0 = std::time::Instant::now();
+            let lat = bench_serve_local(&svc, &lines, clients);
+            summarize_lane("inproc", lat, t0.elapsed().as_secs_f64(), clients, &mut rows);
+            // second lane: the same (now warm) service over real sockets
+            match svc.listen("127.0.0.1:0") {
+                Ok(local) => {
+                    let t0 = std::time::Instant::now();
+                    match bench_serve_tcp(&local.to_string(), &lines, clients) {
+                        Ok((lat, _)) => summarize_lane(
+                            "tcp",
+                            lat,
+                            t0.elapsed().as_secs_f64(),
+                            clients,
+                            &mut rows,
+                        ),
+                        Err(e) => eprintln!("cfp bench-serve: tcp lane skipped: {e}"),
+                    }
+                }
+                Err(e) => eprintln!("cfp bench-serve: tcp lane skipped: {e}"),
+            }
+            svc.stats().to_json()
+        }
     };
-    let wall = t0.elapsed().as_secs_f64();
-    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
-    println!(
-        "{requests} requests ({distinct} distinct), {clients} clients: \
-         {wall:.2}s wall, {:.1} req/s",
-        requests as f64 / wall.max(1e-9),
-    );
-    if !lat_us.is_empty() {
-        println!(
-            "latency: min {}  p50 {}  max {}",
-            fmt_us(lat_us[0]),
-            fmt_us(lat_us[lat_us.len() / 2]),
-            fmt_us(lat_us[lat_us.len() - 1]),
-        );
-    }
     let g = |k: &str| stats.get(k).and_then(Json::as_u64).unwrap_or(0);
     let eff = CacheEffect {
+        received: g("received"),
+        admitted: g("admitted"),
+        rejected: g("rejected"),
         plan_hits: g("plan_hits"),
         plan_misses: g("plan_misses"),
         coalesced: g("coalesced"),
@@ -324,18 +376,58 @@ fn cmd_bench_serve(args: &Args) -> i32 {
     let mut t = Table::new(CacheEffect::headers());
     t.row(eff.cells());
     t.print();
-    0
+    let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_serve.json");
+    match merge_bench_json(&path, &rows) {
+        Ok(()) => {
+            println!("bench rows updated in {}", path.display());
+            0
+        }
+        Err(e) => {
+            eprintln!("cfp bench-serve: could not write {}: {e}", path.display());
+            1
+        }
+    }
 }
 
-fn bench_serve_local(args: &Args, lines: &[String], clients: usize) -> (Vec<f64>, Json) {
-    let cfg = ServeConfig {
-        workers: clients,
-        plan_cache_entries: args.get_usize("plan-cache", 128),
-        cache_path: args.get_path("cache"),
-        cache_max_entries: args.get_usize_opt("cache-max-entries"),
-        search_threads: args.get_usize("threads", 1),
-    };
-    let svc = PlanService::new(cfg);
+/// Sort one lane's latencies, print the distribution, and push
+/// p50/p99/throughput rows for `BENCH_serve.json`.
+fn summarize_lane(
+    mode: &str,
+    mut lat_us: Vec<f64>,
+    wall: f64,
+    clients: usize,
+    rows: &mut Vec<JsonRow>,
+) {
+    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    let n = lat_us.len();
+    let thr = n as f64 / wall.max(1e-9);
+    println!("[{mode}] {n} requests, {clients} clients: {wall:.2}s wall, {thr:.1} req/s");
+    if n > 0 {
+        let q = |p: usize| lat_us[(n - 1) * p / 100];
+        println!(
+            "[{mode}] latency: min {}  p50 {}  p99 {}  max {}",
+            fmt_us(lat_us[0]),
+            fmt_us(q(50)),
+            fmt_us(q(99)),
+            fmt_us(lat_us[n - 1]),
+        );
+        for (metric, value, unit) in [
+            ("p50_us", q(50), "us"),
+            ("p99_us", q(99), "us"),
+            ("throughput", thr, "req_per_s"),
+        ] {
+            rows.push(JsonRow {
+                name: format!("bench_serve/{mode}/{metric}"),
+                layers: n,
+                ns_per_iter: value,
+                unit: Some(unit),
+                speedup: None,
+            });
+        }
+    }
+}
+
+fn bench_serve_local(svc: &PlanService, lines: &[String], clients: usize) -> Vec<f64> {
     let latencies = std::sync::Mutex::new(Vec::new());
     std::thread::scope(|s| {
         for c in 0..clients {
@@ -351,8 +443,7 @@ fn bench_serve_local(args: &Args, lines: &[String], clients: usize) -> (Vec<f64>
             });
         }
     });
-    let stats = svc.stats().to_json();
-    (latencies.into_inner().unwrap(), stats)
+    latencies.into_inner().unwrap()
 }
 
 fn bench_serve_tcp(

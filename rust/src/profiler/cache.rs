@@ -403,11 +403,11 @@ impl ProfileCache {
 /// A saver holding this lock is mid `read-merge-rename`, which is
 /// milliseconds of work on one JSON file — a lock untouched for this
 /// long belongs to a crashed process and is taken over.
-const LOCK_STALE: Duration = Duration::from_secs(10);
+pub(crate) const LOCK_STALE: Duration = Duration::from_secs(10);
 
 /// How long a saver waits for the lock before falling back to the
 /// lockless best-effort merge.
-const LOCK_WAIT: Duration = Duration::from_millis(500);
+pub(crate) const LOCK_WAIT: Duration = Duration::from_millis(500);
 
 /// Per-acquisition sequence number, making lock tokens unique within a
 /// process (the pid disambiguates across processes).
@@ -417,7 +417,7 @@ static LOCK_SEQ: AtomicU64 = AtomicU64::new(0);
 /// if the lock still carries this acquisition's token. A saver paused
 /// past the stale window may have been taken over; removing blindly
 /// would delete the new holder's lock.
-struct SaveLock {
+pub(crate) struct SaveLock {
     path: PathBuf,
     token: String,
 }
@@ -434,7 +434,7 @@ impl Drop for SaveLock {
 
 /// `<cache file>.lock` — a sibling, so it lives on the same filesystem
 /// (rename atomicity) and is found by every process sharing the cache.
-fn save_lock_path(target: &Path) -> PathBuf {
+pub(crate) fn save_lock_path(target: &Path) -> PathBuf {
     let mut name = target.file_name().unwrap_or_default().to_os_string();
     name.push(".lock");
     target.with_file_name(name)
@@ -451,7 +451,7 @@ fn save_lock_path(target: &Path) -> PathBuf {
 /// rename; losers just retry). Returns `None` on timeout or when the
 /// directory is unwritable — locking is best-effort, the caller falls
 /// back to the lockless merge.
-fn acquire_save_lock(target: &Path, stale: Duration, wait: Duration) -> Option<SaveLock> {
+pub(crate) fn acquire_save_lock(target: &Path, stale: Duration, wait: Duration) -> Option<SaveLock> {
     let lock = save_lock_path(target);
     if let Some(dir) = target.parent() {
         if !dir.as_os_str().is_empty() {
@@ -481,12 +481,7 @@ fn acquire_save_lock(target: &Path, stale: Duration, wait: Duration) -> Option<S
                     .and_then(|m| m.elapsed().ok())
                     .map_or(false, |age| age > stale);
                 if abandoned {
-                    // atomic claim of the stale file: rename to a name
-                    // unique to this attempt, then delete the carcass
-                    let aside = lock.with_extension(format!("stale.{token}"));
-                    if std::fs::rename(&lock, &aside).is_ok() {
-                        let _ = std::fs::remove_file(&aside);
-                    }
+                    claim_stale_lock(&lock, stale, &token);
                     continue;
                 }
             }
@@ -497,6 +492,43 @@ fn acquire_save_lock(target: &Path, stale: Duration, wait: Duration) -> Option<S
         }
         std::thread::sleep(Duration::from_millis(5));
     }
+}
+
+/// Claim a lock file whose mtime looked older than `stale`: rename it to
+/// a name unique to this attempt, then delete the carcass. Renaming is
+/// the atomic step — exactly one racer wins, losers just retry.
+///
+/// The staleness probe above and the rename here are not one atomic
+/// action, and that gap is a real race: the dead lock can be released
+/// and a *new* holder's fresh lock created at the same path in between,
+/// so the rename may have grabbed a live holder's lock. Deleting it
+/// anyway would unlock a mid-save critical section and let two savers
+/// run the read-merge-rename concurrently. So after winning the rename,
+/// re-check the mtime of what was actually grabbed: if it is fresh (or
+/// unreadable), put it back via `hard_link` — which fails rather than
+/// clobber if yet another racer already created a newer lock, in which
+/// case the fresh lock we grabbed is the one that lost a create_new race
+/// and the newer file is authoritative. Only a genuinely stale carcass
+/// is discarded. Returns whether a stale lock was actually cleared.
+fn claim_stale_lock(lock: &Path, stale: Duration, token: &str) -> bool {
+    let aside = lock.with_extension(format!("stale.{token}"));
+    if std::fs::rename(lock, &aside).is_err() {
+        return false; // another racer claimed it first
+    }
+    let still_stale = std::fs::metadata(&aside)
+        .and_then(|md| md.modified())
+        .ok()
+        .and_then(|m| m.elapsed().ok())
+        .map_or(false, |age| age > stale);
+    if still_stale {
+        let _ = std::fs::remove_file(&aside);
+        return true;
+    }
+    // grabbed a live holder's lock — restore it (or discard our copy if
+    // an even newer lock already took the path)
+    let _ = std::fs::hard_link(&aside, lock);
+    let _ = std::fs::remove_file(&aside);
+    false
 }
 
 // ------------------------------------------------------- shared-handle view
@@ -1105,6 +1137,74 @@ mod tests {
         let taken =
             acquire_save_lock(&target, Duration::from_millis(20), Duration::from_millis(200));
         assert!(taken.is_some(), "a stale lock must be taken over");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn dead_holder_lock_is_taken_over_and_double_release_is_harmless() {
+        // a holder that dies without unlinking: simulate by leaking the
+        // guard, so the lock file sits there with a real token in it
+        let dir = std::env::temp_dir().join(format!("cfp-cache-dead-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("profiles.json");
+        let lock_file = save_lock_path(&target);
+
+        let dead = acquire_save_lock(&target, LOCK_STALE, LOCK_WAIT).expect("uncontended");
+        let dead_path = dead.path.clone();
+        let dead_token = dead.token.clone();
+        std::mem::forget(dead); // the "crash": Drop never runs
+
+        // within the stale window the carcass is honored, not stolen
+        let early =
+            acquire_save_lock(&target, Duration::from_secs(10), Duration::from_millis(40));
+        assert!(early.is_none(), "fresh-looking carcass must not be stolen early");
+        assert!(lock_file.exists());
+
+        // past the stale window the takeover succeeds
+        std::thread::sleep(Duration::from_millis(30));
+        let new_holder =
+            acquire_save_lock(&target, Duration::from_millis(20), Duration::from_millis(200))
+                .expect("stale dead-holder lock must be taken over");
+
+        // the dead holder's guard resurfacing (e.g. a paused thread
+        // finally dropping) must not release the new holder's lock: the
+        // token check in Drop makes the double release a no-op
+        drop(SaveLock { path: dead_path, token: dead_token });
+        assert!(lock_file.exists(), "new holder's lock survives the dead guard's drop");
+
+        drop(new_holder);
+        assert!(!lock_file.exists(), "real holder still releases normally");
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn fresh_lock_survives_a_mistimed_stale_claim() {
+        // the takeover race: a racer probes staleness, the stale lock is
+        // cleared and a NEW holder acquires, and only then does the
+        // racer's rename land — grabbing the live lock. claim_stale_lock
+        // must detect the fresh mtime and put the lock back.
+        let dir = std::env::temp_dir().join(format!("cfp-cache-claim-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        let target = dir.join("profiles.json");
+        let lock_file = save_lock_path(&target);
+
+        let live = acquire_save_lock(&target, LOCK_STALE, LOCK_WAIT).expect("uncontended");
+        let body = std::fs::read_to_string(&lock_file).unwrap();
+        assert!(!claim_stale_lock(&lock_file, Duration::from_secs(10), "racer.0"));
+        assert!(lock_file.exists(), "live lock restored after the mistimed claim");
+        assert_eq!(
+            std::fs::read_to_string(&lock_file).unwrap(),
+            body,
+            "restored lock still carries the live holder's token"
+        );
+        drop(live);
+        assert!(!lock_file.exists(), "live holder's release still works");
+
+        // and a genuinely stale carcass is still cleared by the same path
+        std::fs::write(&lock_file, "99\n").unwrap();
+        std::thread::sleep(Duration::from_millis(30));
+        assert!(claim_stale_lock(&lock_file, Duration::from_millis(20), "racer.1"));
+        assert!(!lock_file.exists(), "stale carcass removed");
         std::fs::remove_dir_all(&dir).ok();
     }
 

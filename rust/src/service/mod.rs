@@ -29,23 +29,52 @@
 //!   overlapping segments reuse each other's profiles instead of
 //!   re-profiling (and persist across restarts with `--cache`).
 //!
+//! The production serving tier wraps that core in four layers:
+//!
+//! * **Lifecycle** — `accepting → draining → drained`. A
+//!   `{"type": "drain"}` admin request (or stdin EOF, the pure-std
+//!   SIGTERM equivalent) moves the service to *draining*: admission
+//!   stops with structured `draining` rejections, every in-flight
+//!   search finishes and is answered, state is flushed, and a
+//!   [`DrainReport`] summarizes the run. See [`PlanService::drain`].
+//! * **Persistent plan cache** (`--plan-cache-file`, [`plancache`]) —
+//!   the LRU plan map flushed through the `profiler::cache` lock-file +
+//!   atomic-rename machinery, so a warm restart serves byte-identical
+//!   plans with zero searches.
+//! * **Quotas and backpressure** ([`quota`]) — per-`client` token-bucket
+//!   admission (`--quota`/`--quota-burst`) plus a bounded pending queue
+//!   (`--max-pending`) that rejects with structured `overloaded`
+//!   responses instead of queueing without bound.
+//! * **Always-on telemetry** ([`telemetry`]) — per-request latency
+//!   histograms and stage-time samplers drained by a background
+//!   aggregator thread, surfaced in `stats` responses and the drain
+//!   report.
+//!
 //! Determinism contract: for any request, the served payload is
 //! byte-identical to what the one-shot CLI path produces for the same
-//! options — guarded by `rust/tests/integration_service.rs`. Counters
-//! (`requests`, `plan_hits`, `plan_misses`, `coalesced`, `searches`,
-//! `profile_hits`, `profile_misses`, `errors`) surface in every
-//! response's `cache` tag and in the `stats` request type.
+//! options — guarded by `rust/tests/integration_service.rs` and
+//! `integration_serve_faults.rs` (which extends the property across
+//! restarts). Counters (`requests`, `received`, `admitted`, `rejected`,
+//! `plan_hits`, `plan_misses`, `coalesced`, `searches`, `profile_hits`,
+//! `profile_misses`, `errors`) surface in every response's `cache` tag
+//! and in the `stats` request type, and reconcile exactly:
+//! `received == admitted + rejected + coalesced`.
 
+pub mod plancache;
+pub mod quota;
 pub mod request;
 mod server;
+pub mod telemetry;
 
 pub use request::{
     canonical_key, parse_request, pipeline_payload, plan_payload, PlanRequest, RequestKind,
 };
 pub use server::{shared_writer, SharedWriter};
+pub use telemetry::{Histogram, Snapshot, Telemetry};
 
 use std::collections::{BTreeMap, HashMap};
 use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::AtomicUsize;
 use std::sync::{Arc, Condvar, Mutex, MutexGuard};
 
 use crate::coordinator::{
@@ -53,6 +82,8 @@ use crate::coordinator::{
 };
 use crate::profiler::SharedProfileCache;
 use crate::util::{Json, ThreadPool};
+
+use quota::QuotaGate;
 
 /// `cfp serve` configuration (all CLI flags of the subcommand).
 #[derive(Clone, Debug)]
@@ -68,6 +99,17 @@ pub struct ServeConfig {
     /// profiling threads per search (`--threads`) — a service-level
     /// knob, deliberately not requestable per request
     pub search_threads: usize,
+    /// persistent plan-cache file (`--plan-cache-file`): loaded at
+    /// startup, flushed after every search and at drain, so plans
+    /// survive restarts
+    pub plan_cache_file: Option<std::path::PathBuf>,
+    /// per-client token-bucket admission as `(rate_per_s, burst)`
+    /// (`--quota`/`--quota-burst`); `None` admits everything
+    pub quota: Option<(f64, f64)>,
+    /// bound on requests queued ahead of the worker pool
+    /// (`--max-pending`); past it plan work is rejected `overloaded`
+    /// inline instead of queueing without bound; 0 disables the gate
+    pub max_pending: usize,
 }
 
 impl Default for ServeConfig {
@@ -78,6 +120,29 @@ impl Default for ServeConfig {
             cache_path: None,
             cache_max_entries: None,
             search_threads: 1,
+            plan_cache_file: None,
+            quota: None,
+            max_pending: 1024,
+        }
+    }
+}
+
+/// Where the service is in its life. Admission is only open in
+/// `Accepting`; `drain` moves through `Draining` (finish in-flight,
+/// flush) to `Drained` (terminal).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Lifecycle {
+    Accepting,
+    Draining,
+    Drained,
+}
+
+impl Lifecycle {
+    pub fn as_str(self) -> &'static str {
+        match self {
+            Lifecycle::Accepting => "accepting",
+            Lifecycle::Draining => "draining",
+            Lifecycle::Drained => "drained",
         }
     }
 }
@@ -87,6 +152,20 @@ impl Default for ServeConfig {
 #[derive(Clone, Debug, Default, PartialEq, Eq)]
 pub struct ServiceStats {
     pub requests: u64,
+    /// plan/pipeline requests that reached admission (valid requests;
+    /// parse/validation failures never get here)
+    pub received: u64,
+    /// requests admitted past the lifecycle and quota gates that were
+    /// answered by a cache hit or by leading a search;
+    /// `received == admitted + rejected + coalesced` always
+    pub admitted: u64,
+    /// requests refused with a structured rejection (`reason` field);
+    /// `rejected == rejected_overload + rejected_draining`
+    pub rejected: u64,
+    /// rejections from the quota gate or the bounded pending queue
+    pub rejected_overload: u64,
+    /// rejections because the service was draining/drained
+    pub rejected_draining: u64,
     /// answered from the plan cache without planning
     pub plan_hits: u64,
     /// requests that claimed a flight (each runs one search)
@@ -114,6 +193,11 @@ impl ServiceStats {
     pub fn to_json(&self) -> Json {
         Json::obj(vec![
             ("requests", Json::num(self.requests as f64)),
+            ("received", Json::num(self.received as f64)),
+            ("admitted", Json::num(self.admitted as f64)),
+            ("rejected", Json::num(self.rejected as f64)),
+            ("rejected_overload", Json::num(self.rejected_overload as f64)),
+            ("rejected_draining", Json::num(self.rejected_draining as f64)),
             ("plan_hits", Json::num(self.plan_hits as f64)),
             ("plan_misses", Json::num(self.plan_misses as f64)),
             ("coalesced", Json::num(self.coalesced as f64)),
@@ -144,6 +228,12 @@ struct PlanState {
     /// searches currently running, by canonical key
     inflight: HashMap<String, Arc<Flight>>,
     stats: ServiceStats,
+    lifecycle: Lifecycle,
+    /// admitted plan/pipeline requests between admission and response —
+    /// what `drain` waits to reach zero
+    active_plans: usize,
+    /// per-client token buckets (`None` admits everything)
+    quota: Option<QuotaGate>,
 }
 
 struct ServiceInner {
@@ -151,6 +241,13 @@ struct ServiceInner {
     profiles: SharedProfileCache,
     state: Mutex<PlanState>,
     pool: ThreadPool,
+    telemetry: Telemetry,
+    /// paired with `state`: signaled when `active_plans`/`inflight`
+    /// shrink or the lifecycle advances
+    quiesced: Condvar,
+    /// requests dispatched to the pool but not yet answered — the
+    /// bounded pending queue's gauge (see `server.rs`)
+    pending: AtomicUsize,
     /// test instrumentation — see [`PlanService::set_search_hook`]
     hook: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
 }
@@ -170,17 +267,43 @@ impl PlanService {
         };
         profiles.set_max_entries(cfg.cache_max_entries);
         let pool = ThreadPool::new(cfg.workers.max(1));
+        // warm start: a persisted plan cache makes every plan it holds a
+        // zero-search hit. A missing/torn/mismatched file loads as
+        // nothing at all (plancache::load) — a restart can cost
+        // re-searching, never a wrong plan.
+        let (mut plans, mut clock) = (BTreeMap::new(), 0u64);
+        if cfg.plan_cache_entries > 0 {
+            if let Some(path) = &cfg.plan_cache_file {
+                if let Some((loaded, loaded_clock)) = plancache::load(path) {
+                    plans = loaded;
+                    clock = loaded_clock;
+                    while plans.len() > cfg.plan_cache_entries {
+                        let lru =
+                            plans.iter().min_by_key(|(_, v)| v.1).map(|(k, _)| k.clone());
+                        let Some(k) = lru else { break };
+                        plans.remove(&k);
+                    }
+                }
+            }
+        }
+        let gate = cfg.quota.map(|(rate, burst)| QuotaGate::new(rate, burst));
         PlanService {
             inner: Arc::new(ServiceInner {
                 cfg,
                 profiles,
                 state: Mutex::new(PlanState {
-                    plans: BTreeMap::new(),
-                    clock: 0,
+                    plans,
+                    clock,
                     inflight: HashMap::new(),
                     stats: ServiceStats::default(),
+                    lifecycle: Lifecycle::Accepting,
+                    active_plans: 0,
+                    quota: gate,
                 }),
                 pool,
+                telemetry: Telemetry::start(),
+                quiesced: Condvar::new(),
+                pending: AtomicUsize::new(0),
                 hook: Mutex::new(None),
             }),
         }
@@ -189,8 +312,16 @@ impl PlanService {
     /// Handle one NDJSON request line synchronously and return the
     /// response line (no trailing newline). Never panics: parse errors,
     /// invalid options, and planner panics all become structured error
-    /// responses.
+    /// responses. Every line's wall-clock is recorded into the latency
+    /// histogram of its outcome stream.
     pub fn handle_line(&self, line: &str) -> String {
+        let t0 = std::time::Instant::now();
+        let (resp, stream) = self.dispatch(line);
+        self.inner.telemetry.record_latency(stream, t0.elapsed().as_micros() as u64);
+        resp
+    }
+
+    fn dispatch(&self, line: &str) -> (String, &'static str) {
         self.lock_state().stats.requests += 1;
         let req = match request::parse_request(line) {
             Ok(r) => r,
@@ -198,31 +329,37 @@ impl PlanService {
                 // best-effort id echo so clients matching responses by id
                 // can attribute the failure (line must still be JSON)
                 let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
-                return self.error_response(id.as_ref(), None, &e);
+                return (self.error_response(id.as_ref(), None, &e), "error");
             }
         };
-        if req.kind == RequestKind::Stats {
-            let stats = self.stats();
-            return envelope(req.id.as_ref(), RequestKind::Stats, None, &stats.to_json());
+        match req.kind {
+            RequestKind::Stats => {
+                let payload = self.stats_payload();
+                (envelope(req.id.as_ref(), RequestKind::Stats, None, &payload), "stats")
+            }
+            RequestKind::Drain => {
+                let report = self.drain();
+                (envelope(req.id.as_ref(), RequestKind::Drain, None, &report.to_json()), "drain")
+            }
+            RequestKind::Plan | RequestKind::Pipeline => self.handle_plan(req),
         }
-        self.handle_plan(req)
     }
 
-    fn handle_plan(&self, req: PlanRequest) -> String {
+    fn handle_plan(&self, req: PlanRequest) -> (String, &'static str) {
         let built = match CfpOptions::from_args(&req.args, req.kind.planner()) {
             Ok(b) => b,
-            Err(e) => return self.error_response(req.id.as_ref(), None, &e),
+            Err(e) => return (self.error_response(req.id.as_ref(), None, &e), "error"),
         };
         if !built.warnings.is_empty() {
             // the CLI warns, falls back to defaults, and proceeds; a
             // server must never silently reinterpret a request, so the
             // same findings reject it outright
             let msg = format!("invalid request: {}", built.warnings.join("; "));
-            return self.error_response(req.id.as_ref(), None, &msg);
+            return (self.error_response(req.id.as_ref(), None, &msg), "error");
         }
         if req.kind == RequestKind::Pipeline {
             if let Err(e) = validate_pipeline_args(&req.args, &built.opts) {
-                return self.error_response(req.id.as_ref(), None, &e);
+                return (self.error_response(req.id.as_ref(), None, &e), "error");
             }
         }
         let mut opts = built.opts;
@@ -233,10 +370,47 @@ impl PlanService {
         opts.cache_path = None;
         opts.cache_max_entries = None;
         let key = request::canonical_key(req.kind, &opts);
+        // admission: one lock hold makes the lifecycle gate, the quota
+        // charge, and the in-flight accounting a single atomic decision
+        let client = req.client.as_deref().unwrap_or("");
+        {
+            let mut guard = self.lock_state();
+            let st = &mut *guard;
+            st.stats.received += 1;
+            if st.lifecycle != Lifecycle::Accepting {
+                st.stats.rejected += 1;
+                st.stats.rejected_draining += 1;
+                let resp = reject_response(
+                    req.id.as_ref(),
+                    "draining",
+                    "service is draining; new requests are not accepted",
+                );
+                return (resp, "rejected");
+            }
+            if let Some(gate) = st.quota.as_mut() {
+                if !gate.admit(client) {
+                    st.stats.rejected += 1;
+                    st.stats.rejected_overload += 1;
+                    let resp = reject_response(
+                        req.id.as_ref(),
+                        "overloaded",
+                        &format!("client {client:?} is over its admission quota; retry later"),
+                    );
+                    return (resp, "rejected");
+                }
+            }
+            st.active_plans += 1;
+        }
         let (payload, tag) = self.get_or_compute(&key, req.kind, &opts);
+        {
+            let mut st = self.lock_state();
+            st.active_plans -= 1;
+            // a drain may be waiting for the in-flight count to reach 0
+            self.inner.quiesced.notify_all();
+        }
         match payload {
-            Ok(p) => envelope(req.id.as_ref(), req.kind, Some(tag), &p),
-            Err(e) => self.error_response(req.id.as_ref(), Some(tag), &e),
+            Ok(p) => (envelope(req.id.as_ref(), req.kind, Some(tag), &p), req.kind.as_str()),
+            Err(e) => (self.error_response(req.id.as_ref(), Some(tag), &e), "error"),
         }
     }
 
@@ -262,12 +436,14 @@ impl PlanService {
             if let Some(entry) = st.plans.get_mut(key) {
                 entry.1 = clock;
                 st.stats.plan_hits += 1;
+                st.stats.admitted += 1;
                 Role::Hit(entry.0.clone())
             } else if let Some(flight) = st.inflight.get(key) {
                 st.stats.coalesced += 1;
                 Role::Wait(flight.clone())
             } else {
                 st.stats.plan_misses += 1;
+                st.stats.admitted += 1;
                 let flight = Arc::new(Flight { slot: Mutex::new(None), done: Condvar::new() });
                 st.inflight.insert(key.to_string(), flight.clone());
                 Role::Lead(flight)
@@ -302,6 +478,8 @@ impl PlanService {
                     let mut guard = self.lock_state();
                     let st = &mut *guard;
                     st.inflight.remove(key);
+                    // a drain may be waiting for in-flight searches
+                    self.inner.quiesced.notify_all();
                     if let Ok(p) = &payload {
                         if self.inner.cfg.plan_cache_entries > 0 {
                             st.clock += 1;
@@ -319,12 +497,14 @@ impl PlanService {
                     }
                 }
                 // durability for a long-running daemon: persist freshly
-                // profiled segments after every search (no-op without a
-                // backing file; failure is logged, never fatal)
+                // profiled segments and freshly planned payloads after
+                // every search (no-ops without backing files; failure is
+                // logged, never fatal)
                 if payload.is_ok() {
                     if let Err(e) = self.inner.profiles.save() {
                         eprintln!("cfp serve: could not persist profile cache: {e}");
                     }
+                    self.save_plan_cache();
                 }
                 (payload, "miss")
             }
@@ -340,6 +520,12 @@ impl PlanService {
                     r.db.stats.cache_misses,
                     r.timings.compose_search_s * 1e6,
                 );
+                self.inner
+                    .telemetry
+                    .record_stage("profiling_us", (r.timings.metrics_profiling_s * 1e6).max(0.0));
+                self.inner
+                    .telemetry
+                    .record_stage("analysis_us", (r.timings.analysis_passes_s * 1e6).max(0.0));
                 request::plan_payload(&r)
             }
             RequestKind::Pipeline => {
@@ -347,15 +533,20 @@ impl PlanService {
                 self.absorb_search_stats(r.profile_hits, r.profile_misses, r.search_us);
                 request::pipeline_payload(&r)
             }
-            RequestKind::Stats => unreachable!("stats requests are answered without planning"),
+            RequestKind::Stats | RequestKind::Drain => {
+                unreachable!("admin requests are answered without planning")
+            }
         }
     }
 
     fn absorb_search_stats(&self, hits: usize, misses: usize, search_us: f64) {
-        let mut st = self.lock_state();
-        st.stats.profile_hits += hits as u64;
-        st.stats.profile_misses += misses as u64;
-        st.stats.search_us += search_us.max(0.0) as u64;
+        {
+            let mut st = self.lock_state();
+            st.stats.profile_hits += hits as u64;
+            st.stats.profile_misses += misses as u64;
+            st.stats.search_us += search_us.max(0.0) as u64;
+        }
+        self.inner.telemetry.record_stage("search_us", search_us.max(0.0));
     }
 
     fn error_response(&self, id: Option<&Json>, tag: Option<&'static str>, msg: &str) -> String {
@@ -375,6 +566,57 @@ impl PlanService {
         self.lock_state().stats.clone()
     }
 
+    /// The `stats` response body: the counters plus the lifecycle state
+    /// and a telemetry snapshot.
+    fn stats_payload(&self) -> Json {
+        let (stats, lifecycle) = {
+            let st = self.lock_state();
+            (st.stats.clone(), st.lifecycle)
+        };
+        annotate(stats.to_json(), lifecycle, &self.inner.telemetry.snapshot())
+    }
+
+    /// Current lifecycle state.
+    pub fn lifecycle(&self) -> Lifecycle {
+        self.lock_state().lifecycle
+    }
+
+    /// Drain the service: stop admitting plan work (structured
+    /// `draining` rejections), wait for every in-flight search to finish
+    /// and answer, flush the profile and plan caches, and report.
+    /// Idempotent — concurrent and repeated drains all block until the
+    /// service is quiesced and return the same-shaped report. `stats`
+    /// and further `drain` requests keep working after the drain.
+    pub fn drain(&self) -> DrainReport {
+        {
+            let mut st = self.lock_state();
+            if st.lifecycle == Lifecycle::Accepting {
+                st.lifecycle = Lifecycle::Draining;
+            }
+            // every request admitted before the gate closed still gets
+            // its answer: wait for admitted work and in-flight searches
+            while st.active_plans > 0 || !st.inflight.is_empty() {
+                st = self.inner.quiesced.wait(st).unwrap_or_else(|e| e.into_inner());
+            }
+        }
+        // flush outside the state lock — savers take their own file locks
+        self.flush();
+        let telemetry = self.inner.telemetry.snapshot();
+        let mut st = self.lock_state();
+        st.lifecycle = Lifecycle::Drained;
+        self.inner.quiesced.notify_all();
+        DrainReport { stats: st.stats.clone(), telemetry }
+    }
+
+    /// Block until a drain (triggered elsewhere: admin request, stdin
+    /// EOF) has fully completed.
+    pub fn wait_drained(&self) {
+        let mut st = self.lock_state();
+        while st.lifecycle != Lifecycle::Drained {
+            st = self.inner.quiesced.wait(st).unwrap_or_else(|e| e.into_inner());
+        }
+    }
+
     /// The process-wide profile cache every search shares.
     pub fn profile_cache(&self) -> &SharedProfileCache {
         &self.inner.profiles
@@ -383,6 +625,48 @@ impl PlanService {
     /// Persist the shared profile cache (also done after every search).
     pub fn save(&self) -> std::io::Result<()> {
         self.inner.profiles.save()
+    }
+
+    /// Persist both caches (profile + plan); failures are logged, never
+    /// fatal — persistence is an optimization, correctness never
+    /// depends on it.
+    fn flush(&self) {
+        if let Err(e) = self.inner.profiles.save() {
+            eprintln!("cfp serve: could not persist profile cache: {e}");
+        }
+        self.save_plan_cache();
+    }
+
+    fn save_plan_cache(&self) {
+        let Some(path) = &self.inner.cfg.plan_cache_file else { return };
+        let (plans, clock) = {
+            let st = self.lock_state();
+            (st.plans.clone(), st.clock)
+        };
+        if let Err(e) = plancache::save(path, &plans, clock, self.inner.cfg.plan_cache_entries) {
+            eprintln!("cfp serve: could not persist plan cache: {e}");
+        }
+    }
+
+    /// The bounded-pending-queue rejection path, used by `serve_stream`
+    /// when the pool's backlog exceeds `max_pending`: plan/pipeline work
+    /// is refused inline with a structured `overloaded` response;
+    /// admin requests (`stats`, `drain`) and unparseable lines return
+    /// `None` and are dispatched normally — backpressure must never
+    /// block the operator's view or the drain path.
+    fn reject_overloaded_line(&self, line: &str) -> Option<String> {
+        let req = request::parse_request(line).ok()?;
+        if !matches!(req.kind, RequestKind::Plan | RequestKind::Pipeline) {
+            return None;
+        }
+        {
+            let mut st = self.lock_state();
+            st.stats.requests += 1;
+            st.stats.received += 1;
+            st.stats.rejected += 1;
+            st.stats.rejected_overload += 1;
+        }
+        Some(reject_response(req.id.as_ref(), "overloaded", "pending queue is full; retry later"))
     }
 
     /// Test instrumentation: run `hook` on the single-flight leader
@@ -415,6 +699,63 @@ fn envelope(id: Option<&Json>, kind: RequestKind, tag: Option<&str>, result: &Js
         pairs.push(("id", id.clone()));
     }
     Json::obj(pairs).to_string()
+}
+
+/// Structured rejection: `ok: false` with a machine-readable `reason`
+/// (`draining` | `overloaded`). Distinct from [`PlanService::error_response`]
+/// — a rejection is the service refusing valid work, not the request
+/// being wrong, so it does not count as an error.
+fn reject_response(id: Option<&Json>, reason: &str, msg: &str) -> String {
+    let mut pairs = vec![
+        ("ok", Json::Bool(false)),
+        ("error", Json::str(msg)),
+        ("reason", Json::str(reason)),
+    ];
+    if let Some(id) = id {
+        pairs.push(("id", id.clone()));
+    }
+    Json::obj(pairs).to_string()
+}
+
+/// Extend a counters object with the lifecycle state and a telemetry
+/// snapshot (the shared body of `stats` responses and drain reports).
+fn annotate(stats: Json, lifecycle: Lifecycle, telemetry: &Snapshot) -> Json {
+    let mut m = match stats {
+        Json::Obj(m) => m,
+        other => return other,
+    };
+    m.insert("lifecycle".to_string(), Json::str(lifecycle.as_str()));
+    m.insert("telemetry".to_string(), telemetry.to_json());
+    Json::Obj(m)
+}
+
+/// What a completed drain hands back: the final counters and the full
+/// telemetry picture of the run.
+#[derive(Clone, Debug)]
+pub struct DrainReport {
+    pub stats: ServiceStats,
+    pub telemetry: Snapshot,
+}
+
+impl DrainReport {
+    pub fn to_json(&self) -> Json {
+        annotate(self.stats.to_json(), Lifecycle::Drained, &self.telemetry)
+    }
+
+    /// One human-readable line for stderr at process exit.
+    pub fn summary_line(&self) -> String {
+        let s = &self.stats;
+        let (p50, p99) = self
+            .telemetry
+            .latency
+            .get("plan")
+            .map_or((0, 0), |h| (h.quantile(0.5), h.quantile(0.99)));
+        format!(
+            "cfp serve: drained — {} requests ({} admitted, {} rejected, {} coalesced), \
+             {} searches ({} µs searching), plan latency p50 {p50} µs p99 {p99} µs",
+            s.requests, s.admitted, s.rejected, s.coalesced, s.searches, s.search_us
+        )
+    }
 }
 
 fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
@@ -512,5 +853,125 @@ mod tests {
         // ...but the profile cache still makes the re-plan warm
         let s = svc.stats();
         assert!(s.profile_hits > 0, "re-planning reuses shared profiles");
+    }
+
+    fn reconciles(s: &ServiceStats) {
+        assert_eq!(
+            s.received,
+            s.admitted + s.rejected + s.coalesced,
+            "admission counters must reconcile exactly: {s:?}"
+        );
+        assert_eq!(s.rejected, s.rejected_overload + s.rejected_draining, "{s:?}");
+        assert_eq!(s.admitted, s.plan_hits + s.plan_misses, "{s:?}");
+    }
+
+    #[test]
+    fn drain_quiesces_rejects_new_work_and_is_idempotent() {
+        let svc = PlanService::new(tiny());
+        svc.handle_line(line());
+        assert_eq!(svc.lifecycle(), Lifecycle::Accepting);
+        let report = svc.drain();
+        assert_eq!(svc.lifecycle(), Lifecycle::Drained);
+        assert_eq!(report.stats.admitted, 1);
+        assert_eq!(report.stats.rejected, 0);
+        assert!(report.telemetry.latency.contains_key("plan"), "latency was recorded");
+        assert!(report.summary_line().contains("drained"));
+
+        // new plan work is refused with a structured `draining` reason,
+        // and is a rejection, not an error
+        let resp = Json::parse(&svc.handle_line(line())).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(resp.get("reason").and_then(Json::as_str), Some("draining"));
+        let s = svc.stats();
+        assert_eq!((s.rejected, s.rejected_draining, s.errors), (1, 1, 0));
+        reconciles(&s);
+
+        // admin requests still work; a second drain returns, not hangs
+        let stats_resp = Json::parse(&svc.handle_line("{\"type\": \"stats\"}")).unwrap();
+        assert_eq!(
+            stats_resp.get("result").unwrap().get("lifecycle").and_then(Json::as_str),
+            Some("drained")
+        );
+        let again = Json::parse(&svc.handle_line("{\"type\": \"drain\"}")).unwrap();
+        assert_eq!(again.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(again.get("kind").and_then(Json::as_str), Some("drain"));
+    }
+
+    #[test]
+    fn greedy_client_is_throttled_while_quiet_client_succeeds() {
+        // a near-zero refill rate makes the outcome deterministic: each
+        // client has exactly its burst of 2 tokens for the whole test
+        let svc = PlanService::new(ServeConfig {
+            workers: 2,
+            quota: Some((0.001, 2.0)),
+            ..ServeConfig::default()
+        });
+        let req = |client: &str, n: usize| {
+            format!(
+                "{{\"id\": {n}, \"type\": \"plan\", \"model\": \"gpt-tiny\", \
+                 \"client\": \"{client}\"}}"
+            )
+        };
+        let mut greedy_ok = 0;
+        let mut greedy_overloaded = 0;
+        for n in 0..5 {
+            let resp = Json::parse(&svc.handle_line(&req("greedy", n))).unwrap();
+            match resp.get("reason").and_then(Json::as_str) {
+                Some("overloaded") => greedy_overloaded += 1,
+                None => {
+                    assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+                    greedy_ok += 1;
+                }
+                other => panic!("unexpected reason {other:?}"),
+            }
+        }
+        assert_eq!((greedy_ok, greedy_overloaded), (2, 3), "burst=2 admits exactly 2");
+        // the quiet client's bucket is untouched by greedy's overload
+        for n in 0..2 {
+            let resp = Json::parse(&svc.handle_line(&req("quiet", n))).unwrap();
+            assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true), "quiet req {n}");
+        }
+        let s = svc.stats();
+        assert_eq!(s.received, 7);
+        assert_eq!(s.admitted, 4);
+        assert_eq!((s.rejected, s.rejected_overload), (3, 3));
+        assert_eq!(s.errors, 0, "rejections are not errors");
+        reconciles(&s);
+    }
+
+    #[test]
+    fn stats_payload_carries_lifecycle_and_telemetry() {
+        let svc = PlanService::new(tiny());
+        svc.handle_line(line());
+        let resp = Json::parse(&svc.handle_line("{\"type\": \"stats\"}")).unwrap();
+        let r = resp.get("result").unwrap();
+        assert_eq!(r.get("lifecycle").and_then(Json::as_str), Some("accepting"));
+        let plan_hist = r.get("telemetry").unwrap().get("latency").unwrap().get("plan");
+        let plan_hist = plan_hist.expect("plan latency stream present");
+        assert_eq!(plan_hist.get("count").and_then(Json::as_u64), Some(1));
+        assert!(plan_hist.get("p50_us").is_some());
+        let stages = r.get("telemetry").unwrap().get("stages").unwrap();
+        assert!(
+            stages.get("search_us").is_some(),
+            "stage samplers are drained by the aggregator: {stages:?}"
+        );
+        // counter fields stay top-level (back-compat with PR 4 clients)
+        assert_eq!(r.get("received").and_then(Json::as_u64), Some(1));
+        assert_eq!(r.get("admitted").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn queue_gate_rejects_only_plan_work() {
+        let svc = PlanService::new(tiny());
+        let rej = svc.reject_overloaded_line(line()).expect("plan work is rejectable");
+        let j = Json::parse(&rej).unwrap();
+        assert_eq!(j.get("reason").and_then(Json::as_str), Some("overloaded"));
+        assert_eq!(j.get("id").and_then(Json::as_i64), Some(1), "id echoed");
+        assert!(svc.reject_overloaded_line("{\"type\": \"stats\"}").is_none());
+        assert!(svc.reject_overloaded_line("{\"type\": \"drain\"}").is_none());
+        assert!(svc.reject_overloaded_line("{not json").is_none());
+        let s = svc.stats();
+        assert_eq!((s.received, s.rejected_overload), (1, 1));
+        reconciles(&s);
     }
 }

@@ -1,0 +1,222 @@
+//! Persistent plan cache: the serve tier's in-memory LRU plan map,
+//! flushed to disk so a restart serves byte-identical plans with zero
+//! searches.
+//!
+//! The file reuses the `profiler::cache` durability machinery — the
+//! sibling `.lock` protocol against concurrent savers and the
+//! `tmp.{pid}` + atomic-rename write — and the same invalidation
+//! philosophy: entries are keyed by the engine-aware canonical request
+//! key (`request::canonical_key`), so any semantic change to planning
+//! inputs changes the key, and a [`PLAN_CACHE_VERSION`] bump discards
+//! the file wholesale. A cache can only ever cost a re-search, never a
+//! wrong plan: *any* malformed byte — torn write, truncation, a single
+//! corrupt entry — discards the whole file (`load` returns `None`)
+//! rather than trusting the readable remainder.
+//!
+//! Format (version 1), one JSON object:
+//!
+//! ```json
+//! {"version": 1, "clock": 17,
+//!  "plans": [{"key": "plan|gpt-tiny...|dp", "stamp": 9, "payload": {...}}]}
+//! ```
+//!
+//! `stamp` is the in-memory LRU clock value at last touch; persisting it
+//! keeps eviction order stable across restarts. Payloads are stored as
+//! parsed JSON but served as `Arc<Json>` re-rendered through the same
+//! sorted-key writer that produced them, so a warm restart's response
+//! bytes are identical to the run that populated the file.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::profiler::cache::{acquire_save_lock, LOCK_STALE, LOCK_WAIT};
+use crate::util::Json;
+
+/// Bump to discard every persisted plan wholesale on format or planner
+/// semantics changes that the canonical key cannot express.
+pub const PLAN_CACHE_VERSION: i64 = 1;
+
+/// The serve tier's plan map: canonical key → (payload, LRU stamp).
+pub type PlanMap = BTreeMap<String, (Arc<Json>, u64)>;
+
+/// Read a plan-cache file. `None` means "no usable cache" — missing
+/// file, version mismatch, or corruption anywhere in it; the caller
+/// starts cold and re-searches, which is always safe.
+pub fn load(path: &Path) -> Option<(PlanMap, u64)> {
+    let text = std::fs::read_to_string(path).ok()?;
+    parse(&text)
+}
+
+fn parse(text: &str) -> Option<(PlanMap, u64)> {
+    let doc = Json::parse(text).ok()?;
+    if doc.get("version")?.as_i64()? != PLAN_CACHE_VERSION {
+        return None;
+    }
+    let mut clock = doc.get("clock")?.as_u64()?;
+    let mut plans = PlanMap::new();
+    for entry in doc.get("plans")?.as_arr()? {
+        let key = entry.get("key")?.as_str()?;
+        let stamp = entry.get("stamp")?.as_u64()?;
+        let payload = entry.get("payload")?;
+        if key.is_empty() || payload.as_obj().is_none() {
+            return None; // plan payloads are always objects; anything else is corruption
+        }
+        clock = clock.max(stamp);
+        plans.insert(key.to_string(), (Arc::new(payload.clone()), stamp));
+    }
+    Some((plans, clock))
+}
+
+/// Flush the plan map: lock, read-merge with whatever another server
+/// already persisted (our entries win on key conflict — payloads for
+/// one canonical key are bit-identical by the determinism invariant),
+/// evict to `max_entries` by smallest stamp, write `tmp.{pid}`, rename.
+pub fn save(path: &Path, plans: &PlanMap, clock: u64, max_entries: usize) -> std::io::Result<()> {
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)?;
+        }
+    }
+    let _lock = acquire_save_lock(path, LOCK_STALE, LOCK_WAIT);
+    let mut merged = plans.clone();
+    let mut clock = clock;
+    if let Some((disk, disk_clock)) = load(path) {
+        for (k, v) in disk {
+            merged.entry(k).or_insert(v);
+        }
+        clock = clock.max(disk_clock);
+    }
+    if max_entries > 0 {
+        while merged.len() > max_entries {
+            let lru = merged.iter().min_by_key(|(_, (_, stamp))| *stamp).map(|(k, _)| k.clone());
+            match lru {
+                Some(k) => merged.remove(&k),
+                None => break,
+            };
+        }
+    }
+    let entries: Vec<Json> = merged
+        .iter()
+        .map(|(k, (payload, stamp))| {
+            Json::obj(vec![
+                ("key", Json::str(k.as_str())),
+                ("stamp", Json::num(*stamp as f64)),
+                ("payload", (**payload).clone()),
+            ])
+        })
+        .collect();
+    let doc = Json::obj(vec![
+        ("version", Json::num(PLAN_CACHE_VERSION as f64)),
+        ("clock", Json::num(clock as f64)),
+        ("plans", Json::Arr(entries)),
+    ]);
+    let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
+    std::fs::write(&tmp, doc.to_string())?;
+    std::fs::rename(&tmp, path)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn payload(marker: f64) -> Arc<Json> {
+        Arc::new(Json::obj(vec![
+            ("kind", Json::str("plan")),
+            ("time_us", Json::num(marker)),
+        ]))
+    }
+
+    fn tmp_file(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("cfp-plancache-{tag}-{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join("plans.json")
+    }
+
+    #[test]
+    fn round_trip_preserves_payload_bytes_stamps_and_clock() {
+        let path = tmp_file("rt");
+        let mut plans = PlanMap::new();
+        plans.insert("k1".into(), (payload(12.0), 3));
+        plans.insert("k2".into(), (payload(7.5), 9));
+        save(&path, &plans, 9, 0).unwrap();
+        let (loaded, clock) = load(&path).expect("round trip");
+        assert_eq!(clock, 9);
+        assert_eq!(loaded.len(), 2);
+        for (k, (p, stamp)) in &plans {
+            let (lp, lstamp) = &loaded[k];
+            assert_eq!(lstamp, stamp, "stamp for {k}");
+            assert_eq!(lp.to_string(), p.to_string(), "payload bytes for {k}");
+        }
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn torn_file_is_discarded_wholesale() {
+        let path = tmp_file("torn");
+        let mut plans = PlanMap::new();
+        plans.insert("k1".into(), (payload(1.0), 1));
+        plans.insert("k2".into(), (payload(2.0), 2));
+        save(&path, &plans, 2, 0).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        // truncate mid-document: a torn write must invalidate everything,
+        // including the entries whose bytes are still intact
+        std::fs::write(&path, &full[..full.len() / 2]).unwrap();
+        assert!(load(&path).is_none(), "torn file must not load partially");
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn version_mismatch_discards_wholesale() {
+        let path = tmp_file("ver");
+        std::fs::write(
+            &path,
+            r#"{"version": 99, "clock": 1, "plans": [{"key": "k", "stamp": 1, "payload": {}}]}"#,
+        )
+        .unwrap();
+        assert!(load(&path).is_none());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn single_malformed_entry_discards_wholesale() {
+        let path = tmp_file("entry");
+        // valid JSON overall, but one entry's payload is not an object —
+        // never serve the "good" siblings of corrupt data
+        std::fs::write(
+            &path,
+            concat!(
+                r#"{"version": 1, "clock": 2, "plans": ["#,
+                r#"{"key": "good", "stamp": 1, "payload": {"kind": "plan"}}, "#,
+                r#"{"key": "bad", "stamp": 2, "payload": 42}]}"#,
+            ),
+        )
+        .unwrap();
+        assert!(load(&path).is_none());
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+
+    #[test]
+    fn save_merges_with_a_concurrent_writer_and_evicts_lru() {
+        let path = tmp_file("merge");
+        let mut a = PlanMap::new();
+        a.insert("a".into(), (payload(1.0), 5));
+        save(&path, &a, 5, 0).unwrap();
+        // a second server persists its own map to the same file
+        let mut b = PlanMap::new();
+        b.insert("b".into(), (payload(2.0), 8));
+        save(&path, &b, 8, 0).unwrap();
+        let (merged, clock) = load(&path).unwrap();
+        assert_eq!(merged.len(), 2, "read-merge keeps the other writer's entries");
+        assert_eq!(clock, 8);
+        // a capped save evicts the smallest stamp
+        let mut c = PlanMap::new();
+        c.insert("c".into(), (payload(3.0), 9));
+        save(&path, &c, 9, 2).unwrap();
+        let (capped, _) = load(&path).unwrap();
+        assert_eq!(capped.len(), 2);
+        assert!(!capped.contains_key("a"), "stamp-5 entry was the LRU victim");
+        assert!(capped.contains_key("b") && capped.contains_key("c"));
+        std::fs::remove_dir_all(path.parent().unwrap()).ok();
+    }
+}

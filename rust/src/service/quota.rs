@@ -1,0 +1,180 @@
+//! Per-client admission control: token-bucket quotas keyed by the
+//! optional `client` field of a serve request.
+//!
+//! Buckets are classic leaky tokens — `rate_per_s` tokens accrue per
+//! second up to a `burst` cap, one token admits one plan/pipeline
+//! request — and refill arithmetic runs on integer microsecond
+//! timestamps so the same request trace admits the same prefix on every
+//! run ([`TokenBucket::try_admit`] is a pure function of `(state,
+//! now_us)`). `stats`/`drain` admin requests are never charged; a
+//! request refused here gets a structured `overloaded` rejection, not a
+//! dropped connection.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+/// One client's token bucket. Starts full (a quiet client can always
+/// burst up to `burst` requests immediately).
+#[derive(Clone, Debug)]
+pub struct TokenBucket {
+    rate_per_s: f64,
+    burst: f64,
+    tokens: f64,
+    last_us: u64,
+}
+
+impl TokenBucket {
+    pub fn new(rate_per_s: f64, burst: f64) -> TokenBucket {
+        let burst = burst.max(1.0);
+        TokenBucket { rate_per_s: rate_per_s.max(0.0), burst, tokens: burst, last_us: 0 }
+    }
+
+    /// Refill for the elapsed time and spend one token if available.
+    /// Deterministic in `(self, now_us)`; `now_us` must not decrease
+    /// (a lagging clock is clamped to no refill, never a debit).
+    pub fn try_admit(&mut self, now_us: u64) -> bool {
+        let dt_us = now_us.saturating_sub(self.last_us);
+        self.last_us = self.last_us.max(now_us);
+        self.tokens = (self.tokens + self.rate_per_s * dt_us as f64 / 1e6).min(self.burst);
+        if self.tokens >= 1.0 {
+            self.tokens -= 1.0;
+            true
+        } else {
+            false
+        }
+    }
+
+    pub fn tokens(&self) -> f64 {
+        self.tokens
+    }
+}
+
+/// Bound on distinct client buckets; past it the most-replenished
+/// (i.e. most idle) bucket is evicted, which can only ever *grant* a
+/// forgotten client a fresh burst — never over-throttle.
+const MAX_CLIENTS: usize = 4096;
+
+/// Admission gate over all clients. The empty string is the bucket for
+/// requests that carry no `client` field.
+#[derive(Debug)]
+pub struct QuotaGate {
+    rate_per_s: f64,
+    burst: f64,
+    epoch: Instant,
+    buckets: HashMap<String, TokenBucket>,
+}
+
+impl QuotaGate {
+    pub fn new(rate_per_s: f64, burst: f64) -> QuotaGate {
+        QuotaGate { rate_per_s, burst, epoch: Instant::now(), buckets: HashMap::new() }
+    }
+
+    /// Admit `client` at the current wall-clock offset.
+    pub fn admit(&mut self, client: &str) -> bool {
+        let now_us = self.epoch.elapsed().as_micros() as u64;
+        self.admit_at(client, now_us)
+    }
+
+    /// Deterministic entry point used by tests: admit at an explicit
+    /// microsecond offset from the gate's epoch.
+    pub fn admit_at(&mut self, client: &str, now_us: u64) -> bool {
+        if !self.buckets.contains_key(client) {
+            if self.buckets.len() >= MAX_CLIENTS {
+                self.evict_most_idle();
+            }
+            let mut fresh = TokenBucket::new(self.rate_per_s, self.burst);
+            fresh.last_us = now_us;
+            self.buckets.insert(client.to_string(), fresh);
+        }
+        self.buckets.get_mut(client).map_or(false, |b| b.try_admit(now_us))
+    }
+
+    fn evict_most_idle(&mut self) {
+        let victim = self
+            .buckets
+            .iter()
+            .max_by(|a, b| {
+                a.1.tokens.partial_cmp(&b.1.tokens).unwrap_or(std::cmp::Ordering::Equal)
+            })
+            .map(|(k, _)| k.clone());
+        if let Some(k) = victim {
+            self.buckets.remove(&k);
+        }
+    }
+
+    pub fn clients(&self) -> usize {
+        self.buckets.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn refill_is_exact_at_the_boundary() {
+        // rate 2 tokens/s from an empty bucket: 499_999µs accrues
+        // 0.999998 tokens (deny); 500_000µs accrues exactly 1.0 (admit).
+        // 0.5 * 2.0 is exact in binary floating point, so the boundary
+        // is sharp, not approximate.
+        let mut b = TokenBucket::new(2.0, 4.0);
+        for _ in 0..4 {
+            assert!(b.try_admit(0), "burst drains the full bucket");
+        }
+        assert!(!b.try_admit(0), "empty bucket denies");
+        let mut just_under = b.clone();
+        assert!(!just_under.try_admit(499_999), "0.999998 tokens is not one");
+        let mut at = b.clone();
+        assert!(at.try_admit(500_000), "exactly 1.0 token admits");
+        assert_eq!(at.tokens(), 0.0, "the boundary admit spends the whole token");
+    }
+
+    #[test]
+    fn refill_caps_at_burst() {
+        let mut b = TokenBucket::new(1000.0, 2.0);
+        assert!(b.try_admit(0));
+        // an hour of refill still caps at burst=2
+        assert!(b.try_admit(3_600_000_000));
+        assert!(b.try_admit(3_600_000_000));
+        assert!(!b.try_admit(3_600_000_000), "cap held: only 2 tokens were available");
+    }
+
+    #[test]
+    fn clock_regression_never_debits() {
+        let mut b = TokenBucket::new(1.0, 1.0);
+        assert!(b.try_admit(5_000_000));
+        assert!(!b.try_admit(1_000), "lagging clock refills nothing");
+        assert!(b.tokens() >= 0.0);
+    }
+
+    #[test]
+    fn clients_are_throttled_independently() {
+        let mut g = QuotaGate::new(1.0, 2.0);
+        // greedy drains its bucket; quiet's bucket is untouched
+        assert!(g.admit_at("greedy", 0));
+        assert!(g.admit_at("greedy", 0));
+        assert!(!g.admit_at("greedy", 0));
+        assert!(g.admit_at("quiet", 0));
+        assert!(g.admit_at("quiet", 0));
+        assert_eq!(g.clients(), 2);
+        // greedy recovers after a full second
+        assert!(g.admit_at("greedy", 1_000_000));
+    }
+
+    #[test]
+    fn anonymous_requests_share_one_bucket() {
+        let mut g = QuotaGate::new(1.0, 1.0);
+        assert!(g.admit_at("", 0));
+        assert!(!g.admit_at("", 0));
+        assert_eq!(g.clients(), 1);
+    }
+
+    #[test]
+    fn fresh_clients_start_full_not_back_dated() {
+        let mut g = QuotaGate::new(1.0, 1.0);
+        // first contact late in the gate's life must not grant
+        // `now * rate` phantom tokens beyond burst
+        assert!(g.admit_at("late", 100_000_000));
+        assert!(!g.admit_at("late", 100_000_000), "burst=1: second request denied");
+    }
+}

@@ -12,7 +12,13 @@
 //! {"id": 2, "type": "pipeline", "model": "llama-7b", "scaled": true,
 //!  "microbatches": 8, "mem_cap": 12.5, "recompute": "auto"}
 //! {"type": "stats"}
+//! {"id": 3, "type": "plan", "model": "gpt-tiny", "client": "trainer-1"}
+//! {"type": "drain"}
 //! ```
+//!
+//! `client` is a quota identity only — it feeds per-client admission,
+//! never the plan key. `drain` is the admin request that moves the
+//! service to the draining lifecycle state.
 //!
 //! Unknown fields are rejected (a typo silently ignored by a server is a
 //! plan the client did not ask for), and so is any field the service
@@ -33,6 +39,8 @@ pub enum RequestKind {
     Pipeline,
     /// service counters snapshot (never planned, never cached)
     Stats,
+    /// admin: stop accepting, finish in-flight, flush, report
+    Drain,
 }
 
 impl RequestKind {
@@ -41,6 +49,7 @@ impl RequestKind {
             RequestKind::Plan => "plan",
             RequestKind::Pipeline => "pipeline",
             RequestKind::Stats => "stats",
+            RequestKind::Drain => "drain",
         }
     }
 
@@ -48,7 +57,9 @@ impl RequestKind {
     pub fn planner(self) -> PlannerKind {
         match self {
             RequestKind::Pipeline => PlannerKind::TwoLevel,
-            RequestKind::Plan | RequestKind::Stats => PlannerKind::SingleLevel,
+            RequestKind::Plan | RequestKind::Stats | RequestKind::Drain => {
+                PlannerKind::SingleLevel
+            }
         }
     }
 }
@@ -58,6 +69,9 @@ pub struct PlanRequest {
     /// client token echoed verbatim in the response (any JSON value)
     pub id: Option<Json>,
     pub kind: RequestKind,
+    /// quota identity for per-client admission; not plan identity (it
+    /// must never split the plan cache)
+    pub client: Option<String>,
     /// the planning fields in CLI-flag form, ready for
     /// [`CfpOptions::from_args`]
     pub args: Args,
@@ -79,6 +93,7 @@ const FIELDS: &[&str] = &[
     "mem_cap",
     "recompute",
     "engine",
+    "client",
 ];
 
 /// Parse one request line. Every failure is a `String` destined for a
@@ -97,8 +112,11 @@ pub fn parse_request(line: &str) -> Result<PlanRequest, String> {
             Some("plan") => RequestKind::Plan,
             Some("pipeline") => RequestKind::Pipeline,
             Some("stats") => RequestKind::Stats,
+            Some("drain") => RequestKind::Drain,
             Some(other) => {
-                return Err(format!("unknown request type {other:?} (want plan|pipeline|stats)"))
+                return Err(format!(
+                    "unknown request type {other:?} (want plan|pipeline|stats|drain)"
+                ))
             }
             None => return Err("\"type\" must be a string".to_string()),
         },
@@ -125,7 +143,13 @@ pub fn parse_request(line: &str) -> Result<PlanRequest, String> {
             args.flags.push("scaled".to_string());
         }
     }
-    Ok(PlanRequest { id: j.get("id").cloned(), kind, args })
+    let client = match j.get("client") {
+        None => None,
+        Some(v) => {
+            Some(v.as_str().ok_or_else(|| "\"client\" must be a string".to_string())?.to_string())
+        }
+    };
+    Ok(PlanRequest { id: j.get("id").cloned(), kind, client, args })
 }
 
 /// Deterministic identity of a planning request: every *resolved* option
@@ -139,7 +163,9 @@ pub fn canonical_key(kind: RequestKind, opts: &CfpOptions) -> String {
     let m = &opts.model;
     let cap = opts.mem_cap.map_or_else(|| "none".to_string(), |b| b.to_string());
     let (stages, mb, rec) = match kind {
-        RequestKind::Plan | RequestKind::Stats => ("-".to_string(), "-".to_string(), "-"),
+        RequestKind::Plan | RequestKind::Stats | RequestKind::Drain => {
+            ("-".to_string(), "-".to_string(), "-")
+        }
         RequestKind::Pipeline => (
             match opts.stages {
                 StageSpec::Single => "single".to_string(),
@@ -250,6 +276,14 @@ mod tests {
         // type defaults to plan
         assert_eq!(parse_request("{}").unwrap().kind, RequestKind::Plan);
         assert_eq!(parse_request("{\"type\": \"stats\"}").unwrap().kind, RequestKind::Stats);
+        assert_eq!(parse_request("{\"type\": \"drain\"}").unwrap().kind, RequestKind::Drain);
+
+        // client is quota identity: carried on the request, kept out of
+        // the planning args so it can never split the plan cache
+        let r = parse_request("{\"model\": \"gpt-tiny\", \"client\": \"trainer-1\"}").unwrap();
+        assert_eq!(r.client.as_deref(), Some("trainer-1"));
+        assert!(r.args.get("client").is_none());
+        assert!(parse_request("{}").unwrap().client.is_none());
     }
 
     #[test]
@@ -266,6 +300,7 @@ mod tests {
             "{\"layers\": -1}",          // negative
             "{\"mem_cap\": \"big\"}",    // wrong type
             "{\"scaled\": \"yes\"}",     // wrong type
+            "{\"client\": 5}",           // wrong type
         ] {
             assert!(parse_request(bad).is_err(), "{bad:?} must be rejected");
         }

@@ -6,10 +6,19 @@
 //! can arrive out of request order, so clients match them by the echoed
 //! `id`. Each response is written as one whole line under the stream's
 //! writer lock, so lines never interleave.
+//!
+//! Backpressure: the service-wide count of dispatched-but-unanswered
+//! requests is bounded by `--max-pending`. Past the bound, plan work is
+//! answered inline on the reader thread with a structured `overloaded`
+//! rejection instead of growing the pool's queue without bound; admin
+//! requests (`stats`, `drain`) always pass — overload must never take
+//! out the operator's view or the drain path.
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
 use super::PlanService;
 
@@ -35,6 +44,20 @@ impl PlanService {
             if line.trim().is_empty() {
                 continue;
             }
+            let max = self.inner.cfg.max_pending;
+            if max > 0 && self.inner.pending.load(Ordering::Acquire) >= max {
+                let t0 = Instant::now();
+                if let Some(resp) = self.reject_overloaded_line(&line) {
+                    self.inner
+                        .telemetry
+                        .record_latency("rejected", t0.elapsed().as_micros() as u64);
+                    let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
+                    let _ = writeln!(w, "{resp}");
+                    let _ = w.flush();
+                    continue;
+                }
+            }
+            self.inner.pending.fetch_add(1, Ordering::AcqRel);
             {
                 let (count, _) = &*outstanding;
                 *count.lock().unwrap_or_else(|e| e.into_inner()) += 1;
@@ -49,6 +72,7 @@ impl PlanService {
                     let _ = writeln!(w, "{resp}");
                     let _ = w.flush();
                 }
+                svc.inner.pending.fetch_sub(1, Ordering::AcqRel);
                 let (count, done) = &*outstanding;
                 *count.lock().unwrap_or_else(|e| e.into_inner()) -= 1;
                 done.notify_all();
@@ -130,5 +154,45 @@ mod tests {
         }
         kinds.sort();
         assert_eq!(kinds, ["error", "plan", "stats"]);
+    }
+
+    #[test]
+    fn pending_queue_bound_rejects_inline_under_overload() {
+        let svc = PlanService::new(ServeConfig {
+            workers: 1,
+            max_pending: 1,
+            ..ServeConfig::default()
+        });
+        // hold the only worker inside its search until the reader thread
+        // has rejected both excess lines, making the overload window
+        // deterministic rather than timing-dependent
+        let probe = svc.clone();
+        svc.set_search_hook(Arc::new(move || {
+            while probe.stats().rejected_overload < 2 {
+                std::thread::sleep(std::time::Duration::from_millis(1));
+            }
+        }));
+        let input = "{\"id\": 1, \"type\": \"plan\", \"model\": \"gpt-tiny\"}\n\
+                     {\"id\": 2, \"type\": \"plan\", \"model\": \"gpt-tiny\"}\n\
+                     {\"id\": 3, \"type\": \"plan\", \"model\": \"gpt-tiny\"}\n";
+        let buf = Arc::new(Mutex::new(Vec::new()));
+        svc.serve_stream(std::io::Cursor::new(input), shared_writer(Sink(Arc::clone(&buf))));
+        let text = String::from_utf8(buf.lock().unwrap().clone()).unwrap();
+        let (mut ok, mut overloaded) = (0, 0);
+        for line in text.lines() {
+            let j = Json::parse(line).unwrap();
+            if j.get("ok").and_then(Json::as_bool) == Some(true) {
+                ok += 1;
+            } else {
+                assert_eq!(j.get("reason").and_then(Json::as_str), Some("overloaded"));
+                overloaded += 1;
+            }
+        }
+        assert_eq!((ok, overloaded), (1, 2), "one admitted, two rejected inline: {text}");
+        let s = svc.stats();
+        assert_eq!(s.received, 3);
+        assert_eq!(s.admitted, 1);
+        assert_eq!(s.rejected_overload, 2);
+        assert_eq!(s.received, s.admitted + s.rejected + s.coalesced, "counters reconcile");
     }
 }

@@ -1,0 +1,388 @@
+//! Always-on serving telemetry: log-bucketed latency histograms and
+//! stage-time samplers drained by a background aggregator thread.
+//!
+//! The shape is the channel-plus-collector profiler pattern: request
+//! threads do nothing but a lock-guarded `Sender::send` per event; one
+//! aggregator thread ("cfp-serve-telemetry") owns every histogram and
+//! ring buffer, so the hot path never contends on shared counters and
+//! the data structures need no synchronization of their own. Snapshots
+//! are a request/response round trip through the same channel, which
+//! makes them causally consistent: a snapshot observes every event the
+//! requesting thread sent before asking.
+//!
+//! Determinism contract (pinned by `prop_histogram_determinism`):
+//! [`Histogram`] buckets are fixed powers of two of a microsecond, so
+//! `bucket_of` is a pure function of the value and `merge` is
+//! element-wise `u64` addition — associative, commutative, and
+//! bit-stable however many threads recorded and in whatever order their
+//! shards are merged.
+
+use std::collections::{BTreeMap, VecDeque};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Mutex;
+use std::thread::JoinHandle;
+
+use crate::util::Json;
+
+/// Fixed bucket count: bucket 0 holds exact zeros, bucket `i` holds
+/// values in `[2^(i-1), 2^i)` µs, and the last bucket absorbs the tail.
+pub const HIST_BUCKETS: usize = 64;
+
+/// Log-bucketed latency histogram over microsecond values (pure std,
+/// fixed `u64` bucket counts — merging is element-wise addition).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Histogram {
+    counts: [u64; HIST_BUCKETS],
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for Histogram {
+    fn default() -> Histogram {
+        Histogram::new()
+    }
+}
+
+impl Histogram {
+    pub fn new() -> Histogram {
+        Histogram { counts: [0; HIST_BUCKETS], count: 0, sum_us: 0, max_us: 0 }
+    }
+
+    /// The bucket index for `us`: 0 for 0, else `floor(log2(us)) + 1`
+    /// capped at the last bucket — a pure function of the value, so the
+    /// bucket boundaries cannot drift with thread count or merge order.
+    pub fn bucket_of(us: u64) -> usize {
+        if us == 0 {
+            return 0;
+        }
+        (64 - us.leading_zeros() as usize).min(HIST_BUCKETS - 1)
+    }
+
+    /// Inclusive upper bound of bucket `i` in µs (the value `quantile`
+    /// reports when the quantile falls in bucket `i`).
+    pub fn bucket_bound(i: usize) -> u64 {
+        if i == 0 {
+            0
+        } else if i >= HIST_BUCKETS - 1 {
+            u64::MAX
+        } else {
+            (1u64 << i) - 1
+        }
+    }
+
+    pub fn record(&mut self, us: u64) {
+        self.counts[Histogram::bucket_of(us)] += 1;
+        self.count += 1;
+        self.sum_us = self.sum_us.saturating_add(us);
+        self.max_us = self.max_us.max(us);
+    }
+
+    /// Element-wise bucket addition — associative and commutative, so a
+    /// histogram assembled from per-thread shards is bit-identical to
+    /// one recorded sequentially, in any merge order.
+    pub fn merge(&mut self, other: &Histogram) {
+        for (a, b) in self.counts.iter_mut().zip(other.counts.iter()) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us = self.sum_us.saturating_add(other.sum_us);
+        self.max_us = self.max_us.max(other.max_us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn sum_us(&self) -> u64 {
+        self.sum_us
+    }
+
+    pub fn max_us(&self) -> u64 {
+        self.max_us
+    }
+
+    /// Upper bound (µs) of the bucket containing the `q`-quantile
+    /// observation (`0 < q <= 1`); 0 on an empty histogram. A pure
+    /// function of the bucket counts, so merged shards report the same
+    /// quantiles as a sequential recording — except the true maximum is
+    /// reported for the last occupied bucket instead of `u64::MAX`.
+    pub fn quantile(&self, q: f64) -> u64 {
+        if self.count == 0 {
+            return 0;
+        }
+        let target = ((q * self.count as f64).ceil() as u64).clamp(1, self.count);
+        let mut seen = 0u64;
+        for (i, &c) in self.counts.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                let bound = Histogram::bucket_bound(i);
+                return bound.min(self.max_us);
+            }
+        }
+        self.max_us
+    }
+
+    pub fn to_json(&self) -> Json {
+        let buckets: Vec<Json> = self
+            .counts
+            .iter()
+            .enumerate()
+            .filter(|(_, &c)| c > 0)
+            .map(|(i, &c)| Json::Arr(vec![Json::num(i as f64), Json::num(c as f64)]))
+            .collect();
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("sum_us", Json::num(self.sum_us as f64)),
+            ("max_us", Json::num(self.max_us as f64)),
+            ("p50_us", Json::num(self.quantile(0.5) as f64)),
+            ("p90_us", Json::num(self.quantile(0.9) as f64)),
+            ("p99_us", Json::num(self.quantile(0.99) as f64)),
+            ("buckets", Json::Arr(buckets)),
+        ])
+    }
+}
+
+/// Named ring buffer of recent stage-time samples (the named-sampler
+/// shape): bounded memory however long the daemon runs, `last`/recent
+/// mean for the stats view, a total count for reconciliation.
+#[derive(Clone, Debug)]
+pub struct Sampler {
+    cap: usize,
+    samples: VecDeque<f64>,
+    total: u64,
+}
+
+impl Sampler {
+    pub fn new(cap: usize) -> Sampler {
+        Sampler { cap: cap.max(1), samples: VecDeque::new(), total: 0 }
+    }
+
+    pub fn record(&mut self, v: f64) {
+        if self.samples.len() == self.cap {
+            self.samples.pop_front();
+        }
+        self.samples.push_back(v);
+        self.total += 1;
+    }
+
+    pub fn summary(&self) -> StageSummary {
+        let n = self.samples.len();
+        StageSummary {
+            count: self.total,
+            last: self.samples.back().copied().unwrap_or(0.0),
+            mean_recent: if n == 0 {
+                0.0
+            } else {
+                self.samples.iter().sum::<f64>() / n as f64
+            },
+        }
+    }
+}
+
+/// One stage sampler's stats view.
+#[derive(Clone, Debug, Default)]
+pub struct StageSummary {
+    /// samples ever recorded (not just the retained window)
+    pub count: u64,
+    pub last: f64,
+    pub mean_recent: f64,
+}
+
+impl StageSummary {
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("count", Json::num(self.count as f64)),
+            ("last", Json::num(self.last)),
+            ("mean_recent", Json::num(self.mean_recent)),
+        ])
+    }
+}
+
+/// Aggregator state copied out by [`Telemetry::snapshot`] — everything
+/// the `stats` request and the drain report expose.
+#[derive(Clone, Debug, Default)]
+pub struct Snapshot {
+    /// per-request latency histograms by outcome stream
+    /// (`plan`/`pipeline`/`stats`/`drain`/`error`/`rejected`)
+    pub latency: BTreeMap<String, Histogram>,
+    /// stage-time samplers (`search_us`, `profiling_us`, `analysis_us`)
+    pub stages: BTreeMap<String, StageSummary>,
+}
+
+impl Snapshot {
+    pub fn to_json(&self) -> Json {
+        let latency =
+            self.latency.iter().map(|(k, h)| (k.clone(), h.to_json())).collect::<BTreeMap<_, _>>();
+        let stages =
+            self.stages.iter().map(|(k, s)| (k.clone(), s.to_json())).collect::<BTreeMap<_, _>>();
+        Json::Obj(BTreeMap::from([
+            ("latency".to_string(), Json::Obj(latency)),
+            ("stages".to_string(), Json::Obj(stages)),
+        ]))
+    }
+}
+
+enum Event {
+    Latency { stream: &'static str, us: u64 },
+    Stage { name: &'static str, us: f64 },
+    Snapshot(Sender<Snapshot>),
+}
+
+/// The always-on telemetry hub: a channel into the aggregator thread.
+/// Dropping the hub closes the channel and joins the thread.
+#[derive(Debug)]
+pub struct Telemetry {
+    tx: Mutex<Option<Sender<Event>>>,
+    handle: Option<JoinHandle<()>>,
+}
+
+impl Telemetry {
+    pub fn start() -> Telemetry {
+        let (tx, rx) = channel();
+        let handle = std::thread::Builder::new()
+            .name("cfp-serve-telemetry".into())
+            .spawn(move || aggregate(rx))
+            .ok();
+        Telemetry { tx: Mutex::new(Some(tx)), handle }
+    }
+
+    fn send(&self, ev: Event) {
+        let guard = self.tx.lock().unwrap_or_else(|e| e.into_inner());
+        if let Some(tx) = guard.as_ref() {
+            let _ = tx.send(ev);
+        }
+    }
+
+    pub fn record_latency(&self, stream: &'static str, us: u64) {
+        self.send(Event::Latency { stream, us });
+    }
+
+    pub fn record_stage(&self, name: &'static str, us: f64) {
+        self.send(Event::Stage { name, us });
+    }
+
+    /// Round-trip snapshot: observes every event this thread sent before
+    /// asking (the channel is FIFO per sender).
+    pub fn snapshot(&self) -> Snapshot {
+        let (reply_tx, reply_rx) = channel();
+        self.send(Event::Snapshot(reply_tx));
+        reply_rx.recv().unwrap_or_default()
+    }
+}
+
+impl Drop for Telemetry {
+    fn drop(&mut self) {
+        // close the channel first, or the join below would never return
+        drop(self.tx.lock().unwrap_or_else(|e| e.into_inner()).take());
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+fn aggregate(rx: Receiver<Event>) {
+    let mut latency: BTreeMap<&'static str, Histogram> = BTreeMap::new();
+    let mut stages: BTreeMap<&'static str, Sampler> = BTreeMap::new();
+    while let Ok(ev) = rx.recv() {
+        match ev {
+            Event::Latency { stream, us } => latency.entry(stream).or_default().record(us),
+            Event::Stage { name, us } => {
+                stages.entry(name).or_insert_with(|| Sampler::new(64)).record(us)
+            }
+            Event::Snapshot(reply) => {
+                let snap = Snapshot {
+                    latency: latency.iter().map(|(k, h)| (k.to_string(), h.clone())).collect(),
+                    stages: stages.iter().map(|(k, s)| (k.to_string(), s.summary())).collect(),
+                };
+                let _ = reply.send(snap);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_are_powers_of_two() {
+        assert_eq!(Histogram::bucket_of(0), 0);
+        assert_eq!(Histogram::bucket_of(1), 1);
+        assert_eq!(Histogram::bucket_of(2), 2);
+        assert_eq!(Histogram::bucket_of(3), 2);
+        assert_eq!(Histogram::bucket_of(4), 3);
+        assert_eq!(Histogram::bucket_of(7), 3);
+        assert_eq!(Histogram::bucket_of(8), 4);
+        assert_eq!(Histogram::bucket_of(u64::MAX), HIST_BUCKETS - 1);
+        // every bucket's bound lands back in that bucket
+        for i in 1..HIST_BUCKETS - 1 {
+            assert_eq!(Histogram::bucket_of(Histogram::bucket_bound(i)), i, "bucket {i}");
+            assert_eq!(Histogram::bucket_of(Histogram::bucket_bound(i) + 1), i + 1);
+        }
+    }
+
+    #[test]
+    fn quantiles_walk_the_buckets() {
+        let mut h = Histogram::new();
+        for us in [1u64, 1, 1, 1, 1, 1, 1, 1, 1, 1000] {
+            h.record(us);
+        }
+        assert_eq!(h.count(), 10);
+        assert_eq!(h.quantile(0.5), 1);
+        // the p99 observation is the 1000µs outlier; its bucket bound is
+        // 1023 but the histogram knows its true max
+        assert_eq!(h.quantile(0.99), 1000);
+        assert_eq!(h.max_us(), 1000);
+        let empty = Histogram::new();
+        assert_eq!(empty.quantile(0.5), 0);
+    }
+
+    #[test]
+    fn merge_equals_sequential_recording() {
+        let vals = [0u64, 1, 2, 3, 5, 8, 100, 1000, 65_535, 65_536];
+        let mut whole = Histogram::new();
+        for &v in &vals {
+            whole.record(v);
+        }
+        let mut a = Histogram::new();
+        let mut b = Histogram::new();
+        for (i, &v) in vals.iter().enumerate() {
+            if i % 2 == 0 { &mut a } else { &mut b }.record(v);
+        }
+        let mut ab = a.clone();
+        ab.merge(&b);
+        let mut ba = b.clone();
+        ba.merge(&a);
+        assert_eq!(ab, whole, "merge == sequential");
+        assert_eq!(ba, whole, "merge is commutative");
+    }
+
+    #[test]
+    fn sampler_window_is_bounded_but_counts_everything() {
+        let mut s = Sampler::new(4);
+        for i in 0..10 {
+            s.record(i as f64);
+        }
+        let sum = s.summary();
+        assert_eq!(sum.count, 10);
+        assert_eq!(sum.last, 9.0);
+        assert_eq!(sum.mean_recent, (6.0 + 7.0 + 8.0 + 9.0) / 4.0);
+    }
+
+    #[test]
+    fn hub_round_trips_events_through_the_aggregator() {
+        let t = Telemetry::start();
+        t.record_latency("plan", 5);
+        t.record_latency("plan", 9);
+        t.record_stage("search_us", 123.0);
+        let snap = t.snapshot();
+        let h = snap.latency.get("plan").expect("plan stream present");
+        assert_eq!(h.count(), 2);
+        assert_eq!(snap.stages.get("search_us").unwrap().count, 1);
+        // snapshot JSON is well-formed and carries the quantile keys
+        let j = snap.to_json();
+        assert!(j.get("latency").unwrap().get("plan").unwrap().get("p50_us").is_some());
+        drop(t); // joins the aggregator thread
+    }
+}

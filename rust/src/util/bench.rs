@@ -88,22 +88,36 @@ pub fn black_box<T>(x: T) -> T {
 /// One machine-readable bench row for the repo-root `BENCH_*.json`
 /// trajectory files (name, problem size, ns/iter, speedup vs the
 /// recorded baseline — `None` for rows that *are* a baseline).
+///
+/// `unit: None` keeps the classic ns/iter schema. Rows whose metric is
+/// not a per-iteration time (latency quantiles, throughput) set `unit`;
+/// they serialize as `{"value": v, "unit": "..."}` instead of
+/// `"ns_per_iter"`, so trajectory tooling never misreads a req/s figure
+/// as nanoseconds.
 pub struct JsonRow {
     pub name: String,
     pub layers: usize,
     pub ns_per_iter: f64,
+    pub unit: Option<&'static str>,
     pub speedup: Option<f64>,
 }
 
 impl JsonRow {
     fn to_json(&self) -> super::Json {
         use super::Json;
-        Json::obj(vec![
+        let mut pairs = vec![
             ("name", Json::str(self.name.clone())),
             ("layers", Json::num(self.layers as f64)),
-            ("ns_per_iter", Json::num(self.ns_per_iter)),
-            ("speedup", self.speedup.map_or(Json::Null, Json::num)),
-        ])
+        ];
+        match self.unit {
+            None => pairs.push(("ns_per_iter", Json::num(self.ns_per_iter))),
+            Some(unit) => {
+                pairs.push(("value", Json::num(self.ns_per_iter)));
+                pairs.push(("unit", Json::str(unit)));
+            }
+        }
+        pairs.push(("speedup", self.speedup.map_or(Json::Null, Json::num)));
+        Json::obj(pairs)
     }
 }
 
@@ -148,6 +162,7 @@ mod tests {
             name: name.into(),
             layers: 32,
             ns_per_iter: ns,
+            unit: None,
             speedup: sp,
         };
         merge_bench_json(&path, &[row("a", 100.0, None), row("b", 50.0, Some(2.0))]).unwrap();
@@ -160,6 +175,21 @@ mod tests {
         assert_eq!(rows[0].get("speedup"), Some(&crate::util::Json::Null));
         assert_eq!(rows[1].get("ns_per_iter").unwrap().as_f64(), Some(40.0));
         assert_eq!(rows[1].get("speedup").unwrap().as_f64(), Some(2.5));
+        // a unit-carrying row serializes as value+unit, not ns_per_iter
+        let thr = JsonRow {
+            name: "thr".into(),
+            layers: 1,
+            ns_per_iter: 1234.5,
+            unit: Some("req_per_s"),
+            speedup: None,
+        };
+        merge_bench_json(&path, &[thr]).unwrap();
+        let j = crate::util::Json::parse(&std::fs::read_to_string(&path).unwrap()).unwrap();
+        let rows = j.get("rows").unwrap().as_arr().unwrap();
+        let t = rows.iter().find(|r| r.get("name").unwrap().as_str() == Some("thr")).unwrap();
+        assert_eq!(t.get("value").unwrap().as_f64(), Some(1234.5));
+        assert_eq!(t.get("unit").unwrap().as_str(), Some("req_per_s"));
+        assert!(t.get("ns_per_iter").is_none());
         let _ = std::fs::remove_file(&path);
     }
 

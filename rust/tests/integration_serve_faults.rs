@@ -1,0 +1,245 @@
+//! Fault-injection suite for the production serving tier (PR 7):
+//!
+//! * drain under load — with K leaders held mid-search, a drain closes
+//!   admission (a barrage of new requests gets structured `draining`
+//!   rejections), yet every already-admitted request completes with the
+//!   exact one-shot payload and the admission ledger reconciles. No
+//!   accepted request is ever lost.
+//! * kill-and-restart — a service with `--cache` + `--plan-cache-file`
+//!   is drained and dropped; a fresh service over the same files serves
+//!   byte-identical plans with ZERO searches (`searches == 0` and
+//!   `search_us == 0`), and those plans equal the cold one-shot CLI
+//!   reference.
+//! * torn / mismatched / malformed plan-cache files are discarded
+//!   wholesale: the restarted service re-searches (correct payloads),
+//!   never serves a partially-parsed cache.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Duration;
+
+use cfp::coordinator::{run_cfp, CfpOptions, PlannerKind};
+use cfp::service::{plan_payload, Lifecycle, PlanService, ServeConfig};
+use cfp::util::cli::Args;
+use cfp::util::Json;
+
+fn plan_line(layers: usize) -> String {
+    format!(
+        "{{\"id\": \"L{layers}\", \"type\": \"plan\", \"model\": \"gpt-tiny\", \
+         \"layers\": {layers}, \"platform\": \"a100-pcie\"}}"
+    )
+}
+
+fn pipeline_line() -> String {
+    "{\"id\": \"pipe\", \"type\": \"pipeline\", \"model\": \"gpt-tiny\", \"layers\": 2, \
+     \"microbatches\": 4, \"platform\": \"a100-pcie\"}"
+        .to_string()
+}
+
+/// The serial one-shot reference for `plan_line(layers)` — the same
+/// fields through the same options builder, planned without the service.
+fn reference_payload(layers: usize) -> String {
+    let mut args = Args::default();
+    args.options.insert("model".into(), "gpt-tiny".into());
+    args.options.insert("layers".into(), layers.to_string());
+    args.options.insert("platform".into(), "a100-pcie".into());
+    let built = CfpOptions::from_args(&args, PlannerKind::SingleLevel).unwrap();
+    assert!(built.warnings.is_empty());
+    plan_payload(&run_cfp(&built.opts)).to_string()
+}
+
+fn result_of(resp: &str) -> String {
+    let j = Json::parse(resp).expect("response is valid JSON");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "not ok: {resp}");
+    j.get("result").expect("ok response has a result").to_string()
+}
+
+fn cache_tag(resp: &str) -> String {
+    Json::parse(resp).unwrap().get("cache").unwrap().as_str().unwrap().to_string()
+}
+
+/// A scratch directory unique to one test (tests share a process, so
+/// the pid alone is not enough).
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cfp_faults_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+#[test]
+fn drain_under_load_answers_admitted_work_and_rejects_the_barrage() {
+    const LEADERS: usize = 4;
+    const BARRAGE: usize = 20;
+    let svc = PlanService::new(ServeConfig { workers: LEADERS, ..ServeConfig::default() });
+
+    // Hold every single-flight leader inside its search until the gate
+    // opens, so the drain provably begins while work is in flight.
+    let gate = Arc::new((Mutex::new(false), Condvar::new()));
+    let entered = Arc::new(AtomicUsize::new(0));
+    {
+        let gate = Arc::clone(&gate);
+        let entered = Arc::clone(&entered);
+        svc.set_search_hook(Arc::new(move || {
+            entered.fetch_add(1, Ordering::SeqCst);
+            let (open, released) = &*gate;
+            let mut open = open.lock().unwrap();
+            while !*open {
+                open = released.wait(open).unwrap();
+            }
+        }));
+    }
+
+    std::thread::scope(|s| {
+        // K distinct admitted requests, each leading its own search
+        let leaders: Vec<_> = (0..LEADERS)
+            .map(|i| {
+                let svc = svc.clone();
+                s.spawn(move || (2 + i, svc.handle_line(&plan_line(2 + i))))
+            })
+            .collect();
+        while entered.load(Ordering::SeqCst) < LEADERS {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        // drain while all K searches are mid-flight; it must block until
+        // they finish, but close admission immediately
+        let drainer = {
+            let svc = svc.clone();
+            s.spawn(move || svc.drain())
+        };
+        while svc.lifecycle() != Lifecycle::Draining {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+
+        // mid-drain barrage: every new request is refused with a
+        // structured `draining` rejection, echoing its id
+        for i in 0..BARRAGE {
+            let resp = svc.handle_line(&plan_line(2 + (i % 8)));
+            let j = Json::parse(&resp).unwrap();
+            assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{resp}");
+            assert_eq!(j.get("reason").and_then(Json::as_str), Some("draining"), "{resp}");
+            assert!(j.get("id").is_some(), "rejections still echo the id: {resp}");
+        }
+        assert_eq!(svc.lifecycle(), Lifecycle::Draining, "still waiting on in-flight work");
+
+        // release the leaders: every admitted request completes with the
+        // exact payload the one-shot path produces
+        {
+            let (open, released) = &*gate;
+            *open.lock().unwrap() = true;
+            released.notify_all();
+        }
+        for h in leaders {
+            let (layers, resp) = h.join().unwrap();
+            assert_eq!(
+                result_of(&resp),
+                reference_payload(layers),
+                "admitted {layers}-layer request must complete correctly through a drain"
+            );
+        }
+        let report = drainer.join().unwrap();
+        assert_eq!(svc.lifecycle(), Lifecycle::Drained);
+
+        let s = &report.stats;
+        assert_eq!(s.received, (LEADERS + BARRAGE) as u64);
+        assert_eq!(s.admitted, LEADERS as u64);
+        assert_eq!(s.rejected, BARRAGE as u64);
+        assert_eq!(s.rejected_draining, BARRAGE as u64);
+        assert_eq!(s.errors, 0, "rejections are not errors");
+        assert_eq!(s.received, s.admitted + s.rejected + s.coalesced, "ledger reconciles");
+        // the drain report carries the full telemetry picture
+        assert!(report.telemetry.latency.contains_key("rejected"));
+    });
+}
+
+#[test]
+fn restart_over_persisted_caches_serves_identical_plans_with_zero_searches() {
+    let dir = scratch("restart");
+    let cfg = |dir: &std::path::Path| ServeConfig {
+        workers: 2,
+        cache_path: Some(dir.join("profiles.json")),
+        plan_cache_file: Some(dir.join("plans.json")),
+        ..ServeConfig::default()
+    };
+    let lines = [plan_line(2), plan_line(3), pipeline_line()];
+
+    // first life: cold searches, then a clean drain (flushes both caches)
+    let first: Vec<String> = {
+        let svc = PlanService::new(cfg(&dir));
+        let results: Vec<String> =
+            lines.iter().map(|l| result_of(&svc.handle_line(l))).collect();
+        assert_eq!(svc.stats().searches, 3);
+        let report = svc.drain();
+        assert_eq!(report.stats.searches, 3);
+        results
+    }; // service dropped — the "kill"
+
+    // second life over the same files: every request is a warm hit
+    let svc = PlanService::new(cfg(&dir));
+    for (line, expected) in lines.iter().zip(&first) {
+        let resp = svc.handle_line(line);
+        assert_eq!(cache_tag(&resp), "hit", "warm restart must not plan: {resp}");
+        assert_eq!(&result_of(&resp), expected, "restart must serve byte-identical plans");
+    }
+    let s = svc.stats();
+    assert_eq!(s.searches, 0, "zero searches after a warm restart");
+    assert_eq!(s.search_us, 0, "zero µs searching after a warm restart");
+    assert_eq!(s.plan_hits, lines.len() as u64);
+
+    // and the persisted plan equals the cold one-shot CLI reference
+    assert_eq!(first[0], reference_payload(2));
+    svc.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn damaged_plan_cache_files_are_discarded_wholesale() {
+    let dir = scratch("torn");
+    let plan_file = dir.join("plans.json");
+    let cfg = |path: &std::path::Path| ServeConfig {
+        workers: 1,
+        plan_cache_file: Some(path.to_path_buf()),
+        ..ServeConfig::default()
+    };
+
+    // seed a valid persisted cache
+    let reference = {
+        let svc = PlanService::new(cfg(&plan_file));
+        let resp = result_of(&svc.handle_line(&plan_line(2)));
+        svc.drain();
+        resp
+    };
+    let good = std::fs::read(&plan_file).unwrap();
+    assert!(!good.is_empty());
+
+    // a torn file (half-written at crash) must load as nothing: the
+    // restarted service re-searches and still serves the right plan
+    std::fs::write(&plan_file, &good[..good.len() / 2]).unwrap();
+    let svc = PlanService::new(cfg(&plan_file));
+    let resp = svc.handle_line(&plan_line(2));
+    assert_eq!(cache_tag(&resp), "miss", "torn cache must not warm the service");
+    assert_eq!(result_of(&resp), reference);
+    assert_eq!(svc.stats().searches, 1);
+    svc.drain(); // rewrites a valid file
+
+    // a future/foreign version is discarded wholesale
+    std::fs::write(&plan_file, "{\"version\": 99, \"clock\": 1, \"plans\": []}").unwrap();
+    let svc = PlanService::new(cfg(&plan_file));
+    assert_eq!(cache_tag(&svc.handle_line(&plan_line(2))), "miss");
+    svc.drain();
+
+    // ONE malformed entry poisons the whole file — no partial loads
+    std::fs::write(
+        &plan_file,
+        "{\"version\": 1, \"clock\": 3, \"plans\": [{\"key\": \"k\", \"stamp\": 1, \
+         \"payload\": 42}]}",
+    )
+    .unwrap();
+    let svc = PlanService::new(cfg(&plan_file));
+    let resp = svc.handle_line(&plan_line(2));
+    assert_eq!(cache_tag(&resp), "miss", "malformed entry must discard the whole cache");
+    assert_eq!(result_of(&resp), reference);
+    svc.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}

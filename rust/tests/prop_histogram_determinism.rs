@@ -1,0 +1,143 @@
+//! Property suite: telemetry histogram determinism (PR 7).
+//!
+//! The serving tier's latency histograms are assembled from per-thread
+//! recordings merged in whatever order threads finish — so `merge` must
+//! be associative, commutative, and bit-stable, and `bucket_of` must be
+//! a pure function of the value (boundaries cannot drift with thread
+//! count). Seeded via `Prop::fuzz`: a failure prints the derived seed
+//! and `CFP_PROP_SEED=<seed>` replays exactly that case.
+
+use cfp::service::telemetry::{Histogram, HIST_BUCKETS};
+use cfp::util::prng::Pcg64;
+use cfp::util::proptest::Prop;
+
+/// Latency values biased toward bucket boundaries: zeros, tiny values,
+/// exact powers of two, `2^k - 1` / `2^k + 1`, full-range randoms, and
+/// near-`u64::MAX` tails.
+fn value(rng: &mut Pcg64) -> u64 {
+    match rng.below(7) {
+        0 => 0,
+        1 => rng.below(4),
+        2 => 1u64 << rng.below(63),
+        3 => (1u64 << (1 + rng.below(62))) - 1,
+        4 => (1u64 << (1 + rng.below(62))) + 1,
+        5 => rng.next_u64(),
+        _ => u64::MAX - rng.below(3),
+    }
+}
+
+fn record_all(vals: &[u64]) -> Histogram {
+    let mut h = Histogram::new();
+    for &v in vals {
+        h.record(v);
+    }
+    h
+}
+
+#[test]
+fn prop_merge_is_associative_commutative_and_equals_sequential() {
+    Prop::fuzz(48, 0xA157_9E37).check("histogram_merge_determinism", |rng| {
+        let n = 1 + rng.below(200) as usize;
+        let vals: Vec<u64> = (0..n).map(|_| value(rng)).collect();
+        let whole = record_all(&vals);
+
+        // k-way partition by index: forward and reverse merge orders
+        // both reproduce the sequential histogram bit-for-bit
+        let k = 2 + rng.below(6) as usize;
+        let shards: Vec<Histogram> = (0..k)
+            .map(|s| {
+                let mine: Vec<u64> =
+                    vals.iter().copied().skip(s).step_by(k).collect();
+                record_all(&mine)
+            })
+            .collect();
+        let mut fwd = Histogram::new();
+        for s in &shards {
+            fwd.merge(s);
+        }
+        let mut rev = Histogram::new();
+        for s in shards.iter().rev() {
+            rev.merge(s);
+        }
+        assert_eq!(fwd, whole, "forward shard merge == sequential recording");
+        assert_eq!(rev, whole, "merge order must not matter");
+
+        // associativity: (a ∪ b) ∪ c == a ∪ (b ∪ c) on a 3-way split
+        if shards.len() >= 3 {
+            let (a, b, c) = (&shards[0], &shards[1], &shards[2]);
+            let mut left = a.clone();
+            left.merge(b);
+            left.merge(c);
+            let mut bc = b.clone();
+            bc.merge(c);
+            let mut right = a.clone();
+            right.merge(&bc);
+            assert_eq!(left, right, "merge is associative");
+        }
+
+        // quantiles are a pure function of the (identical) buckets
+        for q in [0.5, 0.9, 0.99, 1.0] {
+            assert_eq!(fwd.quantile(q), whole.quantile(q));
+        }
+        assert_eq!(fwd.count(), n as u64);
+        assert_eq!(fwd.max_us(), vals.iter().copied().max().unwrap_or(0));
+    });
+}
+
+#[test]
+fn prop_bucket_boundaries_are_stable_pure_functions() {
+    Prop::fuzz(64, 0xB0C4E7).check("histogram_bucket_boundaries", |rng| {
+        let v = value(rng);
+        let b = Histogram::bucket_of(v);
+        assert!(b < HIST_BUCKETS);
+        // pure: the same value always lands in the same bucket
+        assert_eq!(b, Histogram::bucket_of(v));
+        // bucket i covers [2^(i-1), 2^i): its bound is its last member
+        if (1..HIST_BUCKETS - 1).contains(&b) {
+            let bound = Histogram::bucket_bound(b);
+            assert!(v <= bound, "{v} exceeds its bucket bound {bound}");
+            assert_eq!(Histogram::bucket_of(bound), b);
+            assert_eq!(Histogram::bucket_of(bound + 1), b + 1);
+        }
+        // quantiles are monotone in q
+        let n = 1 + rng.below(64) as usize;
+        let h = record_all(&(0..n).map(|_| value(rng)).collect::<Vec<_>>());
+        let mut prev = 0u64;
+        for q in [0.01, 0.25, 0.5, 0.75, 0.9, 0.99, 1.0] {
+            let x = h.quantile(q);
+            assert!(x >= prev, "quantile must be monotone in q");
+            prev = x;
+        }
+        assert!(prev <= h.max_us(), "no quantile exceeds the true max");
+    });
+}
+
+#[test]
+fn prop_real_thread_shards_merge_bit_identically() {
+    Prop::fuzz(24, 0x7A0D_5EED).check("histogram_thread_shards", |rng| {
+        let n = 1 + rng.below(400) as usize;
+        let vals: Vec<u64> = (0..n).map(|_| value(rng)).collect();
+        let whole = record_all(&vals);
+        let threads = 2 + rng.below(5) as usize;
+
+        let shards: Vec<Histogram> = std::thread::scope(|s| {
+            let handles: Vec<_> = (0..threads)
+                .map(|t| {
+                    let mine: Vec<u64> =
+                        vals.iter().copied().skip(t).step_by(threads).collect();
+                    s.spawn(move || record_all(&mine))
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        let mut merged = Histogram::new();
+        for s in &shards {
+            merged.merge(s);
+        }
+        assert_eq!(
+            merged, whole,
+            "histogram from {threads} real threads must be bit-identical to sequential"
+        );
+        assert_eq!(merged.sum_us(), whole.sum_us());
+    });
+}
