@@ -24,6 +24,7 @@ fn main() {
         );
         let mut t = Table::new(&[
             "model",
+            "topology",
             "single-stage",
             "two-level",
             "naive pipeline",
@@ -38,16 +39,22 @@ fn main() {
         ]);
         for model in pipeline_eval_models() {
             let (row, _) = pipeline_row(&model, platform, mesh, microbatches);
+            let naive_feasible = row.naive_us.is_finite();
             t.row(vec![
                 row.model.clone(),
+                row.topology.clone(),
                 fmt_us(row.single_us),
                 fmt_us(row.two_level_us),
-                fmt_us(row.naive_us),
+                if naive_feasible { fmt_us(row.naive_us) } else { "no valid split".into() },
                 row.stages.to_string(),
                 format!("{:.1}%", row.bubble * 100.0),
                 fmt_bytes(row.peak_mem_bytes),
                 format!("{:.2}x", row.single_us / row.two_level_us),
-                format!("{:.2}x", row.naive_us / row.two_level_us),
+                if naive_feasible {
+                    format!("{:.2}x", row.naive_us / row.two_level_us)
+                } else {
+                    "-".into()
+                },
                 row.profile_hits.to_string(),
                 row.profile_misses.to_string(),
                 fmt_us(row.search_us),

@@ -203,6 +203,96 @@ fn main() {
         });
     }
 
+    // sp-dag lane (PR 8): the series-parallel DP vs the plain chain DP
+    // on identical per-instance data — `synthetic_spdag` derives its
+    // profiles from `synthetic_chain` with the same seed, so the two
+    // searches price the same numbers and differ only in topology. The
+    // ratio is the cost of fork/merge junction pricing and the recursive
+    // SP decomposition, not a target; the exact row prices the
+    // branch-and-bound certification lane on the same instance.
+    {
+        let (ss, db, topo) = cfp::harness::synthetic_spdag(1, 2, 3, 2, 3, 3, 0x59DA6);
+        let n = ss.instances.len();
+        let sctx = cost::SearchCtx::new(&ss, &db);
+        let sp = cfp::spdag::SpCtx::new(&sctx, &topo, &db);
+        let (css, cdb) = cfp::harness::synthetic_chain(n, 3, 3, 0x59DA6);
+        let cctx = cost::SearchCtx::new(&css, &cdb);
+        // sanity: the DAG DP and the exact lane agree before we time them
+        let dp_plan = cfp::spdag::sp_search_span(&sctx, &sp, None, 0, n).expect("plan");
+        let ex_plan = cfp::spdag::sp_search_span_exact(&sctx, &sp, None, 0, n).expect("plan");
+        assert!(
+            dp_plan.time_us.to_bits() == ex_plan.time_us.to_bits(),
+            "sp-dag exact lane diverged from the DP on the bench instance"
+        );
+        let budget = Duration::from_millis(if smoke { 100 } else { 400 });
+        let chain = bench(&format!("spdag/chain_dp/{n}n"), budget, || {
+            black_box(cost::search_span_ctx(&cctx, None, 0, n));
+        });
+        let dag = bench(&format!("spdag/sp_dp/{n}n"), budget, || {
+            black_box(cfp::spdag::sp_search_span(&sctx, &sp, None, 0, n));
+        });
+        let overhead = dag.median_ns / chain.median_ns.max(1e-9);
+        println!("spdag/{n}n: DAG DP costs {overhead:.1}x the chain DP on identical data");
+        rows.push(JsonRow {
+            name: format!("spdag/chain_dp/{n}n"),
+            layers: n,
+            ns_per_iter: chain.median_ns,
+            unit: None,
+            speedup: None,
+        });
+        rows.push(JsonRow {
+            name: format!("spdag/sp_dp/{n}n"),
+            layers: n,
+            ns_per_iter: dag.median_ns,
+            unit: None,
+            speedup: Some(overhead),
+        });
+        let ex = bench(&format!("spdag/exact/{n}n"), budget, || {
+            black_box(cfp::spdag::sp_search_span_exact(&sctx, &sp, None, 0, n));
+        });
+        rows.push(JsonRow {
+            name: format!("spdag/exact/{n}n"),
+            layers: n,
+            ns_per_iter: ex.median_ns,
+            unit: None,
+            speedup: Some(ex.median_ns / dag.median_ns.max(1e-9)),
+        });
+
+        // expert-parallel MoE presets: the sp search priced on real
+        // preset artifacts (graph → segments → profiles via run_cfp)
+        if !smoke {
+            use cfp::coordinator::{run_cfp, CfpOptions};
+            let presets = [
+                ModelCfg::preset("moe-ep-tiny").with_layers(4),
+                ModelCfg::preset("moe-ep-7.1b").with_layers(4).with_batch(8).scaled_for_eval(),
+            ];
+            for model in presets {
+                let name = model.name.clone();
+                let layers = model.layers;
+                let opts = CfpOptions::new(model, Platform::a100_pcie(4));
+                let r = run_cfp(&opts);
+                assert!(!r.topo.is_chain(), "{name}: expert branches make an SP-DAG");
+                let sctx = cost::SearchCtx::new(&r.segments, &r.db);
+                let sp = cfp::spdag::SpCtx::new(&sctx, &r.topo, &r.db);
+                let pn = r.segments.instances.len();
+                let pr = bench(
+                    &format!("spdag/preset/{name}"),
+                    Duration::from_millis(400),
+                    || {
+                        black_box(cfp::spdag::sp_search_span(&sctx, &sp, None, 0, pn));
+                    },
+                );
+                rows.push(JsonRow {
+                    name: pr.name.clone(),
+                    layers,
+                    ns_per_iter: pr.median_ns,
+                    unit: None,
+                    speedup: None,
+                });
+            }
+        }
+    }
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_search.json");
     match merge_bench_json(&path, &rows) {
         Ok(()) => println!("wrote {} rows to {}", rows.len(), path.display()),

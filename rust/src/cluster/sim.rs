@@ -302,6 +302,97 @@ pub fn simulate_pipeline_memory(
     high
 }
 
+/// One node of a series-parallel segment-DAG execution
+/// ([`crate::spdag::sim_tasks`] builds these from a fixed plan). `deps`
+/// carry the reshard cost of each incoming edge. Three node shapes:
+///
+/// * plain chain step (`seed_zero = false`, `rebase = None`, ≤ 1 dep):
+///   `fin = (fin_pred + reshard) + time`;
+/// * branch head (`seed_zero = true`): the branch runs on a local clock —
+///   `fin = (0.0 + fork_reshard) + time` — while the dep still gates when
+///   the node may fire;
+/// * merge-owning successor (`rebase = Some(fork)`): branches complete
+///   concurrently, so `fin = (fin_fork + max_d(fin_d + reshard_d)) +
+///   time`, the max folded over `deps` in listed order with first-wins
+///   ties — the planner's own association, reproduced bit-for-bit.
+#[derive(Clone, Debug)]
+pub struct SpTask {
+    /// node compute time (the segment's `t_c + t_p`), µs
+    pub time_us: f64,
+    /// incoming edges as `(task index, reshard µs)`
+    pub deps: Vec<(usize, f64)>,
+    /// branch head: fold from the branch-local zero clock
+    pub seed_zero: bool,
+    /// merge: rebase the folded branch max onto this (fork) task's clock
+    pub rebase: Option<usize>,
+}
+
+/// Event-driven execution of a series-parallel segment-DAG task list:
+/// a genuine dependency-counting worklist (lowest-index-ready order, so
+/// runs are deterministic), with each node's completion computed by the
+/// fold documented on [`SpTask`]. For task lists built by
+/// [`crate::spdag::sim_tasks`] the returned finish times equal the
+/// SP-DAG planner's closed-form span times **bit-for-bit** — the same
+/// invariant `simulate_pipeline` keeps with the inter-op DP.
+///
+/// Panics on a malformed list (forward or self dependencies, a
+/// multi-dep node that is not a merge).
+pub fn simulate_sp_dag(tasks: &[SpTask]) -> Vec<f64> {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+
+    let n = tasks.len();
+    let mut indeg = vec![0usize; n];
+    let mut out: Vec<Vec<usize>> = vec![Vec::new(); n];
+    for (i, t) in tasks.iter().enumerate() {
+        assert!(
+            t.rebase.is_some() || t.deps.len() <= 1,
+            "task {i}: only merge nodes may have multiple dependencies"
+        );
+        let mut preds: Vec<usize> = t.deps.iter().map(|&(p, _)| p).collect();
+        preds.extend(t.rebase);
+        preds.sort_unstable();
+        preds.dedup();
+        for p in preds {
+            assert!(p < i, "task {i}: dependency {p} must point backwards");
+            indeg[i] += 1;
+            out[p].push(i);
+        }
+    }
+
+    let mut fin = vec![0.0f64; n];
+    let mut ready: BinaryHeap<Reverse<usize>> =
+        (0..n).filter(|&i| indeg[i] == 0).map(Reverse).collect();
+    let mut fired = 0usize;
+    while let Some(Reverse(i)) = ready.pop() {
+        let t = &tasks[i];
+        fin[i] = if let Some(f) = t.rebase {
+            let mut mx = f64::NEG_INFINITY;
+            for &(p, r) in &t.deps {
+                let w = fin[p] + r;
+                if w > mx {
+                    mx = w;
+                }
+            }
+            (fin[f] + mx) + t.time_us
+        } else if let Some(&(p, r)) = t.deps.first() {
+            let base = if t.seed_zero { 0.0 } else { fin[p] };
+            (base + r) + t.time_us
+        } else {
+            t.time_us
+        };
+        fired += 1;
+        for &s in &out[i] {
+            indeg[s] -= 1;
+            if indeg[s] == 0 {
+                ready.push(Reverse(s));
+            }
+        }
+    }
+    assert_eq!(fired, n, "dependency cycle in SP-DAG task list");
+    fin
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -421,6 +512,60 @@ mod tests {
         let a = simulate_pipeline_memory(&[1.0, 100.0, 1.0], 6, &[spec; 3]);
         let b = simulate_pipeline_memory(&[100.0, 1.0, 100.0], 6, &[spec; 3]);
         assert_eq!(a, b, "canonical 1F1B pins the window regardless of stage balance");
+    }
+
+    #[test]
+    fn sp_dag_sim_reproduces_the_branch_merge_fold_bitwise() {
+        // fork(2.0) → two 0.0-seeded branches → rebased merge → trunk
+        let tasks = vec![
+            SpTask { time_us: 2.0, deps: vec![], seed_zero: false, rebase: None },
+            SpTask { time_us: 3.0, deps: vec![(0, 0.5)], seed_zero: true, rebase: None },
+            SpTask { time_us: 1.0, deps: vec![(0, 0.25)], seed_zero: true, rebase: None },
+            SpTask {
+                time_us: 4.0,
+                deps: vec![(1, 1.0), (2, 2.0)],
+                seed_zero: false,
+                rebase: Some(0),
+            },
+            SpTask { time_us: 1.5, deps: vec![(3, 0.125)], seed_zero: false, rebase: None },
+        ];
+        let fin = simulate_sp_dag(&tasks);
+        // branch-local clocks: (0.0 + 0.5) + 3.0 = 3.5 and (0.0 + 0.25) + 1.0 = 1.25
+        assert_eq!(fin[1].to_bits(), 3.5f64.to_bits());
+        assert_eq!(fin[2].to_bits(), 1.25f64.to_bits());
+        // merge: (2.0 + max(3.5 + 1.0, 1.25 + 2.0)) + 4.0
+        assert_eq!(fin[3].to_bits(), ((2.0 + (3.5 + 1.0)) + 4.0).to_bits());
+        assert_eq!(fin[4].to_bits(), ((fin[3] + 0.125) + 1.5).to_bits());
+    }
+
+    #[test]
+    fn sp_dag_sim_chain_degenerates_to_the_left_fold() {
+        let tasks = vec![
+            SpTask { time_us: 4.0, deps: vec![], seed_zero: false, rebase: None },
+            SpTask { time_us: 5.0, deps: vec![(0, 0.5)], seed_zero: false, rebase: None },
+            SpTask { time_us: 6.0, deps: vec![(1, 0.25)], seed_zero: false, rebase: None },
+        ];
+        let fin = simulate_sp_dag(&tasks);
+        assert_eq!(fin[2].to_bits(), ((((4.0f64 + 0.5) + 5.0) + 0.25) + 6.0).to_bits());
+    }
+
+    #[test]
+    fn sp_dag_sim_merge_ties_are_first_wins() {
+        // both branches complete at exactly 3.0; the fold must keep the
+        // first operand's bits (strict > comparison)
+        let tasks = vec![
+            SpTask { time_us: 1.0, deps: vec![], seed_zero: false, rebase: None },
+            SpTask { time_us: 3.0, deps: vec![(0, 0.0)], seed_zero: true, rebase: None },
+            SpTask { time_us: 2.0, deps: vec![(0, 1.0)], seed_zero: true, rebase: None },
+            SpTask {
+                time_us: 0.5,
+                deps: vec![(1, 0.0), (2, 0.0)],
+                seed_zero: false,
+                rebase: Some(0),
+            },
+        ];
+        let fin = simulate_sp_dag(&tasks);
+        assert_eq!(fin[3].to_bits(), ((1.0 + 3.0f64) + 0.5).to_bits());
     }
 
     #[test]

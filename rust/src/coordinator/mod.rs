@@ -19,7 +19,8 @@ use crate::profiler::{
     profile_model_handle, CacheHandle, ProfileCache, ProfileDb, ProfileOptions,
     SharedProfileCache,
 };
-use crate::segment::{extract_segments, SegmentSet};
+use crate::segment::{extract_with_topology, SegmentSet};
+use crate::spdag::{self, SpTopology};
 use crate::spmd::Mesh;
 use crate::util::cli::Args;
 
@@ -284,6 +285,9 @@ pub struct CfpResult {
     pub graph: Graph,
     pub blocks: BlockSet,
     pub segments: SegmentSet,
+    /// series-parallel shape of `segments` — `chain(n)` for linear models,
+    /// fork/join branch groups for MoE expert-parallel models
+    pub topo: SpTopology,
     pub db: ProfileDb,
     pub plan: Plan,
     pub timings: PhaseTimings,
@@ -424,7 +428,7 @@ pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> Cfp
     let t0 = Instant::now();
     let graph = build_training(&opts.model);
     let blocks = build_parallel_blocks(&graph, opts.mesh.intra);
-    let segments = extract_segments(&graph, &blocks);
+    let (segments, topo) = extract_with_topology(&graph, &blocks);
     timings.analysis_passes_s = t0.elapsed().as_secs_f64();
 
     // ExecCompiling + MetricsProfiling (overlapped inside profile_model).
@@ -451,12 +455,21 @@ pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> Cfp
     let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
     let sctx = cost::SearchCtx::new(&segments, &db);
     let n = segments.instances.len();
-    let plan = cost::search_span_engine(&sctx, cap, 0, n, opts.engine)
-        .or_else(|| cost::search_span_engine(&sctx, None, 0, n, opts.engine))
-        .expect("no feasible plan");
+    // chain models take the chain DP verbatim (bit-identical fast path);
+    // DAG models go through the spdag lanes with the same engine portfolio
+    let plan = if topo.is_chain() {
+        cost::search_span_engine(&sctx, cap, 0, n, opts.engine)
+            .or_else(|| cost::search_span_engine(&sctx, None, 0, n, opts.engine))
+            .expect("no feasible plan")
+    } else {
+        let sp = spdag::SpCtx::new(&sctx, &topo, &db);
+        spdag::sp_search_span_engine(&sctx, &sp, cap, 0, n, opts.engine)
+            .or_else(|| spdag::sp_search_span_engine(&sctx, &sp, None, 0, n, opts.engine))
+            .expect("no feasible plan")
+    };
     timings.compose_search_s = t2.elapsed().as_secs_f64();
 
-    CfpResult { graph, blocks, segments, db, plan, timings, mesh: opts.mesh }
+    CfpResult { graph, blocks, segments, topo, db, plan, timings, mesh: opts.mesh }
 }
 
 /// Output of the two-level (inter-op × intra-op) planner.
@@ -533,6 +546,7 @@ pub fn run_cfp_two_level_with_handle(
         mesh: opts.mesh,
         blocks: single.blocks.clone(),
         segments: single.segments.clone(),
+        topo: single.topo.clone(),
         db: single.db.clone(),
     });
     ctxs.ensure_all(&single.graph, &popts, cache.reborrow());
@@ -585,6 +599,47 @@ mod tests {
         assert!(r.plan.time_us > 0.0);
         assert!(!r.describe_plan().is_empty());
         assert!(r.timings.analysis_passes_s > 0.0);
+    }
+
+    #[test]
+    fn moe_branched_model_plans_end_to_end_and_replays_bitwise() {
+        let opts = CfpOptions::new(
+            ModelCfg::preset("moe-ep-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        );
+        let r = run_cfp(&opts);
+        assert!(!r.topo.is_chain(), "moe-ep models must plan as a DAG");
+        assert!(r.plan.time_us > 0.0);
+        assert_eq!(r.plan.choice.len(), r.segments.instances.len());
+        // the planner's reported time is the DAG closed form: replaying
+        // the chosen assignment must reproduce it bit-for-bit
+        let sctx = cost::SearchCtx::new(&r.segments, &r.db);
+        let sp = spdag::SpCtx::new(&sctx, &r.topo, &r.db);
+        let n = r.segments.instances.len();
+        let (t, m) = spdag::sp_plan_cost_span(&sctx, &sp, &r.plan.choice, 0, n);
+        assert!(t == r.plan.time_us, "replay {t} vs plan {}", r.plan.time_us);
+        assert_eq!(m, r.plan.mem_bytes);
+    }
+
+    #[test]
+    fn chain_models_keep_the_chain_planner_bitwise() {
+        // the chain fast path: linear models must produce exactly the
+        // plan the chain DP produces, bit for bit
+        let opts = CfpOptions::new(
+            ModelCfg::preset("gpt-tiny").with_layers(2),
+            Platform::a100_pcie(4),
+        );
+        let r = run_cfp(&opts);
+        assert!(r.topo.is_chain());
+        let sctx = cost::SearchCtx::new(&r.segments, &r.db);
+        let n = r.segments.instances.len();
+        let cap = Some(opts.platform.mem_capacity());
+        let direct = cost::search_span_engine(&sctx, cap, 0, n, cost::SearchEngine::Dp)
+            .or_else(|| cost::search_span_engine(&sctx, None, 0, n, cost::SearchEngine::Dp))
+            .unwrap();
+        assert_eq!(r.plan.choice, direct.choice);
+        assert!(r.plan.time_us == direct.time_us, "bit-identical time");
+        assert_eq!(r.plan.mem_bytes, direct.mem_bytes);
     }
 
     #[test]

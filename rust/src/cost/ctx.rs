@@ -29,7 +29,7 @@
 
 use std::collections::HashMap;
 
-use crate::memory::RematTable;
+use crate::memory::{RecomputeSpec, RematPoint, RematTable};
 use crate::profiler::ProfileDb;
 use crate::segment::SegmentSet;
 
@@ -124,6 +124,52 @@ impl SearchCtx {
 
     pub fn is_empty(&self) -> bool {
         self.n == 0
+    }
+
+    // Flat-column accessors for searchers outside `cost` (the SP-DAG
+    // planner in `crate::spdag` runs its branch DPs on these columns, so
+    // its values replay this context's float ops exactly).
+
+    /// Unique id at chain position `i`.
+    pub fn uid_at(&self, i: usize) -> usize {
+        self.uid[i]
+    }
+
+    /// Config count at chain position `i`.
+    pub fn ncfg_at(&self, i: usize) -> usize {
+        self.ncfg[self.uid[i]]
+    }
+
+    /// Flat column offset of position `i`'s unique (index with
+    /// `off_at(i) + cfg` into the column slices).
+    pub fn off_at(&self, i: usize) -> usize {
+        self.off[self.uid[i]]
+    }
+
+    /// `t_c + t_p` per flat (unique, config).
+    pub fn time_col(&self) -> &[f64] {
+        &self.time
+    }
+
+    /// Profile peak memory per flat (unique, config).
+    pub fn mem_col(&self) -> &[u64] {
+        &self.mem
+    }
+
+    /// Static (non-activation) bytes per flat (unique, config).
+    pub fn stat_col(&self) -> &[u64] {
+        &self.stat
+    }
+
+    /// Dense reshard matrix pricing the chain edge `i − 1 → i`,
+    /// row-major `[from_cfg * ncfg_at(i) + to_cfg]`.
+    pub fn step_matrix(&self, i: usize) -> &[f64] {
+        &self.mats[self.step_mat[i]]
+    }
+
+    /// Remat frontier for flat column index `flat` under `spec`.
+    pub fn remat_at(&self, flat: usize, spec: RecomputeSpec) -> &[RematPoint] {
+        self.remat.points(flat, spec)
     }
 
     /// True when the DP step into position `i` is the *same* min-plus

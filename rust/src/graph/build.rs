@@ -65,6 +65,13 @@ pub struct Graph {
     layer_ctx: Option<usize>,
     role_ctx: Role,
     pub layer_of: Vec<Option<usize>>,
+    /// Parallel-branch metadata recorded by builders (empty on every chain
+    /// model): one entry per fork/join group, each branch a half-open
+    /// forward op-id range `[start, end)`. Ops inside a branch range depend
+    /// only on pre-fork ops and other ops of the same branch, so the
+    /// branches are mutually independent — `segment::extract_with_topology`
+    /// turns each range into its own segment instance of an SP-DAG.
+    pub branch_groups: Vec<Vec<(OpId, OpId)>>,
 }
 
 impl Graph {
@@ -75,7 +82,22 @@ impl Graph {
             layer_ctx: None,
             role_ctx: Role::Fwd,
             layer_of: Vec::new(),
+            branch_groups: Vec::new(),
         }
+    }
+
+    /// Record one fork/join group of mutually independent branch op
+    /// ranges. Ranges must be non-empty, disjoint, and in ascending op
+    /// order (the builder emits branches one after another).
+    pub fn record_branch_group(&mut self, branches: Vec<(OpId, OpId)>) {
+        assert!(branches.len() >= 2, "a branch group needs ≥ 2 branches");
+        for w in branches.windows(2) {
+            assert!(w[0].1 <= w[1].0, "branch ranges must be disjoint and ascending");
+        }
+        for &(s, e) in &branches {
+            assert!(s < e && e <= self.ops.len(), "empty or out-of-range branch");
+        }
+        self.branch_groups.push(branches);
     }
 
     pub fn set_layer(&mut self, layer: Option<usize>) {

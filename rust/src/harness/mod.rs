@@ -10,6 +10,7 @@ use crate::interop::StageSpec;
 use crate::models::ModelCfg;
 use crate::profiler::{ProfileDb, ReshardTable, SegmentConfig, SegmentProfile};
 use crate::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+use crate::spdag::{BranchGroup, SpTopology};
 use crate::spmd::{Mesh, ShardState};
 use crate::util::Pcg64;
 
@@ -78,6 +79,8 @@ pub fn pipeline_eval_models() -> Vec<ModelCfg> {
         ModelCfg::preset("gpt-2.6b").with_layers(4).with_batch(8).scaled_for_eval(),
         ModelCfg::preset("llama-7b").with_layers(4).with_batch(8).scaled_for_eval(),
         ModelCfg::preset("moe-7.1b").with_layers(4).with_batch(8).scaled_for_eval(),
+        // expert-parallel MoE: the SP-DAG workload (topology `sp-dag{E}`)
+        ModelCfg::preset("moe-ep-7.1b").with_layers(4).with_batch(8).scaled_for_eval(),
     ]
 }
 
@@ -88,11 +91,15 @@ pub struct PipelineRow {
     pub platform: &'static str,
     pub gpus: usize,
     pub microbatches: usize,
+    /// segment-graph shape: `chain` for linear models, `sp-dag{E}` for
+    /// expert-parallel MoE (the [`SpTopology::signature`] wire form)
+    pub topology: String,
     /// single-stage CFP step time (µs)
     pub single_us: f64,
     /// two-level planner's composed step time (µs)
     pub two_level_us: f64,
-    /// naive equal-split + DDP-inside pipeline baseline (µs)
+    /// naive equal-split + DDP-inside pipeline baseline (µs);
+    /// `f64::INFINITY` when no equal split lands on valid DAG cuts
     pub naive_us: f64,
     /// stage count the two-level planner chose
     pub stages: usize,
@@ -125,15 +132,18 @@ pub fn pipeline_row(
     opts.mesh = mesh;
     let r = run_cfp_two_level(&opts);
     let pipeline = r.pipeline.as_ref().expect("uncapped two-level planning always plans");
-    let naive = r.naive.as_ref().expect("uncapped naive pipeline always plans");
+    // a chain always has an equal split; a DAG's equal split can miss
+    // every valid cut, in which case the baseline is simply infeasible
+    let naive_us = r.naive.as_ref().map_or(f64::INFINITY, |n| n.step_time_us);
     let row = PipelineRow {
         model: model.name.clone(),
         platform: platform.name,
         gpus: mesh.total(),
         microbatches,
+        topology: r.single.topo.signature(),
         single_us: r.single.plan.time_us,
         two_level_us: pipeline.step_time_us,
-        naive_us: naive.step_time_us,
+        naive_us,
         stages: pipeline.num_stages(),
         bubble: pipeline.bubble_fraction,
         peak_mem_bytes: pipeline.peak_mem_bytes,
@@ -266,6 +276,39 @@ pub fn synthetic_chain(n: usize, uniques: usize, cfgs: usize, seed: u64) -> (Seg
     (SegmentSet { instances, unique }, db)
 }
 
+/// A deterministic synthetic SP-DAG instance for the spdag bench and
+/// property lanes: `trunk` leading trunk instances, then `groups`
+/// fork/join groups of `branches` branches × `branch_len` instances,
+/// each followed by one merge-successor trunk instance. Profiles and
+/// unique assignments come from [`synthetic_chain`] over the same seed,
+/// so the chain and DAG lanes price identical per-instance data and
+/// differ only in topology.
+pub fn synthetic_spdag(
+    trunk: usize,
+    groups: usize,
+    branches: usize,
+    branch_len: usize,
+    uniques: usize,
+    cfgs: usize,
+    seed: u64,
+) -> (SegmentSet, ProfileDb, SpTopology) {
+    assert!(trunk >= 1 && groups >= 1 && branches >= 2 && branch_len >= 1);
+    let n = trunk + groups * (branches * branch_len + 1);
+    let (ss, db) = synthetic_chain(n, uniques, cfgs, seed);
+    let mut topo_groups = Vec::with_capacity(groups);
+    let mut pos = trunk;
+    for _ in 0..groups {
+        let ranges: Vec<(usize, usize)> = (0..branches)
+            .map(|b| (pos + b * branch_len, pos + (b + 1) * branch_len))
+            .collect();
+        topo_groups.push(BranchGroup { branches: ranges });
+        pos += branches * branch_len + 1; // branches, then the merge successor
+    }
+    let topo = SpTopology { n, groups: topo_groups };
+    topo.validate().expect("synthetic SP topology is valid by construction");
+    (ss, db, topo)
+}
+
 /// Markdown-ish aligned table printer.
 pub struct Table {
     headers: Vec<String>,
@@ -357,11 +400,36 @@ mod tests {
     #[test]
     fn pipeline_eval_presets_are_well_formed() {
         let models = pipeline_eval_models();
-        assert_eq!(models.len(), 3, "GPT, LLAMA, MoE");
-        for m in models {
+        assert_eq!(models.len(), 4, "GPT, LLAMA, MoE, expert-parallel MoE");
+        for m in &models {
             assert_eq!(m.hidden % m.heads, 0, "{}", m.name);
             assert!(m.layers >= 2, "{}", m.name);
         }
+        assert!(models.iter().any(|m| m.expert_branches), "the SP-DAG workload is present");
+    }
+
+    #[test]
+    fn synthetic_spdag_layout_is_valid_and_deterministic() {
+        let (ss, db, topo) = synthetic_spdag(2, 2, 3, 2, 3, 4, 0xDA6);
+        assert_eq!(topo.n, 2 + 2 * (3 * 2 + 1));
+        assert_eq!(ss.instances.len(), topo.n);
+        assert_eq!(topo.groups.len(), 2);
+        assert_eq!(topo.max_branches(), 3);
+        assert_eq!(topo.signature(), "sp-dag3");
+        assert_eq!(db.segments.len(), 3);
+        // same seed ⇒ identical topology and identical profile bits
+        let (_, db2, topo2) = synthetic_spdag(2, 2, 3, 2, 3, 4, 0xDA6);
+        assert_eq!(topo, topo2);
+        assert!(db.segments[0].t_c_us[0].to_bits() == db2.segments[0].t_c_us[0].to_bits());
+        // the chain of the same shape prices identical per-instance data
+        let (ss_chain, db_chain) = synthetic_chain(topo.n, 3, 4, 0xDA6);
+        let uids: Vec<usize> = ss.instances.iter().map(|i| i.unique_id).collect();
+        let uids_chain: Vec<usize> = ss_chain.instances.iter().map(|i| i.unique_id).collect();
+        assert_eq!(uids, uids_chain);
+        assert!(
+            db.segments[0].t_p_us[0].to_bits() == db_chain.segments[0].t_p_us[0].to_bits(),
+            "chain and DAG lanes share the profile stream"
+        );
     }
 
     #[test]

@@ -89,7 +89,8 @@ use crate::graph::Graph;
 use crate::memory::{self, RecomputeSpec, SpanFootprint};
 use crate::pblock::{build_parallel_blocks, BlockSet};
 use crate::profiler::{profile_model_handle, CacheHandle, ProfileDb, ProfileOptions};
-use crate::segment::{extract_segments, SegmentSet};
+use crate::segment::{extract_with_topology, SegmentSet};
+use crate::spdag::{self, SpCtx, SpTopology};
 use crate::spmd::{CollKind, Mesh};
 use crate::util::ThreadPool;
 
@@ -188,6 +189,9 @@ pub struct StageContext {
     pub mesh: Mesh,
     pub blocks: BlockSet,
     pub segments: SegmentSet,
+    /// series-parallel shape of `segments` (`chain(n)` for linear models);
+    /// stage cuts must fall on [`SpTopology::valid_cut`] positions
+    pub topo: SpTopology,
     pub db: ProfileDb,
 }
 
@@ -238,12 +242,13 @@ impl StageContexts {
             }
             let mesh = sub_mesh(opts.mesh, devices);
             let blocks = build_parallel_blocks(g, mesh.intra);
-            let segments = extract_segments(g, &blocks);
+            let (segments, topo) = extract_with_topology(g, &blocks);
             if segments.instances.len() < k {
                 continue;
             }
             let db = profile_context(g, opts, mesh, &blocks, &segments, cache.reborrow());
-            self.by_devices.insert(devices, StageContext { devices, mesh, blocks, segments, db });
+            self.by_devices
+                .insert(devices, StageContext { devices, mesh, blocks, segments, topo, db });
         }
     }
 
@@ -283,9 +288,9 @@ pub fn build_context(
 ) -> StageContext {
     let mesh = sub_mesh(opts.mesh, devices);
     let blocks = build_parallel_blocks(g, mesh.intra);
-    let segments = extract_segments(g, &blocks);
+    let (segments, topo) = extract_with_topology(g, &blocks);
     let db = profile_context(g, opts, mesh, &blocks, &segments, cache);
-    StageContext { devices, mesh, blocks, segments, db }
+    StageContext { devices, mesh, blocks, segments, topo, db }
 }
 
 /// The MetricsProfiling half of [`build_context`]: profile an
@@ -445,6 +450,9 @@ impl PipelinePlan {
 /// the same prefix-closed single-span searchers, bit-identically.
 pub struct SpanTables {
     ctx: Arc<SearchCtx>,
+    /// present iff the context's segment DAG is not a chain; routes every
+    /// span solve through the spdag lanes
+    sp: Option<SpCtx>,
     values: SpanValues,
 }
 
@@ -461,6 +469,11 @@ impl SpanTables {
     /// jobs over the pool instead).
     pub fn build(ctx: &StageContext, opts: &PipelineOptions) -> SpanTables {
         let sctx = Arc::new(SearchCtx::new(&ctx.segments, &ctx.db));
+        let sp = (!ctx.topo.is_chain()).then(|| SpCtx::new(&sctx, &ctx.topo, &ctx.db));
+        if let Some(sp) = sp {
+            let values = dag_span_values(&sctx, &sp, opts);
+            return SpanTables { ctx: sctx, sp: Some(sp), values };
+        }
         let n = sctx.len();
         let values = if opts.memory_aware() {
             let spec = opts.recompute;
@@ -471,7 +484,7 @@ impl SpanTables {
             let times = (0..n).map(|lo| cost::sweep_span_times(&sctx, lo, cap)).collect();
             SpanValues::Legacy { cap, times }
         };
-        SpanTables { ctx: sctx, values }
+        SpanTables { ctx: sctx, sp: None, values }
     }
 
     /// A table with the search context but no swept values — all a
@@ -481,12 +494,13 @@ impl SpanTables {
     /// sweeps it would never read.
     fn values_only_ctx(ctx: &StageContext, opts: &PipelineOptions) -> SpanTables {
         let sctx = Arc::new(SearchCtx::new(&ctx.segments, &ctx.db));
+        let sp = (!ctx.topo.is_chain()).then(|| SpCtx::new(&sctx, &ctx.topo, &ctx.db));
         let values = if opts.memory_aware() {
             SpanValues::Memory { spec: opts.recompute, rows: Vec::new() }
         } else {
             SpanValues::Legacy { cap: opts.device_cap(), times: Vec::new() }
         };
-        SpanTables { ctx: sctx, values }
+        SpanTables { ctx: sctx, sp, values }
     }
 
     /// Whole-batch intra-op time of span `[lo, hi)` as stage `stage_idx`
@@ -507,6 +521,58 @@ impl SpanTables {
                 cost::select_time(&rows[lo][hi - lo - 1], me, f, opts.device_cap())
             }
         }
+    }
+}
+
+/// Span-value tables for a DAG-shaped context: every *valid* span (both
+/// ends on [`SpTopology::valid_cut`] positions — a stage boundary inside
+/// a branch group would sever branches from their merge) is solved
+/// directly through the spdag lanes; invalid spans store `None` / an
+/// empty frontier, which [`SpanTables::span_time`] reports as infeasible,
+/// so the stage-split DP never places a cut inside a group.
+fn dag_span_values(ctx: &SearchCtx, sp: &SpCtx, opts: &PipelineOptions) -> SpanValues {
+    let n = ctx.len();
+    let valid = |lo: usize, hi: usize| sp.topo.valid_cut(lo) && sp.topo.valid_cut(hi);
+    if opts.memory_aware() {
+        let spec = opts.recompute;
+        let rows = (0..n)
+            .map(|lo| {
+                (lo + 1..=n)
+                    .map(|hi| {
+                        if !valid(lo, hi) {
+                            return Vec::new();
+                        }
+                        spdag::sp_search_mem_span(ctx, sp, lo, hi, spec)
+                            .iter()
+                            .map(|p| FrontierRow {
+                                time_us: p.time_us,
+                                static_bytes: p.footprint.static_bytes,
+                                retained_bytes: p.footprint.retained_bytes,
+                                transient_bytes: p.footprint.transient_bytes,
+                            })
+                            .collect()
+                    })
+                    .collect()
+            })
+            .collect();
+        SpanValues::Memory { spec, rows }
+    } else {
+        let cap = opts.device_cap();
+        let times = (0..n)
+            .map(|lo| {
+                (lo + 1..=n)
+                    .map(|hi| {
+                        if !valid(lo, hi) {
+                            return None;
+                        }
+                        spdag::sp_search_span(ctx, sp, Some(cap), lo, hi)
+                            .or_else(|| spdag::sp_search_span(ctx, sp, None, lo, hi))
+                            .map(|p| p.time_us)
+                    })
+                    .collect()
+            })
+            .collect();
+        SpanValues::Legacy { cap, times }
     }
 }
 
@@ -534,6 +600,11 @@ fn build_span_tables(
                 // k > n is structurally infeasible (the DP returns None
                 // without reading the table) — sweeps would be waste
                 out.insert(d, SpanTables::values_only_ctx(ctx, opts));
+            } else if !ctx.topo.is_chain() {
+                // DAG contexts fill their tables through the spdag
+                // lanes (serial, deterministic) — the chain sweeps
+                // below would misprice spans containing branch groups
+                out.insert(d, SpanTables::build(ctx, opts));
             } else {
                 arcs.insert(d, Arc::new(SearchCtx::new(&ctx.segments, &ctx.db)));
             }
@@ -561,7 +632,11 @@ fn build_span_tables(
                 (0..c.len()).map(|_| it.next().expect("one sweep per origin")).collect();
             out.insert(
                 d,
-                SpanTables { ctx: Arc::clone(c), values: SpanValues::Memory { spec, rows } },
+                SpanTables {
+                    ctx: Arc::clone(c),
+                    sp: None,
+                    values: SpanValues::Memory { spec, rows },
+                },
             );
         }
     } else {
@@ -579,7 +654,11 @@ fn build_span_tables(
                 (0..c.len()).map(|_| it.next().expect("one sweep per origin")).collect();
             out.insert(
                 d,
-                SpanTables { ctx: Arc::clone(c), values: SpanValues::Legacy { cap, times } },
+                SpanTables {
+                    ctx: Arc::clone(c),
+                    sp: None,
+                    values: SpanValues::Legacy { cap, times },
+                },
             );
         }
     }
@@ -869,14 +948,39 @@ pub fn naive_fixed_stages(
     let me = m_eff(opts, k);
     let (ss, db) = (&ctx.segments, &ctx.db);
     let choice = ddp_choice(ctx);
-    let bounds: Vec<usize> = (0..=k).map(|s| s * n / k).collect();
+    let mut bounds: Vec<usize> = (0..=k).map(|s| s * n / k).collect();
+    // on a DAG chain the equal-split cut may land inside a branch group;
+    // snap forward to the next valid cut (deterministic), or declare the
+    // stage count infeasible when snapping runs out of room
+    if !ctx.topo.is_chain() {
+        for s in 1..k {
+            let mut b = bounds[s].max(bounds[s - 1] + 1);
+            while b < n && !ctx.topo.valid_cut(b) {
+                b += 1;
+            }
+            if b >= n {
+                return None;
+            }
+            bounds[s] = b;
+        }
+    }
+    // the naive recipe prices each stage by replaying the DDP choice —
+    // through the DAG closed form when the chain has branch groups
+    let dag = (!ctx.topo.is_chain()).then(|| {
+        let sctx = SearchCtx::new(ss, db);
+        let sp = SpCtx::new(&sctx, &ctx.topo, db);
+        (sctx, sp)
+    });
     let mut stages = Vec::with_capacity(k);
     let mut lats = Vec::with_capacity(k);
     let mut mem_peak = 0u64;
     let mut peak_1f1b = 0u64;
     for s in 0..k {
         let (lo, hi) = (bounds[s], bounds[s + 1]);
-        let (base_us, mem_bytes) = cost::plan_cost_span(ss, db, &choice[lo..hi], lo, hi);
+        let (base_us, mem_bytes) = match &dag {
+            Some((sctx, sp)) => spdag::sp_plan_cost_span(sctx, sp, &choice[lo..hi], lo, hi),
+            None => cost::plan_cost_span(ss, db, &choice[lo..hi], lo, hi),
+        };
         let f = memory::inflight_microbatches(k, s, me);
         let mut footprint = memory::span_footprint(ss, db, &choice[lo..hi], lo, hi);
         let mut remat = vec![false; hi - lo];
@@ -975,15 +1079,22 @@ fn build_stage_plan(
     let p2p_in_us = if stage_idx == 0 { 0.0 } else { p2p_in_us(g, ctx, opts, lo, stage_idx) };
     let (plan, footprint, remat) = match &tables.values {
         SpanValues::Memory { spec, .. } => {
-            let frontier = cost::search_span_mem_ctx(&tables.ctx, lo, hi, *spec);
+            let frontier = match &tables.sp {
+                Some(sp) => spdag::sp_search_mem_span(&tables.ctx, sp, lo, hi, *spec),
+                None => cost::search_span_mem_ctx(&tables.ctx, lo, hi, *spec),
+            };
             let sel = memory::select_feasible(&frontier, me, f, opts.device_cap())?.clone();
             let fp = sel.footprint;
             let (_, mem_bytes) = cost::plan_cost_span(&ctx.segments, &ctx.db, &sel.choice, lo, hi);
             (Plan { choice: sel.choice, time_us: sel.time_us, mem_bytes }, fp, sel.remat)
         }
         SpanValues::Legacy { cap, .. } => {
-            let plan = cost::search_span_ctx(&tables.ctx, Some(*cap), lo, hi)
-                .or_else(|| cost::search_span_ctx(&tables.ctx, None, lo, hi))?;
+            let plan = match &tables.sp {
+                Some(sp) => spdag::sp_search_span(&tables.ctx, sp, Some(*cap), lo, hi)
+                    .or_else(|| spdag::sp_search_span(&tables.ctx, sp, None, lo, hi)),
+                None => cost::search_span_ctx(&tables.ctx, Some(*cap), lo, hi)
+                    .or_else(|| cost::search_span_ctx(&tables.ctx, None, lo, hi)),
+            }?;
             let fp = memory::span_footprint(&ctx.segments, &ctx.db, &plan.choice, lo, hi);
             (plan, fp, vec![false; hi - lo])
         }
@@ -1023,6 +1134,7 @@ pub fn exact_crosscheck_stages(
         .get(plan.devices_per_stage)
         .ok_or_else(|| format!("no stage context for d = {}", plan.devices_per_stage))?;
     let sctx = SearchCtx::new(&ctx.segments, &ctx.db);
+    let sp = (!ctx.topo.is_chain()).then(|| SpCtx::new(&sctx, &ctx.topo, &ctx.db));
     let k = plan.num_stages();
     let me = memory::memory_microbatches(k, plan.microbatches);
     let cap = opts.device_cap();
@@ -1034,15 +1146,20 @@ pub fn exact_crosscheck_stages(
         }
         let got = st.plan.time_us;
         if opts.memory_aware() {
-            let ex = match cost::exact::search_span_mem_exact_budget(
-                &sctx,
-                lo,
-                hi,
-                opts.recompute,
-                4_000_000,
-            ) {
-                Ok(frontier) => frontier,
-                Err(cost::exact::Exhausted) => continue,
+            let ex = match &sp {
+                // the SP memory oracle is a full enumeration with true
+                // dominance — no node budget to exhaust
+                Some(sp) => spdag::sp_search_mem_span_exact(&sctx, sp, lo, hi, opts.recompute),
+                None => match cost::exact::search_span_mem_exact_budget(
+                    &sctx,
+                    lo,
+                    hi,
+                    opts.recompute,
+                    4_000_000,
+                ) {
+                    Ok(frontier) => frontier,
+                    Err(cost::exact::Exhausted) => continue,
+                },
             };
             let f = memory::inflight_microbatches(k, i, me);
             match memory::select_feasible(&ex, me, f, cap) {
@@ -1068,12 +1185,33 @@ pub fn exact_crosscheck_stages(
                 }
             }
         } else {
-            let dp_capped = cost::search_span_ctx(&sctx, Some(cap), lo, hi);
-            let ex_capped =
-                match cost::exact::search_span_exact_budget(&sctx, Some(cap), lo, hi, 4_000_000) {
+            let dp_capped = match &sp {
+                Some(sp) => spdag::sp_search_span(&sctx, sp, Some(cap), lo, hi),
+                None => cost::search_span_ctx(&sctx, Some(cap), lo, hi),
+            };
+            let ex_capped = match &sp {
+                Some(sp) => match spdag::sp_search_span_exact_budget(
+                    &sctx,
+                    sp,
+                    Some(cap),
+                    lo,
+                    hi,
+                    4_000_000,
+                ) {
                     Ok(p) => p,
                     Err(cost::exact::Exhausted) => continue,
-                };
+                },
+                None => match cost::exact::search_span_exact_budget(
+                    &sctx,
+                    Some(cap),
+                    lo,
+                    hi,
+                    4_000_000,
+                ) {
+                    Ok(p) => p,
+                    Err(cost::exact::Exhausted) => continue,
+                },
+            };
             match (dp_capped, ex_capped) {
                 (Some(_), None) => {
                     return Err(format!(
@@ -1109,11 +1247,19 @@ pub fn exact_crosscheck_stages(
                     // both searchers agree the cap is infeasible; the
                     // stage plan came from the uncapped fallback, where
                     // the scalar DP is provably exact — demand bit-parity
-                    let e = match cost::exact::search_span_exact_budget(
-                        &sctx, None, lo, hi, 4_000_000,
-                    ) {
-                        Ok(p) => p,
-                        Err(cost::exact::Exhausted) => continue,
+                    let e = match &sp {
+                        Some(sp) => match spdag::sp_search_span_exact_budget(
+                            &sctx, sp, None, lo, hi, 4_000_000,
+                        ) {
+                            Ok(p) => p,
+                            Err(cost::exact::Exhausted) => continue,
+                        },
+                        None => match cost::exact::search_span_exact_budget(
+                            &sctx, None, lo, hi, 4_000_000,
+                        ) {
+                            Ok(p) => p,
+                            Err(cost::exact::Exhausted) => continue,
+                        },
                     };
                     match e {
                         Some(e) if e.time_us.to_bits() == got.to_bits() => {}

@@ -45,6 +45,7 @@ pub mod profiler;
 pub mod runtime;
 pub mod segment;
 pub mod service;
+pub mod spdag;
 pub mod spmd;
 pub mod trainer;
 pub mod util;

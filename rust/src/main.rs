@@ -49,7 +49,7 @@ fn main() {
                  [--recompute auto|off] [--engine dp|exact|auto] [--steps N] [--lr F] \
                  [--listen ADDR] [--workers N] [--plan-cache N] \
                  [--plan-cache-file FILE] [--quota RATE] [--quota-burst N] \
-                 [--max-pending N] \
+                 [--max-pending N] [--auth-token SECRET] \
                  [--connect ADDR] [--requests N] [--clients N] [--distinct N]"
             );
             1
@@ -246,6 +246,7 @@ fn serve_config(args: &Args, workers: usize) -> ServeConfig {
             .get_f64_opt("quota")
             .map(|rate| (rate, args.get_f64("quota-burst", (2.0 * rate).max(1.0)))),
         max_pending: args.get_usize("max-pending", 1024),
+        auth_token: args.get("auth-token").map(|s| s.to_string()),
     }
 }
 

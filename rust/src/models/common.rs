@@ -159,6 +159,73 @@ pub fn moe_ffn(g: &mut Graph, x3d: OpId, normed: OpId, cfg: &ModelCfg, li: usize
     g.binary(ElemOp::Add, x3d, y3d, &format!("{p}/residual"))
 }
 
+/// SP-DAG MoE FFN: the same GShard top-1 structure as [`moe_ffn`], but
+/// each expert is its own *branch* — slice that expert's capacity rows
+/// out of the dispatch, run a dense per-expert FFN, pad back into the
+/// (E, C, H) layout — with the branch op ranges recorded in
+/// [`Graph::branch_groups`]. `segment::extract_with_topology` turns each
+/// branch into its own segment instance, so the spdag planner searches
+/// every expert's parallelism independently (expert parallelism as a
+/// first-class axis) and prices the fork/merge junctions with the
+/// ordinary reshard matrices.
+pub fn moe_ffn_branched(
+    g: &mut Graph,
+    x3d: OpId,
+    normed: OpId,
+    cfg: &ModelCfg,
+    li: usize,
+) -> OpId {
+    let (b, s, h, f, e) = (cfg.batch, cfg.seq, cfg.hidden, cfg.ffn, cfg.experts);
+    let t = b * s;
+    let p = format!("l{li}/moe");
+
+    // shared router trunk — identical to moe_ffn up to the dispatch
+    let x2d = g.reshape(normed, vec![t, h], &format!("{p}/x2d"));
+    let wg = g.param(&format!("{p}/gate_w"), vec![h, e], ParamClass::Weight);
+    let logits = g.matmul(x2d, wg, &format!("{p}/gate_logits")); // (T, E)
+    let probs = g.softmax(logits, &format!("{p}/gate_softmax"));
+    let m = g.reduce(probs, vec![1], ReduceKind::Max, &format!("{p}/gate_max"));
+    let mb = g.broadcast(m, vec![0], vec![t, e], &format!("{p}/gate_max_b"));
+    let mask = g.binary(ElemOp::CmpEq, probs, mb, &format!("{p}/onehot_mask"));
+    let one = g.constant(1.0, vec![]);
+    let one_b = g.broadcast(one, vec![], vec![t, e], &format!("{p}/one_b"));
+    let zero = g.constant(0.0, vec![]);
+    let zero_b = g.broadcast(zero, vec![], vec![t, e], &format!("{p}/zero_b"));
+    let onehot = g.elem(ElemOp::Select, vec![mask, one_b, zero_b], &format!("{p}/onehot"));
+    let pw = g.binary(ElemOp::Mul, probs, onehot, &format!("{p}/probs_sel"));
+    let weight = g.reduce(pw, vec![1], ReduceKind::Sum, &format!("{p}/weight")); // (T)
+    let c = t / e;
+    let xd = g.route(x2d, vec![e, c, h], &format!("{p}/dispatch"));
+
+    // one branch per expert: slice its capacity rows, dense FFN, pad back
+    let mut padded = Vec::with_capacity(e);
+    let mut ranges = Vec::with_capacity(e);
+    for ei in 0..e {
+        let start = g.ops.len();
+        let bp = format!("{p}/e{ei}");
+        let xe = g.slice(xd, 0, ei, &format!("{bp}/in")); // (C, H)
+        let w1 = g.param(&format!("{bp}/w1"), vec![h, f], ParamClass::Weight);
+        let w2 = g.param(&format!("{bp}/w2"), vec![f, h], ParamClass::Weight);
+        let h1 = g.matmul(xe, w1, &format!("{bp}/fc1")); // (C, F)
+        let a = g.unary(ElemOp::Gelu, h1, &format!("{bp}/gelu"));
+        let h2 = g.matmul(a, w2, &format!("{bp}/fc2")); // (C, H)
+        padded.push(g.pad(h2, 0, ei, e, &format!("{bp}/out"))); // (E, C, H)
+        ranges.push((start, g.ops.len()));
+    }
+    g.record_branch_group(ranges);
+
+    // merge: sum the disjoint pads, route back, gate-weight, residual
+    let mut acc = padded[0];
+    for (ei, &pd) in padded.iter().enumerate().skip(1) {
+        acc = g.binary(ElemOp::Add, acc, pd, &format!("{p}/merge{ei}"));
+    }
+    let y2d = g.route(acc, vec![t, h], &format!("{p}/combine")); // (T, H)
+    let w_b = g.broadcast(weight, vec![0], vec![t, h], &format!("{p}/weight_b"));
+    let yw = g.binary(ElemOp::Mul, y2d, w_b, &format!("{p}/weighted"));
+    let y3d = g.reshape(yw, vec![b, s, h], &format!("{p}/out3d"));
+    g.binary(ElemOp::Add, x3d, y3d, &format!("{p}/residual"))
+}
+
 /// One transformer block (arch-dispatched norm + ffn flavor).
 pub fn block(g: &mut Graph, x: OpId, cfg: &ModelCfg, li: usize) -> OpId {
     g.set_layer(Some(li));
@@ -168,6 +235,7 @@ pub fn block(g: &mut Graph, x: OpId, cfg: &ModelCfg, li: usize) -> OpId {
     let normed2 = norm(g, x, cfg, &format!("{p}/ln2"));
     let out = match (cfg.arch, li % 2) {
         (Arch::Llama, _) => swiglu_mlp(g, x, normed2, cfg, li),
+        (Arch::Moe, 1) if cfg.expert_branches => moe_ffn_branched(g, x, normed2, cfg, li),
         (Arch::Moe, 1) => moe_ffn(g, x, normed2, cfg, li),
         _ => dense_mlp(g, x, normed2, cfg, li),
     };
@@ -258,6 +326,22 @@ mod tests {
         let x = g.param("x", vec![b, s, h], ParamClass::Input);
         let out = moe_ffn(&mut g, x, x, &cfg, 1);
         assert_eq!(g.shape(out), &[b, s, h]);
+    }
+
+    #[test]
+    fn moe_ffn_branched_preserves_shape_and_records_branches() {
+        let cfg = ModelCfg::preset("moe-ep-tiny");
+        let (b, s, h) = (cfg.batch, cfg.seq, cfg.hidden);
+        let mut g = Graph::new();
+        let x = g.param("x", vec![b, s, h], ParamClass::Input);
+        let out = moe_ffn_branched(&mut g, x, x, &cfg, 1);
+        assert_eq!(g.shape(out), &[b, s, h], "branched MoE keeps the residual shape");
+        assert_eq!(g.branch_groups.len(), 1, "one fork/join group per MoE layer");
+        let group = &g.branch_groups[0];
+        assert_eq!(group.len(), cfg.experts, "one branch per expert");
+        for w in group.windows(2) {
+            assert!(w[0].1 <= w[1].0, "branch op ranges are disjoint and ascending");
+        }
     }
 
     #[test]

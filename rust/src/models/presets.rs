@@ -15,6 +15,11 @@ pub struct ModelCfg {
     pub batch: usize,
     pub experts: usize,
     pub dropout: bool,
+    /// Build MoE layers with per-expert *branches* (router segment → N
+    /// expert branches → merge) instead of one expert-batched block — the
+    /// SP-DAG form planned by `spdag` where expert parallelism is a
+    /// first-class axis. `false` on every chain preset.
+    pub expert_branches: bool,
 }
 
 impl ModelCfg {
@@ -45,6 +50,7 @@ impl ModelCfg {
                 batch: 8,
                 experts: 0,
                 dropout: true,
+                expert_branches: false,
             },
             "gpt-2.6b" => ModelCfg {
                 arch: Arch::Gpt,
@@ -58,6 +64,7 @@ impl ModelCfg {
                 batch: 8,
                 experts: 0,
                 dropout: true,
+                expert_branches: false,
             },
             "gpt-6.7b" => ModelCfg {
                 arch: Arch::Gpt,
@@ -71,6 +78,7 @@ impl ModelCfg {
                 batch: 8,
                 experts: 0,
                 dropout: true,
+                expert_branches: false,
             },
             "llama-7b" => ModelCfg {
                 arch: Arch::Llama,
@@ -84,6 +92,7 @@ impl ModelCfg {
                 batch: 8,
                 experts: 0,
                 dropout: true,
+                expert_branches: false,
             },
             "moe-7.1b" => ModelCfg {
                 arch: Arch::Moe,
@@ -97,6 +106,7 @@ impl ModelCfg {
                 batch: 8,
                 experts: 16,
                 dropout: true,
+                expert_branches: false,
             },
             // small configs for tests / e2e
             "gpt-tiny" => ModelCfg {
@@ -111,6 +121,7 @@ impl ModelCfg {
                 batch: 4,
                 experts: 0,
                 dropout: true,
+                expert_branches: false,
             },
             "moe-tiny" => ModelCfg {
                 arch: Arch::Moe,
@@ -124,6 +135,20 @@ impl ModelCfg {
                 batch: 4,
                 experts: 4,
                 dropout: true,
+                expert_branches: false,
+            },
+            // SP-DAG presets: the same MoE dimensions with per-expert
+            // branches, so expert parallelism is searched per branch by
+            // the spdag planner (router → E expert branches → merge)
+            "moe-ep-tiny" => ModelCfg {
+                expert_branches: true,
+                name: name.into(),
+                ..ModelCfg::preset("moe-tiny")
+            },
+            "moe-ep-7.1b" => ModelCfg {
+                expert_branches: true,
+                name: name.into(),
+                ..ModelCfg::preset("moe-7.1b")
             },
             _ => return None,
         };

@@ -35,7 +35,7 @@ use crate::pblock::BlockSet;
 pub use fingerprint::{fingerprint_digest, segment_fingerprint};
 
 /// A segment instance: a contiguous run of ParallelBlocks.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct SegmentInstance {
     /// index into `SegmentSet::unique`
     pub unique_id: usize,
@@ -47,7 +47,7 @@ pub struct SegmentInstance {
 }
 
 /// A unique segment (distinct fingerprint).
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq, Eq)]
 pub struct UniqueSegment {
     pub id: usize,
     pub fingerprint: String,
@@ -228,12 +228,24 @@ pub fn extract_segments(g: &Graph, bs: &BlockSet) -> SegmentSet {
         instances[i].fwd_range = (starts[i], end);
     }
 
-    // fingerprint-based dedup. The block fingerprint is extended with the
-    // count of orphan (non-block) forward ops the instance owns: the first
-    // hidden layer owns the embedding prefix and therefore profiles
-    // differently from subsequent layers — the paper found the same split
-    // ("one unique segment for the first hidden layer and another for each
-    // subsequent hidden layer", §5.5).
+    let unique = dedup_by_fingerprint(g, bs, &mut instances);
+    SegmentSet { instances, unique }
+}
+
+/// Fingerprint-based dedup shared by [`extract_segments`] and
+/// [`extract_with_topology`]. The block fingerprint is extended with the
+/// count of orphan (non-block) forward ops the instance owns: the first
+/// hidden layer owns the embedding prefix and therefore profiles
+/// differently from subsequent layers — the paper found the same split
+/// ("one unique segment for the first hidden layer and another for each
+/// subsequent hidden layer", §5.5). Structural fingerprints also make
+/// identical MoE expert branches share one unique segment — `E` experts
+/// cost one profile pass, not `E`.
+fn dedup_by_fingerprint(
+    g: &Graph,
+    bs: &BlockSet,
+    instances: &mut [SegmentInstance],
+) -> Vec<UniqueSegment> {
     let in_block: Vec<bool> = {
         let mut v = vec![false; g.ops.len()];
         for blk in &bs.blocks {
@@ -264,7 +276,142 @@ pub fn extract_segments(g: &Graph, bs: &BlockSet) -> SegmentSet {
             }
         }
     }
-    SegmentSet { instances, unique }
+    unique
+}
+
+/// DAG-aware extraction: like [`extract_segments`], but when the graph
+/// records fork/join branch groups ([`Graph::record_branch_group`] — MoE
+/// expert parallelism), each branch becomes **one segment instance** and
+/// the returned [`crate::spdag::SpTopology`] places those instances in
+/// per-group parallel branches. Chain graphs (no recorded groups) take
+/// the existing extractor verbatim and return the chain topology, so the
+/// chain path is bit-identical by construction.
+///
+/// Instance layout for a branched graph, in linearized chain order:
+///
+/// * **Trunk runs** (maximal runs of blocks outside every branch op
+///   range, classified by block entry op) are split at narrow boundaries
+///   with the [`MIN_SEG_BLOCKS`] floor, like stage 2 of the chain
+///   extractor.
+/// * **Branches**: one instance per recorded branch; its `fwd_range` is
+///   exactly the recorded op range, so router/dispatch orphans stay with
+///   the *fork* (preceding trunk) instance.
+/// * **Merge ownership**: the trunk instance after a group starts at the
+///   group's last op — combine/weighting orphan ops belong to the
+///   *successor*, which is why the topology never needs a separate merge
+///   node.
+pub fn extract_with_topology(g: &Graph, bs: &BlockSet) -> (SegmentSet, crate::spdag::SpTopology) {
+    use crate::spdag::{BranchGroup, SpTopology};
+
+    if g.branch_groups.is_empty() {
+        let ss = extract_segments(g, bs);
+        let n = ss.instances.len();
+        return (ss, SpTopology::chain(n));
+    }
+
+    let chain = block_chain(bs);
+    // classify each chain position by entry op: trunk or (group, branch)
+    let klass: Vec<Option<(usize, usize)>> = chain
+        .iter()
+        .map(|&b| {
+            let entry = bs.blocks[b].entry;
+            g.branch_groups.iter().enumerate().find_map(|(gi, group)| {
+                group
+                    .iter()
+                    .position(|&(s, e)| (s..e).contains(&entry))
+                    .map(|bi| (gi, bi))
+            })
+        })
+        .collect();
+
+    let cuts = narrow_boundaries(g, bs, &chain);
+    let mut instances: Vec<SegmentInstance> = Vec::new();
+    // fwd start per instance (usize::MAX = default first-block rule)
+    let mut starts: Vec<usize> = Vec::new();
+    let mut topo_groups: Vec<BranchGroup> = Vec::new();
+    // set after a group: the successor trunk instance owns the merge ops
+    let mut merge_start: Option<usize> = None;
+    let mut pos = 0usize;
+    while pos < chain.len() {
+        match klass[pos] {
+            None => {
+                let run_end =
+                    (pos..chain.len()).find(|&p| klass[p].is_some()).unwrap_or(chain.len());
+                let mut piece_start = pos;
+                let mut pieces: Vec<(usize, usize)> = Vec::new();
+                for p in pos + 1..run_end {
+                    if cuts.binary_search(&p).is_ok()
+                        && p - piece_start >= MIN_SEG_BLOCKS
+                        && run_end - p >= MIN_SEG_BLOCKS
+                    {
+                        pieces.push((piece_start, p));
+                        piece_start = p;
+                    }
+                }
+                pieces.push((piece_start, run_end));
+                for (a, b) in pieces {
+                    instances.push(SegmentInstance {
+                        unique_id: usize::MAX,
+                        blocks: chain[a..b].to_vec(),
+                        fwd_range: (0, 0),
+                    });
+                    starts.push(merge_start.take().unwrap_or(usize::MAX));
+                }
+                pos = run_end;
+            }
+            Some((gi, _)) => {
+                let group = &g.branch_groups[gi];
+                let first_inst = instances.len();
+                for (bi, &(s, _)) in group.iter().enumerate() {
+                    let blocks: Vec<usize> = (pos..chain.len())
+                        .take_while(|&p| klass[p] == Some((gi, bi)))
+                        .map(|p| chain[p])
+                        .collect();
+                    assert!(
+                        !blocks.is_empty(),
+                        "branch {bi} of group {gi} owns no parallel blocks"
+                    );
+                    pos += blocks.len();
+                    instances.push(SegmentInstance {
+                        unique_id: usize::MAX,
+                        blocks,
+                        fwd_range: (0, 0),
+                    });
+                    starts.push(s);
+                }
+                topo_groups.push(BranchGroup {
+                    branches: (first_inst..instances.len()).map(|i| (i, i + 1)).collect(),
+                });
+                merge_start = Some(group.last().unwrap().1);
+            }
+        }
+    }
+    assert!(merge_start.is_none(), "a branch group has no successor instance");
+
+    // fwd op ranges: explicit starts for branch/successor instances, the
+    // first-block rule elsewhere; instance 0 owns the graph prefix
+    for (i, inst) in instances.iter().enumerate() {
+        if starts[i] == usize::MAX {
+            starts[i] = inst.blocks.iter().map(|&b| bs.blocks[b].ops[0]).min().unwrap();
+        }
+    }
+    starts[0] = 0;
+    let fwd_end = g
+        .ops
+        .iter()
+        .filter(|o| o.role == Role::Fwd)
+        .map(|o| o.id + 1)
+        .max()
+        .unwrap_or(0);
+    for i in 0..instances.len() {
+        let end = if i + 1 < instances.len() { starts[i + 1] } else { fwd_end };
+        instances[i].fwd_range = (starts[i], end);
+    }
+
+    let unique = dedup_by_fingerprint(g, bs, &mut instances);
+    let topo = SpTopology { n: instances.len(), groups: topo_groups };
+    topo.validate().expect("graph branch groups produced an invalid SP topology");
+    (SegmentSet { instances, unique }, topo)
 }
 
 /// Blocks in chain order (by entry op id — builder order is topo order).
@@ -380,5 +527,87 @@ mod tests {
         let fa = &sa.unique.iter().map(|u| u.fingerprint.clone()).collect::<Vec<_>>();
         let fb = &sb.unique.iter().map(|u| u.fingerprint.clone()).collect::<Vec<_>>();
         assert_ne!(fa, fb);
+    }
+
+    #[test]
+    fn chain_models_take_the_chain_extractor_verbatim() {
+        let cfg = ModelCfg::preset("gpt-tiny").with_layers(4);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let chain = extract_segments(&g, &bs);
+        let (ss, topo) = extract_with_topology(&g, &bs);
+        assert!(topo.is_chain());
+        assert_eq!(topo.n, chain.instances.len());
+        assert_eq!(ss.instances, chain.instances);
+        assert_eq!(ss.unique, chain.unique);
+    }
+
+    #[test]
+    fn moe_expert_branches_become_parallel_instances() {
+        // 4 layers, 4 experts: dense-l0, moe-l1, dense-l2, moe-l3, head
+        // → two branch groups of 4 single-instance branches each
+        let cfg = ModelCfg::preset("moe-ep-tiny").with_layers(4);
+        let g = build_training(&cfg);
+        assert_eq!(g.branch_groups.len(), 2);
+        let bs = build_parallel_blocks(&g, 4);
+        let (ss, topo) = extract_with_topology(&g, &bs);
+        assert!(!topo.is_chain());
+        assert_eq!(topo.n, ss.instances.len());
+        assert_eq!(topo.groups.len(), 2);
+        for bg in &topo.groups {
+            assert_eq!(bg.branches.len(), 4);
+            for &(lo, hi) in &bg.branches {
+                assert_eq!(hi, lo + 1, "each expert branch is one instance");
+            }
+        }
+        topo.validate().unwrap();
+    }
+
+    #[test]
+    fn expert_branches_share_one_unique_segment() {
+        let cfg = ModelCfg::preset("moe-ep-tiny").with_layers(2);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let (ss, topo) = extract_with_topology(&g, &bs);
+        let bg = &topo.groups[0];
+        let uids: Vec<usize> = bg
+            .branches
+            .iter()
+            .map(|&(lo, _)| ss.instances[lo].unique_id)
+            .collect();
+        assert!(
+            uids.windows(2).all(|w| w[0] == w[1]),
+            "identical experts must dedup to one unique segment, got {uids:?}"
+        );
+    }
+
+    #[test]
+    fn dag_instances_cover_blocks_and_ops_exactly_once() {
+        let cfg = ModelCfg::preset("moe-ep-tiny").with_layers(4);
+        let g = build_training(&cfg);
+        let bs = build_parallel_blocks(&g, 4);
+        let (ss, _) = extract_with_topology(&g, &bs);
+        let mut seen = vec![false; bs.blocks.len()];
+        for inst in &ss.instances {
+            for &b in &inst.blocks {
+                assert!(!seen[b], "block {b} owned twice");
+                seen[b] = true;
+            }
+        }
+        assert!(seen.iter().all(|&s| s), "some block is unowned");
+        // fwd ranges: disjoint, ascending, covering [0, fwd_end)
+        let fwd_end = g
+            .ops
+            .iter()
+            .filter(|o| o.role == Role::Fwd)
+            .map(|o| o.id + 1)
+            .max()
+            .unwrap();
+        assert_eq!(ss.instances[0].fwd_range.0, 0);
+        assert_eq!(ss.instances.last().unwrap().fwd_range.1, fwd_end);
+        for w in ss.instances.windows(2) {
+            assert_eq!(w[0].fwd_range.1, w[1].fwd_range.0);
+            assert!(w[0].fwd_range.0 < w[0].fwd_range.1);
+        }
     }
 }

@@ -44,7 +44,10 @@
 //! * **Quotas and backpressure** ([`quota`]) — per-`client` token-bucket
 //!   admission (`--quota`/`--quota-burst`) plus a bounded pending queue
 //!   (`--max-pending`) that rejects with structured `overloaded`
-//!   responses instead of queueing without bound.
+//!   responses instead of queueing without bound. A shared-secret
+//!   credential gate (`--auth-token`) sits between the lifecycle and
+//!   quota gates and refuses mismatches with structured `unauthorized`
+//!   rejections.
 //! * **Always-on telemetry** ([`telemetry`]) — per-request latency
 //!   histograms and stage-time samplers drained by a background
 //!   aggregator thread, surfaced in `stats` responses and the drain
@@ -110,6 +113,12 @@ pub struct ServeConfig {
     /// (`--max-pending`); past it plan work is rejected `overloaded`
     /// inline instead of queueing without bound; 0 disables the gate
     pub max_pending: usize,
+    /// shared-secret admission credential (`--auth-token`): when set,
+    /// plan/pipeline requests must carry a matching `auth` field or are
+    /// refused with a structured `unauthorized` rejection; `None`
+    /// admits everything (admin requests are never gated — operators
+    /// must always be able to observe and drain)
+    pub auth_token: Option<String>,
 }
 
 impl Default for ServeConfig {
@@ -123,6 +132,7 @@ impl Default for ServeConfig {
             plan_cache_file: None,
             quota: None,
             max_pending: 1024,
+            auth_token: None,
         }
     }
 }
@@ -160,12 +170,16 @@ pub struct ServiceStats {
     /// `received == admitted + rejected + coalesced` always
     pub admitted: u64,
     /// requests refused with a structured rejection (`reason` field);
-    /// `rejected == rejected_overload + rejected_draining`
+    /// `rejected == rejected_overload + rejected_draining +
+    /// rejected_unauthorized`
     pub rejected: u64,
     /// rejections from the quota gate or the bounded pending queue
     pub rejected_overload: u64,
     /// rejections because the service was draining/drained
     pub rejected_draining: u64,
+    /// rejections from the `--auth-token` credential gate (missing or
+    /// mismatched `auth` field)
+    pub rejected_unauthorized: u64,
     /// answered from the plan cache without planning
     pub plan_hits: u64,
     /// requests that claimed a flight (each runs one search)
@@ -198,6 +212,7 @@ impl ServiceStats {
             ("rejected", Json::num(self.rejected as f64)),
             ("rejected_overload", Json::num(self.rejected_overload as f64)),
             ("rejected_draining", Json::num(self.rejected_draining as f64)),
+            ("rejected_unauthorized", Json::num(self.rejected_unauthorized as f64)),
             ("plan_hits", Json::num(self.plan_hits as f64)),
             ("plan_misses", Json::num(self.plan_misses as f64)),
             ("coalesced", Json::num(self.coalesced as f64)),
@@ -386,6 +401,20 @@ impl PlanService {
                     "service is draining; new requests are not accepted",
                 );
                 return (resp, "rejected");
+            }
+            // credential gate sits before the quota gate: a request with
+            // a bad secret must not drain the client's token bucket
+            if let Some(token) = self.inner.cfg.auth_token.as_deref() {
+                if req.auth.as_deref() != Some(token) {
+                    st.stats.rejected += 1;
+                    st.stats.rejected_unauthorized += 1;
+                    let resp = reject_response(
+                        req.id.as_ref(),
+                        "unauthorized",
+                        "missing or invalid auth token",
+                    );
+                    return (resp, "rejected");
+                }
             }
             if let Some(gate) = st.quota.as_mut() {
                 if !gate.admit(client) {
@@ -702,7 +731,8 @@ fn envelope(id: Option<&Json>, kind: RequestKind, tag: Option<&str>, result: &Js
 }
 
 /// Structured rejection: `ok: false` with a machine-readable `reason`
-/// (`draining` | `overloaded`). Distinct from [`PlanService::error_response`]
+/// (`draining` | `overloaded` | `unauthorized`). Distinct from
+/// [`PlanService::error_response`]
 /// — a rejection is the service refusing valid work, not the request
 /// being wrong, so it does not count as an error.
 fn reject_response(id: Option<&Json>, reason: &str, msg: &str) -> String {
@@ -861,7 +891,11 @@ mod tests {
             s.admitted + s.rejected + s.coalesced,
             "admission counters must reconcile exactly: {s:?}"
         );
-        assert_eq!(s.rejected, s.rejected_overload + s.rejected_draining, "{s:?}");
+        assert_eq!(
+            s.rejected,
+            s.rejected_overload + s.rejected_draining + s.rejected_unauthorized,
+            "{s:?}"
+        );
         assert_eq!(s.admitted, s.plan_hits + s.plan_misses, "{s:?}");
     }
 
@@ -958,6 +992,47 @@ mod tests {
         // counter fields stay top-level (back-compat with PR 4 clients)
         assert_eq!(r.get("received").and_then(Json::as_u64), Some(1));
         assert_eq!(r.get("admitted").and_then(Json::as_u64), Some(1));
+    }
+
+    #[test]
+    fn auth_token_gates_admission_and_counts_rejections() {
+        let svc = PlanService::new(ServeConfig {
+            workers: 1,
+            auth_token: Some("s3cret".to_string()),
+            ..ServeConfig::default()
+        });
+        // missing credential → structured unauthorized rejection
+        let resp = Json::parse(&svc.handle_line(line())).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(false));
+        assert_eq!(resp.get("reason").and_then(Json::as_str), Some("unauthorized"));
+        // wrong credential → same rejection
+        let wrong = "{\"type\": \"plan\", \"model\": \"gpt-tiny\", \"auth\": \"nope\"}";
+        let resp = Json::parse(&svc.handle_line(wrong)).unwrap();
+        assert_eq!(resp.get("reason").and_then(Json::as_str), Some("unauthorized"));
+        // matching credential is admitted and planned
+        let ok = "{\"type\": \"plan\", \"model\": \"gpt-tiny\", \"auth\": \"s3cret\"}";
+        let resp = Json::parse(&svc.handle_line(ok)).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        // admin requests are never gated — the operator can always look
+        let stats = Json::parse(&svc.handle_line("{\"type\": \"stats\"}")).unwrap();
+        assert_eq!(stats.get("ok").and_then(Json::as_bool), Some(true));
+        let s = svc.stats();
+        assert_eq!((s.rejected, s.rejected_unauthorized), (2, 2));
+        assert_eq!(s.admitted, 1);
+        assert_eq!(s.errors, 0, "an auth rejection is not an error");
+        reconciles(&s);
+        // the ledger surfaces the new counter
+        let r = stats.get("result").unwrap();
+        assert_eq!(r.get("rejected_unauthorized").and_then(Json::as_u64), Some(2));
+    }
+
+    #[test]
+    fn without_a_configured_token_auth_fields_are_ignored() {
+        let svc = PlanService::new(tiny());
+        let with_auth = "{\"type\": \"plan\", \"model\": \"gpt-tiny\", \"auth\": \"whatever\"}";
+        let resp = Json::parse(&svc.handle_line(with_auth)).unwrap();
+        assert_eq!(resp.get("ok").and_then(Json::as_bool), Some(true));
+        assert_eq!(svc.stats().rejected_unauthorized, 0);
     }
 
     #[test]

@@ -72,6 +72,9 @@ pub struct PlanRequest {
     /// quota identity for per-client admission; not plan identity (it
     /// must never split the plan cache)
     pub client: Option<String>,
+    /// shared-secret credential checked against `--auth-token` at
+    /// admission; like `client`, never plan identity
+    pub auth: Option<String>,
     /// the planning fields in CLI-flag form, ready for
     /// [`CfpOptions::from_args`]
     pub args: Args,
@@ -94,6 +97,7 @@ const FIELDS: &[&str] = &[
     "recompute",
     "engine",
     "client",
+    "auth",
 ];
 
 /// Parse one request line. Every failure is a `String` destined for a
@@ -149,7 +153,13 @@ pub fn parse_request(line: &str) -> Result<PlanRequest, String> {
             Some(v.as_str().ok_or_else(|| "\"client\" must be a string".to_string())?.to_string())
         }
     };
-    Ok(PlanRequest { id: j.get("id").cloned(), kind, client, args })
+    let auth = match j.get("auth") {
+        None => None,
+        Some(v) => {
+            Some(v.as_str().ok_or_else(|| "\"auth\" must be a string".to_string())?.to_string())
+        }
+    };
+    Ok(PlanRequest { id: j.get("id").cloned(), kind, client, auth, args })
 }
 
 /// Deterministic identity of a planning request: every *resolved* option
@@ -181,10 +191,19 @@ pub fn canonical_key(kind: RequestKind, opts: &CfpOptions) -> String {
     // two-level planner's single-stage leg runs through it), so it is
     // always plan identity
     let eng = opts.engine.as_str();
+    // segment-DAG topology: expert-branched MoE models plan through the
+    // spdag lanes, so the chain/DAG shape is plan identity — derived from
+    // the model config alone (matches `SpTopology::signature()`) so the
+    // key never needs a graph build
+    let topo = if m.expert_branches && m.experts >= 2 && m.layers >= 2 {
+        format!("sp-dag{}", m.experts)
+    } else {
+        "chain".to_string()
+    };
     format!(
         "{kind};model={name}/{arch:?}/h{h}/l{l}/hd{hd}/f{f}/v{v}/s{s}/b{b}/e{e}/do{dp};\
          plat={plat};mesh={mi}x{mn};cap={cap};stages={stages};mb={mb};rec={rec};cm={cm};\
-         eng={eng}",
+         eng={eng};topo={topo}",
         kind = kind.as_str(),
         name = m.name,
         arch = m.arch,
@@ -284,6 +303,27 @@ mod tests {
         assert_eq!(r.client.as_deref(), Some("trainer-1"));
         assert!(r.args.get("client").is_none());
         assert!(parse_request("{}").unwrap().client.is_none());
+
+        // auth is an admission credential: carried on the request, kept
+        // out of the planning args (it must never split the plan cache)
+        let r = parse_request("{\"model\": \"gpt-tiny\", \"auth\": \"s3cret\"}").unwrap();
+        assert_eq!(r.auth.as_deref(), Some("s3cret"));
+        assert!(r.args.get("auth").is_none());
+        assert!(parse_request("{}").unwrap().auth.is_none());
+    }
+
+    #[test]
+    fn canonical_key_carries_the_dag_topology() {
+        let chain = opts();
+        assert!(canonical_key(RequestKind::Plan, &chain).ends_with(";topo=chain"));
+        let moe =
+            CfpOptions::new(ModelCfg::preset("moe-ep-tiny"), Platform::a100_pcie(4));
+        assert!(canonical_key(RequestKind::Plan, &moe).ends_with(";topo=sp-dag4"));
+        // the un-branched MoE preset stays a chain: expert parallelism
+        // without per-expert branches is planned on the linear chain
+        let moe_chain =
+            CfpOptions::new(ModelCfg::preset("moe-tiny"), Platform::a100_pcie(4));
+        assert!(canonical_key(RequestKind::Plan, &moe_chain).ends_with(";topo=chain"));
     }
 
     #[test]
@@ -301,6 +341,7 @@ mod tests {
             "{\"mem_cap\": \"big\"}",    // wrong type
             "{\"scaled\": \"yes\"}",     // wrong type
             "{\"client\": 5}",           // wrong type
+            "{\"auth\": 5}",             // wrong type
         ] {
             assert!(parse_request(bad).is_err(), "{bad:?} must be rejected");
         }

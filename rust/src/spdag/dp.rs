@@ -1,0 +1,829 @@
+//! The three SP-DAG DP lanes: scalar (uncapped min-time), capped
+//! Pareto, and the (config × remat) memory frontier.
+//!
+//! Each lane is the recursive-DP-over-the-SP-decomposition counterpart
+//! of its chain lane in [`crate::cost`]: trunk steps replay the chain
+//! step arithmetic verbatim on the same [`SearchCtx`] columns, branch
+//! sub-DPs run on branch-local clocks seeded from `0.0`, and a branch
+//! group is consumed in one "group step" that combines the per-branch
+//! terminal states at the successor instance (time by max — concurrent
+//! branches — memory components by the lane's own fold). States carry
+//! their choice vectors inline instead of backpointers: DAG chains are
+//! short (a group is one MoE layer) and the group step would otherwise
+//! need three-way backpointers.
+//!
+//! Prune rules, tie orders, and frontier caps mirror `cost::dp`'s
+//! exactly (`FRONTIER_CAP = 24`, `MEM_FRONTIER_CAP = 16`, the same
+//! strictly-decreasing-mem keep rule, the same running-min memory keep
+//! rule, the same evenly-spaced thinning): a dominated branch point
+//! stays dominated under the group combine because every fold is
+//! monotone per coordinate (max, integer sums) — so the chain lanes'
+//! exactness arguments carry over unchanged. The memory lane doubles as
+//! its own oracle via `exact = true` (true-dominance filter, no
+//! thinning), mirroring [`crate::cost::exact::search_span_mem_exact`].
+
+use crate::cost::{Plan, SearchCtx};
+use crate::memory::{RecomputeSpec, SpanFootprint, SpanMemPlan};
+
+use super::SpCtx;
+
+/// Mirrors `cost::dp::FRONTIER_CAP` (private there by design — the SP
+/// lanes must *behave* like the chain lanes, not reach into them).
+const FRONTIER_CAP: usize = 24;
+/// Mirrors `cost::dp::MEM_FRONTIER_CAP`.
+const MEM_FRONTIER_CAP: usize = 16;
+
+/// Branch-local clocks seed from this constant so the fork edge replays
+/// the chain step shape `(prev + reshard) + seg_time` with `prev = 0.0`
+/// — bit-exact for the non-negative costs profiles produce
+/// (`0.0 + x == x`).
+const SEED: f64 = 0.0;
+
+// ---------------------------------------------------------------- scalar lane
+
+/// One scalar state: min-(time, mem) prefix ending at a config, with
+/// the full choice vector of the consumed span prefix.
+#[derive(Clone, Debug)]
+struct Cand {
+    time: f64,
+    mem: u64,
+    choice: Vec<usize>,
+}
+
+fn scalar_first(ctx: &SearchCtx, pos: usize) -> Vec<Option<Cand>> {
+    let o = ctx.off_at(pos);
+    (0..ctx.ncfg_at(pos))
+        .map(|c| {
+            Some(Cand {
+                time: ctx.time_col()[o + c],
+                mem: ctx.mem_col()[o + c],
+                choice: vec![c],
+            })
+        })
+        .collect()
+}
+
+/// One trunk argmin step into `pos` — `(prev + tr) + seg_t`, lex
+/// `(time, mem)` tie order, earliest predecessor on full ties.
+fn scalar_step(ctx: &SearchCtx, pos: usize, prev: &[Option<Cand>]) -> Vec<Option<Cand>> {
+    let o = ctx.off_at(pos);
+    let cc = ctx.ncfg_at(pos);
+    let mat = ctx.step_matrix(pos);
+    scalar_step_mat(ctx, pos, o, cc, mat, prev)
+}
+
+/// The step body, parameterized on the transition matrix so branch
+/// seeds can price the fork edge through the same code path.
+fn scalar_step_mat(
+    ctx: &SearchCtx,
+    _pos: usize,
+    o: usize,
+    cc: usize,
+    mat: &[f64],
+    prev: &[Option<Cand>],
+) -> Vec<Option<Cand>> {
+    let mut out: Vec<Option<Cand>> = Vec::with_capacity(cc);
+    for c in 0..cc {
+        let seg_t = ctx.time_col()[o + c];
+        let seg_m = ctx.mem_col()[o + c];
+        let mut best: Option<(f64, u64, usize)> = None;
+        for (p, cand) in prev.iter().enumerate() {
+            let Some(pp) = cand else { continue };
+            let t = pp.time + mat[p * cc + c] + seg_t;
+            let m = pp.mem + seg_m;
+            if best.map_or(true, |(bt, bm, _)| t < bt || (t == bt && m < bm)) {
+                best = Some((t, m, p));
+            }
+        }
+        out.push(best.map(|(t, m, p)| {
+            let pp = prev[p].as_ref().unwrap();
+            let mut choice = pp.choice.clone();
+            choice.push(c);
+            Cand { time: t, mem: m, choice }
+        }));
+    }
+    out
+}
+
+/// Terminal state of branch `bi` of group `gi` under fork config `a`:
+/// a branch-local chain DP seeded from the fork edge.
+fn scalar_branch(ctx: &SearchCtx, sp: &SpCtx, gi: usize, bi: usize, a: usize) -> Vec<Option<Cand>> {
+    let (blo, bhi) = sp.topo.groups[gi].branches[bi];
+    let cc = ctx.ncfg_at(blo);
+    let o = ctx.off_at(blo);
+    let fmat = sp.fork_mat(gi, bi);
+    let mut state: Vec<Option<Cand>> = (0..cc)
+        .map(|c| {
+            Some(Cand {
+                time: SEED + fmat[a * cc + c] + ctx.time_col()[o + c],
+                mem: ctx.mem_col()[o + c],
+                choice: vec![c],
+            })
+        })
+        .collect();
+    for pos in blo + 1..bhi {
+        state = scalar_step(ctx, pos, &state);
+    }
+    state
+}
+
+/// Consume a whole branch group: from the fork state, run every branch
+/// under every fork config, take each branch's min completion per
+/// successor config, max-fold the branch times (memory adds), and step
+/// into the successor instance. Returns the successor state.
+fn scalar_group(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    gi: usize,
+    fork: &[Option<Cand>],
+) -> Vec<Option<Cand>> {
+    let g = &sp.topo.groups[gi];
+    let succ = g.end();
+    let so = ctx.off_at(succ);
+    let scc = ctx.ncfg_at(succ);
+    let nb = g.branches.len();
+    let mut out: Vec<Option<Cand>> = vec![None; scc];
+    for (a, fc) in fork.iter().enumerate() {
+        let Some(fc) = fc else { continue };
+        let terms: Vec<Vec<Option<Cand>>> =
+            (0..nb).map(|bi| scalar_branch(ctx, sp, gi, bi, a)).collect();
+        for cs in 0..scc {
+            // per-branch independent min — exact for time (branches
+            // share no choice variables, so min-of-max = max-of-min)
+            let mut mx = f64::NEG_INFINITY;
+            let mut mem_sum = 0u64;
+            let mut picked: Vec<usize> = Vec::with_capacity(nb);
+            let mut feasible = true;
+            for bi in 0..nb {
+                let mmat = sp.merge_mat(gi, bi);
+                let mut best: Option<(f64, u64, usize)> = None;
+                for (cb, cand) in terms[bi].iter().enumerate() {
+                    let Some(bb) = cand else { continue };
+                    let w = bb.time + mmat[cb * scc + cs];
+                    if best.map_or(true, |(bt, bm, _)| w < bt || (w == bt && bb.mem < bm)) {
+                        best = Some((w, bb.mem, cb));
+                    }
+                }
+                let Some((w, bm, cb)) = best else {
+                    feasible = false;
+                    break;
+                };
+                if w > mx {
+                    mx = w;
+                }
+                mem_sum += bm;
+                picked.push(cb);
+            }
+            if !feasible {
+                continue;
+            }
+            let t = fc.time + mx + ctx.time_col()[so + cs];
+            let m = fc.mem + mem_sum + ctx.mem_col()[so + cs];
+            let better =
+                out[cs].as_ref().map_or(true, |o| t < o.time || (t == o.time && m < o.mem));
+            if better {
+                let mut choice = fc.choice.clone();
+                for (bi, &cb) in picked.iter().enumerate() {
+                    choice.extend_from_slice(&terms[bi][cb].as_ref().unwrap().choice);
+                }
+                choice.push(cs);
+                out[cs] = Some(Cand { time: t, mem: m, choice });
+            }
+        }
+    }
+    out
+}
+
+/// Unconstrained min-time SP-DAG plan for `[lo, hi)`.
+pub(super) fn scalar_plan(ctx: &SearchCtx, sp: &SpCtx, lo: usize, hi: usize) -> Option<Plan> {
+    if hi == lo {
+        return None;
+    }
+    let mut state = scalar_first(ctx, lo);
+    let mut pos = lo + 1;
+    while pos < hi {
+        if let Some(gi) = sp.group_starting_at(pos) {
+            state = scalar_group(ctx, sp, gi, &state);
+            pos = sp.topo.groups[gi].end() + 1;
+        } else {
+            state = scalar_step(ctx, pos, &state);
+            pos += 1;
+        }
+    }
+    let mut best: Option<usize> = None;
+    for (c, s) in state.iter().enumerate() {
+        if let Some(sc) = s {
+            if best.map_or(true, |b| sc.time < state[b].as_ref().unwrap().time) {
+                best = Some(c);
+            }
+        }
+    }
+    best.map(|c| {
+        let s = state[c].as_ref().unwrap();
+        Plan { choice: s.choice.clone(), time_us: s.time, mem_bytes: s.mem }
+    })
+}
+
+// ---------------------------------------------------------------- pareto lane
+
+/// One capped-Pareto point with its choice vector inline.
+#[derive(Clone, Debug)]
+struct SpPoint {
+    time: f64,
+    mem: u64,
+    choice: Vec<usize>,
+}
+
+/// Mirror of `cost::dp::pareto_prune`: (time, mem) sort, keep strictly
+/// decreasing mem, thin to `FRONTIER_CAP` evenly spaced points.
+fn pareto_prune_sp(pts: &mut Vec<SpPoint>) {
+    pts.sort_by(|a, b| a.time.partial_cmp(&b.time).unwrap().then(a.mem.cmp(&b.mem)));
+    let mut best_mem = u64::MAX;
+    let mut w = 0usize;
+    for r in 0..pts.len() {
+        if pts[r].mem < best_mem {
+            best_mem = pts[r].mem;
+            pts.swap(w, r);
+            w += 1;
+        }
+    }
+    pts.truncate(w);
+    if pts.len() > FRONTIER_CAP {
+        let step = (pts.len() - 1) as f64 / (FRONTIER_CAP - 1) as f64;
+        for k in 0..FRONTIER_CAP {
+            let src = (k as f64 * step).round() as usize;
+            pts.swap(k, src);
+        }
+        pts.truncate(FRONTIER_CAP);
+    }
+}
+
+fn pareto_first(ctx: &SearchCtx, pos: usize, cap: u64) -> Vec<Vec<SpPoint>> {
+    let o = ctx.off_at(pos);
+    (0..ctx.ncfg_at(pos))
+        .map(|c| {
+            let mem = ctx.mem_col()[o + c];
+            if mem <= cap {
+                vec![SpPoint { time: ctx.time_col()[o + c], mem, choice: vec![c] }]
+            } else {
+                Vec::new()
+            }
+        })
+        .collect()
+}
+
+fn pareto_step_mat(
+    ctx: &SearchCtx,
+    o: usize,
+    cc: usize,
+    mat: &[f64],
+    cap: u64,
+    prev: &[Vec<SpPoint>],
+) -> Vec<Vec<SpPoint>> {
+    let mut cur: Vec<Vec<SpPoint>> = Vec::with_capacity(cc);
+    for c in 0..cc {
+        let seg_t = ctx.time_col()[o + c];
+        let seg_m = ctx.mem_col()[o + c];
+        let mut pts: Vec<SpPoint> = Vec::new();
+        for (pcfg, pset) in prev.iter().enumerate() {
+            if pset.is_empty() {
+                continue;
+            }
+            let tr = mat[pcfg * cc + c];
+            for pp in pset {
+                let time = pp.time + tr + seg_t;
+                let mem = pp.mem + seg_m;
+                if mem <= cap {
+                    let mut choice = pp.choice.clone();
+                    choice.push(c);
+                    pts.push(SpPoint { time, mem, choice });
+                }
+            }
+        }
+        pareto_prune_sp(&mut pts);
+        cur.push(pts);
+    }
+    cur
+}
+
+/// Branch-local capped frontier under fork config `a`. Filtering a
+/// branch-local prefix against the *total* cap is sound: memory is
+/// additive across the whole span, so a branch prefix alone exceeding
+/// the cap can never complete feasibly.
+fn pareto_branch(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    gi: usize,
+    bi: usize,
+    a: usize,
+    cap: u64,
+) -> Vec<Vec<SpPoint>> {
+    let (blo, bhi) = sp.topo.groups[gi].branches[bi];
+    let cc = ctx.ncfg_at(blo);
+    let o = ctx.off_at(blo);
+    let fmat = sp.fork_mat(gi, bi);
+    let mut state: Vec<Vec<SpPoint>> = (0..cc)
+        .map(|c| {
+            let mem = ctx.mem_col()[o + c];
+            if mem <= cap {
+                vec![SpPoint {
+                    time: SEED + fmat[a * cc + c] + ctx.time_col()[o + c],
+                    mem,
+                    choice: vec![c],
+                }]
+            } else {
+                Vec::new()
+            }
+        })
+        .collect();
+    for pos in blo + 1..bhi {
+        state = pareto_step_mat(
+            ctx,
+            ctx.off_at(pos),
+            ctx.ncfg_at(pos),
+            ctx.step_matrix(pos),
+            cap,
+            &state,
+        );
+    }
+    state
+}
+
+fn pareto_group(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    gi: usize,
+    cap: u64,
+    fork: &[Vec<SpPoint>],
+) -> Vec<Vec<SpPoint>> {
+    let g = &sp.topo.groups[gi];
+    let succ = g.end();
+    let so = ctx.off_at(succ);
+    let scc = ctx.ncfg_at(succ);
+    let nb = g.branches.len();
+    let mut pools: Vec<Vec<SpPoint>> = vec![Vec::new(); scc];
+    for (a, fset) in fork.iter().enumerate() {
+        if fset.is_empty() {
+            continue;
+        }
+        let terms: Vec<Vec<Vec<SpPoint>>> =
+            (0..nb).map(|bi| pareto_branch(ctx, sp, gi, bi, a, cap)).collect();
+        for (cs, pool) in pools.iter_mut().enumerate() {
+            // incremental cross-product fold over branches: time by max
+            // (concurrent), memory by sum, pruned at every fold step
+            let mut h: Option<Vec<SpPoint>> = None;
+            for bi in 0..nb {
+                let mmat = sp.merge_mat(gi, bi);
+                let mut gset: Vec<SpPoint> = Vec::new();
+                for (cb, pts) in terms[bi].iter().enumerate() {
+                    let tr = mmat[cb * scc + cs];
+                    for p in pts {
+                        gset.push(SpPoint {
+                            time: p.time + tr,
+                            mem: p.mem,
+                            choice: p.choice.clone(),
+                        });
+                    }
+                }
+                pareto_prune_sp(&mut gset);
+                h = Some(match h {
+                    None => gset,
+                    Some(hs) => {
+                        let mut combined: Vec<SpPoint> = Vec::new();
+                        for hp in &hs {
+                            for gp in &gset {
+                                let mem = hp.mem + gp.mem;
+                                if mem > cap {
+                                    continue;
+                                }
+                                let time = if gp.time > hp.time { gp.time } else { hp.time };
+                                let mut choice = hp.choice.clone();
+                                choice.extend_from_slice(&gp.choice);
+                                combined.push(SpPoint { time, mem, choice });
+                            }
+                        }
+                        pareto_prune_sp(&mut combined);
+                        combined
+                    }
+                });
+                if h.as_ref().unwrap().is_empty() {
+                    break;
+                }
+            }
+            let Some(h) = h else { continue };
+            if h.is_empty() {
+                continue;
+            }
+            let seg_t = ctx.time_col()[so + cs];
+            let seg_m = ctx.mem_col()[so + cs];
+            for fp in fset {
+                for hp in &h {
+                    let time = fp.time + hp.time + seg_t;
+                    let mem = fp.mem + hp.mem + seg_m;
+                    if mem <= cap {
+                        let mut choice = fp.choice.clone();
+                        choice.extend_from_slice(&hp.choice);
+                        choice.push(cs);
+                        pool.push(SpPoint { time, mem, choice });
+                    }
+                }
+            }
+        }
+    }
+    for pool in pools.iter_mut() {
+        pareto_prune_sp(pool);
+    }
+    pools
+}
+
+/// Memory-capped min-time SP-DAG plan for `[lo, hi)`.
+pub(super) fn pareto_plan(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    cap: u64,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    if hi == lo {
+        return None;
+    }
+    let mut state = pareto_first(ctx, lo, cap);
+    let mut pos = lo + 1;
+    while pos < hi {
+        if let Some(gi) = sp.group_starting_at(pos) {
+            state = pareto_group(ctx, sp, gi, cap, &state);
+            pos = sp.topo.groups[gi].end() + 1;
+        } else {
+            state = pareto_step_mat(
+                ctx,
+                ctx.off_at(pos),
+                ctx.ncfg_at(pos),
+                ctx.step_matrix(pos),
+                cap,
+                &state,
+            );
+            pos += 1;
+        }
+    }
+    let mut best: Option<(usize, usize)> = None;
+    for (c, pts) in state.iter().enumerate() {
+        for (i, p) in pts.iter().enumerate() {
+            if best.map_or(true, |(bc, bi)| p.time < state[bc][bi].time) {
+                best = Some((c, i));
+            }
+        }
+    }
+    best.map(|(c, i)| {
+        let p = &state[c][i];
+        Plan { choice: p.choice.clone(), time_us: p.time, mem_bytes: p.mem }
+    })
+}
+
+// ---------------------------------------------------------------- memory lane
+
+/// One memory-frontier point with choice and remat vectors inline.
+#[derive(Clone, Debug)]
+struct SpMemPoint {
+    time: f64,
+    recompute: f64,
+    stat: u64,
+    ret: u64,
+    tra: u64,
+    choice: Vec<usize>,
+    remat: Vec<bool>,
+}
+
+fn mem_sort(pts: &mut [SpMemPoint]) {
+    pts.sort_by(|a, b| {
+        a.time
+            .partial_cmp(&b.time)
+            .unwrap()
+            .then(a.stat.cmp(&b.stat))
+            .then(a.ret.cmp(&b.ret))
+            .then(a.tra.cmp(&b.tra))
+    });
+}
+
+/// DP mode mirrors `cost::dp::prune_mem` (running-min keep +
+/// `MEM_FRONTIER_CAP` thinning); exact mode mirrors
+/// `cost::exact::pareto_filter` (true dominance, no thinning).
+fn filter_mem(pts: &mut Vec<SpMemPoint>, exact: bool) {
+    mem_sort(pts);
+    if exact {
+        let mut w = 0usize;
+        for r in 0..pts.len() {
+            let dominated = pts[..w].iter().any(|q| {
+                q.stat <= pts[r].stat && q.ret <= pts[r].ret && q.tra <= pts[r].tra
+            });
+            if !dominated {
+                pts.swap(w, r);
+                w += 1;
+            }
+        }
+        pts.truncate(w);
+        return;
+    }
+    let (mut min_stat, mut min_ret, mut min_tra) = (u64::MAX, u64::MAX, u64::MAX);
+    let mut w = 0usize;
+    for r in 0..pts.len() {
+        let p = &pts[r];
+        if w == 0 || p.stat < min_stat || p.ret < min_ret || p.tra < min_tra {
+            min_stat = min_stat.min(p.stat);
+            min_ret = min_ret.min(p.ret);
+            min_tra = min_tra.min(p.tra);
+            pts.swap(w, r);
+            w += 1;
+        }
+    }
+    pts.truncate(w);
+    if pts.len() > MEM_FRONTIER_CAP {
+        let step = (pts.len() - 1) as f64 / (MEM_FRONTIER_CAP - 1) as f64;
+        for k in 0..MEM_FRONTIER_CAP {
+            let src = (k as f64 * step).round() as usize;
+            pts.swap(k, src);
+        }
+        pts.truncate(MEM_FRONTIER_CAP);
+    }
+}
+
+fn mem_first(ctx: &SearchCtx, pos: usize, spec: RecomputeSpec, exact: bool) -> Vec<Vec<SpMemPoint>> {
+    let o = ctx.off_at(pos);
+    (0..ctx.ncfg_at(pos))
+        .map(|c| {
+            let seg_t = ctx.time_col()[o + c];
+            let stat = ctx.stat_col()[o + c];
+            let mut pts: Vec<SpMemPoint> = ctx
+                .remat_at(o + c, spec)
+                .iter()
+                .map(|r| SpMemPoint {
+                    time: seg_t + r.extra_us,
+                    recompute: r.extra_us,
+                    stat,
+                    ret: r.retained_bytes,
+                    tra: r.transient_bytes,
+                    choice: vec![c],
+                    remat: vec![r.checkpoint],
+                })
+                .collect();
+            filter_mem(&mut pts, exact);
+            pts
+        })
+        .collect()
+}
+
+fn mem_step_mat(
+    ctx: &SearchCtx,
+    o: usize,
+    cc: usize,
+    mat: &[f64],
+    spec: RecomputeSpec,
+    exact: bool,
+    prev: &[Vec<SpMemPoint>],
+) -> Vec<Vec<SpMemPoint>> {
+    let mut cur: Vec<Vec<SpMemPoint>> = Vec::with_capacity(cc);
+    for c in 0..cc {
+        let seg_t = ctx.time_col()[o + c];
+        let stat = ctx.stat_col()[o + c];
+        let rpts = ctx.remat_at(o + c, spec);
+        let mut pts: Vec<SpMemPoint> = Vec::new();
+        for (pcfg, pset) in prev.iter().enumerate() {
+            if pset.is_empty() {
+                continue;
+            }
+            let tr = mat[pcfg * cc + c];
+            for pp in pset {
+                for r in rpts {
+                    let mut choice = pp.choice.clone();
+                    choice.push(c);
+                    let mut remat = pp.remat.clone();
+                    remat.push(r.checkpoint);
+                    pts.push(SpMemPoint {
+                        time: pp.time + tr + seg_t + r.extra_us,
+                        recompute: pp.recompute + r.extra_us,
+                        stat: pp.stat + stat,
+                        ret: pp.ret + r.retained_bytes,
+                        tra: pp.tra.max(r.transient_bytes),
+                        choice,
+                        remat,
+                    });
+                }
+            }
+        }
+        filter_mem(&mut pts, exact);
+        cur.push(pts);
+    }
+    cur
+}
+
+fn mem_branch(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    gi: usize,
+    bi: usize,
+    a: usize,
+    spec: RecomputeSpec,
+    exact: bool,
+) -> Vec<Vec<SpMemPoint>> {
+    let (blo, bhi) = sp.topo.groups[gi].branches[bi];
+    let cc = ctx.ncfg_at(blo);
+    let o = ctx.off_at(blo);
+    let fmat = sp.fork_mat(gi, bi);
+    let mut state: Vec<Vec<SpMemPoint>> = (0..cc)
+        .map(|c| {
+            let seg_t = ctx.time_col()[o + c];
+            let stat = ctx.stat_col()[o + c];
+            let tr = fmat[a * cc + c];
+            let mut pts: Vec<SpMemPoint> = ctx
+                .remat_at(o + c, spec)
+                .iter()
+                .map(|r| SpMemPoint {
+                    time: SEED + tr + seg_t + r.extra_us,
+                    recompute: r.extra_us,
+                    stat,
+                    ret: r.retained_bytes,
+                    tra: r.transient_bytes,
+                    choice: vec![c],
+                    remat: vec![r.checkpoint],
+                })
+                .collect();
+            filter_mem(&mut pts, exact);
+            pts
+        })
+        .collect();
+    for pos in blo + 1..bhi {
+        state = mem_step_mat(
+            ctx,
+            ctx.off_at(pos),
+            ctx.ncfg_at(pos),
+            ctx.step_matrix(pos),
+            spec,
+            exact,
+            &state,
+        );
+    }
+    state
+}
+
+fn mem_group(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    gi: usize,
+    spec: RecomputeSpec,
+    exact: bool,
+    fork: &[Vec<SpMemPoint>],
+) -> Vec<Vec<SpMemPoint>> {
+    let g = &sp.topo.groups[gi];
+    let succ = g.end();
+    let so = ctx.off_at(succ);
+    let scc = ctx.ncfg_at(succ);
+    let nb = g.branches.len();
+    let mut pools: Vec<Vec<SpMemPoint>> = vec![Vec::new(); scc];
+    for (a, fset) in fork.iter().enumerate() {
+        if fset.is_empty() {
+            continue;
+        }
+        let terms: Vec<Vec<Vec<SpMemPoint>>> =
+            (0..nb).map(|bi| mem_branch(ctx, sp, gi, bi, a, spec, exact)).collect();
+        for (cs, pool) in pools.iter_mut().enumerate() {
+            // branch combine: time by max (concurrent), recompute /
+            // static / retained by sum, transient scratch by max (expert
+            // backward passes are serialized per device, like the
+            // chain's per-instance transient rule)
+            let mut h: Option<Vec<SpMemPoint>> = None;
+            for bi in 0..nb {
+                let mmat = sp.merge_mat(gi, bi);
+                let mut gset: Vec<SpMemPoint> = Vec::new();
+                for (cb, pts) in terms[bi].iter().enumerate() {
+                    let tr = mmat[cb * scc + cs];
+                    for p in pts {
+                        let mut q = p.clone();
+                        q.time = p.time + tr;
+                        gset.push(q);
+                    }
+                }
+                filter_mem(&mut gset, exact);
+                h = Some(match h {
+                    None => gset,
+                    Some(hs) => {
+                        let mut combined: Vec<SpMemPoint> = Vec::new();
+                        for hp in &hs {
+                            for gp in &gset {
+                                let time = if gp.time > hp.time { gp.time } else { hp.time };
+                                let mut choice = hp.choice.clone();
+                                choice.extend_from_slice(&gp.choice);
+                                let mut remat = hp.remat.clone();
+                                remat.extend_from_slice(&gp.remat);
+                                combined.push(SpMemPoint {
+                                    time,
+                                    recompute: hp.recompute + gp.recompute,
+                                    stat: hp.stat + gp.stat,
+                                    ret: hp.ret + gp.ret,
+                                    tra: hp.tra.max(gp.tra),
+                                    choice,
+                                    remat,
+                                });
+                            }
+                        }
+                        filter_mem(&mut combined, exact);
+                        combined
+                    }
+                });
+                if h.as_ref().unwrap().is_empty() {
+                    break;
+                }
+            }
+            let Some(h) = h else { continue };
+            if h.is_empty() {
+                continue;
+            }
+            let seg_t = ctx.time_col()[so + cs];
+            let stat = ctx.stat_col()[so + cs];
+            let rpts = ctx.remat_at(so + cs, spec);
+            for fp in fset {
+                for hp in &h {
+                    for r in rpts {
+                        let mut choice = fp.choice.clone();
+                        choice.extend_from_slice(&hp.choice);
+                        choice.push(cs);
+                        let mut remat = fp.remat.clone();
+                        remat.extend_from_slice(&hp.remat);
+                        remat.push(r.checkpoint);
+                        pool.push(SpMemPoint {
+                            time: fp.time + hp.time + seg_t + r.extra_us,
+                            recompute: fp.recompute + hp.recompute + r.extra_us,
+                            stat: fp.stat + hp.stat + stat,
+                            ret: fp.ret + hp.ret + r.retained_bytes,
+                            tra: fp.tra.max(hp.tra).max(r.transient_bytes),
+                            choice,
+                            remat,
+                        });
+                    }
+                }
+            }
+        }
+    }
+    for pool in pools.iter_mut() {
+        filter_mem(pool, exact);
+    }
+    pools
+}
+
+/// The SP-DAG memory-frontier span search. `exact = false` is the DP
+/// (production) mode; `exact = true` keeps true Pareto sets with no
+/// thinning — the lane's own oracle.
+pub(super) fn mem_frontier(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+    exact: bool,
+) -> Vec<SpanMemPlan> {
+    if hi == lo {
+        return Vec::new();
+    }
+    let mut state = mem_first(ctx, lo, spec, exact);
+    let mut pos = lo + 1;
+    while pos < hi {
+        if let Some(gi) = sp.group_starting_at(pos) {
+            state = mem_group(ctx, sp, gi, spec, exact, &state);
+            pos = sp.topo.groups[gi].end() + 1;
+        } else {
+            state = mem_step_mat(
+                ctx,
+                ctx.off_at(pos),
+                ctx.ncfg_at(pos),
+                ctx.step_matrix(pos),
+                spec,
+                exact,
+                &state,
+            );
+            pos += 1;
+        }
+    }
+    // terminal canonicalization: the chain's exact (time, stat, ret,
+    // tra) sort + footprint dominance rule
+    let mut all: Vec<SpMemPoint> = state.into_iter().flatten().collect();
+    mem_sort(&mut all);
+    let mut kept: Vec<SpMemPoint> = Vec::new();
+    for p in all {
+        let dominated =
+            kept.iter().any(|q| q.stat <= p.stat && q.ret <= p.ret && q.tra <= p.tra);
+        if !dominated {
+            kept.push(p);
+        }
+    }
+    kept.into_iter()
+        .map(|p| SpanMemPlan {
+            choice: p.choice,
+            remat: p.remat,
+            time_us: p.time,
+            footprint: SpanFootprint {
+                static_bytes: p.stat,
+                retained_bytes: p.ret,
+                transient_bytes: p.tra,
+                recompute_us: p.recompute,
+            },
+        })
+        .collect()
+}

@@ -1,0 +1,424 @@
+//! Exact branch-and-bound span search over SP-DAG topologies — the
+//! [`crate::cost::exact`] counterpart for branched models, and the
+//! oracle the property suite holds the SP DP lanes to.
+//!
+//! The DFS enumerates configs position-by-position in the linearized
+//! order, replaying the DP lanes' float association per edge exactly
+//! (trunk `(prev + reshard) + seg_t`, branch seeds `(0.0 + fork_reshard)
+//! + seg_t` on a branch-local clock, merges `(fork + max_b(rel_b +
+//! merge_reshard)) + seg_t`), so a DP == exact comparison is meaningful
+//! at the bit level, not merely within a tolerance.
+//!
+//! Admissible pruning mirrors the chain lane with one DAG twist: the
+//! suffix time bound treats a branch group as `max_b(Σ min seg time over
+//! branch b)` — branches run concurrently, so the remaining-work bound
+//! from *inside* a branch must jump over its sibling branches straight
+//! to the successor's tail (summing a sibling's minima would overshoot
+//! the true completion and break admissibility). Memory is additive
+//! across branches, so the exact-integer suffix-sum prune carries over
+//! unchanged. Time bounds are deflated by the chain lane's own
+//! `×(1 − 1e-9)` slack so float rounding in long sums can never prune
+//! the true optimum.
+
+use crate::cost::exact::Exhausted;
+use crate::cost::{self, Plan, SearchCtx};
+
+use super::SpCtx;
+
+/// Same slack the chain exact lane applies to its suffix time bounds.
+const BOUND_DEFLATE: f64 = 1.0 - 1e-9;
+
+/// Exact SP-DAG span search with an unbounded node budget.
+pub fn sp_search_span_exact(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    match sp_search_span_exact_budget(ctx, sp, cap, lo, hi, u64::MAX) {
+        Ok(p) => p,
+        Err(Exhausted) => unreachable!("unbounded budget cannot exhaust"),
+    }
+}
+
+/// Exact SP-DAG span search under a node budget. Every `(position,
+/// config)` trial costs one node; exceeding the budget returns
+/// `Err(Exhausted)` — never a wrong answer. Chain-shaped spans delegate
+/// to [`cost::search_span_exact_budget`] verbatim.
+pub fn sp_search_span_exact_budget(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+    budget: u64,
+) -> Result<Option<Plan>, Exhausted> {
+    assert!(lo <= hi && hi <= ctx.len());
+    sp.assert_valid_span(lo, hi);
+    if sp.topo.groups_in(lo, hi).is_empty() {
+        return cost::exact::search_span_exact_budget(ctx, cap, lo, hi, budget);
+    }
+    let n = hi - lo;
+
+    // span-relative roles: `branch_of[i] = (group, branch, first, last)`,
+    // `merge_of[i]` marks a group's successor, `fork_of[i]` its fork
+    let mut branch_of: Vec<Option<(usize, usize, bool, bool)>> = vec![None; n];
+    let mut merge_of: Vec<Option<usize>> = vec![None; n];
+    let mut fork_of: Vec<Option<usize>> = vec![None; n];
+    for gi in sp.topo.groups_in(lo, hi) {
+        let g = &sp.topo.groups[gi];
+        fork_of[g.fork() - lo] = Some(gi);
+        merge_of[g.end() - lo] = Some(gi);
+        for (bi, &(blo, bhi)) in g.branches.iter().enumerate() {
+            for p in blo..bhi {
+                branch_of[p - lo] = Some((gi, bi, p == blo, p + 1 == bhi));
+            }
+        }
+    }
+
+    // per-position minima over configs
+    let mut min_t = vec![0.0f64; n];
+    let mut min_m = vec![0u64; n];
+    for i in 0..n {
+        let pos = lo + i;
+        let o = ctx.off_at(pos);
+        let (mut t, mut m) = (f64::INFINITY, u64::MAX);
+        for c in 0..ctx.ncfg_at(pos) {
+            t = t.min(ctx.time_col()[o + c]);
+            m = m.min(ctx.mem_col()[o + c]);
+        }
+        min_t[i] = t;
+        min_m[i] = m;
+    }
+
+    // exact-integer memory suffix sums (memory is additive across
+    // branches, so the plain chain bound stays valid)
+    let mut lb_mem = vec![0u64; n + 1];
+    for i in (0..n).rev() {
+        lb_mem[i] = min_m[i].saturating_add(lb_mem[i + 1]);
+    }
+
+    // group time lump: branches run concurrently, the group contributes
+    // at least the largest per-branch sum of minima
+    let lump = |gi: usize| -> f64 {
+        sp.topo.groups[gi]
+            .branches
+            .iter()
+            .map(|&(blo, bhi)| (blo..bhi).map(|p| min_t[p - lo]).sum::<f64>())
+            .fold(0.0f64, f64::max)
+    };
+
+    // `after[i]`: admissible bound on (final time − clock after choosing
+    // position i). From a branch-last position the remainder jumps to
+    // the successor's tail (siblings fold by max, never sum); from a
+    // fork it is the group lump plus the successor's tail.
+    let succ_rel = |gi: usize| sp.topo.groups[gi].end() - lo;
+    let mut tail = vec![0.0f64; n + 1];
+    let mut after = vec![0.0f64; n];
+    for i in (0..n).rev() {
+        let a = match branch_of[i] {
+            Some((gi, _, _, true)) => tail[succ_rel(gi)],
+            Some(_) => tail[i + 1],
+            None => match fork_of[i] {
+                Some(gi) => lump(gi) + tail[succ_rel(gi)],
+                None => tail[i + 1],
+            },
+        };
+        after[i] = a;
+        tail[i] = min_t[i] + a;
+    }
+    for a in after.iter_mut() {
+        *a *= BOUND_DEFLATE;
+    }
+
+    let mut dfs = Dfs {
+        ctx,
+        sp,
+        lo,
+        n,
+        cap: cap.unwrap_or(u64::MAX),
+        branch_of,
+        merge_of,
+        after,
+        lb_mem,
+        cur: vec![0; n],
+        clock: vec![0.0; n],
+        nodes: 0,
+        budget,
+        best_t: f64::INFINITY,
+        best_m: u64::MAX,
+        best_choice: None,
+    };
+    dfs.go(0, 0)?;
+    Ok(dfs
+        .best_choice
+        .map(|choice| Plan { choice, time_us: dfs.best_t, mem_bytes: dfs.best_m }))
+}
+
+struct Dfs<'a> {
+    ctx: &'a SearchCtx,
+    sp: &'a SpCtx,
+    lo: usize,
+    n: usize,
+    cap: u64,
+    branch_of: Vec<Option<(usize, usize, bool, bool)>>,
+    merge_of: Vec<Option<usize>>,
+    after: Vec<f64>,
+    lb_mem: Vec<u64>,
+    cur: Vec<usize>,
+    /// per-position clock after its choice: absolute time for trunk and
+    /// successor positions, branch-local (0.0-seeded) time for branch
+    /// positions
+    clock: Vec<f64>,
+    nodes: u64,
+    budget: u64,
+    best_t: f64,
+    best_m: u64,
+    best_choice: Option<Vec<usize>>,
+}
+
+impl Dfs<'_> {
+    fn go(&mut self, i: usize, mem: u64) -> Result<(), Exhausted> {
+        if i == self.n {
+            // the final position is trunk/successor (a valid cut cannot
+            // end inside a group), so its clock is the span time
+            let t = self.clock[self.n - 1];
+            if self.best_choice.is_none()
+                || t < self.best_t
+                || (t == self.best_t && mem < self.best_m)
+            {
+                self.best_t = t;
+                self.best_m = mem;
+                self.best_choice = Some(self.cur.clone());
+            }
+            return Ok(());
+        }
+        let pos = self.lo + i;
+        let o = self.ctx.off_at(pos);
+        let cc = self.ctx.ncfg_at(pos);
+        for c in 0..cc {
+            self.nodes += 1;
+            if self.nodes > self.budget {
+                return Err(Exhausted);
+            }
+            let m = mem.saturating_add(self.ctx.mem_col()[o + c]);
+            if m.saturating_add(self.lb_mem[i + 1]) > self.cap {
+                continue;
+            }
+            let seg_t = self.ctx.time_col()[o + c];
+            // (clock value to store, absolute completion lower bound K)
+            let (clk, k) = match self.branch_of[i] {
+                Some((gi, bi, first, _)) => {
+                    let fork_rel = self.sp.topo.groups[gi].fork() - self.lo;
+                    let rel = if first {
+                        let a = self.cur[fork_rel];
+                        (0.0 + self.sp.fork_mat(gi, bi)[a * cc + c]) + seg_t
+                    } else {
+                        (self.clock[i - 1] + self.ctx.step_matrix(pos)[self.cur[i - 1] * cc + c])
+                            + seg_t
+                    };
+                    (rel, self.clock[fork_rel] + rel)
+                }
+                None => {
+                    let t = if let Some(gi) = self.merge_of[i] {
+                        let g = &self.sp.topo.groups[gi];
+                        let fork_rel = g.fork() - self.lo;
+                        let mut mx = f64::NEG_INFINITY;
+                        for (bi, &(_, bhi)) in g.branches.iter().enumerate() {
+                            let lb = bhi - 1 - self.lo;
+                            let w = self.clock[lb]
+                                + self.sp.merge_mat(gi, bi)[self.cur[lb] * cc + c];
+                            if w > mx {
+                                mx = w;
+                            }
+                        }
+                        (self.clock[fork_rel] + mx) + seg_t
+                    } else if i == 0 {
+                        seg_t
+                    } else {
+                        (self.clock[i - 1] + self.ctx.step_matrix(pos)[self.cur[i - 1] * cc + c])
+                            + seg_t
+                    };
+                    (t, t)
+                }
+            };
+            if self.best_choice.is_some() && k + self.after[i] > self.best_t {
+                continue;
+            }
+            self.clock[i] = clk;
+            self.cur[i] = c;
+            self.go(i + 1, m)?;
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::{sp_search_span, sp_plan_cost_span, BranchGroup, SpCtx, SpTopology};
+    use super::*;
+    use crate::profiler::{ProfileDb, ReshardTable, SegmentConfig, SegmentProfile};
+    use crate::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+    use crate::spmd::ShardState;
+
+    fn profile(cfgs: usize, times: &[f64], mems: &[u64]) -> SegmentProfile {
+        SegmentProfile {
+            configs: (0..cfgs).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+            t_c_us: times.to_vec(),
+            t_p_us: vec![0.0; cfgs],
+            mem_bytes: mems.to_vec(),
+            act_bytes: vec![64; cfgs],
+            ckpt_bytes: vec![16; cfgs],
+            t_fwd_us: times.to_vec(),
+            symbolic_volume: vec![0; cfgs],
+            boundary_out: vec![ShardState::Replicated; cfgs],
+            boundary_in: vec![ShardState::Replicated; cfgs],
+        }
+    }
+
+    fn chain_set(uids: &[usize], uniques: usize) -> SegmentSet {
+        SegmentSet {
+            instances: uids
+                .iter()
+                .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+                .collect(),
+            unique: (0..uniques)
+                .map(|u| UniqueSegment {
+                    id: u,
+                    fingerprint: format!("u{u}"),
+                    rep: uids.iter().position(|&x| x == u).unwrap_or(0),
+                    count: uids.iter().filter(|&&x| x == u).count(),
+                })
+                .collect(),
+        }
+    }
+
+    fn dense(ca: usize, cb: usize, scale: f64) -> ReshardTable {
+        ReshardTable {
+            t_r_us: (0..ca)
+                .map(|a| (0..cb).map(|b| scale * (1.0 + (a * cb + b) as f64)).collect())
+                .collect(),
+            sym_vol: vec![vec![0; cb]; ca],
+            programs: ca * cb,
+        }
+    }
+
+    /// Fork `u0`, two expert branches `u1`/`u2`, merge-owning `u1`
+    /// successor, two trailing `u0` trunk instances — dyadic times so
+    /// every sum is exact and tie behavior is visible.
+    fn fixture() -> (SegmentSet, ProfileDb, SpTopology) {
+        let mut db = ProfileDb::default();
+        db.segments.push(profile(2, &[4.0, 6.0], &[100, 60]));
+        db.segments.push(profile(3, &[8.0, 5.0, 7.0], &[200, 300, 150]));
+        db.segments.push(profile(2, &[3.0, 9.0], &[120, 40]));
+        db.reshard.insert((0, 1), dense(2, 3, 0.5));
+        db.reshard.insert((0, 2), dense(2, 2, 0.25));
+        db.reshard.insert((1, 1), dense(3, 3, 1.0));
+        db.reshard.insert((2, 1), dense(2, 3, 2.0));
+        db.reshard.insert((1, 0), dense(3, 2, 0.125));
+        let ss = chain_set(&[0, 1, 2, 1, 0, 0], 3);
+        let topo = SpTopology {
+            n: 6,
+            groups: vec![BranchGroup { branches: vec![(1, 2), (2, 3)] }],
+        };
+        topo.validate().unwrap();
+        (ss, db, topo)
+    }
+
+    /// All config assignments of the fixture, priced by the replay
+    /// helper (the reference association).
+    fn brute_force(
+        ctx: &SearchCtx,
+        sp: &SpCtx,
+        cap: Option<u64>,
+    ) -> Option<(f64, u64)> {
+        let ncfg = [2usize, 3, 2, 3, 2, 2];
+        let mut best: Option<(f64, u64)> = None;
+        let mut choice = [0usize; 6];
+        loop {
+            let (t, m) = sp_plan_cost_span(ctx, sp, &choice, 0, 6);
+            if !cap.is_some_and(|cap| m > cap) {
+                let better = best.map_or(true, |(bt, bm)| t < bt || (t == bt && m < bm));
+                if better {
+                    best = Some((t, m));
+                }
+            }
+            // odometer over the per-position config counts
+            let mut i = 6;
+            loop {
+                if i == 0 {
+                    return best;
+                }
+                i -= 1;
+                choice[i] += 1;
+                if choice[i] < ncfg[i] {
+                    break;
+                }
+                choice[i] = 0;
+            }
+        }
+    }
+
+    #[test]
+    fn exact_matches_brute_force_and_dp_bitwise() {
+        let (ss, db, topo) = fixture();
+        let ctx = SearchCtx::new(&ss, &db);
+        let sp = SpCtx::new(&ctx, &topo, &db);
+        let (bt, _) = brute_force(&ctx, &sp, None).unwrap();
+        let ex = sp_search_span_exact(&ctx, &sp, None, 0, 6).unwrap();
+        assert_eq!(ex.time_us.to_bits(), bt.to_bits(), "exact vs brute force");
+        let dp = sp_search_span(&ctx, &sp, None, 0, 6).unwrap();
+        assert_eq!(dp.time_us.to_bits(), bt.to_bits(), "dp vs brute force");
+        let (rt, rm) = sp_plan_cost_span(&ctx, &sp, &ex.choice, 0, 6);
+        assert_eq!(rt.to_bits(), ex.time_us.to_bits(), "replay of the exact choice");
+        assert_eq!(rm, ex.mem_bytes);
+    }
+
+    #[test]
+    fn capped_exact_matches_brute_force_across_caps() {
+        let (ss, db, topo) = fixture();
+        let ctx = SearchCtx::new(&ss, &db);
+        let sp = SpCtx::new(&ctx, &topo, &db);
+        for cap in [450u64, 520, 600, 750, 10_000] {
+            let bf = brute_force(&ctx, &sp, Some(cap));
+            let ex = sp_search_span_exact(&ctx, &sp, Some(cap), 0, 6);
+            match (bf, ex) {
+                (None, None) => {}
+                (Some((bt, _)), Some(p)) => {
+                    assert_eq!(p.time_us.to_bits(), bt.to_bits(), "cap {cap}");
+                    assert!(p.mem_bytes <= cap, "cap {cap}");
+                    let dp = sp_search_span(&ctx, &sp, Some(cap), 0, 6).unwrap();
+                    assert_eq!(dp.time_us.to_bits(), bt.to_bits(), "dp, cap {cap}");
+                }
+                (bf, ex) => panic!("cap {cap}: brute force {bf:?} vs exact {ex:?}"),
+            }
+        }
+        // an infeasibly small cap: every assignment exceeds it
+        assert!(sp_search_span_exact(&ctx, &sp, Some(100), 0, 6).is_none());
+    }
+
+    #[test]
+    fn chain_shaped_spans_delegate_to_the_chain_exact_lane() {
+        let (ss, db, topo) = fixture();
+        let ctx = SearchCtx::new(&ss, &db);
+        let sp = SpCtx::new(&ctx, &topo, &db);
+        // [4, 6) is trunk-only (a cut at 4 is past the group's successor)
+        let ours = sp_search_span_exact(&ctx, &sp, None, 4, 6).unwrap();
+        let chain = cost::search_span_exact(&ctx, None, 4, 6).unwrap();
+        assert_eq!(ours.time_us.to_bits(), chain.time_us.to_bits());
+        assert_eq!(ours.choice, chain.choice);
+    }
+
+    #[test]
+    fn tiny_budget_reports_exhaustion() {
+        let (ss, db, topo) = fixture();
+        let ctx = SearchCtx::new(&ss, &db);
+        let sp = SpCtx::new(&ctx, &topo, &db);
+        assert_eq!(
+            sp_search_span_exact_budget(&ctx, &sp, None, 0, 6, 3),
+            Err(Exhausted)
+        );
+        assert!(sp_search_span_exact_budget(&ctx, &sp, None, 0, 6, u64::MAX).is_ok());
+    }
+}

@@ -1,0 +1,661 @@
+//! Series-parallel segment-DAG planner (PR 8).
+//!
+//! Every planner before this module assumed the segment *chain*: a
+//! linear order of instances where each position reshards only into its
+//! successor. MoE models with expert parallelism as a first-class axis
+//! break that shape — a router segment forks into `E` expert branches
+//! that execute concurrently and merge back into the combine segment.
+//! This module represents that structure as a **series-parallel DAG over
+//! today's segment instances** and solves it with a recursive DP over
+//! the SP decomposition, one lane per existing chain lane:
+//!
+//! * **Scalar** ([`sp_search_span`] with no cap) — min-time plan. At a
+//!   branch group the per-branch chain DPs run on *branch-local clocks*
+//!   seeded from `0.0`; the merge takes, per successor config, the
+//!   min-time completion of every branch independently and combines them
+//!   with a max-fold (branches run concurrently; the slowest one gates
+//!   the merge). Per-branch independence is exact here: the branches
+//!   share no choice variables, so `min over assignments of max_b` equals
+//!   `max_b of per-branch min` — the DP optimum is the true optimum.
+//! * **Capped Pareto** ([`sp_search_span`] with a cap) — per-branch
+//!   `(time, mem)` frontiers, combined at the merge by an incremental
+//!   cross-product fold (time max, memory sum) with the chain lane's own
+//!   prune rules, including its `FRONTIER_CAP` thinning.
+//! * **Memory frontier** ([`sp_search_mem_span`]) — the 1F1B footprint
+//!   lane: across branches time folds by max, static/retained/recompute
+//!   add, and transient scratch folds by **max** (expert backward passes
+//!   are serialized per device exactly like the chain's transient rule).
+//!
+//! All three lanes replay the chain DP's float association *per edge* —
+//! `(prev + reshard) + seg_time`, branch seeds `(0.0 + reshard) +
+//! seg_time`, merges `(fork + max_b(rel_b + merge_reshard)) + seg_time`
+//! — so a chain-shaped span (no group intersects it) is not merely
+//! equivalent: it is **delegated verbatim** to the `cost` searchers and
+//! therefore bit-identical by construction ([`sp_search_span_engine`]).
+//!
+//! The exact lane ([`exact`]) runs the same branch-and-bound discipline
+//! as [`crate::cost::exact`] over the SP decomposition: admissible
+//! suffix bounds treat a branch group as `max_b(Σ min seg time)`,
+//! deflated by the same `×(1 − 1e-9)` slack, with the exact-integer
+//! memory prune unchanged (memory is additive across branches). The
+//! `--engine dp|exact|auto` portfolio dispatch carries over unchanged.
+//!
+//! Junction reshards are priced from the same dense matrices the chain
+//! uses: the fork edge into branch 0 and the edge out of the last branch
+//! are chain-adjacent (covered by [`SearchCtx::step_matrix`]); the
+//! remaining fork/merge edges dense-expand from
+//! [`ProfileDb::reshard_us`] with the identical `0.0` default
+//! ([`SpCtx::new`]).
+
+use crate::cost::{self, Plan, SearchCtx, SearchEngine};
+use crate::memory::{RecomputeSpec, SpanMemPlan};
+use crate::profiler::ProfileDb;
+
+mod dp;
+pub mod exact;
+
+pub use exact::{sp_search_span_exact, sp_search_span_exact_budget};
+
+/// One fork/join group: `branches[k]` is the half-open, *consecutive*
+/// instance-index range of branch `k` in the linearized chain order.
+/// The fork instance is `first() − 1`; the join's reshard edges price
+/// into the *successor* instance at `end()` (merge orphan ops belong to
+/// it), so a group never owns a separate merge instance.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct BranchGroup {
+    pub branches: Vec<(usize, usize)>,
+}
+
+impl BranchGroup {
+    /// First instance index of the first branch.
+    pub fn first(&self) -> usize {
+        self.branches[0].0
+    }
+
+    /// One past the last branch instance == the successor (merge-owning)
+    /// instance index.
+    pub fn end(&self) -> usize {
+        self.branches.last().unwrap().1
+    }
+
+    /// The fork instance feeding every branch.
+    pub fn fork(&self) -> usize {
+        self.first() - 1
+    }
+}
+
+/// Series-parallel topology over a segment chain of `n` instances:
+/// a sorted list of disjoint branch groups, everything between them
+/// plain trunk. `groups.is_empty()` is exactly today's chain.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpTopology {
+    pub n: usize,
+    pub groups: Vec<BranchGroup>,
+}
+
+impl SpTopology {
+    /// The chain topology (no branch groups).
+    pub fn chain(n: usize) -> SpTopology {
+        SpTopology { n, groups: Vec::new() }
+    }
+
+    pub fn is_chain(&self) -> bool {
+        self.groups.is_empty()
+    }
+
+    /// Largest branch count across groups (0 for a chain) — the `E` of
+    /// the wire-format `sp-dag{E}` signature.
+    pub fn max_branches(&self) -> usize {
+        self.groups.iter().map(|g| g.branches.len()).max().unwrap_or(0)
+    }
+
+    /// Canonical wire/cache-key form: `chain` or `sp-dag{E}`.
+    pub fn signature(&self) -> String {
+        if self.is_chain() {
+            "chain".into()
+        } else {
+            format!("sp-dag{}", self.max_branches())
+        }
+    }
+
+    /// Structural invariants: every group has ≥ 2 contiguous branches, a
+    /// fork (`first ≥ 1`) and a successor (`end ≤ n − 1`) instance, and
+    /// groups are sorted with at least the successor instance between
+    /// consecutive groups.
+    pub fn validate(&self) -> Result<(), String> {
+        let mut prev_end = 0usize;
+        for (gi, g) in self.groups.iter().enumerate() {
+            if g.branches.len() < 2 {
+                return Err(format!("group {gi}: needs ≥ 2 branches"));
+            }
+            for (bi, &(blo, bhi)) in g.branches.iter().enumerate() {
+                if blo >= bhi {
+                    return Err(format!("group {gi} branch {bi}: empty range"));
+                }
+                if bi + 1 < g.branches.len() && bhi != g.branches[bi + 1].0 {
+                    return Err(format!("group {gi}: branches not contiguous at {bi}"));
+                }
+            }
+            if g.first() < 1 {
+                return Err(format!("group {gi}: no fork instance before position 0"));
+            }
+            if g.end() > self.n.saturating_sub(1) {
+                return Err(format!("group {gi}: no successor instance inside the chain"));
+            }
+            if gi > 0 && g.first() < prev_end + 1 {
+                return Err(format!("group {gi}: overlaps or abuts the previous group's fork"));
+            }
+            prev_end = g.end();
+        }
+        Ok(())
+    }
+
+    /// Whether a stage cut *before* instance `p` is structurally valid:
+    /// a cut may not separate a fork from its branches, branches from
+    /// each other, or branches from their successor — i.e. `p` must not
+    /// fall in any group's `[first, end]`.
+    pub fn valid_cut(&self, p: usize) -> bool {
+        !self.groups.iter().any(|g| g.first() <= p && p <= g.end())
+    }
+
+    /// Indices of the groups fully contained in span `[lo, hi)` (with
+    /// valid cuts a group is always fully inside or fully outside).
+    pub fn groups_in(&self, lo: usize, hi: usize) -> Vec<usize> {
+        self.groups
+            .iter()
+            .enumerate()
+            .filter(|(_, g)| g.fork() >= lo && g.end() < hi)
+            .map(|(gi, _)| gi)
+            .collect()
+    }
+}
+
+/// The SP decomposition: a chain run is a [`SpTree::Leaf`], a branch
+/// group is a [`SpTree::Parallel`] of per-branch leaves, and the whole
+/// topology is the [`SpTree::Series`] of those in linear order. Branches
+/// are chains in this PR (no nested parallelism), which is exactly the
+/// shape [`recompose`] accepts — `decompose ∘ recompose` and
+/// `recompose ∘ decompose` are identities (pinned by the property
+/// suite).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum SpTree {
+    /// Contiguous trunk run `[lo, hi)`.
+    Leaf { lo: usize, hi: usize },
+    Series(Vec<SpTree>),
+    Parallel(Vec<SpTree>),
+}
+
+/// Canonical SP decomposition of a topology.
+pub fn decompose(topo: &SpTopology) -> SpTree {
+    let mut items = Vec::new();
+    let mut cursor = 0usize;
+    for g in &topo.groups {
+        if cursor < g.first() {
+            items.push(SpTree::Leaf { lo: cursor, hi: g.first() });
+        }
+        items.push(SpTree::Parallel(
+            g.branches.iter().map(|&(lo, hi)| SpTree::Leaf { lo, hi }).collect(),
+        ));
+        cursor = g.end();
+    }
+    if cursor < topo.n {
+        items.push(SpTree::Leaf { lo: cursor, hi: topo.n });
+    }
+    SpTree::Series(items)
+}
+
+/// Rebuild the topology from a canonical SP tree. Rejects shapes
+/// [`decompose`] cannot produce (nested parallels, non-contiguous
+/// leaves), so the round-trip is an identity exactly on valid trees.
+pub fn recompose(tree: &SpTree) -> Result<SpTopology, String> {
+    let SpTree::Series(items) = tree else {
+        return Err("top level must be a Series".into());
+    };
+    let mut groups = Vec::new();
+    let mut cursor = 0usize;
+    for item in items {
+        match item {
+            SpTree::Leaf { lo, hi } => {
+                if *lo != cursor || hi <= lo {
+                    return Err(format!("trunk leaf [{lo}, {hi}) breaks contiguity at {cursor}"));
+                }
+                cursor = *hi;
+            }
+            SpTree::Parallel(branches) => {
+                let mut ranges = Vec::with_capacity(branches.len());
+                for b in branches {
+                    let SpTree::Leaf { lo, hi } = b else {
+                        return Err("nested parallelism is not supported".into());
+                    };
+                    if *lo != cursor || hi <= lo {
+                        return Err(format!(
+                            "branch leaf [{lo}, {hi}) breaks contiguity at {cursor}"
+                        ));
+                    }
+                    ranges.push((*lo, *hi));
+                    cursor = *hi;
+                }
+                groups.push(BranchGroup { branches: ranges });
+            }
+            SpTree::Series(_) => return Err("nested series is not supported".into()),
+        }
+    }
+    let topo = SpTopology { n: cursor, groups };
+    topo.validate()?;
+    Ok(topo)
+}
+
+/// Junction reshard matrices for one topology over one [`SearchCtx`]:
+/// per group, per branch, a dense fork matrix (`fork_cfg × branch_first
+/// cfg`) and merge matrix (`branch_last cfg × successor cfg`), built
+/// from the same [`ProfileDb::reshard_us`] lookups (0.0 default for
+/// absent pairs) the chain's step matrices dense-expand from. Owns its
+/// data, so the inter-op planner can cache it next to the `SearchCtx`.
+pub struct SpCtx {
+    pub topo: SpTopology,
+    /// `fork_mats[gi][bi][a * ncfg_first + c]`
+    fork_mats: Vec<Vec<Vec<f64>>>,
+    /// `merge_mats[gi][bi][c_b * ncfg_succ + c_s]`
+    merge_mats: Vec<Vec<Vec<f64>>>,
+    /// `group_at[pos] = Some(gi)` iff `pos` is group `gi`'s first branch
+    /// position
+    group_at: Vec<Option<usize>>,
+}
+
+impl SpCtx {
+    pub fn new(ctx: &SearchCtx, topo: &SpTopology, db: &ProfileDb) -> SpCtx {
+        assert_eq!(topo.n, ctx.len(), "topology and context disagree on chain length");
+        topo.validate().expect("invalid SP topology");
+        let mut fork_mats = Vec::with_capacity(topo.groups.len());
+        let mut merge_mats = Vec::with_capacity(topo.groups.len());
+        let mut group_at = vec![None; topo.n];
+        for (gi, g) in topo.groups.iter().enumerate() {
+            group_at[g.first()] = Some(gi);
+            let (fu, su) = (ctx.uid_at(g.fork()), ctx.uid_at(g.end()));
+            let (fcc, scc) = (ctx.ncfg_at(g.fork()), ctx.ncfg_at(g.end()));
+            let mut fm = Vec::with_capacity(g.branches.len());
+            let mut mm = Vec::with_capacity(g.branches.len());
+            for &(blo, bhi) in &g.branches {
+                let (bu_in, bu_out) = (ctx.uid_at(blo), ctx.uid_at(bhi - 1));
+                let (cc_in, cc_out) = (ctx.ncfg_at(blo), ctx.ncfg_at(bhi - 1));
+                let mut f = Vec::with_capacity(fcc * cc_in);
+                for a in 0..fcc {
+                    for c in 0..cc_in {
+                        f.push(db.reshard_us(fu, a, bu_in, c));
+                    }
+                }
+                fm.push(f);
+                let mut m = Vec::with_capacity(cc_out * scc);
+                for cb in 0..cc_out {
+                    for cs in 0..scc {
+                        m.push(db.reshard_us(bu_out, cb, su, cs));
+                    }
+                }
+                mm.push(m);
+            }
+            fork_mats.push(fm);
+            merge_mats.push(mm);
+        }
+        SpCtx { topo: topo.clone(), fork_mats, merge_mats, group_at }
+    }
+
+    /// Group starting (branch 0, first position) at `pos`, if any.
+    pub(crate) fn group_starting_at(&self, pos: usize) -> Option<usize> {
+        self.group_at[pos]
+    }
+
+    pub(crate) fn fork_mat(&self, gi: usize, bi: usize) -> &[f64] {
+        &self.fork_mats[gi][bi]
+    }
+
+    pub(crate) fn merge_mat(&self, gi: usize, bi: usize) -> &[f64] {
+        &self.merge_mats[gi][bi]
+    }
+
+    fn assert_valid_span(&self, lo: usize, hi: usize) {
+        assert!(
+            self.topo.valid_cut(lo) && self.topo.valid_cut(hi),
+            "span [{lo}, {hi}) cuts through a branch group"
+        );
+    }
+}
+
+/// SP-DAG span search, the [`cost::search_span_ctx`] counterpart:
+/// `cap = None` runs the scalar lane, `Some` the capped Pareto lane.
+/// Chain-shaped spans delegate to the chain searchers verbatim (the
+/// chain fast path — bit-identical by construction, pinned by a
+/// regression test).
+pub fn sp_search_span(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+) -> Option<Plan> {
+    sp.assert_valid_span(lo, hi);
+    if sp.topo.groups_in(lo, hi).is_empty() {
+        return cost::search_span_ctx(ctx, cap, lo, hi);
+    }
+    match cap {
+        None => dp::scalar_plan(ctx, sp, lo, hi),
+        Some(c) => dp::pareto_plan(ctx, sp, c, lo, hi),
+    }
+}
+
+/// Engine-dispatched SP-DAG span search — the [`cost::search_span_engine`]
+/// counterpart with identical portfolio semantics (`--engine` on DAG
+/// models): `dp` runs the SP lanes, `exact` the SP branch-and-bound with
+/// the chain lane's node budget, `auto` the exact lane only when the
+/// assignment space fits [`cost::exact::AUTO_EXACT_BITS`]. A budget
+/// exhaustion falls back to the DP with a stderr note, never a wrong
+/// answer.
+pub fn sp_search_span_engine(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    cap: Option<u64>,
+    lo: usize,
+    hi: usize,
+    engine: SearchEngine,
+) -> Option<Plan> {
+    sp.assert_valid_span(lo, hi);
+    if sp.topo.groups_in(lo, hi).is_empty() {
+        return cost::search_span_engine(ctx, cap, lo, hi, engine);
+    }
+    let budget = match engine {
+        SearchEngine::Dp => return sp_search_span(ctx, sp, cap, lo, hi),
+        SearchEngine::Exact => cost::exact::EXACT_NODE_BUDGET,
+        SearchEngine::Auto => {
+            if cost::space_bits(ctx, lo, hi) > cost::exact::AUTO_EXACT_BITS {
+                return sp_search_span(ctx, sp, cap, lo, hi);
+            }
+            cost::exact::AUTO_NODE_BUDGET
+        }
+    };
+    match exact::sp_search_span_exact_budget(ctx, sp, cap, lo, hi, budget) {
+        Ok(p) => p,
+        Err(cost::exact::Exhausted) => {
+            eprintln!(
+                "cfp: sp-dag exact lane exhausted its node budget on [{lo}, {hi}); \
+                 falling back to the DP"
+            );
+            sp_search_span(ctx, sp, cap, lo, hi)
+        }
+    }
+}
+
+/// SP-DAG memory-frontier span search, the
+/// [`cost::search_span_mem_ctx`] counterpart. Chain-shaped spans
+/// delegate verbatim.
+pub fn sp_search_mem_span(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+) -> Vec<SpanMemPlan> {
+    sp.assert_valid_span(lo, hi);
+    if sp.topo.groups_in(lo, hi).is_empty() {
+        return cost::search_span_mem_ctx(ctx, lo, hi, spec);
+    }
+    dp::mem_frontier(ctx, sp, lo, hi, spec, false)
+}
+
+/// Exact (untruncated, true-dominance) counterpart of
+/// [`sp_search_mem_span`] — the memory lane's oracle: same float
+/// association, no running-min keep rule, no frontier thinning.
+pub fn sp_search_mem_span_exact(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    lo: usize,
+    hi: usize,
+    spec: RecomputeSpec,
+) -> Vec<SpanMemPlan> {
+    sp.assert_valid_span(lo, hi);
+    if sp.topo.groups_in(lo, hi).is_empty() {
+        return cost::search_span_mem_exact(ctx, lo, hi, spec);
+    }
+    dp::mem_frontier(ctx, sp, lo, hi, spec, true)
+}
+
+/// Replay a fixed choice vector over span `[lo, hi)` with the DP's own
+/// float association, returning `(time_us, mem_bytes)` — the DAG
+/// counterpart of [`cost::plan_cost_span`]'s role for baselines and
+/// tests. The returned time is bit-identical to the DP/exact value for
+/// the same assignment.
+pub fn sp_plan_cost_span(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    choice: &[usize],
+    lo: usize,
+    hi: usize,
+) -> (f64, u64) {
+    sp.assert_valid_span(lo, hi);
+    assert_eq!(choice.len(), hi - lo);
+    let (time, mem) = (ctx.time_col(), ctx.mem_col());
+    let mut fin = vec![0.0f64; hi - lo];
+    let mut mem_sum = 0u64;
+    let mut pos = lo;
+    while pos < hi {
+        let i = pos - lo;
+        let c = choice[i];
+        let o = ctx.off_at(pos);
+        mem_sum += mem[o + c];
+        if let Some(gi) = sp.group_starting_at(pos) {
+            let g = &sp.topo.groups[gi];
+            let fork_i = g.fork() - lo;
+            let a = choice[fork_i];
+            // branch-local clocks seeded from the fork edge
+            for (bi, &(blo, bhi)) in g.branches.iter().enumerate() {
+                for p in blo..bhi {
+                    let j = p - lo;
+                    let cj = choice[j];
+                    let oj = ctx.off_at(p);
+                    if p > blo {
+                        mem_sum += mem[oj + cj];
+                    }
+                    let cc = ctx.ncfg_at(p);
+                    fin[j] = if p == blo {
+                        (0.0 + sp.fork_mat(gi, bi)[a * cc + cj]) + time[oj + cj]
+                    } else {
+                        (fin[j - 1] + ctx.step_matrix(p)[choice[j - 1] * cc + cj]) + time[oj + cj]
+                    };
+                }
+            }
+            // merge into the successor: fork clock + slowest branch
+            let s = g.end();
+            let si = s - lo;
+            let cs = choice[si];
+            let so = ctx.off_at(s);
+            mem_sum += mem[so + cs];
+            let scc = ctx.ncfg_at(s);
+            let mut mx = f64::NEG_INFINITY;
+            for (bi, &(_, bhi)) in g.branches.iter().enumerate() {
+                let cb = choice[bhi - 1 - lo];
+                let w = fin[bhi - 1 - lo] + sp.merge_mat(gi, bi)[cb * scc + cs];
+                if w > mx {
+                    mx = w;
+                }
+            }
+            fin[si] = (fin[fork_i] + mx) + time[so + cs];
+            pos = s + 1;
+        } else {
+            let cc = ctx.ncfg_at(pos);
+            fin[i] = if pos == lo {
+                time[o + c]
+            } else {
+                (fin[i - 1] + ctx.step_matrix(pos)[choice[i - 1] * cc + c]) + time[o + c]
+            };
+            pos += 1;
+        }
+    }
+    (fin[hi - lo - 1], mem_sum)
+}
+
+/// Build the event-simulation task list for a fixed plan over
+/// `[lo, hi)`: one [`crate::cluster::sim::SpTask`] per instance, with
+/// fork/merge dependencies and reshard costs priced exactly as the DP
+/// priced them, so [`crate::cluster::sim::simulate_sp_dag`] reproduces
+/// the planner's closed form bit-for-bit.
+pub fn sim_tasks(
+    ctx: &SearchCtx,
+    sp: &SpCtx,
+    choice: &[usize],
+    lo: usize,
+    hi: usize,
+) -> Vec<crate::cluster::sim::SpTask> {
+    use crate::cluster::sim::SpTask;
+    sp.assert_valid_span(lo, hi);
+    assert_eq!(choice.len(), hi - lo);
+    let time = ctx.time_col();
+    let mut tasks = Vec::with_capacity(hi - lo);
+    let mut pos = lo;
+    while pos < hi {
+        if let Some(gi) = sp.group_starting_at(pos) {
+            let g = &sp.topo.groups[gi];
+            let fork_i = g.fork() - lo;
+            let a = choice[fork_i];
+            for (bi, &(blo, bhi)) in g.branches.iter().enumerate() {
+                for p in blo..bhi {
+                    let j = p - lo;
+                    let c = choice[j];
+                    let o = ctx.off_at(p);
+                    let cc = ctx.ncfg_at(p);
+                    let (deps, seed_zero) = if p == blo {
+                        (vec![(fork_i, sp.fork_mat(gi, bi)[a * cc + c])], true)
+                    } else {
+                        (vec![(j - 1, ctx.step_matrix(p)[choice[j - 1] * cc + c])], false)
+                    };
+                    tasks.push(SpTask { time_us: time[o + c], deps, seed_zero, rebase: None });
+                }
+            }
+            let s = g.end();
+            let cs = choice[s - lo];
+            let so = ctx.off_at(s);
+            let scc = ctx.ncfg_at(s);
+            let deps: Vec<(usize, f64)> = g
+                .branches
+                .iter()
+                .enumerate()
+                .map(|(bi, &(_, bhi))| {
+                    let cb = choice[bhi - 1 - lo];
+                    (bhi - 1 - lo, sp.merge_mat(gi, bi)[cb * scc + cs])
+                })
+                .collect();
+            tasks.push(SpTask {
+                time_us: time[so + cs],
+                deps,
+                seed_zero: false,
+                rebase: Some(fork_i),
+            });
+            pos = s + 1;
+        } else {
+            let i = pos - lo;
+            let c = choice[i];
+            let o = ctx.off_at(pos);
+            let deps = if pos == lo {
+                Vec::new()
+            } else {
+                let cc = ctx.ncfg_at(pos);
+                vec![(i - 1, ctx.step_matrix(pos)[choice[i - 1] * cc + c])]
+            };
+            tasks.push(SpTask { time_us: time[o + c], deps, seed_zero: false, rebase: None });
+            pos += 1;
+        }
+    }
+    tasks
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn topo() -> SpTopology {
+        SpTopology {
+            n: 8,
+            groups: vec![
+                BranchGroup { branches: vec![(1, 2), (2, 3)] },
+                BranchGroup { branches: vec![(5, 6), (6, 7)] },
+            ],
+        }
+    }
+
+    #[test]
+    fn validate_accepts_well_formed_and_rejects_malformed() {
+        assert!(topo().validate().is_ok());
+        assert!(SpTopology::chain(5).validate().is_ok());
+        // one branch only
+        let t = SpTopology { n: 4, groups: vec![BranchGroup { branches: vec![(1, 2)] }] };
+        assert!(t.validate().is_err());
+        // no successor instance
+        let t = SpTopology { n: 3, groups: vec![BranchGroup { branches: vec![(1, 2), (2, 3)] }] };
+        assert!(t.validate().is_err());
+        // no fork instance
+        let t = SpTopology { n: 4, groups: vec![BranchGroup { branches: vec![(0, 1), (1, 2)] }] };
+        assert!(t.validate().is_err());
+        // non-contiguous branches
+        let t = SpTopology { n: 6, groups: vec![BranchGroup { branches: vec![(1, 2), (3, 4)] }] };
+        assert!(t.validate().is_err());
+        // groups sharing the successor/fork instance
+        let t = SpTopology {
+            n: 7,
+            groups: vec![
+                BranchGroup { branches: vec![(1, 2), (2, 3)] },
+                BranchGroup { branches: vec![(3, 4), (4, 5)] },
+            ],
+        };
+        assert!(t.validate().is_err(), "second fork would be the first successor");
+    }
+
+    #[test]
+    fn cut_validity_follows_group_spans() {
+        let t = topo();
+        // group 0 occupies [1, 3) with fork 0 and successor 3
+        for p in 0..=t.n {
+            let inside = (1..=2).contains(&p) || (5..=6).contains(&p);
+            assert_eq!(t.valid_cut(p), !inside, "cut {p}");
+        }
+        assert_eq!(t.groups_in(0, 8), vec![0, 1]);
+        assert_eq!(t.groups_in(0, 4), vec![0]);
+        assert_eq!(t.groups_in(4, 8), vec![1]);
+        assert_eq!(t.groups_in(3, 5), Vec::<usize>::new());
+    }
+
+    #[test]
+    fn decompose_recompose_round_trips() {
+        for t in [topo(), SpTopology::chain(4), SpTopology::chain(0)] {
+            let tree = decompose(&t);
+            assert_eq!(recompose(&tree).unwrap(), t);
+            assert_eq!(decompose(&recompose(&tree).unwrap()), tree);
+        }
+    }
+
+    #[test]
+    fn recompose_rejects_non_canonical_trees() {
+        assert!(recompose(&SpTree::Leaf { lo: 0, hi: 3 }).is_err(), "must be a series");
+        let gap = SpTree::Series(vec![
+            SpTree::Leaf { lo: 0, hi: 1 },
+            SpTree::Leaf { lo: 2, hi: 3 },
+        ]);
+        assert!(recompose(&gap).is_err());
+        let nested = SpTree::Series(vec![
+            SpTree::Leaf { lo: 0, hi: 1 },
+            SpTree::Parallel(vec![
+                SpTree::Parallel(vec![SpTree::Leaf { lo: 1, hi: 2 }]),
+                SpTree::Leaf { lo: 2, hi: 3 },
+            ]),
+            SpTree::Leaf { lo: 3, hi: 4 },
+        ]);
+        assert!(recompose(&nested).is_err());
+    }
+
+    #[test]
+    fn signatures_encode_topology_class() {
+        assert_eq!(SpTopology::chain(9).signature(), "chain");
+        assert_eq!(topo().signature(), "sp-dag2");
+        let t = SpTopology {
+            n: 6,
+            groups: vec![BranchGroup { branches: vec![(1, 2), (2, 3), (3, 4)] }],
+        };
+        assert_eq!(t.signature(), "sp-dag3");
+    }
+}

@@ -1,0 +1,343 @@
+//! Differential property suite for the PR 8 SP-DAG planner: the
+//! recursive series-parallel DP lanes (`spdag::sp_search_span`,
+//! `sp_search_mem_span`) vs the SP-DAG branch-and-bound oracle
+//! (`spdag::sp_search_span_exact`, `sp_search_mem_span_exact`) on
+//! randomized small fork/join topologies, plus the structural
+//! `decompose`/`recompose` round-trip and the event-simulation replay.
+//!
+//! Instances stay small (trunk 1–2, 1–2 groups of 2–3 branches ×
+//! 1–2 instances, ≤ 3 configs) so exhaustive enumeration is cheap.
+//! Lanes mirror `prop_exact_equivalence`:
+//!
+//! * **unconstrained scalar** — DP optimum == exact optimum
+//!   bit-for-bit on every valid span, and the fixed-choice replay
+//!   (`sp_plan_cost_span`) and the event simulation
+//!   (`simulate_sp_dag(sim_tasks(..))`) both reproduce the DP's time
+//!   bit-for-bit.
+//! * **capped** — the two-valued memory family keeps every per-state
+//!   Pareto frontier under `FRONTIER_CAP` (a span of length L has
+//!   ≤ L + 1 distinct memory sums), so thinning never engages and the
+//!   capped DP must be bit-identical to exact at every cap.
+//! * **memory frontier** — the min-time head matches the untruncated
+//!   true-dominance oracle bit-for-bit, every DP point is
+//!   dominated-or-equal by an exact point, and feasibility selection
+//!   over the exact frontier never loses to the DP's.
+//!
+//! Failures replay with `CFP_PROP_SEED=<printed value>`.
+
+use cfp::cluster::sim::simulate_sp_dag;
+use cfp::cluster::Platform;
+use cfp::coordinator::{run_cfp, CfpOptions};
+use cfp::cost::{self, SearchCtx};
+use cfp::memory::{self, RecomputeSpec};
+use cfp::models::ModelCfg;
+use cfp::profiler::{ProfileDb, ReshardTable, SegmentConfig, SegmentProfile};
+use cfp::segment::{SegmentInstance, SegmentSet, UniqueSegment};
+use cfp::spdag::{
+    self, decompose, recompose, sp_plan_cost_span, sp_search_mem_span, sp_search_mem_span_exact,
+    sp_search_span, sp_search_span_exact, BranchGroup, SpCtx, SpTopology,
+};
+use cfp::spmd::ShardState;
+use cfp::util::proptest::Prop as Harness;
+use cfp::util::Pcg64;
+
+/// Per-config memory draw: free random bytes, or the `base + {0, delta}`
+/// two-value family the capped lane's no-thinning argument needs.
+enum MemModel {
+    Free,
+    TwoValued { delta: u64 },
+}
+
+fn random_profile(rng: &mut Pcg64, cfgs: usize, mem: &MemModel) -> SegmentProfile {
+    let base = 500 + rng.below(4000);
+    let mem_bytes: Vec<u64> = (0..cfgs)
+        .map(|_| match mem {
+            MemModel::Free => 500 + rng.below(4000),
+            MemModel::TwoValued { delta } => base + rng.below(2) * delta,
+        })
+        .collect();
+    let act_bytes: Vec<u64> = mem_bytes.iter().map(|&m| rng.below(m + 1)).collect();
+    let ckpt_bytes: Vec<u64> = act_bytes.iter().map(|&a| rng.below(a + 1)).collect();
+    SegmentProfile {
+        configs: (0..cfgs).map(|c| SegmentConfig { strategy: vec![c] }).collect(),
+        t_c_us: (0..cfgs).map(|_| rng.f64() * 200.0).collect(),
+        t_p_us: (0..cfgs).map(|_| rng.f64() * 400.0).collect(),
+        mem_bytes,
+        act_bytes,
+        ckpt_bytes,
+        t_fwd_us: (0..cfgs).map(|_| rng.f64() * 100.0).collect(),
+        symbolic_volume: vec![0; cfgs],
+        boundary_out: vec![ShardState::Replicated; cfgs],
+        boundary_in: vec![ShardState::Replicated; cfgs],
+    }
+}
+
+/// A small random SP-DAG setup: 1–2 trunk instances, then 1–2 fork/join
+/// groups of 2–3 branches × 1–2 instances each (one merge-successor
+/// trunk instance after every group), over ≤ 3 uniques × ≤ 3 configs.
+/// Reshard tables are absent for ~1/3 of the pairs (dense 0.0 default).
+fn random_spdag(rng: &mut Pcg64, mem: MemModel) -> (SegmentSet, ProfileDb, SpTopology) {
+    let uniques = 1 + rng.below(3) as usize;
+    let mut db = ProfileDb::default();
+    for _ in 0..uniques {
+        let cfgs = 1 + rng.below(3) as usize;
+        db.segments.push(random_profile(rng, cfgs, &mem));
+    }
+    for a in 0..uniques {
+        for b in 0..uniques {
+            if rng.below(3) > 0 {
+                let (ca, cb) = (db.segments[a].configs.len(), db.segments[b].configs.len());
+                let t_r_us: Vec<Vec<f64>> =
+                    (0..ca).map(|_| (0..cb).map(|_| rng.f64() * 50.0).collect()).collect();
+                db.reshard.insert(
+                    (a, b),
+                    ReshardTable { t_r_us, sym_vol: vec![vec![0; cb]; ca], programs: ca * cb },
+                );
+            }
+        }
+    }
+    let trunk = 1 + rng.below(2) as usize;
+    let groups = 1 + rng.below(2) as usize;
+    let mut topo_groups = Vec::with_capacity(groups);
+    let mut pos = trunk;
+    for _ in 0..groups {
+        let branches = 2 + rng.below(2) as usize;
+        let branch_len = 1 + rng.below(2) as usize;
+        let ranges: Vec<(usize, usize)> = (0..branches)
+            .map(|b| (pos + b * branch_len, pos + (b + 1) * branch_len))
+            .collect();
+        topo_groups.push(BranchGroup { branches: ranges });
+        pos += branches * branch_len + 1; // branches + merge successor
+    }
+    let n = pos;
+    let topo = SpTopology { n, groups: topo_groups };
+    topo.validate().expect("generated topology is valid by construction");
+
+    let uids: Vec<usize> = (0..n).map(|_| rng.below(uniques as u64) as usize).collect();
+    let instances: Vec<SegmentInstance> = uids
+        .iter()
+        .map(|&u| SegmentInstance { unique_id: u, blocks: vec![], fwd_range: (0, 0) })
+        .collect();
+    let unique: Vec<UniqueSegment> = (0..uniques)
+        .map(|u| UniqueSegment {
+            id: u,
+            fingerprint: format!("u{u}"),
+            rep: uids.iter().position(|&x| x == u).unwrap_or(0),
+            count: uids.iter().filter(|&&x| x == u).count(),
+        })
+        .collect();
+    (SegmentSet { instances, unique }, db, topo)
+}
+
+/// A random span whose endpoints are both valid cuts (never inside a
+/// branch group) — the only spans the SP-DAG searchers accept.
+fn random_valid_span(rng: &mut Pcg64, topo: &SpTopology) -> (usize, usize) {
+    let cuts: Vec<usize> = (0..=topo.n).filter(|&p| topo.valid_cut(p)).collect();
+    let i = rng.below((cuts.len() - 1) as u64) as usize;
+    let j = i + 1 + rng.below((cuts.len() - 1 - i) as u64) as usize;
+    (cuts[i], cuts[j])
+}
+
+fn assert_times_eq(a: &Option<cost::Plan>, b: &Option<cost::Plan>, what: &str) {
+    match (a, b) {
+        (Some(a), Some(b)) => {
+            assert!(
+                a.time_us.to_bits() == b.time_us.to_bits(),
+                "{what}: time {} vs {}",
+                a.time_us,
+                b.time_us
+            );
+        }
+        (None, None) => {}
+        _ => panic!("{what}: feasibility mismatch {a:?} vs {b:?}"),
+    }
+}
+
+#[test]
+fn prop_unconstrained_spdag_dp_equals_exact_and_replays() {
+    Harness::fuzz(500, 0x59DA61).check("SP-DAG unconstrained DP ≡ exact ≡ sim", |rng| {
+        let (ss, db, topo) = random_spdag(rng, MemModel::Free);
+        let ctx = SearchCtx::new(&ss, &db);
+        let sp = SpCtx::new(&ctx, &topo, &db);
+        let n = topo.n;
+        let mut spans = vec![(0, n)];
+        spans.push(random_valid_span(rng, &topo));
+        for (lo, hi) in spans {
+            let dp = sp_search_span(&ctx, &sp, None, lo, hi);
+            let ex = sp_search_span_exact(&ctx, &sp, None, lo, hi);
+            assert_times_eq(&dp, &ex, &format!("[{lo},{hi})"));
+            let plan = dp.expect("uncapped SP-DAG search is always feasible");
+            // the fixed-choice replay shares the DP's float association
+            let (t, m) = sp_plan_cost_span(&ctx, &sp, &plan.choice, lo, hi);
+            assert!(
+                t.to_bits() == plan.time_us.to_bits(),
+                "[{lo},{hi}): replay {t} vs plan {}",
+                plan.time_us
+            );
+            assert_eq!(m, plan.mem_bytes, "[{lo},{hi}): replay memory");
+            // and the event-driven simulation reproduces the closed form
+            let tasks = spdag::sim_tasks(&ctx, &sp, &plan.choice, lo, hi);
+            let fin = simulate_sp_dag(&tasks);
+            let makespan = fin.last().copied().expect("non-empty span");
+            assert!(
+                makespan.to_bits() == plan.time_us.to_bits(),
+                "[{lo},{hi}): sim {makespan} vs plan {}",
+                plan.time_us
+            );
+        }
+    });
+}
+
+#[test]
+fn prop_capped_spdag_dp_equals_exact() {
+    Harness::fuzz(500, 0xCA99DA).check("SP-DAG capped DP ≡ exact", |rng| {
+        let delta = 1 + rng.below(2000);
+        let (ss, db, topo) = random_spdag(rng, MemModel::TwoValued { delta });
+        let ctx = SearchCtx::new(&ss, &db);
+        let sp = SpCtx::new(&ctx, &topo, &db);
+        let n = topo.n;
+        let free = sp_search_span(&ctx, &sp, None, 0, n).expect("uncapped is feasible");
+        let caps = [
+            1u64,
+            free.mem_bytes.saturating_sub(delta),
+            free.mem_bytes.saturating_sub(1),
+            free.mem_bytes,
+            free.mem_bytes + rng.below(4 * delta + 1),
+        ];
+        for (lo, hi) in [(0, n), random_valid_span(rng, &topo)] {
+            for cap in caps {
+                let dp = sp_search_span(&ctx, &sp, Some(cap), lo, hi);
+                let ex = sp_search_span_exact(&ctx, &sp, Some(cap), lo, hi);
+                assert_times_eq(&dp, &ex, &format!("[{lo},{hi}) cap {cap}"));
+                if let Some(e) = &ex {
+                    assert!(e.mem_bytes <= cap, "[{lo},{hi}) cap {cap}: exact plan fits");
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_spdag_mem_frontier_head_matches_and_exact_dominates() {
+    Harness::fuzz(500, 0x3FDA6).check("SP-DAG mem frontier: head ≡, exact dominates", |rng| {
+        let (ss, db, topo) = random_spdag(rng, MemModel::Free);
+        let ctx = SearchCtx::new(&ss, &db);
+        let sp = SpCtx::new(&ctx, &topo, &db);
+        let n = topo.n;
+        let spec = if rng.below(2) == 0 { RecomputeSpec::Off } else { RecomputeSpec::Auto };
+        for (lo, hi) in [(0, n), random_valid_span(rng, &topo)] {
+            let dp = sp_search_mem_span(&ctx, &sp, lo, hi, spec);
+            let ex = sp_search_mem_span_exact(&ctx, &sp, lo, hi, spec);
+            assert!(!dp.is_empty() && !ex.is_empty(), "[{lo},{hi}) {spec:?}");
+
+            // the min-time head survives every prune, so its time must
+            // agree bit-for-bit. (Unlike the chain suite, head *choice*
+            // equality is not asserted: two branches with identical
+            // unique sequences admit time-tied optima under a config
+            // swap, and the tied representative may legitimately differ.)
+            let (dh, eh) = (&dp[0], &ex[0]);
+            assert!(
+                dh.time_us.to_bits() == eh.time_us.to_bits(),
+                "[{lo},{hi}) {spec:?}: head {} vs {}",
+                dh.time_us,
+                eh.time_us
+            );
+
+            // completeness: every DP point is covered by an exact point
+            for p in &dp {
+                assert!(
+                    ex.iter().any(|q| q.time_us <= p.time_us
+                        && q.footprint.static_bytes <= p.footprint.static_bytes
+                        && q.footprint.retained_bytes <= p.footprint.retained_bytes
+                        && q.footprint.transient_bytes <= p.footprint.transient_bytes),
+                    "[{lo},{hi}) {spec:?}: DP point t={} not covered",
+                    p.time_us
+                );
+            }
+
+            // feasibility selection over exact never loses to the DP's
+            let me = 1 + rng.below(8) as usize;
+            let f = 1 + rng.below(4) as usize;
+            let caps: Vec<u64> =
+                dp.iter().map(|p| p.peak_bytes(me, f)).chain([0, u64::MAX]).collect();
+            for cap in caps {
+                let from_dp = memory::select_feasible(&dp, me, f, cap).map(|p| p.time_us);
+                let from_ex = memory::select_feasible(&ex, me, f, cap).map(|p| p.time_us);
+                match (from_dp, from_ex) {
+                    (Some(d), Some(e)) => {
+                        assert!(e <= d, "cap {cap}: exact selection {e} worse than DP {d}")
+                    }
+                    (None, Some(_)) => {} // the DP's documented thinning loss
+                    (Some(d), None) => {
+                        panic!("cap {cap}: DP feasible at {d} but exact claims infeasible")
+                    }
+                    (None, None) => {}
+                }
+            }
+            let d = memory::select_feasible(&dp, me, f, u64::MAX).unwrap();
+            let e = memory::select_feasible(&ex, me, f, u64::MAX).unwrap();
+            assert!(d.time_us.to_bits() == e.time_us.to_bits());
+        }
+    });
+}
+
+#[test]
+fn prop_sp_decomposition_round_trips() {
+    Harness::fuzz(500, 0x4EE7).check("decompose ∘ recompose identity", |rng| {
+        let (_, _, topo) = random_spdag(rng, MemModel::Free);
+        let tree = decompose(&topo);
+        let back = recompose(&tree).expect("decompose output is always recomposable");
+        assert_eq!(back, topo, "recompose(decompose(t)) == t");
+        assert_eq!(decompose(&back), tree, "decompose(recompose(tree)) == tree");
+    });
+}
+
+#[test]
+fn chain_topologies_decompose_to_one_leaf() {
+    let topo = SpTopology::chain(7);
+    let tree = decompose(&topo);
+    assert_eq!(
+        tree,
+        spdag::SpTree::Series(vec![spdag::SpTree::Leaf { lo: 0, hi: 7 }]),
+        "a chain is a single trunk leaf"
+    );
+    assert_eq!(recompose(&tree).unwrap(), topo);
+}
+
+/// End-to-end pin on every expert-parallel MoE preset: the planner's
+/// chosen time, the fixed-choice replay, and the event-driven DAG
+/// simulation must all agree bit-for-bit (the standing `cluster::sim`
+/// invariant, extended to the SP-DAG lane).
+#[test]
+fn moe_presets_plan_replay_and_simulate_bit_identically() {
+    let models = [
+        ModelCfg::preset("moe-ep-tiny").with_layers(2),
+        ModelCfg::preset("moe-ep-tiny").with_layers(4),
+        ModelCfg::preset("moe-ep-7.1b").with_layers(2).with_batch(8).scaled_for_eval(),
+    ];
+    for model in models {
+        let name = model.name.clone();
+        let layers = model.layers;
+        let opts = CfpOptions::new(model, Platform::a100_pcie(4));
+        let r = run_cfp(&opts);
+        assert!(!r.topo.is_chain(), "{name} l{layers}: expert branches make an SP-DAG");
+        let ctx = SearchCtx::new(&r.segments, &r.db);
+        let sp = SpCtx::new(&ctx, &r.topo, &r.db);
+        let n = r.segments.instances.len();
+        let (t, m) = sp_plan_cost_span(&ctx, &sp, &r.plan.choice, 0, n);
+        assert!(
+            t.to_bits() == r.plan.time_us.to_bits(),
+            "{name} l{layers}: replay {t} vs plan {}",
+            r.plan.time_us
+        );
+        assert_eq!(m, r.plan.mem_bytes, "{name} l{layers}: replay memory");
+        let tasks = spdag::sim_tasks(&ctx, &sp, &r.plan.choice, 0, n);
+        let fin = simulate_sp_dag(&tasks);
+        let makespan = fin.last().copied().expect("non-empty task list");
+        assert!(
+            makespan.to_bits() == r.plan.time_us.to_bits(),
+            "{name} l{layers}: sim {makespan} vs plan {}",
+            r.plan.time_us
+        );
+    }
+}
