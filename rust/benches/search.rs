@@ -293,6 +293,51 @@ fn main() {
         }
     }
 
+    // trace overhead lane (PR 9): the same 32-layer unconstrained chain
+    // search with the obs trace disabled vs enabled. The acceptance bar
+    // is ≤ 1% overhead when disabled is compared against itself across
+    // runs; here we record the enabled/disabled ratio so BENCH
+    // trajectories notice if counter flushes creep into hot loops. Runs
+    // in smoke so CI uploads the row every cycle; no hard assert — the
+    // ratio is noise-prone at sub-millisecond iteration times.
+    {
+        let layers = 32usize;
+        let (ss, db) = setup(layers);
+        let n = ss.instances.len();
+        let off_ctx = cost::SearchCtx::new(&ss, &db);
+        let on_ctx = cost::SearchCtx::with_trace(&ss, &db, cfp::obs::Trace::enabled());
+        let off_plan = cost::search_span_ctx(&off_ctx, None, 0, n).expect("plan");
+        let on_plan = cost::search_span_ctx(&on_ctx, None, 0, n).expect("plan");
+        assert!(
+            off_plan.time_us.to_bits() == on_plan.time_us.to_bits()
+                && off_plan.choice == on_plan.choice,
+            "tracing changed the plan"
+        );
+        let budget = Duration::from_millis(if smoke { 100 } else { 400 });
+        let off = bench(&format!("trace_overhead/off/{layers}L"), budget, || {
+            black_box(cost::search_span_ctx(&off_ctx, None, 0, n));
+        });
+        let on = bench(&format!("trace_overhead/on/{layers}L"), budget, || {
+            black_box(cost::search_span_ctx(&on_ctx, None, 0, n));
+        });
+        let ratio = on.median_ns / off.median_ns.max(1e-9);
+        println!("trace_overhead/{layers}L: enabled costs {ratio:.3}x the disabled search");
+        rows.push(JsonRow {
+            name: format!("trace_overhead/off/{layers}L"),
+            layers,
+            ns_per_iter: off.median_ns,
+            unit: None,
+            speedup: None,
+        });
+        rows.push(JsonRow {
+            name: format!("trace_overhead/on/{layers}L"),
+            layers,
+            ns_per_iter: on.median_ns,
+            unit: None,
+            speedup: Some(ratio),
+        });
+    }
+
     let path = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("BENCH_search.json");
     match merge_bench_json(&path, &rows) {
         Ok(()) => println!("wrote {} rows to {}", rows.len(), path.display()),

@@ -55,6 +55,10 @@ pub struct CfpOptions {
     /// the production DP, the branch-and-bound exact lane, or `Auto`
     /// (exact on small spans, DP otherwise — see cost::exact)
     pub engine: cost::SearchEngine,
+    /// observability sink (`--trace-out`); disabled by default. Counting
+    /// never shapes the plan — with tracing off every hook is one
+    /// `Option` branch (see [`crate::obs`]).
+    pub trace: crate::obs::Trace,
 }
 
 impl CfpOptions {
@@ -73,7 +77,15 @@ impl CfpOptions {
             microbatches: 8,
             recompute: RecomputeSpec::Off,
             engine: cost::SearchEngine::Dp,
+            trace: crate::obs::Trace::disabled(),
         }
+    }
+
+    /// Attach an observability trace; every phase of the run counts into
+    /// it (see [`crate::obs`]).
+    pub fn with_trace(mut self, trace: crate::obs::Trace) -> CfpOptions {
+        self.trace = trace;
+        self
     }
 
     pub fn with_cache(mut self, path: impl Into<std::path::PathBuf>) -> CfpOptions {
@@ -122,6 +134,7 @@ impl CfpOptions {
             microbatches: self.microbatches,
             spec: self.stages,
             recompute: self.recompute,
+            trace: self.trace.clone(),
         }
     }
 
@@ -400,7 +413,7 @@ pub fn run_cfp(opts: &CfpOptions) -> CfpResult {
 fn save_cache(cache: Option<&mut ProfileCache>) {
     if let Some(c) = cache {
         if let Err(e) = c.save() {
-            eprintln!("cfp: could not persist profile cache: {e}");
+            crate::obs::diag::diag(&format!("cfp: could not persist profile cache: {e}"));
         }
     }
 }
@@ -423,13 +436,20 @@ pub fn run_cfp_shared(opts: &CfpOptions, shared: &SharedProfileCache) -> CfpResu
 /// [`run_cfp`] over any cache ownership shape ([`CacheHandle`]).
 pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> CfpResult {
     let mut timings = PhaseTimings::default();
+    let trace = &opts.trace;
 
     // AnalysisPasses: graph build + ParallelBlocks + segments
     let t0 = Instant::now();
+    let analysis_span = trace.span("coordinator.analysis_passes");
     let graph = build_training(&opts.model);
     let blocks = build_parallel_blocks(&graph, opts.mesh.intra);
     let (segments, topo) = extract_with_topology(&graph, &blocks);
+    drop(analysis_span);
     timings.analysis_passes_s = t0.elapsed().as_secs_f64();
+    if trace.is_enabled() {
+        trace.count(crate::obs::Counter::SegmentInstances, segments.instances.len() as u64);
+        trace.count(crate::obs::Counter::SegmentUnique, segments.unique.len() as u64);
+    }
 
     // ExecCompiling + MetricsProfiling (overlapped inside profile_model).
     // MetricsProfiling is charged at the measured per-config
@@ -437,7 +457,9 @@ pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> Cfp
     // profiling wall (config enumeration, cache lookups, reshard pricing)
     // is the compile-side bookkeeping.
     let t1 = Instant::now();
-    let mut popts = ProfileOptions::new(opts.platform, opts.mesh).with_threads(opts.threads);
+    let mut popts = ProfileOptions::new(opts.platform, opts.mesh)
+        .with_threads(opts.threads)
+        .with_trace(opts.trace.clone());
     if let Some(cm) = &opts.compute {
         popts = popts.with_compute(cm.clone());
     }
@@ -452,21 +474,41 @@ pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> Cfp
     // ComposeSearch (one SearchCtx serves the capped pass and the
     // unconstrained fallback)
     let t2 = Instant::now();
+    let search_span = trace.span("coordinator.compose_search");
     let cap = opts.mem_cap.or(Some(opts.platform.mem_capacity()));
-    let sctx = cost::SearchCtx::new(&segments, &db);
+    let sctx = cost::SearchCtx::with_trace(&segments, &db, opts.trace.clone());
     let n = segments.instances.len();
+    trace.note("engine", opts.engine.as_str());
+    trace.note("topology", topo.signature());
     // chain models take the chain DP verbatim (bit-identical fast path);
     // DAG models go through the spdag lanes with the same engine portfolio
     let plan = if topo.is_chain() {
-        cost::search_span_engine(&sctx, cap, 0, n, opts.engine)
-            .or_else(|| cost::search_span_engine(&sctx, None, 0, n, opts.engine))
-            .expect("no feasible plan")
+        match cost::search_span_engine(&sctx, cap, 0, n, opts.engine) {
+            Some(p) => {
+                trace.note("lane", "capped-pareto");
+                p
+            }
+            None => {
+                trace.note("lane", "unconstrained-scalar");
+                cost::search_span_engine(&sctx, None, 0, n, opts.engine)
+                    .expect("no feasible plan")
+            }
+        }
     } else {
         let sp = spdag::SpCtx::new(&sctx, &topo, &db);
-        spdag::sp_search_span_engine(&sctx, &sp, cap, 0, n, opts.engine)
-            .or_else(|| spdag::sp_search_span_engine(&sctx, &sp, None, 0, n, opts.engine))
-            .expect("no feasible plan")
+        match spdag::sp_search_span_engine(&sctx, &sp, cap, 0, n, opts.engine) {
+            Some(p) => {
+                trace.note("lane", "capped-pareto");
+                p
+            }
+            None => {
+                trace.note("lane", "unconstrained-scalar");
+                spdag::sp_search_span_engine(&sctx, &sp, None, 0, n, opts.engine)
+                    .expect("no feasible plan")
+            }
+        }
     };
+    drop(search_span);
     timings.compose_search_s = t2.elapsed().as_secs_f64();
 
     CfpResult { graph, blocks, segments, topo, db, plan, timings, mesh: opts.mesh }
@@ -560,8 +602,10 @@ pub fn run_cfp_two_level_with_handle(
     // are Some; under a cap, None means "does not fit, even checkpointed"
     // (for the naive baseline exactly as for the CFP planner)
     let t_plan = Instant::now();
+    let interop_span = opts.trace.span("coordinator.interop_plan");
     let pipeline = interop::plan_pipeline(&single.graph, &ctxs, &popts);
     let naive = baselines::naive_pipeline_plan(&single.graph, &ctxs, &popts);
+    drop(interop_span);
     let search_us =
         (single.timings.compose_search_s + t_plan.elapsed().as_secs_f64()) * 1e6;
     TwoLevelResult { single, pipeline, naive, profile_hits, profile_misses, search_us }

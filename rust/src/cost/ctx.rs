@@ -56,10 +56,20 @@ pub struct SearchCtx {
     pub(super) mats: Vec<Vec<f64>>,
     /// rematerialization frontiers per flat (unique, config)
     pub(super) remat: RematTable,
+    /// observability sink shared by every lane searching this context
+    /// (disabled by default — one `Option` branch per counting site)
+    pub(super) trace: crate::obs::Trace,
 }
 
 impl SearchCtx {
     pub fn new(ss: &SegmentSet, db: &ProfileDb) -> SearchCtx {
+        SearchCtx::with_trace(ss, db, crate::obs::Trace::disabled())
+    }
+
+    /// Like [`SearchCtx::new`] but with a live [`crate::obs::Trace`]
+    /// that every lane (scalar / Pareto / memory / exact / sweep /
+    /// SP-DAG) searching this context will count into.
+    pub fn with_trace(ss: &SegmentSet, db: &ProfileDb, trace: crate::obs::Trace) -> SearchCtx {
         let uniques = db.segments.len();
         let mut ncfg = Vec::with_capacity(uniques);
         let mut off = Vec::with_capacity(uniques + 1);
@@ -114,7 +124,13 @@ impl SearchCtx {
             step_mat,
             mats,
             remat: RematTable::build(db),
+            trace,
         }
+    }
+
+    /// The observability sink threaded through this context.
+    pub fn trace(&self) -> &crate::obs::Trace {
+        &self.trace
     }
 
     /// Chain length.

@@ -44,6 +44,7 @@
 //! the property suite pins full bit-identity on randomized inputs.
 
 use crate::memory::{RecomputeSpec, SpanFootprint, SpanMemPlan};
+use crate::obs::Counter;
 
 use super::ctx::SearchCtx;
 use super::Plan;
@@ -151,6 +152,9 @@ pub(super) fn scalar_states(ctx: &SearchCtx, lo: usize, hi: usize) -> Vec<Vec<Sc
     let mut steady: Option<Vec<u32>> = None;
     let mut last_verified = 0usize;
     let mut scratch: Vec<Scalar> = Vec::new();
+    // local tallies, flushed once at the end (keeps the disabled-trace
+    // cost of this hot loop at plain u64 adds)
+    let (mut full_steps, mut spliced, mut rollbacks) = (0u64, 0u64, 0u64);
     for i in 1..n {
         let pos = lo + i;
         if ctx.ncfg[ctx.uid[pos]] == 0 {
@@ -165,6 +169,7 @@ pub(super) fn scalar_states(ctx: &SearchCtx, lo: usize, hi: usize) -> Vec<Vec<Sc
         }
         if let Some(bp) = steady.clone() {
             scalar_fast_step(ctx, &states[i - 1], pos, &bp, &mut scratch);
+            spliced += 1;
             #[cfg(test)]
             SPLICED_STEPS.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
             let run_ends = i + 1 >= n
@@ -173,6 +178,7 @@ pub(super) fn scalar_states(ctx: &SearchCtx, lo: usize, hi: usize) -> Vec<Vec<Sc
             if run_ends || i - last_verified >= VERIFY_EVERY {
                 let mut full = Vec::new();
                 scalar_step(ctx, &states[i - 1], pos, &mut full);
+                full_steps += 1;
                 if full == scratch {
                     states.push(full);
                 } else {
@@ -180,13 +186,16 @@ pub(super) fn scalar_states(ctx: &SearchCtx, lo: usize, hi: usize) -> Vec<Vec<Sc
                     // recompute the unverified tail per-position
                     steady = None;
                     sig = None;
+                    rollbacks += 1;
                     for j in (last_verified + 1)..i {
                         let mut redo = Vec::new();
                         scalar_step(ctx, &states[j - 1], lo + j, &mut redo);
+                        full_steps += 1;
                         states[j] = redo;
                     }
                     let mut redo = Vec::new();
                     scalar_step(ctx, &states[i - 1], pos, &mut redo);
+                    full_steps += 1;
                     states.push(redo);
                 }
                 last_verified = i;
@@ -197,6 +206,7 @@ pub(super) fn scalar_states(ctx: &SearchCtx, lo: usize, hi: usize) -> Vec<Vec<Sc
         }
         let mut cur = Vec::new();
         scalar_step(ctx, &states[i - 1], pos, &mut cur);
+        full_steps += 1;
         if repeated {
             // detection: two consecutive repeated steps with the same
             // backpointers and uniform (time, mem) deltas — from there the
@@ -222,6 +232,11 @@ pub(super) fn scalar_states(ctx: &SearchCtx, lo: usize, hi: usize) -> Vec<Vec<Sc
         }
         last_verified = i;
         states.push(cur);
+    }
+    if ctx.trace.is_enabled() {
+        ctx.trace.count(Counter::ScalarSteps, full_steps);
+        ctx.trace.count(Counter::ScalarSpliced, spliced);
+        ctx.trace.count(Counter::ScalarRollbacks, rollbacks);
     }
     states
 }
@@ -311,6 +326,7 @@ pub(super) fn pareto_step(
     let cc = ctx.ncfg[u];
     let mat = &ctx.mats[ctx.step_mat[pos]];
     let mut cur: Vec<Vec<Point>> = Vec::with_capacity(cc);
+    let (mut generated, mut kept) = (0u64, 0u64);
     for c in 0..cc {
         let seg_t = ctx.time[o + c];
         let seg_m = ctx.mem[o + c];
@@ -328,8 +344,14 @@ pub(super) fn pareto_step(
                 }
             }
         }
+        generated += scratch.len() as u64;
         pareto_prune(scratch);
+        kept += scratch.len() as u64;
         cur.push(scratch.clone());
+    }
+    if ctx.trace.is_enabled() {
+        ctx.trace.count(Counter::ParetoStates, generated);
+        ctx.trace.count(Counter::ParetoKept, kept);
     }
     cur
 }
@@ -468,6 +490,7 @@ pub(super) fn mem_step(
     let cc = ctx.ncfg[u];
     let mat = &ctx.mats[ctx.step_mat[pos]];
     let mut cur: Vec<Vec<MemPoint>> = Vec::with_capacity(cc);
+    let (mut generated, mut kept) = (0u64, 0u64);
     for c in 0..cc {
         let seg_t = ctx.time[o + c];
         let stat = ctx.stat[o + c];
@@ -493,8 +516,14 @@ pub(super) fn mem_step(
                 }
             }
         }
+        generated += scratch.len() as u64;
         prune_mem(scratch);
+        kept += scratch.len() as u64;
         cur.push(scratch.clone());
+    }
+    if ctx.trace.is_enabled() {
+        ctx.trace.count(Counter::MemStates, generated);
+        ctx.trace.count(Counter::MemKept, kept);
     }
     cur
 }

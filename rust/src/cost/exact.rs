@@ -41,6 +41,7 @@
 //! bit-reproducible too.
 
 use crate::memory::{RecomputeSpec, SpanFootprint, SpanMemPlan};
+use crate::obs::Counter;
 
 use super::ctx::SearchCtx;
 use super::Plan;
@@ -160,10 +161,20 @@ pub fn search_span_exact_budget(
         cur: vec![0usize; n],
         best: None,
         nodes: 0,
+        bound_pruned: 0,
+        mem_pruned: 0,
         budget,
         exhausted: false,
     };
     bb.dfs(0, 0.0, 0);
+    if ctx.trace.is_enabled() {
+        ctx.trace.count(Counter::ExactNodes, bb.nodes);
+        ctx.trace.count(Counter::ExactBoundPruned, bb.bound_pruned);
+        ctx.trace.count(Counter::ExactMemPruned, bb.mem_pruned);
+        if bb.exhausted {
+            ctx.trace.count(Counter::ExactExhausted, 1);
+        }
+    }
     if bb.exhausted {
         return Err(Exhausted);
     }
@@ -234,6 +245,10 @@ struct Bb<'a> {
     cur: Vec<usize>,
     best: Option<(f64, u64, Vec<usize>)>,
     nodes: u64,
+    /// children cut by the admissible suffix time bound
+    bound_pruned: u64,
+    /// children cut by the exact integer memory prune
+    mem_pruned: u64,
     budget: u64,
     exhausted: bool,
 }
@@ -276,6 +291,7 @@ impl Bb<'_> {
             if let Some(cap) = self.cap {
                 // exact integer prune: even the leanest completion busts the cap
                 if m.saturating_add(self.lb_mem[i + 1]) > cap {
+                    self.mem_pruned += 1;
                     continue;
                 }
             }
@@ -283,6 +299,7 @@ impl Bb<'_> {
                 // strict `>`: equal-bound subtrees are explored, so exact
                 // time ties still reach the (time, mem) tie-break
                 if t + self.lb_time[i + 1] > *bt {
+                    self.bound_pruned += 1;
                     continue;
                 }
             }
@@ -375,6 +392,8 @@ pub fn search_span_mem_exact_budget(
             sets.push(pts);
         }
         if generated > max_points {
+            ctx.trace.count(Counter::ExactNodes, generated);
+            ctx.trace.count(Counter::ExactExhausted, 1);
             return Err(Exhausted);
         }
         frontiers.push(sets);
@@ -417,6 +436,8 @@ pub fn search_span_mem_exact_budget(
             }
             generated += pts.len() as u64;
             if generated > max_points {
+                ctx.trace.count(Counter::ExactNodes, generated);
+                ctx.trace.count(Counter::ExactExhausted, 1);
                 return Err(Exhausted);
             }
             pareto_filter(&mut pts);
@@ -424,6 +445,8 @@ pub fn search_span_mem_exact_budget(
         }
         frontiers.push(sets);
     }
+
+    ctx.trace.count(Counter::ExactNodes, generated);
 
     // terminal canonicalization: the reference's exact rule — sort every
     // surviving point by (time, stat, ret, tra), keep unless a kept

@@ -167,22 +167,33 @@ pub fn search_span_engine(
     engine: SearchEngine,
 ) -> Option<Plan> {
     let budget = match engine {
-        SearchEngine::Dp => return search_span_ctx(ctx, mem_cap, lo, hi),
+        SearchEngine::Dp => {
+            ctx.trace().note("engine_path", "dp");
+            return search_span_ctx(ctx, mem_cap, lo, hi);
+        }
         SearchEngine::Exact => exact::EXACT_NODE_BUDGET,
         SearchEngine::Auto => {
             if space_bits(ctx, lo, hi) > exact::AUTO_EXACT_BITS {
+                ctx.trace().note("engine_path", "auto-dp");
                 return search_span_ctx(ctx, mem_cap, lo, hi);
             }
             exact::AUTO_NODE_BUDGET
         }
     };
     match exact::search_span_exact_budget(ctx, mem_cap, lo, hi, budget) {
-        Ok(plan) => plan,
+        Ok(plan) => {
+            ctx.trace().note(
+                "engine_path",
+                if engine == SearchEngine::Auto { "auto-exact" } else { "exact" },
+            );
+            plan
+        }
         Err(exact::Exhausted) => {
-            eprintln!(
+            ctx.trace().note("engine_path", "exact-exhausted-dp-fallback");
+            crate::obs::diag::diag(&format!(
                 "cfp: exact engine exhausted its {budget}-node budget on span \
                  [{lo},{hi}); falling back to the DP (result not certified optimal)"
-            );
+            ));
             search_span_ctx(ctx, mem_cap, lo, hi)
         }
     }

@@ -33,6 +33,7 @@
 //! swept values bit-for-bit.
 
 use crate::memory::{self, RecomputeSpec};
+use crate::obs::Counter;
 
 use super::ctx::SearchCtx;
 use super::dp;
@@ -48,6 +49,10 @@ pub fn sweep_span_times(ctx: &SearchCtx, lo: usize, cap: u64) -> Vec<Option<f64>
     let mut out = Vec::with_capacity(n);
     if n == 0 {
         return out;
+    }
+    if ctx.trace.is_enabled() {
+        ctx.trace.count(Counter::SweepOrigins, 1);
+        ctx.trace.count(Counter::SweepSpans, n as u64);
     }
     // unconstrained lane, per-position states (steady-state splice incl.)
     let scalar = dp::scalar_states(ctx, lo, ctx.len());
@@ -91,6 +96,10 @@ pub fn sweep_span_frontiers(
     let mut out = Vec::with_capacity(n);
     if n == 0 {
         return out;
+    }
+    if ctx.trace.is_enabled() {
+        ctx.trace.count(Counter::SweepOrigins, 1);
+        ctx.trace.count(Counter::SweepSpans, n as u64);
     }
     let mut front = dp::mem_first(ctx, lo, spec);
     let mut scratch = Vec::new();

@@ -87,6 +87,7 @@ use crate::cluster::{collective_time_us, simulate_pipeline, Platform};
 use crate::cost::{self, FrontierRow, Plan, SearchCtx};
 use crate::graph::Graph;
 use crate::memory::{self, RecomputeSpec, SpanFootprint};
+use crate::obs::Counter;
 use crate::pblock::{build_parallel_blocks, BlockSet};
 use crate::profiler::{profile_model_handle, CacheHandle, ProfileDb, ProfileOptions};
 use crate::segment::{extract_with_topology, SegmentSet};
@@ -143,6 +144,9 @@ pub struct PipelineOptions {
     /// (`--recompute`). With `Off` and no `mem_cap`, planning is
     /// bit-identical to the PR 2 behaviour.
     pub recompute: RecomputeSpec,
+    /// observability sink shared with the single-level run (see
+    /// [`crate::obs`]); disabled by default, never shapes plans
+    pub trace: crate::obs::Trace,
 }
 
 impl PipelineOptions {
@@ -156,6 +160,7 @@ impl PipelineOptions {
             microbatches: 8,
             spec: StageSpec::Auto,
             recompute: RecomputeSpec::Off,
+            trace: crate::obs::Trace::disabled(),
         }
     }
 
@@ -303,7 +308,9 @@ fn profile_context(
     segments: &SegmentSet,
     cache: CacheHandle<'_>,
 ) -> ProfileDb {
-    let mut popts = ProfileOptions::new(opts.platform, mesh).with_threads(opts.threads);
+    let mut popts = ProfileOptions::new(opts.platform, mesh)
+        .with_threads(opts.threads)
+        .with_trace(opts.trace.clone());
     if let Some(cm) = &opts.compute {
         popts = popts.with_compute(cm.clone());
     }
@@ -468,7 +475,7 @@ impl SpanTables {
     /// single-context entry; [`plan_pipeline`] fans multi-context sweep
     /// jobs over the pool instead).
     pub fn build(ctx: &StageContext, opts: &PipelineOptions) -> SpanTables {
-        let sctx = Arc::new(SearchCtx::new(&ctx.segments, &ctx.db));
+        let sctx = Arc::new(SearchCtx::with_trace(&ctx.segments, &ctx.db, opts.trace.clone()));
         let sp = (!ctx.topo.is_chain()).then(|| SpCtx::new(&sctx, &ctx.topo, &ctx.db));
         if let Some(sp) = sp {
             let values = dag_span_values(&sctx, &sp, opts);
@@ -493,7 +500,7 @@ impl SpanTables {
     /// degenerate stage count stays `O(n)` instead of paying `O(n²)`
     /// sweeps it would never read.
     fn values_only_ctx(ctx: &StageContext, opts: &PipelineOptions) -> SpanTables {
-        let sctx = Arc::new(SearchCtx::new(&ctx.segments, &ctx.db));
+        let sctx = Arc::new(SearchCtx::with_trace(&ctx.segments, &ctx.db, opts.trace.clone()));
         let sp = (!ctx.topo.is_chain()).then(|| SpCtx::new(&sctx, &ctx.topo, &ctx.db));
         let values = if opts.memory_aware() {
             SpanValues::Memory { spec: opts.recompute, rows: Vec::new() }
@@ -606,7 +613,10 @@ fn build_span_tables(
                 // below would misprice spans containing branch groups
                 out.insert(d, SpanTables::build(ctx, opts));
             } else {
-                arcs.insert(d, Arc::new(SearchCtx::new(&ctx.segments, &ctx.db)));
+                arcs.insert(
+                    d,
+                    Arc::new(SearchCtx::with_trace(&ctx.segments, &ctx.db, opts.trace.clone())),
+                );
             }
         }
     }
@@ -616,6 +626,9 @@ fn build_span_tables(
         .iter()
         .flat_map(|(&d, c)| (0..c.len()).map(move |lo| (d, lo)))
         .collect();
+    if opts.trace.is_enabled() {
+        opts.trace.count(Counter::InteropSweepJobs, jobs.len() as u64);
+    }
     let threads = opts.threads.min(jobs.len().max(1));
     if opts.memory_aware() {
         let spec = opts.recompute;
@@ -676,6 +689,9 @@ pub fn plan_pipeline(
 ) -> Option<PipelinePlan> {
     let total = opts.mesh.total();
     let ks = candidate_stage_counts(opts.spec, opts.mesh);
+    if opts.trace.is_enabled() {
+        opts.trace.count(Counter::InteropStageCounts, ks.len() as u64);
+    }
     let tables = build_span_tables(ctxs, opts, &ks);
     let mut best: Option<PipelinePlan> = None;
     let mut structurally_possible = false;
@@ -767,6 +783,8 @@ fn plan_fixed_stages_tables(
     // states; dp[s][i] covers instances [0, i) with s stages.
     let mut dp: Vec<Vec<Vec<SplitState>>> = vec![vec![Vec::new(); n + 1]; k + 1];
     dp[0][0].push(SplitState { sum: 0.0, mx: 0.0, starts: Vec::new() });
+    // local tally of Pareto-kept split states, flushed once after the DP
+    let mut kept_states = 0u64;
     for s in 1..=k {
         // stage s ends at instance i; leave ≥ 1 instance per later stage
         for i in s..=(n - (k - s)) {
@@ -789,8 +807,12 @@ fn plan_fixed_stages_tables(
                 }
             }
             prune_states(&mut states);
+            kept_states += states.len() as u64;
             dp[s][i] = states;
         }
+    }
+    if opts.trace.is_enabled() {
+        opts.trace.count(Counter::InteropSplitStates, kept_states);
     }
 
     let mut best: Option<&SplitState> = None;
@@ -1083,7 +1105,18 @@ fn build_stage_plan(
                 Some(sp) => spdag::sp_search_mem_span(&tables.ctx, sp, lo, hi, *spec),
                 None => cost::search_span_mem_ctx(&tables.ctx, lo, hi, *spec),
             };
-            let sel = memory::select_feasible(&frontier, me, f, opts.device_cap())?.clone();
+            let sel = match memory::select_feasible(&frontier, me, f, opts.device_cap()) {
+                Some(sel) => sel.clone(),
+                None => {
+                    if opts.trace.is_enabled() {
+                        opts.trace.count(Counter::InteropMemRejects, 1);
+                    }
+                    return None;
+                }
+            };
+            if opts.trace.is_enabled() && sel.remat.iter().any(|&r| r) {
+                opts.trace.count(Counter::InteropMemRecovers, 1);
+            }
             let fp = sel.footprint;
             let (_, mem_bytes) = cost::plan_cost_span(&ctx.segments, &ctx.db, &sel.choice, lo, hi);
             (Plan { choice: sel.choice, time_us: sel.time_us, mem_bytes }, fp, sel.remat)

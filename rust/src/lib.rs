@@ -40,6 +40,7 @@ pub mod harness;
 pub mod interop;
 pub mod memory;
 pub mod models;
+pub mod obs;
 pub mod pblock;
 pub mod profiler;
 pub mod runtime;

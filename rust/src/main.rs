@@ -3,6 +3,7 @@
 //! Subcommands:
 //!   search      run the CFP pipeline on a model and print the chosen plan
 //!   pipeline    two-level planner: inter-op stages over the intra-op DP
+//!   explain     per-segment plan provenance (winner, runner-up, cost split)
 //!   compare     CFP vs Alpa/Megatron/DDP on one model+platform
 //!   serve       plan-serving daemon: NDJSON over stdin and --listen TCP
 //!   bench-serve load generator against `serve` (in-process or --connect)
@@ -29,10 +30,14 @@ use cfp::util::Json;
 
 fn main() {
     let args = Args::from_env();
+    if args.has_flag("quiet") {
+        cfp::obs::diag::set_quiet(true);
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "search" => cmd_search(&args),
         "pipeline" => cmd_pipeline(&args),
+        "explain" => cmd_explain(&args),
         "compare" => cmd_compare(&args),
         "serve" => cmd_serve(&args),
         "bench-serve" => cmd_bench_serve(&args),
@@ -41,16 +46,18 @@ fn main() {
         "space" => cmd_space(&args),
         _ => {
             eprintln!(
-                "usage: cfp <search|pipeline|compare|serve|bench-serve|train|calibrate|space> \
+                "usage: cfp \
+                 <search|pipeline|explain|compare|serve|bench-serve|train|calibrate|space> \
                  [--model gpt-2.6b] [--layers N] [--batch N] \
                  [--platform a100-pcie|a100-pcie-8|a100-2node|v100-nvlink] \
                  [--threads N] [--cache FILE] [--cache-max-entries N] \
                  [--stages auto|K] [--microbatches M] [--mem-cap GB] \
-                 [--recompute auto|off] [--engine dp|exact|auto] [--steps N] [--lr F] \
+                 [--recompute auto|off] [--engine dp|exact|auto] \
+                 [--trace-out FILE] [--steps N] [--lr F] \
                  [--listen ADDR] [--workers N] [--plan-cache N] \
                  [--plan-cache-file FILE] [--quota RATE] [--quota-burst N] \
                  [--max-pending N] [--auth-token SECRET] \
-                 [--connect ADDR] [--requests N] [--clients N] [--distinct N]"
+                 [--connect ADDR] [--requests N] [--clients N] [--distinct N] [--quiet]"
             );
             1
         }
@@ -75,11 +82,33 @@ fn build_opts(args: &Args, kind: PlannerKind) -> Result<CfpOptions, i32> {
     }
 }
 
+/// `--trace-out FILE`: arm the run's trace sink and return the path the
+/// Chrome trace JSON is written to after the run.
+fn trace_out(args: &Args, opts: &mut CfpOptions) -> Option<std::path::PathBuf> {
+    let path = args.get_path("trace-out")?;
+    opts.trace = cfp::obs::Trace::enabled();
+    Some(path)
+}
+
+fn write_trace(trace: &cfp::obs::Trace, path: &std::path::Path) {
+    match trace.write_chrome(path) {
+        Ok(()) => cfp::obs::diag::diag(&format!(
+            "trace written to {} (chrome://tracing / Perfetto)",
+            path.display()
+        )),
+        Err(e) => cfp::obs::diag::diag(&format!(
+            "cfp: could not write trace to {}: {e}",
+            path.display()
+        )),
+    }
+}
+
 fn cmd_search(args: &Args) -> i32 {
     let mut opts = match build_opts(args, PlannerKind::SingleLevel) {
         Ok(o) => o,
         Err(code) => return code,
     };
+    let trace_path = trace_out(args, &mut opts);
     if let Ok(rt) = Runtime::open_default() {
         if let Ok(cm) = rt.calibrate_compute(&opts.platform) {
             println!("(compute model calibrated from PJRT measurements)");
@@ -127,19 +156,26 @@ fn cmd_search(args: &Args) -> i32 {
             r.timings.metrics_profiling_s,
         );
     }
+    if let Some(p) = &trace_path {
+        write_trace(&opts.trace, p);
+    }
     0
 }
 
 fn cmd_pipeline(args: &Args) -> i32 {
-    let opts = match build_opts(args, PlannerKind::TwoLevel) {
+    let mut opts = match build_opts(args, PlannerKind::TwoLevel) {
         Ok(o) => o,
         Err(code) => return code,
     };
+    let trace_path = trace_out(args, &mut opts);
     if let Err(msg) = validate_pipeline_args(args, &opts) {
         eprintln!("cfp pipeline: {msg}");
         return 2;
     }
     let r = run_cfp_two_level(&opts);
+    if let Some(p) = &trace_path {
+        write_trace(&opts.trace, p);
+    }
     println!(
         "model {}  platform {}  gpus {}  microbatches {}  cap {}  recompute {}",
         opts.model.name,
@@ -209,6 +245,38 @@ fn cmd_pipeline(args: &Args) -> i32 {
     0
 }
 
+/// `cfp explain` — run the planner with tracing armed and print the
+/// per-segment provenance report. Dispatches on `--stages` exactly like
+/// the `search`/`pipeline` split; the report text is deterministic
+/// (bit-identical across `--threads` values), while `--trace-out` adds
+/// the wall-clock Chrome trace alongside.
+fn cmd_explain(args: &Args) -> i32 {
+    let two_level = args.get("stages").is_some();
+    let kind = if two_level { PlannerKind::TwoLevel } else { PlannerKind::SingleLevel };
+    let mut opts = match build_opts(args, kind) {
+        Ok(o) => o,
+        Err(code) => return code,
+    };
+    opts.trace = cfp::obs::Trace::enabled();
+    let trace_path = args.get_path("trace-out");
+    let text = if two_level {
+        if let Err(msg) = validate_pipeline_args(args, &opts) {
+            eprintln!("cfp explain: {msg}");
+            return 2;
+        }
+        let r = run_cfp_two_level(&opts);
+        cfp::obs::explain::render_explain_pipeline(&r, &opts)
+    } else {
+        let r = run_cfp(&opts);
+        cfp::obs::explain::render_explain(&r, &opts)
+    };
+    print!("{text}");
+    if let Some(p) = &trace_path {
+        write_trace(&opts.trace, p);
+    }
+    0
+}
+
 fn cmd_compare(args: &Args) -> i32 {
     let opts = match build_opts(args, PlannerKind::SingleLevel) {
         Ok(o) => o,
@@ -247,6 +315,7 @@ fn serve_config(args: &Args, workers: usize) -> ServeConfig {
             .map(|rate| (rate, args.get_f64("quota-burst", (2.0 * rate).max(1.0)))),
         max_pending: args.get_usize("max-pending", 1024),
         auth_token: args.get("auth-token").map(|s| s.to_string()),
+        trace_out: args.get_path("trace-out"),
     }
 }
 

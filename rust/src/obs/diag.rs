@@ -1,0 +1,76 @@
+//! Unified diagnostic sink for operational warnings.
+//!
+//! Every "the planner kept going but you should know" message — exact
+//! engine budget exhaustion, cache-discard warnings, stale-lock
+//! takeover — routes through [`diag`] instead of raw `eprintln!`, so
+//! one `--quiet` flag silences the lot uniformly across CLI and
+//! `cfp serve`, and tests can capture the stream instead of scraping
+//! stderr. Diagnostics are advisory only: they never carry plan data
+//! and suppressing them cannot change any output byte.
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Mutex;
+
+static QUIET: AtomicBool = AtomicBool::new(false);
+static CAPTURE: Mutex<Option<Vec<String>>> = Mutex::new(None);
+
+/// Emit one diagnostic line. Captured if a test capture is active,
+/// otherwise printed to stderr unless `--quiet` suppressed it.
+pub fn diag(msg: &str) {
+    {
+        let mut cap = CAPTURE.lock().unwrap();
+        if let Some(buf) = cap.as_mut() {
+            buf.push(msg.to_string());
+            return;
+        }
+    }
+    if !quiet() {
+        eprintln!("{msg}");
+    }
+}
+
+/// Suppress (or restore) stderr diagnostics process-wide (`--quiet`).
+pub fn set_quiet(q: bool) {
+    QUIET.store(q, Ordering::Relaxed);
+}
+
+pub fn quiet() -> bool {
+    QUIET.load(Ordering::Relaxed)
+}
+
+/// Begin capturing diagnostics instead of printing them (tests only —
+/// the capture buffer is process-global).
+pub fn capture_begin() {
+    *CAPTURE.lock().unwrap() = Some(Vec::new());
+}
+
+/// Stop capturing and return everything captured since
+/// [`capture_begin`].
+pub fn capture_end() -> Vec<String> {
+    CAPTURE.lock().unwrap().take().unwrap_or_default()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn capture_intercepts_diagnostics() {
+        capture_begin();
+        diag("cfp-test: marker-4242");
+        let got = capture_end();
+        // other tests may interleave lines into the global buffer; only
+        // require that our marker arrived and nothing prints afterwards
+        assert!(got.iter().any(|l| l == "cfp-test: marker-4242"));
+        assert!(capture_end().is_empty(), "capture is one-shot");
+    }
+
+    #[test]
+    fn quiet_flag_round_trips() {
+        let was = quiet();
+        set_quiet(true);
+        assert!(quiet());
+        set_quiet(was);
+        assert_eq!(quiet(), was);
+    }
+}

@@ -1,0 +1,260 @@
+//! `cfp explain` — per-segment plan provenance.
+//!
+//! Renders, for a finished run, *why* the plan looks the way it does:
+//! the winning config per segment with its cost split
+//! (compute / collective / reshard / remat penalty), the runner-up
+//! config and its margin, which lane and engine decided the plan, and
+//! the headline search-reduction counters (states actually explored vs
+//! the naive enumeration bound of the config space).
+//!
+//! Every value in the rendered text is deterministic: plan numbers,
+//! profile-table entries, [`crate::obs::Trace`] counters and notes —
+//! never wall-clock. The output is therefore bit-identical across
+//! thread counts, cache states and serve-vs-CLI, which
+//! `prop_trace_determinism` and the CI explain step pin.
+
+use std::fmt::Write as _;
+
+use crate::coordinator::{CfpOptions, CfpResult, TwoLevelResult};
+use crate::cost;
+use crate::spdag;
+
+use super::Counter;
+
+/// Render the provenance report for a single-level run. `opts` must be
+/// the options the run was made with — its trace carries the counters
+/// and the lane/engine notes the report quotes.
+pub fn render_explain(r: &CfpResult, opts: &CfpOptions) -> String {
+    let mut out = String::new();
+    let n = r.segments.instances.len();
+    let trace = &opts.trace;
+    let note = |k: &str| trace.note_get(k).unwrap_or_else(|| "-".to_string());
+
+    let _ = writeln!(out, "cfp explain — plan provenance");
+    let _ = writeln!(out, "=============================");
+    let _ = writeln!(
+        out,
+        "model: {} (layers {}, batch {})",
+        opts.model.name, opts.model.layers, opts.model.batch
+    );
+    let _ = writeln!(
+        out,
+        "platform: {} ({} devices, mesh {}x{})",
+        opts.platform.name,
+        opts.mesh.total(),
+        opts.mesh.intra,
+        opts.mesh.nodes
+    );
+    let _ = writeln!(out, "topology: {}", r.topo.signature());
+    let _ = writeln!(out, "engine: {} (path: {})", opts.engine.as_str(), note("engine_path"));
+    let _ = writeln!(out, "lane: {}", note("lane"));
+    let _ = writeln!(
+        out,
+        "plan: step {:.3} µs, mem {} bytes over {n} segments",
+        r.plan.time_us, r.plan.mem_bytes
+    );
+    let _ = writeln!(out);
+
+    // search-reduction headline: DP/B&B states actually visited vs the
+    // naive enumeration bound of the joint config space
+    let sctx = cost::SearchCtx::new(&r.segments, &r.db);
+    let bits = cost::space_bits(&sctx, 0, n);
+    let explored: u64 =
+        [Counter::ScalarSteps, Counter::ParetoStates, Counter::MemStates, Counter::ExactNodes]
+            .iter()
+            .map(|&c| trace.counter(c))
+            .sum();
+    let _ = writeln!(out, "search reduction");
+    let _ = writeln!(out, "----------------");
+    let _ = writeln!(out, "naive enumeration bound: 2^{bits:.1} assignments");
+    let _ = writeln!(out, "profiled program space: {}", r.db.profile_space());
+    let _ = writeln!(out, "states explored (dp + exact): {explored}");
+    for (name, v) in trace.snapshot() {
+        let _ = writeln!(out, "  {name} = {v}");
+    }
+    let _ = writeln!(out);
+
+    let _ = writeln!(out, "per-segment provenance");
+    let _ = writeln!(out, "----------------------");
+    let chain = r.topo.is_chain();
+    let sp = (!chain).then(|| spdag::SpCtx::new(&sctx, &r.topo, &r.db));
+    let labels = r.describe_plan();
+    let mut reshard_total = 0.0f64;
+    for i in 0..n {
+        let uid = r.segments.instances[i].unique_id;
+        let c = r.plan.choice[i];
+        let prof = &r.db.segments[uid];
+        let _ = writeln!(out, "{}", labels[i]);
+        let _ = writeln!(
+            out,
+            "  winner: cfg {c} of {}  compute {:.3} µs  collective {:.3} µs",
+            prof.configs.len(),
+            prof.t_p_us[c],
+            prof.t_c_us[c]
+        );
+        if chain {
+            let resh = if i == 0 {
+                0.0
+            } else {
+                let pu = r.segments.instances[i - 1].unique_id;
+                r.db.reshard_us(pu, r.plan.choice[i - 1], uid, c)
+            };
+            reshard_total += resh;
+            let _ = writeln!(out, "  reshard-in: {resh:.3} µs  remat penalty: 0.000 µs (off)");
+        }
+        // runner-up: best whole-plan cost with this one segment flipped
+        // to another config (pricing the decision margin — the memory
+        // cap is deliberately not re-checked). Lowest config index wins
+        // ties, so the line is deterministic.
+        let mut best: Option<(usize, f64)> = None;
+        for alt in 0..prof.configs.len() {
+            if alt == c {
+                continue;
+            }
+            let mut choice = r.plan.choice.clone();
+            choice[i] = alt;
+            let (t, _) = match &sp {
+                Some(sp) => spdag::sp_plan_cost_span(&sctx, sp, &choice, 0, n),
+                None => cost::plan_cost_span(&r.segments, &r.db, &choice, 0, n),
+            };
+            if best.map_or(true, |(_, bt)| t < bt) {
+                best = Some((alt, t));
+            }
+        }
+        match best {
+            Some((alt, t)) => {
+                let delta = t - r.plan.time_us;
+                let _ = writeln!(out, "  runner-up: cfg {alt}  {delta:+.3} µs vs the winner");
+            }
+            None => {
+                let _ = writeln!(out, "  runner-up: (no alternative config)");
+            }
+        }
+    }
+    if chain {
+        let _ = writeln!(out, "reshard total: {reshard_total:.3} µs");
+    } else {
+        // DAG plans price boundary rework inside the closed form (branch
+        // junctions included); report the aggregate residual instead of
+        // inventing a per-segment attribution the lane never computed
+        let seg_sum: f64 = (0..n)
+            .map(|i| {
+                let p = &r.db.segments[r.segments.instances[i].unique_id];
+                p.t_p_us[r.plan.choice[i]] + p.t_c_us[r.plan.choice[i]]
+            })
+            .sum();
+        let _ = writeln!(
+            out,
+            "reshard+junction residual: {:.3} µs (plan time − Σ segment kernels)",
+            r.plan.time_us - seg_sum
+        );
+    }
+    out
+}
+
+/// Render the provenance report for a two-level (pipeline) run: the
+/// single-stage report plus per-stage summaries. Deliberately excludes
+/// wall-clock fields (`search_us`) and the cache hit/miss *split* —
+/// only their cache-state-invariant sum — so the text stays
+/// bit-identical across warm and cold caches.
+pub fn render_explain_pipeline(r: &TwoLevelResult, opts: &CfpOptions) -> String {
+    let mut out = render_explain(&r.single, opts);
+    let _ = writeln!(out);
+    let _ = writeln!(out, "pipeline provenance");
+    let _ = writeln!(out, "-------------------");
+    let _ = writeln!(
+        out,
+        "profiled unique segments (all contexts): {}",
+        r.profile_hits + r.profile_misses
+    );
+    match &r.pipeline {
+        None => {
+            let _ = writeln!(out, "no feasible pipeline under the memory cap");
+        }
+        Some(p) => {
+            let _ = writeln!(
+                out,
+                "stages: {} × {} devices  microbatches {}  step {:.3} µs  bubble {:.3}",
+                p.num_stages(),
+                p.devices_per_stage,
+                p.microbatches,
+                p.step_time_us,
+                p.bubble_fraction
+            );
+            for (s, st) in p.stages.iter().enumerate() {
+                let _ = writeln!(
+                    out,
+                    "stage {s}: span [{}, {})  intra-op {:.3} µs  p2p-in {:.3} µs  \
+                     latency {:.3} µs  remat penalty {:.3} µs ({}/{} segments)  \
+                     peak {} bytes",
+                    st.span.0,
+                    st.span.1,
+                    st.plan.time_us,
+                    st.p2p_in_us,
+                    st.latency_us,
+                    st.footprint.recompute_us,
+                    st.remat.iter().filter(|&&x| x).count(),
+                    st.remat.len(),
+                    st.peak_mem_bytes
+                );
+            }
+            if let Some(nv) = &r.naive {
+                let _ = writeln!(
+                    out,
+                    "naive equal-split baseline: {:.3} µs ({:.2}× the cfp plan)",
+                    nv.step_time_us,
+                    nv.step_time_us / p.step_time_us
+                );
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::Platform;
+    use crate::coordinator::{run_cfp, run_cfp_two_level};
+    use crate::interop::StageSpec;
+    use crate::models::ModelCfg;
+    use crate::obs::Trace;
+
+    fn opts(model: &str) -> CfpOptions {
+        CfpOptions::new(ModelCfg::preset(model).with_layers(2), Platform::a100_pcie(4))
+            .with_trace(Trace::enabled())
+    }
+
+    #[test]
+    fn explain_carries_the_mandatory_provenance_fields() {
+        let opts = opts("gpt-tiny");
+        let r = run_cfp(&opts);
+        let text = render_explain(&r, &opts);
+        for field in
+            ["winner", "runner-up", "compute", "collective", "reshard", "lane", "engine", "states"]
+        {
+            assert!(text.contains(field), "explain is missing {field:?}:\n{text}");
+        }
+        assert!(text.contains("lane: capped-pareto") || text.contains("lane: unconstrained"));
+    }
+
+    #[test]
+    fn explain_handles_dag_models() {
+        let opts = opts("moe-ep-tiny");
+        let r = run_cfp(&opts);
+        assert!(!r.topo.is_chain());
+        let text = render_explain(&r, &opts);
+        assert!(text.contains("topology: sp-dag"));
+        assert!(text.contains("reshard+junction residual"));
+    }
+
+    #[test]
+    fn pipeline_explain_appends_stage_provenance() {
+        let opts = opts("gpt-tiny").with_stages(StageSpec::Auto);
+        let r = run_cfp_two_level(&opts);
+        let text = render_explain_pipeline(&r, &opts);
+        assert!(text.contains("pipeline provenance"));
+        assert!(text.contains("stage 0:"));
+        assert!(text.contains("remat penalty"));
+    }
+}

@@ -1,0 +1,482 @@
+//! Observability spine (PR 9): deterministic search counters, wall-clock
+//! spans, and Chrome trace-event export.
+//!
+//! Two strictly separated kinds of data live in one [`Trace`]:
+//!
+//! * **Counters** ([`Counter`]) — monotone `u64` tallies of *search work*
+//!   (DP states visited, splice fast-forwards, B&B nodes, sweep fan-out,
+//!   …). Every counting site tallies a quantity that is a pure function
+//!   of the planning inputs: additive over a deterministic set of
+//!   sub-tasks whose partition across threads never changes the sum, and
+//!   invariant across cache states (e.g. the profiler counts
+//!   `hits + misses`, never the split). Counter snapshots are therefore
+//!   **bit-identical across thread counts, cache states, and
+//!   serve-vs-CLI** — the determinism invariant the rest of the repo
+//!   already holds for plans, extended to its observability.
+//! * **Events** — wall-clock phase spans ([`Trace::span`]) recorded for
+//!   the Chrome trace-event export ([`Trace::chrome_trace_json`],
+//!   `--trace-out`, loadable in Perfetto / `chrome://tracing`).
+//!   Wall-clock time is confined here: timestamps and durations never
+//!   feed counters, notes, or `cfp explain` output.
+//!
+//! A disabled trace (the default — [`Trace::disabled`]) holds no
+//! allocation and every operation is a single `Option` branch, so
+//! tracing off is a no-op on plan bytes and adds ≤ 1% search overhead
+//! (pinned by the `trace_overhead/{off,on}` rows in `BENCH_search.json`).
+//! Cloning a [`Trace`] shares the underlying sink (`Arc`), which is how
+//! one trace threads through `coordinator` → `cost`/`spdag`/`interop` →
+//! worker threads.
+
+pub mod diag;
+pub mod explain;
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Instant;
+
+use crate::util::Json;
+
+/// Deterministic search-work counters, one per instrumented site class.
+/// The discriminant is the slot index; [`Counter::ALL`] fixes the
+/// snapshot order (and therefore the `cfp explain` / `stats` byte
+/// layout) permanently.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Counter {
+    /// chain positions entering ComposeSearch (`SegmentSet::instances`)
+    SegmentInstances,
+    /// fingerprint-deduplicated unique segments
+    SegmentUnique,
+    /// unique segments resolved by the profiler (cache hits + misses —
+    /// the cache-state-invariant sum, never the split)
+    ProfilerSegments,
+    /// programs a real testbed would compile (Fig. 12 model; identical
+    /// on warm and cold runs by the warm-replay invariant)
+    ProfilerPrograms,
+    /// full `O(C²)` scalar DP steps (per position × predecessor config)
+    ScalarSteps,
+    /// positions fast-forwarded by the steady-state splice (`O(C)` each)
+    ScalarSpliced,
+    /// splice checkpoint mismatches that rolled back to a verified state
+    ScalarRollbacks,
+    /// capped-Pareto lane candidate states generated
+    ParetoStates,
+    /// capped-Pareto lane states surviving pruning
+    ParetoKept,
+    /// memory-frontier lane candidate points generated
+    MemStates,
+    /// memory-frontier lane points surviving pruning
+    MemKept,
+    /// branch-and-bound nodes expanded (chain + sp-dag exact lanes)
+    ExactNodes,
+    /// B&B children cut by the admissible suffix time bound
+    ExactBoundPruned,
+    /// B&B children cut by the exact integer memory prune
+    ExactMemPruned,
+    /// exact-lane searches that exhausted their node budget (DP fallback)
+    ExactExhausted,
+    /// shared-prefix sweep passes (one per `(context, origin)` job)
+    SweepOrigins,
+    /// spans answered by sweep passes (each replaces one full span DP)
+    SweepSpans,
+    /// SP-DAG branch groups priced (`SpCtx` junction construction)
+    SpdagGroups,
+    /// dense fork/merge junction matrix entries expanded
+    SpdagJunctionEntries,
+    /// candidate stage counts tried by the inter-op planner
+    InteropStageCounts,
+    /// sweep jobs fanned over the thread pool by `SpanTables`
+    InteropSweepJobs,
+    /// stage-split DP states kept after Pareto pruning
+    InteropSplitStates,
+    /// stage candidates rejected for busting the 1F1B memory cap
+    InteropMemRejects,
+    /// stage plans recovered via checkpointed (remat) variants
+    InteropMemRecovers,
+}
+
+/// Number of counter slots ([`Counter::ALL`] length).
+pub const NUM_COUNTERS: usize = 24;
+
+impl Counter {
+    /// Every counter in snapshot order. Append-only: slot order is part
+    /// of the `explain`/`stats` output contract.
+    pub const ALL: [Counter; NUM_COUNTERS] = [
+        Counter::SegmentInstances,
+        Counter::SegmentUnique,
+        Counter::ProfilerSegments,
+        Counter::ProfilerPrograms,
+        Counter::ScalarSteps,
+        Counter::ScalarSpliced,
+        Counter::ScalarRollbacks,
+        Counter::ParetoStates,
+        Counter::ParetoKept,
+        Counter::MemStates,
+        Counter::MemKept,
+        Counter::ExactNodes,
+        Counter::ExactBoundPruned,
+        Counter::ExactMemPruned,
+        Counter::ExactExhausted,
+        Counter::SweepOrigins,
+        Counter::SweepSpans,
+        Counter::SpdagGroups,
+        Counter::SpdagJunctionEntries,
+        Counter::InteropStageCounts,
+        Counter::InteropSweepJobs,
+        Counter::InteropSplitStates,
+        Counter::InteropMemRejects,
+        Counter::InteropMemRecovers,
+    ];
+
+    /// Stable wire/display name (snake_case).
+    pub fn name(self) -> &'static str {
+        match self {
+            Counter::SegmentInstances => "segment_instances",
+            Counter::SegmentUnique => "segment_unique",
+            Counter::ProfilerSegments => "profiler_segments",
+            Counter::ProfilerPrograms => "profiler_programs",
+            Counter::ScalarSteps => "scalar_steps",
+            Counter::ScalarSpliced => "scalar_spliced",
+            Counter::ScalarRollbacks => "scalar_rollbacks",
+            Counter::ParetoStates => "pareto_states",
+            Counter::ParetoKept => "pareto_kept",
+            Counter::MemStates => "mem_states",
+            Counter::MemKept => "mem_kept",
+            Counter::ExactNodes => "exact_nodes",
+            Counter::ExactBoundPruned => "exact_bound_pruned",
+            Counter::ExactMemPruned => "exact_mem_pruned",
+            Counter::ExactExhausted => "exact_exhausted",
+            Counter::SweepOrigins => "sweep_origins",
+            Counter::SweepSpans => "sweep_spans",
+            Counter::SpdagGroups => "spdag_groups",
+            Counter::SpdagJunctionEntries => "spdag_junction_entries",
+            Counter::InteropStageCounts => "interop_stage_counts",
+            Counter::InteropSweepJobs => "interop_sweep_jobs",
+            Counter::InteropSplitStates => "interop_split_states",
+            Counter::InteropMemRejects => "interop_mem_rejects",
+            Counter::InteropMemRecovers => "interop_mem_recovers",
+        }
+    }
+}
+
+/// One completed wall-clock span (Chrome trace-event `ph: "X"`).
+#[derive(Clone, Debug)]
+pub struct Event {
+    pub name: &'static str,
+    /// microseconds since the trace epoch
+    pub ts_us: f64,
+    pub dur_us: f64,
+    /// free-form span arguments (shown in the Perfetto detail pane);
+    /// the non-deterministic side of the trace lives here
+    pub args: Vec<(&'static str, String)>,
+}
+
+/// Event-buffer cap: long-running daemons must not grow without bound.
+/// Counters keep accumulating past the cap; only span *events* drop.
+const MAX_EVENTS: usize = 4096;
+
+#[derive(Debug)]
+struct Inner {
+    counters: [AtomicU64; NUM_COUNTERS],
+    events: Mutex<Vec<Event>>,
+    notes: Mutex<BTreeMap<&'static str, String>>,
+    epoch: Instant,
+}
+
+/// The trace handle threaded through the planning pipeline. `Clone`
+/// shares the sink; [`Trace::default`] / [`Trace::disabled`] is the
+/// allocation-free no-op every hot path pays one branch for.
+#[derive(Clone, Debug, Default)]
+pub struct Trace {
+    inner: Option<Arc<Inner>>,
+}
+
+impl Trace {
+    /// The no-op trace: every operation is one `Option` branch.
+    pub fn disabled() -> Trace {
+        Trace { inner: None }
+    }
+
+    /// A live trace with its epoch at construction time.
+    pub fn enabled() -> Trace {
+        Trace {
+            inner: Some(Arc::new(Inner {
+                counters: std::array::from_fn(|_| AtomicU64::new(0)),
+                events: Mutex::new(Vec::new()),
+                notes: Mutex::new(BTreeMap::new()),
+                epoch: Instant::now(),
+            })),
+        }
+    }
+
+    #[inline]
+    pub fn is_enabled(&self) -> bool {
+        self.inner.is_some()
+    }
+
+    /// Add `n` to a counter. Counting sites accumulate locally and flush
+    /// once per call where loops are hot; the disabled cost is the
+    /// branch alone.
+    #[inline]
+    pub fn count(&self, c: Counter, n: u64) {
+        if let Some(inner) = &self.inner {
+            inner.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Current value of one counter (0 on a disabled trace).
+    pub fn counter(&self, c: Counter) -> u64 {
+        match &self.inner {
+            Some(inner) => inner.counters[c as usize].load(Ordering::Relaxed),
+            None => 0,
+        }
+    }
+
+    /// Every counter in [`Counter::ALL`] order, zeros included — the
+    /// deterministic artifact `prop_trace_determinism` pins across
+    /// thread counts.
+    pub fn snapshot(&self) -> Vec<(&'static str, u64)> {
+        Counter::ALL.iter().map(|&c| (c.name(), self.counter(c))).collect()
+    }
+
+    /// Record (or overwrite) a deterministic provenance note — e.g.
+    /// which lane/engine decided the plan. Notes feed `cfp explain`,
+    /// so writers must only record values that are pure functions of
+    /// the planning inputs.
+    pub fn note(&self, key: &'static str, value: impl Into<String>) {
+        if let Some(inner) = &self.inner {
+            inner.notes.lock().unwrap().insert(key, value.into());
+        }
+    }
+
+    pub fn note_get(&self, key: &str) -> Option<String> {
+        self.inner.as_ref().and_then(|i| i.notes.lock().unwrap().get(key).cloned())
+    }
+
+    /// Open a wall-clock span; the guard records one [`Event`] on drop.
+    /// On a disabled trace the guard is inert.
+    pub fn span(&self, name: &'static str) -> SpanGuard {
+        SpanGuard {
+            inner: self.inner.clone(),
+            name,
+            start: Instant::now(),
+            args: Vec::new(),
+        }
+    }
+
+    /// Fold this trace's counters into another (additive — the serve
+    /// aggregator's shape).
+    pub fn merge_counters_into(&self, other: &Trace) {
+        for &c in Counter::ALL.iter() {
+            let v = self.counter(c);
+            if v > 0 {
+                other.count(c, v);
+            }
+        }
+    }
+
+    /// Chrome trace-event JSON (the `{"traceEvents": […]}` object
+    /// format Perfetto and `chrome://tracing` load): one `ph: "X"`
+    /// complete event per recorded span, plus a final zero-duration
+    /// `cfp.counters` event carrying the deterministic counter snapshot
+    /// as its args.
+    pub fn chrome_trace_json(&self) -> Json {
+        let mut events: Vec<Json> = Vec::new();
+        let mut last_end = 0.0f64;
+        if let Some(inner) = &self.inner {
+            for e in inner.events.lock().unwrap().iter() {
+                let args: BTreeMap<String, Json> = e
+                    .args
+                    .iter()
+                    .map(|(k, v)| (k.to_string(), Json::str(v.clone())))
+                    .collect();
+                events.push(Json::obj(vec![
+                    ("name", Json::str(e.name)),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(e.ts_us)),
+                    ("dur", Json::num(e.dur_us)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(0.0)),
+                    ("args", Json::Obj(args)),
+                ]));
+                last_end = last_end.max(e.ts_us + e.dur_us);
+            }
+            let notes: BTreeMap<String, Json> = inner
+                .notes
+                .lock()
+                .unwrap()
+                .iter()
+                .map(|(k, v)| (k.to_string(), Json::str(v.clone())))
+                .collect();
+            if !notes.is_empty() {
+                events.push(Json::obj(vec![
+                    ("name", Json::str("cfp.notes")),
+                    ("ph", Json::str("X")),
+                    ("ts", Json::num(last_end)),
+                    ("dur", Json::num(0.0)),
+                    ("pid", Json::num(1.0)),
+                    ("tid", Json::num(0.0)),
+                    ("args", Json::Obj(notes)),
+                ]));
+            }
+        }
+        let counters: BTreeMap<String, Json> = self
+            .snapshot()
+            .into_iter()
+            .map(|(k, v)| (k.to_string(), Json::num(v as f64)))
+            .collect();
+        events.push(Json::obj(vec![
+            ("name", Json::str("cfp.counters")),
+            ("ph", Json::str("X")),
+            ("ts", Json::num(last_end)),
+            ("dur", Json::num(0.0)),
+            ("pid", Json::num(1.0)),
+            ("tid", Json::num(0.0)),
+            ("args", Json::Obj(counters)),
+        ]));
+        Json::obj(vec![
+            ("displayTimeUnit", Json::str("ms")),
+            ("traceEvents", Json::Arr(events)),
+        ])
+    }
+
+    /// Write the Chrome trace-event JSON to `path`.
+    pub fn write_chrome(&self, path: &std::path::Path) -> std::io::Result<()> {
+        std::fs::write(path, self.chrome_trace_json().to_string())
+    }
+}
+
+/// RAII span handle from [`Trace::span`]; records its event on drop.
+pub struct SpanGuard {
+    inner: Option<Arc<Inner>>,
+    name: &'static str,
+    start: Instant,
+    args: Vec<(&'static str, String)>,
+}
+
+impl SpanGuard {
+    /// Attach a key/value argument shown in the trace viewer's detail
+    /// pane. Args live on the event (wall-clock) side of the trace and
+    /// may carry non-deterministic values (cache hits, wall times).
+    pub fn arg(&mut self, key: &'static str, value: impl Into<String>) {
+        if self.inner.is_some() {
+            self.args.push((key, value.into()));
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(inner) = self.inner.take() else { return };
+        let dur_us = self.start.elapsed().as_secs_f64() * 1e6;
+        let ts_us = self.start.duration_since(inner.epoch).as_secs_f64() * 1e6;
+        let mut events = inner.events.lock().unwrap();
+        if events.len() < MAX_EVENTS {
+            events.push(Event {
+                name: self.name,
+                ts_us,
+                dur_us,
+                args: std::mem::take(&mut self.args),
+            });
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_trace_is_inert() {
+        let t = Trace::disabled();
+        assert!(!t.is_enabled());
+        t.count(Counter::ScalarSteps, 7);
+        t.note("lane", "scalar");
+        {
+            let mut s = t.span("phase");
+            s.arg("k", "v");
+        }
+        assert_eq!(t.counter(Counter::ScalarSteps), 0);
+        assert_eq!(t.note_get("lane"), None);
+        assert!(t.snapshot().iter().all(|&(_, v)| v == 0));
+        // even a disabled trace emits well-formed (counters-only) JSON
+        let j = t.chrome_trace_json();
+        assert_eq!(j.get("traceEvents").unwrap().as_arr().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn counters_accumulate_and_share_across_clones() {
+        let t = Trace::enabled();
+        let u = t.clone();
+        t.count(Counter::ExactNodes, 3);
+        u.count(Counter::ExactNodes, 4);
+        assert_eq!(t.counter(Counter::ExactNodes), 7);
+        let snap = t.snapshot();
+        assert_eq!(snap.len(), NUM_COUNTERS);
+        let (name, v) = snap[Counter::ExactNodes as usize];
+        assert_eq!((name, v), ("exact_nodes", 7));
+    }
+
+    #[test]
+    fn snapshot_order_is_the_all_order() {
+        let t = Trace::enabled();
+        let names: Vec<&str> = t.snapshot().iter().map(|&(n, _)| n).collect();
+        let want: Vec<&str> = Counter::ALL.iter().map(|&c| c.name()).collect();
+        assert_eq!(names, want);
+        assert_eq!(names[0], "segment_instances");
+        assert_eq!(names[NUM_COUNTERS - 1], "interop_mem_recovers");
+    }
+
+    #[test]
+    fn spans_notes_and_counters_land_in_chrome_json() {
+        let t = Trace::enabled();
+        t.count(Counter::SweepOrigins, 2);
+        t.note("engine", "dp");
+        {
+            let mut s = t.span("compose_search");
+            s.arg("spanned", "yes");
+        }
+        let j = t.chrome_trace_json();
+        let evs = j.get("traceEvents").unwrap().as_arr().unwrap();
+        // span + notes + counters
+        assert_eq!(evs.len(), 3);
+        assert_eq!(evs[0].get("name").unwrap().as_str(), Some("compose_search"));
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert!(evs[0].get("dur").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(
+            evs[1].get("args").unwrap().get("engine").unwrap().as_str(),
+            Some("dp")
+        );
+        assert_eq!(
+            evs[2].get("args").unwrap().get("sweep_origins").unwrap().as_u64(),
+            Some(2)
+        );
+        // the emitted text round-trips through the parser
+        let text = j.to_string();
+        assert_eq!(Json::parse(&text).unwrap(), j);
+    }
+
+    #[test]
+    fn merge_counters_is_additive() {
+        let a = Trace::enabled();
+        let b = Trace::enabled();
+        a.count(Counter::ParetoStates, 5);
+        b.count(Counter::ParetoStates, 2);
+        a.merge_counters_into(&b);
+        assert_eq!(b.counter(Counter::ParetoStates), 7);
+        assert_eq!(a.counter(Counter::ParetoStates), 5, "source unchanged");
+    }
+
+    #[test]
+    fn event_buffer_is_capped_but_counters_keep_counting() {
+        let t = Trace::enabled();
+        for _ in 0..(MAX_EVENTS + 10) {
+            t.count(Counter::ScalarSteps, 1);
+            let _ = t.span("tick");
+        }
+        let evs = t.chrome_trace_json();
+        let n = evs.get("traceEvents").unwrap().as_arr().unwrap().len();
+        assert!(n <= MAX_EVENTS + 1, "events must stay bounded, got {n}");
+        assert_eq!(t.counter(Counter::ScalarSteps), (MAX_EVENTS + 10) as u64);
+    }
+}

@@ -27,6 +27,10 @@ pub struct ProfileOptions {
     pub compute: ComputeModel,
     /// worker threads for parallel profiling (§4.3 parallel compilation)
     pub threads: usize,
+    /// observability sink (disabled by default; deliberately excluded
+    /// from [`ProfileOptions::cache_signature`] — tracing never shapes
+    /// profiled numbers, so it must never invalidate cached profiles)
+    pub trace: crate::obs::Trace,
 }
 
 impl ProfileOptions {
@@ -38,6 +42,7 @@ impl ProfileOptions {
             opt_factor: 2.0,
             compute: ComputeModel::for_platform(&platform),
             threads: 1,
+            trace: crate::obs::Trace::disabled(),
         }
     }
 
@@ -48,6 +53,11 @@ impl ProfileOptions {
 
     pub fn with_threads(mut self, n: usize) -> Self {
         self.threads = n;
+        self
+    }
+
+    pub fn with_trace(mut self, trace: crate::obs::Trace) -> Self {
+        self.trace = trace;
         self
     }
 
@@ -209,6 +219,7 @@ pub fn profile_model_handle(
     mut cache: CacheHandle<'_>,
 ) -> ProfileDb {
     let wall = Instant::now();
+    let mut phase_span = opts.trace.span("profiler.profile_model");
     let op_to_inst = ss.op_to_instance(g);
     let mut stats = ProfilerStats::default();
 
@@ -441,6 +452,21 @@ pub fn profile_model_handle(
     let threads = opts.threads.max(1) as f64;
     stats.est_optimized_s = (stats.est_compile_s / threads).max(stats.est_optimized_s);
     stats.wall_s = wall.elapsed().as_secs_f64();
+    if opts.trace.is_enabled() {
+        // counters take cache-state-INVARIANT sums only: hits + misses
+        // and the Fig.-12 program count are identical on warm and cold
+        // runs (the warm-replay invariant); the hit/miss split is
+        // wall-clock-side information and rides on the span's args
+        let trace = &opts.trace;
+        trace.count(
+            crate::obs::Counter::ProfilerSegments,
+            (stats.cache_hits + stats.cache_misses) as u64,
+        );
+        trace.count(crate::obs::Counter::ProfilerPrograms, stats.programs_compiled as u64);
+        phase_span.arg("cache_hits", stats.cache_hits.to_string());
+        phase_span.arg("cache_misses", stats.cache_misses.to_string());
+    }
+    drop(phase_span);
     db.stats = stats;
     db
 }

@@ -119,6 +119,11 @@ pub struct ServeConfig {
     /// admits everything (admin requests are never gated — operators
     /// must always be able to observe and drain)
     pub auth_token: Option<String>,
+    /// Chrome trace-event output (`--trace-out`): the service's shared
+    /// obs trace is rewritten to this file after every executed search,
+    /// so the file always holds the run-to-date spans and counters.
+    /// Served plan payloads are byte-identical with or without it.
+    pub trace_out: Option<std::path::PathBuf>,
 }
 
 impl Default for ServeConfig {
@@ -133,6 +138,7 @@ impl Default for ServeConfig {
             quota: None,
             max_pending: 1024,
             auth_token: None,
+            trace_out: None,
         }
     }
 }
@@ -263,6 +269,11 @@ struct ServiceInner {
     /// requests dispatched to the pool but not yet answered — the
     /// bounded pending queue's gauge (see `server.rs`)
     pending: AtomicUsize,
+    /// always-on shared obs trace: every search counts into it, and
+    /// `stats` responses surface the counter snapshot under `obs`.
+    /// Counters are deterministic sums, so the snapshot after a fixed
+    /// request set is identical whichever worker ran which search.
+    trace: crate::obs::Trace,
     /// test instrumentation — see [`PlanService::set_search_hook`]
     hook: Mutex<Option<Arc<dyn Fn() + Send + Sync>>>,
 }
@@ -319,6 +330,7 @@ impl PlanService {
                 telemetry: Telemetry::start(),
                 quiesced: Condvar::new(),
                 pending: AtomicUsize::new(0),
+                trace: crate::obs::Trace::enabled(),
                 hook: Mutex::new(None),
             }),
         }
@@ -531,7 +543,9 @@ impl PlanService {
                 // logged, never fatal)
                 if payload.is_ok() {
                     if let Err(e) = self.inner.profiles.save() {
-                        eprintln!("cfp serve: could not persist profile cache: {e}");
+                        crate::obs::diag::diag(&format!(
+                            "cfp serve: could not persist profile cache: {e}"
+                        ));
                     }
                     self.save_plan_cache();
                 }
@@ -541,6 +555,23 @@ impl PlanService {
     }
 
     fn run_planner(&self, kind: RequestKind, opts: &CfpOptions) -> Json {
+        // the shared obs trace rides along on a clone of the options —
+        // it is not part of the plan-cache key and never shapes the
+        // payload (pinned by `prop_trace_determinism`)
+        let opts = opts.clone().with_trace(self.inner.trace.clone());
+        let payload = self.run_planner_traced(kind, &opts);
+        if let Some(path) = &self.inner.cfg.trace_out {
+            if let Err(e) = self.inner.trace.write_chrome(path) {
+                crate::obs::diag::diag(&format!(
+                    "cfp serve: could not write trace to {}: {e}",
+                    path.display()
+                ));
+            }
+        }
+        payload
+    }
+
+    fn run_planner_traced(&self, kind: RequestKind, opts: &CfpOptions) -> Json {
         match kind {
             RequestKind::Plan => {
                 let r = run_cfp_shared(opts, &self.inner.profiles);
@@ -602,7 +633,20 @@ impl PlanService {
             let st = self.lock_state();
             (st.stats.clone(), st.lifecycle)
         };
-        annotate(stats.to_json(), lifecycle, &self.inner.telemetry.snapshot())
+        let mut j = annotate(stats.to_json(), lifecycle, &self.inner.telemetry.snapshot());
+        // fold the obs counter snapshot into the ledger (stats responses
+        // only — plan payload envelopes stay byte-identical)
+        if let Json::Obj(m) = &mut j {
+            let counters: Vec<(&str, Json)> = self
+                .inner
+                .trace
+                .snapshot()
+                .into_iter()
+                .map(|(k, v)| (k, Json::num(v as f64)))
+                .collect();
+            m.insert("obs".to_string(), Json::obj(counters));
+        }
+        j
     }
 
     /// Current lifecycle state.
@@ -661,7 +705,7 @@ impl PlanService {
     /// depends on it.
     fn flush(&self) {
         if let Err(e) = self.inner.profiles.save() {
-            eprintln!("cfp serve: could not persist profile cache: {e}");
+            crate::obs::diag::diag(&format!("cfp serve: could not persist profile cache: {e}"));
         }
         self.save_plan_cache();
     }
@@ -673,7 +717,7 @@ impl PlanService {
             (st.plans.clone(), st.clock)
         };
         if let Err(e) = plancache::save(path, &plans, clock, self.inner.cfg.plan_cache_entries) {
-            eprintln!("cfp serve: could not persist plan cache: {e}");
+            crate::obs::diag::diag(&format!("cfp serve: could not persist plan cache: {e}"));
         }
     }
 
@@ -992,6 +1036,10 @@ mod tests {
         // counter fields stay top-level (back-compat with PR 4 clients)
         assert_eq!(r.get("received").and_then(Json::as_u64), Some(1));
         assert_eq!(r.get("admitted").and_then(Json::as_u64), Some(1));
+        // the obs counter snapshot rides in stats responses only
+        let obs = r.get("obs").expect("obs counters in stats");
+        assert!(obs.get("segment_instances").and_then(Json::as_u64).unwrap() > 0);
+        assert!(obs.get("pareto_states").and_then(Json::as_u64).unwrap() > 0);
     }
 
     #[test]

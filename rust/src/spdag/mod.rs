@@ -269,6 +269,7 @@ impl SpCtx {
         let mut fork_mats = Vec::with_capacity(topo.groups.len());
         let mut merge_mats = Vec::with_capacity(topo.groups.len());
         let mut group_at = vec![None; topo.n];
+        let mut junction_entries = 0u64;
         for (gi, g) in topo.groups.iter().enumerate() {
             group_at[g.first()] = Some(gi);
             let (fu, su) = (ctx.uid_at(g.fork()), ctx.uid_at(g.end()));
@@ -292,9 +293,15 @@ impl SpCtx {
                     }
                 }
                 mm.push(m);
+                junction_entries += (fcc * cc_in + cc_out * scc) as u64;
             }
             fork_mats.push(fm);
             merge_mats.push(mm);
+        }
+        let trace = ctx.trace();
+        if trace.is_enabled() {
+            trace.count(crate::obs::Counter::SpdagGroups, topo.groups.len() as u64);
+            trace.count(crate::obs::Counter::SpdagJunctionEntries, junction_entries);
         }
         SpCtx { topo: topo.clone(), fork_mats, merge_mats, group_at }
     }
@@ -362,22 +369,33 @@ pub fn sp_search_span_engine(
         return cost::search_span_engine(ctx, cap, lo, hi, engine);
     }
     let budget = match engine {
-        SearchEngine::Dp => return sp_search_span(ctx, sp, cap, lo, hi),
+        SearchEngine::Dp => {
+            ctx.trace().note("engine_path", "dp");
+            return sp_search_span(ctx, sp, cap, lo, hi);
+        }
         SearchEngine::Exact => cost::exact::EXACT_NODE_BUDGET,
         SearchEngine::Auto => {
             if cost::space_bits(ctx, lo, hi) > cost::exact::AUTO_EXACT_BITS {
+                ctx.trace().note("engine_path", "auto-dp");
                 return sp_search_span(ctx, sp, cap, lo, hi);
             }
             cost::exact::AUTO_NODE_BUDGET
         }
     };
     match exact::sp_search_span_exact_budget(ctx, sp, cap, lo, hi, budget) {
-        Ok(p) => p,
+        Ok(p) => {
+            ctx.trace().note(
+                "engine_path",
+                if engine == SearchEngine::Auto { "auto-exact" } else { "exact" },
+            );
+            p
+        }
         Err(cost::exact::Exhausted) => {
-            eprintln!(
+            ctx.trace().note("engine_path", "exact-exhausted-dp-fallback");
+            crate::obs::diag::diag(&format!(
                 "cfp: sp-dag exact lane exhausted its node budget on [{lo}, {hi}); \
                  falling back to the DP"
-            );
+            ));
             sp_search_span(ctx, sp, cap, lo, hi)
         }
     }

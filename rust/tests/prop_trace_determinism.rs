@@ -1,0 +1,123 @@
+//! Property suite for the PR 9 observability layer: the determinism
+//! contract of [`cfp::obs::Trace`] counters and the `cfp explain`
+//! rendering, plus the zero-perturbation guarantee of tracing itself.
+//!
+//! Randomized over small built-in presets (chain and SP-DAG), engines
+//! (DP and auto), and thread counts:
+//!
+//! * **counter determinism** — the full counter snapshot after a
+//!   traced `run_cfp` is identical across `threads = 1` and
+//!   `threads = 4`. Counters are additive sums flushed from
+//!   deterministic work partitions, so the schedule must not show.
+//! * **explain determinism** — `render_explain` output is
+//!   byte-identical across thread counts (it quotes only plan numbers,
+//!   profile tables, counters and notes — never wall-clock).
+//! * **no perturbation** — running with an enabled trace yields the
+//!   bit-identical plan (choice, time bits, memory) of an untraced run.
+//! * **trace file well-formedness** — `write_chrome` emits JSON that
+//!   the crate's own pure-std parser accepts, with a non-empty
+//!   `traceEvents` array and the Chrome trace-event envelope.
+//!
+//! Failures replay with `CFP_PROP_SEED=<printed value>`.
+
+use cfp::cluster::Platform;
+use cfp::coordinator::{run_cfp, CfpOptions};
+use cfp::cost::SearchEngine;
+use cfp::models::ModelCfg;
+use cfp::obs::{explain, Trace};
+use cfp::util::proptest::Prop as Harness;
+use cfp::util::Json;
+
+/// One randomized planner setup: preset × layers × engine.
+fn random_opts(rng: &mut cfp::util::Pcg64) -> CfpOptions {
+    let (preset, layers) = match rng.below(3) {
+        0 => ("gpt-tiny", 2),
+        1 => ("gpt-tiny", 3),
+        _ => ("moe-ep-tiny", 2),
+    };
+    let engine = if rng.below(2) == 0 { SearchEngine::Dp } else { SearchEngine::Auto };
+    CfpOptions::new(ModelCfg::preset(preset).with_layers(layers), Platform::a100_pcie(4))
+        .with_engine(engine)
+}
+
+#[test]
+fn prop_counters_and_explain_identical_across_threads() {
+    Harness::fuzz(20, 0x0B5E5).check("obs determinism across thread counts", |rng| {
+        let base = random_opts(rng);
+        let mut runs = Vec::new();
+        for threads in [1usize, 4] {
+            let mut opts = base.clone().with_trace(Trace::enabled());
+            opts.threads = threads;
+            let r = run_cfp(&opts);
+            let snapshot = opts.trace.snapshot();
+            let text = explain::render_explain(&r, &opts);
+            runs.push((r, snapshot, text));
+        }
+        let (r1, snap1, text1) = &runs[0];
+        let (r4, snap4, text4) = &runs[1];
+        assert_eq!(snap1, snap4, "counter snapshot differs across thread counts");
+        assert_eq!(text1, text4, "explain text differs across thread counts");
+        assert!(
+            r1.plan.time_us.to_bits() == r4.plan.time_us.to_bits()
+                && r1.plan.choice == r4.plan.choice,
+            "plan differs across thread counts"
+        );
+        // the traced counters actually observed the search
+        assert!(
+            snap1.iter().any(|&(k, v)| k == "segment_instances" && v > 0),
+            "segment_instances never counted: {snap1:?}"
+        );
+    });
+}
+
+#[test]
+fn prop_tracing_never_changes_the_plan() {
+    Harness::fuzz(20, 0x70FF).check("trace on/off plan identity", |rng| {
+        let base = random_opts(rng);
+        let traced = base.clone().with_trace(Trace::enabled());
+        let off = run_cfp(&base);
+        let on = run_cfp(&traced);
+        assert!(
+            off.plan.time_us.to_bits() == on.plan.time_us.to_bits()
+                && off.plan.choice == on.plan.choice
+                && off.plan.mem_bytes == on.plan.mem_bytes,
+            "tracing perturbed the plan: {} vs {}",
+            off.plan.time_us,
+            on.plan.time_us
+        );
+        assert!(
+            base.trace.snapshot().iter().all(|&(_, v)| v == 0),
+            "disabled trace accumulated counters"
+        );
+    });
+}
+
+#[test]
+fn chrome_trace_file_is_well_formed_json() {
+    let opts = CfpOptions::new(ModelCfg::preset("gpt-tiny").with_layers(2), Platform::a100_pcie(4))
+        .with_trace(Trace::enabled());
+    let _ = run_cfp(&opts);
+    let path = std::env::temp_dir().join(format!("cfp_trace_{}.json", std::process::id()));
+    opts.trace.write_chrome(&path).expect("trace file written");
+    let text = std::fs::read_to_string(&path).expect("trace file readable");
+    let _ = std::fs::remove_file(&path);
+    let j = Json::parse(&text).expect("trace file parses as JSON");
+    assert_eq!(
+        j.get("displayTimeUnit").and_then(Json::as_str),
+        Some("ms"),
+        "chrome trace envelope"
+    );
+    let events = j.get("traceEvents").and_then(Json::as_arr).expect("traceEvents array");
+    assert!(!events.is_empty(), "trace has no events");
+    for e in events {
+        assert!(e.get("name").and_then(Json::as_str).is_some(), "event without name: {e:?}");
+        assert_eq!(e.get("ph").and_then(Json::as_str), Some("X"), "non-complete event");
+    }
+    // the counter event carries every counter the run incremented
+    let counters = events
+        .iter()
+        .find(|e| e.get("name").and_then(Json::as_str) == Some("cfp.counters"))
+        .expect("cfp.counters event");
+    let args = counters.get("args").expect("counter args");
+    assert!(args.get("segment_instances").and_then(Json::as_u64).unwrap_or(0) > 0);
+}
