@@ -435,6 +435,10 @@ pub fn run_cfp_shared(opts: &CfpOptions, shared: &SharedProfileCache) -> CfpResu
 
 /// [`run_cfp`] over any cache ownership shape ([`CacheHandle`]).
 pub fn run_cfp_with_handle(opts: &CfpOptions, mut cache: CacheHandle<'_>) -> CfpResult {
+    // search-panic fault: a poisoned request dies inside the pipeline;
+    // the serve leader's catch_unwind must turn this into a structured
+    // internal_error without taking the daemon (or its ledger) with it
+    crate::util::failpoint::trip_panic("search.panic");
     let mut timings = PhaseTimings::default();
     let trace = &opts.trace;
 

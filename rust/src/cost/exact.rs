@@ -277,7 +277,12 @@ impl Bb<'_> {
         let prev_cfg = if i == 0 { 0 } else { self.cur[i - 1] };
         for c in 0..cc {
             self.nodes += 1;
-            if self.nodes > self.budget {
+            if self.nodes > self.budget
+                // budget-exhaustion fault at a chosen node; gated so the
+                // unbounded wrappers' unreachable!() stays unreachable
+                || (self.budget != u64::MAX
+                    && crate::util::failpoint::should_trip("exact.budget_exhaust"))
+            {
                 self.exhausted = true;
                 return;
             }
@@ -391,7 +396,10 @@ pub fn search_span_mem_exact_budget(
             pareto_filter(&mut pts);
             sets.push(pts);
         }
-        if generated > max_points {
+        if generated > max_points
+            || (max_points != u64::MAX
+                && crate::util::failpoint::should_trip("exact.budget_exhaust"))
+        {
             ctx.trace.count(Counter::ExactNodes, generated);
             ctx.trace.count(Counter::ExactExhausted, 1);
             return Err(Exhausted);
@@ -435,7 +443,10 @@ pub fn search_span_mem_exact_budget(
                 }
             }
             generated += pts.len() as u64;
-            if generated > max_points {
+            if generated > max_points
+                || (max_points != u64::MAX
+                    && crate::util::failpoint::should_trip("exact.budget_exhaust"))
+            {
                 ctx.trace.count(Counter::ExactNodes, generated);
                 ctx.trace.count(Counter::ExactExhausted, 1);
                 return Err(Exhausted);

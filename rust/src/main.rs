@@ -33,6 +33,15 @@ fn main() {
     if args.has_flag("quiet") {
         cfp::obs::diag::set_quiet(true);
     }
+    // deterministic fault injection (chaos testing): arm named failpoint
+    // sites before any subsystem can consult them; a bad spec is a hard
+    // usage error, same convention as unknown models/platforms
+    if let Some(spec) = args.get("faults") {
+        if let Err(e) = cfp::util::failpoint::arm(spec) {
+            eprintln!("cfp: invalid --faults spec: {e}");
+            std::process::exit(2);
+        }
+    }
     let cmd = args.positional.first().map(|s| s.as_str()).unwrap_or("help");
     let code = match cmd {
         "search" => cmd_search(&args),
@@ -57,7 +66,9 @@ fn main() {
                  [--listen ADDR] [--workers N] [--plan-cache N] \
                  [--plan-cache-file FILE] [--quota RATE] [--quota-burst N] \
                  [--max-pending N] [--auth-token SECRET] \
-                 [--connect ADDR] [--requests N] [--clients N] [--distinct N] [--quiet]"
+                 [--read-timeout SECS] [--write-timeout SECS] \
+                 [--connect ADDR] [--requests N] [--clients N] [--distinct N] \
+                 [--faults SITE:SPEC,...] [--quiet]"
             );
             1
         }
@@ -316,6 +327,26 @@ fn serve_config(args: &Args, workers: usize) -> ServeConfig {
         max_pending: args.get_usize("max-pending", 1024),
         auth_token: args.get("auth-token").map(|s| s.to_string()),
         trace_out: args.get_path("trace-out"),
+        read_timeout: socket_timeout(args, "read-timeout", None),
+        write_timeout: socket_timeout(
+            args,
+            "write-timeout",
+            Some(std::time::Duration::from_secs(30)),
+        ),
+    }
+}
+
+/// `--read-timeout`/`--write-timeout` in seconds; explicit 0 disables
+/// the deadline, absent keeps the service default.
+fn socket_timeout(
+    args: &Args,
+    flag: &str,
+    default: Option<std::time::Duration>,
+) -> Option<std::time::Duration> {
+    match args.get_f64_opt(flag) {
+        None => default,
+        Some(s) if s <= 0.0 => None,
+        Some(s) => Some(std::time::Duration::from_secs_f64(s)),
     }
 }
 
@@ -468,7 +499,7 @@ fn summarize_lane(
     clients: usize,
     rows: &mut Vec<JsonRow>,
 ) {
-    lat_us.sort_by(|a, b| a.partial_cmp(b).expect("latencies are finite"));
+    lat_us.sort_by(|a, b| a.total_cmp(b));
     let n = lat_us.len();
     let thr = n as f64 / wall.max(1e-9);
     println!("[{mode}] {n} requests, {clients} clients: {wall:.2}s wall, {thr:.1} req/s");
@@ -508,12 +539,36 @@ fn bench_serve_local(svc: &PlanService, lines: &[String], clients: usize) -> Vec
                 for line in my {
                     let t = std::time::Instant::now();
                     svc.handle_line(line);
-                    latencies.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e6);
+                    latencies
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push(t.elapsed().as_secs_f64() * 1e6);
                 }
             });
         }
     });
-    latencies.into_inner().unwrap()
+    latencies.into_inner().unwrap_or_else(|e| e.into_inner())
+}
+
+/// Bounded-backoff connect for `--connect`: a freshly spawned daemon may
+/// not be accepting yet, so retry for ~5s (25ms doubling to 250ms)
+/// before surfacing the last error. Fixes the daemon-then-bench
+/// scripting race without masking a genuinely absent server for long.
+fn connect_with_retry(addr: &str) -> std::io::Result<std::net::TcpStream> {
+    let mut delay = std::time::Duration::from_millis(25);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+    loop {
+        match std::net::TcpStream::connect(addr) {
+            Ok(s) => return Ok(s),
+            Err(e) => {
+                if std::time::Instant::now() + delay >= deadline {
+                    return Err(e);
+                }
+                std::thread::sleep(delay);
+                delay = (delay * 2).min(std::time::Duration::from_millis(250));
+            }
+        }
+    }
 }
 
 fn bench_serve_tcp(
@@ -529,24 +584,32 @@ fn bench_serve_tcp(
             let my: Vec<&String> = lines.iter().skip(c).step_by(clients).collect();
             let latencies = &latencies;
             joins.push(s.spawn(move || -> std::io::Result<()> {
-                let mut stream = std::net::TcpStream::connect(addr)?;
+                let mut stream = connect_with_retry(addr)?;
                 let mut reader = BufReader::new(stream.try_clone()?);
                 for line in my {
                     let t = std::time::Instant::now();
                     writeln!(stream, "{line}")?;
                     let mut resp = String::new();
                     reader.read_line(&mut resp)?;
-                    latencies.lock().unwrap().push(t.elapsed().as_secs_f64() * 1e6);
+                    latencies
+                        .lock()
+                        .unwrap_or_else(|e| e.into_inner())
+                        .push(t.elapsed().as_secs_f64() * 1e6);
                 }
                 Ok(())
             }));
         }
         for j in joins {
-            j.join().expect("client thread")?;
+            match j.join() {
+                Ok(outcome) => outcome?,
+                Err(_) => {
+                    return Err(std::io::Error::other("bench client thread panicked"));
+                }
+            }
         }
         Ok(())
     })?;
-    let mut stream = std::net::TcpStream::connect(addr)?;
+    let mut stream = connect_with_retry(addr)?;
     let mut reader = BufReader::new(stream.try_clone()?);
     writeln!(stream, "{{\"type\": \"stats\"}}")?;
     let mut resp = String::new();
@@ -555,7 +618,7 @@ fn bench_serve_tcp(
         .ok()
         .and_then(|j| j.get("result").cloned())
         .unwrap_or(Json::Null);
-    Ok((latencies.into_inner().unwrap(), stats))
+    Ok((latencies.into_inner().unwrap_or_else(|e| e.into_inner()), stats))
 }
 
 fn cmd_train(args: &Args) -> i32 {

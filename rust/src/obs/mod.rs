@@ -159,6 +159,38 @@ impl Counter {
     }
 }
 
+/// Per-site failpoint audit rows, `(site, evals, trips)` in site-name
+/// order — the obs-layer export of [`crate::util::failpoint`] trip
+/// counters that makes chaos runs auditable (`stats` responses grow a
+/// `faults` object, `--trace-out` a `cfp.faults` event). Empty whenever
+/// no fault schedule is armed, so every disarmed output stays
+/// byte-identical to a build without the fault layer.
+pub fn fault_counters() -> Vec<(String, u64, u64)> {
+    crate::util::failpoint::snapshot()
+}
+
+/// The [`fault_counters`] rows as a JSON object (`site` →
+/// `{evals, trips}`), or `None` when disarmed.
+pub fn fault_counters_json() -> Option<Json> {
+    let rows = fault_counters();
+    if rows.is_empty() {
+        return None;
+    }
+    let m: BTreeMap<String, Json> = rows
+        .into_iter()
+        .map(|(site, evals, trips)| {
+            (
+                site,
+                Json::obj(vec![
+                    ("evals", Json::num(evals as f64)),
+                    ("trips", Json::num(trips as f64)),
+                ]),
+            )
+        })
+        .collect();
+    Some(Json::Obj(m))
+}
+
 /// One completed wall-clock span (Chrome trace-event `ph: "X"`).
 #[derive(Clone, Debug)]
 pub struct Event {
@@ -334,6 +366,20 @@ impl Trace {
             ("tid", Json::num(0.0)),
             ("args", Json::Obj(counters)),
         ]));
+        // armed fault schedules append their audit rows; disarmed runs
+        // emit nothing here, keeping trace bytes identical to a build
+        // without the fault layer
+        if let Some(faults) = fault_counters_json() {
+            events.push(Json::obj(vec![
+                ("name", Json::str("cfp.faults")),
+                ("ph", Json::str("X")),
+                ("ts", Json::num(last_end)),
+                ("dur", Json::num(0.0)),
+                ("pid", Json::num(1.0)),
+                ("tid", Json::num(0.0)),
+                ("args", faults),
+            ]));
+        }
         Json::obj(vec![
             ("displayTimeUnit", Json::str("ms")),
             ("traceEvents", Json::Arr(events)),

@@ -112,6 +112,9 @@ impl ProfileCache {
         let path = path.into();
         let mut cache = std::fs::read_to_string(&path)
             .ok()
+            // load-time corruption fault: treat the file's bytes as
+            // garbage, exercising the degrade-to-empty lane on demand
+            .filter(|_| !crate::util::failpoint::should_trip("profile_cache.load_corrupt"))
             .and_then(|text| Json::parse(&text).ok())
             .and_then(|json| ProfileCache::from_json(&json))
             .unwrap_or_default();
@@ -310,7 +313,16 @@ impl ProfileCache {
             }
         }
         let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-        std::fs::write(&tmp, self.to_json().to_string())?;
+        let text = self.to_json().to_string();
+        // torn-write fault: persist only a prefix of the document (the
+        // rename still lands, so the corruption is silent); the next
+        // open() must discard the file wholesale and re-profile
+        let bytes: &[u8] = if crate::util::failpoint::should_trip("profile_cache.torn_save") {
+            &text.as_bytes()[..text.len() / 2]
+        } else {
+            text.as_bytes()
+        };
+        std::fs::write(&tmp, bytes)?;
         std::fs::rename(&tmp, &path)?;
         self.dirty = false;
         Ok(())
@@ -452,6 +464,12 @@ pub(crate) fn save_lock_path(target: &Path) -> PathBuf {
 /// directory is unwritable — locking is best-effort, the caller falls
 /// back to the lockless merge.
 pub(crate) fn acquire_save_lock(target: &Path, stale: Duration, wait: Duration) -> Option<SaveLock> {
+    // lock-acquire timeout fault: behave exactly as if `wait` elapsed
+    // with the lock held — the caller proceeds with the lockless
+    // best-effort merge, which can cost re-profiling, never a wrong plan
+    if crate::util::failpoint::should_trip("profile_cache.lock_timeout") {
+        return None;
+    }
     let lock = save_lock_path(target);
     if let Some(dir) = target.parent() {
         if !dir.as_os_str().is_empty() {
@@ -519,7 +537,11 @@ fn claim_stale_lock(lock: &Path, stale: Duration, token: &str) -> bool {
         .and_then(|md| md.modified())
         .ok()
         .and_then(|m| m.elapsed().ok())
-        .map_or(false, |age| age > stale);
+        .map_or(false, |age| age > stale)
+        // takeover-race fault: pretend the re-check found a fresh lock
+        // (we grabbed a live holder's lock mid-save) — forces the
+        // hard_link restore path below
+        && !crate::util::failpoint::should_trip("profile_cache.stale_race");
     if still_stale {
         let _ = std::fs::remove_file(&aside);
         return true;

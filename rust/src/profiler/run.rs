@@ -250,7 +250,10 @@ pub fn profile_model_handle(
             // defensive: an entry whose config space disagrees with this
             // build (foreign or hand-edited file) is a miss, never a
             // wrong answer
-            .filter(|p| p.configs == configs);
+            .filter(|p| p.configs == configs)
+            // miss-storm fault: force the cold path even on warm caches —
+            // costs re-profiling, which must still yield identical plans
+            .filter(|_| !crate::util::failpoint::should_trip("profile_cache.miss_storm"));
         if hit.is_some() {
             stats.cache_hits += 1;
         } else {

@@ -124,6 +124,14 @@ pub struct ServeConfig {
     /// so the file always holds the run-to-date spans and counters.
     /// Served plan payloads are byte-identical with or without it.
     pub trace_out: Option<std::path::PathBuf>,
+    /// TCP read deadline per connection (`--read-timeout`, seconds;
+    /// 0 = none). `None` by default: idle interactive clients are legal
+    /// and must not be disconnected.
+    pub read_timeout: Option<std::time::Duration>,
+    /// TCP write deadline per connection (`--write-timeout`, seconds;
+    /// 0 = none). Defaults to 30s so a dead or wedged peer that stops
+    /// reading can never hang a worker forever mid-response.
+    pub write_timeout: Option<std::time::Duration>,
 }
 
 impl Default for ServeConfig {
@@ -139,6 +147,8 @@ impl Default for ServeConfig {
             max_pending: 1024,
             auth_token: None,
             trace_out: None,
+            read_timeout: None,
+            write_timeout: Some(std::time::Duration::from_secs(30)),
         }
     }
 }
@@ -497,7 +507,17 @@ impl PlanService {
                 while slot.is_none() {
                     slot = flight.done.wait(slot).unwrap_or_else(|e| e.into_inner());
                 }
-                (slot.clone().expect("flight published"), "coalesced")
+                // the wait loop only exits once the leader published, so
+                // an empty slot is unreachable — but it must degrade to a
+                // structured error, not a worker panic (flight_drop fault
+                // forces this path)
+                let published = slot
+                    .clone()
+                    .filter(|_| !crate::util::failpoint::should_trip("serve.flight_drop"));
+                let payload = published.unwrap_or_else(|| {
+                    Err("internal_error: flight closed without publishing".to_string())
+                });
+                (payload, "coalesced")
             }
             Role::Lead(flight) => {
                 let hook = self.inner.hook.lock().unwrap_or_else(|e| e.into_inner()).clone();
@@ -609,6 +629,17 @@ impl PlanService {
         self.inner.telemetry.record_stage("search_us", search_us.max(0.0));
     }
 
+    /// Structured response for a request whose worker died before
+    /// `handle_line` could run (pool-level `catch_unwind`). The request
+    /// never reached admission, so only `requests` and `errors` move —
+    /// the admission ledger (`received == admitted + rejected +
+    /// coalesced`) is untouched and still reconciles exactly.
+    fn internal_error_line(&self, line: &str, panic: &str) -> String {
+        self.lock_state().stats.requests += 1;
+        let id = Json::parse(line).ok().and_then(|j| j.get("id").cloned());
+        self.error_response(id.as_ref(), None, &format!("internal_error: {panic}"))
+    }
+
     fn error_response(&self, id: Option<&Json>, tag: Option<&'static str>, msg: &str) -> String {
         self.lock_state().stats.errors += 1;
         let mut pairs = vec![("ok", Json::Bool(false)), ("error", Json::str(msg))];
@@ -645,6 +676,11 @@ impl PlanService {
                 .map(|(k, v)| (k, Json::num(v as f64)))
                 .collect();
             m.insert("obs".to_string(), Json::obj(counters));
+            // per-site fault-injection audit: present only when armed,
+            // so disarmed stats responses stay byte-identical
+            if let Some(faults) = crate::obs::fault_counters_json() {
+                m.insert("faults".to_string(), faults);
+            }
         }
         j
     }

@@ -53,6 +53,11 @@ fn parse(text: &str) -> Option<(PlanMap, u64)> {
     if doc.get("version")?.as_i64()? != PLAN_CACHE_VERSION {
         return None;
     }
+    // version-skew fault: a well-formed file written by an incompatible
+    // future version — discard wholesale exactly like a real bump
+    if crate::util::failpoint::should_trip("plan_cache.version_skew") {
+        return None;
+    }
     let mut clock = doc.get("clock")?.as_u64()?;
     let mut plans = PlanMap::new();
     for entry in doc.get("plans")?.as_arr()? {
@@ -112,7 +117,15 @@ pub fn save(path: &Path, plans: &PlanMap, clock: u64, max_entries: usize) -> std
         ("plans", Json::Arr(entries)),
     ]);
     let tmp = path.with_extension(format!("tmp.{}", std::process::id()));
-    std::fs::write(&tmp, doc.to_string())?;
+    let text = doc.to_string();
+    // torn-write fault: a record truncated mid-write survives the
+    // rename; load() must refuse the whole file, never the readable half
+    let bytes: &[u8] = if crate::util::failpoint::should_trip("plan_cache.torn_save") {
+        &text.as_bytes()[..text.len() / 2]
+    } else {
+        text.as_bytes()
+    };
+    std::fs::write(&tmp, bytes)?;
     std::fs::rename(&tmp, path)
 }
 

@@ -16,6 +16,7 @@
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::Ordering;
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::Instant;
@@ -44,6 +45,14 @@ impl PlanService {
             if line.trim().is_empty() {
                 continue;
             }
+            // frame-corruption fault: mangle the inbound line (as if the
+            // peer sent garbage after N good frames) — it must come back
+            // as a structured parse error, never kill the stream
+            let line = if crate::util::failpoint::should_trip("serve.frame_corrupt") {
+                format!("\u{1}corrupt{line}")
+            } else {
+                line
+            };
             let max = self.inner.cfg.max_pending;
             if max > 0 && self.inner.pending.load(Ordering::Acquire) >= max {
                 let t0 = Instant::now();
@@ -66,10 +75,28 @@ impl PlanService {
             let writer = Arc::clone(&writer);
             let outstanding = Arc::clone(&outstanding);
             self.inner.pool.execute(move || {
-                let resp = svc.handle_line(&line);
+                // pool-level isolation: a panicking request (injected via
+                // serve.worker_panic, or a real bug below handle_line's
+                // own guards) answers with a structured internal_error
+                // instead of taking the worker thread — and the loop's
+                // outstanding/pending bookkeeping below — down with it
+                let resp = catch_unwind(AssertUnwindSafe(|| {
+                    crate::util::failpoint::trip_panic("serve.worker_panic");
+                    svc.handle_line(&line)
+                }))
+                .unwrap_or_else(|p| svc.internal_error_line(&line, &super::panic_msg(&p)));
                 {
                     let mut w = writer.lock().unwrap_or_else(|e| e.into_inner());
-                    let _ = writeln!(w, "{resp}");
+                    // torn-write fault: emit only a prefix of the response
+                    // before the newline, as a dying peer would observe
+                    let bytes = resp.as_bytes();
+                    let cut = if crate::util::failpoint::should_trip("serve.write_torn") {
+                        bytes.len() / 2
+                    } else {
+                        bytes.len()
+                    };
+                    let _ = w.write_all(&bytes[..cut]);
+                    let _ = w.write_all(b"\n");
                     let _ = w.flush();
                 }
                 svc.inner.pending.fetch_sub(1, Ordering::AcqRel);
@@ -96,6 +123,11 @@ impl PlanService {
         std::thread::Builder::new().name("cfp-serve-accept".into()).spawn(move || {
             for stream in listener.incoming() {
                 let Ok(stream) = stream else { continue };
+                // accept-error fault: drop the connection as if accept(2)
+                // had failed; the acceptor loop must keep serving
+                if crate::util::failpoint::should_trip("serve.accept_fail") {
+                    continue;
+                }
                 let svc = svc.clone();
                 let _ = std::thread::Builder::new()
                     .name("cfp-serve-conn".into())
@@ -107,6 +139,11 @@ impl PlanService {
 }
 
 fn serve_connection(svc: &PlanService, stream: TcpStream) {
+    // socket deadlines: a wedged or dead peer errors out of its read or
+    // write instead of parking a connection thread (and, transitively, a
+    // worker blocked on the shared writer lock) forever
+    let _ = stream.set_read_timeout(svc.inner.cfg.read_timeout);
+    let _ = stream.set_write_timeout(svc.inner.cfg.write_timeout);
     let Ok(read_half) = stream.try_clone() else { return };
     svc.serve_stream(BufReader::new(read_half), shared_writer(stream));
 }

@@ -1,0 +1,424 @@
+//! Deterministic fault-injection registry (PR 10).
+//!
+//! Every failure domain the system claims to survive — torn cache
+//! writes, lock races, dead TCP clients, worker panics, exact-lane
+//! budget exhaustion — carries a *named failpoint*: a site in the code
+//! that asks [`should_trip`] whether to simulate its fault right now.
+//! Sites are always compiled in, and **free when disarmed**: with no
+//! schedule armed, a site costs one relaxed atomic load and can never
+//! change an output byte (pinned by the disarmed lanes of
+//! `integration_chaos` and the pre-existing byte-identity suites).
+//!
+//! # Spec grammar
+//!
+//! Schedules arm from the `CFP_FAULTS` environment variable or the
+//! `--faults` CLI flag (both use the same grammar, flag wins):
+//!
+//! ```text
+//! CFP_FAULTS="site:mode[,site:mode...]"
+//!
+//! mode := off          never trips (site stays registered + audited)
+//!       | always       trips every evaluation
+//!       | once         trips the 1st evaluation only (= first=1)
+//!       | first=N      trips evaluations 1..=N, then passes
+//!       | after=N      passes evaluations 1..=N, then trips forever
+//!       | every=N      trips evaluations N, 2N, 3N, ...
+//!       | p=F@SEED     trips with probability F per evaluation, drawn
+//!                      from a per-site Pcg64 seeded by SEED mixed with
+//!                      the site name (deterministic replay)
+//! ```
+//!
+//! # Determinism argument
+//!
+//! A site's trip decision is a pure function of its *evaluation index*
+//! (per-site, 1-based) and, for `p=`, of a per-site seeded [`Pcg64`]
+//! stream — never of wall-clock time or thread identity. For a fixed
+//! workload the number of evaluations each site sees is fixed, so the
+//! trip *count* per site is replayable from the spec alone; which
+//! concurrent request absorbs trip #k may vary with scheduling, which
+//! is exactly the nondeterminism the chaos invariants are quantified
+//! over ("every response is the fault-free bytes or a structured
+//! error, for *any* interleaving"). This mirrors how `CFP_PROP_SEED`
+//! replays property-suite failures.
+//!
+//! # Auditability
+//!
+//! Per-site evaluation and trip counters are exported through the obs
+//! layer ([`crate::obs::fault_counters`] → `stats` responses and the
+//! Chrome trace), so a chaos run can prove every armed site actually
+//! fired — a failpoint that never trips is a dead failpoint, and the
+//! acceptance suite treats it as a bug.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, AtomicU8, Ordering};
+use std::sync::{Mutex, OnceLock};
+
+use super::prng::Pcg64;
+
+/// When a schedule trips a site, one of these is simulated at the site.
+/// (The behaviour lives at the site; the registry only answers yes/no.)
+#[derive(Clone, Debug, PartialEq)]
+enum Mode {
+    Off,
+    Always,
+    First(u64),
+    After(u64),
+    Every(u64),
+    Prob { p: f64, seed: u64 },
+}
+
+/// One armed site's schedule plus its audit counters.
+struct Site {
+    mode: Mode,
+    evals: AtomicU64,
+    trips: AtomicU64,
+    /// per-site deterministic stream for `p=` mode (lazily seeded from
+    /// the spec seed mixed with the site name)
+    rng: Mutex<Pcg64>,
+}
+
+/// Registry state: the armed schedule, keyed by site name.
+struct Registry {
+    sites: Mutex<BTreeMap<String, Site>>,
+}
+
+/// Fast disarmed-path gate, tri-state so the very first evaluation in a
+/// process consults `CFP_FAULTS` exactly once. After that, every
+/// [`armed`] check is one relaxed load — the whole cost of the
+/// framework when off.
+const STATE_UNINIT: u8 = 0;
+const STATE_DISARMED: u8 = 1;
+const STATE_ARMED: u8 = 2;
+static STATE: AtomicU8 = AtomicU8::new(STATE_UNINIT);
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+
+fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(|| Registry { sites: Mutex::new(BTreeMap::new()) })
+}
+
+/// Cold path of [`armed`]: consume `CFP_FAULTS` once. An unset or
+/// unparseable variable leaves the process disarmed.
+#[cold]
+fn init_from_env() -> bool {
+    let spec = std::env::var("CFP_FAULTS").unwrap_or_default();
+    if !spec.trim().is_empty() {
+        if let Err(e) = install(&spec) {
+            crate::obs::diag::diag(&format!("cfp: ignoring CFP_FAULTS: {e}"));
+        }
+    }
+    // `install` settled the state on success; an unset or rejected spec
+    // leaves it UNINIT — settle to DISARMED (a concurrent explicit
+    // `arm()` that already settled it wins, which is the right answer)
+    let _ = STATE.compare_exchange(
+        STATE_UNINIT,
+        STATE_DISARMED,
+        Ordering::AcqRel,
+        Ordering::Acquire,
+    );
+    STATE.load(Ordering::Acquire) == STATE_ARMED
+}
+
+/// FNV-1a over the site name — mixes the spec seed so distinct sites
+/// sharing one `p=F@SEED` spec draw independent streams.
+fn site_hash(name: &str) -> u64 {
+    let mut h: u64 = 0xcbf29ce484222325;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+fn parse_mode(spec: &str) -> Result<Mode, String> {
+    let spec = spec.trim();
+    if let Some((key, val)) = spec.split_once('=') {
+        let key = key.trim();
+        let val = val.trim();
+        return match key {
+            "first" | "after" | "every" => {
+                let n: u64 =
+                    val.parse().map_err(|_| format!("{key}= wants an integer, got {val:?}"))?;
+                match key {
+                    "first" => Ok(Mode::First(n)),
+                    "after" => Ok(Mode::After(n)),
+                    _ if n == 0 => Err("every=0 is meaningless".to_string()),
+                    _ => Ok(Mode::Every(n)),
+                }
+            }
+            "p" => {
+                let (prob, seed) = match val.split_once('@') {
+                    Some((p, s)) => (p, s),
+                    None => (val, "0"),
+                };
+                let p: f64 =
+                    prob.parse().map_err(|_| format!("p= wants a float, got {prob:?}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    return Err(format!("p={p} out of [0, 1]"));
+                }
+                let seed: u64 =
+                    seed.parse().map_err(|_| format!("p=F@SEED wants an integer seed, got {seed:?}"))?;
+                Ok(Mode::Prob { p, seed })
+            }
+            _ => Err(format!("unknown fault mode {spec:?}")),
+        };
+    }
+    match spec {
+        "off" => Ok(Mode::Off),
+        "always" => Ok(Mode::Always),
+        "once" => Ok(Mode::First(1)),
+        _ => Err(format!("unknown fault mode {spec:?}")),
+    }
+}
+
+/// Arm a fault schedule, replacing any schedule armed before. The spec
+/// grammar is the module-level `site:mode[,...]` one; an empty spec
+/// disarms everything. Errors reject the whole spec (no partial arm).
+pub fn arm(spec: &str) -> Result<(), String> {
+    install(spec)
+}
+
+fn install(spec: &str) -> Result<(), String> {
+    let mut parsed: BTreeMap<String, Site> = BTreeMap::new();
+    for entry in spec.split(',') {
+        let entry = entry.trim();
+        if entry.is_empty() {
+            continue;
+        }
+        let (name, mode) = entry
+            .split_once(':')
+            .ok_or_else(|| format!("fault entry {entry:?} is not site:mode"))?;
+        let name = name.trim();
+        if name.is_empty() {
+            return Err(format!("fault entry {entry:?} has an empty site name"));
+        }
+        let mode = parse_mode(mode)?;
+        let seed = match mode {
+            Mode::Prob { seed, .. } => seed ^ site_hash(name),
+            _ => 0,
+        };
+        parsed.insert(
+            name.to_string(),
+            Site {
+                mode,
+                evals: AtomicU64::new(0),
+                trips: AtomicU64::new(0),
+                rng: Mutex::new(Pcg64::new(seed)),
+            },
+        );
+    }
+    let reg = registry();
+    let mut sites = reg.sites.lock().unwrap_or_else(|e| e.into_inner());
+    let state = if parsed.is_empty() { STATE_DISARMED } else { STATE_ARMED };
+    *sites = parsed;
+    STATE.store(state, Ordering::Release);
+    Ok(())
+}
+
+/// Disarm every site (the chaos suite's RAII cleanup).
+pub fn disarm_all() {
+    let reg = registry();
+    let mut sites = reg.sites.lock().unwrap_or_else(|e| e.into_inner());
+    sites.clear();
+    STATE.store(STATE_DISARMED, Ordering::Release);
+}
+
+/// Whether any fault schedule is armed. One relaxed load (after the
+/// one-time `CFP_FAULTS` consultation on a process's first call).
+#[inline]
+pub fn armed() -> bool {
+    match STATE.load(Ordering::Relaxed) {
+        STATE_DISARMED => false,
+        STATE_ARMED => true,
+        _ => init_from_env(),
+    }
+}
+
+/// Evaluate the failpoint `name`: `true` means the site should simulate
+/// its fault now. Disarmed (the production default) this is a single
+/// relaxed atomic load; armed, the per-site evaluation counter advances
+/// and the schedule decides.
+pub fn should_trip(name: &str) -> bool {
+    if !armed() {
+        return false;
+    }
+    let reg = registry();
+    let sites = reg.sites.lock().unwrap_or_else(|e| e.into_inner());
+    let Some(site) = sites.get(name) else { return false };
+    let n = site.evals.fetch_add(1, Ordering::Relaxed) + 1; // 1-based
+    let trip = match site.mode {
+        Mode::Off => false,
+        Mode::Always => true,
+        Mode::First(k) => n <= k,
+        Mode::After(k) => n > k,
+        Mode::Every(k) => n % k == 0,
+        Mode::Prob { p, .. } => {
+            site.rng.lock().unwrap_or_else(|e| e.into_inner()).f64() < p
+        }
+    };
+    if trip {
+        site.trips.fetch_add(1, Ordering::Relaxed);
+    }
+    trip
+}
+
+/// Evaluate `name` and panic if it trips — the injected-worker-panic
+/// site shape (the panic is then caught by the domain's `catch_unwind`
+/// isolation, which is exactly what the chaos suite is proving).
+pub fn trip_panic(name: &str) {
+    if should_trip(name) {
+        panic!("injected fault: {name}");
+    }
+}
+
+/// Times `name` has tripped under the current schedule.
+pub fn trip_count(name: &str) -> u64 {
+    let reg = registry();
+    let sites = reg.sites.lock().unwrap_or_else(|e| e.into_inner());
+    sites.get(name).map_or(0, |s| s.trips.load(Ordering::Relaxed))
+}
+
+/// Times `name` has been evaluated under the current schedule.
+pub fn eval_count(name: &str) -> u64 {
+    let reg = registry();
+    let sites = reg.sites.lock().unwrap_or_else(|e| e.into_inner());
+    sites.get(name).map_or(0, |s| s.evals.load(Ordering::Relaxed))
+}
+
+/// `(site, evals, trips)` for every armed site, in name order — the
+/// audit surface [`crate::obs::fault_counters`] re-exports. Empty when
+/// disarmed, so the obs outputs it feeds stay byte-identical to a
+/// build without the framework.
+pub fn snapshot() -> Vec<(String, u64, u64)> {
+    if !armed() {
+        return Vec::new();
+    }
+    let reg = registry();
+    let sites = reg.sites.lock().unwrap_or_else(|e| e.into_inner());
+    sites
+        .iter()
+        .map(|(name, s)| {
+            (name.clone(), s.evals.load(Ordering::Relaxed), s.trips.load(Ordering::Relaxed))
+        })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // The registry is process-global, so every test uses site names
+    // unique to itself (suffix `.ut`) and arms/disarms around a shared
+    // guard; production site names never appear here.
+    static GUARD: Mutex<()> = Mutex::new(());
+
+    struct Armed;
+    impl Drop for Armed {
+        fn drop(&mut self) {
+            disarm_all();
+        }
+    }
+
+    fn armed_guard(spec: &str) -> (std::sync::MutexGuard<'static, ()>, Armed) {
+        let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        arm(spec).expect("test spec parses");
+        (g, Armed)
+    }
+
+    #[test]
+    fn disarmed_sites_never_trip_and_report_nothing() {
+        let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        disarm_all();
+        assert!(!armed());
+        assert!(!should_trip("nonexistent.ut"));
+        assert!(snapshot().is_empty());
+        assert_eq!(trip_count("nonexistent.ut"), 0);
+        drop(g);
+    }
+
+    #[test]
+    fn first_after_every_schedules_are_exact() {
+        let (_g, _a) = armed_guard("a.ut:first=2,b.ut:after=3,c.ut:every=3");
+        let fire = |name: &str| (1..=9).map(|_| should_trip(name)).collect::<Vec<_>>();
+        assert_eq!(fire("a.ut"), [true, true, false, false, false, false, false, false, false]);
+        assert_eq!(fire("b.ut"), [false, false, false, true, true, true, true, true, true]);
+        assert_eq!(fire("c.ut"), [false, false, true, false, false, true, false, false, true]);
+        assert_eq!(trip_count("a.ut"), 2);
+        assert_eq!(trip_count("b.ut"), 6);
+        assert_eq!(trip_count("c.ut"), 3);
+        assert_eq!(eval_count("a.ut"), 9);
+    }
+
+    #[test]
+    fn once_always_off_modes() {
+        let (_g, _a) = armed_guard("x.ut:once, y.ut:always , z.ut:off");
+        assert!(should_trip("x.ut") && !should_trip("x.ut"));
+        assert!(should_trip("y.ut") && should_trip("y.ut"));
+        assert!(!should_trip("z.ut") && !should_trip("z.ut"));
+        // off sites still audit their evaluations (dead-site detection)
+        assert_eq!(eval_count("z.ut"), 2);
+        assert_eq!(trip_count("z.ut"), 0);
+        // unarmed sites pass even while the registry is armed
+        assert!(!should_trip("unlisted.ut"));
+    }
+
+    #[test]
+    fn probabilistic_schedule_replays_bit_identically() {
+        let run = || -> Vec<bool> {
+            let (_g, _a) = armed_guard("p.ut:p=0.5@42,q.ut:p=0.5@42");
+            (0..64).map(|_| should_trip("p.ut")).collect()
+        };
+        let first = run();
+        assert_eq!(first, run(), "same seed, same site, same trips");
+        assert!(first.iter().any(|&b| b) && !first.iter().all(|&b| b), "p=0.5 mixes");
+        // distinct sites sharing a seed draw independent streams
+        let (_g, _a) = armed_guard("p.ut:p=0.5@42,q.ut:p=0.5@42");
+        let p: Vec<bool> = (0..64).map(|_| should_trip("p.ut")).collect();
+        let q: Vec<bool> = (0..64).map(|_| should_trip("q.ut")).collect();
+        assert_ne!(p, q, "site name is mixed into the stream seed");
+    }
+
+    #[test]
+    fn snapshot_lists_sites_in_name_order_with_counts() {
+        let (_g, _a) = armed_guard("b.ut:always,a.ut:off");
+        assert!(should_trip("b.ut"));
+        assert!(!should_trip("a.ut"));
+        let snap = snapshot();
+        assert_eq!(
+            snap,
+            vec![("a.ut".to_string(), 1, 0), ("b.ut".to_string(), 1, 1)],
+            "name-ordered (evals, trips) audit rows"
+        );
+    }
+
+    #[test]
+    fn trip_panic_panics_only_when_tripped() {
+        let (_g, _a) = armed_guard("boom.ut:after=1");
+        trip_panic("boom.ut"); // eval 1: passes
+        let caught = std::panic::catch_unwind(|| trip_panic("boom.ut"));
+        let msg = *caught.expect_err("eval 2 trips").downcast::<String>().unwrap();
+        assert!(msg.contains("injected fault: boom.ut"), "{msg}");
+    }
+
+    #[test]
+    fn bad_specs_are_rejected_wholesale() {
+        let g = GUARD.lock().unwrap_or_else(|e| e.into_inner());
+        disarm_all();
+        for bad in [
+            "siteonly",
+            "s.ut:nope",
+            "s.ut:first=x",
+            "s.ut:every=0",
+            "s.ut:p=1.5",
+            "s.ut:p=0.5@x",
+            ":always",
+        ] {
+            assert!(arm(bad).is_err(), "{bad:?} must be rejected");
+        }
+        assert!(!armed(), "a rejected spec arms nothing");
+        // empty specs disarm
+        arm("").unwrap();
+        assert!(!armed());
+        drop(g);
+    }
+}

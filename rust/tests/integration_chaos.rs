@@ -1,0 +1,556 @@
+//! Chaos suite (PR 10): seeded deterministic fault schedules drive full
+//! serve + plan + pipeline runs through `util::failpoint`, asserting the
+//! three invariants that define "survived":
+//!
+//! 1. the process never dies — every injected panic, torn write, dead
+//!    socket, and exhausted budget is absorbed by its domain's recovery
+//!    code;
+//! 2. every response is either byte-identical to the fault-free plan or
+//!    a structured error — never a wrong plan;
+//! 3. the admission ledger and telemetry counters reconcile exactly, and
+//!    every armed fault site reports a nonzero evaluation count (a
+//!    failpoint nothing reaches is a dead failpoint, treated as a bug).
+//!
+//! The registry is process-global, so every test serializes on one mutex
+//! and disarms via RAII. Fault-free references are always computed
+//! *inside* the lock, before arming. The flagship schedule's seed comes
+//! from `CFP_CHAOS_SEED` (default 1) and the full spec is printed so any
+//! CI failure replays locally with `CFP_FAULTS="<spec>"` or `--faults`.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use cfp::coordinator::{run_cfp, CfpOptions, PlannerKind};
+use cfp::service::{plan_payload, shared_writer, PlanService, ServeConfig};
+use cfp::util::cli::Args;
+use cfp::util::{failpoint, Json};
+
+static CHAOS: Mutex<()> = Mutex::new(());
+
+/// Hold the suite lock with everything disarmed (references are computed
+/// under this before arming a schedule).
+fn chaos_lock() -> MutexGuard<'static, ()> {
+    let g = CHAOS.lock().unwrap_or_else(|e| e.into_inner());
+    failpoint::disarm_all();
+    g
+}
+
+/// RAII disarm: a failing assertion must not leak an armed schedule into
+/// the next test.
+struct Disarm;
+impl Drop for Disarm {
+    fn drop(&mut self) {
+        failpoint::disarm_all();
+    }
+}
+
+fn arm(spec: &str) -> Disarm {
+    println!("chaos schedule (replay via CFP_FAULTS or --faults): {spec}");
+    failpoint::arm(spec).expect("chaos spec parses");
+    Disarm
+}
+
+fn plan_line(id: &str, layers: usize) -> String {
+    format!(
+        "{{\"id\": \"{id}\", \"type\": \"plan\", \"model\": \"gpt-tiny\", \
+         \"layers\": {layers}, \"platform\": \"a100-pcie\"}}"
+    )
+}
+
+fn engine_line(id: &str, layers: usize, engine: &str) -> String {
+    format!(
+        "{{\"id\": \"{id}\", \"type\": \"plan\", \"model\": \"gpt-tiny\", \
+         \"layers\": {layers}, \"platform\": \"a100-pcie\", \"engine\": \"{engine}\"}}"
+    )
+}
+
+/// Fault-free one-shot reference: the same fields through the same
+/// options builder, planned without the service. MUST be called with the
+/// registry disarmed.
+fn reference_payload(layers: usize, engine: Option<&str>) -> String {
+    assert!(!failpoint::armed(), "references must be fault-free");
+    let mut args = Args::default();
+    args.options.insert("model".into(), "gpt-tiny".into());
+    args.options.insert("layers".into(), layers.to_string());
+    args.options.insert("platform".into(), "a100-pcie".into());
+    if let Some(e) = engine {
+        args.options.insert("engine".into(), e.to_string());
+    }
+    let built = CfpOptions::from_args(&args, PlannerKind::SingleLevel).unwrap();
+    assert!(built.warnings.is_empty());
+    plan_payload(&run_cfp(&built.opts)).to_string()
+}
+
+fn result_of(resp: &str) -> String {
+    let j = Json::parse(resp).expect("response is valid JSON");
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(true), "not ok: {resp}");
+    j.get("result").expect("ok response has a result").to_string()
+}
+
+fn scratch(tag: &str) -> std::path::PathBuf {
+    let dir = std::env::temp_dir().join(format!("cfp_chaos_{tag}_{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    std::fs::create_dir_all(&dir).unwrap();
+    dir
+}
+
+/// `Write` into a shared buffer (the serve_stream response sink).
+struct Sink(Arc<Mutex<Vec<u8>>>);
+impl Write for Sink {
+    fn write(&mut self, buf: &[u8]) -> std::io::Result<usize> {
+        self.0.lock().unwrap_or_else(|e| e.into_inner()).extend_from_slice(buf);
+        Ok(buf.len())
+    }
+    fn flush(&mut self) -> std::io::Result<()> {
+        Ok(())
+    }
+}
+
+fn assert_ledger(svc: &PlanService) {
+    let s = svc.stats();
+    assert_eq!(
+        s.received,
+        s.admitted + s.rejected + s.coalesced,
+        "admission ledger reconciles"
+    );
+    assert_eq!(
+        s.rejected,
+        s.rejected_overload + s.rejected_draining + s.rejected_unauthorized,
+        "rejection decomposition reconciles"
+    );
+    assert_eq!(s.admitted, s.plan_hits + s.plan_misses, "admitted decomposition reconciles");
+}
+
+/// The flagship: one seeded schedule arming every cache-I/O and serving
+/// fault at once, driven through the full `serve_stream` stack (reader
+/// thread, worker pool, shared writer) from four concurrent streams over
+/// persistent caches seeded beforehand.
+#[test]
+fn seeded_schedule_full_stack_survives_serves_right_or_errs_and_reconciles() {
+    let _g = chaos_lock();
+    let seed: u64 = std::env::var("CFP_CHAOS_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(1);
+
+    const LAYERS: std::ops::RangeInclusive<usize> = 2..=6;
+    const THREADS: usize = 4;
+    const ROUNDS: usize = 3;
+
+    // fault-free references, computed disarmed
+    let refs: BTreeMap<usize, String> =
+        LAYERS.map(|l| (l, reference_payload(l, None))).collect();
+
+    // seed both persistent caches so load-time sites have bytes to corrupt
+    let dir = scratch("flagship");
+    let cfg = || ServeConfig {
+        workers: THREADS,
+        cache_path: Some(dir.join("profiles.json")),
+        plan_cache_file: Some(dir.join("plans.json")),
+        ..ServeConfig::default()
+    };
+    {
+        let svc = PlanService::new(cfg());
+        for l in LAYERS {
+            let resp = svc.handle_line(&plan_line(&format!("seed{l}"), l));
+            assert_eq!(result_of(&resp), refs[&l], "seeding run is fault-free");
+        }
+        svc.drain();
+    }
+
+    let spec = format!(
+        "profile_cache.load_corrupt:once,\
+         profile_cache.torn_save:first=1,\
+         profile_cache.lock_timeout:every=2,\
+         profile_cache.miss_storm:p=0.3@{seed},\
+         plan_cache.torn_save:first=1,\
+         plan_cache.version_skew:once,\
+         search.panic:every=5,\
+         serve.worker_panic:every=7,\
+         serve.frame_corrupt:every=9"
+    );
+    let _d = arm(&spec);
+
+    let svc = PlanService::new(cfg());
+    let buffers: Vec<Arc<Mutex<Vec<u8>>>> =
+        (0..THREADS).map(|_| Arc::new(Mutex::new(Vec::new()))).collect();
+    std::thread::scope(|s| {
+        for (t, buf) in buffers.iter().enumerate() {
+            let svc = svc.clone();
+            let buf = Arc::clone(buf);
+            s.spawn(move || {
+                let input: String = (0..ROUNDS)
+                    .flat_map(|r| {
+                        LAYERS.map(move |l| plan_line(&format!("L{l}x{t}x{r}"), l) + "\n")
+                    })
+                    .collect();
+                svc.serve_stream(std::io::Cursor::new(input), shared_writer(Sink(buf)));
+            });
+        }
+    });
+
+    // invariant 1 held by arriving here; invariant 2 per response line
+    let total_lines = THREADS * ROUNDS * LAYERS.count();
+    let (mut ok, mut errs) = (0usize, 0usize);
+    for buf in &buffers {
+        let text =
+            String::from_utf8(buf.lock().unwrap_or_else(|e| e.into_inner()).clone()).unwrap();
+        for resp in text.lines() {
+            let j = Json::parse(resp)
+                .unwrap_or_else(|e| panic!("unparseable response {resp:?}: {e}"));
+            match j.get("ok").and_then(Json::as_bool) {
+                Some(true) => {
+                    ok += 1;
+                    let id = j.get("id").and_then(Json::as_str).expect("ok echoes id");
+                    let layers: usize =
+                        id[1..id.find('x').expect("chaos id shape")].parse().unwrap();
+                    assert_eq!(
+                        j.get("result").expect("ok has result").to_string(),
+                        refs[&layers],
+                        "WRONG PLAN under faults for layers={layers}"
+                    );
+                }
+                Some(false) => {
+                    errs += 1;
+                    assert!(
+                        j.get("error").is_some() || j.get("reason").is_some(),
+                        "unstructured failure: {resp}"
+                    );
+                }
+                None => panic!("response without ok: {resp}"),
+            }
+        }
+    }
+    assert_eq!(ok + errs, total_lines, "every line is answered exactly once");
+    assert!(ok > 0, "some requests must succeed under this schedule");
+    assert!(errs > 0, "this schedule provably injected failures");
+
+    // invariant 3: ledger reconciles and every line is accounted for
+    assert_ledger(&svc);
+    assert_eq!(svc.stats().requests, total_lines as u64);
+
+    // no dead failpoints: every armed site was reached...
+    let all_sites = [
+        "profile_cache.load_corrupt",
+        "profile_cache.torn_save",
+        "profile_cache.lock_timeout",
+        "profile_cache.miss_storm",
+        "plan_cache.torn_save",
+        "plan_cache.version_skew",
+        "search.panic",
+        "serve.worker_panic",
+        "serve.frame_corrupt",
+    ];
+    for site in all_sites {
+        assert!(failpoint::eval_count(site) > 0, "dead failpoint (never evaluated): {site}");
+    }
+    // ...and the deterministic (non-probabilistic) schedules all fired
+    for site in all_sites {
+        if site != "profile_cache.miss_storm" {
+            assert!(failpoint::trip_count(site) > 0, "armed site never tripped: {site}");
+        }
+    }
+    // the obs audit surface sees the same registry
+    assert_eq!(cfp::obs::fault_counters().len(), all_sites.len());
+
+    // an armed `stats` response exposes the per-site audit
+    let stats_resp = svc.handle_line("{\"id\": \"st\", \"type\": \"stats\"}");
+    let sj = Json::parse(&stats_resp).unwrap();
+    let faults = sj.get("result").and_then(|r| r.get("faults")).cloned();
+    assert!(faults.is_some(), "armed stats responses carry the fault audit: {stats_resp}");
+
+    svc.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Worker-panic isolation, counted exactly: the first two pool jobs die
+/// inside the injected panic; both come back as structured
+/// `internal_error` responses, the rest serve the fault-free bytes, and
+/// the ledger never saw the panicked requests.
+#[test]
+fn worker_panics_are_isolated_and_counted_exactly() {
+    let _g = chaos_lock();
+    let reference = reference_payload(2, None);
+    let _d = arm("serve.worker_panic:first=2");
+
+    let svc = PlanService::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+    let input: String = (0..5).map(|i| plan_line(&format!("w{i}"), 2) + "\n").collect();
+    let buf = Arc::new(Mutex::new(Vec::new()));
+    svc.serve_stream(std::io::Cursor::new(input), shared_writer(Sink(Arc::clone(&buf))));
+
+    let text = String::from_utf8(buf.lock().unwrap_or_else(|e| e.into_inner()).clone()).unwrap();
+    let (mut ok, mut internal) = (0, 0);
+    for resp in text.lines() {
+        let j = Json::parse(resp).expect("worker panic still yields a JSON line");
+        if j.get("ok").and_then(Json::as_bool) == Some(true) {
+            ok += 1;
+            assert_eq!(j.get("result").unwrap().to_string(), reference);
+        } else {
+            internal += 1;
+            let msg = j.get("error").and_then(Json::as_str).unwrap_or_default().to_string();
+            assert!(
+                msg.contains("internal_error") && msg.contains("serve.worker_panic"),
+                "structured internal_error names the injected fault: {resp}"
+            );
+            assert!(j.get("id").is_some(), "internal errors still echo the id: {resp}");
+        }
+    }
+    assert_eq!((ok, internal), (3, 2), "exactly the first two jobs died: {text}");
+    assert_eq!(failpoint::trip_count("serve.worker_panic"), 2);
+
+    let s = svc.stats();
+    assert_eq!(s.requests, 5, "every line accounted, including the panicked ones");
+    assert_eq!(s.received, 3, "panicked requests never reached admission");
+    assert_eq!(s.errors, 2);
+    assert_ledger(&svc);
+    svc.drain();
+}
+
+/// TCP transport: an injected accept failure drops one connection (the
+/// client sees EOF, not a hang), a torn response write reaches the
+/// client as a malformed frame on a stream that keeps working, a wedged
+/// peer is cut loose by the read deadline, and the daemon stays fully
+/// alive throughout.
+#[test]
+fn tcp_lane_survives_accept_failure_torn_writes_and_dead_clients() {
+    let _g = chaos_lock();
+    let reference = reference_payload(2, None);
+    let svc = PlanService::new(ServeConfig {
+        workers: 2,
+        read_timeout: Some(Duration::from_millis(250)),
+        write_timeout: Some(Duration::from_secs(5)),
+        ..ServeConfig::default()
+    });
+    let addr = svc.listen("127.0.0.1:0").expect("ephemeral bind");
+    let _d = arm("serve.accept_fail:once,serve.write_torn:once");
+
+    // connection 1 is dropped by the accept-failure fault: EOF, no hang
+    {
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let _ = writeln!(c, "{}", plan_line("a1", 2));
+        let mut resp = String::new();
+        let n = BufReader::new(c.try_clone().unwrap()).read_line(&mut resp).unwrap_or(0);
+        assert_eq!(n, 0, "dropped connection reads EOF, got {resp:?}");
+    }
+
+    // connection 2: the first response is torn mid-line — a malformed
+    // frame for the client, but the stream itself keeps serving
+    {
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        writeln!(c, "{}", plan_line("t1", 2)).unwrap();
+        let mut torn = String::new();
+        reader.read_line(&mut torn).unwrap();
+        assert!(Json::parse(torn.trim()).is_err(), "first response was torn: {torn:?}");
+        writeln!(c, "{}", plan_line("t2", 2)).unwrap();
+        let mut resp = String::new();
+        reader.read_line(&mut resp).unwrap();
+        assert_eq!(result_of(resp.trim()), reference, "stream recovered after the torn write");
+    }
+
+    // a wedged client (connects, never writes) is disconnected by the
+    // read deadline instead of pinning a connection thread forever
+    {
+        let mut dead = TcpStream::connect(addr).unwrap();
+        dead.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        std::thread::sleep(Duration::from_millis(600));
+        let mut resp = String::new();
+        let outcome = writeln!(dead, "{}", plan_line("d1", 2))
+            .and_then(|_| BufReader::new(dead.try_clone().unwrap()).read_line(&mut resp));
+        assert!(
+            matches!(outcome, Ok(0) | Err(_)),
+            "wedged peer was cut loose, got {resp:?}"
+        );
+    }
+
+    // the daemon is still fully alive for a well-behaved client
+    {
+        let mut c = TcpStream::connect(addr).unwrap();
+        c.set_read_timeout(Some(Duration::from_secs(30))).unwrap();
+        writeln!(c, "{}", plan_line("ok1", 2)).unwrap();
+        let mut resp = String::new();
+        BufReader::new(c.try_clone().unwrap()).read_line(&mut resp).unwrap();
+        assert_eq!(result_of(resp.trim()), reference);
+    }
+
+    assert_eq!(failpoint::trip_count("serve.accept_fail"), 1);
+    assert_eq!(failpoint::trip_count("serve.write_torn"), 1);
+    assert_ledger(&svc);
+    svc.drain();
+}
+
+/// Exact-lane budget exhaustion at a chosen node: the `--engine exact`
+/// request degrades to the DP plan (the documented fallback), never dies
+/// and never serves garbage.
+#[test]
+fn exact_budget_exhaustion_degrades_to_the_dp_plan() {
+    let _g = chaos_lock();
+    let dp_reference = reference_payload(2, Some("dp"));
+    let _d = arm("exact.budget_exhaust:always");
+
+    let svc = PlanService::new(ServeConfig { workers: 1, ..ServeConfig::default() });
+    let resp = svc.handle_line(&engine_line("x1", 2, "exact"));
+    assert_eq!(
+        result_of(&resp),
+        dp_reference,
+        "exhausted exact lane must serve exactly the DP fallback plan"
+    );
+    assert!(failpoint::trip_count("exact.budget_exhaust") > 0, "the budget site fired");
+    assert_ledger(&svc);
+    svc.drain();
+}
+
+/// Profile-cache miss storm over a warm persistent cache: every consult
+/// is forced cold, costing re-profiling — and the re-profiled plan is
+/// byte-identical (the standing "never a wrong plan" invariant).
+#[test]
+fn profile_cache_miss_storm_costs_reprofiling_never_a_wrong_plan() {
+    let _g = chaos_lock();
+    let dir = scratch("storm");
+    let reference = reference_payload(3, None);
+    let cfg = || ServeConfig {
+        workers: 1,
+        cache_path: Some(dir.join("profiles.json")),
+        ..ServeConfig::default()
+    };
+    {
+        let svc = PlanService::new(cfg());
+        assert_eq!(result_of(&svc.handle_line(&plan_line("warm", 3))), reference);
+        svc.drain();
+    }
+
+    let _d = arm("profile_cache.miss_storm:always");
+    let svc = PlanService::new(cfg());
+    let resp = svc.handle_line(&plan_line("storm", 3));
+    assert_eq!(result_of(&resp), reference, "re-profiled plan is byte-identical");
+    assert!(svc.stats().profile_misses > 0, "the storm forced cold profiling");
+    assert!(failpoint::trip_count("profile_cache.miss_storm") > 0);
+    svc.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Stale-lock takeover race: a lock file that *looks* abandoned is
+/// claimed, but the injected race makes the post-rename re-check
+/// conclude it grabbed a live holder's lock — forcing the hard-link
+/// restore path. The save still completes (second claim finds the
+/// genuinely stale carcass) and the persisted cache stays valid.
+#[test]
+fn stale_lock_takeover_race_restores_and_still_saves() {
+    let _g = chaos_lock();
+    let dir = scratch("stale");
+    let reference = reference_payload(2, None);
+
+    // plant a lock whose mtime is long past LOCK_STALE
+    let lock_path = dir.join("profiles.json.lock");
+    std::fs::write(&lock_path, "424242.0\n").unwrap();
+    let old = std::time::SystemTime::now() - Duration::from_secs(60);
+    std::fs::File::options()
+        .write(true)
+        .open(&lock_path)
+        .unwrap()
+        .set_modified(old)
+        .unwrap();
+
+    let _d = arm("profile_cache.stale_race:once");
+    let svc = PlanService::new(ServeConfig {
+        workers: 1,
+        cache_path: Some(dir.join("profiles.json")),
+        ..ServeConfig::default()
+    });
+    let resp = svc.handle_line(&plan_line("s1", 2));
+    assert_eq!(result_of(&resp), reference);
+    svc.drain();
+    assert_eq!(failpoint::trip_count("profile_cache.stale_race"), 1, "the race fired once");
+
+    // the cache survived the contested save: a fresh disarmed service
+    // over the same file plans warm with zero re-profiling surprises
+    failpoint::disarm_all();
+    let svc = PlanService::new(ServeConfig {
+        workers: 1,
+        cache_path: Some(dir.join("profiles.json")),
+        ..ServeConfig::default()
+    });
+    assert_eq!(result_of(&svc.handle_line(&plan_line("s2", 2))), reference);
+    assert!(svc.stats().profile_hits > 0, "the contested save persisted real profiles");
+    svc.drain();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The converted `expect("flight published")` site: a coalesced follower
+/// whose flight slot is dropped (injected) answers with a structured
+/// internal error — the leader's plan is untouched and the ledger still
+/// reconciles.
+#[test]
+fn coalesced_flight_drop_degrades_to_a_structured_error() {
+    let _g = chaos_lock();
+    let reference = reference_payload(2, None);
+    let _d = arm("serve.flight_drop:always");
+
+    let svc = PlanService::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+    // hold the leader inside its search until the follower has coalesced
+    let probe = svc.clone();
+    svc.set_search_hook(Arc::new(move || {
+        while probe.stats().coalesced < 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+    }));
+
+    let (leader_resp, follower_resp) = std::thread::scope(|s| {
+        let leader = {
+            let svc = svc.clone();
+            s.spawn(move || svc.handle_line(&plan_line("lead", 2)))
+        };
+        while svc.stats().plan_misses < 1 {
+            std::thread::sleep(Duration::from_millis(1));
+        }
+        let follower = {
+            let svc = svc.clone();
+            s.spawn(move || svc.handle_line(&plan_line("join", 2)))
+        };
+        (leader.join().expect("leader survives"), follower.join().expect("follower survives"))
+    });
+
+    assert_eq!(result_of(&leader_resp), reference, "the leader's plan is untouched");
+    let j = Json::parse(&follower_resp).unwrap();
+    assert_eq!(j.get("ok").and_then(Json::as_bool), Some(false), "{follower_resp}");
+    let msg = j.get("error").and_then(Json::as_str).unwrap_or_default();
+    assert!(msg.contains("internal_error"), "structured, not a panic: {follower_resp}");
+    assert_eq!(failpoint::trip_count("serve.flight_drop"), 1);
+
+    let st = svc.stats();
+    assert_eq!((st.received, st.admitted, st.coalesced), (2, 1, 1));
+    assert_ledger(&svc);
+    svc.drain();
+}
+
+/// The free-when-disarmed guarantee, exercised end to end: with nothing
+/// armed, a full serve run's payloads equal the fault-free references,
+/// no fault audit appears anywhere, and site evaluations cost nothing
+/// observable.
+#[test]
+fn disarmed_runs_are_byte_identical_and_audit_free() {
+    let _g = chaos_lock();
+    let reference = reference_payload(2, None);
+
+    let svc = PlanService::new(ServeConfig { workers: 2, ..ServeConfig::default() });
+    assert_eq!(result_of(&svc.handle_line(&plan_line("d1", 2))), reference);
+    assert_eq!(result_of(&svc.handle_line(&plan_line("d2", 2))), reference);
+
+    // disarmed stats responses carry no fault audit (byte-compat with
+    // pre-framework behavior)
+    let stats_resp = svc.handle_line("{\"id\": \"st\", \"type\": \"stats\"}");
+    let sj = Json::parse(&stats_resp).unwrap();
+    assert!(
+        sj.get("result").and_then(|r| r.get("faults")).is_none(),
+        "disarmed stats must not grow a faults key: {stats_resp}"
+    );
+    assert!(cfp::obs::fault_counters().is_empty());
+    assert!(!failpoint::should_trip("profile_cache.torn_save"));
+    assert_ledger(&svc);
+    svc.drain();
+}

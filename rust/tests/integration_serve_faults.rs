@@ -243,3 +243,48 @@ fn damaged_plan_cache_files_are_discarded_wholesale() {
     svc.drain();
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+#[test]
+fn truncation_at_every_byte_boundary_discards_wholesale_and_replans_identically() {
+    let dir = scratch("boundary");
+    let plan_file = dir.join("plans.json");
+    let cfg = |path: &std::path::Path| ServeConfig {
+        workers: 1,
+        plan_cache_file: Some(path.to_path_buf()),
+        ..ServeConfig::default()
+    };
+
+    // seed a known-good persisted cache and its served payload
+    let reference = {
+        let svc = PlanService::new(cfg(&plan_file));
+        let resp = result_of(&svc.handle_line(&plan_line(2)));
+        svc.drain();
+        resp
+    };
+    let good = std::fs::read(&plan_file).unwrap();
+    assert!(good.len() > 2, "seeded cache file is non-trivial");
+
+    // a torn write can stop after ANY byte; every proper prefix must be
+    // refused outright at the loader — no partial parses, ever
+    for cut in 0..good.len() {
+        std::fs::write(&plan_file, &good[..cut]).unwrap();
+        assert!(
+            cfp::service::plancache::load(&plan_file).is_none(),
+            "prefix of {cut}/{} bytes must not load",
+            good.len()
+        );
+    }
+
+    // sampled cuts drive a full service restart: the damaged file costs
+    // exactly one re-search and the re-served plan is byte-identical
+    for cut in [0, 1, good.len() / 3, good.len() / 2, good.len() - 1] {
+        std::fs::write(&plan_file, &good[..cut]).unwrap();
+        let svc = PlanService::new(cfg(&plan_file));
+        let resp = svc.handle_line(&plan_line(2));
+        assert_eq!(cache_tag(&resp), "miss", "cut at {cut} must cold-start the service");
+        assert_eq!(result_of(&resp), reference, "re-search after cut at {cut}");
+        assert_eq!(svc.stats().searches, 1);
+        svc.drain(); // rewrites a valid file; next iteration re-damages it
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
